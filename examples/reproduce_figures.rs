@@ -1,0 +1,15 @@
+//! Regenerate every table and figure of the paper's evaluation on the
+//! VGPU substrate and write TSVs under `results/`. Equivalent to
+//! `nimble figures all`; kept as an example so `cargo run --example
+//! reproduce_figures` works without installing the CLI.
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let dir = std::path::PathBuf::from("results");
+    for (name, table) in nimble::figures::run("all", &dir)? {
+        println!("== {name} ==\n{}", table.render());
+    }
+    println!("TSVs written to results/ — see EXPERIMENTS.md for paper-vs-measured notes");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! End-to-end serving driver (the mandated E2E validation): load the real
+//! MiniInception artifacts, serve Poisson-arriving requests through the
+//! batched Nimble server in BOTH modes — AoT replay and the eager run-time
+//! scheduling baseline — and report latency/throughput. Results are
+//! recorded in EXPERIMENTS.md §E2E.
+//!
+//!     make artifacts && cargo run --release --example serve_e2e
+
+use anyhow::{Context, Result};
+use nimble::coordinator::{EngineConfig, ExecMode};
+use nimble::serving::{NimbleServer, ServerConfig};
+use nimble::util::Pcg32;
+use std::time::Duration;
+
+fn run_mode(mode: ExecMode, n_requests: usize, rate_rps: f64) -> Result<()> {
+    println!("\n=== mode: {mode:?} ({n_requests} requests, ~{rate_rps} req/s offered) ===");
+    let server = NimbleServer::start(ServerConfig {
+        engine: EngineConfig { mode, ..Default::default() },
+        max_wait: Duration::from_millis(3),
+    })?;
+    let len = server.example_len();
+    let mut rng = Pcg32::new(2718);
+    let mut pending = Vec::with_capacity(n_requests);
+    for _ in 0..n_requests {
+        let input: Vec<f32> = (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+        pending.push(server.infer_async(input)?);
+        std::thread::sleep(Duration::from_secs_f64(rng.gen_exp(rate_rps)));
+    }
+    let mut checked = 0;
+    for rx in pending {
+        let logits = rx.recv().context("lost response")?.map_err(anyhow::Error::msg)?;
+        assert_eq!(logits.len(), 10, "classifier head width");
+        assert!(logits.iter().all(|v| v.is_finite()));
+        checked += 1;
+    }
+    let report = server.shutdown()?;
+    assert_eq!(report.n_requests, checked);
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    nimble::runtime::require_artifacts()?;
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(120);
+    let rate: f64 = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(50.0);
+    run_mode(ExecMode::Replay, n, rate)?;
+    run_mode(ExecMode::Eager, n, rate)?;
+    println!("\nserve_e2e OK");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Algorithm 1 walkthrough: reproduces the paper's Figure 6 example step
+//! by step, then applies the algorithm to every model-zoo network and
+//! verifies the theorems mechanically.
+//!
+//!     cargo run --release --example stream_assignment
+
+use nimble::graph::{minimum_equivalent_graph, Dag};
+use nimble::matching::{maximum_matching, BipartiteGraph, MatchingAlgo};
+use nimble::models;
+use nimble::stream::verify::satisfies_max_logical_concurrency;
+use nimble::stream::{assign_streams, logical_concurrency_degree, plan_syncs};
+use nimble::util::table::Table;
+
+fn main() {
+    // --- Figure 6: v1→v2, v1→v3, v2→v4, v3→v4, v4→v5, v4→v6 ---
+    println!("== Figure 6 walkthrough ==");
+    let mut g: Dag<&str> = Dag::new();
+    for name in ["v1", "v2", "v3", "v4", "v5", "v6"] {
+        g.add_node(name);
+    }
+    for (u, v) in [(0, 1), (0, 2), (1, 3), (2, 3), (3, 4), (3, 5)] {
+        g.add_edge(u, v);
+    }
+    let meg = minimum_equivalent_graph(&g);
+    println!("step 1: MEG has {} edges (G had {})", meg.n_edges(), g.n_edges());
+    let b = BipartiteGraph::from_dag_edges(g.n_nodes(), &meg.edges());
+    let m = maximum_matching(&b, MatchingAlgo::FordFulkerson);
+    println!("steps 2–3: maximum matching |M| = {}", m.cardinality());
+    let a = assign_streams(&g, MatchingAlgo::FordFulkerson);
+    println!("steps 4–5: {} streams, stream map = {:?}", a.n_streams, a.stream_of);
+    let syncs = plan_syncs(&a);
+    println!(
+        "syncs: {} (theorem 3: |E'|−|M| = {})",
+        syncs.n_syncs(),
+        meg.n_edges() - m.cardinality()
+    );
+    assert!(satisfies_max_logical_concurrency(&g, &a.stream_of));
+    assert_eq!(syncs.n_syncs(), meg.n_edges() - m.cardinality());
+
+    // --- the model zoo ---
+    println!("\n== Algorithm 1 across the model zoo ==");
+    let mut t = Table::new(vec!["model", "|V|", "|E|", "|E'|", "|M|", "streams", "syncs", "Deg."]);
+    for spec in models::MODELS {
+        let g = models::build(spec.name, 1);
+        let a = assign_streams(&g, MatchingAlgo::HopcroftKarp);
+        assert!(
+            satisfies_max_logical_concurrency(&g, &a.stream_of),
+            "{}: theorem 2 violated",
+            spec.name
+        );
+        let syncs = plan_syncs(&a);
+        assert_eq!(syncs.n_syncs(), a.min_syncs(), "{}: theorem 3 violated", spec.name);
+        t.row(vec![
+            spec.name.to_string(),
+            g.n_nodes().to_string(),
+            g.n_edges().to_string(),
+            a.meg.n_edges().to_string(),
+            a.matching_size.to_string(),
+            a.n_streams.to_string(),
+            syncs.n_syncs().to_string(),
+            logical_concurrency_degree(&g).to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("all theorems verified mechanically — stream_assignment OK");
+}

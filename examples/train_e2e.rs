@@ -1,0 +1,23 @@
+//! End-to-end training driver: run the AOT-compiled `train_step` artifact
+//! (forward + backward + SGD, lowered once by python/compile/aot.py) for a
+//! few hundred steps on synthetic classification data, from Rust, logging
+//! the loss curve. Recorded in EXPERIMENTS.md §E2E.
+//!
+//!     make artifacts && cargo run --release --example train_e2e [steps]
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    nimble::runtime::require_artifacts()?;
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let report = nimble::training::run_training(steps, 25)?;
+    println!("{}", report.render());
+    assert!(
+        report.final_loss < 0.5 * report.first_loss,
+        "training failed to converge: {} → {}",
+        report.first_loss,
+        report.final_loss
+    );
+    println!("train_e2e OK");
+    Ok(())
+}

@@ -1,0 +1,159 @@
+"""AOT lowering: JAX → StableHLO → XlaComputation → **HLO text** artifacts.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs under ``--out`` (default ``../artifacts``):
+  manifest.tsv          — everything the Rust runtime needs (see below)
+  ops/<sig>.hlo.txt     — one artifact per distinct operator signature
+  model_b<N>.hlo.txt    — whole-model forward, weights baked, per batch size
+  train_step.hlo.txt    — MLP fwd+bwd+SGD step (flat params in/out)
+  weights/<name>.npy    — parameter tensors (loaded as device buffers)
+
+Manifest line grammar (tab-separated):
+  A  <artifact>  <relpath>                      # compiled executable
+  W  <param>     <relpath>  <dims csv>          # weight tensor
+  I  <batch>     <dims csv>                    # request input dims
+  N  <batch>  <node>  <artifact>  <dims csv>  <inputs ; -sep: node:X|weight:Y>
+  M  <batch>  <artifact>  <weight names csv>    # whole-model executable
+                                                #   (args: input, *weights)
+  T  <artifact>  <n_params>  <batch>  <in_dim>  <n_classes>  # train step
+
+Python runs ONCE at build time; the request path is pure Rust.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, *example_args, return_tuple: bool = False) -> str:
+    """Lower a jittable fn at fixed shapes to HLO text.
+
+    ``return_tuple=False`` for single-output ops: PJRT hands the tuple root
+    back as ONE tuple-shaped buffer (an 8-byte index table) which cannot be
+    fed to the next executable — raw array roots chain cleanly. Multi-output
+    functions (train_step) keep the tuple root; PJRT untuples those into
+    separate output buffers.
+    """
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def dims_csv(shape):
+    return ",".join(str(d) for d in shape)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(os.path.join(out, "ops"), exist_ok=True)
+    os.makedirs(os.path.join(out, "weights"), exist_ok=True)
+
+    manifest = []
+    params = model.init_params()
+
+    # --- weights ---
+    for name, value in sorted(params.items()):
+        rel = f"weights/{name}.npy"
+        np.save(os.path.join(out, rel), np.asarray(value))
+        manifest.append(("W", name, rel, dims_csv(value.shape)))
+
+    # --- per-op artifacts + node graph, per batch size ---
+    artifacts = {}  # sig -> relpath
+
+    def artifact_for(sig, fn, *ex_args):
+        if sig in artifacts:
+            return sig
+        rel = f"ops/{sig}.hlo.txt"
+        text = to_hlo_text(fn, *map(spec_of, ex_args))
+        with open(os.path.join(out, rel), "w") as f:
+            f.write(text)
+        artifacts[sig] = rel
+        manifest.append(("A", sig, rel))
+        return sig
+
+    for batch in model.BATCH_SIZES:
+        x = jnp.zeros((batch, *model.IMG), jnp.float32)
+        manifest.append(("I", str(batch), dims_csv(x.shape)))
+        vals = {"input": x}
+        for name, op, deps, weights in model.node_specs():
+            fn = model.OP_FNS[op]
+            arg_vals = [vals[d] for d in deps] + [params[w] for w in weights]
+            result = fn(*arg_vals)
+            vals[name] = result
+            shapes_sig = "_".join("x".join(map(str, a.shape)) for a in arg_vals)
+            sig = f"{op}_b{batch}_{shapes_sig}"
+            artifact_for(sig, fn, *arg_vals)
+            inputs = ";".join(
+                [f"node:{d}" for d in deps] + [f"weight:{w}" for w in weights]
+            )
+            manifest.append(("N", str(batch), name, sig, dims_csv(result.shape), inputs))
+
+        # Whole-model artifact. Weights are *parameters*, not baked
+        # constants: `as_hlo_text()` elides large constant literals as
+        # "{...}" which the runtime's HLO text parser reads back as zeros.
+        pnames = sorted(params)
+
+        def model_fn(xx, *pvals):
+            return model.model_apply(dict(zip(pnames, pvals)), xx)
+
+        msig = f"model_b{batch}"
+        rel = f"{msig}.hlo.txt"
+        text = to_hlo_text(model_fn, spec_of(x), *map(spec_of, (params[p] for p in pnames)))
+        with open(os.path.join(out, rel), "w") as f:
+            f.write(text)
+        manifest.append(("A", msig, rel))
+        manifest.append(("M", str(batch), msig, ",".join(pnames)))
+
+    # --- training step artifact ---
+    mlp = model.init_mlp()
+    for i, p in enumerate(mlp):
+        rel = f"weights/mlp_{i}.npy"
+        np.save(os.path.join(out, rel), np.asarray(p))
+        manifest.append(("W", f"mlp_{i}", rel, dims_csv(p.shape)))
+    xb = jnp.zeros((model.TRAIN_BATCH, model.MLP_DIMS[0]), jnp.float32)
+    yb = jnp.zeros((model.TRAIN_BATCH, model.N_CLASSES), jnp.float32)
+    text = to_hlo_text(model.train_step, *map(spec_of, [*mlp, xb, yb]), return_tuple=True)
+    with open(os.path.join(out, "train_step.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest.append(("A", "train_step", "train_step.hlo.txt"))
+    manifest.append(
+        (
+            "T",
+            "train_step",
+            str(len(mlp)),
+            str(model.TRAIN_BATCH),
+            str(model.MLP_DIMS[0]),
+            str(model.N_CLASSES),
+        )
+    )
+
+    with open(os.path.join(out, "manifest.tsv"), "w") as f:
+        for row in manifest:
+            f.write("\t".join(row) + "\n")
+    n_art = sum(1 for r in manifest if r[0] == "A")
+    print(f"wrote {n_art} artifacts + manifest to {out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""L1: conv2d lowered to im2col + the Pallas tiled matmul.
+
+The CUDA paper's hot kernels are cuDNN convolutions; the TPU-shaped rethink
+(DESIGN.md §Hardware-Adaptation) turns every conv into one MXU-tiled matmul:
+``patches (B·H·W × C·kh·kw) @ weights (C·kh·kw × OC)``. The im2col gather is
+produced by XLA (``conv_general_dilated_patches``) and fuses into the
+surrounding HLO; the FLOPs all land in the Pallas kernel.
+
+``conv2d_bn_relu`` is the paper's operator-fusion path: the folded BN scale/
+bias and the ReLU ride the matmul tile's VMEM residency (see
+``matmul.matmul_scale_bias``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul, matmul_scale_bias
+
+
+def _im2col(x, kh: int, kw: int, stride: int):
+    """NCHW → (B·OH·OW, C·kh·kw) patch matrix, SAME padding."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (B, C*kh*kw, OH, OW)
+    b, ckk, oh, ow = patches.shape
+    cols = patches.transpose(0, 2, 3, 1).reshape(b * oh * ow, ckk)
+    return cols, (b, oh, ow)
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def conv2d(x, w, *, stride: int = 1):
+    """2D convolution, NCHW input, OIHW weights, SAME padding, no bias."""
+    oc, ic, kh, kw = w.shape
+    if x.shape[1] != ic:
+        raise ValueError(f"channel mismatch: x {x.shape} vs w {w.shape}")
+    cols, (b, oh, ow) = _im2col(x, kh, kw, stride)
+    wmat = w.reshape(oc, ic * kh * kw).T  # (C·kh·kw, OC)
+    out = matmul(cols, wmat)  # (B·OH·OW, OC)
+    return out.reshape(b, oh, ow, oc).transpose(0, 3, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "activation"))
+def conv2d_bn_relu(x, w, scale, bias, *, stride: int = 1, activation: str = "relu"):
+    """Fused conv + folded-BN + activation (one Pallas kernel).
+
+    ``scale``/``bias`` are the inference-folded BN parameters per output
+    channel: ``y = act(conv(x, w) * scale + bias)``.
+    """
+    oc, ic, kh, kw = w.shape
+    cols, (b, oh, ow) = _im2col(x, kh, kw, stride)
+    wmat = w.reshape(oc, ic * kh * kw).T
+    out = matmul_scale_bias(cols, wmat, scale, bias, activation=activation)
+    return out.reshape(b, oh, ow, oc).transpose(0, 3, 1, 2)

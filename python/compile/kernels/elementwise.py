@@ -1,0 +1,69 @@
+"""L1: elementwise Pallas kernels (relu / bias+relu / row softmax).
+
+Small memory-bound kernels — on a real TPU these are VPU (vector unit)
+work; the Pallas expression keeps the HBM→VMEM block schedule explicit.
+Lowered with interpret=True like every kernel here (see matmul.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _relu_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...], 0.0)
+
+
+@jax.jit
+def relu(x):
+    """Elementwise ReLU over an arbitrary-shape tensor (flattened blocks)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    # Keep the grid ≥ 2 cells: single-cell pallas_call lowers to an HLO
+    # shape the runtime's xla_extension 0.5.1 text parser mis-compiles
+    # (see DESIGN.md §Gotchas), and a 1-cell grid defeats pipelining anyway.
+    block = min(65536, n.bit_length() and -(-n // 2)) if n > 1 else 1
+    block = max(block, 1)
+    pad = (-n) % block
+    # Guard the no-op pad: jnp.pad(x, 0) lowers to a degenerate HLO
+    # computation whose ROOT is a parameter, which the xla_extension 0.5.1
+    # HLO-text parser mis-handles (see DESIGN.md §Gotchas).
+    fp = jnp.pad(flat, (0, pad)) if pad else flat
+    out = pl.pallas_call(
+        _relu_kernel,
+        grid=(fp.shape[0] // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(fp.shape, x.dtype),
+        interpret=True,
+    )(fp)
+    return out[:n].reshape(x.shape)
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def softmax(x, *, block_rows: int = 256):
+    """Numerically-stable row softmax over the last dim of a 2D tensor."""
+    if x.ndim != 2:
+        raise ValueError("softmax kernel expects rank 2")
+    m, n = x.shape
+    bm = min(block_rows, -(-m // 2) if m > 1 else 1)
+    pad = (-m) % bm
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    out = pl.pallas_call(
+        _softmax_kernel,
+        grid=(xp.shape[0] // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:m]

@@ -1,0 +1,143 @@
+"""L1: Pallas tiled matmul — the compute hot-spot every conv in the model
+lowers onto (conv = im2col + this matmul).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the CUDA-paper equivalent of
+a threadblock-tiled SGEMM. Tiles are sized for the MXU systolic array
+(multiples of 128 on the lane dimension when shapes allow) and the
+HBM→VMEM schedule is expressed through ``BlockSpec`` index maps: grid cell
+(i, j) stages an (bm × K) panel of ``x`` and a (K × bn) panel of ``w`` into
+VMEM and writes one (bm × bn) output tile.
+
+VMEM footprint per grid cell = 4·(bm·K + K·bn + bm·bn) bytes. For the
+MiniInception shapes (K ≤ 1200, bm = 256, bn ≤ 128) that is ≤ ~1.6 MiB,
+comfortably inside the ~16 MiB VMEM budget — see DESIGN.md §Perf for the
+block-size sweep.
+
+Runs with ``interpret=True``: real-TPU lowering emits a Mosaic custom call
+the CPU PJRT plugin cannot execute; interpret mode lowers to plain HLO so
+the artifact runs anywhere (numerics identical, verified vs ``ref.py``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile: full-K panel product, f32 accumulation."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pick_blocks(m: int, n: int, block_m: int, block_n: int):
+    """Clamp block sizes to the problem and keep the grid ≥ 2 cells when the
+    problem has ≥ 2 elements on some tiled axis: a single-cell pallas_call
+    lowers to an HLO shape the runtime's xla_extension 0.5.1 text parser
+    mis-compiles (DESIGN.md §Gotchas)."""
+    bm = min(block_m, max(m, 1))
+    bn = min(block_n, max(n, 1))
+    grid = -(-m // bm) * -(-n // bn)
+    if grid <= 1:
+        if n > 1:
+            bn = -(-n // 2)
+        elif m > 1:
+            bm = -(-m // 2)
+    return bm, bn
+
+
+def _pad_to(x, multiple, axis):
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def matmul(x, w, *, block_m: int = 256, block_n: int = 128):
+    """``x @ w`` via the Pallas kernel. Shapes (M, K) × (K, N) → (M, N).
+
+    Inputs are zero-padded up to the block grid and the result is sliced
+    back, so arbitrary shapes are supported.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects rank-2 operands, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn = _pick_blocks(m, n, block_m, block_n)
+    xp = _pad_to(x, bm, 0)
+    wp = _pad_to(w, bn, 1)
+    mp, np_ = xp.shape[0], wp.shape[1]
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _matmul_epilogue_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, *, activation):
+    """Matmul tile with a fused per-column scale/bias (+ activation) epilogue.
+
+    This is the fused conv+bn+relu path: the epilogue runs while the output
+    tile is still resident in VMEM (registers/SMEM in the CUDA original),
+    so the intermediate never touches HBM.
+    """
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc * scale_ref[...] + bias_ref[...]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "activation")
+)
+def matmul_scale_bias(
+    x, w, scale, bias, *, activation: str = "relu", block_m: int = 256, block_n: int = 128
+):
+    """``act((x @ w) * scale + bias)`` with the epilogue fused into the tile.
+
+    ``scale``/``bias`` have shape (N,) — the folded inference-time
+    batch-norm parameters of the following BN layer.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    if scale.shape != (n,) or bias.shape != (n,):
+        raise ValueError("scale/bias must be shape (N,)")
+    bm, bn = _pick_blocks(m, n, block_m, block_n)
+    xp = _pad_to(x, bm, 0)
+    wp = _pad_to(w, bn, 1)
+    sp = _pad_to(scale.reshape(1, n), bn, 1)
+    bp = _pad_to(bias.reshape(1, n), bn, 1)
+    mp, np_ = xp.shape[0], wp.shape[1]
+
+    kernel = functools.partial(_matmul_epilogue_kernel, activation=activation)
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp, sp, bp)
+    return out[:m, :n]

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package is checked against these references by
+``python/tests/test_kernels.py`` (hypothesis shape/value sweeps with
+``assert_allclose``).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def matmul_scale_bias_ref(x, w, scale, bias, activation="relu"):
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32) * scale + bias
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)
+
+
+def conv2d_ref(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def conv2d_bn_relu_ref(x, w, scale, bias, stride=1, activation="relu"):
+    out = conv2d_ref(x, w, stride) * scale[None, :, None, None] + bias[None, :, None, None]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def relu_ref(x):
+    return jnp.maximum(x, 0.0)
+
+
+def softmax_ref(x):
+    return jax.nn.softmax(x, axis=-1)

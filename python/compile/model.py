@@ -1,0 +1,169 @@
+"""L2: the MiniInception model in JAX, defined at *operator granularity*.
+
+This file is the single source of truth for the real execution path: each
+node below becomes one GPU task in the Rust engine, `aot.py` lowers one HLO
+artifact per distinct operator signature, and `artifacts/manifest.tsv`
+carries the node graph (name, artifact, dependencies, weights) that
+`rust/src/runtime/manifest.rs` loads. The architecture mirrors
+`rust/src/models/mini.rs` op-for-op (cross-checked in integration tests).
+
+Convolutions and the classifier run on the L1 Pallas kernels; pools and
+concats are plain jnp (they lower to trivial HLO).
+
+Also defined here: a small MLP `train_step` (fwd + bwd + SGD in one jitted
+function) lowered to `train_step.hlo.txt` — the end-to-end training driver
+`examples/train_e2e.rs` runs it for a few hundred steps from Rust.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv import conv2d
+from .kernels.elementwise import relu
+from .kernels.matmul import matmul
+
+BATCH_SIZES = (1, 8)
+IMG = (3, 32, 32)
+N_CLASSES = 10
+
+# (name, out_channels, kernel, conv input channels) for the two blocks.
+BLOCK1 = dict(c1=(16, 1), c3=(16, 3), c5=(8, 5), cp=(8, 1))   # in 16 -> out 48
+BLOCK2 = dict(c1=(24, 1), c3=(24, 3), c5=(12, 5), cp=(12, 1))  # in 48 -> out 72
+
+
+def init_params(key=None):
+    """Deterministic parameter set (seed 0), He-scaled."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = iter(jax.random.split(key, 16))
+
+    def conv_w(oc, ic, k):
+        fan_in = ic * k * k
+        return jax.random.normal(next(ks), (oc, ic, k, k), jnp.float32) * (2.0 / fan_in) ** 0.5
+
+    params = {"stem_w": conv_w(16, 3, 3)}
+    for blk, spec, ic in (("b1", BLOCK1, 16), ("b2", BLOCK2, 48)):
+        for name, (oc, k) in spec.items():
+            params[f"{blk}_{name}_w"] = conv_w(oc, ic, k)
+    params["fc_w"] = jax.random.normal(next(ks), (72, N_CLASSES), jnp.float32) * (1.0 / 72) ** 0.5
+    params["fc_b"] = jnp.zeros((N_CLASSES,), jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Operator functions (one artifact per distinct signature).
+# ---------------------------------------------------------------------------
+
+def op_conv(x, w):
+    return conv2d(x, w, stride=1)
+
+
+def op_relu(x):
+    return relu(x)
+
+
+def op_maxpool3(x):
+    """3×3 stride-1 SAME max pool."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 3, 3), (1, 1, 1, 1), "SAME"
+    )
+
+
+def op_concat(a, b, c, d):
+    return jnp.concatenate([a, b, c, d], axis=1)
+
+
+def op_gap(x):
+    return jnp.mean(x, axis=(2, 3))
+
+
+def op_linear(x, w, b):
+    return matmul(x, w) + b
+
+
+#: node name -> (op fn name, [input node names], [weight param names])
+def node_specs():
+    nodes = [
+        ("stem_conv", "conv", ["input"], ["stem_w"]),
+        ("stem_relu", "relu", ["stem_conv"], []),
+    ]
+    prev = "stem_relu"
+    for blk in ("b1", "b2"):
+        nodes += [
+            (f"{blk}_c1", "conv", [prev], [f"{blk}_c1_w"]),
+            (f"{blk}_r1", "relu", [f"{blk}_c1"], []),
+            (f"{blk}_c3", "conv", [prev], [f"{blk}_c3_w"]),
+            (f"{blk}_r3", "relu", [f"{blk}_c3"], []),
+            (f"{blk}_c5", "conv", [prev], [f"{blk}_c5_w"]),
+            (f"{blk}_r5", "relu", [f"{blk}_c5"], []),
+            (f"{blk}_pool", "maxpool3", [prev], []),
+            (f"{blk}_cp", "conv", [f"{blk}_pool"], [f"{blk}_cp_w"]),
+            (f"{blk}_rp", "relu", [f"{blk}_cp"], []),
+            (f"{blk}_cat", "concat", [f"{blk}_r1", f"{blk}_r3", f"{blk}_r5", f"{blk}_rp"], []),
+        ]
+        prev = f"{blk}_cat"
+    nodes += [
+        ("gap", "gap", [prev], []),
+        ("fc", "linear", ["gap"], ["fc_w", "fc_b"]),
+    ]
+    return nodes
+
+
+OP_FNS = {
+    "conv": op_conv,
+    "relu": op_relu,
+    "maxpool3": op_maxpool3,
+    "concat": op_concat,
+    "gap": op_gap,
+    "linear": op_linear,
+}
+
+
+def model_apply(params, x):
+    """Full forward pass by interpreting the node graph (test oracle and
+    the function lowered to the whole-model serving artifacts)."""
+    vals = {"input": x}
+    for name, op, deps, weights in node_specs():
+        args = [vals[d] for d in deps] + [params[w] for w in weights]
+        vals[name] = OP_FNS[op](*args)
+    return vals["fc"]
+
+
+# ---------------------------------------------------------------------------
+# Training workload: a 3-layer MLP with an end-to-end jitted SGD step.
+# ---------------------------------------------------------------------------
+
+TRAIN_BATCH = 64
+MLP_DIMS = (3 * 32 * 32, 256, 64, N_CLASSES)
+LEARNING_RATE = 0.05
+
+
+def init_mlp(key=None):
+    key = key if key is not None else jax.random.PRNGKey(42)
+    ks = jax.random.split(key, len(MLP_DIMS) - 1)
+    params = []
+    for k, (din, dout) in zip(ks, zip(MLP_DIMS[:-1], MLP_DIMS[1:])):
+        params.append(jax.random.normal(k, (din, dout), jnp.float32) * (2.0 / din) ** 0.5)
+        params.append(jnp.zeros((dout,), jnp.float32))
+    return params  # [w1, b1, w2, b2, w3, b3]
+
+
+def mlp_apply(params, x):
+    w1, b1, w2, b2, w3, b3 = params
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    h = jnp.maximum(h @ w2 + b2, 0.0)
+    return h @ w3 + b3
+
+
+def mlp_loss(params, x, y_onehot):
+    logits = mlp_apply(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def train_step(w1, b1, w2, b2, w3, b3, x, y_onehot):
+    """One SGD step; flat-argument signature so the Rust driver can bind
+    each parameter to a device buffer. Returns (new params..., loss)."""
+    params = [w1, b1, w2, b2, w3, b3]
+    loss, grads = jax.value_and_grad(mlp_loss)(params, x, y_onehot)
+    new = [p - LEARNING_RATE * g for p, g in zip(params, grads)]
+    return (*new, loss)

@@ -1,0 +1,78 @@
+"""AOT pipeline: artifacts exist, HLO text parses, manifest is consistent."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.tsv")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    rows = [line.rstrip("\n").split("\t") for line in open(path)]
+    return rows
+
+
+def by_kind(rows, kind):
+    return [r for r in rows if r[0] == kind]
+
+
+def test_every_artifact_file_exists_and_is_hlo(manifest):
+    arts = by_kind(manifest, "A")
+    assert len(arts) >= 30
+    for _, name, rel in arts:
+        path = os.path.join(ART, rel)
+        assert os.path.exists(path), name
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{name} is not HLO text"
+
+
+def test_every_weight_loads_with_declared_shape(manifest):
+    for row in by_kind(manifest, "W"):
+        _, name, rel, dims = row
+        arr = np.load(os.path.join(ART, rel))
+        assert arr.shape == tuple(int(d) for d in dims.split(",")), name
+        assert arr.dtype == np.float32
+
+
+def test_node_graph_consistent(manifest):
+    arts = {r[1] for r in by_kind(manifest, "A")}
+    weights = {r[1] for r in by_kind(manifest, "W")}
+    for batch in model.BATCH_SIZES:
+        rows = [r for r in by_kind(manifest, "N") if int(r[1]) == batch]
+        assert len(rows) == len(model.node_specs())
+        seen = {"input"}
+        for _, _, node, artifact, dims, inputs in rows:
+            assert artifact in arts, artifact
+            for item in inputs.split(";"):
+                kind, _, target = item.partition(":")
+                if kind == "node":
+                    assert target in seen, f"{node}: forward ref {target}"
+                else:
+                    assert target in weights, f"{node}: unknown weight {target}"
+            seen.add(node)
+        # final node output is (batch, n_classes)
+        assert rows[-1][4] == f"{batch},{model.N_CLASSES}"
+
+
+def test_model_artifacts_per_batch(manifest):
+    ms = by_kind(manifest, "M")
+    assert {int(r[1]) for r in ms} == set(model.BATCH_SIZES)
+
+
+def test_train_artifact_declared(manifest):
+    ts = by_kind(manifest, "T")
+    assert len(ts) == 1
+    _, name, n_params, batch, in_dim, n_classes = ts[0]
+    assert int(n_params) == 6
+    assert int(batch) == model.TRAIN_BATCH
+    assert int(in_dim) == model.MLP_DIMS[0]
+    assert int(n_classes) == model.N_CLASSES

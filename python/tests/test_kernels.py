@@ -1,0 +1,156 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps).
+
+This is the core correctness signal for the compute layer: every artifact
+the Rust engine replays contains these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.conv import conv2d, conv2d_bn_relu
+from compile.kernels.elementwise import relu, softmax
+from compile.kernels.matmul import matmul, matmul_scale_bias
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(shape, seed=0, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
+
+
+# --------------------------------------------------------------------------
+# matmul
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 130),
+    k=st.integers(1, 96),
+    n=st.integers(1, 130),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = rand((m, k), seed)
+    w = rand((k, n), seed + 1)
+    np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_m,block_n", [(8, 8), (32, 16), (256, 128), (512, 64)])
+def test_matmul_block_size_sweep(block_m, block_n):
+    """Block shape must never affect numerics (only the VMEM schedule)."""
+    x, w = rand((100, 70), 7), rand((70, 50), 8)
+    got = matmul(x, w, block_m=block_m, block_n=block_n)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul(rand((3, 4)), rand((5, 6)))
+    with pytest.raises(ValueError):
+        matmul(rand((3,)), rand((3, 2)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 48),
+    n=st.integers(1, 64),
+    act=st.sampled_from(["relu", "none"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_epilogue_matches_ref(m, k, n, act, seed):
+    x = rand((m, k), seed)
+    w = rand((k, n), seed + 1)
+    scale = jnp.abs(rand((n,), seed + 2)) + 0.1
+    bias = rand((n,), seed + 3)
+    got = matmul_scale_bias(x, w, scale, bias, activation=act)
+    want = ref.matmul_scale_bias_ref(x, w, scale, bias, activation=act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# conv2d (im2col + Pallas matmul)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    ic=st.integers(1, 8),
+    oc=st.integers(1, 8),
+    hw=st.integers(3, 12),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_lax(b, ic, oc, hw, k, stride, seed):
+    x = rand((b, ic, hw, hw), seed)
+    w = rand((oc, ic, k, k), seed + 1)
+    got = conv2d(x, w, stride=stride)
+    want = ref.conv2d_ref(x, w, stride=stride)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_conv2d_channel_mismatch_rejected():
+    with pytest.raises(ValueError):
+        conv2d(rand((1, 3, 8, 8)), rand((4, 5, 3, 3)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    ic=st.integers(1, 6),
+    oc=st.integers(1, 6),
+    hw=st.integers(4, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_conv_bn_relu_matches_ref(b, ic, oc, hw, seed):
+    x = rand((b, ic, hw, hw), seed)
+    w = rand((oc, ic, 3, 3), seed + 1)
+    scale = jnp.abs(rand((oc,), seed + 2)) + 0.1
+    bias = rand((oc,), seed + 3)
+    got = conv2d_bn_relu(x, w, scale, bias)
+    want = ref.conv2d_bn_relu_ref(x, w, scale, bias)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+    assert (np.asarray(got) >= 0).all(), "relu epilogue must clamp"
+
+
+# --------------------------------------------------------------------------
+# elementwise
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 9), min_size=1, max_size=4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_relu_matches_ref(dims, seed):
+    x = rand(tuple(dims), seed)
+    np.testing.assert_allclose(relu(x), ref.relu_ref(x))
+
+
+def test_relu_large_unaligned():
+    x = rand((7, 13, 31, 3), 99)  # numel not a multiple of the block
+    np.testing.assert_allclose(relu(x), ref.relu_ref(x))
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 80), n=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_softmax_matches_ref(m, n, seed):
+    x = rand((m, n), seed) * 5.0
+    np.testing.assert_allclose(softmax(x), ref.softmax_ref(x), rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_rows_sum_to_one():
+    s = np.asarray(softmax(rand((33, 17), 5)))
+    np.testing.assert_allclose(s.sum(axis=-1), np.ones(33), rtol=1e-5)
+
+
+def test_softmax_extreme_values_stable():
+    x = jnp.array([[1e4, -1e4, 0.0]])
+    s = np.asarray(softmax(x))
+    assert np.isfinite(s).all()
+    np.testing.assert_allclose(s[0, 0], 1.0, atol=1e-6)

@@ -1,0 +1,75 @@
+"""L2 correctness: model graph, shapes, and the training step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params()
+
+
+@pytest.mark.parametrize("batch", model.BATCH_SIZES)
+def test_forward_shape(params, batch):
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, *model.IMG))
+    out = model.model_apply(params, x)
+    assert out.shape == (batch, model.N_CLASSES)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_forward_deterministic(params):
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, *model.IMG))
+    a = model.model_apply(params, x)
+    b = model.model_apply(params, x)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_node_graph_is_acyclic_and_complete(params):
+    seen = {"input"}
+    for name, op, deps, weights in model.node_specs():
+        for d in deps:
+            assert d in seen, f"node {name} depends on later/unknown node {d}"
+        for w in weights:
+            assert w in params, f"node {name} references unknown weight {w}"
+        assert op in model.OP_FNS
+        seen.add(name)
+    assert "fc" in seen
+
+
+def test_block_concat_channels(params):
+    """Mirror of rust/src/models/mini.rs: concat widths 48 and 72."""
+    x = jnp.zeros((1, *model.IMG))
+    vals = {"input": x}
+    for name, op, deps, weights in model.node_specs():
+        args = [vals[d] for d in deps] + [params[w] for w in weights]
+        vals[name] = model.OP_FNS[op](*args)
+    assert vals["b1_cat"].shape[1] == 48
+    assert vals["b2_cat"].shape[1] == 72
+
+
+def test_mlp_train_step_decreases_loss():
+    mlp = model.init_mlp()
+    k = jax.random.PRNGKey(3)
+    x = jax.random.normal(k, (model.TRAIN_BATCH, model.MLP_DIMS[0]))
+    y = jax.nn.one_hot(jnp.arange(model.TRAIN_BATCH) % model.N_CLASSES, model.N_CLASSES)
+    step = jax.jit(model.train_step)
+    *mlp, first = step(*mlp, x, y)
+    last = first
+    for _ in range(25):
+        *mlp, last = step(*mlp, x, y)
+    assert float(last) < 0.7 * float(first), (float(first), float(last))
+
+
+def test_train_step_param_shapes_preserved():
+    mlp = model.init_mlp()
+    x = jnp.zeros((model.TRAIN_BATCH, model.MLP_DIMS[0]))
+    y = jnp.zeros((model.TRAIN_BATCH, model.N_CLASSES))
+    out = jax.jit(model.train_step)(*mlp, x, y)
+    assert len(out) == len(mlp) + 1
+    for p, q in zip(mlp, out[:-1]):
+        assert p.shape == q.shape and p.dtype == q.dtype
+    assert out[-1].shape == ()

@@ -1,0 +1,90 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!  1. Synchronization planning: Algorithm 1's minimum plan (|E'|−|M|) vs
+//!     a naive plan that syncs every cross-stream edge of G — the paper's
+//!     argument for minimizing syncs ("synchronizations hamper the fast
+//!     launching of tasks").
+//!  2. Operator fusion on/off under the Nimble host profile.
+//!  3. Multi-stream vs single-stream (Table 1's core ablation) on the
+//!     extension models (MixNet / ResNeSt).
+
+mod common;
+use common::section;
+use nimble::baselines::{baseline_costs, simulate_inference, Baseline};
+use nimble::matching::MatchingAlgo;
+use nimble::models;
+use nimble::sim::{simulate, GpuSpec, HostProfile, SimConfig};
+use nimble::stream::assign_streams;
+use nimble::stream::rewrite::rewrite_with;
+use nimble::stream::sync::SyncPlan;
+
+fn main() {
+    let dev = GpuSpec::v100();
+
+    section("ablation 1: minimum sync plan vs naive all-cross-edge syncs");
+    for name in ["inception_v3", "nasnet_a_mobile", "amoebanet"] {
+        let g = models::build(name, 1);
+        let a = assign_streams(&g, MatchingAlgo::HopcroftKarp);
+        let costs = baseline_costs(&g, Baseline::Nimble, &dev);
+        // minimum plan (Algorithm 1 / Theorem 3)
+        let min_plan = rewrite_with(&g, &a);
+        // naive plan: one sync per cross-stream edge of the FULL graph
+        let mut syncs = Vec::new();
+        for (u, v) in g.edges() {
+            if a.stream_of[u] != a.stream_of[v] {
+                let event = syncs.len();
+                syncs.push(nimble::stream::sync::Sync { src: u, dst: v, event });
+            }
+        }
+        let naive_syncs = SyncPlan { syncs };
+        let naive_plan = {
+            // same streams/order, more events
+            let mut p = min_plan.clone();
+            for node_plan in &mut p.order {
+                node_plan.wait_events = naive_syncs.waits_before(node_plan.node);
+                node_plan.record_events = naive_syncs.records_after(node_plan.node);
+            }
+            p.n_events = naive_syncs.n_syncs();
+            p
+        };
+        let host = HostProfile::nimble();
+        let t_min = simulate(&SimConfig { plan: &min_plan, costs: &costs, host, device: dev.clone() }).total_s;
+        let t_naive = simulate(&SimConfig { plan: &naive_plan, costs: &costs, host, device: dev.clone() }).total_s;
+        println!(
+            "{name:<18} syncs {:>4} -> {:>4} (min)   latency {:.3} ms -> {:.3} ms ({:+.1}%)",
+            naive_plan.n_events,
+            min_plan.n_events,
+            t_naive * 1e3,
+            t_min * 1e3,
+            (t_min / t_naive - 1.0) * 100.0
+        );
+        assert!(min_plan.n_events <= naive_plan.n_events);
+    }
+
+    section("ablation 2: operator fusion on/off (Nimble host, single device)");
+    for name in ["resnet50", "efficientnet_b0"] {
+        let g = models::build(name, 1);
+        let fused = simulate_inference(&g, Baseline::Nimble, &dev).total_s;
+        // single-stream nimble without fusion ≈ AoT-only
+        let p = nimble::baselines::prepare(&g, Baseline::Nimble, &dev, false);
+        let unfused = nimble::baselines::run_prepared(&p, &dev).total_s;
+        println!(
+            "{name:<18} unfused {:.3} ms -> fused {:.3} ms ({:.2}x)",
+            unfused * 1e3,
+            fused * 1e3,
+            unfused / fused
+        );
+    }
+
+    section("ablation 3: multi-stream on the extension models (MixNet/ResNeSt)");
+    for name in ["mixnet_s", "resnest50"] {
+        let g = models::build(name, 1);
+        let single = simulate_inference(&g, Baseline::NimbleSingleStream, &dev).total_s;
+        let multi = simulate_inference(&g, Baseline::Nimble, &dev).total_s;
+        println!(
+            "{name:<18} single {:.3} ms -> multi {:.3} ms ({:.2}x)",
+            single * 1e3,
+            multi * 1e3,
+            single / multi
+        );
+    }
+}

@@ -1,0 +1,34 @@
+//! Algorithm 1 end-to-end cost (MEG + matching + partition) across graph
+//! sizes and real model graphs. The paper's App. A bounds this at O(V³);
+//! it runs once per engine build, but must stay interactive for the
+//! biggest NAS graphs.
+
+mod common;
+use common::{bench, section};
+use nimble::graph::gen::{layered_dag, random_dag};
+use nimble::matching::MatchingAlgo;
+use nimble::models;
+use nimble::stream::assign_streams;
+use nimble::util::Pcg32;
+
+fn main() {
+    section("Algorithm 1 on synthetic DAGs");
+    for &n in &[50usize, 200, 800] {
+        let g = random_dag(&mut Pcg32::new(1), n, 0.02);
+        bench(&format!("assign_streams random n={n}"), 2, 10, || {
+            assign_streams(&g, MatchingAlgo::HopcroftKarp)
+        });
+    }
+    let g = layered_dag(&mut Pcg32::new(2), 20, 8, 3);
+    bench(&format!("assign_streams layered n={}", g.n_nodes()), 2, 10, || {
+        assign_streams(&g, MatchingAlgo::HopcroftKarp)
+    });
+
+    section("Algorithm 1 on model-zoo graphs (engine-build cost)");
+    for name in ["resnet50", "inception_v3", "nasnet_a_mobile", "nasnet_a_large"] {
+        let g = models::build(name, 1);
+        bench(&format!("assign_streams {name} (|V|={})", g.n_nodes()), 1, 5, || {
+            assign_streams(&g, MatchingAlgo::HopcroftKarp)
+        });
+    }
+}

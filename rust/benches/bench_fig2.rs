@@ -1,0 +1,18 @@
+//! Fig. 2 regeneration benchmark: times the three motivation experiments
+//! (GPU-active ratio, scheduling-minimized comparison, critical-path
+//! analysis) and prints their tables.
+
+mod common;
+use common::{bench, section};
+
+fn main() {
+    section("Fig. 2a (GPU active-time ratios)");
+    bench("fig2a", 1, 5, nimble::figures::fig2a);
+    println!("{}", nimble::figures::fig2a().render());
+    section("Fig. 2b (scheduling-minimized)");
+    bench("fig2b", 1, 5, nimble::figures::fig2b);
+    println!("{}", nimble::figures::fig2b().render());
+    section("Fig. 2c (critical path)");
+    bench("fig2c", 1, 5, nimble::figures::fig2c);
+    println!("{}", nimble::figures::fig2c().render());
+}

@@ -1,0 +1,11 @@
+//! Fig. 7 regeneration benchmark: the full 8-network × 6-system inference
+//! sweep on the simulated V100, printing the speedup table.
+
+mod common;
+use common::{bench, section};
+
+fn main() {
+    section("Fig. 7 (inference speedups vs PyTorch, batch 1, V100)");
+    bench("fig7 full sweep", 0, 3, nimble::figures::fig7);
+    println!("{}", nimble::figures::fig7().render());
+}

@@ -1,0 +1,14 @@
+//! Fig. 8 + Fig. 10 regeneration benchmark: training-step speedups at
+//! batch 32 and across batch sizes.
+
+mod common;
+use common::{bench, section};
+
+fn main() {
+    section("Fig. 8 (training speedups, batch 32)");
+    bench("fig8 sweep", 0, 2, nimble::figures::fig8);
+    println!("{}", nimble::figures::fig8().render());
+    section("Fig. 10 (batch-size sweep)");
+    bench("fig10 sweep", 0, 2, nimble::figures::fig10);
+    println!("{}", nimble::figures::fig10().render());
+}

@@ -1,0 +1,54 @@
+//! The paper's central measurement on the REAL substrate: per-request
+//! scheduling overhead, eager run-time scheduling vs AoT replay, over the
+//! actual XLA/PJRT executables (Fig. 2b methodology: identical kernels,
+//! only the scheduling differs). Skips if artifacts are missing.
+
+mod common;
+use common::{bench, section};
+use nimble::aot::TaskSchedule;
+use nimble::engine::EagerEngine;
+use nimble::runtime::{artifacts_available, artifacts_dir, ArtifactRegistry, RuntimeClient};
+use nimble::util::stats::fmt_secs;
+use nimble::util::{Pcg32, Summary};
+use std::sync::Arc;
+
+fn main() {
+    if !artifacts_available() {
+        println!("SKIP bench_overhead: run `make artifacts` first");
+        return;
+    }
+    let client = RuntimeClient::cpu().expect("client");
+    let reg = Arc::new(ArtifactRegistry::load(client, artifacts_dir()).expect("registry"));
+
+    for batch in [1usize, 8] {
+        section(&format!("MiniInception batch={batch} (real XLA executables)"));
+        let eager = EagerEngine::new(reg.clone(), batch).expect("eager");
+        let sched = TaskSchedule::build(&reg, batch).expect("schedule");
+        let mut rng = Pcg32::new(5);
+        let input: Vec<f32> =
+            (0..eager.input_len()).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+
+        let iters = 12;
+        let mut e_sched = Vec::new();
+        let mut r_sched = Vec::new();
+        bench("eager end-to-end", 2, iters, || {
+            let (_, s) = eager.infer(&input).unwrap();
+            e_sched.push(s.sched_s);
+        });
+        bench("replay end-to-end", 2, iters, || {
+            let (_, s) = sched.replay_with_stats(&reg, &input).unwrap();
+            r_sched.push(s);
+        });
+        let es = Summary::from_samples(e_sched);
+        let rs = Summary::from_samples(r_sched);
+        let n = sched.n_tasks() as f64;
+        println!(
+            "scheduling work only: eager {}/req ({}/op)  replay {}/req ({}/op)  -> {:.1}x removed",
+            fmt_secs(es.median()),
+            fmt_secs(es.median() / n),
+            fmt_secs(rs.median()),
+            fmt_secs(rs.median() / n),
+            es.median() / rs.median()
+        );
+    }
+}

@@ -1,0 +1,39 @@
+//! Serving-path benchmark over the REAL engine: offered-load sweep through
+//! the batched server (replay mode), reporting p50/p99 latency and
+//! throughput. Skips without artifacts.
+
+mod common;
+use common::section;
+use nimble::coordinator::EngineConfig;
+use nimble::serving::{NimbleServer, ServerConfig};
+use nimble::util::Pcg32;
+use std::time::Duration;
+
+fn main() {
+    if !nimble::runtime::artifacts_available() {
+        println!("SKIP bench_serving: run `make artifacts` first");
+        return;
+    }
+    section("serving load sweep (replay engine, MiniInception)");
+    for rate in [5.0f64, 20.0] {
+        let server = NimbleServer::start(ServerConfig {
+            engine: EngineConfig::default(),
+            max_wait: Duration::from_millis(3),
+        })
+        .expect("server");
+        let len = server.example_len();
+        let mut rng = Pcg32::new(9);
+        let n = 24;
+        let mut pending = Vec::new();
+        for _ in 0..n {
+            let input: Vec<f32> = (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            pending.push(server.infer_async(input).unwrap());
+            std::thread::sleep(Duration::from_secs_f64(rng.gen_exp(rate)));
+        }
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let report = server.shutdown().expect("report");
+        println!("offered ~{rate} req/s:\n{}", report.render());
+    }
+}

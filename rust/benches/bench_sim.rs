@@ -1,0 +1,33 @@
+//! Discrete-event simulator throughput: simulated tasks per second on the
+//! figure-regeneration hot path (target in DESIGN.md §Perf: ≥ ~1M tasks/s
+//! so `nimble figures all` stays interactive).
+
+mod common;
+use common::{bench, section};
+use nimble::baselines::{prepare, run_prepared, Baseline};
+use nimble::models;
+use nimble::sim::GpuSpec;
+
+fn main() {
+    section("DES throughput (end-to-end simulate per model)");
+    let dev = GpuSpec::v100();
+    for (name, b) in [
+        ("resnet50", Baseline::PyTorch),
+        ("nasnet_a_mobile", Baseline::PyTorch),
+        ("nasnet_a_mobile", Baseline::Nimble),
+        ("nasnet_a_large", Baseline::Nimble),
+    ] {
+        let g = models::build(name, 1);
+        let p = prepare(&g, b, &dev, true);
+        let n_tasks = p.plan.order.len();
+        let s = bench(&format!("simulate {name} / {}", b.name()), 2, 15, || {
+            run_prepared(&p, &dev)
+        });
+        println!("  -> {:.2}M simulated tasks/s", n_tasks as f64 / s.median() / 1e6);
+    }
+
+    section("training-graph simulation");
+    let g = models::build_train("resnet50_cifar", 32);
+    let p = prepare(&g, Baseline::Nimble, &dev, false);
+    bench("simulate resnet50_cifar train b32 / Nimble", 1, 10, || run_prepared(&p, &dev));
+}

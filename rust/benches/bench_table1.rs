@@ -1,0 +1,11 @@
+//! Table 1 regeneration benchmark: multi- vs single-stream Nimble across
+//! the five parallelizable architectures.
+
+mod common;
+use common::{bench, section};
+
+fn main() {
+    section("Table 1 (multi-stream impact)");
+    bench("table1 sweep", 0, 3, nimble::figures::table1);
+    println!("{}", nimble::figures::table1().render());
+}

@@ -1,0 +1,32 @@
+//! Shared micro-bench harness (criterion is unavailable offline): warmup +
+//! timed iterations with mean/p50/p99 reporting.
+
+use nimble::util::stats::{fmt_secs, Summary};
+use std::time::Instant;
+
+/// Time `iters` runs of `f` after `warmup` runs; print and return stats.
+#[allow(dead_code)]
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let s = Summary::from_samples(samples);
+    println!(
+        "{name:<48} mean={:>12} p50={:>12} p99={:>12} (n={iters})",
+        fmt_secs(s.mean()),
+        fmt_secs(s.median()),
+        fmt_secs(s.percentile(99.0)),
+    );
+    s
+}
+
+/// Section header.
+pub fn section(title: &str) {
+    println!("\n### {title}");
+}

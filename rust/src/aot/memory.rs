@@ -1,0 +1,158 @@
+//! Reserved-memory planning (paper §4.1): "since a static neural network
+//! makes the same sequence of memory requests for different runs, we can
+//! pre-allocate the exact amount of GPU memory required for its execution."
+//!
+//! Given each tensor's size and lifetime interval (definition step → last
+//! use step in the submission order), compute a static arena layout:
+//! offsets such that tensors with overlapping lifetimes never overlap in
+//! memory. Greedy best-fit over sorted-by-size tensors — the standard
+//! static memory planner (cf. TFLite/TVM planners).
+
+/// A tensor's lifetime in submission steps, inclusive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lifetime {
+    pub def_step: usize,
+    pub last_use_step: usize,
+    pub bytes: u64,
+}
+
+impl Lifetime {
+    fn overlaps(&self, other: &Lifetime) -> bool {
+        self.def_step <= other.last_use_step && other.def_step <= self.last_use_step
+    }
+}
+
+/// Planned arena: per-tensor offsets plus total footprint.
+#[derive(Debug, Clone)]
+pub struct ArenaPlan {
+    /// offset per tensor (same indexing as the input lifetimes).
+    pub offsets: Vec<u64>,
+    pub rounded_sizes: Vec<u64>,
+    pub arena_bytes: u64,
+}
+
+impl ArenaPlan {
+    /// Sum of all rounded tensor sizes — what per-tensor allocation would
+    /// cost without lifetime reuse.
+    pub fn unshared_bytes(&self) -> u64 {
+        self.rounded_sizes.iter().sum()
+    }
+}
+
+/// Plan the arena. `O(n² )` interval checks — engine-build time, n = #tensors.
+pub fn plan_arena(lifetimes: &[Lifetime]) -> ArenaPlan {
+    let n = lifetimes.len();
+    let rounded: Vec<u64> =
+        lifetimes.iter().map(|l| crate::engine::alloc::round_size(l.bytes)).collect();
+    // Place big tensors first (best-fit-decreasing).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(rounded[i]));
+
+    let mut offsets = vec![0u64; n];
+    let mut placed: Vec<usize> = Vec::with_capacity(n);
+    let mut arena = 0u64;
+    for &i in &order {
+        // Candidate gaps: collect placed tensors with overlapping lifetimes,
+        // sorted by offset; slide through gaps first-fit.
+        let mut conflicts: Vec<(u64, u64)> = placed
+            .iter()
+            .filter(|&&j| lifetimes[i].overlaps(&lifetimes[j]))
+            .map(|&j| (offsets[j], offsets[j] + rounded[j]))
+            .collect();
+        conflicts.sort_unstable();
+        let mut cursor = 0u64;
+        for (start, end) in conflicts {
+            if cursor + rounded[i] <= start {
+                break; // fits in the gap before `start`
+            }
+            cursor = cursor.max(end);
+        }
+        offsets[i] = cursor;
+        arena = arena.max(cursor + rounded[i]);
+        placed.push(i);
+    }
+    ArenaPlan { offsets, rounded_sizes: rounded, arena_bytes: arena }
+}
+
+/// Verify no two lifetime-overlapping tensors share bytes (test helper and
+/// debug assertion for the engine).
+pub fn plan_is_valid(lifetimes: &[Lifetime], plan: &ArenaPlan) -> bool {
+    let n = lifetimes.len();
+    for i in 0..n {
+        if plan.offsets[i] + plan.rounded_sizes[i] > plan.arena_bytes {
+            return false;
+        }
+        for j in (i + 1)..n {
+            if lifetimes[i].overlaps(&lifetimes[j]) {
+                let (a0, a1) = (plan.offsets[i], plan.offsets[i] + plan.rounded_sizes[i]);
+                let (b0, b1) = (plan.offsets[j], plan.offsets[j] + plan.rounded_sizes[j]);
+                if a0 < b1 && b0 < a1 {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Pcg32};
+
+    fn lt(def: usize, last: usize, bytes: u64) -> Lifetime {
+        Lifetime { def_step: def, last_use_step: last, bytes }
+    }
+
+    #[test]
+    fn disjoint_lifetimes_share_memory() {
+        let lts = [lt(0, 1, 4096), lt(2, 3, 4096)];
+        let plan = plan_arena(&lts);
+        assert!(plan_is_valid(&lts, &plan));
+        assert_eq!(plan.offsets[0], plan.offsets[1], "disjoint tensors reuse");
+        assert!(plan.arena_bytes < plan.unshared_bytes());
+    }
+
+    #[test]
+    fn overlapping_lifetimes_do_not_share() {
+        let lts = [lt(0, 5, 4096), lt(2, 3, 4096)];
+        let plan = plan_arena(&lts);
+        assert!(plan_is_valid(&lts, &plan));
+        assert_ne!(plan.offsets[0], plan.offsets[1]);
+        assert_eq!(plan.arena_bytes, plan.unshared_bytes());
+    }
+
+    #[test]
+    fn chain_arena_is_two_tensors_wide() {
+        // A chain a→b→c→d: at any step at most two tensors live.
+        let lts = [lt(0, 1, 1000), lt(1, 2, 1000), lt(2, 3, 1000), lt(3, 4, 1000)];
+        let plan = plan_arena(&lts);
+        assert!(plan_is_valid(&lts, &plan));
+        assert_eq!(plan.arena_bytes, 2 * 1024);
+    }
+
+    #[test]
+    fn empty_plan() {
+        let plan = plan_arena(&[]);
+        assert_eq!(plan.arena_bytes, 0);
+    }
+
+    #[test]
+    fn random_plans_are_valid_and_never_worse_than_unshared() {
+        prop::check("arena planner validity", 80, |rng: &mut Pcg32| {
+            let n = rng.gen_range_inclusive(1, 40);
+            let lts: Vec<Lifetime> = (0..n)
+                .map(|_| {
+                    let def = rng.gen_range(60);
+                    let len = rng.gen_range(20);
+                    lt(def, def + len, (rng.gen_range(100_000) + 1) as u64)
+                })
+                .collect();
+            let plan = plan_arena(&lts);
+            prop::ensure(plan_is_valid(&lts, &plan), || format!("invalid plan for {lts:?}"))?;
+            prop::ensure(plan.arena_bytes <= plan.unshared_bytes(), || {
+                "arena larger than unshared".to_string()
+            })
+        });
+    }
+}

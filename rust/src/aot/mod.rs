@@ -1,0 +1,14 @@
+//! The AoT scheduler (paper §4.1): turn a manifest node graph into a
+//! **task schedule** — the pre-resolved artifact the replay engine submits
+//! from, with no run-time scheduling work.
+//!
+//! `memory` is the reserved-memory half (lifetime-interval arena planning,
+//! the "pre-allocate the exact amount of GPU memory" step); `schedule` is
+//! the execution-trace half (pre-run interception: resolved executables,
+//! pre-bound argument sources, stream assignment, event plan).
+
+pub mod memory;
+pub mod schedule;
+
+pub use memory::{plan_arena, ArenaPlan, Lifetime};
+pub use schedule::{ArgSource, ReplayTask, TaskSchedule};

@@ -1,0 +1,227 @@
+//! Task-schedule construction — the pre-run interception of paper §4.1.
+//!
+//! Build steps (mirroring Fig. 5):
+//!   1. Build the operator DAG from the manifest node graph.
+//!   2. Graph rewriter: Algorithm 1 stream assignment + sync plan
+//!      (`stream::rewrite`), verified for max logical concurrency.
+//!   3. Resolve every node once: executable handle, argument sources
+//!      (slot of a producer's output, or a pre-staged weight buffer),
+//!      output slot — the work the eager scheduler redoes every run.
+//!   4. Reserve memory: lifetime-interval arena plan over the slots.
+//!   5. Pre-run: execute the schedule once with a dummy input, validating
+//!      the trace end-to-end before it is ever used for a request.
+
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+use crate::aot::memory::{plan_arena, ArenaPlan, Lifetime};
+use crate::graph::Dag;
+use crate::matching::MatchingAlgo;
+use crate::runtime::manifest::{InputRef, NodeEntry};
+use crate::runtime::ArtifactRegistry;
+use crate::stream::rewrite::rewrite_with;
+use crate::stream::{assign_streams, verify::satisfies_max_logical_concurrency};
+
+/// Where a task argument comes from.
+#[derive(Clone)]
+pub enum ArgSource {
+    /// Output slot of an earlier task (or the input slot).
+    Slot(usize),
+    /// Pre-staged weight buffer (reserved at AoT time).
+    Weight(Arc<xla::PjRtBuffer>),
+}
+
+/// One pre-resolved GPU task.
+pub struct ReplayTask {
+    pub name: String,
+    pub exe: Arc<xla::PjRtLoadedExecutable>,
+    pub args: Vec<ArgSource>,
+    pub out_slot: usize,
+    /// Stream id from Algorithm 1 (submission bookkeeping; execution on the
+    /// CPU PJRT device is serial — see DESIGN.md §Hardware-Adaptation).
+    pub stream: usize,
+    pub wait_events: Vec<usize>,
+    pub record_events: Vec<usize>,
+    pub out_dims: Vec<usize>,
+}
+
+/// The task schedule: everything needed to run the network with zero
+/// run-time scheduling.
+pub struct TaskSchedule {
+    pub tasks: Vec<ReplayTask>,
+    pub n_slots: usize,
+    pub input_slot: usize,
+    pub output_slot: usize,
+    pub input_dims: Vec<usize>,
+    pub output_dims: Vec<usize>,
+    pub n_streams: usize,
+    pub n_events: usize,
+    /// Reserved-memory plan (reported, and validated in tests).
+    pub arena: ArenaPlan,
+    pub batch: usize,
+}
+
+impl TaskSchedule {
+    /// Build (and pre-run) the schedule for one batch size.
+    pub fn build(registry: &ArtifactRegistry, batch: usize) -> Result<TaskSchedule> {
+        let nodes: &[NodeEntry] = registry
+            .manifest
+            .graphs
+            .get(&batch)
+            .with_context(|| format!("no node graph for batch {batch}"))?;
+
+        // --- 1. operator DAG (node 0 = the input placeholder). ---
+        let mut dag: Dag<usize> = Dag::new();
+        let input_id = dag.add_node(usize::MAX);
+        let mut id_of = std::collections::HashMap::new();
+        id_of.insert("input".to_string(), input_id);
+        for (i, n) in nodes.iter().enumerate() {
+            let id = dag.add_node(i);
+            for inp in &n.inputs {
+                if let InputRef::Node(dep) = inp {
+                    dag.add_edge(id_of[dep], id);
+                }
+            }
+            id_of.insert(n.name.clone(), id);
+        }
+
+        // --- 2. Algorithm 1 + rewriter. ---
+        let assignment = assign_streams(&dag, MatchingAlgo::HopcroftKarp);
+        debug_assert!(satisfies_max_logical_concurrency(&dag, &assignment.stream_of));
+        let plan = rewrite_with(&dag, &assignment);
+
+        // --- 3. resolve tasks in submission order. ---
+        // slot i = output of dag node i (slot of input_id = the request input).
+        let n_slots = dag.n_nodes();
+        let mut tasks = Vec::with_capacity(nodes.len());
+        for p in &plan.order {
+            if p.node == input_id {
+                continue; // virtual
+            }
+            let n = &nodes[*dag.node(p.node)];
+            let exe = registry.executable(&n.artifact)?;
+            let args = n
+                .inputs
+                .iter()
+                .map(|inp| match inp {
+                    InputRef::Node(dep) => Ok(ArgSource::Slot(id_of[dep])),
+                    InputRef::Weight(w) => Ok(ArgSource::Weight(registry.weight(w)?)),
+                })
+                .collect::<Result<Vec<_>>>()?;
+            tasks.push(ReplayTask {
+                name: n.name.clone(),
+                exe,
+                args,
+                out_slot: id_of[&n.name],
+                stream: p.stream,
+                wait_events: p.wait_events.clone(),
+                record_events: p.record_events.clone(),
+                out_dims: n.dims.clone(),
+            });
+        }
+
+        // --- 4. reserved-memory plan over slot lifetimes. ---
+        let input_dims = registry
+            .manifest
+            .inputs
+            .get(&batch)
+            .cloned()
+            .with_context(|| format!("no input dims for batch {batch}"))?;
+        let mut def_step = vec![0usize; n_slots];
+        let mut last_use = vec![0usize; n_slots];
+        let mut bytes = vec![0u64; n_slots];
+        bytes[input_slot_of(input_id)] = 4 * input_dims.iter().product::<usize>() as u64;
+        for (step, t) in tasks.iter().enumerate() {
+            def_step[t.out_slot] = step + 1;
+            last_use[t.out_slot] = step + 1;
+            bytes[t.out_slot] = 4 * t.out_dims.iter().product::<usize>() as u64;
+            for a in &t.args {
+                if let ArgSource::Slot(s) = a {
+                    last_use[*s] = last_use[*s].max(step + 1);
+                }
+            }
+        }
+        let output_slot = tasks.last().context("empty schedule")?.out_slot;
+        last_use[output_slot] = tasks.len() + 1; // output survives the run
+        let lifetimes: Vec<Lifetime> = (0..n_slots)
+            .map(|s| Lifetime { def_step: def_step[s], last_use_step: last_use[s], bytes: bytes[s] })
+            .collect();
+        let arena = plan_arena(&lifetimes);
+
+        let output_dims = tasks.last().unwrap().out_dims.clone();
+        let schedule = TaskSchedule {
+            tasks,
+            n_slots,
+            input_slot: input_id,
+            output_slot,
+            input_dims,
+            output_dims,
+            n_streams: plan.n_streams,
+            n_events: plan.n_events,
+            arena,
+            batch,
+        };
+
+        // --- 5. pre-run with a dummy input (validates the whole trace). ---
+        let dummy = vec![0.0f32; schedule.input_dims.iter().product()];
+        let out = schedule
+            .replay(registry, &dummy)
+            .context("AoT pre-run failed — schedule is invalid")?;
+        anyhow::ensure!(
+            out.len() == schedule.output_dims.iter().product::<usize>(),
+            "pre-run output size mismatch"
+        );
+        Ok(schedule)
+    }
+
+    /// Replay the schedule for one input — the paper's run-time path: no
+    /// shape checks, no dispatch, no allocation decisions; just task
+    /// submission in the recorded order.
+    pub fn replay(&self, registry: &ArtifactRegistry, input: &[f32]) -> Result<Vec<f32>> {
+        self.replay_with_stats(registry, input).map(|(out, _)| out)
+    }
+
+    /// Replay, additionally reporting the wall time spent on submission
+    /// bookkeeping (everything except `execute_b`) — the AoT counterpart of
+    /// [`crate::engine::eager::EagerStats::sched_s`].
+    pub fn replay_with_stats(
+        &self,
+        registry: &ArtifactRegistry,
+        input: &[f32],
+    ) -> Result<(Vec<f32>, f64)> {
+        let client = &registry.client;
+        let mut sched_s = 0.0f64;
+        let mut slots: Vec<Option<xla::PjRtBuffer>> = (0..self.n_slots).map(|_| None).collect();
+        slots[self.input_slot] = Some(client.buffer_f32(input, &self.input_dims)?);
+        for t in &self.tasks {
+            let out_buf = {
+                let t0 = std::time::Instant::now();
+                // Gather pre-bound arguments (raw pointer copies, no lookups).
+                let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(t.args.len());
+                for a in &t.args {
+                    match a {
+                        ArgSource::Slot(s) => {
+                            args.push(slots[*s].as_ref().expect("slot written before use"))
+                        }
+                        ArgSource::Weight(w) => args.push(w.as_ref()),
+                    }
+                }
+                sched_s += t0.elapsed().as_secs_f64();
+                let mut out = t.exe.execute_b(&args)?;
+                out.remove(0).remove(0)
+            };
+            slots[t.out_slot] = Some(out_buf);
+        }
+        let out = slots[self.output_slot].take().expect("output slot filled");
+        Ok((client.to_host_f32(&out)?, sched_s))
+    }
+
+    /// Count of GPU tasks.
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+}
+
+fn input_slot_of(input_id: usize) -> usize {
+    input_id
+}

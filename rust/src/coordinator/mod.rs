@@ -1,0 +1,109 @@
+//! The Nimble engine coordinator: ties the pipeline together.
+//!
+//! `NimbleEngine::build` runs the full Figure-4 flow once: load artifacts →
+//! per batch size, build the operator DAG, run the Graph Rewriter
+//! (Algorithm 1 + sync plan) and the AoT scheduler (pre-run interception,
+//! memory reservation) → keep the task schedules for request-time replay.
+//! An eager engine over the same executables serves as the run-time-
+//! scheduling baseline (`ExecMode::Eager`).
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::aot::TaskSchedule;
+use crate::engine::EagerEngine;
+use crate::runtime::{ArtifactRegistry, RuntimeClient};
+
+/// Which execution path serves requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// AoT task-schedule replay (the paper's system).
+    #[default]
+    Replay,
+    /// Run-time scheduling on every request (the baseline).
+    Eager,
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub artifacts_dir: PathBuf,
+    pub mode: ExecMode,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { artifacts_dir: crate::runtime::artifacts_dir(), mode: ExecMode::Replay }
+    }
+}
+
+/// A built engine: one task schedule + one eager engine per batch size.
+pub struct NimbleEngine {
+    pub registry: Arc<ArtifactRegistry>,
+    pub config: EngineConfig,
+    schedules: HashMap<usize, TaskSchedule>,
+    eager: HashMap<usize, EagerEngine>,
+}
+
+impl NimbleEngine {
+    /// Build the engine (compiles artifacts, runs AoT scheduling + pre-run
+    /// for every batch size in the manifest).
+    pub fn build(config: EngineConfig) -> Result<Self> {
+        let client = RuntimeClient::cpu()?;
+        let registry =
+            Arc::new(ArtifactRegistry::load(client, config.artifacts_dir.clone())?);
+        let mut schedules = HashMap::new();
+        let mut eager = HashMap::new();
+        for batch in registry.manifest.batch_sizes() {
+            schedules.insert(batch, TaskSchedule::build(&registry, batch)?);
+            eager.insert(batch, EagerEngine::new(registry.clone(), batch)?);
+        }
+        Ok(NimbleEngine { registry, config, schedules, eager })
+    }
+
+    /// Batch sizes this engine can serve.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self.schedules.keys().copied().collect();
+        b.sort_unstable();
+        b
+    }
+
+    /// Largest supported batch.
+    pub fn max_batch(&self) -> usize {
+        self.batch_sizes().into_iter().max().unwrap_or(1)
+    }
+
+    pub fn schedule(&self, batch: usize) -> Result<&TaskSchedule> {
+        self.schedules.get(&batch).with_context(|| format!("no schedule for batch {batch}"))
+    }
+
+    /// Per-example input length.
+    pub fn example_len(&self, batch: usize) -> Result<usize> {
+        let s = self.schedule(batch)?;
+        Ok(s.input_dims.iter().product::<usize>() / batch)
+    }
+
+    /// Run one batch through the configured path.
+    pub fn infer(&self, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
+        match self.config.mode {
+            ExecMode::Replay => self.schedule(batch)?.replay(&self.registry, input),
+            ExecMode::Eager => {
+                let engine = self
+                    .eager
+                    .get(&batch)
+                    .with_context(|| format!("no eager engine for batch {batch}"))?;
+                Ok(engine.infer(input)?.0)
+            }
+        }
+    }
+
+    /// Run one batch through an explicit path (for A/B measurements).
+    pub fn infer_mode(&self, mode: ExecMode, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
+        match mode {
+            ExecMode::Replay => self.schedule(batch)?.replay(&self.registry, input),
+            ExecMode::Eager => Ok(self.eager[&batch].infer(input)?.0),
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Real execution engines over the XLA/PJRT runtime.
+//!
+//! * [`eager`] — the run-time scheduling baseline: every request pays the
+//!   full per-operator scheduling procedure of the paper's §2 (shape
+//!   check, dispatch lookup, caching-allocator bookkeeping, argument
+//!   marshalling) before each task submission.
+//! * AoT replay lives in [`crate::aot::schedule`]: the same executables,
+//!   pre-resolved once; requests are raw submission loops.
+//! * [`alloc`] — the caching-allocator bookkeeping both share.
+//!
+//! The measured eager-vs-replay gap on this substrate is the paper's
+//! Fig. 2b experiment (run by `examples/quickstart.rs` and
+//! `rust/benches/bench_overhead.rs`).
+
+pub mod alloc;
+pub mod eager;
+
+pub use eager::EagerEngine;

@@ -1,0 +1,249 @@
+//! Directed acyclic graph with payload-carrying nodes.
+//!
+//! `Dag<N>` is the substrate for every graph in the system: operator graphs
+//! (`N = ops::Op`), rewritten graphs with event nodes, and the synthetic DAGs
+//! used by the property tests. Node identity is a dense `usize` index so the
+//! structural algorithms can use flat vectors and bitsets.
+
+/// Dense node identifier.
+pub type NodeId = usize;
+
+/// A DAG with adjacency in both directions.
+///
+/// Acyclicity is *not* enforced on every `add_edge` (that would be O(V+E)
+/// each); callers build graphs and the algorithms that require acyclicity
+/// (`topo_order`) detect cycles and report them. `validate()` runs the full
+/// check on demand.
+#[derive(Debug, Clone)]
+pub struct Dag<N> {
+    nodes: Vec<N>,
+    succ: Vec<Vec<NodeId>>,
+    pred: Vec<Vec<NodeId>>,
+    n_edges: usize,
+}
+
+impl<N> Default for Dag<N> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<N> Dag<N> {
+    pub fn new() -> Self {
+        Dag { nodes: Vec::new(), succ: Vec::new(), pred: Vec::new(), n_edges: 0 }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Dag {
+            nodes: Vec::with_capacity(n),
+            succ: Vec::with_capacity(n),
+            pred: Vec::with_capacity(n),
+            n_edges: 0,
+        }
+    }
+
+    /// Add a node, returning its id.
+    pub fn add_node(&mut self, payload: N) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(payload);
+        self.succ.push(Vec::new());
+        self.pred.push(Vec::new());
+        id
+    }
+
+    /// Add a directed edge `u -> v`. Duplicate edges are ignored.
+    pub fn add_edge(&mut self, u: NodeId, v: NodeId) {
+        assert!(u < self.nodes.len() && v < self.nodes.len(), "edge endpoint out of range");
+        assert_ne!(u, v, "self-loop would make the graph cyclic");
+        if self.succ[u].contains(&v) {
+            return;
+        }
+        self.succ[u].push(v);
+        self.pred[v].push(u);
+        self.n_edges += 1;
+    }
+
+    /// Add an edge from every node in `us` to `v`.
+    pub fn add_edges_from(&mut self, us: &[NodeId], v: NodeId) {
+        for &u in us {
+            self.add_edge(u, v);
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.n_edges
+    }
+
+    pub fn node(&self, id: NodeId) -> &N {
+        &self.nodes[id]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut N {
+        &mut self.nodes[id]
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = (NodeId, &N)> {
+        self.nodes.iter().enumerate()
+    }
+
+    pub fn successors(&self, id: NodeId) -> &[NodeId] {
+        &self.succ[id]
+    }
+
+    pub fn predecessors(&self, id: NodeId) -> &[NodeId] {
+        &self.pred[id]
+    }
+
+    pub fn has_edge(&self, u: NodeId, v: NodeId) -> bool {
+        self.succ[u].contains(&v)
+    }
+
+    /// All edges in arbitrary order.
+    pub fn edges(&self) -> Vec<(NodeId, NodeId)> {
+        let mut out = Vec::with_capacity(self.n_edges);
+        for (u, vs) in self.succ.iter().enumerate() {
+            for &v in vs {
+                out.push((u, v));
+            }
+        }
+        out
+    }
+
+    pub fn in_degree(&self, id: NodeId) -> usize {
+        self.pred[id].len()
+    }
+
+    pub fn out_degree(&self, id: NodeId) -> usize {
+        self.succ[id].len()
+    }
+
+    /// Nodes with no predecessors.
+    pub fn sources(&self) -> Vec<NodeId> {
+        (0..self.n_nodes()).filter(|&v| self.pred[v].is_empty()).collect()
+    }
+
+    /// Nodes with no successors.
+    pub fn sinks(&self) -> Vec<NodeId> {
+        (0..self.n_nodes()).filter(|&v| self.succ[v].is_empty()).collect()
+    }
+
+    /// Rebuild this graph keeping the same nodes but only edges accepted by
+    /// the predicate. Used to derive the MEG as a `Dag` sharing payload refs.
+    pub fn filter_edges(&self, mut keep: impl FnMut(NodeId, NodeId) -> bool) -> Dag<()> {
+        let mut g = Dag::with_capacity(self.n_nodes());
+        for _ in 0..self.n_nodes() {
+            g.add_node(());
+        }
+        for (u, v) in self.edges() {
+            if keep(u, v) {
+                g.add_edge(u, v);
+            }
+        }
+        g
+    }
+
+    /// Structure-only copy (payloads dropped).
+    pub fn structure(&self) -> Dag<()> {
+        self.filter_edges(|_, _| true)
+    }
+
+    /// Full acyclicity + adjacency-consistency validation.
+    pub fn validate(&self) -> Result<(), String> {
+        // pred/succ mirror each other
+        for (u, vs) in self.succ.iter().enumerate() {
+            for &v in vs {
+                if !self.pred[v].contains(&u) {
+                    return Err(format!("edge ({u},{v}) missing from pred list"));
+                }
+            }
+        }
+        // acyclic
+        crate::graph::topo::topo_order(self).map(|_| ()).map_err(|c| {
+            format!("cycle detected through node {c}")
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Dag<&'static str> {
+        // a -> b, a -> c, b -> d, c -> d
+        let mut g = Dag::new();
+        let a = g.add_node("a");
+        let b = g.add_node("b");
+        let c = g.add_node("c");
+        let d = g.add_node("d");
+        g.add_edge(a, b);
+        g.add_edge(a, c);
+        g.add_edge(b, d);
+        g.add_edge(c, d);
+        g
+    }
+
+    #[test]
+    fn counts_and_adjacency() {
+        let g = diamond();
+        assert_eq!(g.n_nodes(), 4);
+        assert_eq!(g.n_edges(), 4);
+        assert_eq!(g.successors(0), &[1, 2]);
+        assert_eq!(g.predecessors(3), &[1, 2]);
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(1, 0));
+    }
+
+    #[test]
+    fn duplicate_edges_ignored() {
+        let mut g = diamond();
+        g.add_edge(0, 1);
+        assert_eq!(g.n_edges(), 4);
+    }
+
+    #[test]
+    fn sources_and_sinks() {
+        let g = diamond();
+        assert_eq!(g.sources(), vec![0]);
+        assert_eq!(g.sinks(), vec![3]);
+    }
+
+    #[test]
+    fn edges_enumeration() {
+        let g = diamond();
+        let mut es = g.edges();
+        es.sort_unstable();
+        assert_eq!(es, vec![(0, 1), (0, 2), (1, 3), (2, 3)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn self_loop_panics() {
+        let mut g: Dag<()> = Dag::new();
+        let a = g.add_node(());
+        g.add_edge(a, a);
+    }
+
+    #[test]
+    fn validate_detects_cycle() {
+        let mut g: Dag<()> = Dag::new();
+        let a = g.add_node(());
+        let b = g.add_node(());
+        g.add_edge(a, b);
+        assert!(g.validate().is_ok());
+        g.add_edge(b, a);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn filter_edges_keeps_structure() {
+        let g = diamond();
+        let f = g.filter_edges(|u, _| u == 0);
+        assert_eq!(f.n_nodes(), 4);
+        assert_eq!(f.n_edges(), 2);
+        assert!(f.has_edge(0, 1) && f.has_edge(0, 2) && !f.has_edge(1, 3));
+    }
+}

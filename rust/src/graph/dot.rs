@@ -1,0 +1,59 @@
+//! Graphviz DOT export for debugging stream assignments and rewritten graphs.
+
+use super::dag::{Dag, NodeId};
+
+/// Render a DAG to DOT. `label` supplies each node's label; `cluster`
+/// optionally groups nodes (e.g. by assigned stream) with a color.
+pub fn to_dot<N>(
+    g: &Dag<N>,
+    name: &str,
+    mut label: impl FnMut(NodeId, &N) -> String,
+    mut group: impl FnMut(NodeId) -> Option<usize>,
+) -> String {
+    const PALETTE: [&str; 10] = [
+        "#a6cee3", "#1f78b4", "#b2df8a", "#33a02c", "#fb9a99", "#e31a1c", "#fdbf6f",
+        "#ff7f00", "#cab2d6", "#6a3d9a",
+    ];
+    let mut s = format!("digraph {name} {{\n  rankdir=TB;\n  node [shape=box, style=filled];\n");
+    for (id, n) in g.nodes() {
+        let fill = match group(id) {
+            Some(gid) => PALETTE[gid % PALETTE.len()],
+            None => "#ffffff",
+        };
+        s.push_str(&format!(
+            "  n{id} [label=\"{}\", fillcolor=\"{fill}\"];\n",
+            label(id, n).replace('"', "'")
+        ));
+    }
+    for (u, v) in g.edges() {
+        s.push_str(&format!("  n{u} -> n{v};\n"));
+    }
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nodes_edges_and_groups() {
+        let mut g = Dag::new();
+        let a = g.add_node("conv");
+        let b = g.add_node("relu");
+        g.add_edge(a, b);
+        let dot = to_dot(&g, "t", |_, n| n.to_string(), |id| Some(id));
+        assert!(dot.contains("digraph t"));
+        assert!(dot.contains("n0 [label=\"conv\""));
+        assert!(dot.contains("n0 -> n1;"));
+        assert!(dot.contains("#a6cee3")); // group 0 color
+    }
+
+    #[test]
+    fn quotes_escaped() {
+        let mut g = Dag::new();
+        g.add_node("a\"b");
+        let dot = to_dot(&g, "q", |_, n| n.to_string(), |_| None);
+        assert!(dot.contains("a'b"));
+    }
+}

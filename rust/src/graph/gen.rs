@@ -1,0 +1,105 @@
+//! Seeded random-DAG generators for property tests and micro-benchmarks.
+//!
+//! Two flavours: `random_dag` (Erdős–Rényi over a fixed topological order —
+//! worst-case-ish structure) and `layered_dag` (NN-shaped: layers of parallel
+//! branches joined by concat/add-like nodes, the structures Table 1 is about).
+
+use super::dag::Dag;
+use crate::util::Pcg32;
+
+/// Erdős–Rényi DAG: nodes 0..n with each forward edge (i < j) present with
+/// probability `p`. Always acyclic by construction.
+pub fn random_dag(rng: &mut Pcg32, n: usize, p: f64) -> Dag<()> {
+    let mut g = Dag::with_capacity(n);
+    for _ in 0..n {
+        g.add_node(());
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.gen_bool(p) {
+                g.add_edge(i, j);
+            }
+        }
+    }
+    g
+}
+
+/// A connected DAG shaped like a neural-network cell: a chain of "blocks",
+/// each fanning out into `1..=max_branches` parallel branches of length
+/// `1..=max_branch_len`, merged by a join node. Mirrors the inception/NAS
+/// cell topologies whose logical concurrency Table 1 reports.
+pub fn layered_dag(
+    rng: &mut Pcg32,
+    n_blocks: usize,
+    max_branches: usize,
+    max_branch_len: usize,
+) -> Dag<()> {
+    let mut g = Dag::new();
+    let mut prev = g.add_node(()); // stem
+    for _ in 0..n_blocks {
+        let branches = rng.gen_range_inclusive(1, max_branches.max(1));
+        let mut outs = Vec::with_capacity(branches);
+        for _ in 0..branches {
+            let len = rng.gen_range_inclusive(1, max_branch_len.max(1));
+            let mut cur = prev;
+            for _ in 0..len {
+                let nxt = g.add_node(());
+                g.add_edge(cur, nxt);
+                cur = nxt;
+            }
+            outs.push(cur);
+        }
+        let join = g.add_node(());
+        for o in outs {
+            g.add_edge(o, join);
+        }
+        prev = join;
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topo::topo_order;
+
+    #[test]
+    fn random_dag_is_acyclic_and_sized() {
+        let mut rng = Pcg32::new(1);
+        for _ in 0..10 {
+            let g = random_dag(&mut rng, 50, 0.1);
+            assert_eq!(g.n_nodes(), 50);
+            assert!(topo_order(&g).is_ok());
+        }
+    }
+
+    #[test]
+    fn density_scales_with_p() {
+        let mut rng = Pcg32::new(2);
+        let sparse = random_dag(&mut rng, 60, 0.02);
+        let dense = random_dag(&mut rng, 60, 0.5);
+        assert!(sparse.n_edges() < dense.n_edges());
+    }
+
+    #[test]
+    fn layered_dag_single_source_single_sink() {
+        let mut rng = Pcg32::new(3);
+        for _ in 0..10 {
+            let g = layered_dag(&mut rng, 4, 5, 3);
+            assert!(topo_order(&g).is_ok());
+            assert_eq!(g.sources().len(), 1);
+            assert_eq!(g.sinks().len(), 1);
+        }
+    }
+
+    #[test]
+    fn layered_dag_reproducible() {
+        let a = layered_dag(&mut Pcg32::new(42), 3, 4, 2);
+        let b = layered_dag(&mut Pcg32::new(42), 3, 4, 2);
+        assert_eq!(a.n_nodes(), b.n_nodes());
+        let (mut ea, mut eb) = (a.edges(), b.edges());
+        ea.sort_unstable();
+        eb.sort_unstable();
+        assert_eq!(ea, eb);
+    }
+}

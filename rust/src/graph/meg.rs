@@ -1,0 +1,112 @@
+//! Minimum equivalent graph (Step 1 of Algorithm 1).
+//!
+//! For a finite DAG the MEG coincides with the transitive reduction and is
+//! unique (Aho, Garey & Ullman 1972; the paper cites Hsu 1975): it keeps
+//! exactly the edges `(u, v)` for which no other path `u ⇝ v` exists
+//! (Lemma 1 in the paper's appendix). With the transitive closure in hand,
+//! an edge `(u, v)` is redundant iff some other successor `w` of `u`
+//! reaches `v`.
+
+use super::dag::{Dag, NodeId};
+use super::reach::Reachability;
+
+/// Compute the MEG edge set. Returns a structure-only DAG over the same node
+/// ids containing exactly the non-redundant edges.
+pub fn minimum_equivalent_graph<N>(g: &Dag<N>) -> Dag<()> {
+    let reach = Reachability::compute(g);
+    minimum_equivalent_graph_with(g, &reach)
+}
+
+/// Same as [`minimum_equivalent_graph`] but reusing a precomputed closure.
+pub fn minimum_equivalent_graph_with<N>(g: &Dag<N>, reach: &Reachability) -> Dag<()> {
+    g.filter_edges(|u, v| !is_redundant(g, reach, u, v))
+}
+
+/// Edge (u, v) is redundant iff a path u ⇝ v of length ≥ 2 exists, i.e. some
+/// other direct successor w of u reaches v (or equals an intermediate hop).
+fn is_redundant<N>(g: &Dag<N>, reach: &Reachability, u: NodeId, v: NodeId) -> bool {
+    g.successors(u).iter().any(|&w| w != v && reach.reaches(w, v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::random_dag;
+    use crate::graph::Reachability;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn removes_shortcut_edge() {
+        // 0 -> 1 -> 2 plus shortcut 0 -> 2; MEG drops the shortcut.
+        let mut g: Dag<()> = Dag::new();
+        for _ in 0..3 {
+            g.add_node(());
+        }
+        g.add_edge(0, 1);
+        g.add_edge(1, 2);
+        g.add_edge(0, 2);
+        let meg = minimum_equivalent_graph(&g);
+        assert_eq!(meg.n_edges(), 2);
+        assert!(meg.has_edge(0, 1) && meg.has_edge(1, 2) && !meg.has_edge(0, 2));
+    }
+
+    #[test]
+    fn diamond_is_already_minimal() {
+        let mut g: Dag<()> = Dag::new();
+        for _ in 0..4 {
+            g.add_node(());
+        }
+        g.add_edge(0, 1);
+        g.add_edge(0, 2);
+        g.add_edge(1, 3);
+        g.add_edge(2, 3);
+        let meg = minimum_equivalent_graph(&g);
+        assert_eq!(meg.n_edges(), 4);
+    }
+
+    #[test]
+    fn preserves_reachability_on_random_graphs() {
+        let mut rng = Pcg32::new(0x1234);
+        for _ in 0..25 {
+            let g = random_dag(&mut rng, 30, 0.15);
+            let meg = minimum_equivalent_graph(&g);
+            let r1 = Reachability::compute(&g);
+            let r2 = Reachability::compute(&meg);
+            for u in 0..g.n_nodes() {
+                for v in 0..g.n_nodes() {
+                    assert_eq!(r1.reaches(u, v), r2.reaches(u, v), "({u},{v})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn is_minimal_on_random_graphs() {
+        // Removing ANY edge of the MEG must change reachability (Lemma 1).
+        let mut rng = Pcg32::new(0x5678);
+        for _ in 0..10 {
+            let g = random_dag(&mut rng, 20, 0.2);
+            let meg = minimum_equivalent_graph(&g);
+            for (u, v) in meg.edges() {
+                let pruned = meg.filter_edges(|a, b| !(a == u && b == v));
+                let r = Reachability::compute(&pruned);
+                assert!(!r.reaches(u, v), "edge ({u},{v}) was removable — MEG not minimal");
+            }
+        }
+    }
+
+    #[test]
+    fn meg_of_meg_is_identity() {
+        let mut rng = Pcg32::new(0x9AB);
+        for _ in 0..10 {
+            let g = random_dag(&mut rng, 25, 0.2);
+            let meg = minimum_equivalent_graph(&g);
+            let meg2 = minimum_equivalent_graph(&meg);
+            let mut e1 = meg.edges();
+            let mut e2 = meg2.edges();
+            e1.sort_unstable();
+            e2.sort_unstable();
+            assert_eq!(e1, e2);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Computation-graph core: a generic DAG with the structural algorithms the
+//! paper's stream-assignment pipeline needs — topological ordering,
+//! reachability (transitive closure), and the minimum equivalent graph
+//! (transitive reduction, Hsu 1975), plus DOT export and seeded random-DAG
+//! generators for property tests.
+
+pub mod dag;
+pub mod dot;
+pub mod gen;
+pub mod meg;
+pub mod reach;
+pub mod topo;
+
+pub use dag::{Dag, NodeId};
+pub use meg::{minimum_equivalent_graph, minimum_equivalent_graph_with};
+pub use reach::Reachability;
+pub use topo::{topo_order, topo_positions};

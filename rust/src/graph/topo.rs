@@ -1,0 +1,130 @@
+//! Topological ordering (Kahn's algorithm) with deterministic tie-breaking.
+//!
+//! Determinism matters twice: the AoT pre-run submits tasks in this order, so
+//! the recorded task schedule must be reproducible; and the paper's replay
+//! correctness argument relies on same-stream tasks being submitted in a
+//! topological order (stream FIFO then guarantees intra-stream dependencies).
+
+use super::dag::{Dag, NodeId};
+
+/// Kahn topological sort. Ties are broken by smallest node id, making the
+/// order a deterministic function of the graph. Returns `Err(node)` with a
+/// node on a cycle if the graph is cyclic.
+pub fn topo_order<N>(g: &Dag<N>) -> Result<Vec<NodeId>, NodeId> {
+    let n = g.n_nodes();
+    let mut indeg: Vec<usize> = (0..n).map(|v| g.in_degree(v)).collect();
+    // Min-heap via BinaryHeap<Reverse<..>> for deterministic smallest-id-first.
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut heap: BinaryHeap<Reverse<NodeId>> =
+        (0..n).filter(|&v| indeg[v] == 0).map(Reverse).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(Reverse(v)) = heap.pop() {
+        order.push(v);
+        for &w in g.successors(v) {
+            indeg[w] -= 1;
+            if indeg[w] == 0 {
+                heap.push(Reverse(w));
+            }
+        }
+    }
+    if order.len() == n {
+        Ok(order)
+    } else {
+        // Some node still has positive in-degree: it is on or behind a cycle.
+        Err((0..n).find(|&v| indeg[v] > 0).expect("cycle implies leftover node"))
+    }
+}
+
+/// Position of each node in the topological order (inverse permutation).
+pub fn topo_positions<N>(g: &Dag<N>) -> Result<Vec<usize>, NodeId> {
+    let order = topo_order(g)?;
+    let mut pos = vec![0usize; g.n_nodes()];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v] = i;
+    }
+    Ok(pos)
+}
+
+/// Longest path lengths (in edges) from any source, per node. Used for
+/// layered layout and as a quick lower bound on the critical path.
+pub fn depths<N>(g: &Dag<N>) -> Vec<usize> {
+    let order = topo_order(g).expect("depths requires acyclic graph");
+    let mut depth = vec![0usize; g.n_nodes()];
+    for &v in &order {
+        for &w in g.successors(v) {
+            depth[w] = depth[w].max(depth[v] + 1);
+        }
+    }
+    depth
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_edges() {
+        let mut g: Dag<()> = Dag::new();
+        for _ in 0..5 {
+            g.add_node(());
+        }
+        g.add_edge(3, 1);
+        g.add_edge(1, 4);
+        g.add_edge(0, 2);
+        let order = topo_order(&g).unwrap();
+        let pos = |v| order.iter().position(|&x| x == v).unwrap();
+        assert!(pos(3) < pos(1));
+        assert!(pos(1) < pos(4));
+        assert!(pos(0) < pos(2));
+    }
+
+    #[test]
+    fn deterministic_smallest_first() {
+        let mut g: Dag<()> = Dag::new();
+        for _ in 0..4 {
+            g.add_node(());
+        }
+        // no edges: order must be by id
+        assert_eq!(topo_order(&g).unwrap(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn cycle_reported() {
+        let mut g: Dag<()> = Dag::new();
+        let a = g.add_node(());
+        let b = g.add_node(());
+        let c = g.add_node(());
+        g.add_edge(a, b);
+        g.add_edge(b, c);
+        g.add_edge(c, a);
+        assert!(topo_order(&g).is_err());
+    }
+
+    #[test]
+    fn positions_are_inverse() {
+        let mut g: Dag<()> = Dag::new();
+        for _ in 0..6 {
+            g.add_node(());
+        }
+        g.add_edge(5, 0);
+        g.add_edge(0, 3);
+        let order = topo_order(&g).unwrap();
+        let pos = topo_positions(&g).unwrap();
+        for (i, &v) in order.iter().enumerate() {
+            assert_eq!(pos[v], i);
+        }
+    }
+
+    #[test]
+    fn depths_of_chain() {
+        let mut g: Dag<()> = Dag::new();
+        for _ in 0..4 {
+            g.add_node(());
+        }
+        g.add_edge(0, 1);
+        g.add_edge(1, 2);
+        g.add_edge(2, 3);
+        assert_eq!(depths(&g), vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,36 @@
+//! # Nimble — reproduction of *Nimble: Lightweight and Parallel GPU Task
+//! Scheduling for Deep Learning* (Kwon, Yu, Jeong, Chun — NeurIPS 2020)
+//!
+//! A three-layer Rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — the paper's system: the stream-assignment
+//!   algorithm (Algorithm 1: MEG → bipartite maximum matching → chain
+//!   partition), the graph rewriter, the ahead-of-time (AoT) task scheduler
+//!   with pre-run interception and memory reservation, the multi-stream
+//!   replay engine, a discrete-event virtual-GPU simulator with framework
+//!   baseline profiles, an operator-graph model zoo covering every network
+//!   in the paper's evaluation, and a batched serving front-end.
+//! * **L2 (python/compile/model.py)** — JAX computation graphs (built-time
+//!   only), lowered per-operator to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (MXU-tiled matmul,
+//!   im2col conv, fused epilogues) checked against pure-jnp oracles.
+//!
+//! Python never runs on the request path: the `runtime` module loads the AOT
+//! artifacts through the PJRT C API (`xla` crate) and the replay engine
+//! submits pre-scheduled tasks directly.
+
+pub mod aot;
+pub mod baselines;
+pub mod coordinator;
+pub mod figures;
+pub mod serving;
+pub mod training;
+pub mod engine;
+pub mod runtime;
+pub mod graph;
+pub mod matching;
+pub mod models;
+pub mod ops;
+pub mod sim;
+pub mod stream;
+pub mod util;

@@ -1,0 +1,231 @@
+//! `nimble` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   figures [all|fig2a|fig2b|fig2c|fig7|table1|fig8|fig9|fig10]
+//!                         regenerate the paper's tables/figures (VGPU)
+//!   models                list the model zoo (ops, MACs, Deg., streams)
+//!   assign <model>        run Algorithm 1 on a model and report the plan
+//!   sim <model> <system>  one simulated inference run in detail
+//!   infer [--batch N] [--iters K] [--mode replay|eager]
+//!                         run MiniInception on the real XLA path
+//!   serve [--requests N] [--rate RPS] [--mode replay|eager]
+//!                         batched serving demo over the real XLA path
+//!   train [--steps N]     run the AOT train-step artifact, logging loss
+
+use anyhow::{bail, Context, Result};
+use nimble::baselines::Baseline;
+use nimble::coordinator::{EngineConfig, ExecMode, NimbleEngine};
+use nimble::matching::MatchingAlgo;
+use nimble::models;
+use nimble::ops::op::total_macs;
+use nimble::serving::{NimbleServer, ServerConfig};
+use nimble::sim::GpuSpec;
+use nimble::stream::{assign_streams, logical_concurrency_degree, plan_syncs};
+use nimble::util::stats::{fmt_secs, Summary};
+use nimble::util::table::Table;
+use nimble::util::Pcg32;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("figures") => cmd_figures(args.get(1).map(String::as_str).unwrap_or("all")),
+        Some("models") => cmd_models(),
+        Some("assign") => {
+            cmd_assign(args.get(1).map(String::as_str).context("usage: nimble assign <model>")?)
+        }
+        Some("sim") => cmd_sim(
+            args.get(1).map(String::as_str).context("usage: nimble sim <model> <system>")?,
+            args.get(2).map(String::as_str).unwrap_or("Nimble"),
+        ),
+        Some("infer") => cmd_infer(args),
+        Some("serve") => cmd_serve(args),
+        Some("train") => cmd_train(args),
+        Some(other) => bail!("unknown subcommand `{other}` — run without args for usage"),
+        None => {
+            println!(
+                "nimble — reproduction of Nimble (NeurIPS 2020)\n\n\
+                 usage: nimble <figures|models|assign|sim|infer|serve|train> [args]\n\
+                 see rust/src/main.rs docs for details"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_figures(which: &str) -> Result<()> {
+    let dir = std::path::PathBuf::from("results");
+    let figs = nimble::figures::run(which, &dir)?;
+    for (name, table) in figs {
+        println!("== {name} ==\n{}", table.render());
+    }
+    println!("(TSV written to results/)");
+    Ok(())
+}
+
+fn cmd_models() -> Result<()> {
+    let mut t = Table::new(vec!["model", "ops", "edges", "GMACs", "Deg.", "streams", "syncs"]);
+    for spec in models::MODELS {
+        let g = models::build(spec.name, 1);
+        let a = assign_streams(&g, MatchingAlgo::HopcroftKarp);
+        t.row(vec![
+            spec.name.to_string(),
+            g.n_nodes().to_string(),
+            g.n_edges().to_string(),
+            format!("{:.2}", total_macs(&g) as f64 / 1e9),
+            logical_concurrency_degree(&g).to_string(),
+            a.n_streams.to_string(),
+            a.min_syncs().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_assign(model: &str) -> Result<()> {
+    let g = models::build(model, 1);
+    let start = Instant::now();
+    let a = assign_streams(&g, MatchingAlgo::HopcroftKarp);
+    let plan = plan_syncs(&a);
+    let took = start.elapsed();
+    println!(
+        "model {model}: |V|={} |E|={} |E'|={} |M|={}\n\
+         streams={} syncs={} (theorem 3: |E'|-|M|={})\n\
+         degree of logical concurrency: {}\n\
+         assignment time: {}",
+        g.n_nodes(),
+        g.n_edges(),
+        a.meg.n_edges(),
+        a.matching_size,
+        a.n_streams,
+        plan.n_syncs(),
+        a.meg.n_edges() - a.matching_size,
+        logical_concurrency_degree(&g),
+        fmt_secs(took.as_secs_f64()),
+    );
+    Ok(())
+}
+
+fn cmd_sim(model: &str, system: &str) -> Result<()> {
+    let b = match system.to_lowercase().as_str() {
+        "pytorch" => Baseline::PyTorch,
+        "torchscript" => Baseline::TorchScript,
+        "caffe2" => Baseline::Caffe2,
+        "tensorflow" => Baseline::TensorFlow,
+        "tensorrt" => Baseline::TensorRT,
+        "tvm" => Baseline::Tvm,
+        "nimble" => Baseline::Nimble,
+        "nimble1" | "nimble-single" => Baseline::NimbleSingleStream,
+        "schedmin" => Baseline::SchedMinimized,
+        other => bail!("unknown system `{other}`"),
+    };
+    let g = models::build(model, 1);
+    let prepared = nimble::baselines::prepare(&g, b, &GpuSpec::v100(), true);
+    let r = nimble::baselines::run_prepared(&prepared, &GpuSpec::v100());
+    println!(
+        "{model} under {}: latency={} host={} gpu_active={} ({:.0}% active)",
+        b.name(),
+        fmt_secs(r.total_s),
+        fmt_secs(r.host_s),
+        fmt_secs(r.gpu_active_s),
+        r.active_ratio() * 100.0
+    );
+    // optional Chrome-trace dump: nimble sim <model> <system> --trace out.json
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(path) = flag(&args, "--trace") {
+        let trace = nimble::sim::trace::to_chrome_trace(&r, |n| {
+            prepared.graph.node(n).name.clone()
+        });
+        std::fs::write(&path, trace)?;
+        println!("chrome trace written to {path} (open in chrome://tracing)");
+    }
+    Ok(())
+}
+
+fn cmd_infer(args: &[String]) -> Result<()> {
+    let batch: usize = flag(args, "--batch").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let iters: usize = flag(args, "--iters").map(|s| s.parse()).transpose()?.unwrap_or(50);
+    let mode = match flag(args, "--mode").as_deref() {
+        Some("eager") => ExecMode::Eager,
+        _ => ExecMode::Replay,
+    };
+    nimble::runtime::require_artifacts()?;
+    let engine = NimbleEngine::build(EngineConfig { mode, ..Default::default() })?;
+    let sched = engine.schedule(batch)?;
+    println!(
+        "engine built: {} tasks, {} streams, {} syncs, arena {} KiB (unshared {} KiB)",
+        sched.n_tasks(),
+        sched.n_streams,
+        sched.n_events,
+        sched.arena.arena_bytes / 1024,
+        sched.arena.unshared_bytes() / 1024
+    );
+    let mut rng = Pcg32::new(7);
+    let len: usize = sched.input_dims.iter().product();
+    let input: Vec<f32> = (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+    let mut samples = Vec::with_capacity(iters);
+    let mut out = Vec::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        out = engine.infer(batch, &input)?;
+        samples.push(t0.elapsed());
+    }
+    let s = Summary::from_durations(&samples);
+    println!(
+        "{:?} batch={batch} iters={iters}: p50={} p99={} mean={}",
+        mode,
+        fmt_secs(s.median()),
+        fmt_secs(s.percentile(99.0)),
+        fmt_secs(s.mean())
+    );
+    println!("logits[0][..4] = {:?}", &out[..4.min(out.len())]);
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let n: usize = flag(args, "--requests").map(|s| s.parse()).transpose()?.unwrap_or(200);
+    let rate: f64 = flag(args, "--rate").map(|s| s.parse()).transpose()?.unwrap_or(200.0);
+    let mode = match flag(args, "--mode").as_deref() {
+        Some("eager") => ExecMode::Eager,
+        _ => ExecMode::Replay,
+    };
+    nimble::runtime::require_artifacts()?;
+    println!("starting server (mode {mode:?}, {n} requests @ {rate} rps)...");
+    let server = NimbleServer::start(ServerConfig {
+        engine: EngineConfig { mode, ..Default::default() },
+        max_wait: Duration::from_millis(2),
+    })?;
+    let len = server.example_len();
+    let mut rng = Pcg32::new(1);
+    let mut pending = Vec::with_capacity(n);
+    for _ in 0..n {
+        let input: Vec<f32> = (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+        pending.push(server.infer_async(input)?);
+        std::thread::sleep(Duration::from_secs_f64(rng.gen_exp(rate)));
+    }
+    for rx in pending {
+        rx.recv().context("response lost")?.map_err(anyhow::Error::msg)?;
+    }
+    let report = server.shutdown()?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let steps: usize = flag(args, "--steps").map(|s| s.parse()).transpose()?.unwrap_or(300);
+    nimble::runtime::require_artifacts()?;
+    let report = nimble::training::run_training(steps, 20)?;
+    println!("{}", report.render());
+    Ok(())
+}

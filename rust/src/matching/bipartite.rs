@@ -1,0 +1,141 @@
+//! Bipartite graph and matching representations.
+
+/// A bipartite graph with `n_left` left vertices and `n_right` right
+/// vertices; adjacency stored left-to-right.
+#[derive(Debug, Clone)]
+pub struct BipartiteGraph {
+    n_left: usize,
+    n_right: usize,
+    adj: Vec<Vec<usize>>, // adj[l] = right neighbours of left vertex l
+    n_edges: usize,
+}
+
+impl BipartiteGraph {
+    pub fn new(n_left: usize, n_right: usize) -> Self {
+        BipartiteGraph { n_left, n_right, adj: vec![Vec::new(); n_left], n_edges: 0 }
+    }
+
+    /// Build the Step-2 bipartite graph from a directed edge list over `n`
+    /// nodes: edge (vᵢ, vⱼ) ∈ E' becomes (xᵢ, yⱼ) ∈ E_B.
+    pub fn from_dag_edges(n: usize, edges: &[(usize, usize)]) -> Self {
+        let mut b = BipartiteGraph::new(n, n);
+        for &(u, v) in edges {
+            b.add_edge(u, v);
+        }
+        b
+    }
+
+    pub fn add_edge(&mut self, l: usize, r: usize) {
+        assert!(l < self.n_left && r < self.n_right, "edge out of range");
+        if !self.adj[l].contains(&r) {
+            self.adj[l].push(r);
+            self.n_edges += 1;
+        }
+    }
+
+    pub fn n_left(&self) -> usize {
+        self.n_left
+    }
+
+    pub fn n_right(&self) -> usize {
+        self.n_right
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.n_edges
+    }
+
+    pub fn neighbours(&self, l: usize) -> &[usize] {
+        &self.adj[l]
+    }
+}
+
+/// A matching: `left_to_right[l] = Some(r)` iff edge (l, r) is matched.
+/// Maintained together with the inverse map.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Matching {
+    pub left_to_right: Vec<Option<usize>>,
+    pub right_to_left: Vec<Option<usize>>,
+}
+
+impl Matching {
+    pub fn empty(n_left: usize, n_right: usize) -> Self {
+        Matching { left_to_right: vec![None; n_left], right_to_left: vec![None; n_right] }
+    }
+
+    /// Number of matched edges.
+    pub fn cardinality(&self) -> usize {
+        self.left_to_right.iter().filter(|m| m.is_some()).count()
+    }
+
+    /// Matched edges as (left, right) pairs.
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        self.left_to_right
+            .iter()
+            .enumerate()
+            .filter_map(|(l, r)| r.map(|r| (l, r)))
+            .collect()
+    }
+
+    /// Validate matching invariants against a graph: every matched edge
+    /// exists, and no vertex is matched twice (checked structurally).
+    pub fn validate(&self, g: &BipartiteGraph) -> Result<(), String> {
+        if self.left_to_right.len() != g.n_left() || self.right_to_left.len() != g.n_right() {
+            return Err("matching size mismatch".into());
+        }
+        for (l, r) in self.edges() {
+            if !g.neighbours(l).contains(&r) {
+                return Err(format!("matched edge ({l},{r}) not in graph"));
+            }
+            if self.right_to_left[r] != Some(l) {
+                return Err(format!("inverse map inconsistent at ({l},{r})"));
+            }
+        }
+        let matched_rights: usize = self.right_to_left.iter().filter(|m| m.is_some()).count();
+        if matched_rights != self.cardinality() {
+            return Err("left/right matched counts differ".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_query() {
+        let mut b = BipartiteGraph::new(3, 2);
+        b.add_edge(0, 1);
+        b.add_edge(2, 0);
+        b.add_edge(2, 0); // duplicate ignored
+        assert_eq!(b.n_edges(), 2);
+        assert_eq!(b.neighbours(2), &[0]);
+    }
+
+    #[test]
+    fn from_dag_edges_shape() {
+        let b = BipartiteGraph::from_dag_edges(4, &[(0, 1), (1, 3)]);
+        assert_eq!(b.n_left(), 4);
+        assert_eq!(b.n_right(), 4);
+        assert_eq!(b.neighbours(1), &[3]);
+    }
+
+    #[test]
+    fn matching_validate_catches_phantom_edge() {
+        let b = BipartiteGraph::from_dag_edges(2, &[(0, 1)]);
+        let mut m = Matching::empty(2, 2);
+        m.left_to_right[1] = Some(0);
+        m.right_to_left[0] = Some(1);
+        assert!(m.validate(&b).is_err());
+    }
+
+    #[test]
+    fn matching_cardinality_and_edges() {
+        let mut m = Matching::empty(3, 3);
+        m.left_to_right[0] = Some(2);
+        m.right_to_left[2] = Some(0);
+        assert_eq!(m.cardinality(), 1);
+        assert_eq!(m.edges(), vec![(0, 2)]);
+    }
+}

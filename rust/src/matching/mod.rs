@@ -1,0 +1,33 @@
+//! Maximum bipartite matching (Steps 2–3 of Algorithm 1).
+//!
+//! The paper computes a maximum matching of the bipartite graph
+//! `B = (V₁, V₂, E_B)` derived from the MEG with Ford–Fulkerson. We provide
+//! Ford–Fulkerson (the paper's choice, simple and O(V·E)) and Hopcroft–Karp
+//! (O(E·√V), the production default) and cross-check them in tests — both
+//! return matchings of identical (maximum) cardinality.
+
+pub mod bipartite;
+pub mod ford_fulkerson;
+pub mod hopcroft_karp;
+
+pub use bipartite::{BipartiteGraph, Matching};
+pub use ford_fulkerson::ford_fulkerson;
+pub use hopcroft_karp::hopcroft_karp;
+
+/// The algorithm used to compute a maximum matching.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MatchingAlgo {
+    /// Hopcroft–Karp, O(E·√V). Default.
+    #[default]
+    HopcroftKarp,
+    /// Ford–Fulkerson via repeated augmenting DFS, O(V·E). The paper's choice.
+    FordFulkerson,
+}
+
+/// Compute a maximum matching with the selected algorithm.
+pub fn maximum_matching(b: &BipartiteGraph, algo: MatchingAlgo) -> Matching {
+    match algo {
+        MatchingAlgo::HopcroftKarp => hopcroft_karp(b),
+        MatchingAlgo::FordFulkerson => ford_fulkerson(b),
+    }
+}

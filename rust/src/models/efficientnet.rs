@@ -1,0 +1,157 @@
+//! EfficientNet-B0/B5 (Tan & Le 2019): MBConv blocks with squeeze-and-
+//! excitation. SE branches give the mild inter-operator parallelism that
+//! makes EfficientNets profit from Nimble's multi-stream execution, and the
+//! many tiny kernels make them the most scheduling-bound nets in Fig. 2a.
+
+use crate::graph::NodeId;
+use crate::ops::{GraphBuilder, OpGraph, OpKind};
+
+/// Width rounding (the reference implementation's `round_filters`).
+fn round_filters(c: usize, width_mult: f64) -> usize {
+    let divisor = 8.0;
+    let c = c as f64 * width_mult;
+    let mut new_c = ((c + divisor / 2.0) / divisor).floor() * divisor;
+    if new_c < 0.9 * c {
+        new_c += divisor;
+    }
+    new_c as usize
+}
+
+fn round_repeats(r: usize, depth_mult: f64) -> usize {
+    (r as f64 * depth_mult).ceil() as usize
+}
+
+/// Squeeze-and-excitation: GAP → 1×1 reduce → swish → 1×1 expand → sigmoid
+/// → channel-scale. The GAP...sigmoid chain runs concurrently with nothing
+/// (it gates the main path), but *across blocks* it creates short
+/// independent chains.
+fn squeeze_excite(b: &mut GraphBuilder, x: NodeId, c: usize, se_c: usize) -> NodeId {
+    let s = b.gap(x);
+    let s = b.conv(s, se_c, 1, 1);
+    let s = b.act(s, OpKind::Swish);
+    let s = b.conv(s, c, 1, 1);
+    let s = b.act(s, OpKind::Sigmoid);
+    b.mul(x, s)
+}
+
+/// MBConv block.
+#[allow(clippy::too_many_arguments)]
+fn mbconv(
+    b: &mut GraphBuilder,
+    x: NodeId,
+    in_c: usize,
+    out_c: usize,
+    k: usize,
+    stride: usize,
+    expand: usize,
+) -> NodeId {
+    let mut y = x;
+    let mid_c = in_c * expand;
+    if expand != 1 {
+        y = b.conv(y, mid_c, 1, 1);
+        y = b.bn(y);
+        y = b.act(y, OpKind::Swish);
+    }
+    y = b.dwconv(y, k, stride);
+    y = b.bn(y);
+    y = b.act(y, OpKind::Swish);
+    // SE with ratio 0.25 of the *input* channels.
+    let se_c = (in_c / 4).max(1);
+    y = squeeze_excite(b, y, mid_c, se_c);
+    y = b.conv_bn(y, out_c, 1, 1);
+    if stride == 1 && in_c == out_c {
+        y = b.add(y, x);
+    }
+    y
+}
+
+/// Generic EfficientNet. `hw ≤ 64` only narrows the head to 10 classes
+/// (CIFAR-10 training feeds 32×32 through the unmodified architecture).
+pub fn efficientnet(batch: usize, hw: usize, width_mult: f64, depth_mult: f64) -> OpGraph {
+    let cifar = hw <= 64;
+    let mut b = GraphBuilder::new();
+    let input = b.input(&[batch, 3, hw, hw]);
+    let stem_c = round_filters(32, width_mult);
+    let mut x = b.conv(input, stem_c, 3, 2);
+    x = b.bn(x);
+    x = b.act(x, OpKind::Swish);
+    // (expand, channels, repeats, stride, kernel)
+    let cfg: [(usize, usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1, 3),
+        (6, 24, 2, 2, 3),
+        (6, 40, 2, 2, 5),
+        (6, 80, 3, 2, 3),
+        (6, 112, 3, 1, 5),
+        (6, 192, 4, 2, 5),
+        (6, 320, 1, 1, 3),
+    ];
+    let mut in_c = stem_c;
+    for (t, c, n, s, k) in cfg {
+        let c = round_filters(c, width_mult);
+        let n = round_repeats(n, depth_mult);
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            x = mbconv(&mut b, x, in_c, c, k, stride, t);
+            in_c = c;
+        }
+    }
+    let head_c = round_filters(1280, width_mult);
+    x = b.conv(x, head_c, 1, 1);
+    x = b.bn(x);
+    x = b.act(x, OpKind::Swish);
+    let g = b.gap(x);
+    let _ = b.linear(g, if cifar { 10 } else { 1000 });
+    b.finish()
+}
+
+pub fn efficientnet_b0(batch: usize, hw: usize) -> OpGraph {
+    efficientnet(batch, hw, 1.0, 1.0)
+}
+
+pub fn efficientnet_b5(batch: usize, hw: usize) -> OpGraph {
+    efficientnet(batch, hw, 1.6, 2.2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::op::total_macs;
+
+    #[test]
+    fn b0_macs_near_reference() {
+        // reference: ~0.39 GMACs @224
+        let g = efficientnet_b0(1, 224);
+        let gmacs = total_macs(&g) as f64 / 1e9;
+        assert!((0.3..0.6).contains(&gmacs), "b0 gmacs={gmacs}");
+    }
+
+    #[test]
+    fn b5_much_heavier() {
+        // reference: 9.9 GMACs @456 (the EfficientNet paper's "FLOPS"
+        // column counts multiply-adds)
+        let g = efficientnet_b5(1, 456);
+        let gmacs = total_macs(&g) as f64 / 1e9;
+        assert!((8.0..13.0).contains(&gmacs), "b5 gmacs={gmacs}");
+    }
+
+    #[test]
+    fn round_filters_matches_reference_points() {
+        assert_eq!(round_filters(32, 1.0), 32);
+        assert_eq!(round_filters(32, 1.6), 48); // B5 stem
+        assert_eq!(round_filters(1280, 1.6), 2048);
+    }
+
+    #[test]
+    fn b5_deeper_than_b0() {
+        let b0 = efficientnet_b0(1, 224);
+        let b5 = efficientnet_b5(1, 456);
+        assert!(b5.n_nodes() as f64 > 1.7 * b0.n_nodes() as f64);
+    }
+
+    #[test]
+    fn se_gives_mild_concurrency() {
+        let g = efficientnet_b0(1, 224);
+        let deg = crate::stream::logical_concurrency_degree(&g);
+        assert!((1..=4).contains(&deg), "b0 deg={deg}");
+    }
+}

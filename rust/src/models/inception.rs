@@ -1,0 +1,156 @@
+//! Inception-v3 (Szegedy et al. 2016), torchvision channel configuration,
+//! 299×299 input — the paper's Table 1 entry with Deg. 6 and 5.7 GMACs.
+
+use crate::graph::NodeId;
+use crate::ops::{GraphBuilder, OpGraph};
+
+/// Branch helper: conv + bn + relu (torchvision `BasicConv2d`).
+fn basic(b: &mut GraphBuilder, x: NodeId, c: usize, k: usize, s: usize) -> NodeId {
+    b.conv_bn_relu(x, c, k, s)
+}
+
+fn basic_valid(b: &mut GraphBuilder, x: NodeId, c: usize, k: usize, s: usize) -> NodeId {
+    let v = b.conv_valid(x, c, k, s);
+    let v = b.bn(v);
+    b.relu(v)
+}
+
+fn basic_rect(b: &mut GraphBuilder, x: NodeId, c: usize, kh: usize, kw: usize) -> NodeId {
+    let v = b.conv_rect(x, c, kh, kw);
+    let v = b.bn(v);
+    b.relu(v)
+}
+
+/// InceptionA: 4 parallel branches at 35×35.
+fn inception_a(b: &mut GraphBuilder, x: NodeId, pool_c: usize) -> NodeId {
+    let b1 = basic(b, x, 64, 1, 1);
+    let b5 = basic(b, x, 48, 1, 1);
+    let b5 = basic(b, b5, 64, 5, 1);
+    let b3 = basic(b, x, 64, 1, 1);
+    let b3 = basic(b, b3, 96, 3, 1);
+    let b3 = basic(b, b3, 96, 3, 1);
+    let p = b.avgpool(x, 3, 1);
+    let p = basic(b, p, pool_c, 1, 1);
+    b.concat(&[b1, b5, b3, p])
+}
+
+/// InceptionB: grid reduction 35 → 17.
+fn inception_b(b: &mut GraphBuilder, x: NodeId) -> NodeId {
+    let b3 = basic_valid(b, x, 384, 3, 2);
+    let d = basic(b, x, 64, 1, 1);
+    let d = basic(b, d, 96, 3, 1);
+    let d = basic_valid(b, d, 96, 3, 2);
+    let p = b.maxpool_valid(x, 3, 2);
+    b.concat(&[b3, d, p])
+}
+
+/// InceptionC: 7×1/1×7 factorized branches at 17×17.
+fn inception_c(b: &mut GraphBuilder, x: NodeId, c7: usize) -> NodeId {
+    let b1 = basic(b, x, 192, 1, 1);
+    let mut b7 = basic(b, x, c7, 1, 1);
+    b7 = basic_rect(b, b7, c7, 1, 7);
+    b7 = basic_rect(b, b7, 192, 7, 1);
+    let mut d = basic(b, x, c7, 1, 1);
+    d = basic_rect(b, d, c7, 7, 1);
+    d = basic_rect(b, d, c7, 1, 7);
+    d = basic_rect(b, d, c7, 7, 1);
+    d = basic_rect(b, d, 192, 1, 7);
+    let p = b.avgpool(x, 3, 1);
+    let p = basic(b, p, 192, 1, 1);
+    b.concat(&[b1, b7, d, p])
+}
+
+/// InceptionD: grid reduction 17 → 8.
+fn inception_d(b: &mut GraphBuilder, x: NodeId) -> NodeId {
+    let mut b3 = basic(b, x, 192, 1, 1);
+    b3 = basic_valid(b, b3, 320, 3, 2);
+    let mut b7 = basic(b, x, 192, 1, 1);
+    b7 = basic_rect(b, b7, 192, 1, 7);
+    b7 = basic_rect(b, b7, 192, 7, 1);
+    b7 = basic_valid(b, b7, 192, 3, 2);
+    let p = b.maxpool_valid(x, 3, 2);
+    b.concat(&[b3, b7, p])
+}
+
+/// InceptionE: widest block (6 parallel conv chains) at 8×8 — the source of
+/// Inception-v3's Deg. 6 in Table 1.
+fn inception_e(b: &mut GraphBuilder, x: NodeId) -> NodeId {
+    let b1 = basic(b, x, 320, 1, 1);
+    let b3 = basic(b, x, 384, 1, 1);
+    let b3a = basic_rect(b, b3, 384, 1, 3);
+    let b3b = basic_rect(b, b3, 384, 3, 1);
+    let b3 = b.concat(&[b3a, b3b]);
+    let mut d = basic(b, x, 448, 1, 1);
+    d = basic(b, d, 384, 3, 1);
+    let da = basic_rect(b, d, 384, 1, 3);
+    let db = basic_rect(b, d, 384, 3, 1);
+    let d = b.concat(&[da, db]);
+    let p = b.avgpool(x, 3, 1);
+    let p = basic(b, p, 192, 1, 1);
+    b.concat(&[b1, b3, d, p])
+}
+
+/// Full Inception-v3 inference graph.
+pub fn inception_v3(batch: usize) -> OpGraph {
+    let mut b = GraphBuilder::new();
+    let input = b.input(&[batch, 3, 299, 299]);
+    // Stem (valid convs, matching torchvision's 299→35 reduction).
+    let mut x = basic_valid(&mut b, input, 32, 3, 2); // 149
+    x = basic_valid(&mut b, x, 32, 3, 1); // 147
+    x = basic(&mut b, x, 64, 3, 1); // 147 (same pad)
+    x = b.maxpool_valid(x, 3, 2); // 73
+    x = basic(&mut b, x, 80, 1, 1);
+    x = basic_valid(&mut b, x, 192, 3, 1); // 71
+    x = b.maxpool_valid(x, 3, 2); // 35
+    // Inception stacks.
+    x = inception_a(&mut b, x, 32);
+    x = inception_a(&mut b, x, 64);
+    x = inception_a(&mut b, x, 64);
+    x = inception_b(&mut b, x); // 17
+    x = inception_c(&mut b, x, 128);
+    x = inception_c(&mut b, x, 160);
+    x = inception_c(&mut b, x, 160);
+    x = inception_c(&mut b, x, 192);
+    x = inception_d(&mut b, x); // 8
+    x = inception_e(&mut b, x);
+    x = inception_e(&mut b, x);
+    let g = b.gap(x);
+    let _ = b.linear(g, 1000);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::op::total_macs;
+    use crate::stream::logical_concurrency_degree;
+
+    #[test]
+    fn macs_match_paper_table1() {
+        // Paper Table 1: 5.7 GMACs.
+        let g = inception_v3(1);
+        let gmacs = total_macs(&g) as f64 / 1e9;
+        assert!((4.8..6.8).contains(&gmacs), "inception_v3 gmacs={gmacs}");
+    }
+
+    #[test]
+    fn logical_concurrency_degree_matches_paper() {
+        // Paper Table 1: Deg. 6 (InceptionE's parallel conv chains).
+        let g = inception_v3(1);
+        let deg = logical_concurrency_degree(&g);
+        assert!((5..=8).contains(&deg), "inception deg={deg}");
+    }
+
+    #[test]
+    fn op_count_plausible() {
+        // 94 convs ×3 (conv+bn+relu) + pools/concats ≈ 300–360 ops
+        let g = inception_v3(1);
+        assert!((250..420).contains(&g.n_nodes()), "n={}", g.n_nodes());
+    }
+
+    #[test]
+    fn single_output() {
+        let g = inception_v3(1);
+        assert_eq!(g.sinks().len(), 1);
+    }
+}

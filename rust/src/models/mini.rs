@@ -1,0 +1,95 @@
+//! MiniInception — the small branchy CNN whose per-operator XLA artifacts
+//! drive the *real* execution path (runtime + AoT replay engine).
+//!
+//! The Rust graph here and the JAX model in `python/compile/model.py` are
+//! the same architecture op-for-op; `runtime::manifest` maps each operator
+//! node to its compiled HLO artifact by name. Keep the two in sync — the
+//! integration test `integration_runtime.rs` cross-checks shapes.
+//!
+//! Architecture (CIFAR-scale, 3×32×32 inputs):
+//!   stem:   conv3×3(16) + relu
+//!   block1: [1×1(16) | 3×3(16) | 5×5(8) | maxpool3+1×1(8)] → concat (48)
+//!   block2: [1×1(24) | 3×3(24) | 5×5(12) | maxpool3+1×1(12)] → concat (72)
+//!   head:   GAP → linear(10)
+
+use crate::graph::NodeId;
+use crate::ops::{GraphBuilder, OpGraph};
+
+/// Channel plan for one inception block.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockPlan {
+    pub b1x1: usize,
+    pub b3x3: usize,
+    pub b5x5: usize,
+    pub bpool: usize,
+}
+
+pub const BLOCK1: BlockPlan = BlockPlan { b1x1: 16, b3x3: 16, b5x5: 8, bpool: 8 };
+pub const BLOCK2: BlockPlan = BlockPlan { b1x1: 24, b3x3: 24, b5x5: 12, bpool: 12 };
+
+fn block(b: &mut GraphBuilder, x: NodeId, plan: BlockPlan) -> NodeId {
+    let c1 = b.conv(x, plan.b1x1, 1, 1);
+    let r1 = b.relu(c1);
+    let c3 = b.conv(x, plan.b3x3, 3, 1);
+    let r3 = b.relu(c3);
+    let c5 = b.conv(x, plan.b5x5, 5, 1);
+    let r5 = b.relu(c5);
+    let p = b.maxpool(x, 3, 1);
+    let cp = b.conv(p, plan.bpool, 1, 1);
+    let rp = b.relu(cp);
+    b.concat(&[r1, r3, r5, rp])
+}
+
+/// Build the MiniInception operator graph.
+pub fn mini_inception(batch: usize) -> OpGraph {
+    let mut b = GraphBuilder::new();
+    let input = b.input(&[batch, 3, 32, 32]);
+    let stem = b.conv(input, 16, 3, 1);
+    let stem = b.relu(stem);
+    let b1 = block(&mut b, stem, BLOCK1);
+    let b2 = block(&mut b, b1, BLOCK2);
+    let g = b.gap(b2);
+    let _ = b.linear(g, 10);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::logical_concurrency_degree;
+
+    #[test]
+    fn structure() {
+        let g = mini_inception(8);
+        assert!(g.validate().is_ok());
+        // input + stem(2) + 2 blocks (9 each + concat counted) + gap + fc
+        assert_eq!(g.n_nodes(), 25);
+        assert_eq!(g.sinks().len(), 1);
+    }
+
+    #[test]
+    fn four_way_parallel_blocks() {
+        let g = mini_inception(1);
+        let deg = logical_concurrency_degree(&g);
+        assert_eq!(deg, 4, "each block has 4 independent branches");
+    }
+
+    #[test]
+    fn output_is_ten_classes() {
+        let g = mini_inception(8);
+        let sink = g.sinks()[0];
+        assert_eq!(g.node(sink).out_shape.0, vec![8, 10]);
+    }
+
+    #[test]
+    fn concat_channels() {
+        let g = mini_inception(1);
+        // block1 concat = 48ch, block2 concat = 72ch
+        let concats: Vec<_> = g
+            .nodes()
+            .filter(|(_, o)| matches!(o.kind, crate::ops::OpKind::Concat))
+            .map(|(_, o)| o.out_shape.dim(1))
+            .collect();
+        assert_eq!(concats, vec![48, 72]);
+    }
+}

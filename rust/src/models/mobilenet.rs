@@ -1,0 +1,105 @@
+//! MobileNetV2 (Sandler et al. 2018) — inverted residuals with linear
+//! bottlenecks. Nearly chain-shaped: the network in Figure 7 where TVM's
+//! tuned kernels beat everyone (kernel quality, not scheduling, dominates).
+
+use crate::graph::NodeId;
+use crate::ops::{GraphBuilder, OpGraph, OpKind};
+
+/// Inverted residual block: expand 1×1 → depthwise 3×3 → project 1×1.
+fn inverted_residual(
+    b: &mut GraphBuilder,
+    x: NodeId,
+    in_c: usize,
+    out_c: usize,
+    stride: usize,
+    expand: usize,
+) -> NodeId {
+    let mut y = x;
+    if expand != 1 {
+        y = b.conv(y, in_c * expand, 1, 1);
+        y = b.bn(y);
+        y = b.act(y, OpKind::ReLU6);
+    }
+    y = b.dwconv(y, 3, stride);
+    y = b.bn(y);
+    y = b.act(y, OpKind::ReLU6);
+    y = b.conv_bn(y, out_c, 1, 1); // linear bottleneck: no activation
+    if stride == 1 && in_c == out_c {
+        y = b.add(y, x);
+    }
+    y
+}
+
+/// MobileNetV2 at width 1.0. `hw = 32` is the CIFAR-10 training workload of
+/// Figure 8: the unmodified architecture on tiny inputs (only the head
+/// narrows to 10 classes) — all kernels shrink, scheduling overhead
+/// dominates.
+pub fn mobilenet_v2(batch: usize, hw: usize) -> OpGraph {
+    let cifar = hw <= 64;
+    let mut b = GraphBuilder::new();
+    let input = b.input(&[batch, 3, hw, hw]);
+    let mut x = b.conv(input, 32, 3, 2);
+    x = b.bn(x);
+    x = b.act(x, OpKind::ReLU6);
+    // (expand, out_c, repeats, first_stride)
+    let cfg: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut in_c = 32;
+    for (t, c, n, s) in cfg {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            x = inverted_residual(&mut b, x, in_c, c, stride, t);
+            in_c = c;
+        }
+    }
+    x = b.conv(x, 1280, 1, 1);
+    x = b.bn(x);
+    x = b.act(x, OpKind::ReLU6);
+    let g = b.gap(x);
+    let _ = b.linear(g, if cifar { 10 } else { 1000 });
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::op::total_macs;
+
+    #[test]
+    fn imagenet_macs_near_reference() {
+        // torchvision mobilenet_v2 @224: ~0.30 GMACs
+        let g = mobilenet_v2(1, 224);
+        let gmacs = total_macs(&g) as f64 / 1e9;
+        assert!((0.25..0.45).contains(&gmacs), "mobilenet gmacs={gmacs}");
+    }
+
+    #[test]
+    fn chain_like_topology() {
+        let g = mobilenet_v2(1, 224);
+        let deg = crate::stream::logical_concurrency_degree(&g);
+        assert!(deg <= 2, "mobilenet deg={deg}");
+    }
+
+    #[test]
+    fn cifar_variant_valid() {
+        let g = mobilenet_v2(32, 32);
+        assert!(g.validate().is_ok());
+        // final FC outputs 10 classes
+        let sink = g.sinks()[0];
+        assert_eq!(g.node(sink).out_shape.dim(1), 10);
+    }
+
+    #[test]
+    fn op_count_plausible() {
+        // 52 convs ×3 + adds ≈ 150–180
+        let g = mobilenet_v2(1, 224);
+        assert!((120..220).contains(&g.n_nodes()), "n={}", g.n_nodes());
+    }
+}

@@ -1,0 +1,119 @@
+//! Model zoo: operator-graph builders for every network in the paper's
+//! evaluation (Figures 2/7/8/9/10, Table 1), plus the CIFAR training
+//! variants and the MiniInception network whose per-operator XLA artifacts
+//! drive the real execution path.
+//!
+//! Builders reconstruct each architecture at operator granularity (conv,
+//! bn, activation, pool, add, concat as separate nodes — the granularity a
+//! PyTorch-like eager runtime schedules at). MAC counts are validated
+//! against the paper's Table 1 in `integration_models.rs`.
+
+pub mod bert;
+pub mod efficientnet;
+pub mod inception;
+pub mod mini;
+pub mod mobilenet;
+pub mod modern;
+pub mod nas_misc;
+pub mod nasnet;
+pub mod resnet;
+pub mod train;
+
+use crate::ops::OpGraph;
+
+/// A named model the harness can build.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    /// Input resolution (images) or sequence length (BERT).
+    pub resolution: usize,
+    /// Paper-reported GMACs where available (Table 1), for validation.
+    pub paper_gmacs: Option<f64>,
+}
+
+/// Every model in the zoo.
+pub const MODELS: &[ModelSpec] = &[
+    ModelSpec { name: "resnet50", resolution: 224, paper_gmacs: None },
+    ModelSpec { name: "resnet101", resolution: 224, paper_gmacs: None },
+    ModelSpec { name: "inception_v3", resolution: 299, paper_gmacs: Some(5.7) },
+    ModelSpec { name: "mobilenet_v2", resolution: 224, paper_gmacs: None },
+    ModelSpec { name: "efficientnet_b0", resolution: 224, paper_gmacs: None },
+    ModelSpec { name: "efficientnet_b5", resolution: 456, paper_gmacs: None },
+    ModelSpec { name: "nasnet_a_mobile", resolution: 224, paper_gmacs: Some(0.6) },
+    ModelSpec { name: "nasnet_a_large", resolution: 331, paper_gmacs: Some(23.9) },
+    ModelSpec { name: "darts", resolution: 224, paper_gmacs: Some(0.5) },
+    ModelSpec { name: "amoebanet", resolution: 224, paper_gmacs: Some(0.5) },
+    ModelSpec { name: "bert_base", resolution: 128, paper_gmacs: None },
+    ModelSpec { name: "resnet50_cifar", resolution: 32, paper_gmacs: None },
+    ModelSpec { name: "mobilenet_v2_cifar", resolution: 32, paper_gmacs: None },
+    ModelSpec { name: "efficientnet_b0_cifar", resolution: 32, paper_gmacs: None },
+    ModelSpec { name: "mini_inception", resolution: 32, paper_gmacs: None },
+    // §1-motivation extensions (MixConv / Split-Attention parallel layers)
+    ModelSpec { name: "mixnet_s", resolution: 224, paper_gmacs: None },
+    ModelSpec { name: "resnest50", resolution: 224, paper_gmacs: None },
+];
+
+/// Build a model's inference graph by name.
+pub fn build(name: &str, batch: usize) -> OpGraph {
+    match name {
+        "resnet50" => resnet::resnet50(batch, 224),
+        "resnet101" => resnet::resnet101(batch, 224),
+        "inception_v3" => inception::inception_v3(batch),
+        "mobilenet_v2" => mobilenet::mobilenet_v2(batch, 224),
+        "efficientnet_b0" => efficientnet::efficientnet_b0(batch, 224),
+        "efficientnet_b5" => efficientnet::efficientnet_b5(batch, 456),
+        "nasnet_a_mobile" => nasnet::nasnet_a_mobile(batch),
+        "nasnet_a_large" => nasnet::nasnet_a_large(batch),
+        "darts" => nas_misc::darts_imagenet(batch),
+        "amoebanet" => nas_misc::amoebanet_a(batch),
+        "bert_base" => bert::bert_base(batch, 128),
+        "resnet50_cifar" => resnet::resnet50_cifar(batch),
+        "mobilenet_v2_cifar" => mobilenet::mobilenet_v2(batch, 32),
+        "efficientnet_b0_cifar" => efficientnet::efficientnet_b0(batch, 32),
+        "mini_inception" => mini::mini_inception(batch),
+        "mixnet_s" => modern::mixnet_s(batch),
+        "resnest50" => modern::resnest50(batch),
+        other => panic!("unknown model `{other}`; known: {:?}", names()),
+    }
+}
+
+/// Build a model's *training-step* graph (forward + backward + optimizer).
+pub fn build_train(name: &str, batch: usize) -> OpGraph {
+    train::training_graph(&build(name, batch))
+}
+
+/// All model names.
+pub fn names() -> Vec<&'static str> {
+    MODELS.iter().map(|m| m.name).collect()
+}
+
+/// Spec lookup.
+pub fn spec(name: &str) -> Option<&'static ModelSpec> {
+    MODELS.iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_model_builds_a_valid_dag() {
+        for m in MODELS {
+            let g = build(m.name, 1);
+            assert!(g.validate().is_ok(), "{} invalid", m.name);
+            assert!(g.n_nodes() > 10, "{} suspiciously small", m.name);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown model")]
+    fn unknown_model_panics() {
+        build("not_a_model", 1);
+    }
+
+    #[test]
+    fn spec_lookup() {
+        assert!(spec("inception_v3").is_some());
+        assert!(spec("nope").is_none());
+    }
+}

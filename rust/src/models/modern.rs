@@ -1,0 +1,189 @@
+//! The paper's §1 motivation examples beyond NAS cells: layers "that
+//! consist of smaller operators arranged in parallel" — MixConv (Tan & Le
+//! 2019b) and ResNeSt's Split-Attention block (Zhang et al. 2020). Both
+//! create intra-layer operator parallelism that only a multi-stream
+//! scheduler can exploit; they extend the Fig. 7 evaluation as the
+//! "future-work" workloads the paper points at.
+
+use crate::graph::NodeId;
+use crate::ops::{GraphBuilder, OpGraph, OpKind};
+
+/// MixConv: split channels into `kernels.len()` groups, run a depthwise
+/// conv with a different kernel size on each group in parallel, concat.
+fn mixconv(b: &mut GraphBuilder, x: NodeId, kernels: &[usize], stride: usize) -> NodeId {
+    let c = b.out_shape(x).dim(1);
+    let n_groups = kernels.len();
+    let per = c / n_groups;
+    let mut outs = Vec::with_capacity(n_groups);
+    for (gi, &k) in kernels.iter().enumerate() {
+        let slice_c = if gi + 1 == n_groups { c - per * (n_groups - 1) } else { per };
+        let sl = b.slice_channels(x, slice_c);
+        let d = b.dwconv(sl, k, stride);
+        let d = b.bn(d);
+        outs.push(d);
+    }
+    b.concat(&outs)
+}
+
+/// MixNet-style inverted residual with a MixConv middle.
+fn mix_block(
+    b: &mut GraphBuilder,
+    x: NodeId,
+    in_c: usize,
+    out_c: usize,
+    kernels: &[usize],
+    stride: usize,
+    expand: usize,
+) -> NodeId {
+    let mut y = x;
+    if expand != 1 {
+        y = b.conv(y, in_c * expand, 1, 1);
+        y = b.bn(y);
+        y = b.act(y, OpKind::Swish);
+    }
+    y = mixconv(b, y, kernels, stride);
+    y = b.act(y, OpKind::Swish);
+    y = b.conv_bn(y, out_c, 1, 1);
+    if stride == 1 && in_c == out_c {
+        y = b.add(y, x);
+    }
+    y
+}
+
+/// A MixNet-S-like network (224×224). Parallel depthwise groups per block.
+pub fn mixnet_s(batch: usize) -> OpGraph {
+    let mut b = GraphBuilder::new();
+    let input = b.input(&[batch, 3, 224, 224]);
+    let mut x = b.conv_bn_relu(input, 16, 3, 2);
+    // (out_c, kernels, stride, expand) — mirrors MixNet-S's stage plan
+    let cfg: &[(usize, &[usize], usize, usize)] = &[
+        (16, &[3], 1, 1),
+        (24, &[3], 2, 6),
+        (24, &[3], 1, 3),
+        (40, &[3, 5, 7], 2, 6),
+        (40, &[3, 5], 1, 6),
+        (80, &[3, 5, 7], 2, 6),
+        (80, &[3, 5], 1, 6),
+        (120, &[3, 5, 7], 1, 6),
+        (120, &[3, 5, 7, 9], 1, 3),
+        (200, &[3, 5, 7, 9, 11], 2, 6),
+        (200, &[3, 5, 7, 9], 1, 6),
+    ];
+    let mut in_c = 16;
+    for &(out_c, kernels, stride, expand) in cfg {
+        x = mix_block(&mut b, x, in_c, out_c, kernels, stride, expand);
+        in_c = out_c;
+    }
+    x = b.conv_bn_relu(x, 1536, 1, 1);
+    let g = b.gap(x);
+    let _ = b.linear(g, 1000);
+    b.finish()
+}
+
+/// ResNeSt Split-Attention block: `radix` parallel conv branches whose
+/// outputs are fused by a learned soft attention over the splits.
+fn split_attention_block(
+    b: &mut GraphBuilder,
+    x: NodeId,
+    mid_c: usize,
+    out_c: usize,
+    stride: usize,
+    radix: usize,
+    downsample: bool,
+) -> NodeId {
+    let reduced = b.conv_bn_relu(x, mid_c, 1, 1);
+    // radix parallel 3×3 conv branches
+    let splits: Vec<NodeId> =
+        (0..radix).map(|_| b.conv_bn_relu(reduced, mid_c, 3, stride)).collect();
+    // gap over the sum → dense → per-split softmax gates → weighted sum
+    let mut sum = splits[0];
+    for &s in &splits[1..] {
+        sum = b.add(sum, s);
+    }
+    let gap = b.gap(sum);
+    let attn = b.conv(gap, (mid_c / 4).max(8), 1, 1);
+    let attn = b.relu(attn);
+    let attn = b.conv(attn, mid_c * radix, 1, 1);
+    let gates = b.softmax(attn);
+    let mut fused: Option<NodeId> = None;
+    for &s in &splits {
+        let gated = b.mul(s, gates);
+        fused = Some(match fused {
+            None => gated,
+            Some(f) => b.add(f, gated),
+        });
+    }
+    let y = b.conv_bn(fused.unwrap(), out_c, 1, 1);
+    let shortcut = if downsample { b.conv_bn(x, out_c, 1, stride) } else { x };
+    let s = b.add(y, shortcut);
+    b.relu(s)
+}
+
+/// A ResNeSt-50-like network (radix 2).
+pub fn resnest50(batch: usize) -> OpGraph {
+    let mut b = GraphBuilder::new();
+    let input = b.input(&[batch, 3, 224, 224]);
+    let s = b.conv_bn_relu(input, 64, 7, 2);
+    let mut x = b.maxpool(s, 3, 2);
+    let stages = [(64usize, 256usize, 3usize), (128, 512, 4), (256, 1024, 6), (512, 2048, 3)];
+    for (stage, &(mid, out, blocks)) in stages.iter().enumerate() {
+        for i in 0..blocks {
+            let stride = if stage > 0 && i == 0 { 2 } else { 1 };
+            x = split_attention_block(&mut b, x, mid, out, stride, 2, i == 0);
+        }
+    }
+    let g = b.gap(x);
+    let _ = b.linear(g, 1000);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::op::total_macs;
+    use crate::stream::logical_concurrency_degree;
+
+    #[test]
+    fn mixnet_builds_with_parallel_depthwise_groups() {
+        let g = mixnet_s(1);
+        assert!(g.validate().is_ok());
+        let deg = logical_concurrency_degree(&g);
+        assert!(deg >= 4, "mixconv groups should be parallel: deg={deg}");
+    }
+
+    #[test]
+    fn mixnet_macs_small() {
+        // MixNet-S reference: ~0.26 GMACs
+        let gmacs = total_macs(&mixnet_s(1)) as f64 / 1e9;
+        assert!((0.1..0.8).contains(&gmacs), "mixnet gmacs={gmacs}");
+    }
+
+    #[test]
+    fn resnest_builds_with_radix_parallelism() {
+        let g = resnest50(1);
+        assert!(g.validate().is_ok());
+        let deg = logical_concurrency_degree(&g);
+        assert!(deg >= 2, "radix-2 branches independent: deg={deg}");
+    }
+
+    #[test]
+    fn resnest_heavier_than_resnet50() {
+        // ResNeSt-50: ~5.4 GMACs (vs ResNet-50's 4.1)
+        let rs = total_macs(&resnest50(1)) as f64 / 1e9;
+        let rn = total_macs(&crate::models::resnet::resnet50(1, 224)) as f64 / 1e9;
+        assert!(rs > rn, "resnest {rs} should exceed resnet {rn}");
+        assert!(rs < 10.0);
+    }
+
+    #[test]
+    fn multi_stream_helps_both_extensions() {
+        use crate::baselines::{simulate_inference, Baseline};
+        use crate::sim::GpuSpec;
+        let dev = GpuSpec::v100();
+        for g in [mixnet_s(1), resnest50(1)] {
+            let single = simulate_inference(&g, Baseline::NimbleSingleStream, &dev).total_s;
+            let multi = simulate_inference(&g, Baseline::Nimble, &dev).total_s;
+            assert!(multi <= single, "multi {multi} vs single {single}");
+        }
+    }
+}

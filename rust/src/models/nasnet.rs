@@ -1,0 +1,158 @@
+//! NASNet-A mobile / large (Zoph et al. 2018) — the paper's headline
+//! networks: multi-branch NAS cells built from separable convolutions and
+//! pools, hundreds of tiny kernels, Deg. 12 (mobile) / 15 (large) in
+//! Table 1, and the 22.34× Nimble-vs-PyTorch inference speedup in Fig. 7.
+//!
+//! Cell wiring follows the NASNet-A genotype (Zoph et al., Fig. 4): five
+//! combine (Add) nodes per cell over {sep3×3, sep5×5, sep7×7, avg3×3,
+//! max3×3, identity} applied to the two cell inputs, outputs concatenated.
+//! Each separable conv is itself 8 operators (2 × relu/dw/pw/bn), which is
+//! exactly why NAS networks are launch-overhead-bound on real frameworks.
+
+use crate::graph::NodeId;
+use crate::ops::{GraphBuilder, OpGraph};
+
+/// Fit a cell input to `c` channels (relu → 1×1 conv → bn), with optional
+/// spatial stride for skip inputs crossing a reduction boundary.
+fn fit(b: &mut GraphBuilder, x: NodeId, c: usize, stride: usize) -> NodeId {
+    let y = b.relu(x);
+    let y = b.conv(y, c, 1, stride);
+    b.bn(y)
+}
+
+/// NASNet-A normal cell. Returns the concat output (6·c channels).
+/// When `h_prev` has larger spatial dims than `h` (the cell right after a
+/// reduction), the skip input is factorized-reduced via a strided 1×1 fit.
+fn normal_cell(b: &mut GraphBuilder, h_prev: NodeId, h: NodeId, c: usize) -> NodeId {
+    // Input adaptation.
+    let stride_p = b.out_shape(h_prev).dim(2).div_ceil(b.out_shape(h).dim(2));
+    let p = fit(b, h_prev, c, stride_p.max(1));
+    let x = fit(b, h, c, 1);
+    // Five combines (genotype of NASNet-A normal cell).
+    let s1 = b.sep_conv(x, c, 3, 1);
+    let b1 = b.add(s1, x);
+    let s2a = b.sep_conv(p, c, 3, 1);
+    let s2b = b.sep_conv(x, c, 5, 1);
+    let b2 = b.add(s2a, s2b);
+    let a3 = b.avgpool(x, 3, 1);
+    let b3 = b.add(a3, p);
+    let a4a = b.avgpool(p, 3, 1);
+    let a4b = b.avgpool(p, 3, 1);
+    let b4 = b.add(a4a, a4b);
+    let s5a = b.sep_conv(p, c, 5, 1);
+    let s5b = b.sep_conv(p, c, 3, 1);
+    let b5 = b.add(s5a, s5b);
+    b.concat(&[x, b1, b2, b3, b4, b5])
+}
+
+/// NASNet-A reduction cell (stride-2). Returns the concat output (4·c).
+fn reduction_cell(b: &mut GraphBuilder, h_prev: NodeId, h: NodeId, c: usize) -> NodeId {
+    // The skip input must end up at the same spatial dims as `h` before the
+    // cell's own stride-2 ops are applied.
+    let stride_p = b.out_shape(h_prev).dim(2).div_ceil(b.out_shape(h).dim(2));
+    let p = fit(b, h_prev, c, stride_p.max(1));
+    let x = fit(b, h, c, 1);
+    let s1a = b.sep_conv(x, c, 5, 2);
+    let s1b = b.sep_conv(p, c, 7, 2);
+    let b1 = b.add(s1a, s1b);
+    let m2a = b.maxpool(x, 3, 2);
+    let s2b = b.sep_conv(p, c, 7, 2);
+    let b2 = b.add(m2a, s2b);
+    let a3a = b.avgpool(x, 3, 2);
+    let s3b = b.sep_conv(p, c, 5, 2);
+    let b3 = b.add(a3a, s3b);
+    let m4a = b.maxpool(x, 3, 2);
+    let s4b = b.sep_conv(b1, c, 3, 1);
+    let b4 = b.add(m4a, s4b);
+    let a5a = b.avgpool(b1, 3, 1);
+    let b5 = b.add(a5a, b2);
+    b.concat(&[b3, b4, b5, b2])
+}
+
+/// Generic NASNet-A: `cells_per_stack` normal cells between reductions,
+/// base filter count `c0`, ImageNet stem.
+pub fn nasnet_a(batch: usize, hw: usize, cells_per_stack: usize, c0: usize) -> OpGraph {
+    let mut b = GraphBuilder::new();
+    let input = b.input(&[batch, 3, hw, hw]);
+    // Stem: 3×3/s2 conv, then two reduction cells at c0/4 and c0/2
+    // (mirrors the reference implementation's stem0/stem1).
+    let stem = b.conv_bn(input, 32, 3, 2);
+    let r0 = reduction_cell(&mut b, stem, stem, (c0 / 4).max(8));
+    let r1 = reduction_cell(&mut b, stem, r0, (c0 / 2).max(8));
+    let (mut h_prev, mut h) = (r0, r1);
+    let mut c = c0;
+    for stack in 0..3 {
+        if stack > 0 {
+            c *= 2;
+            let r = reduction_cell(&mut b, h_prev, h, c);
+            h_prev = h;
+            h = r;
+        }
+        for _ in 0..cells_per_stack {
+            let n = normal_cell(&mut b, h_prev, h, c);
+            h_prev = h;
+            h = n;
+        }
+    }
+    let x = b.relu(h);
+    let g = b.gap(x);
+    let _ = b.linear(g, 1000);
+    b.finish()
+}
+
+/// NASNet-A (mobile): 4 cells per stack, 44 base filters, 224×224.
+/// Paper Table 1: 0.6 GMACs, Deg. 12.
+pub fn nasnet_a_mobile(batch: usize) -> OpGraph {
+    nasnet_a(batch, 224, 4, 44)
+}
+
+/// NASNet-A (large): 6 cells per stack, 168 base filters, 331×331.
+/// Paper Table 1: 23.9 GMACs, Deg. 15.
+pub fn nasnet_a_large(batch: usize) -> OpGraph {
+    nasnet_a(batch, 331, 6, 168)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::op::total_macs;
+    use crate::stream::logical_concurrency_degree;
+
+    #[test]
+    fn mobile_macs_match_paper() {
+        // Paper Table 1: 0.6 GMACs
+        let g = nasnet_a_mobile(1);
+        let gmacs = total_macs(&g) as f64 / 1e9;
+        assert!((0.35..0.95).contains(&gmacs), "nasnet mobile gmacs={gmacs}");
+    }
+
+    #[test]
+    fn large_macs_match_paper() {
+        // Paper Table 1: 23.9 GMACs
+        let g = nasnet_a_large(1);
+        let gmacs = total_macs(&g) as f64 / 1e9;
+        assert!((16.0..32.0).contains(&gmacs), "nasnet large gmacs={gmacs}");
+    }
+
+    #[test]
+    fn mobile_has_hundreds_of_ops() {
+        // The reason for the 22× speedup: a sea of small kernels.
+        let g = nasnet_a_mobile(1);
+        assert!(g.n_nodes() > 500, "n={}", g.n_nodes());
+    }
+
+    #[test]
+    fn high_logical_concurrency() {
+        // Paper: Deg 12 (mobile), 15 (large). Ranges allow block-level
+        // approximation differences.
+        let m = logical_concurrency_degree(&nasnet_a_mobile(1));
+        assert!((8..=16).contains(&m), "mobile deg={m}");
+    }
+
+    #[test]
+    fn large_wider_than_mobile() {
+        let m = logical_concurrency_degree(&nasnet_a_mobile(1));
+        let l = logical_concurrency_degree(&nasnet_a_large(1));
+        assert!(l >= m, "large deg {l} < mobile deg {m}");
+    }
+}

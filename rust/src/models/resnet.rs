@@ -1,0 +1,111 @@
+//! ResNet-50/101 (He et al. 2016), the torchvision variants the paper uses,
+//! plus the CIFAR-10 stem variant used in the Figure 8 training experiments.
+
+use crate::graph::NodeId;
+use crate::ops::{GraphBuilder, OpGraph};
+
+/// Bottleneck block: 1×1 reduce → 3×3 → 1×1 expand (+ identity/downsample).
+fn bottleneck(
+    b: &mut GraphBuilder,
+    x: NodeId,
+    mid_c: usize,
+    out_c: usize,
+    stride: usize,
+    downsample: bool,
+) -> NodeId {
+    let mut y = b.conv_bn_relu(x, mid_c, 1, 1);
+    y = b.conv_bn_relu(y, mid_c, 3, stride);
+    y = b.conv_bn(y, out_c, 1, 1);
+    let shortcut = if downsample { b.conv_bn(x, out_c, 1, stride) } else { x };
+    let s = b.add(y, shortcut);
+    b.relu(s)
+}
+
+/// Generic ResNet-v1 with bottleneck blocks. The CIFAR-10 runs in the
+/// paper's Figure 8 feed 32×32 inputs through the *unmodified* torchvision
+/// architecture — only the classifier width changes — which is exactly why
+/// they are so scheduling-bound (every kernel is tiny).
+pub fn resnet(batch: usize, hw: usize, blocks: [usize; 4], classes: usize) -> OpGraph {
+    let mut b = GraphBuilder::new();
+    let input = b.input(&[batch, 3, hw, hw]);
+    let mut x = {
+        let s = b.conv_bn_relu(input, 64, 7, 2);
+        b.maxpool(s, 3, 2)
+    };
+    let stage_channels = [(64, 256), (128, 512), (256, 1024), (512, 2048)];
+    for (stage, (&n_blocks, &(mid_c, out_c))) in
+        blocks.iter().zip(stage_channels.iter()).enumerate()
+    {
+        for i in 0..n_blocks {
+            let stride = if stage > 0 && i == 0 { 2 } else { 1 };
+            let downsample = i == 0; // channel change (and maybe stride)
+            x = bottleneck(&mut b, x, mid_c, out_c, stride, downsample);
+        }
+    }
+    let g = b.gap(x);
+    let _ = b.linear(g, classes);
+    b.finish()
+}
+
+pub fn resnet50(batch: usize, hw: usize) -> OpGraph {
+    resnet(batch, hw, [3, 4, 6, 3], 1000)
+}
+
+pub fn resnet101(batch: usize, hw: usize) -> OpGraph {
+    resnet(batch, hw, [3, 4, 23, 3], 1000)
+}
+
+pub fn resnet50_cifar(batch: usize) -> OpGraph {
+    resnet(batch, 32, [3, 4, 6, 3], 10)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::op::total_macs;
+
+    #[test]
+    fn resnet50_macs_near_reference() {
+        // torchvision resnet50 @224: ~4.1 GMACs
+        let g = resnet50(1, 224);
+        let gmacs = total_macs(&g) as f64 / 1e9;
+        assert!((3.5..5.0).contains(&gmacs), "resnet50 gmacs={gmacs}");
+    }
+
+    #[test]
+    fn resnet101_heavier_than_50() {
+        let m50 = total_macs(&resnet50(1, 224));
+        let m101 = total_macs(&resnet101(1, 224));
+        assert!(m101 as f64 > 1.7 * m50 as f64, "101 should be ~1.9× of 50");
+    }
+
+    #[test]
+    fn op_count_in_expected_range() {
+        // 53 convs + bn/relu/add per block ≈ 170–230 operator nodes
+        let g = resnet50(1, 224);
+        assert!((150..280).contains(&g.n_nodes()), "n={}", g.n_nodes());
+    }
+
+    #[test]
+    fn batch_scales_macs_linearly() {
+        let m1 = total_macs(&resnet50(1, 224));
+        let m8 = total_macs(&resnet50(8, 224));
+        assert_eq!(m8, 8 * m1);
+    }
+
+    #[test]
+    fn cifar_variant_is_light() {
+        let g = resnet50_cifar(1);
+        let gmacs = total_macs(&g) as f64 / 1e9;
+        // 32×32 inputs with s1 stem: ~0.08–0.35 GMACs
+        assert!(gmacs < 0.5, "cifar resnet50 gmacs={gmacs}");
+    }
+
+    #[test]
+    fn mostly_sequential_topology() {
+        // ResNet width is small (residual branches only): Deg ≤ 3
+        let g = resnet50(1, 224);
+        let deg = crate::stream::logical_concurrency_degree(&g);
+        assert!((2..=3).contains(&deg), "resnet deg={deg}");
+    }
+}

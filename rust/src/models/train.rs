@@ -1,0 +1,153 @@
+//! Training-step graph construction (Figure 8 / Figure 10 workloads).
+//!
+//! Given an inference (forward) graph, produce the graph of one training
+//! iteration: forward ops, a loss node, one backward op per forward op
+//! (reverse-mode: grads flow along reversed edges and also consume the
+//! forward activations), and an optimizer step per parameterized op.
+//!
+//! Cost model for backward ops follows the standard 2× rule: computing
+//! ∂L/∂input and ∂L/∂weights each costs about one forward pass, so a
+//! backward op carries 2× the forward MACs/FLOPs/bytes. This reproduces
+//! the roughly 3× total cost and ~3× op count of a training step, which is
+//! what the batch-size-dependent speedups in Fig. 8/10 hinge on.
+
+use crate::graph::NodeId;
+use crate::ops::{Op, OpGraph, OpKind, Shape};
+
+/// Build the training-step graph from a forward graph.
+pub fn training_graph(fwd: &OpGraph) -> OpGraph {
+    let mut g = fwd.clone();
+    let order = crate::graph::topo_order(fwd).expect("training requires a DAG");
+
+    // Loss node after the forward sink(s).
+    let sinks = fwd.sinks();
+    let loss_shape = Shape::new(&[1]);
+    let sink_numel: u64 = sinks.iter().map(|&s| fwd.node(s).out_shape.numel() as u64).sum();
+    let loss = g.add_node(Op {
+        name: "loss".into(),
+        kind: OpKind::Softmax, // cross-entropy ≈ softmax + reduction
+        out_shape: loss_shape,
+        dtype: fwd.node(sinks[0]).dtype,
+        macs: 0,
+        flops: 6 * sink_numel,
+        bytes: 8 * sink_numel,
+        params: 0,
+    });
+    for &s in &sinks {
+        g.add_edge(s, loss);
+    }
+
+    // Backward ops in reverse topological order.
+    let mut grad_of: Vec<Option<NodeId>> = vec![None; fwd.n_nodes()];
+    for &v in order.iter().rev() {
+        let op = fwd.node(v);
+        if matches!(op.kind, OpKind::Input) {
+            continue; // no gradient w.r.t. the data input
+        }
+        let gnode = g.add_node(Op {
+            name: format!("{}_bwd", op.name),
+            kind: OpKind::Grad { of: Box::new(op.kind.clone()) },
+            out_shape: op.out_shape.clone(),
+            dtype: op.dtype,
+            macs: 2 * op.macs,
+            flops: 2 * op.flops.max(1),
+            bytes: 2 * op.bytes,
+            params: 0,
+        });
+        // Depends on: the forward op's own output (activations), and the
+        // grads of all forward successors (or the loss for sinks).
+        g.add_edge(v, gnode);
+        let succs = fwd.successors(v);
+        if succs.is_empty() {
+            g.add_edge(loss, gnode);
+        }
+        for &w in succs {
+            match grad_of[w] {
+                Some(gw) => g.add_edge(gw, gnode),
+                None => g.add_edge(loss, gnode), // successor had no grad (input-like)
+            }
+        }
+        grad_of[v] = Some(gnode);
+    }
+
+    // Optimizer step (SGD w/ momentum: read grad+param+velocity, write 2).
+    for &v in &order {
+        let op = fwd.node(v);
+        if op.params == 0 {
+            continue;
+        }
+        let Some(gv) = grad_of[v] else { continue };
+        let step = g.add_node(Op {
+            name: format!("{}_sgd", op.name),
+            kind: OpKind::OptimizerStep,
+            out_shape: Shape::new(&[op.params as usize]),
+            dtype: op.dtype,
+            macs: 0,
+            flops: 4 * op.params,
+            bytes: 20 * op.params,
+            params: 0,
+        });
+        g.add_edge(gv, step);
+    }
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::ops::op::total_macs;
+
+    #[test]
+    fn train_graph_is_valid_and_bigger() {
+        let fwd = models::build("mini_inception", 8);
+        let train = training_graph(&fwd);
+        assert!(train.validate().is_ok());
+        assert!(train.n_nodes() > 2 * fwd.n_nodes(), "train should ~3× ops");
+    }
+
+    #[test]
+    fn train_macs_about_three_times_forward() {
+        let fwd = models::build("resnet50_cifar", 32);
+        let train = training_graph(&fwd);
+        let ratio = total_macs(&train) as f64 / total_macs(&fwd) as f64;
+        assert!((2.7..3.3).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn every_forward_op_has_a_backward() {
+        let fwd = models::build("mini_inception", 1);
+        let train = training_graph(&fwd);
+        let n_fwd_real =
+            fwd.nodes().filter(|(_, o)| !matches!(o.kind, OpKind::Input)).count();
+        let n_bwd = train
+            .nodes()
+            .filter(|(_, o)| matches!(o.kind, OpKind::Grad { .. }))
+            .count();
+        assert_eq!(n_fwd_real, n_bwd);
+    }
+
+    #[test]
+    fn optimizer_steps_match_parameterized_ops() {
+        let fwd = models::build("mini_inception", 1);
+        let train = training_graph(&fwd);
+        let n_param_ops = fwd.nodes().filter(|(_, o)| o.params > 0).count();
+        let n_sgd = train
+            .nodes()
+            .filter(|(_, o)| matches!(o.kind, OpKind::OptimizerStep))
+            .count();
+        assert_eq!(n_param_ops, n_sgd);
+    }
+
+    #[test]
+    fn backward_preserves_concurrency_structure() {
+        // A branchy forward graph yields a branchy backward graph: the
+        // training graph's width should be ≥ the forward width.
+        let fwd = models::build("mini_inception", 1);
+        let train = training_graph(&fwd);
+        let wf = crate::stream::logical_concurrency_degree(&fwd);
+        let wt = crate::stream::logical_concurrency_degree(&train);
+        assert!(wt >= wf, "train width {wt} < fwd width {wf}");
+    }
+}

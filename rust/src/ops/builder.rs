@@ -1,0 +1,482 @@
+//! Shape-aware graph builder: the model zoo's DSL.
+//!
+//! Each method appends an operator node, infers its output shape from the
+//! input nodes (NCHW for images), computes MACs/FLOPs/bytes/params, and
+//! wires dependency edges. "Same" padding semantics: `out = ceil(in/stride)`
+//! (matches the torchvision shapes the paper's networks use).
+
+use super::op::{DType, Op, OpGraph, OpKind, Shape};
+use crate::graph::NodeId;
+
+/// Builder over an [`OpGraph`].
+pub struct GraphBuilder {
+    g: OpGraph,
+    counter: usize,
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        GraphBuilder { g: OpGraph::new(), counter: 0 }
+    }
+
+    fn next_name(&mut self, mnemonic: &str) -> String {
+        self.counter += 1;
+        format!("{}_{}", mnemonic, self.counter)
+    }
+
+    fn shape(&self, id: NodeId) -> &Shape {
+        &self.g.node(id).out_shape
+    }
+
+    /// Channel dim of an NCHW tensor.
+    fn channels(&self, id: NodeId) -> usize {
+        self.shape(id).dim(1)
+    }
+
+    fn push(&mut self, kind: OpKind, out_shape: Shape, inputs: &[NodeId], cost: Cost) -> NodeId {
+        let name = self.next_name(&kind.mnemonic());
+        let op = Op {
+            name,
+            kind,
+            out_shape,
+            dtype: DType::F32,
+            macs: cost.macs,
+            flops: cost.flops,
+            bytes: cost.bytes,
+            params: cost.params,
+        };
+        let id = self.g.add_node(op);
+        for &i in inputs {
+            self.g.add_edge(i, id);
+        }
+        id
+    }
+
+    /// Graph input placeholder.
+    pub fn input(&mut self, shape: &[usize]) -> NodeId {
+        let name = self.next_name("input");
+        self.g.add_node(Op::virtual_op(name, OpKind::Input, Shape::new(shape)))
+    }
+
+    /// 2D convolution with "same" padding, no bias (BN provides the shift).
+    pub fn conv(&mut self, from: NodeId, out_c: usize, k: usize, stride: usize) -> NodeId {
+        self.conv_full(from, out_c, (k, k), stride, 1, Pad::Same)
+    }
+
+    /// 2D convolution with "valid" padding (Inception-v3 stem/reductions).
+    pub fn conv_valid(&mut self, from: NodeId, out_c: usize, k: usize, stride: usize) -> NodeId {
+        self.conv_full(from, out_c, (k, k), stride, 1, Pad::Valid)
+    }
+
+    /// Rectangular convolution (1×7 / 7×1 factorizations), same padding.
+    pub fn conv_rect(&mut self, from: NodeId, out_c: usize, kh: usize, kw: usize) -> NodeId {
+        self.conv_full(from, out_c, (kh, kw), 1, 1, Pad::Same)
+    }
+
+    /// Depthwise convolution, same padding.
+    pub fn dwconv(&mut self, from: NodeId, k: usize, stride: usize) -> NodeId {
+        let c = self.channels(from);
+        self.conv_full(from, c, (k, k), stride, c, Pad::Same)
+    }
+
+    /// Grouped convolution (the general case), same padding.
+    pub fn conv_grouped(
+        &mut self,
+        from: NodeId,
+        out_c: usize,
+        k: usize,
+        stride: usize,
+        groups: usize,
+    ) -> NodeId {
+        self.conv_full(from, out_c, (k, k), stride, groups, Pad::Same)
+    }
+
+    fn conv_full(
+        &mut self,
+        from: NodeId,
+        out_c: usize,
+        kernel: (usize, usize),
+        stride: usize,
+        groups: usize,
+        pad: Pad,
+    ) -> NodeId {
+        let (kh, kw) = kernel;
+        let in_shape = self.shape(from).clone();
+        assert_eq!(in_shape.rank(), 4, "conv expects NCHW");
+        let (n, in_c, h, w) = (in_shape.dim(0), in_shape.dim(1), in_shape.dim(2), in_shape.dim(3));
+        assert_eq!(in_c % groups, 0, "channels not divisible by groups");
+        assert_eq!(out_c % groups, 0, "out channels not divisible by groups");
+        let (oh, ow) = match pad {
+            Pad::Same => (ceil_div(h, stride), ceil_div(w, stride)),
+            Pad::Valid => ((h - kh) / stride + 1, (w - kw) / stride + 1),
+        };
+        let out_shape = Shape::new(&[n, out_c, oh, ow]);
+        let macs = (n * oh * ow * out_c * (in_c / groups) * kh * kw) as u64;
+        let params = (out_c * (in_c / groups) * kh * kw) as u64;
+        let bytes = 4 * (in_shape.numel() + out_shape.numel() + params as usize) as u64;
+        self.push(
+            OpKind::Conv2d { kernel, stride, groups },
+            out_shape,
+            &[from],
+            Cost { macs, flops: 2 * macs, bytes, params },
+        )
+    }
+
+    /// Batch normalization (inference form: scale + shift).
+    pub fn bn(&mut self, from: NodeId) -> NodeId {
+        let shape = self.shape(from).clone();
+        let c = shape.dim(1);
+        let numel = shape.numel() as u64;
+        self.push(
+            OpKind::BatchNorm,
+            shape,
+            &[from],
+            Cost { macs: 0, flops: 2 * numel, bytes: 8 * numel, params: 2 * c as u64 },
+        )
+    }
+
+    /// Layer normalization over the last dim.
+    pub fn layernorm(&mut self, from: NodeId) -> NodeId {
+        let shape = self.shape(from).clone();
+        let h = *shape.0.last().unwrap();
+        let numel = shape.numel() as u64;
+        self.push(
+            OpKind::LayerNorm,
+            shape,
+            &[from],
+            Cost { macs: 0, flops: 8 * numel, bytes: 8 * numel, params: 2 * h as u64 },
+        )
+    }
+
+    /// Elementwise unary activation.
+    pub fn act(&mut self, from: NodeId, kind: OpKind) -> NodeId {
+        debug_assert!(matches!(
+            kind,
+            OpKind::ReLU
+                | OpKind::ReLU6
+                | OpKind::Sigmoid
+                | OpKind::Swish
+                | OpKind::GeLU
+                | OpKind::Tanh
+        ));
+        let shape = self.shape(from).clone();
+        let numel = shape.numel() as u64;
+        self.push(kind, shape, &[from], Cost { macs: 0, flops: numel, bytes: 8 * numel, params: 0 })
+    }
+
+    pub fn relu(&mut self, from: NodeId) -> NodeId {
+        self.act(from, OpKind::ReLU)
+    }
+
+    /// conv → bn → relu, the CNN workhorse.
+    pub fn conv_bn_relu(&mut self, from: NodeId, out_c: usize, k: usize, stride: usize) -> NodeId {
+        let c = self.conv(from, out_c, k, stride);
+        let b = self.bn(c);
+        self.relu(b)
+    }
+
+    /// conv → bn (no activation; residual tails).
+    pub fn conv_bn(&mut self, from: NodeId, out_c: usize, k: usize, stride: usize) -> NodeId {
+        let c = self.conv(from, out_c, k, stride);
+        self.bn(c)
+    }
+
+    /// NASNet-style separable conv: (relu → dw k×k → pw 1×1 → bn) applied
+    /// twice — the small-kernel pattern that makes NAS nets launch-bound.
+    pub fn sep_conv(&mut self, from: NodeId, out_c: usize, k: usize, stride: usize) -> NodeId {
+        let mut x = self.relu(from);
+        x = self.dwconv(x, k, stride);
+        x = self.conv(x, out_c, 1, 1);
+        x = self.bn(x);
+        x = self.relu(x);
+        x = self.dwconv(x, k, 1);
+        x = self.conv(x, out_c, 1, 1);
+        self.bn(x)
+    }
+
+    /// Elementwise binary op (shapes must match; SE gates broadcast is
+    /// accounted as full-size traffic).
+    fn binary(&mut self, kind: OpKind, a: NodeId, b: NodeId) -> NodeId {
+        let (sa, sb) = (self.shape(a), self.shape(b));
+        assert!(
+            sa == sb || sb.numel() < sa.numel(),
+            "binary {kind:?} shape mismatch: {sa} vs {sb}"
+        );
+        let shape = self.shape(a).clone();
+        let numel = shape.numel() as u64;
+        self.push(kind, shape, &[a, b], Cost { macs: 0, flops: numel, bytes: 12 * numel, params: 0 })
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(OpKind::Add, a, b)
+    }
+
+    pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(OpKind::Mul, a, b)
+    }
+
+    /// Channel concat (NCHW dim 1).
+    pub fn concat(&mut self, inputs: &[NodeId]) -> NodeId {
+        assert!(!inputs.is_empty());
+        let first = self.shape(inputs[0]).clone();
+        let c: usize = inputs.iter().map(|&i| self.channels(i)).sum();
+        let out = Shape::new(&[first.dim(0), c, first.dim(2), first.dim(3)]);
+        let numel = out.numel() as u64;
+        self.push(
+            OpKind::Concat,
+            out,
+            inputs,
+            Cost { macs: 0, flops: 0, bytes: 8 * numel, params: 0 },
+        )
+    }
+
+    fn pool(&mut self, kind: OpKind, from: NodeId, k: usize, stride: usize, pad: Pad) -> NodeId {
+        let s = self.shape(from).clone();
+        let (h, w) = (s.dim(2), s.dim(3));
+        let (oh, ow) = match pad {
+            Pad::Same => (ceil_div(h, stride), ceil_div(w, stride)),
+            Pad::Valid => ((h - k) / stride + 1, (w - k) / stride + 1),
+        };
+        let out = Shape::new(&[s.dim(0), s.dim(1), oh, ow]);
+        let flops = (out.numel() * k * k) as u64;
+        let bytes = 4 * (s.numel() + out.numel()) as u64;
+        self.push(kind, out, &[from], Cost { macs: 0, flops, bytes, params: 0 })
+    }
+
+    pub fn maxpool(&mut self, from: NodeId, k: usize, stride: usize) -> NodeId {
+        self.pool(OpKind::MaxPool { kernel: k, stride }, from, k, stride, Pad::Same)
+    }
+
+    pub fn maxpool_valid(&mut self, from: NodeId, k: usize, stride: usize) -> NodeId {
+        self.pool(OpKind::MaxPool { kernel: k, stride }, from, k, stride, Pad::Valid)
+    }
+
+    pub fn avgpool(&mut self, from: NodeId, k: usize, stride: usize) -> NodeId {
+        self.pool(OpKind::AvgPool { kernel: k, stride }, from, k, stride, Pad::Same)
+    }
+
+    /// Global average pool to (N, C, 1, 1).
+    pub fn gap(&mut self, from: NodeId) -> NodeId {
+        let s = self.shape(from).clone();
+        let out = Shape::new(&[s.dim(0), s.dim(1), 1, 1]);
+        let bytes = 4 * (s.numel() + out.numel()) as u64;
+        self.push(
+            OpKind::GlobalAvgPool,
+            out,
+            &[from],
+            Cost { macs: 0, flops: s.numel() as u64, bytes, params: 0 },
+        )
+    }
+
+    /// Fully connected layer. Rank-3 inputs (B, S, H) are projected
+    /// per-token to (B, S, out); rank-2/rank-4 inputs are flattened to
+    /// (N, out) (classifier heads on pooled features).
+    pub fn linear(&mut self, from: NodeId, out_features: usize) -> NodeId {
+        let s = self.shape(from).clone();
+        let (rows, in_features, out) = if s.rank() == 3 {
+            let (b_, s_, h) = (s.dim(0), s.dim(1), s.dim(2));
+            (b_ * s_, h, Shape::new(&[b_, s_, out_features]))
+        } else {
+            let n = s.dim(0);
+            (n, s.numel() / n, Shape::new(&[n, out_features]))
+        };
+        let macs = (rows * in_features * out_features) as u64;
+        let params = (in_features * out_features + out_features) as u64;
+        let bytes = 4 * (s.numel() + out.numel() + params as usize) as u64;
+        self.push(OpKind::Linear, out, &[from], Cost { macs, flops: 2 * macs, bytes, params })
+    }
+
+    /// Free reshape/view (no GPU task; keeps shapes explicit in the graph).
+    pub fn reshape(&mut self, from: NodeId, dims: &[usize]) -> NodeId {
+        let out = Shape::new(dims);
+        assert_eq!(out.numel(), self.shape(from).numel(), "reshape numel mismatch");
+        let name = self.next_name("id");
+        let id = self.g.add_node(Op::virtual_op(name, OpKind::Identity, out));
+        self.g.add_edge(from, id);
+        id
+    }
+
+    /// Batched matmul with explicit result shape: (b, m, k) × (b, k, n).
+    pub fn matmul(&mut self, a: NodeId, b: NodeId, out_dims: &[usize], mnk: (usize, usize, usize)) -> NodeId {
+        let out = Shape::new(out_dims);
+        let batch: usize = out_dims[..out_dims.len() - 2].iter().product();
+        let (m, n, k) = mnk;
+        let macs = (batch * m * n * k) as u64;
+        let bytes = 4 * (self.shape(a).numel() + self.shape(b).numel() + out.numel()) as u64;
+        self.push(OpKind::MatMul, out, &[a, b], Cost { macs, flops: 2 * macs, bytes, params: 0 })
+    }
+
+    /// Softmax over the last dim.
+    pub fn softmax(&mut self, from: NodeId) -> NodeId {
+        let shape = self.shape(from).clone();
+        let numel = shape.numel() as u64;
+        self.push(
+            OpKind::Softmax,
+            shape,
+            &[from],
+            Cost { macs: 0, flops: 5 * numel, bytes: 8 * numel, params: 0 },
+        )
+    }
+
+    /// Token embedding lookup producing (B, S, H).
+    pub fn embedding(&mut self, from: NodeId, hidden: usize, vocab: usize) -> NodeId {
+        let s = self.shape(from).clone();
+        let out = Shape::new(&[s.dim(0), s.dim(1), hidden]);
+        let bytes = 4 * out.numel() as u64;
+        self.push(
+            OpKind::Embedding,
+            out,
+            &[from],
+            Cost { macs: 0, flops: 0, bytes, params: (vocab * hidden) as u64 },
+        )
+    }
+
+    /// Channel slice of an NCHW tensor (MixConv-style group split): a view
+    /// on GPU, so modelled as a virtual op.
+    pub fn slice_channels(&mut self, from: NodeId, channels: usize) -> NodeId {
+        let s = self.shape(from).clone();
+        assert!(channels <= s.dim(1), "slice wider than tensor");
+        let out = Shape::new(&[s.dim(0), channels, s.dim(2), s.dim(3)]);
+        let name = self.next_name("id");
+        let id = self.g.add_node(Op::virtual_op(name, OpKind::Identity, out));
+        self.g.add_edge(from, id);
+        id
+    }
+
+    /// Zero-cost identity/reshape node (keeps branch topology explicit).
+    pub fn identity(&mut self, from: NodeId) -> NodeId {
+        let shape = self.shape(from).clone();
+        let name = self.next_name("id");
+        let id = self.g.add_node(Op::virtual_op(name, OpKind::Identity, shape));
+        self.g.add_edge(from, id);
+        id
+    }
+
+    /// Access the graph under construction (e.g. to read shapes).
+    pub fn graph(&self) -> &OpGraph {
+        &self.g
+    }
+
+    pub fn out_shape(&self, id: NodeId) -> &Shape {
+        self.shape(id)
+    }
+
+    /// Finish building.
+    pub fn finish(self) -> OpGraph {
+        debug_assert!(self.g.validate().is_ok());
+        self.g
+    }
+}
+
+impl Default for GraphBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+struct Cost {
+    macs: u64,
+    flops: u64,
+    bytes: u64,
+    params: u64,
+}
+
+/// Padding mode for convs/pools.
+#[derive(Debug, Clone, Copy)]
+enum Pad {
+    Same,
+    Valid,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::op::total_macs;
+
+    #[test]
+    fn conv_shape_and_macs() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 224, 224]);
+        let c = b.conv(x, 64, 7, 2);
+        assert_eq!(b.out_shape(c), &Shape::new(&[1, 64, 112, 112]));
+        // 112*112*64*3*7*7
+        assert_eq!(b.graph().node(c).macs, 112 * 112 * 64 * 3 * 49);
+    }
+
+    #[test]
+    fn dwconv_macs_divide_by_groups() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 32, 56, 56]);
+        let d = b.dwconv(x, 3, 1);
+        assert_eq!(b.out_shape(d), &Shape::new(&[1, 32, 56, 56]));
+        assert_eq!(b.graph().node(d).macs, 56 * 56 * 32 * 9);
+    }
+
+    #[test]
+    fn linear_from_pooled() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 2048, 7, 7]);
+        let g = b.gap(x);
+        let f = b.linear(g, 1000);
+        assert_eq!(b.out_shape(f), &Shape::new(&[1, 1000]));
+        assert_eq!(b.graph().node(f).macs, 2048 * 1000);
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 16, 8, 8]);
+        let c1 = b.conv(x, 8, 1, 1);
+        let c2 = b.conv(x, 24, 3, 1);
+        let cat = b.concat(&[c1, c2]);
+        assert_eq!(b.out_shape(cat), &Shape::new(&[1, 32, 8, 8]));
+        assert_eq!(b.graph().predecessors(cat).len(), 2);
+    }
+
+    #[test]
+    fn sep_conv_op_count_and_stride() {
+        // 2 × (relu + dw + pw + bn) = 8 ops
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 44, 28, 28]);
+        let before = b.graph().n_nodes();
+        let s = b.sep_conv(x, 44, 5, 2);
+        assert_eq!(b.graph().n_nodes() - before, 8);
+        assert_eq!(b.out_shape(s), &Shape::new(&[1, 44, 14, 14]));
+    }
+
+    #[test]
+    fn matmul_macs() {
+        let mut b = GraphBuilder::new();
+        let q = b.input(&[12, 128, 64]);
+        let k = b.input(&[12, 64, 128]);
+        let s = b.matmul(q, k, &[12, 128, 128], (128, 128, 64));
+        assert_eq!(b.graph().node(s).macs, 12 * 128 * 128 * 64);
+    }
+
+    #[test]
+    fn total_macs_accumulates() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 32, 32]);
+        let c = b.conv_bn_relu(x, 16, 3, 1);
+        let _f = b.linear(c, 10);
+        let g = b.finish();
+        assert!(total_macs(&g) > 0);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn builder_graph_is_connected_dag() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 8, 16, 16]);
+        let a1 = b.conv_bn_relu(x, 8, 3, 1);
+        let a2 = b.conv_bn_relu(x, 8, 5, 1);
+        let m = b.add(a1, a2);
+        let g = b.finish();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.sinks(), vec![m]);
+    }
+}

@@ -1,0 +1,200 @@
+//! Operator fusion — "we also implement the operator fusion (a subset of
+//! TensorRT's)" (paper §5, Experimental Setup).
+//!
+//! Two patterns, applied greedily on single-consumer chains:
+//!   1. matmul-like + epilogue: Conv/Linear followed by BatchNorm and/or an
+//!      activation collapses into one kernel (the epilogue is free — it runs
+//!      out of registers/VMEM while the tile is resident).
+//!   2. elementwise chains: consecutive unary elementwise ops merge.
+//!
+//! Fusion preserves the dependency structure: the fused node inherits all
+//! external predecessors/successors of its parts. MACs add; bytes take the
+//! chain's external traffic only (intermediate tensors never hit HBM —
+//! that is the point of fusing).
+
+use super::op::{Op, OpGraph, OpKind};
+use crate::graph::NodeId;
+
+/// Is `k` an epilogue op that can ride on a matmul-like kernel?
+fn is_epilogue(k: &OpKind) -> bool {
+    matches!(
+        k,
+        OpKind::BatchNorm
+            | OpKind::ReLU
+            | OpKind::ReLU6
+            | OpKind::Sigmoid
+            | OpKind::Swish
+            | OpKind::GeLU
+            | OpKind::Tanh
+    )
+}
+
+/// Is `k` a fusable elementwise op? (`Add`/`Mul` as chain *heads* model
+/// TensorRT's residual-add+activation fusion; they can absorb a following
+/// unary but are never absorbed themselves — they have multiple inputs.)
+fn is_elementwise(k: &OpKind) -> bool {
+    is_epilogue(k) || matches!(k, OpKind::LayerNorm | OpKind::Softmax | OpKind::Add | OpKind::Mul)
+}
+
+/// Apply the fusion pass, returning a new graph. Node ids are NOT stable
+/// across fusion; the result is a fresh graph.
+pub fn fuse_graph(g: &OpGraph) -> OpGraph {
+    let n = g.n_nodes();
+    // Greedy chain construction: walk in topo order; a node joins its
+    // predecessor's chain if it is that predecessor's only consumer and the
+    // pattern allows it.
+    let order = crate::graph::topo_order(g).expect("fusion requires a DAG");
+    let mut chain_of: Vec<usize> = (0..n).collect(); // chain representative
+    for &v in &order {
+        let op = g.node(v);
+        if g.predecessors(v).len() != 1 {
+            continue;
+        }
+        let p = g.predecessors(v)[0];
+        if g.successors(p).len() != 1 {
+            continue; // predecessor has other consumers; cannot absorb
+        }
+        let head = chain_of[p];
+        let head_kind = &g.node(head).kind;
+        let can_fuse = if head_kind.is_matmul_like() || matches!(head_kind, OpKind::Fused { .. }) {
+            is_epilogue(&op.kind)
+        } else {
+            is_elementwise(head_kind) && is_elementwise(&op.kind)
+        };
+        // Never fuse across virtual nodes.
+        if can_fuse && !op.kind.is_virtual() && !g.node(p).kind.is_virtual() {
+            chain_of[v] = head;
+        }
+    }
+
+    // Collect chains in head order.
+    let mut members: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+    for &v in &order {
+        members[chain_of[v]].push(v);
+    }
+
+    // Build the fused graph.
+    let mut out = OpGraph::new();
+    let mut new_id = vec![usize::MAX; n];
+    for &head in &order {
+        let chain = &members[head];
+        if chain.is_empty() {
+            continue;
+        }
+        let fused_op = if chain.len() == 1 {
+            g.node(chain[0]).clone()
+        } else {
+            let parts: Vec<OpKind> = chain.iter().map(|&v| g.node(v).kind.clone()).collect();
+            let last = g.node(*chain.last().unwrap());
+            let macs: u64 = chain.iter().map(|&v| g.node(v).macs).sum();
+            let flops: u64 = chain.iter().map(|&v| g.node(v).flops).sum();
+            let params: u64 = chain.iter().map(|&v| g.node(v).params).sum();
+            // external traffic: head's inputs + tail's output + params
+            let head_op = g.node(chain[0]);
+            let in_bytes: u64 = g
+                .predecessors(chain[0])
+                .iter()
+                .map(|&p| 4 * g.node(p).out_shape.numel() as u64)
+                .sum();
+            let bytes = in_bytes + 4 * last.out_shape.numel() as u64 + 4 * params;
+            Op {
+                name: format!("{}_fused", head_op.name),
+                kind: OpKind::Fused { parts },
+                out_shape: last.out_shape.clone(),
+                dtype: last.dtype,
+                macs,
+                flops,
+                bytes,
+                params,
+            }
+        };
+        let id = out.add_node(fused_op);
+        for &v in chain {
+            new_id[v] = id;
+        }
+    }
+    // Edges: external edges between chains.
+    for (u, v) in g.edges() {
+        let (nu, nv) = (new_id[u], new_id[v]);
+        if nu != nv {
+            out.add_edge(nu, nv);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::builder::GraphBuilder;
+    use crate::ops::op::{n_real_ops, total_macs};
+
+    #[test]
+    fn conv_bn_relu_fuses_to_one() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 32, 32]);
+        let _ = b.conv_bn_relu(x, 16, 3, 1);
+        let g = b.finish();
+        let f = fuse_graph(&g);
+        // input + fused(conv,bn,relu)
+        assert_eq!(f.n_nodes(), 2);
+        let fused = f.nodes().find(|(_, o)| matches!(o.kind, OpKind::Fused { .. })).unwrap();
+        if let OpKind::Fused { parts } = &fused.1.kind {
+            assert_eq!(parts.len(), 3);
+        }
+    }
+
+    #[test]
+    fn fusion_preserves_macs() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 64, 64]);
+        let c1 = b.conv_bn_relu(x, 32, 3, 2);
+        let c2 = b.conv_bn_relu(c1, 64, 3, 2);
+        let _ = b.linear(c2, 10);
+        let g = b.finish();
+        let f = fuse_graph(&g);
+        assert_eq!(total_macs(&g), total_macs(&f));
+        assert!(f.n_nodes() < g.n_nodes());
+    }
+
+    #[test]
+    fn fusion_reduces_bytes() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 64, 64]);
+        let _ = b.conv_bn_relu(x, 32, 3, 1);
+        let g = b.finish();
+        let f = fuse_graph(&g);
+        let gb: u64 = g.nodes().map(|(_, o)| o.bytes).sum();
+        let fb: u64 = f.nodes().map(|(_, o)| o.bytes).sum();
+        assert!(fb < gb, "fused traffic {fb} should be < unfused {gb}");
+    }
+
+    #[test]
+    fn does_not_fuse_across_branches() {
+        // conv feeding two consumers must stay unfused with them.
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 8, 16, 16]);
+        let c = b.conv(x, 8, 3, 1);
+        let r1 = b.relu(c);
+        let r2 = b.act(c, OpKind::Sigmoid);
+        let _ = b.add(r1, r2);
+        let g = b.finish();
+        let f = fuse_graph(&g);
+        // conv kept separate (2 consumers): input, conv, relu, sigmoid, add
+        assert_eq!(f.n_nodes(), 5);
+    }
+
+    #[test]
+    fn fused_graph_is_valid_dag() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 16, 28, 28]);
+        let s = b.sep_conv(x, 32, 3, 1);
+        let t = b.sep_conv(x, 32, 5, 1);
+        let _ = b.add(s, t);
+        let g = b.finish();
+        let f = fuse_graph(&g);
+        assert!(f.validate().is_ok());
+        assert_eq!(total_macs(&g), total_macs(&f));
+        assert!(n_real_ops(&f) < n_real_ops(&g));
+    }
+}

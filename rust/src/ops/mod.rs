@@ -1,0 +1,12 @@
+//! Operator library: the DL operators the paper's computation graphs are
+//! made of, with tensor shapes, MAC/FLOP counts and memory-traffic
+//! estimates, a shape-aware graph builder used by the model zoo, and the
+//! TensorRT-style operator-fusion pass the paper implements a subset of.
+
+pub mod builder;
+pub mod fusion;
+pub mod op;
+
+pub use builder::GraphBuilder;
+pub use fusion::fuse_graph;
+pub use op::{DType, Op, OpGraph, OpKind, Shape};

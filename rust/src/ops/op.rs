@@ -1,0 +1,266 @@
+//! Operator definitions: kinds, shapes, and cost metadata.
+//!
+//! Every node of a computation graph is an [`Op`]: a DL operator with its
+//! output shape and precomputed cost metadata (MACs, FLOPs, memory traffic,
+//! parameter count). The costs feed the simulator's roofline kernel model
+//! (`sim::cost`) and the #MACs column of Table 1.
+
+use crate::graph::Dag;
+
+/// A computation graph of operators.
+pub type OpGraph = Dag<Op>;
+
+/// Element dtype. The paper's evaluation is fp32 on V100 (no tensor-core
+/// path is claimed); fp16/bf16 are carried for the cost model's MXU path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum DType {
+    #[default]
+    F32,
+    F16,
+    BF16,
+    I32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 | DType::BF16 => 2,
+        }
+    }
+}
+
+/// Tensor shape (row-major dims; NCHW for images, (B, S, H) for sequences).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Self {
+        Shape(dims.to_vec())
+    }
+
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        self.0[i]
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}]", self.0.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(","))
+    }
+}
+
+/// Operator kind. Structural parameters that affect cost live here; channel
+/// counts are derived from the input/output shapes when costs are computed.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Graph input placeholder (no GPU task).
+    Input,
+    /// 2D convolution (`groups == in_c` for depthwise). `kernel` is
+    /// (kh, kw) — Inception-v3 uses rectangular 1×7 / 7×1 factorizations.
+    Conv2d { kernel: (usize, usize), stride: usize, groups: usize },
+    /// Fully connected / dense layer.
+    Linear,
+    /// Batched matrix multiply (transformers).
+    MatMul,
+    BatchNorm,
+    LayerNorm,
+    ReLU,
+    ReLU6,
+    Sigmoid,
+    Swish,
+    GeLU,
+    Tanh,
+    Softmax,
+    /// Elementwise addition (residual connections, cell combines).
+    Add,
+    /// Elementwise multiply (SE gates, attention masks).
+    Mul,
+    /// Channel concatenation.
+    Concat,
+    MaxPool { kernel: usize, stride: usize },
+    AvgPool { kernel: usize, stride: usize },
+    GlobalAvgPool,
+    Embedding,
+    /// Memory-movement only (reshape/transpose/identity/pad).
+    Identity,
+    /// Result of the fusion pass: a chain of ops executed as one kernel.
+    Fused { parts: Vec<OpKind> },
+    /// Backward counterpart of an op (training graphs).
+    Grad { of: Box<OpKind> },
+    /// Optimizer update for one parameter tensor (training graphs).
+    OptimizerStep,
+}
+
+impl OpKind {
+    /// Short mnemonic for labels and dispatch keys.
+    pub fn mnemonic(&self) -> String {
+        match self {
+            OpKind::Input => "input".into(),
+            OpKind::Conv2d { kernel: (kh, kw), stride, groups } => {
+                if *groups > 1 {
+                    format!("dwconv{kh}x{kw}s{stride}")
+                } else {
+                    format!("conv{kh}x{kw}s{stride}")
+                }
+            }
+            OpKind::Linear => "linear".into(),
+            OpKind::MatMul => "matmul".into(),
+            OpKind::BatchNorm => "bn".into(),
+            OpKind::LayerNorm => "ln".into(),
+            OpKind::ReLU => "relu".into(),
+            OpKind::ReLU6 => "relu6".into(),
+            OpKind::Sigmoid => "sigmoid".into(),
+            OpKind::Swish => "swish".into(),
+            OpKind::GeLU => "gelu".into(),
+            OpKind::Tanh => "tanh".into(),
+            OpKind::Softmax => "softmax".into(),
+            OpKind::Add => "add".into(),
+            OpKind::Mul => "mul".into(),
+            OpKind::Concat => "concat".into(),
+            OpKind::MaxPool { kernel, .. } => format!("maxpool{kernel}"),
+            OpKind::AvgPool { kernel, .. } => format!("avgpool{kernel}"),
+            OpKind::GlobalAvgPool => "gap".into(),
+            OpKind::Embedding => "embed".into(),
+            OpKind::Identity => "id".into(),
+            OpKind::Fused { parts } => {
+                let inner: Vec<String> = parts.iter().map(|p| p.mnemonic()).collect();
+                format!("fused[{}]", inner.join("+"))
+            }
+            OpKind::Grad { of } => format!("grad_{}", of.mnemonic()),
+            OpKind::OptimizerStep => "sgd".into(),
+        }
+    }
+
+    /// Whether the op is compute-bound matrix math (MXU/TensorCore path).
+    pub fn is_matmul_like(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Conv2d { .. } | OpKind::Linear | OpKind::MatMul
+        ) || matches!(self, OpKind::Fused { parts } if parts.iter().any(|p| p.is_matmul_like()))
+            || matches!(self, OpKind::Grad { of } if of.is_matmul_like())
+    }
+
+    /// Whether the op launches no GPU task (inputs, identities).
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, OpKind::Input | OpKind::Identity)
+    }
+}
+
+/// A DL operator node: kind + output shape + cost metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Op {
+    pub name: String,
+    pub kind: OpKind,
+    pub out_shape: Shape,
+    pub dtype: DType,
+    /// Multiply-accumulate count (the paper's "#MACs").
+    pub macs: u64,
+    /// Total floating-point ops (≈ 2·MACs for matmul-likes, elementwise count
+    /// for the rest).
+    pub flops: u64,
+    /// Bytes read from + written to device memory.
+    pub bytes: u64,
+    /// Parameter (weight) element count.
+    pub params: u64,
+}
+
+impl Op {
+    /// A zero-cost placeholder op (inputs, identities).
+    pub fn virtual_op(name: impl Into<String>, kind: OpKind, out_shape: Shape) -> Self {
+        Op {
+            name: name.into(),
+            kind,
+            out_shape,
+            dtype: DType::F32,
+            macs: 0,
+            flops: 0,
+            bytes: 0,
+            params: 0,
+        }
+    }
+
+    /// Dispatch key used by the (simulated and real) kernel dispatchers —
+    /// the paper's run-time scheduler re-derives this on every execution;
+    /// Nimble resolves it once during the AoT pre-run.
+    pub fn dispatch_key(&self) -> String {
+        format!("{}:{:?}:{}", self.kind.mnemonic(), self.dtype, self.out_shape)
+    }
+}
+
+/// Sum of MACs over a graph (Table 1's "#MACs" column).
+pub fn total_macs(g: &OpGraph) -> u64 {
+    g.nodes().map(|(_, op)| op.macs).sum()
+}
+
+/// Number of GPU-task-launching ops (excludes Input/Identity).
+pub fn n_real_ops(g: &OpGraph) -> usize {
+    g.nodes().filter(|(_, op)| !op.kind.is_virtual()).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::BF16.size_bytes(), 2);
+    }
+
+    #[test]
+    fn shape_numel_and_display() {
+        let s = Shape::new(&[1, 3, 224, 224]);
+        assert_eq!(s.numel(), 150_528);
+        assert_eq!(s.to_string(), "[1,3,224,224]");
+        assert_eq!(s.rank(), 4);
+    }
+
+    #[test]
+    fn mnemonics() {
+        assert_eq!(
+            OpKind::Conv2d { kernel: (3, 3), stride: 1, groups: 1 }.mnemonic(),
+            "conv3x3s1"
+        );
+        assert_eq!(
+            OpKind::Conv2d { kernel: (5, 5), stride: 2, groups: 32 }.mnemonic(),
+            "dwconv5x5s2"
+        );
+        assert_eq!(
+            OpKind::Conv2d { kernel: (1, 7), stride: 1, groups: 1 }.mnemonic(),
+            "conv1x7s1"
+        );
+        let f = OpKind::Fused { parts: vec![OpKind::BatchNorm, OpKind::ReLU] };
+        assert_eq!(f.mnemonic(), "fused[bn+relu]");
+    }
+
+    #[test]
+    fn matmul_like_classification() {
+        assert!(OpKind::Linear.is_matmul_like());
+        assert!(OpKind::Conv2d { kernel: (1, 1), stride: 1, groups: 1 }.is_matmul_like());
+        assert!(!OpKind::ReLU.is_matmul_like());
+        let f = OpKind::Fused {
+            parts: vec![OpKind::Conv2d { kernel: (3, 3), stride: 1, groups: 1 }, OpKind::ReLU],
+        };
+        assert!(f.is_matmul_like());
+        let g = OpKind::Grad { of: Box::new(OpKind::Linear) };
+        assert!(g.is_matmul_like());
+    }
+
+    #[test]
+    fn dispatch_key_distinguishes_shapes() {
+        let mut a = Op::virtual_op("x", OpKind::ReLU, Shape::new(&[1, 8]));
+        let mut b = a.clone();
+        b.out_shape = Shape::new(&[1, 16]);
+        a.kind = OpKind::ReLU;
+        assert_ne!(a.dispatch_key(), b.dispatch_key());
+    }
+}

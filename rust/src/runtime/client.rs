@@ -1,0 +1,59 @@
+//! PJRT client wrapper: compile HLO-text artifacts, stage host data to
+//! device buffers. One client per process; executables/buffers keep a
+//! handle to it.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+use super::npy::read_npy_f32;
+
+/// Wrapper around the PJRT CPU client.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+}
+
+impl RuntimeClient {
+    /// Create the CPU client (the testbed's "GPU").
+    pub fn cpu() -> Result<Arc<Self>> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Arc::new(RuntimeClient { client }))
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO **text** artifact and compile it (the AoT "kernel
+    /// dispatch" — done exactly once per signature).
+    pub fn compile_artifact(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Stage an f32 host tensor to a device buffer.
+    pub fn buffer_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("staging host buffer")
+    }
+
+    /// Load an `.npy` weight file straight to a device buffer.
+    pub fn buffer_from_npy(&self, path: &Path) -> Result<(xla::PjRtBuffer, Vec<usize>)> {
+        let arr = read_npy_f32(path)?;
+        let buf = self.buffer_f32(&arr.data, &arr.dims)?;
+        Ok((buf, arr.dims))
+    }
+
+    /// Copy a device buffer back to host f32 data.
+    pub fn to_host_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync().context("device→host copy")?;
+        lit.to_vec::<f32>().context("literal to vec")
+    }
+}

@@ -1,0 +1,285 @@
+//! `artifacts/manifest.tsv` parser — the contract between the Python
+//! compile path (`python/compile/aot.py`, which documents the grammar) and
+//! this runtime.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One operator node of the executable graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeEntry {
+    pub name: String,
+    /// Artifact (executable) this node runs.
+    pub artifact: String,
+    /// Output dims.
+    pub dims: Vec<usize>,
+    /// Inputs in positional order.
+    pub inputs: Vec<InputRef>,
+}
+
+/// A node input: another node's output or a weight tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InputRef {
+    Node(String),
+    Weight(String),
+}
+
+/// Training-step artifact description.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TrainSpec {
+    pub artifact: String,
+    pub n_params: usize,
+    pub batch: usize,
+    pub in_dim: usize,
+    pub n_classes: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// artifact name → relative path of the HLO text file.
+    pub artifacts: HashMap<String, String>,
+    /// weight name → (relative npy path, dims).
+    pub weights: HashMap<String, (String, Vec<usize>)>,
+    /// batch size → node graph in topological (file) order.
+    pub graphs: HashMap<usize, Vec<NodeEntry>>,
+    /// batch size → request input dims.
+    pub inputs: HashMap<usize, Vec<usize>>,
+    /// batch size → whole-model artifact (name, ordered weight args).
+    pub models: HashMap<usize, (String, Vec<String>)>,
+    pub train: Option<TrainSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            let err = || format!("manifest line {}: {line:?}", lineno + 1);
+            match fields[0] {
+                "A" => {
+                    if fields.len() != 3 {
+                        bail!("{}: A needs 3 fields", err());
+                    }
+                    m.artifacts.insert(fields[1].to_string(), fields[2].to_string());
+                }
+                "W" => {
+                    if fields.len() != 4 {
+                        bail!("{}: W needs 4 fields", err());
+                    }
+                    let dims = parse_dims(fields[3]).with_context(err)?;
+                    m.weights.insert(fields[1].to_string(), (fields[2].to_string(), dims));
+                }
+                "N" => {
+                    if fields.len() != 6 {
+                        bail!("{}: N needs 6 fields", err());
+                    }
+                    let batch: usize = fields[1].parse().with_context(err)?;
+                    let inputs = fields[5]
+                        .split(';')
+                        .filter(|s| !s.is_empty())
+                        .map(|item| match item.split_once(':') {
+                            Some(("node", t)) => Ok(InputRef::Node(t.to_string())),
+                            Some(("weight", t)) => Ok(InputRef::Weight(t.to_string())),
+                            _ => bail!("bad input ref {item:?}"),
+                        })
+                        .collect::<Result<Vec<_>>>()
+                        .with_context(err)?;
+                    m.graphs.entry(batch).or_default().push(NodeEntry {
+                        name: fields[2].to_string(),
+                        artifact: fields[3].to_string(),
+                        dims: parse_dims(fields[4]).with_context(err)?,
+                        inputs,
+                    });
+                }
+                "I" => {
+                    if fields.len() != 3 {
+                        bail!("{}: I needs 3 fields", err());
+                    }
+                    m.inputs
+                        .insert(fields[1].parse().with_context(err)?, parse_dims(fields[2]).with_context(err)?);
+                }
+                "M" => {
+                    if fields.len() != 4 {
+                        bail!("{}: M needs 4 fields", err());
+                    }
+                    let weights: Vec<String> =
+                        fields[3].split(',').filter(|s| !s.is_empty()).map(String::from).collect();
+                    m.models.insert(
+                        fields[1].parse().with_context(err)?,
+                        (fields[2].to_string(), weights),
+                    );
+                }
+                "T" => {
+                    if fields.len() != 6 {
+                        bail!("{}: T needs 6 fields", err());
+                    }
+                    m.train = Some(TrainSpec {
+                        artifact: fields[1].to_string(),
+                        n_params: fields[2].parse().with_context(err)?,
+                        batch: fields[3].parse().with_context(err)?,
+                        in_dim: fields[4].parse().with_context(err)?,
+                        n_classes: fields[5].parse().with_context(err)?,
+                    });
+                }
+                other => bail!("{}: unknown record kind {other:?}", err()),
+            }
+        }
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Cross-reference checks: every node's artifact/weights/deps exist and
+    /// deps appear earlier (topological file order).
+    fn validate(&self) -> Result<()> {
+        for (batch, nodes) in &self.graphs {
+            let mut seen = std::collections::HashSet::new();
+            seen.insert("input".to_string());
+            for n in nodes {
+                if !self.artifacts.contains_key(&n.artifact) {
+                    bail!("node {} (b{batch}): unknown artifact {}", n.name, n.artifact);
+                }
+                for i in &n.inputs {
+                    match i {
+                        InputRef::Node(t) => {
+                            if !seen.contains(t) {
+                                bail!("node {} (b{batch}): forward/unknown dep {t}", n.name);
+                            }
+                        }
+                        InputRef::Weight(w) => {
+                            if !self.weights.contains_key(w) {
+                                bail!("node {} (b{batch}): unknown weight {w}", n.name);
+                            }
+                        }
+                    }
+                }
+                seen.insert(n.name.clone());
+            }
+        }
+        for (art, weights) in self.models.values() {
+            if !self.artifacts.contains_key(art) {
+                bail!("model artifact {art} not declared");
+            }
+            for w in weights {
+                if !self.weights.contains_key(w) {
+                    bail!("model artifact {art}: unknown weight {w}");
+                }
+            }
+        }
+        if let Some(t) = &self.train {
+            if !self.artifacts.contains_key(&t.artifact) {
+                bail!("train artifact {} not declared", t.artifact);
+            }
+        }
+        Ok(())
+    }
+
+    /// Batch sizes with per-op graphs, ascending.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self.graphs.keys().copied().collect();
+        b.sort_unstable();
+        b
+    }
+}
+
+fn parse_dims(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .filter(|p| !p.is_empty())
+        .map(|p| p.trim().parse::<usize>().context("bad dim"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+A\tconv_sig\tops/conv.hlo.txt
+A\trelu_sig\tops/relu.hlo.txt
+A\tmodel_b1\tmodel_b1.hlo.txt
+A\ttrain_step\ttrain_step.hlo.txt
+W\tstem_w\tweights/stem_w.npy\t16,3,3,3
+I\t1\t1,3,32,32
+N\t1\tstem_conv\tconv_sig\t1,16,32,32\tnode:input;weight:stem_w
+N\t1\tstem_relu\trelu_sig\t1,16,32,32\tnode:stem_conv
+M\t1\tmodel_b1\tstem_w
+T\ttrain_step\t6\t64\t3072\t10
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 4);
+        assert_eq!(m.weights["stem_w"].1, vec![16, 3, 3, 3]);
+        let g = &m.graphs[&1];
+        assert_eq!(g.len(), 2);
+        assert_eq!(g[0].inputs.len(), 2);
+        assert_eq!(g[1].inputs, vec![InputRef::Node("stem_conv".into())]);
+        assert_eq!(m.models[&1].0, "model_b1");
+        assert_eq!(m.models[&1].1, vec!["stem_w".to_string()]);
+        assert_eq!(m.inputs[&1], vec![1, 3, 32, 32]);
+        assert_eq!(m.train.as_ref().unwrap().n_params, 6);
+        assert_eq!(m.batch_sizes(), vec![1]);
+    }
+
+    #[test]
+    fn rejects_unknown_artifact() {
+        let bad = "N\t1\tx\tnope\t1,2\tnode:input\n";
+        assert!(Manifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_forward_reference() {
+        let bad = "\
+A\ta\tf.hlo.txt
+N\t1\tx\ta\t1,2\tnode:y
+N\t1\ty\ta\t1,2\tnode:input
+";
+        assert!(Manifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_weight() {
+        let bad = "A\ta\tf.hlo.txt\nN\t1\tx\ta\t1,2\tweight:w\n";
+        assert!(Manifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_input_ref() {
+        let bad = "A\ta\tf.hlo.txt\nN\t1\tx\ta\t1,2\tbogus\n";
+        assert!(Manifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let m = Manifest::parse("# comment\n\nA\ta\tf.hlo.txt\n").unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.tsv").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() >= 30);
+        assert_eq!(m.batch_sizes(), vec![1, 8]);
+        assert!(m.train.is_some());
+        // graph matches the rust-side MiniInception op count (sans input)
+        let mini = crate::models::build("mini_inception", 8);
+        assert_eq!(m.graphs[&8].len(), mini.n_nodes() - 1);
+    }
+}

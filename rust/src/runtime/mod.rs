@@ -1,0 +1,44 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.tsv` + `weights/*.npy`) produced by `python/compile/aot.py`
+//! and exposes compiled executables + pre-staged weight buffers to the
+//! engine. Python never runs here — this is the request path.
+
+pub mod client;
+pub mod manifest;
+pub mod npy;
+pub mod registry;
+
+pub use client::RuntimeClient;
+pub use manifest::{Manifest, NodeEntry};
+pub use registry::ArtifactRegistry;
+
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$NIMBLE_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("NIMBLE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// True when `make artifacts` has been run (tests skip gracefully if not).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.tsv").exists()
+}
+
+/// Artifacts dir or a clear error telling the user what to run.
+pub fn require_artifacts() -> anyhow::Result<PathBuf> {
+    let dir = artifacts_dir();
+    anyhow::ensure!(
+        dir.join("manifest.tsv").exists(),
+        "artifacts not found at {} — run `make artifacts` first \
+         (or set NIMBLE_ARTIFACTS)",
+        dir.display()
+    );
+    Ok(dir)
+}
+
+/// Join an artifact-relative path.
+pub fn artifact_path(dir: &Path, rel: &str) -> PathBuf {
+    dir.join(rel)
+}

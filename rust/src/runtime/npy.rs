@@ -1,0 +1,182 @@
+//! Minimal NumPy `.npy` (v1.x, little-endian f32, C-order) reader.
+//!
+//! The vendored `xla` crate ships an npy reader but it mis-parses the
+//! quoted `descr` field of NumPy-written headers; weights are the one
+//! binary interface between the Python compile path and this runtime, so
+//! we parse them ourselves and keep the format under test.
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// A parsed f32 array: shape + row-major data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NpyArray {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl NpyArray {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Read an `.npy` file containing a little-endian f32 C-order array.
+pub fn read_npy_f32(path: &Path) -> Result<NpyArray> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse_npy_f32(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Parse `.npy` bytes (exposed for tests).
+pub fn parse_npy_f32(bytes: &[u8]) -> Result<NpyArray> {
+    const MAGIC: &[u8] = b"\x93NUMPY";
+    if bytes.len() < 10 || &bytes[..6] != MAGIC {
+        bail!("not an npy file (bad magic)");
+    }
+    let major = bytes[6];
+    let (header_len, header_start) = match major {
+        1 => (u16::from_le_bytes([bytes[8], bytes[9]]) as usize, 10),
+        2 | 3 => (
+            u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+            12,
+        ),
+        v => bail!("unsupported npy version {v}"),
+    };
+    let header_end = header_start + header_len;
+    if bytes.len() < header_end {
+        bail!("truncated npy header");
+    }
+    let header = std::str::from_utf8(&bytes[header_start..header_end])
+        .context("npy header is not utf-8")?;
+
+    // descr
+    let descr = dict_value(header, "descr").context("no descr")?;
+    let descr = descr.trim_matches(|c| c == '\'' || c == '"');
+    if !matches!(descr.trim_start_matches(['<', '=', '|']), "f4") {
+        bail!("unsupported dtype {descr:?} (only little-endian f32)");
+    }
+    // fortran_order
+    let fortran = dict_value(header, "fortran_order").context("no fortran_order")?;
+    if fortran.trim() != "False" {
+        bail!("fortran order not supported");
+    }
+    // shape
+    let shape = dict_value(header, "shape").context("no shape")?;
+    let shape = shape.trim().trim_start_matches('(').trim_end_matches(')');
+    let dims: Vec<usize> = shape
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<usize>().context("bad dim"))
+        .collect::<Result<_>>()?;
+
+    let numel: usize = dims.iter().product();
+    let payload = &bytes[header_end..];
+    if payload.len() < numel * 4 {
+        bail!("npy payload too short: {} < {}", payload.len(), numel * 4);
+    }
+    let mut data = Vec::with_capacity(numel);
+    let mut rdr = payload;
+    let mut buf = [0u8; 4];
+    for _ in 0..numel {
+        rdr.read_exact(&mut buf)?;
+        data.push(f32::from_le_bytes(buf));
+    }
+    Ok(NpyArray { dims, data })
+}
+
+/// Extract a value from the header's python-dict literal: finds
+/// `'key':` and returns the text up to the next top-level comma.
+fn dict_value<'a>(header: &'a str, key: &str) -> Option<&'a str> {
+    let needle = format!("'{key}':");
+    let start = header.find(&needle)? + needle.len();
+    let rest = &header[start..];
+    let mut depth = 0usize;
+    for (i, c) in rest.char_indices() {
+        match c {
+            '(' | '[' => depth += 1,
+            ')' | ']' => depth = depth.saturating_sub(1),
+            ',' | '}' if depth == 0 => return Some(rest[..i].trim()),
+            _ => {}
+        }
+    }
+    Some(rest.trim())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a v1.0 npy file in memory the way numpy.save does.
+    fn make_npy(dims: &[usize], data: &[f32]) -> Vec<u8> {
+        let shape = match dims.len() {
+            1 => format!("({},)", dims[0]),
+            _ => format!(
+                "({})",
+                dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+            ),
+        };
+        let mut header = format!(
+            "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape}, }}"
+        );
+        let pad = 64 - (10 + header.len() + 1) % 64;
+        header.push_str(&" ".repeat(pad % 64));
+        header.push('\n');
+        let mut out = b"\x93NUMPY\x01\x00".to_vec();
+        out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        for v in data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn round_trip() {
+        let data = vec![1.5f32, -2.0, 0.0, 7.25, 3.0, -1.0];
+        let bytes = make_npy(&[2, 3], &data);
+        let arr = parse_npy_f32(&bytes).unwrap();
+        assert_eq!(arr.dims, vec![2, 3]);
+        assert_eq!(arr.data, data);
+    }
+
+    #[test]
+    fn one_dim_trailing_comma() {
+        let bytes = make_npy(&[4], &[0.0; 4]);
+        let arr = parse_npy_f32(&bytes).unwrap();
+        assert_eq!(arr.dims, vec![4]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_npy_f32(b"NOTNUMPYxxxxxxx").is_err());
+    }
+
+    #[test]
+    fn rejects_f64() {
+        let mut bytes = make_npy(&[1], &[0.0]);
+        let s = String::from_utf8_lossy(&bytes.clone()).replace("<f4", "<f8");
+        bytes = s.into_bytes();
+        assert!(parse_npy_f32(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let mut bytes = make_npy(&[8], &[0.0; 8]);
+        bytes.truncate(bytes.len() - 4);
+        assert!(parse_npy_f32(&bytes).is_err());
+    }
+
+    #[test]
+    fn reads_real_numpy_output_if_artifacts_exist() {
+        let dir = crate::runtime::artifacts_dir().join("weights/stem_w.npy");
+        if !dir.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let arr = read_npy_f32(&dir).unwrap();
+        assert_eq!(arr.dims, vec![16, 3, 3, 3]);
+        assert_eq!(arr.numel(), arr.data.len());
+    }
+}

@@ -1,0 +1,75 @@
+//! Artifact registry: compiled executables + pre-staged weight buffers.
+//!
+//! Compilation is the expensive, input-independent half of "kernel
+//! dispatch"; the registry performs it once at engine build (AoT), so both
+//! the eager baseline and Nimble replay execute the exact same
+//! executables — isolating *scheduling* as the only difference, like the
+//! paper's Fig. 2b methodology.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use super::client::RuntimeClient;
+use super::manifest::Manifest;
+
+pub struct ArtifactRegistry {
+    pub client: Arc<RuntimeClient>,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    exes: HashMap<String, Arc<xla::PjRtLoadedExecutable>>,
+    weights: HashMap<String, Arc<xla::PjRtBuffer>>,
+}
+
+impl ArtifactRegistry {
+    /// Load manifest, compile every artifact, stage every weight.
+    pub fn load(client: Arc<RuntimeClient>, dir: PathBuf) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let mut exes = HashMap::new();
+        for (name, rel) in &manifest.artifacts {
+            let exe = client
+                .compile_artifact(&dir.join(rel))
+                .with_context(|| format!("artifact {name}"))?;
+            exes.insert(name.clone(), Arc::new(exe));
+        }
+        let mut weights = HashMap::new();
+        for (name, (rel, dims)) in &manifest.weights {
+            let (buf, got_dims) = client
+                .buffer_from_npy(&dir.join(rel))
+                .with_context(|| format!("weight {name}"))?;
+            anyhow::ensure!(
+                &got_dims == dims,
+                "weight {name}: manifest says {dims:?}, file has {got_dims:?}"
+            );
+            weights.insert(name.clone(), Arc::new(buf));
+        }
+        Ok(ArtifactRegistry { client, manifest, dir, exes, weights })
+    }
+
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        self.exes
+            .get(name)
+            .cloned()
+            .with_context(|| format!("unknown artifact {name}"))
+    }
+
+    pub fn weight(&self, name: &str) -> Result<Arc<xla::PjRtBuffer>> {
+        self.weights
+            .get(name)
+            .cloned()
+            .with_context(|| format!("unknown weight {name}"))
+    }
+
+    /// Borrowed weight buffer (hot-path variant: no Arc clone).
+    pub fn weight_ref(&self, name: &str) -> Result<&xla::PjRtBuffer> {
+        self.weights
+            .get(name)
+            .map(|a| a.as_ref())
+            .with_context(|| format!("unknown weight {name}"))
+    }
+
+    pub fn n_executables(&self) -> usize {
+        self.exes.len()
+    }
+}

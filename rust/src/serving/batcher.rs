@@ -1,0 +1,179 @@
+//! Dynamic batcher: group pending requests up to the largest compiled
+//! batch size, or flush early when the oldest request has waited past the
+//! deadline. Static shapes ⇒ partial batches are padded with zeros and the
+//! padding outputs dropped (one compiled engine per batch size bucket).
+
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Compiled batch sizes, ascending (from the manifest).
+    pub batch_sizes: Vec<usize>,
+    /// Max time the oldest request may wait before a partial batch flushes.
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn max_batch(&self) -> usize {
+        *self.batch_sizes.last().expect("at least one batch size")
+    }
+
+    /// Smallest compiled batch size that fits `n` requests.
+    pub fn bucket_for(&self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        *self
+            .batch_sizes
+            .iter()
+            .find(|&&b| b >= n)
+            .unwrap_or_else(|| self.batch_sizes.last().expect("non-empty"))
+    }
+}
+
+/// A queued request: opaque id + one example's input.
+#[derive(Debug, Clone)]
+pub struct Pending<T> {
+    pub token: T,
+    pub input: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+/// Accumulates pending requests and decides when to form a batch.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    queue: Vec<Pending<T>>,
+}
+
+/// A formed batch ready for execution.
+#[derive(Debug)]
+pub struct FormedBatch<T> {
+    /// Compiled batch size (≥ len of tokens; rest is padding).
+    pub bucket: usize,
+    /// Flattened, zero-padded input of `bucket` examples.
+    pub input: Vec<f32>,
+    /// Tokens of the real examples, in input order.
+    pub tokens: Vec<(T, Instant)>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, queue: Vec::new() }
+    }
+
+    pub fn push(&mut self, token: T, input: Vec<f32>) {
+        self.queue.push(Pending { token, input, enqueued: Instant::now() });
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Should a batch be formed now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        self.queue.len() >= self.policy.max_batch()
+            || now.duration_since(self.queue[0].enqueued) >= self.policy.max_wait
+    }
+
+    /// Time until the oldest request's deadline (for the server's poll).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue.first().map(|p| p.enqueued + self.policy.max_wait)
+    }
+
+    /// Form the next batch (call when `ready`). `example_len` is the per-
+    /// example input length; padding examples are zero.
+    pub fn form(&mut self, example_len: usize) -> Option<FormedBatch<T>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let take = self.queue.len().min(self.policy.max_batch());
+        let bucket = self.policy.bucket_for(take);
+        let mut input = vec![0.0f32; bucket * example_len];
+        let mut tokens = Vec::with_capacity(take);
+        for (i, p) in self.queue.drain(..take).enumerate() {
+            assert_eq!(p.input.len(), example_len, "inconsistent example length");
+            input[i * example_len..(i + 1) * example_len].copy_from_slice(&p.input);
+            tokens.push((p.token, p.enqueued));
+        }
+        Some(FormedBatch { bucket, input, tokens })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy { batch_sizes: vec![1, 8], max_wait: Duration::from_millis(5) }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let p = policy();
+        assert_eq!(p.bucket_for(1), 1);
+        assert_eq!(p.bucket_for(2), 8);
+        assert_eq!(p.bucket_for(8), 8);
+        assert_eq!(p.bucket_for(20), 8, "clamps to max");
+    }
+
+    #[test]
+    fn full_batch_is_ready_immediately() {
+        let mut b = Batcher::new(policy());
+        for i in 0..8 {
+            b.push(i, vec![i as f32; 4]);
+        }
+        assert!(b.ready(Instant::now()));
+        let fb = b.form(4).unwrap();
+        assert_eq!(fb.bucket, 8);
+        assert_eq!(fb.tokens.len(), 8);
+        assert_eq!(fb.input[0], 0.0);
+        assert_eq!(fb.input[4], 1.0);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline() {
+        let mut b = Batcher::new(policy());
+        b.push(0, vec![1.0; 4]);
+        assert!(!b.ready(Instant::now()));
+        let later = Instant::now() + Duration::from_millis(10);
+        assert!(b.ready(later));
+        let fb = b.form(4).unwrap();
+        assert_eq!(fb.bucket, 1);
+        assert_eq!(fb.tokens.len(), 1);
+    }
+
+    #[test]
+    fn partial_batch_pads_with_zeros() {
+        let mut b = Batcher::new(policy());
+        b.push(0, vec![1.0; 4]);
+        b.push(1, vec![2.0; 4]);
+        let fb = b.form(4).unwrap();
+        assert_eq!(fb.bucket, 8);
+        assert_eq!(fb.input.len(), 32);
+        assert_eq!(&fb.input[..4], &[1.0; 4]);
+        assert_eq!(&fb.input[4..8], &[2.0; 4]);
+        assert!(fb.input[8..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn overflow_leaves_remainder_queued() {
+        let mut b = Batcher::new(policy());
+        for i in 0..11 {
+            b.push(i, vec![0.0; 4]);
+        }
+        let fb = b.form(4).unwrap();
+        assert_eq!(fb.tokens.len(), 8);
+        assert_eq!(b.pending(), 3);
+    }
+
+    #[test]
+    fn empty_form_returns_none() {
+        let mut b: Batcher<u32> = Batcher::new(policy());
+        assert!(b.form(4).is_none());
+        assert!(b.next_deadline().is_none());
+    }
+}

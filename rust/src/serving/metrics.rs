@@ -1,0 +1,57 @@
+//! Serving metrics: per-request latency distribution + throughput.
+
+use crate::util::stats::{fmt_secs, Summary};
+use std::time::Duration;
+
+/// Aggregated report for a serving run.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    pub n_requests: usize,
+    pub n_batches: usize,
+    pub wall_time: Duration,
+    pub latency: Summary,
+    /// Mean real (unpadded) examples per formed batch.
+    pub mean_batch_fill: f64,
+}
+
+impl ServingReport {
+    pub fn throughput_rps(&self) -> f64 {
+        self.n_requests as f64 / self.wall_time.as_secs_f64()
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "requests={}  batches={}  fill={:.2}  wall={}  thpt={:.1} req/s\n\
+             latency: p50={} p90={} p99={} max={}",
+            self.n_requests,
+            self.n_batches,
+            self.mean_batch_fill,
+            fmt_secs(self.wall_time.as_secs_f64()),
+            self.throughput_rps(),
+            fmt_secs(self.latency.percentile(50.0)),
+            fmt_secs(self.latency.percentile(90.0)),
+            fmt_secs(self.latency.percentile(99.0)),
+            fmt_secs(self.latency.max()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_and_computes_throughput() {
+        let r = ServingReport {
+            n_requests: 100,
+            n_batches: 20,
+            wall_time: Duration::from_secs(2),
+            latency: Summary::from_samples(vec![0.01; 100]),
+            mean_batch_fill: 5.0,
+        };
+        assert!((r.throughput_rps() - 50.0).abs() < 1e-9);
+        let s = r.render();
+        assert!(s.contains("requests=100"));
+        assert!(s.contains("p99"));
+    }
+}

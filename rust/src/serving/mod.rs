@@ -1,0 +1,15 @@
+//! Batched serving front-end — the "serving paper" L3 shape: request
+//! queue → dynamic batcher → Nimble engine → latency/throughput metrics.
+//!
+//! The engine owns PJRT state, which is not `Send`; the server therefore
+//! runs the engine on a dedicated thread and communicates over channels.
+//! Static shapes (the paper's core assumption) mean the batcher pads each
+//! group to the nearest compiled batch size, TensorRT-profile style.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::ServingReport;
+pub use server::{NimbleServer, ServerConfig};

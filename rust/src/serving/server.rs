@@ -1,0 +1,213 @@
+//! The serving loop: a dedicated engine thread (PJRT state is not `Send`)
+//! consuming a request channel through the dynamic batcher.
+//!
+//! Wire-up:
+//!   client threads → mpsc<Request> → [server thread: batcher → engine
+//!   (replay or eager) → per-request responses] → mpsc<Response> per client.
+
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::ServingReport;
+use crate::coordinator::{EngineConfig, ExecMode, NimbleEngine};
+use crate::util::stats::Summary;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub engine: EngineConfig,
+    pub max_wait: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { engine: EngineConfig::default(), max_wait: Duration::from_millis(2) }
+    }
+}
+
+enum Msg {
+    Infer { input: Vec<f32>, reply: mpsc::Sender<Result<Vec<f32>, String>> },
+    Shutdown { reply: mpsc::Sender<ServingReport> },
+}
+
+/// Handle to a running server.
+pub struct NimbleServer {
+    tx: mpsc::Sender<Msg>,
+    join: Option<JoinHandle<()>>,
+    example_len: usize,
+}
+
+impl NimbleServer {
+    /// Start the server; blocks until the engine thread finished its AoT
+    /// build (so the first request is already schedule-replayed).
+    pub fn start(config: ServerConfig) -> Result<NimbleServer> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize, String>>();
+        let join = std::thread::Builder::new()
+            .name("nimble-engine".into())
+            .spawn(move || engine_thread(config, rx, ready_tx))
+            .context("spawning engine thread")?;
+        let example_len = ready_rx
+            .recv()
+            .context("engine thread died during build")?
+            .map_err(anyhow::Error::msg)?;
+        Ok(NimbleServer { tx, join: Some(join), example_len })
+    }
+
+    pub fn example_len(&self) -> usize {
+        self.example_len
+    }
+
+    /// Blocking inference of one example.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Infer { input, reply })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().context("server dropped request")?.map_err(anyhow::Error::msg)
+    }
+
+    /// Fire an async request; returns the reply channel.
+    pub fn infer_async(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Infer { input, reply })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rx)
+    }
+
+    /// Stop the server and collect the serving report.
+    pub fn shutdown(mut self) -> Result<ServingReport> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(Msg::Shutdown { reply }).ok();
+        let report = rx.recv().context("no report from engine thread")?;
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        Ok(report)
+    }
+}
+
+fn engine_thread(
+    config: ServerConfig,
+    rx: mpsc::Receiver<Msg>,
+    ready: mpsc::Sender<Result<usize, String>>,
+) {
+    let engine = match NimbleEngine::build(config.engine.clone()) {
+        Ok(e) => e,
+        Err(err) => {
+            let _ = ready.send(Err(format!("{err:#}")));
+            return;
+        }
+    };
+    let batch_sizes = engine.batch_sizes();
+    let max_batch = engine.max_batch();
+    let example_len = match engine.example_len(max_batch) {
+        Ok(l) => l,
+        Err(err) => {
+            let _ = ready.send(Err(format!("{err:#}")));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(example_len));
+
+    let policy = BatchPolicy { batch_sizes, max_wait: config.max_wait };
+    let mut batcher: Batcher<mpsc::Sender<Result<Vec<f32>, String>>> = Batcher::new(policy);
+    let started = Instant::now();
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut n_requests = 0usize;
+    let mut n_batches = 0usize;
+    let mut fill_sum = 0usize;
+    let mut shutdown_reply: Option<mpsc::Sender<ServingReport>> = None;
+
+    'outer: loop {
+        // Wait for work (bounded by the oldest request's flush deadline).
+        let msg = match batcher.next_deadline() {
+            None => rx.recv().ok(),
+            Some(deadline) => {
+                let now = Instant::now();
+                if deadline <= now {
+                    None
+                } else {
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(m) => Some(m),
+                        Err(mpsc::RecvTimeoutError::Timeout) => None,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break 'outer,
+                    }
+                }
+            }
+        };
+        match msg {
+            Some(Msg::Infer { input, reply }) => {
+                if input.len() != example_len {
+                    let _ = reply
+                        .send(Err(format!("bad input length {} != {example_len}", input.len())));
+                } else {
+                    batcher.push(reply, input);
+                }
+            }
+            Some(Msg::Shutdown { reply }) => {
+                shutdown_reply = Some(reply);
+            }
+            None if batcher.pending() == 0 && shutdown_reply.is_none() => break 'outer,
+            None => {}
+        }
+
+        // Flush ready batches (always flush everything on shutdown).
+        while (shutdown_reply.is_some() && batcher.pending() > 0)
+            || batcher.ready(Instant::now())
+        {
+            let Some(fb) = batcher.form(example_len) else { break };
+            n_batches += 1;
+            fill_sum += fb.tokens.len();
+            let out_len_per_example = 10; // classifier head (manifest-fixed)
+            match engine.infer(fb.bucket, &fb.input) {
+                Ok(out) => {
+                    let done = Instant::now();
+                    for (i, (reply, enq)) in fb.tokens.into_iter().enumerate() {
+                        latencies.push(done.duration_since(enq).as_secs_f64());
+                        n_requests += 1;
+                        let slice =
+                            out[i * out_len_per_example..(i + 1) * out_len_per_example].to_vec();
+                        let _ = reply.send(Ok(slice));
+                    }
+                }
+                Err(err) => {
+                    for (reply, _) in fb.tokens {
+                        let _ = reply.send(Err(format!("{err:#}")));
+                    }
+                }
+            }
+        }
+
+        if shutdown_reply.is_some() && batcher.pending() == 0 {
+            break 'outer;
+        }
+    }
+
+    let report = ServingReport {
+        n_requests,
+        n_batches,
+        wall_time: started.elapsed(),
+        latency: if latencies.is_empty() {
+            Summary::from_samples(vec![0.0])
+        } else {
+            Summary::from_samples(latencies)
+        },
+        mean_batch_fill: if n_batches == 0 { 0.0 } else { fill_sum as f64 / n_batches as f64 },
+    };
+    if let Some(reply) = shutdown_reply {
+        let _ = reply.send(report);
+    }
+}
+
+/// Convenience: describe which mode a server runs in (for reports).
+pub fn mode_name(mode: ExecMode) -> &'static str {
+    match mode {
+        ExecMode::Replay => "nimble-replay",
+        ExecMode::Eager => "eager-baseline",
+    }
+}

@@ -1,0 +1,159 @@
+//! Analytic kernel cost model (roofline + occupancy).
+//!
+//! For each operator the model predicts:
+//! * **duration** — `max(flops / (peak·eff), bytes / bw) + kernel_fixed`,
+//!   where the compute efficiency `eff` saturates with kernel size (small
+//!   kernels cannot fill the machine — the reason Fig. 2's networks are
+//!   launch-bound) and depends on op class (dense conv/matmul hit the MXU/
+//!   TensorCore-class units; depthwise and elementwise ops are bandwidth-
+//!   bound).
+//! * **sm_demand** — SMs the kernel occupies, from output elements vs
+//!   resident threads. Big kernels occupy the whole device, which is what
+//!   limits multi-stream gains on NASNet-A (large) in Table 1.
+
+use super::device::GpuSpec;
+use crate::ops::{Op, OpKind};
+
+/// Cost of one operator on a device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelCost {
+    /// Kernel duration in seconds (device-side, including fixed overhead).
+    pub duration_s: f64,
+    /// SMs occupied while running.
+    pub sm_demand: usize,
+}
+
+/// Peak-efficiency ceiling per op class.
+fn eff_ceiling(kind: &OpKind) -> f64 {
+    match kind {
+        OpKind::Conv2d { groups, .. } if *groups > 1 => 0.08, // depthwise: BW-bound
+        OpKind::Conv2d { .. } => 0.35,
+        OpKind::Linear | OpKind::MatMul => 0.55,
+        OpKind::Fused { parts } => {
+            parts.iter().map(eff_ceiling).fold(0.05_f64, f64::max)
+        }
+        OpKind::Grad { of } => eff_ceiling(of) * 0.9, // bwd kernels slightly worse
+        _ => 0.10, // elementwise / pool / norm: compute is never the limiting factor
+    }
+}
+
+/// Efficiency saturation with size: eff = ceil · x/(x+K). K chosen so a
+/// ~100 MFLOP kernel reaches ~80% of its ceiling (fits V100 microbenchmarks
+/// of cuDNN conv efficiency vs problem size).
+fn efficiency(kind: &OpKind, flops: u64) -> f64 {
+    const K: f64 = 1.2e7;
+    let x = flops as f64;
+    eff_ceiling(kind) * (x / (x + K))
+}
+
+/// Compute the cost of an op on a device. Virtual ops cost nothing.
+pub fn kernel_cost(op: &Op, dev: &GpuSpec) -> KernelCost {
+    if op.kind.is_virtual() {
+        return KernelCost { duration_s: 0.0, sm_demand: 0 };
+    }
+    let eff = efficiency(&op.kind, op.flops);
+    let t_compute = if op.flops == 0 {
+        0.0
+    } else {
+        op.flops as f64 / (dev.peak_tflops * 1e12 * eff)
+    };
+    let t_mem = op.bytes as f64 / (dev.mem_bw_gbps * 1e9);
+    let duration_s = t_compute.max(t_mem) + dev.kernel_fixed_s;
+    // Occupancy: one thread per output element, `threads_per_sm` resident.
+    let threads = op.out_shape.numel().max(1);
+    let sm_demand = threads.div_ceil(dev.threads_per_sm).clamp(1, dev.sm_count);
+    KernelCost { duration_s, sm_demand }
+}
+
+/// Apply a per-class duration multiplier (TVM's tuned kernels, Nimble's
+/// cuDNN-vs-native kernel selection). Only matmul-like kernels are tunable;
+/// memory-bound ops are already at the bandwidth roofline.
+pub fn scaled_cost(op: &Op, dev: &GpuSpec, matmul_scale: f64) -> KernelCost {
+    let mut c = kernel_cost(op, dev);
+    if op.kind.is_matmul_like() {
+        // Scale only the roofline part, not the fixed kernel overhead.
+        let var = (c.duration_s - dev.kernel_fixed_s).max(0.0);
+        c.duration_s = var * matmul_scale + dev.kernel_fixed_s;
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{GraphBuilder, Shape};
+
+    fn conv_op(c_out: usize, hw: usize) -> Op {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 64, hw, hw]);
+        let c = b.conv(x, c_out, 3, 1);
+        b.finish().node(c).clone()
+    }
+
+    #[test]
+    fn bigger_kernels_run_longer() {
+        let d = GpuSpec::v100();
+        let small = kernel_cost(&conv_op(64, 7), &d);
+        let big = kernel_cost(&conv_op(64, 56), &d);
+        assert!(big.duration_s > small.duration_s * 5.0);
+    }
+
+    #[test]
+    fn tiny_kernels_dominated_by_fixed_cost() {
+        let d = GpuSpec::v100();
+        let tiny = kernel_cost(&conv_op(8, 4), &d);
+        assert!(tiny.duration_s < 4.0 * d.kernel_fixed_s, "t={}", tiny.duration_s);
+    }
+
+    #[test]
+    fn big_kernel_fills_the_device() {
+        let d = GpuSpec::v100();
+        let big = kernel_cost(&conv_op(256, 56), &d);
+        assert_eq!(big.sm_demand, d.sm_count);
+        let small = kernel_cost(&conv_op(8, 4), &d);
+        assert!(small.sm_demand < d.sm_count / 4);
+    }
+
+    #[test]
+    fn virtual_ops_are_free() {
+        let op = Op::virtual_op("x", OpKind::Input, Shape::new(&[1, 3, 224, 224]));
+        let c = kernel_cost(&op, &GpuSpec::v100());
+        assert_eq!(c.duration_s, 0.0);
+        assert_eq!(c.sm_demand, 0);
+    }
+
+    #[test]
+    fn efficiency_saturates() {
+        let k = OpKind::Conv2d { kernel: (3, 3), stride: 1, groups: 1 };
+        assert!(efficiency(&k, 1_000) < 0.01);
+        let big = efficiency(&k, 10_000_000_000);
+        assert!(big > 0.33 && big < 0.35);
+    }
+
+    #[test]
+    fn tuned_kernels_scale_only_variable_part() {
+        let d = GpuSpec::v100();
+        let op = conv_op(256, 56);
+        let base = kernel_cost(&op, &d);
+        let tuned = scaled_cost(&op, &d, 0.5);
+        assert!(tuned.duration_s < base.duration_s);
+        assert!(tuned.duration_s > base.duration_s * 0.45);
+        // memory-bound op unaffected
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 64, 56, 56]);
+        let r = b.relu(x);
+        let relu = b.finish().node(r).clone();
+        assert_eq!(
+            scaled_cost(&relu, &d, 0.5).duration_s,
+            kernel_cost(&relu, &d).duration_s
+        );
+    }
+
+    #[test]
+    fn slower_device_slower_kernels() {
+        let op = conv_op(128, 28);
+        let v = kernel_cost(&op, &GpuSpec::v100());
+        let xp = kernel_cost(&op, &GpuSpec::titan_xp());
+        assert!(xp.duration_s > v.duration_s);
+    }
+}

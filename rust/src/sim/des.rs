@@ -1,0 +1,398 @@
+//! The discrete-event simulation engine.
+//!
+//! Models exactly the pipeline of the paper's Figure 3: a *serial host
+//! thread* walks the launch plan, paying the framework's per-op scheduling
+//! overhead before each task submission; submitted tasks enter their
+//! stream's FIFO; a task starts when (a) it has been submitted, (b) its
+//! stream predecessor finished, (c) all awaited events have fired, and
+//! (d) enough SMs are free. Completion records the task's events.
+//!
+//! The host-gating is what makes run-time scheduling slow even with many
+//! streams (the Fig. 3 effect), and the SM pool is what caps multi-stream
+//! gains for MAC-heavy networks (Table 1, NASNet-A large).
+
+use super::cost::KernelCost;
+use super::device::GpuSpec;
+use super::framework::HostProfile;
+use crate::graph::NodeId;
+use crate::stream::LaunchPlan;
+
+/// Per-task timing produced by the simulation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskSpan {
+    pub node: NodeId,
+    pub stream: usize,
+    /// When the host finished submitting this task.
+    pub submit_s: f64,
+    /// When the GPU started executing it.
+    pub start_s: f64,
+    /// When it completed.
+    pub end_s: f64,
+}
+
+impl TaskSpan {
+    pub fn duration(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+}
+
+/// Simulation inputs.
+pub struct SimConfig<'a> {
+    pub plan: &'a LaunchPlan,
+    /// Kernel costs indexed by node id (virtual ops: zero).
+    pub costs: &'a [KernelCost],
+    pub host: HostProfile,
+    pub device: GpuSpec,
+}
+
+/// Simulation outputs.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub spans: Vec<TaskSpan>,
+    /// End-to-end latency: everything submitted AND completed.
+    pub total_s: f64,
+    /// When the host finished its submission loop.
+    pub host_s: f64,
+    /// Union of busy intervals on the device (Fig. 2a numerator).
+    pub gpu_active_s: f64,
+}
+
+impl SimResult {
+    /// Ratio of GPU-active time to total running time (Fig. 2a).
+    pub fn active_ratio(&self) -> f64 {
+        if self.total_s == 0.0 {
+            0.0
+        } else {
+            self.gpu_active_s / self.total_s
+        }
+    }
+}
+
+/// Run the simulation.
+pub fn simulate(cfg: &SimConfig) -> SimResult {
+    let plan = cfg.plan;
+    let n_events = plan.n_events;
+    let n_streams = plan.n_streams;
+
+    // --- Phase 1: host submission loop (serial, Fig. 3's upper lane). ---
+    // submit[i] = host clock when task i's submission completes.
+    let mut submit = vec![0.0f64; plan.order.len()];
+    let mut host_clock = 0.0f64;
+    for (i, p) in plan.order.iter().enumerate() {
+        let cost = &cfg.costs[p.node];
+        let is_real = cost.duration_s > 0.0 || cost.sm_demand > 0;
+        if is_real {
+            // scheduling overhead + raw submission
+            host_clock += cfg.host.per_task_s();
+            // event record/wait submissions also occupy the host
+            let sync_ops = p.wait_events.len() + p.record_events.len();
+            host_clock += sync_ops as f64 * cfg.host.submit_s;
+        }
+        submit[i] = host_clock;
+    }
+    let host_s = host_clock;
+
+    // --- Phase 2: device execution. ---
+    // Stream FIFOs hold indices into plan.order.
+    let mut queues: Vec<std::collections::VecDeque<usize>> =
+        vec![std::collections::VecDeque::new(); n_streams];
+    for (i, p) in plan.order.iter().enumerate() {
+        queues[p.stream].push_back(i);
+    }
+    let mut prev_end = vec![0.0f64; n_streams];
+    let mut event_time: Vec<Option<f64>> = vec![None; n_events];
+    let mut running: Vec<(f64, usize)> = Vec::new(); // (end, sm)
+    let mut front_clock = 0.0f64; // device work-distributor serializer
+    let mut spans: Vec<TaskSpan> = Vec::with_capacity(plan.order.len());
+    let mut remaining: usize = queues.iter().map(|q| q.len()).sum();
+
+    // Min-heap of stream heads keyed by (ready-time bits, stream) with lazy
+    // revalidation — ready times are non-negative so the IEEE-754 bit
+    // pattern orders correctly, and they only grow (submit is static,
+    // prev_end and event times are monotone), so a popped entry is either
+    // current or re-pushed with a later key. Heads blocked on an
+    // unrecorded event park in `blocked_on` and re-enter when it fires.
+    // This replaces an O(streams) scan per task (see EXPERIMENTS.md §Perf).
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let mut blocked_on: Vec<Vec<usize>> = vec![Vec::new(); n_events];
+    // Ready time of stream `s`'s head: Ok(t) or Err(event) if blocked.
+    let ready_of = |s: usize,
+                    queues: &[std::collections::VecDeque<usize>],
+                    prev_end: &[f64],
+                    event_time: &[Option<f64>],
+                    submit: &[f64]|
+     -> Option<std::result::Result<f64, usize>> {
+        let &i = queues[s].front()?;
+        let p = &plan.order[i];
+        let mut ready = submit[i].max(prev_end[s]);
+        for &e in &p.wait_events {
+            match event_time[e] {
+                Some(t) => ready = ready.max(t),
+                None => return Some(Err(e)),
+            }
+        }
+        Some(Ok(ready))
+    };
+    let enqueue_head = |s: usize,
+                            heap: &mut BinaryHeap<Reverse<(u64, usize)>>,
+                            blocked_on: &mut Vec<Vec<usize>>,
+                            queues: &[std::collections::VecDeque<usize>],
+                            prev_end: &[f64],
+                            event_time: &[Option<f64>]| {
+        match ready_of(s, queues, prev_end, event_time, &submit) {
+            Some(Ok(t)) => heap.push(Reverse((t.to_bits(), s))),
+            Some(Err(e)) => blocked_on[e].push(s),
+            None => {}
+        }
+    };
+    for s in 0..n_streams {
+        enqueue_head(s, &mut heap, &mut blocked_on, &queues, &prev_end, &event_time);
+    }
+
+    while remaining > 0 {
+        let Some(Reverse((bits, s))) = heap.pop() else {
+            panic!("no eligible task: launch plan is unsafe or submission order non-topological");
+        };
+        // Lazy revalidation: the head may have advanced or its ready time
+        // may have grown since the entry was pushed.
+        let ready = match ready_of(s, &queues, &prev_end, &event_time, &submit) {
+            Some(Ok(t)) => t,
+            Some(Err(e)) => {
+                blocked_on[e].push(s);
+                continue;
+            }
+            None => continue, // stream drained by a fresher entry
+        };
+        if ready.to_bits() != bits {
+            heap.push(Reverse((ready.to_bits(), s)));
+            continue;
+        }
+        let i = queues[s].pop_front().unwrap();
+        remaining -= 1;
+        let p = &plan.order[i];
+        let cost = &cfg.costs[p.node];
+
+        // Find the earliest start ≥ ready with enough free SMs, after the
+        // device front-end has dispatched every earlier kernel launch.
+        // Demand is clamped to the device (kernel_cost already clamps;
+        // hand-built costs in tests may not).
+        let sm_demand = cost.sm_demand.min(cfg.device.sm_count);
+        let mut start = ready;
+        if sm_demand > 0 {
+            start = start.max(front_clock);
+            loop {
+                let used: usize = running
+                    .iter()
+                    .filter(|&&(end, _)| end > start)
+                    .map(|&(_, sm)| sm)
+                    .sum();
+                if cfg.device.sm_count.saturating_sub(used) >= sm_demand {
+                    break;
+                }
+                // advance to the next completion after `start`
+                let next = running
+                    .iter()
+                    .map(|&(end, _)| end)
+                    .filter(|&end| end > start)
+                    .fold(f64::INFINITY, f64::min);
+                assert!(next.is_finite(), "SM demand can never be satisfied");
+                start = next;
+            }
+        }
+        let end = start + cost.duration_s;
+        if sm_demand > 0 {
+            front_clock = start + cfg.device.front_end_s;
+            running.push((end, sm_demand));
+            // Garbage-collect long-finished tasks to keep the scan short.
+            if running.len() > 256 {
+                running.retain(|&(e, _)| e > start);
+            }
+        }
+        prev_end[s] = end;
+        for &e in &p.record_events {
+            event_time[e] = Some(end);
+            // Wake heads parked on this event.
+            for w in std::mem::take(&mut blocked_on[e]) {
+                enqueue_head(w, &mut heap, &mut blocked_on, &queues, &prev_end, &event_time);
+            }
+        }
+        spans.push(TaskSpan { node: p.node, stream: s, submit_s: submit[i], start_s: start, end_s: end });
+        // This stream's next head becomes schedulable.
+        enqueue_head(s, &mut heap, &mut blocked_on, &queues, &prev_end, &event_time);
+    }
+
+    let gpu_active_s = super::metrics::interval_union(
+        spans.iter().filter(|sp| sp.duration() > 0.0).map(|sp| (sp.start_s, sp.end_s)),
+    );
+    let device_end = spans.iter().map(|sp| sp.end_s).fold(0.0, f64::max);
+    SimResult { spans, total_s: device_end.max(host_s), host_s, gpu_active_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matching::MatchingAlgo;
+    use crate::ops::GraphBuilder;
+    use crate::sim::cost::kernel_cost;
+    use crate::stream::rewrite::{rewrite, rewrite_single_stream};
+
+    /// Two independent convs then a join — the paper's A/B/C example.
+    /// Sized so each conv needs ~13 of 80 SMs: true concurrency is possible.
+    fn branchy() -> crate::ops::OpGraph {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 32, 28, 28]);
+        let a = b.conv(x, 32, 3, 1);
+        let c = b.conv(x, 32, 3, 1);
+        let _ = b.add(a, c);
+        b.finish()
+    }
+
+    fn costs(g: &crate::ops::OpGraph, dev: &GpuSpec) -> Vec<KernelCost> {
+        (0..g.n_nodes()).map(|v| kernel_cost(g.node(v), dev)).collect()
+    }
+
+    #[test]
+    fn tasks_respect_dependencies() {
+        let g = branchy();
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let r = simulate(&SimConfig {
+            plan: &plan,
+            costs: &cs,
+            host: HostProfile::pytorch(),
+            device: dev,
+        });
+        let span = |n: usize| r.spans.iter().find(|s| s.node == n).unwrap();
+        // add (node 3) starts after both convs end
+        assert!(span(3).start_s >= span(1).end_s - 1e-12);
+        assert!(span(3).start_s >= span(2).end_s - 1e-12);
+    }
+
+    #[test]
+    fn multi_stream_overlaps_when_overhead_is_low() {
+        let g = branchy();
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        assert_eq!(plan.n_streams, 2);
+        let r = simulate(&SimConfig {
+            plan: &plan,
+            costs: &cs,
+            host: HostProfile::nimble(),
+            device: dev,
+        });
+        let (a, b) = (
+            r.spans.iter().find(|s| s.node == 1).unwrap(),
+            r.spans.iter().find(|s| s.node == 2).unwrap(),
+        );
+        // the two convs overlap in time
+        let overlap = a.end_s.min(b.end_s) - a.start_s.max(b.start_s);
+        assert!(overlap > 0.0, "convs did not overlap: {a:?} {b:?}");
+    }
+
+    #[test]
+    fn figure3_effect_high_overhead_serializes_streams() {
+        // Same two-stream plan, but PyTorch-level scheduling overhead: the
+        // second conv is submitted so late the first already finished.
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 16, 8, 8]); // tiny kernels (short durations)
+        let a = b.conv(x, 16, 3, 1);
+        let c = b.conv(x, 16, 3, 1);
+        let _ = b.add(a, c);
+        let g = b.finish();
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let r = simulate(&SimConfig {
+            plan: &plan,
+            costs: &cs,
+            host: HostProfile::pytorch(),
+            device: dev,
+        });
+        let (s1, s2) = (
+            r.spans.iter().find(|s| s.node == 1).unwrap(),
+            r.spans.iter().find(|s| s.node == 2).unwrap(),
+        );
+        let overlap = s1.end_s.min(s2.end_s) - s1.start_s.max(s2.start_s);
+        assert!(overlap <= 0.0, "high overhead should kill overlap");
+    }
+
+    #[test]
+    fn single_stream_never_overlaps() {
+        let g = branchy();
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite_single_stream(&g);
+        let r = simulate(&SimConfig {
+            plan: &plan,
+            costs: &cs,
+            host: HostProfile::nimble(),
+            device: dev,
+        });
+        let mut spans: Vec<_> = r.spans.iter().filter(|s| s.duration() > 0.0).collect();
+        spans.sort_by(|a, b| a.start_s.partial_cmp(&b.start_s).unwrap());
+        for w in spans.windows(2) {
+            assert!(w[1].start_s >= w[0].end_s - 1e-12);
+        }
+    }
+
+    #[test]
+    fn sm_capacity_limits_overlap() {
+        // Two huge kernels on different streams: each demands all SMs, so
+        // they must serialize even with zero host overhead.
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 256, 112, 112]);
+        let a = b.conv(x, 256, 3, 1);
+        let c = b.conv(x, 256, 3, 1);
+        let _ = b.add(a, c);
+        let g = b.finish();
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        assert_eq!(cs[1].sm_demand, dev.sm_count);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let r = simulate(&SimConfig {
+            plan: &plan,
+            costs: &cs,
+            host: HostProfile::nimble(),
+            device: dev,
+        });
+        let (s1, s2) = (
+            r.spans.iter().find(|s| s.node == 1).unwrap(),
+            r.spans.iter().find(|s| s.node == 2).unwrap(),
+        );
+        let overlap = s1.end_s.min(s2.end_s) - s1.start_s.max(s2.start_s);
+        assert!(overlap <= 1e-12, "SM-saturating kernels must serialize");
+    }
+
+    #[test]
+    fn lower_overhead_means_lower_latency() {
+        let g = crate::models::build("mini_inception", 1);
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite_single_stream(&g);
+        let run = |host: HostProfile| {
+            simulate(&SimConfig { plan: &plan, costs: &cs, host, device: dev.clone() }).total_s
+        };
+        let pt = run(HostProfile::pytorch());
+        let nb = run(HostProfile::nimble());
+        assert!(pt > 1.5 * nb, "pytorch {pt} vs nimble {nb}");
+    }
+
+    #[test]
+    fn active_ratio_between_zero_and_one() {
+        let g = crate::models::build("mini_inception", 1);
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let r = simulate(&SimConfig {
+            plan: &plan,
+            costs: &cs,
+            host: HostProfile::pytorch(),
+            device: dev,
+        });
+        assert!(r.active_ratio() > 0.0 && r.active_ratio() <= 1.0);
+    }
+}

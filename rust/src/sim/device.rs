@@ -1,0 +1,104 @@
+//! GPU device models. Specs follow the public datasheets of the three GPUs
+//! in the paper's evaluation (§5 and Appendix C), plus an idealized
+//! infinitely-parallel device used for the Fig. 2c critical-path analysis.
+
+/// A simulated GPU.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Peak fp32 throughput in TFLOP/s.
+    pub peak_tflops: f64,
+    /// Memory bandwidth in GB/s.
+    pub mem_bw_gbps: f64,
+    /// Streaming multiprocessor count (bounds kernel overlap).
+    pub sm_count: usize,
+    /// Resident threads per SM (occupancy model).
+    pub threads_per_sm: usize,
+    /// Fixed device-side cost per kernel (scheduling on the GPU itself,
+    /// not host overhead), seconds.
+    pub kernel_fixed_s: f64,
+    /// Serial per-kernel cost at the device's work distributor (the GPU
+    /// front-end dispatches kernel launches one at a time, across ALL
+    /// streams). This is what caps multi-stream speedups for launch-bound
+    /// networks — the Table 1 ceiling.
+    pub front_end_s: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA V100 (the paper's §5 testbed).
+    pub fn v100() -> Self {
+        GpuSpec {
+            name: "V100",
+            peak_tflops: 15.7,
+            mem_bw_gbps: 900.0,
+            sm_count: 80,
+            threads_per_sm: 2048,
+            kernel_fixed_s: 1.2e-6,
+            front_end_s: 1.5e-6,
+        }
+    }
+
+    /// NVIDIA Titan RTX (Appendix C, Turing).
+    pub fn titan_rtx() -> Self {
+        GpuSpec {
+            name: "TitanRTX",
+            peak_tflops: 16.3,
+            mem_bw_gbps: 672.0,
+            sm_count: 72,
+            threads_per_sm: 1024,
+            kernel_fixed_s: 1.2e-6,
+            front_end_s: 1.5e-6,
+        }
+    }
+
+    /// NVIDIA Titan Xp (Appendix C, Pascal).
+    pub fn titan_xp() -> Self {
+        GpuSpec {
+            name: "TitanXp",
+            peak_tflops: 12.1,
+            mem_bw_gbps: 548.0,
+            sm_count: 60,
+            threads_per_sm: 2048,
+            kernel_fixed_s: 1.5e-6,
+            front_end_s: 1.8e-6,
+        }
+    }
+
+    /// Idealized device: unbounded parallelism, V100 per-kernel speed.
+    /// Used for the Fig. 2c "sufficiently powerful GPU" thought experiment.
+    pub fn infinite() -> Self {
+        GpuSpec { name: "Infinite", sm_count: usize::MAX / 2, front_end_s: 0.0, ..Self::v100() }
+    }
+
+    /// All concrete devices.
+    pub fn all() -> Vec<GpuSpec> {
+        vec![Self::v100(), Self::titan_rtx(), Self::titan_xp()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_are_sane() {
+        for d in GpuSpec::all() {
+            assert!(d.peak_tflops > 1.0 && d.peak_tflops < 100.0);
+            assert!(d.mem_bw_gbps > 100.0);
+            assert!(d.sm_count >= 32);
+            assert!(d.kernel_fixed_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn v100_fastest_memory() {
+        let v = GpuSpec::v100();
+        assert!(v.mem_bw_gbps > GpuSpec::titan_rtx().mem_bw_gbps);
+        assert!(v.mem_bw_gbps > GpuSpec::titan_xp().mem_bw_gbps);
+    }
+
+    #[test]
+    fn infinite_device_has_huge_sm_pool() {
+        assert!(GpuSpec::infinite().sm_count > 1_000_000);
+    }
+}

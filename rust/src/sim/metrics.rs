@@ -1,0 +1,114 @@
+//! Timeline metrics: interval union (GPU active time, Fig. 2a) and the
+//! critical-path time of an operator graph (Fig. 2c).
+
+use super::cost::KernelCost;
+use crate::graph::Dag;
+
+/// Total length of the union of (possibly overlapping) intervals.
+pub fn interval_union(intervals: impl Iterator<Item = (f64, f64)>) -> f64 {
+    let mut iv: Vec<(f64, f64)> = intervals.collect();
+    iv.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("NaN interval"));
+    let mut total = 0.0;
+    let mut cur: Option<(f64, f64)> = None;
+    for (s, e) in iv {
+        match cur {
+            None => cur = Some((s, e)),
+            Some((cs, ce)) => {
+                if s <= ce {
+                    cur = Some((cs, ce.max(e)));
+                } else {
+                    total += ce - cs;
+                    cur = Some((s, e));
+                }
+            }
+        }
+    }
+    if let Some((cs, ce)) = cur {
+        total += ce - cs;
+    }
+    total
+}
+
+/// Critical-path time: the longest path through the DAG weighting each node
+/// by its kernel duration ("sum of the GPU active times spent on the
+/// operators in the longest path", paper §3).
+pub fn critical_path_s<N>(g: &Dag<N>, costs: &[KernelCost]) -> f64 {
+    let order = crate::graph::topo_order(g).expect("critical path requires a DAG");
+    let mut finish = vec![0.0f64; g.n_nodes()];
+    for &v in &order {
+        let start = g
+            .predecessors(v)
+            .iter()
+            .map(|&p| finish[p])
+            .fold(0.0, f64::max);
+        finish[v] = start + costs[v].duration_s;
+    }
+    finish.into_iter().fold(0.0, f64::max)
+}
+
+/// Sum of all kernel durations (serial lower bound; Fig. 2c denominator is
+/// the GPU *active* time which equals this on a single stream).
+pub fn total_kernel_s(costs: &[KernelCost]) -> f64 {
+    costs.iter().map(|c| c.duration_s).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Dag;
+
+    #[test]
+    fn union_of_disjoint() {
+        let u = interval_union(vec![(0.0, 1.0), (2.0, 3.0)].into_iter());
+        assert!((u - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn union_of_overlapping() {
+        let u = interval_union(vec![(0.0, 2.0), (1.0, 3.0), (2.5, 2.7)].into_iter());
+        assert!((u - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn union_empty() {
+        assert_eq!(interval_union(std::iter::empty()), 0.0);
+    }
+
+    #[test]
+    fn union_nested() {
+        let u = interval_union(vec![(0.0, 10.0), (2.0, 3.0)].into_iter());
+        assert!((u - 10.0).abs() < 1e-12);
+    }
+
+    fn cost(d: f64) -> KernelCost {
+        KernelCost { duration_s: d, sm_demand: 1 }
+    }
+
+    #[test]
+    fn critical_path_of_diamond() {
+        let mut g: Dag<()> = Dag::new();
+        for _ in 0..4 {
+            g.add_node(());
+        }
+        g.add_edge(0, 1);
+        g.add_edge(0, 2);
+        g.add_edge(1, 3);
+        g.add_edge(2, 3);
+        let costs = vec![cost(1.0), cost(5.0), cost(2.0), cost(1.0)];
+        // longest path: 0 →1→ 3 = 1 + 5 + 1
+        assert!((critical_path_s(&g, &costs) - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn critical_path_le_total() {
+        let mut g: Dag<()> = Dag::new();
+        for _ in 0..3 {
+            g.add_node(());
+        }
+        g.add_edge(0, 1);
+        let costs = vec![cost(1.0), cost(2.0), cost(4.0)];
+        let cp = critical_path_s(&g, &costs);
+        assert!((cp - 4.0).abs() < 1e-12, "independent node 2 is the longest chain");
+        assert!(cp <= total_kernel_s(&costs));
+    }
+}

@@ -1,0 +1,21 @@
+//! VGPU: a discrete-event simulator of a multi-stream GPU plus the host
+//! scheduling loop of a DL framework.
+//!
+//! This is the substrate substitution documented in DESIGN.md — the paper's
+//! V100/CUDA testbed replaced by a device model + DES that reproduces the
+//! *scheduling-level* quantities the paper measures: per-task host overhead
+//! gating submission (Fig. 3), stream FIFO semantics, event-based
+//! cross-stream synchronization, SM-capacity-bounded kernel overlap, GPU
+//! active time (Fig. 2a), and critical-path time (Fig. 2c).
+
+pub mod cost;
+pub mod des;
+pub mod device;
+pub mod framework;
+pub mod metrics;
+pub mod trace;
+
+pub use cost::{kernel_cost, KernelCost};
+pub use des::{simulate, SimConfig, SimResult, TaskSpan};
+pub use device::GpuSpec;
+pub use framework::HostProfile;

@@ -1,0 +1,242 @@
+//! Algorithm 1: stream assignment with maximum logical concurrency and the
+//! minimum number of synchronizations.
+//!
+//! Steps (paper §4.2):
+//!   1. MEG `G' = (V, E')` of the computation graph `G`.
+//!   2. Bipartite graph `B = (V₁, V₂, E_B)` with `(xᵢ, yⱼ) ∈ E_B ⇔ (vᵢ, vⱼ) ∈ E'`.
+//!   3. Maximum matching `M` of `B`.
+//!   4. Union-find over matched pairs → partition of `V` into chains.
+//!   5. One stream per chain.
+//!
+//! The partition produced in Step 4 is a minimum *path cover* of the MEG:
+//! each set is a path (chain) in `G'`, so all nodes in a set are pairwise
+//! comparable (max logical concurrency, Theorem 2), and the number of
+//! cross-stream MEG edges is `|E'| − |M|`, the provable minimum (Theorem 3).
+
+use crate::graph::{minimum_equivalent_graph_with, Dag, NodeId, Reachability};
+use crate::matching::{maximum_matching, BipartiteGraph, MatchingAlgo};
+
+/// Result of Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct StreamAssignment {
+    /// `stream_of[v]` = stream id of node `v`; ids are dense `0..n_streams`.
+    pub stream_of: Vec<usize>,
+    /// Number of distinct streams (`|V| − |M|`).
+    pub n_streams: usize,
+    /// The MEG the assignment was derived from (needed by the sync planner).
+    pub meg: Dag<()>,
+    /// Matching cardinality `|M|` (for the `|E'| − |M|` sync bound).
+    pub matching_size: usize,
+}
+
+impl StreamAssignment {
+    /// Nodes grouped by stream, each group in ascending node order.
+    pub fn streams(&self) -> Vec<Vec<NodeId>> {
+        let mut groups = vec![Vec::new(); self.n_streams];
+        for (v, &s) in self.stream_of.iter().enumerate() {
+            groups[s].push(v);
+        }
+        groups
+    }
+
+    /// The guaranteed-minimum number of synchronizations, `|E'| − |M|`.
+    pub fn min_syncs(&self) -> usize {
+        self.meg.n_edges() - self.matching_size
+    }
+}
+
+/// Run Algorithm 1 on a computation graph.
+pub fn assign_streams<N>(g: &Dag<N>, algo: MatchingAlgo) -> StreamAssignment {
+    let reach = Reachability::compute(g);
+    assign_streams_with(g, &reach, algo)
+}
+
+/// Run Algorithm 1 reusing a precomputed transitive closure.
+pub fn assign_streams_with<N>(
+    g: &Dag<N>,
+    reach: &Reachability,
+    algo: MatchingAlgo,
+) -> StreamAssignment {
+    let n = g.n_nodes();
+    // Step 1: minimum equivalent graph.
+    let meg = minimum_equivalent_graph_with(g, reach);
+    // Step 2: bipartite graph from MEG edges.
+    let b = BipartiteGraph::from_dag_edges(n, &meg.edges());
+    // Step 3: maximum matching.
+    let m = maximum_matching(&b, algo);
+    // Step 4: union matched pairs (union-find).
+    let mut uf = UnionFind::new(n);
+    for (l, r) in m.edges() {
+        uf.union(l, r);
+    }
+    // Step 5: dense stream ids per set.
+    let mut stream_of = vec![usize::MAX; n];
+    let mut next = 0usize;
+    let mut root_to_stream = vec![usize::MAX; n];
+    for v in 0..n {
+        let root = uf.find(v);
+        if root_to_stream[root] == usize::MAX {
+            root_to_stream[root] = next;
+            next += 1;
+        }
+        stream_of[v] = root_to_stream[root];
+    }
+    StreamAssignment { stream_of, n_streams: next, meg, matching_size: m.cardinality() }
+}
+
+/// Path-compressed, rank-unioned union-find.
+struct UnionFind {
+    parent: Vec<usize>,
+    rank: Vec<u8>,
+}
+
+impl UnionFind {
+    fn new(n: usize) -> Self {
+        UnionFind { parent: (0..n).collect(), rank: vec![0; n] }
+    }
+
+    fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] != x {
+            self.parent[x] = self.parent[self.parent[x]]; // halving
+            x = self.parent[x];
+        }
+        x
+    }
+
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return;
+        }
+        match self.rank[ra].cmp(&self.rank[rb]) {
+            std::cmp::Ordering::Less => self.parent[ra] = rb,
+            std::cmp::Ordering::Greater => self.parent[rb] = ra,
+            std::cmp::Ordering::Equal => {
+                self.parent[rb] = ra;
+                self.rank[ra] += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{layered_dag, random_dag};
+    use crate::stream::verify::satisfies_max_logical_concurrency;
+    use crate::util::Pcg32;
+
+    /// The paper's Figure 6 walk-through graph:
+    /// v1→v2, v1→v3, v2→v4, v3→v4, v4→v5, v4→v6 (0-indexed here).
+    fn figure6() -> Dag<()> {
+        let mut g = Dag::new();
+        for _ in 0..6 {
+            g.add_node(());
+        }
+        g.add_edge(0, 1);
+        g.add_edge(0, 2);
+        g.add_edge(1, 3);
+        g.add_edge(2, 3);
+        g.add_edge(3, 4);
+        g.add_edge(3, 5);
+        g
+    }
+
+    #[test]
+    fn figure6_walkthrough() {
+        let g = figure6();
+        let a = assign_streams(&g, MatchingAlgo::HopcroftKarp);
+        // MEG == G (already minimal); |E'| = 6, max matching = 3
+        assert_eq!(a.meg.n_edges(), 6);
+        assert_eq!(a.matching_size, 3);
+        // 6 nodes − 3 matched pairs = 3 streams, 3 syncs.
+        assert_eq!(a.n_streams, 3);
+        assert_eq!(a.min_syncs(), 3);
+        // Independent pairs on distinct streams:
+        assert_ne!(a.stream_of[1], a.stream_of[2]);
+        assert_ne!(a.stream_of[4], a.stream_of[5]);
+    }
+
+    #[test]
+    fn chain_uses_one_stream_no_syncs() {
+        let mut g: Dag<()> = Dag::new();
+        for _ in 0..8 {
+            g.add_node(());
+        }
+        for i in 0..7 {
+            g.add_edge(i, i + 1);
+        }
+        let a = assign_streams(&g, MatchingAlgo::HopcroftKarp);
+        assert_eq!(a.n_streams, 1);
+        assert_eq!(a.min_syncs(), 0);
+    }
+
+    #[test]
+    fn fully_independent_nodes_all_distinct_streams() {
+        let mut g: Dag<()> = Dag::new();
+        for _ in 0..5 {
+            g.add_node(());
+        }
+        let a = assign_streams(&g, MatchingAlgo::HopcroftKarp);
+        assert_eq!(a.n_streams, 5);
+        assert_eq!(a.min_syncs(), 0);
+        let mut s = a.stream_of.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn streams_partition_into_chains() {
+        // Every stream's node set must be totally ordered by reachability.
+        let mut rng = Pcg32::new(77);
+        for _ in 0..20 {
+            let g = random_dag(&mut rng, 30, 0.12);
+            let a = assign_streams(&g, MatchingAlgo::HopcroftKarp);
+            let reach = crate::graph::Reachability::compute(&g);
+            for group in a.streams() {
+                for i in 0..group.len() {
+                    for j in (i + 1)..group.len() {
+                        assert!(
+                            reach.comparable(group[i], group[j]),
+                            "stream contains independent nodes {} {}",
+                            group[i],
+                            group[j]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn max_logical_concurrency_on_layered_graphs() {
+        let mut rng = Pcg32::new(99);
+        for _ in 0..15 {
+            let g = layered_dag(&mut rng, 4, 5, 3);
+            for algo in [MatchingAlgo::HopcroftKarp, MatchingAlgo::FordFulkerson] {
+                let a = assign_streams(&g, algo);
+                assert!(satisfies_max_logical_concurrency(&g, &a.stream_of));
+            }
+        }
+    }
+
+    #[test]
+    fn both_algorithms_agree_on_stream_count() {
+        let mut rng = Pcg32::new(1234);
+        for _ in 0..20 {
+            let g = random_dag(&mut rng, 25, 0.15);
+            let hk = assign_streams(&g, MatchingAlgo::HopcroftKarp);
+            let ff = assign_streams(&g, MatchingAlgo::FordFulkerson);
+            assert_eq!(hk.n_streams, ff.n_streams);
+            assert_eq!(hk.min_syncs(), ff.min_syncs());
+        }
+    }
+
+    #[test]
+    fn stream_count_is_nodes_minus_matching() {
+        let g = figure6();
+        let a = assign_streams(&g, MatchingAlgo::FordFulkerson);
+        assert_eq!(a.n_streams, g.n_nodes() - a.matching_size);
+    }
+}

@@ -1,0 +1,20 @@
+//! Stream assignment — the paper's §4.2.
+//!
+//! Pipeline: MEG (graph/meg) → bipartite graph → maximum matching
+//! (matching/) → chain partition → stream assignment (`assign`), then the
+//! synchronization plan (`sync`, exactly `|E'| − |M|` syncs by Theorem 3),
+//! the launch-plan rewriter (`rewrite`, the paper's Graph Rewriter), the
+//! max-logical-concurrency verifier (`verify`, Theorems 1–4 checked
+//! mechanically), and the degree of logical concurrency (`width`, the
+//! "Deg." column of Table 1).
+
+pub mod assign;
+pub mod rewrite;
+pub mod sync;
+pub mod verify;
+pub mod width;
+
+pub use assign::{assign_streams, StreamAssignment};
+pub use rewrite::{rewrite, LaunchPlan, NodePlan};
+pub use sync::{plan_syncs, SyncPlan};
+pub use width::logical_concurrency_degree;

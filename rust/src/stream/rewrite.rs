@@ -1,0 +1,172 @@
+//! Graph Rewriter (paper §4, Figure 4): turn a computation graph plus a
+//! stream assignment and sync plan into a **launch plan** — the per-node
+//! stream id, the events to wait on before launch, and the events to record
+//! after completion, in a deterministic submission order.
+//!
+//! The paper implements this by inserting custom sync nodes into the
+//! TorchScript graph; here the rewrite is the explicit launch plan the AoT
+//! scheduler pre-runs and the replay engine executes. The information
+//! content is identical (task → stream, plus event record/wait routines).
+
+use super::assign::StreamAssignment;
+use super::sync::{plan_syncs, SyncPlan};
+use crate::graph::{topo_order, Dag, NodeId};
+use crate::matching::MatchingAlgo;
+
+/// Per-node launch directives.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodePlan {
+    pub node: NodeId,
+    /// Stream the node's GPU tasks are issued on.
+    pub stream: usize,
+    /// Events that must be waited on (cudaStreamWaitEvent) before launch.
+    pub wait_events: Vec<usize>,
+    /// Events recorded on this node's stream right after its tasks.
+    pub record_events: Vec<usize>,
+}
+
+/// The rewritten graph: submission order + per-node directives + totals.
+#[derive(Debug, Clone)]
+pub struct LaunchPlan {
+    /// Node plans in submission order (a topological order of the graph).
+    pub order: Vec<NodePlan>,
+    pub n_streams: usize,
+    pub n_events: usize,
+    /// The assignment it was built from (kept for reporting/figures).
+    pub stream_of: Vec<usize>,
+}
+
+impl LaunchPlan {
+    /// Directive for a node id (linear scan; plans are built once).
+    pub fn plan_for(&self, node: NodeId) -> Option<&NodePlan> {
+        self.order.iter().find(|p| p.node == node)
+    }
+
+    /// Total number of cross-stream synchronizations.
+    pub fn n_syncs(&self) -> usize {
+        self.n_events
+    }
+}
+
+/// Rewrite with multi-stream execution (the full Algorithm 1 pipeline).
+pub fn rewrite<N>(g: &Dag<N>, algo: MatchingAlgo) -> LaunchPlan {
+    let assignment = crate::stream::assign::assign_streams(g, algo);
+    rewrite_with(g, &assignment)
+}
+
+/// Rewrite with a precomputed assignment.
+pub fn rewrite_with<N>(g: &Dag<N>, assignment: &StreamAssignment) -> LaunchPlan {
+    let syncs = plan_syncs(assignment);
+    build_plan(g, &assignment.stream_of, assignment.n_streams, &syncs)
+}
+
+/// Rewrite forcing everything onto a single stream (the paper's
+/// single-stream Nimble used as the Table 1 baseline). No syncs needed.
+pub fn rewrite_single_stream<N>(g: &Dag<N>) -> LaunchPlan {
+    let stream_of = vec![0usize; g.n_nodes()];
+    build_plan(g, &stream_of, 1, &SyncPlan::default())
+}
+
+fn build_plan<N>(
+    g: &Dag<N>,
+    stream_of: &[usize],
+    n_streams: usize,
+    syncs: &SyncPlan,
+) -> LaunchPlan {
+    let order = topo_order(g).expect("rewrite requires a DAG");
+    let plans = order
+        .iter()
+        .map(|&v| NodePlan {
+            node: v,
+            stream: stream_of[v],
+            wait_events: syncs.waits_before(v),
+            record_events: syncs.records_after(v),
+        })
+        .collect();
+    LaunchPlan {
+        order: plans,
+        n_streams,
+        n_events: syncs.n_syncs(),
+        stream_of: stream_of.to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::layered_dag;
+    use crate::stream::sync::plan_is_safe;
+    use crate::util::Pcg32;
+
+    fn diamond() -> Dag<()> {
+        let mut g = Dag::new();
+        for _ in 0..4 {
+            g.add_node(());
+        }
+        g.add_edge(0, 1);
+        g.add_edge(0, 2);
+        g.add_edge(1, 3);
+        g.add_edge(2, 3);
+        g
+    }
+
+    #[test]
+    fn diamond_plan_has_two_streams_two_syncs() {
+        let g = diamond();
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        assert_eq!(plan.n_streams, 2);
+        assert_eq!(plan.n_events, 2);
+        // every wait event is recorded by exactly one other node
+        for p in &plan.order {
+            for &e in &p.wait_events {
+                let recorders: Vec<_> = plan
+                    .order
+                    .iter()
+                    .filter(|q| q.record_events.contains(&e))
+                    .collect();
+                assert_eq!(recorders.len(), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn submission_order_is_topological() {
+        let mut rng = Pcg32::new(5);
+        let g = layered_dag(&mut rng, 3, 4, 2);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let pos: std::collections::HashMap<_, _> =
+            plan.order.iter().enumerate().map(|(i, p)| (p.node, i)).collect();
+        for (u, v) in g.edges() {
+            assert!(pos[&u] < pos[&v], "edge ({u},{v}) violates submission order");
+        }
+    }
+
+    #[test]
+    fn single_stream_plan_has_no_events() {
+        let g = diamond();
+        let plan = rewrite_single_stream(&g);
+        assert_eq!(plan.n_streams, 1);
+        assert_eq!(plan.n_events, 0);
+        assert!(plan.order.iter().all(|p| p.stream == 0));
+    }
+
+    #[test]
+    fn plan_events_form_safe_sync_plan() {
+        let mut rng = Pcg32::new(17);
+        for _ in 0..10 {
+            let g = layered_dag(&mut rng, 4, 4, 2);
+            let a = crate::stream::assign::assign_streams(&g, MatchingAlgo::HopcroftKarp);
+            let syncs = plan_syncs(&a);
+            let order: Vec<_> = rewrite_with(&g, &a).order.iter().map(|p| p.node).collect();
+            assert!(plan_is_safe(&g, &a.stream_of, &order, &syncs));
+        }
+    }
+
+    #[test]
+    fn plan_for_lookup() {
+        let g = diamond();
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        assert_eq!(plan.plan_for(0).unwrap().node, 0);
+        assert!(plan.plan_for(99).is_none());
+    }
+}

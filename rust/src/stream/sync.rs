@@ -1,0 +1,195 @@
+//! Synchronization planning (Theorem 3): given a stream assignment derived
+//! from the MEG, the safe plan with the minimum number of synchronizations
+//! performs one event-sync on every MEG edge whose endpoints live on
+//! different streams — `|E'| − |M|` edges in total.
+//!
+//! A synchronization on edge `(u, v)` means: record an event after task `u`
+//! on stream `f(u)`, and make stream `f(v)` wait on that event before task
+//! `v` (the paper's `cudaStreamWaitEvent` pattern).
+
+use super::assign::StreamAssignment;
+use crate::graph::{Dag, NodeId};
+
+/// One cross-stream synchronization: record after `src`, wait before `dst`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Sync {
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Dense event id (one per sync).
+    pub event: usize,
+}
+
+/// The synchronization plan Λ.
+#[derive(Debug, Clone, Default)]
+pub struct SyncPlan {
+    pub syncs: Vec<Sync>,
+}
+
+impl SyncPlan {
+    pub fn n_syncs(&self) -> usize {
+        self.syncs.len()
+    }
+
+    /// Events to wait on before launching `v`.
+    pub fn waits_before(&self, v: NodeId) -> Vec<usize> {
+        self.syncs.iter().filter(|s| s.dst == v).map(|s| s.event).collect()
+    }
+
+    /// Events to record after `u` completes.
+    pub fn records_after(&self, u: NodeId) -> Vec<usize> {
+        self.syncs.iter().filter(|s| s.src == u).map(|s| s.event).collect()
+    }
+}
+
+/// Build the minimum safe synchronization plan for an assignment.
+pub fn plan_syncs(assignment: &StreamAssignment) -> SyncPlan {
+    let mut syncs = Vec::new();
+    for (u, v) in assignment.meg.edges() {
+        if assignment.stream_of[u] != assignment.stream_of[v] {
+            let event = syncs.len();
+            syncs.push(Sync { src: u, dst: v, event });
+        }
+    }
+    SyncPlan { syncs }
+}
+
+/// Check the *operational* safety of a plan: build the "guarantee graph" H
+/// whose edges are (a) consecutive same-stream tasks in submission order
+/// (stream-FIFO ordering) and (b) the sync edges, and verify every original
+/// dependency edge is realized by a path in H. This is strictly stronger
+/// than the paper's Definition 2 and matches what the replay engine relies
+/// on at run time.
+pub fn plan_is_safe<N>(
+    g: &Dag<N>,
+    stream_of: &[usize],
+    submission_order: &[NodeId],
+    plan: &SyncPlan,
+) -> bool {
+    let n = g.n_nodes();
+    let mut h: Dag<()> = Dag::new();
+    for _ in 0..n {
+        h.add_node(());
+    }
+    // (a) stream FIFO edges
+    let n_streams = stream_of.iter().copied().max().map_or(0, |m| m + 1);
+    let mut last_on_stream: Vec<Option<NodeId>> = vec![None; n_streams];
+    for &v in submission_order {
+        let s = stream_of[v];
+        if let Some(prev) = last_on_stream[s] {
+            h.add_edge(prev, v);
+        }
+        last_on_stream[s] = Some(v);
+    }
+    // (b) sync edges
+    for s in &plan.syncs {
+        if s.src != s.dst && !h.has_edge(s.src, s.dst) {
+            h.add_edge(s.src, s.dst);
+        }
+    }
+    if h.validate().is_err() {
+        return false; // a cyclic guarantee graph would deadlock
+    }
+    let reach = crate::graph::Reachability::compute(&h);
+    g.edges().iter().all(|&(u, v)| reach.reaches(u, v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{layered_dag, random_dag};
+    use crate::graph::topo_order;
+    use crate::matching::MatchingAlgo;
+    use crate::stream::assign::assign_streams;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn sync_count_matches_theorem3() {
+        let mut rng = Pcg32::new(42);
+        for _ in 0..25 {
+            let g = random_dag(&mut rng, 30, 0.12);
+            let a = assign_streams(&g, MatchingAlgo::HopcroftKarp);
+            let plan = plan_syncs(&a);
+            assert_eq!(plan.n_syncs(), a.min_syncs(), "|Λ| must equal |E'| − |M|");
+        }
+    }
+
+    #[test]
+    fn plan_is_safe_on_random_and_layered_graphs() {
+        let mut rng = Pcg32::new(7);
+        for i in 0..30 {
+            let g = if i % 2 == 0 {
+                random_dag(&mut rng, 25, 0.15)
+            } else {
+                layered_dag(&mut rng, 3, 4, 3)
+            };
+            let a = assign_streams(&g, MatchingAlgo::HopcroftKarp);
+            let plan = plan_syncs(&a);
+            let order = topo_order(&g).unwrap();
+            assert!(plan_is_safe(&g, &a.stream_of, &order, &plan));
+        }
+    }
+
+    #[test]
+    fn dropping_a_sync_breaks_safety() {
+        // Diamond: 0→1, 0→2, 1→3, 2→3. Streams will be chains, and the two
+        // cross-stream MEG edges both carry syncs; removing one must be
+        // detected as unsafe.
+        let mut g: Dag<()> = Dag::new();
+        for _ in 0..4 {
+            g.add_node(());
+        }
+        g.add_edge(0, 1);
+        g.add_edge(0, 2);
+        g.add_edge(1, 3);
+        g.add_edge(2, 3);
+        let a = assign_streams(&g, MatchingAlgo::HopcroftKarp);
+        let plan = plan_syncs(&a);
+        assert_eq!(plan.n_syncs(), 2);
+        let order = topo_order(&g).unwrap();
+        assert!(plan_is_safe(&g, &a.stream_of, &order, &plan));
+        for drop in 0..plan.n_syncs() {
+            let reduced = SyncPlan {
+                syncs: plan
+                    .syncs
+                    .iter()
+                    .copied()
+                    .filter(|s| s.event != drop)
+                    .collect(),
+            };
+            assert!(
+                !plan_is_safe(&g, &a.stream_of, &order, &reduced),
+                "plan stayed safe after dropping sync {drop}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_stream_needs_no_syncs() {
+        let mut g: Dag<()> = Dag::new();
+        for _ in 0..5 {
+            g.add_node(());
+        }
+        for i in 0..4 {
+            g.add_edge(i, i + 1);
+        }
+        let a = assign_streams(&g, MatchingAlgo::HopcroftKarp);
+        let plan = plan_syncs(&a);
+        assert_eq!(plan.n_syncs(), 0);
+        let order = topo_order(&g).unwrap();
+        assert!(plan_is_safe(&g, &a.stream_of, &order, &plan));
+    }
+
+    #[test]
+    fn waits_and_records_lookup() {
+        let plan = SyncPlan {
+            syncs: vec![
+                Sync { src: 0, dst: 3, event: 0 },
+                Sync { src: 1, dst: 3, event: 1 },
+                Sync { src: 0, dst: 2, event: 2 },
+            ],
+        };
+        assert_eq!(plan.waits_before(3), vec![0, 1]);
+        assert_eq!(plan.records_after(0), vec![0, 2]);
+        assert!(plan.waits_before(0).is_empty());
+    }
+}

@@ -1,0 +1,134 @@
+//! Degree of logical concurrency (Table 1, "Deg." column).
+//!
+//! The paper reports each architecture's *maximum degree of logical
+//! concurrency* — the largest set of pairwise-independent operators, i.e.
+//! the maximum antichain of the operator DAG. By Dilworth's theorem this
+//! equals the minimum number of chains covering V, which by the
+//! Fulkerson reduction is `|V| − |M_closure|` where `M_closure` is a maximum
+//! matching of the bipartite graph built from the *transitive closure*
+//! (contrast Algorithm 1, which matches over the MEG to get a minimum
+//! *path* cover — same machinery, different edge set).
+
+use crate::graph::{Dag, Reachability};
+use crate::matching::{maximum_matching, BipartiteGraph, MatchingAlgo};
+
+/// Maximum-antichain size of the DAG.
+pub fn logical_concurrency_degree<N>(g: &Dag<N>) -> usize {
+    let reach = Reachability::compute(g);
+    logical_concurrency_degree_with(g, &reach)
+}
+
+/// Same, reusing a precomputed closure.
+pub fn logical_concurrency_degree_with<N>(g: &Dag<N>, reach: &Reachability) -> usize {
+    let n = g.n_nodes();
+    if n == 0 {
+        return 0;
+    }
+    let mut b = BipartiteGraph::new(n, n);
+    for u in 0..n {
+        for v in 0..n {
+            if reach.reaches(u, v) {
+                b.add_edge(u, v);
+            }
+        }
+    }
+    let m = maximum_matching(&b, MatchingAlgo::HopcroftKarp);
+    n - m.cardinality()
+}
+
+/// Brute-force maximum antichain for cross-checking (exponential; n ≤ 20).
+pub fn brute_force_width<N>(g: &Dag<N>) -> usize {
+    let n = g.n_nodes();
+    assert!(n <= 20, "brute force width is exponential");
+    let reach = Reachability::compute(g);
+    let mut best = 0usize;
+    for mask in 0u32..(1 << n) {
+        let members: Vec<usize> = (0..n).filter(|&i| mask >> i & 1 == 1).collect();
+        if members.len() <= best {
+            continue;
+        }
+        let antichain = members
+            .iter()
+            .enumerate()
+            .all(|(i, &u)| members[i + 1..].iter().all(|&v| reach.independent(u, v)));
+        if antichain {
+            best = members.len();
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{layered_dag, random_dag};
+    use crate::util::Pcg32;
+
+    #[test]
+    fn chain_has_width_one() {
+        let mut g: Dag<()> = Dag::new();
+        for _ in 0..5 {
+            g.add_node(());
+        }
+        for i in 0..4 {
+            g.add_edge(i, i + 1);
+        }
+        assert_eq!(logical_concurrency_degree(&g), 1);
+    }
+
+    #[test]
+    fn independent_set_has_width_n() {
+        let mut g: Dag<()> = Dag::new();
+        for _ in 0..6 {
+            g.add_node(());
+        }
+        assert_eq!(logical_concurrency_degree(&g), 6);
+    }
+
+    #[test]
+    fn diamond_width_two() {
+        let mut g: Dag<()> = Dag::new();
+        for _ in 0..4 {
+            g.add_node(());
+        }
+        g.add_edge(0, 1);
+        g.add_edge(0, 2);
+        g.add_edge(1, 3);
+        g.add_edge(2, 3);
+        assert_eq!(logical_concurrency_degree(&g), 2);
+    }
+
+    #[test]
+    fn matches_brute_force_on_small_random_graphs() {
+        let mut rng = Pcg32::new(0xACE);
+        for _ in 0..30 {
+            let n = rng.gen_range_inclusive(2, 12);
+            let g = random_dag(&mut rng, n, 0.25);
+            assert_eq!(logical_concurrency_degree(&g), brute_force_width(&g));
+        }
+    }
+
+    #[test]
+    fn width_at_least_max_branch_count_in_layered_graph() {
+        let mut rng = Pcg32::new(0xBEE);
+        let g = layered_dag(&mut rng, 1, 6, 1);
+        // a single block with k branches has width ≥ k (branches are mutually
+        // independent); the generator picked some k in 1..=6
+        let w = logical_concurrency_degree(&g);
+        assert!(w >= 1 && w <= g.n_nodes());
+    }
+
+    #[test]
+    fn width_never_below_stream_chain_bound() {
+        // width (min chain cover) ≤ Algorithm 1's stream count (min PATH
+        // cover of the MEG): a path cover is a chain cover.
+        use crate::matching::MatchingAlgo;
+        use crate::stream::assign::assign_streams;
+        let mut rng = Pcg32::new(0xF00);
+        for _ in 0..20 {
+            let g = random_dag(&mut rng, 18, 0.2);
+            let a = assign_streams(&g, MatchingAlgo::HopcroftKarp);
+            assert!(logical_concurrency_degree(&g) <= a.n_streams);
+        }
+    }
+}

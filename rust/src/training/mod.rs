@@ -1,0 +1,132 @@
+//! Training driver: replay the AOT `train_step` artifact (MLP forward +
+//! backward + SGD fused into one XLA executable by `jax.value_and_grad`)
+//! for a configurable number of steps on synthetic classification data,
+//! logging the loss curve — the end-to-end training validation recorded in
+//! EXPERIMENTS.md.
+//!
+//! Python built the step once; this loop is pure Rust: stage data, execute,
+//! decompose the output tuple, feed the parameters back.
+
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+use crate::runtime::{artifacts_dir, ArtifactRegistry, RuntimeClient};
+use crate::util::stats::{fmt_secs, Summary};
+use crate::util::Pcg32;
+
+/// Result of a training run.
+pub struct TrainingReport {
+    pub steps: usize,
+    /// (step, loss) samples at the logging cadence.
+    pub loss_curve: Vec<(usize, f32)>,
+    pub first_loss: f32,
+    pub final_loss: f32,
+    pub step_time: Summary,
+}
+
+impl TrainingReport {
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "trained {} steps: loss {:.4} → {:.4} ({:.1}% reduction)\n\
+             step time: p50={} mean={}\nloss curve:\n",
+            self.steps,
+            self.first_loss,
+            self.final_loss,
+            (1.0 - self.final_loss / self.first_loss) * 100.0,
+            fmt_secs(self.step_time.median()),
+            fmt_secs(self.step_time.mean()),
+        );
+        for (step, loss) in &self.loss_curve {
+            s.push_str(&format!("  step {step:>5}: {loss:.4}\n"));
+        }
+        s
+    }
+}
+
+/// Run `steps` training steps, logging the loss every `log_every`.
+pub fn run_training(steps: usize, log_every: usize) -> Result<TrainingReport> {
+    let client = RuntimeClient::cpu()?;
+    let registry = ArtifactRegistry::load(client, artifacts_dir())?;
+    run_training_with(&registry, steps, log_every)
+}
+
+/// Same, over an existing registry.
+pub fn run_training_with(
+    registry: &ArtifactRegistry,
+    steps: usize,
+    log_every: usize,
+) -> Result<TrainingReport> {
+    let spec = registry.manifest.train.clone().context("no train artifact in manifest")?;
+    let exe = registry.executable(&spec.artifact)?;
+
+    // Initial parameters (the compile-time init saved by aot.py).
+    let mut params: Vec<xla::PjRtBuffer> = (0..spec.n_params)
+        .map(|i| {
+            let (rel, _) = registry.manifest.weights[&format!("mlp_{i}")].clone();
+            let arr = crate::runtime::npy::read_npy_f32(&artifacts_dir().join(rel))?;
+            registry.client.buffer_f32(&arr.data, &arr.dims)
+        })
+        .collect::<Result<_>>()?;
+
+    // Synthetic separable classification data: class-dependent means.
+    let mut rng = Pcg32::new(2024);
+    let n_batches = 8usize; // cycle through a small synthetic "dataset"
+    let mut data = Vec::with_capacity(n_batches);
+    for _ in 0..n_batches {
+        let mut x = vec![0.0f32; spec.batch * spec.in_dim];
+        let mut y = vec![0.0f32; spec.batch * spec.n_classes];
+        for r in 0..spec.batch {
+            let class = rng.gen_range(spec.n_classes);
+            for c in 0..spec.in_dim {
+                let mean = ((class * 31 + c) % 7) as f32 / 7.0 - 0.5;
+                x[r * spec.in_dim + c] = mean + 0.3 * rng.gen_f32_range(-1.0, 1.0);
+            }
+            y[r * spec.n_classes + class] = 1.0;
+        }
+        let xb = registry.client.buffer_f32(&x, &[spec.batch, spec.in_dim])?;
+        let yb = registry.client.buffer_f32(&y, &[spec.batch, spec.n_classes])?;
+        data.push((xb, yb));
+    }
+
+    let mut loss_curve = Vec::new();
+    let mut first_loss = None;
+    let mut final_loss = 0.0f32;
+    let mut times = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let (xb, yb) = &data[step % n_batches];
+        let t0 = Instant::now();
+        let outs = {
+            let mut args: Vec<&xla::PjRtBuffer> = params.iter().collect();
+            args.push(xb);
+            args.push(yb);
+            exe.execute_b(&args)?
+        };
+        let tuple_lit = outs[0][0].to_literal_sync()?;
+        let mut parts = tuple_lit.to_tuple().context("decomposing train outputs")?;
+        times.push(t0.elapsed());
+        anyhow::ensure!(parts.len() == spec.n_params + 1, "unexpected output arity");
+        let loss_lit = parts.pop().unwrap();
+        final_loss = loss_lit.to_vec::<f32>()?[0];
+        anyhow::ensure!(final_loss.is_finite(), "loss diverged at step {step}");
+        params = parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape()?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let host = lit.to_vec::<f32>()?;
+                registry.client.buffer_f32(&host, &dims)
+            })
+            .collect::<Result<_>>()?;
+        first_loss.get_or_insert(final_loss);
+        if step % log_every == 0 || step + 1 == steps {
+            loss_curve.push((step, final_loss));
+        }
+    }
+    Ok(TrainingReport {
+        steps,
+        loss_curve,
+        first_loss: first_loss.context("no steps run")?,
+        final_loss,
+        step_time: Summary::from_durations(&times),
+    })
+}

@@ -1,0 +1,11 @@
+//! Small self-contained utilities: PRNG, statistics, property-test runner,
+//! table formatting. The build is fully offline (no crates.io), so these
+//! replace `rand`, `criterion`'s stats, and `proptest`.
+
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod table;
+
+pub use prng::Pcg32;
+pub use stats::Summary;

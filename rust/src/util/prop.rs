@@ -1,0 +1,94 @@
+//! Minimal property-test runner (offline replacement for `proptest`).
+//!
+//! A property is a function `Fn(&mut Pcg32) -> Result<(), String>` that draws
+//! arbitrary inputs from the PRNG and returns `Err(reason)` on violation. The
+//! runner executes `cases` iterations with derived seeds; on failure it panics
+//! with the *case seed*, so `check_seed` reproduces the exact failing input.
+
+use super::prng::Pcg32;
+
+/// Run `cases` random cases of `prop`, panicking with the failing seed.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Pcg32) -> Result<(), String>,
+{
+    check_from(name, 0xC0FFEE, cases, prop)
+}
+
+/// Like [`check`] but with an explicit base seed.
+pub fn check_from<F>(name: &str, base_seed: u64, cases: u64, prop: F)
+where
+    F: Fn(&mut Pcg32) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Pcg32::new(seed);
+        if let Err(reason) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed on case {case} (seed {seed:#x}):\n  {reason}\n\
+                 reproduce with util::prop::check_seed(\"{name}\", {seed:#x}, prop)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn check_seed<F>(name: &str, seed: u64, prop: F)
+where
+    F: Fn(&mut Pcg32) -> Result<(), String>,
+{
+    let mut rng = Pcg32::new(seed);
+    if let Err(reason) = prop(&mut rng) {
+        panic!("property `{name}` failed (seed {seed:#x}): {reason}");
+    }
+}
+
+/// Helper: assert-like macro-free equality check inside properties.
+pub fn ensure(cond: bool, msg: impl FnOnce() -> String) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = std::cell::Cell::new(0u64);
+        let counter = &mut count;
+        check("always-true", 50, |rng| {
+            counter.set(counter.get() + 1);
+            let _ = rng.next_u32();
+            Ok(())
+        });
+        assert_eq!(count.get(), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-false` failed")]
+    fn failing_property_panics_with_name() {
+        check("always-false", 10, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn ensure_helper() {
+        assert!(ensure(true, || "x".into()).is_ok());
+        assert_eq!(ensure(false, || "boom".into()), Err("boom".to_string()));
+    }
+
+    #[test]
+    fn seeds_differ_across_cases() {
+        // If all cases used the same seed this property would trivially pass
+        // with identical draws; verify we actually see diversity.
+        let seen = std::cell::RefCell::new(std::collections::HashSet::new());
+        check("seed-diversity", 20, |rng| {
+            seen.borrow_mut().insert(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen.borrow().len(), 20);
+    }
+}

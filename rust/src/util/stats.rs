@@ -1,0 +1,142 @@
+//! Timing statistics for the bench harness and serving metrics
+//! (offline replacement for the parts of criterion/hdrhistogram we need).
+
+use std::time::Duration;
+
+/// Summary statistics over a set of samples (stored in seconds).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    sorted: Vec<f64>,
+    mean: f64,
+}
+
+impl Summary {
+    /// Build a summary from raw `f64` samples (any unit; caller's choice).
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty(), "Summary needs at least one sample");
+        samples.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        Summary { sorted: samples, mean }
+    }
+
+    /// Build a summary from `Duration` samples; values are seconds.
+    pub fn from_durations(durations: &[Duration]) -> Self {
+        Self::from_samples(durations.iter().map(|d| d.as_secs_f64()).collect())
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted[0]
+    }
+
+    pub fn max(&self) -> f64 {
+        *self.sorted.last().unwrap()
+    }
+
+    /// Percentile in `[0, 100]` with linear interpolation between samples.
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p));
+        if self.sorted.len() == 1 {
+            return self.sorted[0];
+        }
+        let rank = p / 100.0 * (self.sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.sorted[lo] * (1.0 - frac) + self.sorted[hi] * frac
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        if self.sorted.len() < 2 {
+            return 0.0;
+        }
+        let var = self
+            .sorted
+            .iter()
+            .map(|x| (x - self.mean) * (x - self.mean))
+            .sum::<f64>()
+            / (self.sorted.len() - 1) as f64;
+        var.sqrt()
+    }
+}
+
+/// Format a duration given in seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_of_known_set() {
+        let s = Summary::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let s = Summary::from_samples(vec![0.0, 10.0]);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+        assert!((s.percentile(50.0) - 5.0).abs() < 1e-12);
+        assert!((s.percentile(99.0) - 9.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stddev_of_constant_is_zero() {
+        let s = Summary::from_samples(vec![2.0; 8]);
+        assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_is_its_own_everything() {
+        let s = Summary::from_samples(vec![7.5]);
+        assert_eq!(s.percentile(99.0), 7.5);
+        assert_eq!(s.mean(), 7.5);
+        assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn unsorted_input_is_handled() {
+        let s = Summary::from_samples(vec![5.0, 1.0, 3.0]);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with("ms"));
+        assert!(fmt_secs(2e-6).ends_with("µs"));
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,69 @@
+//! Integration: model-zoo fidelity — MAC counts against the paper's
+//! Table 1 and reference implementations, plus structural invariants.
+
+use nimble::models;
+use nimble::ops::op::{n_real_ops, total_macs};
+
+fn gmacs(name: &str) -> f64 {
+    total_macs(&models::build(name, 1)) as f64 / 1e9
+}
+
+#[test]
+fn paper_table1_macs_within_35_percent() {
+    for spec in models::MODELS {
+        if let Some(paper) = spec.paper_gmacs {
+            let got = gmacs(spec.name);
+            let rel = (got - paper).abs() / paper;
+            assert!(rel < 0.35, "{}: {got:.2} vs paper {paper} ({:.0}% off)", spec.name, rel * 100.0);
+        }
+    }
+}
+
+#[test]
+fn reference_macs_for_non_table1_models() {
+    // torchvision/reference counts: resnet50 4.1, resnet101 7.8,
+    // mobilenet_v2 0.30, efficientnet_b0 0.39 GMACs.
+    for (name, reference, tol) in [
+        ("resnet50", 4.1, 0.15),
+        ("resnet101", 7.8, 0.15),
+        ("mobilenet_v2", 0.30, 0.25),
+        ("efficientnet_b0", 0.39, 0.30),
+    ] {
+        let got = gmacs(name);
+        let rel: f64 = (got - reference) / reference;
+        assert!(rel.abs() < tol, "{name}: {got:.3} vs ref {reference}");
+    }
+}
+
+#[test]
+fn op_counts_reflect_architecture_class() {
+    let ops = |m: &str| n_real_ops(&models::build(m, 1));
+    // NAS nets have several times more operators than ResNets — the very
+    // reason they are scheduling-bound.
+    assert!(ops("nasnet_a_mobile") > 3 * ops("resnet50"));
+    assert!(ops("nasnet_a_large") > ops("nasnet_a_mobile"));
+    assert!(ops("mini_inception") < 30);
+}
+
+#[test]
+fn training_graphs_are_consistent() {
+    for name in ["resnet50_cifar", "mobilenet_v2_cifar", "bert_base"] {
+        let fwd = models::build(name, 32);
+        let train = models::build_train(name, 32);
+        assert!(train.validate().is_ok(), "{name}");
+        let ratio = total_macs(&train) as f64 / total_macs(&fwd) as f64;
+        assert!((2.5..3.5).contains(&ratio), "{name}: train/fwd MACs {ratio}");
+    }
+}
+
+#[test]
+fn batch_one_and_thirty_two_shapes_consistent() {
+    for name in ["resnet50", "bert_base"] {
+        let g1 = models::build(name, 1);
+        let g32 = models::build(name, 32);
+        assert_eq!(g1.n_nodes(), g32.n_nodes(), "{name}: batch must not change topology");
+        let m1 = total_macs(&g1) as f64;
+        let m32 = total_macs(&g32) as f64;
+        assert!((m32 / m1 - 32.0).abs() < 0.5, "{name}: MACs must scale with batch");
+    }
+}

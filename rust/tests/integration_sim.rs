@@ -1,0 +1,128 @@
+//! Integration: simulated end-to-end behaviour must reproduce the paper's
+//! qualitative claims across the whole evaluation matrix.
+
+use nimble::baselines::{simulate_inference, simulate_training, Baseline};
+use nimble::models;
+use nimble::sim::GpuSpec;
+
+#[test]
+fn nimble_wins_everywhere_except_tvm_depthwise() {
+    let dev = GpuSpec::v100();
+    for name in ["resnet50", "resnet101", "inception_v3", "nasnet_a_mobile", "nasnet_a_large", "efficientnet_b5"] {
+        let g = models::build(name, 1);
+        let nb = simulate_inference(&g, Baseline::Nimble, &dev).total_s;
+        for b in [Baseline::PyTorch, Baseline::TorchScript, Baseline::Caffe2, Baseline::TensorRT] {
+            let t = simulate_inference(&g, b, &dev).total_s;
+            assert!(nb <= t * 1.001, "{name}: Nimble {nb} vs {} {t}", b.name());
+        }
+    }
+}
+
+#[test]
+fn tvm_beats_nimble_only_on_depthwise_dominated_nets() {
+    // The paper's single loss: MobileNetV2 (and our model extends it to the
+    // equally depthwise-dominated EfficientNet-B0 — documented deviation).
+    let dev = GpuSpec::v100();
+    let wins = |name: &str| {
+        let g = models::build(name, 1);
+        let tvm = simulate_inference(&g, Baseline::Tvm, &dev).total_s;
+        let nb = simulate_inference(&g, Baseline::Nimble, &dev).total_s;
+        tvm < nb
+    };
+    assert!(wins("mobilenet_v2"), "TVM must win MobileNetV2 (paper)");
+    assert!(!wins("inception_v3"));
+    assert!(!wins("resnet50"));
+    assert!(!wins("nasnet_a_mobile"));
+}
+
+#[test]
+fn nasnet_mobile_speedup_near_paper_headline() {
+    // Paper: 22.34× vs PyTorch. Substrate difference tolerated: 12×–35×.
+    let dev = GpuSpec::v100();
+    let g = models::build("nasnet_a_mobile", 1);
+    let pt = simulate_inference(&g, Baseline::PyTorch, &dev).total_s;
+    let nb = simulate_inference(&g, Baseline::Nimble, &dev).total_s;
+    let speedup = pt / nb;
+    assert!((12.0..35.0).contains(&speedup), "nasnet speedup {speedup}");
+}
+
+#[test]
+fn multistream_speedup_ordering_matches_table1() {
+    // Speedup grows with concurrency for the small-MAC NAS nets and
+    // collapses for the MAC-heavy NASNet-A large (SM-bound).
+    let dev = GpuSpec::v100();
+    let ratio = |name: &str| {
+        let g = models::build(name, 1);
+        let s = simulate_inference(&g, Baseline::NimbleSingleStream, &dev).total_s;
+        let m = simulate_inference(&g, Baseline::Nimble, &dev).total_s;
+        s / m
+    };
+    let inception = ratio("inception_v3");
+    let nasnet_m = ratio("nasnet_a_mobile");
+    let nasnet_l = ratio("nasnet_a_large");
+    assert!(nasnet_m > inception, "deg-12 net must gain more than deg-6");
+    assert!(nasnet_m > nasnet_l, "MAC-heavy large must gain less than mobile");
+    assert!(nasnet_l < 1.6, "large is SM-bound: {nasnet_l}");
+    assert!(ratio("mobilenet_v2") <= 1.01, "chain net gains nothing");
+}
+
+#[test]
+fn training_speedups_shrink_with_scale() {
+    // Fig. 8: marginal on ImageNet/BERT, large on CIFAR.
+    let dev = GpuSpec::v100();
+    let speedup = |name: &str, batch: usize| {
+        let g = models::build_train(name, batch);
+        let pt = simulate_training(&g, Baseline::PyTorch, &dev).total_s;
+        let nb = simulate_training(&g, Baseline::Nimble, &dev).total_s;
+        pt / nb
+    };
+    let imagenet = speedup("resnet50", 32);
+    let bert = speedup("bert_base", 32);
+    let cifar = speedup("resnet50_cifar", 32);
+    assert!(imagenet < 1.3, "imagenet {imagenet}");
+    assert!(bert < 1.3, "bert {bert}");
+    assert!(cifar > 2.0, "cifar {cifar}");
+    assert!(cifar > imagenet && cifar > bert);
+}
+
+#[test]
+fn fig10_speedup_decays_with_batch_size() {
+    let dev = GpuSpec::v100();
+    let speedup = |batch: usize| {
+        let g = models::build_train("resnet50_cifar", batch);
+        let pt = simulate_training(&g, Baseline::PyTorch, &dev).total_s;
+        let nb = simulate_training(&g, Baseline::Nimble, &dev).total_s;
+        pt / nb
+    };
+    let s32 = speedup(32);
+    let s256 = speedup(256);
+    assert!(s32 > s256, "speedup must shrink with batch: b32={s32} b256={s256}");
+    assert!(s256 >= 1.0);
+}
+
+#[test]
+fn devices_preserve_ordering() {
+    // Fig. 9: Nimble wins across Pascal/Turing/Volta.
+    for dev in GpuSpec::all() {
+        let g = models::build("inception_v3", 1);
+        let pt = simulate_inference(&g, Baseline::PyTorch, &dev).total_s;
+        let nb = simulate_inference(&g, Baseline::Nimble, &dev).total_s;
+        assert!(pt / nb > 2.0, "{}: {}", dev.name, pt / nb);
+    }
+}
+
+#[test]
+fn infinite_gpu_reaches_critical_path() {
+    // On the idealized device with zero front-end cost and unbounded SMs,
+    // Nimble's makespan approaches the critical path (Fig. 2c's bound).
+    let dev = GpuSpec::infinite();
+    let g = models::build("nasnet_a_mobile", 1);
+    // critical path must be computed on the SAME (fused) graph the Nimble
+    // run executes
+    let p = nimble::baselines::prepare(&g, Baseline::Nimble, &dev, true);
+    let cp = nimble::sim::metrics::critical_path_s(&p.graph, &p.costs);
+    let r = nimble::baselines::run_prepared(&p, &dev);
+    // makespan ≥ critical path, and within 2.5× of it (submission gaps)
+    assert!(r.total_s >= cp * 0.99);
+    assert!(r.total_s <= cp * 2.5, "makespan {} vs critical path {cp}", r.total_s);
+}

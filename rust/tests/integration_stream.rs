@@ -1,0 +1,102 @@
+//! Integration: the full Algorithm-1 pipeline (graph → MEG → matching →
+//! assignment → sync plan → launch plan) over every model-zoo graph, with
+//! the paper's theorems checked on real network topologies.
+
+use nimble::graph::{topo_order, Reachability};
+use nimble::matching::MatchingAlgo;
+use nimble::models;
+use nimble::stream::rewrite::{rewrite, rewrite_single_stream};
+use nimble::stream::sync::{plan_is_safe, plan_syncs};
+use nimble::stream::verify::satisfies_max_logical_concurrency;
+use nimble::stream::{assign_streams, logical_concurrency_degree};
+
+#[test]
+fn theorems_hold_on_every_zoo_model() {
+    for spec in models::MODELS {
+        let g = models::build(spec.name, 1);
+        for algo in [MatchingAlgo::HopcroftKarp, MatchingAlgo::FordFulkerson] {
+            let a = assign_streams(&g, algo);
+            // Theorem 2: maximum logical concurrency.
+            assert!(
+                satisfies_max_logical_concurrency(&g, &a.stream_of),
+                "{}: max logical concurrency violated",
+                spec.name
+            );
+            // Theorem 3: sync count.
+            let plan = plan_syncs(&a);
+            assert_eq!(plan.n_syncs(), a.meg.n_edges() - a.matching_size, "{}", spec.name);
+            // Operational safety of the plan.
+            let order = topo_order(&g).unwrap();
+            assert!(
+                plan_is_safe(&g, &a.stream_of, &order, &plan),
+                "{}: unsafe plan",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn stream_count_bounded_by_width_and_nodes() {
+    for spec in models::MODELS {
+        let g = models::build(spec.name, 1);
+        let a = assign_streams(&g, MatchingAlgo::HopcroftKarp);
+        let width = logical_concurrency_degree(&g);
+        assert!(a.n_streams >= width, "{}: streams < width", spec.name);
+        assert!(a.n_streams <= g.n_nodes(), "{}", spec.name);
+    }
+}
+
+#[test]
+fn launch_plans_cover_every_node_once() {
+    for name in ["inception_v3", "nasnet_a_mobile", "mini_inception"] {
+        let g = models::build(name, 1);
+        for plan in [rewrite(&g, MatchingAlgo::HopcroftKarp), rewrite_single_stream(&g)] {
+            assert_eq!(plan.order.len(), g.n_nodes(), "{name}");
+            let mut seen = vec![false; g.n_nodes()];
+            for p in &plan.order {
+                assert!(!seen[p.node], "{name}: node {} scheduled twice", p.node);
+                seen[p.node] = true;
+            }
+        }
+    }
+}
+
+#[test]
+fn paper_table1_degrees_within_band() {
+    // Paper Table 1 Deg. column: 6 / 7 / 11 / 12 / 15. Cell-level
+    // approximations shift these slightly; widths must stay in order of
+    // magnitude and Inception must stay the narrowest.
+    let deg = |m: &str| logical_concurrency_degree(&models::build(m, 1));
+    let inception = deg("inception_v3");
+    assert_eq!(inception, 6, "paper: 6");
+    for m in ["darts", "amoebanet", "nasnet_a_mobile", "nasnet_a_large"] {
+        assert!(deg(m) > inception, "{m} should exceed inception_v3");
+        assert!((7..=16).contains(&deg(m)), "{m} deg {}", deg(m));
+    }
+}
+
+#[test]
+fn fused_graphs_still_satisfy_theorems() {
+    for name in ["inception_v3", "nasnet_a_mobile"] {
+        let g = nimble::ops::fuse_graph(&models::build(name, 1));
+        let a = assign_streams(&g, MatchingAlgo::HopcroftKarp);
+        assert!(satisfies_max_logical_concurrency(&g, &a.stream_of), "{name}");
+        let plan = plan_syncs(&a);
+        assert_eq!(plan.n_syncs(), a.min_syncs(), "{name}");
+    }
+}
+
+#[test]
+fn reachability_consistent_after_rewrite() {
+    // The rewrite must not change the graph itself — pure annotation.
+    let g = models::build("mini_inception", 1);
+    let before = Reachability::compute(&g);
+    let _ = rewrite(&g, MatchingAlgo::HopcroftKarp);
+    let after = Reachability::compute(&g);
+    for u in 0..g.n_nodes() {
+        for v in 0..g.n_nodes() {
+            assert_eq!(before.reaches(u, v), after.reaches(u, v));
+        }
+    }
+}
