@@ -35,13 +35,13 @@ fn main() {
                 syncs.push(nimble::stream::sync::Sync { src: u, dst: v, event });
             }
         }
-        let naive_syncs = SyncPlan { syncs };
+        let naive_syncs = SyncPlan::new(syncs, g.n_nodes());
         let naive_plan = {
             // same streams/order, more events
             let mut p = min_plan.clone();
             for node_plan in &mut p.order {
-                node_plan.wait_events = naive_syncs.waits_before(node_plan.node);
-                node_plan.record_events = naive_syncs.records_after(node_plan.node);
+                node_plan.wait_events = naive_syncs.waits_before(node_plan.node).to_vec();
+                node_plan.record_events = naive_syncs.records_after(node_plan.node).to_vec();
             }
             p.n_events = naive_syncs.n_syncs();
             p

@@ -1,54 +1,173 @@
-//! The paper's central measurement on the REAL substrate: per-request
-//! scheduling overhead, eager run-time scheduling vs AoT replay, over the
-//! actual XLA/PJRT executables (Fig. 2b methodology: identical kernels,
-//! only the scheduling differs). Skips if artifacts are missing.
+//! The paper's central measurement: per-request scheduling overhead.
+//!
+//! Section 1 (always available) runs on the synthetic tape substrate:
+//! the *pre-tape* replay bookkeeping (fresh per-task argument vectors +
+//! per-slot occupancy checks, exactly what `replay_with_stats` pays) vs
+//! the zero-allocation tape path, serial-vs-parallel wall times, and the
+//! DES-predicted single-vs-multi-stream speedup over the same tapes.
+//! Results are also written to `BENCH_replay.json` (format documented in
+//! `rust/README.md`).
+//!
+//! Section 2 (feature `xla`, skips without artifacts) repeats the
+//! Fig. 2b methodology over real XLA/PJRT executables: eager run-time
+//! scheduling vs AoT replay vs the prepared (tape-style) replay.
 
 mod common;
 use common::{bench, section};
-use nimble::aot::TaskSchedule;
-use nimble::engine::EagerEngine;
-use nimble::runtime::{artifacts_available, artifacts_dir, ArtifactRegistry, RuntimeClient};
+use nimble::aot::tape::ReplayTape;
+use nimble::engine::executor::{ReplayContext, SyntheticKernel};
+use nimble::matching::MatchingAlgo;
+use nimble::models;
+use nimble::sim::{kernel_cost, simulate_tape, GpuSpec, HostProfile};
+use nimble::stream::rewrite::{rewrite, rewrite_single_stream};
 use nimble::util::stats::fmt_secs;
 use nimble::util::{Pcg32, Summary};
-use std::sync::Arc;
 
 fn main() {
-    if !artifacts_available() {
-        println!("SKIP bench_overhead: run `make artifacts` first");
-        return;
-    }
-    let client = RuntimeClient::cpu().expect("client");
-    let reg = Arc::new(ArtifactRegistry::load(client, artifacts_dir()).expect("registry"));
+    tape_substrate_section();
+    #[cfg(feature = "xla")]
+    xla_real::real_substrate_section();
+    #[cfg(not(feature = "xla"))]
+    println!("\n(real-XLA section skipped: built without `--features xla`)");
+}
 
-    for batch in [1usize, 8] {
-        section(&format!("MiniInception batch={batch} (real XLA executables)"));
-        let eager = EagerEngine::new(reg.clone(), batch).expect("eager");
-        let sched = TaskSchedule::build(&reg, batch).expect("schedule");
-        let mut rng = Pcg32::new(5);
-        let input: Vec<f32> =
-            (0..eager.input_len()).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+fn tape_substrate_section() {
+    section("tape replay: submission bookkeeping + parallel execution (synthetic substrate)");
+    let iters = 12;
+    let dev = GpuSpec::v100();
+    let mut entries: Vec<String> = Vec::new();
+    for name in ["mini_inception", "inception_v3", "nasnet_a_mobile"] {
+        let g = models::build(name, 1);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = ReplayTape::for_op_graph(&g, &plan, 512);
+        let n_tasks = tape.n_tasks() as f64;
+        let input: Vec<f32> = {
+            let mut rng = Pcg32::new(11);
+            (0..tape.input_slots()[0].1).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect()
+        };
+        let mut ctx = ReplayContext::new(tape.clone(), SyntheticKernel);
+        ctx.replay_one(&input).expect("warm-up");
+        ctx.reset_alloc_events();
 
-        let iters = 12;
-        let mut e_sched = Vec::new();
-        let mut r_sched = Vec::new();
-        bench("eager end-to-end", 2, iters, || {
-            let (_, s) = eager.infer(&input).unwrap();
-            e_sched.push(s.sched_s);
+        let mut baseline_sched = Vec::with_capacity(iters);
+        let mut tape_sched = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            baseline_sched
+                .push(ctx.replay_serial_alloc_baseline(&[&input]).expect("baseline replay"));
+            tape_sched.push(ctx.replay_serial_with_stats(&[&input]).expect("tape replay"));
+        }
+        let bs = Summary::from_samples(baseline_sched);
+        let ts = Summary::from_samples(tape_sched);
+        let sp = bench(&format!("{name}: parallel replay wall"), 2, iters, || {
+            ctx.replay_one(&input).unwrap()
         });
-        bench("replay end-to-end", 2, iters, || {
-            let (_, s) = sched.replay_with_stats(&reg, &input).unwrap();
-            r_sched.push(s);
+        let ss = bench(&format!("{name}: serial replay wall"), 2, iters, || {
+            ctx.replay_serial(&[&input]).unwrap()
         });
-        let es = Summary::from_samples(e_sched);
-        let rs = Summary::from_samples(r_sched);
-        let n = sched.n_tasks() as f64;
+        let alloc_events = ctx.alloc_events();
+
+        let costs: Vec<_> = (0..g.n_nodes()).map(|v| kernel_cost(g.node(v), &dev)).collect();
+        let single = ReplayTape::for_op_graph(&g, &rewrite_single_stream(&g), 512);
+        let sim_multi = simulate_tape(&tape, &costs, HostProfile::nimble(), dev.clone()).total_s;
+        let sim_single =
+            simulate_tape(&single, &costs, HostProfile::nimble(), dev.clone()).total_s;
+
         println!(
-            "scheduling work only: eager {}/req ({}/op)  replay {}/req ({}/op)  -> {:.1}x removed",
-            fmt_secs(es.median()),
-            fmt_secs(es.median() / n),
-            fmt_secs(rs.median()),
-            fmt_secs(rs.median() / n),
-            es.median() / rs.median()
+            "{name}: bookkeeping/task  pre-tape {}  tape {}  ({:.2}x less)   \
+             steady-state alloc events: {alloc_events}",
+            fmt_secs(bs.median() / n_tasks),
+            fmt_secs(ts.median() / n_tasks),
+            bs.median() / ts.median().max(1e-12),
         );
+        println!(
+            "{name}: DES prediction (V100, nimble host)  single {}  multi {}  speedup {:.2}x",
+            fmt_secs(sim_single),
+            fmt_secs(sim_multi),
+            sim_single / sim_multi,
+        );
+        entries.push(format!(
+            "  {{\"model\": \"{name}\", \"batch\": 1, \"n_tasks\": {}, \"n_streams\": {}, \
+             \"n_events\": {}, \
+             \"baseline_sched_s\": {:.9}, \"tape_sched_s\": {:.9}, \
+             \"parallel_wall_s\": {:.9}, \"serial_wall_s\": {:.9}, \
+             \"alloc_events_steady\": {alloc_events}, \
+             \"sim_single_stream_s\": {sim_single:.9}, \"sim_multi_stream_s\": {sim_multi:.9}, \
+             \"sim_speedup\": {:.4}}}",
+            tape.n_tasks(),
+            tape.n_streams(),
+            tape.n_events(),
+            bs.median(),
+            ts.median(),
+            sp.median(),
+            ss.median(),
+            sim_single / sim_multi,
+        ));
+    }
+    let json = format!("[\n{}\n]\n", entries.join(",\n"));
+    match std::fs::write("BENCH_replay.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_replay.json ({} models)", entries.len()),
+        Err(e) => println!("\ncould not write BENCH_replay.json: {e}"),
+    }
+}
+
+/// Real-substrate section (Fig. 2b methodology over PJRT executables).
+#[cfg(feature = "xla")]
+mod xla_real {
+    use super::*;
+    use nimble::aot::TaskSchedule;
+    use nimble::engine::EagerEngine;
+    use nimble::runtime::{artifacts_available, artifacts_dir, ArtifactRegistry, RuntimeClient};
+    use std::sync::Arc;
+
+    pub fn real_substrate_section() {
+        if !artifacts_available() {
+            println!("\nSKIP real-XLA section: run `make artifacts` first");
+            return;
+        }
+        let client = RuntimeClient::cpu().expect("client");
+        let reg = Arc::new(ArtifactRegistry::load(client, artifacts_dir()).expect("registry"));
+
+        for batch in [1usize, 8] {
+            section(&format!("MiniInception batch={batch} (real XLA executables)"));
+            let eager = EagerEngine::new(reg.clone(), batch).expect("eager");
+            let sched = TaskSchedule::build(&reg, batch).expect("schedule");
+            let mut prep = sched.prepare_replay();
+            let mut rng = Pcg32::new(5);
+            let input: Vec<f32> =
+                (0..eager.input_len()).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+
+            let iters = 12;
+            let mut e_sched = Vec::new();
+            let mut r_sched = Vec::new();
+            let mut p_sched = Vec::new();
+            bench("eager end-to-end", 2, iters, || {
+                let (_, s) = eager.infer(&input).unwrap();
+                e_sched.push(s.sched_s);
+            });
+            bench("replay end-to-end", 2, iters, || {
+                let (_, s) = sched.replay_with_stats(&reg, &input).unwrap();
+                r_sched.push(s);
+            });
+            bench("prepared (tape) replay end-to-end", 2, iters, || {
+                let (_, s) = sched.replay_prepared(&reg, &mut prep, &input).unwrap();
+                p_sched.push(s);
+            });
+            let es = Summary::from_samples(e_sched);
+            let rs = Summary::from_samples(r_sched);
+            let ps = Summary::from_samples(p_sched);
+            let n = sched.n_tasks() as f64;
+            println!(
+                "scheduling work only: eager {}/req ({}/op)  replay {}/req ({}/op)  \
+                 prepared {}/req ({}/op)  -> {:.1}x removed vs eager, {:.2}x vs replay",
+                fmt_secs(es.median()),
+                fmt_secs(es.median() / n),
+                fmt_secs(rs.median()),
+                fmt_secs(rs.median() / n),
+                fmt_secs(ps.median()),
+                fmt_secs(ps.median() / n),
+                es.median() / ps.median(),
+                rs.median() / ps.median(),
+            );
+        }
     }
 }

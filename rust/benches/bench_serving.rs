@@ -1,26 +1,19 @@
-//! Serving-path benchmark over the REAL engine: offered-load sweep through
-//! the batched server (replay mode), reporting p50/p99 latency and
-//! throughput. Skips without artifacts.
+//! Serving-path benchmark: offered-load sweep through the batched
+//! server, reporting p50/p99 latency and throughput.
+//!
+//! Always runs over the tape-backed engine (independent per-bucket
+//! replay contexts on the synthetic substrate); with the `xla` feature
+//! and artifacts present it also sweeps the real PJRT engine.
 
 mod common;
 use common::section;
-use nimble::coordinator::EngineConfig;
-use nimble::serving::{NimbleServer, ServerConfig};
+use nimble::serving::{NimbleServer, TapeEngine};
 use nimble::util::Pcg32;
 use std::time::Duration;
 
-fn main() {
-    if !nimble::runtime::artifacts_available() {
-        println!("SKIP bench_serving: run `make artifacts` first");
-        return;
-    }
-    section("serving load sweep (replay engine, MiniInception)");
+fn sweep(label: &str, start: impl Fn() -> NimbleServer) {
     for rate in [5.0f64, 20.0] {
-        let server = NimbleServer::start(ServerConfig {
-            engine: EngineConfig::default(),
-            max_wait: Duration::from_millis(3),
-        })
-        .expect("server");
+        let server = start();
         let len = server.example_len();
         let mut rng = Pcg32::new(9);
         let n = 24;
@@ -34,6 +27,37 @@ fn main() {
             rx.recv().unwrap().unwrap();
         }
         let report = server.shutdown().expect("report");
-        println!("offered ~{rate} req/s:\n{}", report.render());
+        println!("{label} @ ~{rate} req/s:\n{}", report.render());
     }
+}
+
+fn main() {
+    section("serving load sweep (tape replay engine, MiniInception, per-bucket contexts)");
+    sweep("tape-engine", || {
+        NimbleServer::start_with(
+            || TapeEngine::new("mini_inception", &[1, 8]),
+            Duration::from_millis(3),
+        )
+        .expect("tape server")
+    });
+
+    #[cfg(feature = "xla")]
+    {
+        use nimble::coordinator::EngineConfig;
+        use nimble::serving::ServerConfig;
+        if nimble::runtime::artifacts_available() {
+            section("serving load sweep (real PJRT replay engine, MiniInception)");
+            sweep("pjrt-engine", || {
+                NimbleServer::start(ServerConfig {
+                    engine: EngineConfig::default(),
+                    max_wait: Duration::from_millis(3),
+                })
+                .expect("server")
+            });
+        } else {
+            println!("\nSKIP real-engine sweep: run `make artifacts` first");
+        }
+    }
+    #[cfg(not(feature = "xla"))]
+    println!("\n(real-engine sweep skipped: built without `--features xla`)");
 }

@@ -1,14 +1,23 @@
-//! The AoT scheduler (paper §4.1): turn a manifest node graph into a
-//! **task schedule** — the pre-resolved artifact the replay engine submits
+//! The AoT scheduler (paper §4.1): turn a graph into a **task schedule**
+//! and compile it down to the flat **replay tape** the executors submit
 //! from, with no run-time scheduling work.
 //!
-//! `memory` is the reserved-memory half (lifetime-interval arena planning,
-//! the "pre-allocate the exact amount of GPU memory" step); `schedule` is
-//! the execution-trace half (pre-run interception: resolved executables,
-//! pre-bound argument sources, stream assignment, event plan).
+//! * [`memory`] — the reserved-memory half (lifetime-interval arena
+//!   planning, the "pre-allocate the exact amount of GPU memory" step).
+//! * [`tape`] — the fully-resolved replay artifact: per-stream tapes of
+//!   integer-indexed task records shared by the parallel executor
+//!   ([`crate::engine::executor`]) and the DES simulator
+//!   ([`crate::sim::simulate_tape`]).
+//! * [`schedule`] (feature `xla`) — the execution-trace half over real
+//!   PJRT executables: pre-run interception, resolved executables,
+//!   pre-bound argument sources, stream assignment, event plan.
 
 pub mod memory;
+#[cfg(feature = "xla")]
 pub mod schedule;
+pub mod tape;
 
 pub use memory::{plan_arena, ArenaPlan, Lifetime};
-pub use schedule::{ArgSource, ReplayTask, TaskSchedule};
+#[cfg(feature = "xla")]
+pub use schedule::{ArgSource, PreparedReplay, ReplayTask, TaskSchedule};
+pub use tape::{NodeMeta, ReplayTape, TapeArg, TapeOp, TapeRole};

@@ -220,6 +220,101 @@ impl TaskSchedule {
     pub fn n_tasks(&self) -> usize {
         self.tasks.len()
     }
+
+    /// Pre-resolve the schedule into a reusable [`PreparedReplay`]: flat
+    /// integer argument references, a weight table, a persistent slot
+    /// table and a reused argument scratch — the PJRT counterpart of the
+    /// tape executor's `ReplayContext`. Build once per (model, batch);
+    /// the per-request loop then performs no slot-table or argument-
+    /// vector allocation.
+    pub fn prepare_replay(&self) -> PreparedReplay {
+        let mut args = Vec::new();
+        let mut ranges = Vec::with_capacity(self.tasks.len());
+        let mut weights: Vec<Arc<xla::PjRtBuffer>> = Vec::new();
+        let mut max_args = 0usize;
+        for t in &self.tasks {
+            let lo = args.len() as u32;
+            for a in &t.args {
+                match a {
+                    ArgSource::Slot(s) => args.push(PreparedArg::Slot(*s as u32)),
+                    ArgSource::Weight(w) => {
+                        let idx = weights.len() as u32;
+                        weights.push(w.clone());
+                        args.push(PreparedArg::Weight(idx));
+                    }
+                }
+            }
+            ranges.push((lo, args.len() as u32));
+            max_args = max_args.max(t.args.len());
+        }
+        PreparedReplay {
+            args,
+            ranges,
+            weights,
+            slots: (0..self.n_slots).map(|_| None).collect(),
+            scratch: Vec::with_capacity(max_args),
+        }
+    }
+
+    /// Replay through a [`PreparedReplay`], reporting submission
+    /// bookkeeping time like [`replay_with_stats`](Self::replay_with_stats)
+    /// — but with the slot table and argument scratch reused across
+    /// requests instead of reallocated per request.
+    pub fn replay_prepared(
+        &self,
+        registry: &ArtifactRegistry,
+        prep: &mut PreparedReplay,
+        input: &[f32],
+    ) -> Result<(Vec<f32>, f64)> {
+        let client = &registry.client;
+        let mut sched_s = 0.0f64;
+        for s in prep.slots.iter_mut() {
+            *s = None; // release the previous request's buffers
+        }
+        prep.slots[self.input_slot] = Some(client.buffer_f32(input, &self.input_dims)?);
+        for (t, &(lo, hi)) in self.tasks.iter().zip(&prep.ranges) {
+            let t0 = std::time::Instant::now();
+            prep.scratch.clear();
+            for a in &prep.args[lo as usize..hi as usize] {
+                let ptr: *const xla::PjRtBuffer = match a {
+                    PreparedArg::Slot(s) => {
+                        prep.slots[*s as usize].as_ref().expect("slot written before use")
+                    }
+                    PreparedArg::Weight(w) => prep.weights[*w as usize].as_ref(),
+                };
+                prep.scratch.push(ptr);
+            }
+            // Safety: `*const PjRtBuffer` and `&PjRtBuffer` have identical
+            // layout; every pointer targets a buffer owned by `prep` or
+            // the registry that stays alive (and unmoved) until
+            // `execute_b` returns.
+            let args: &[&xla::PjRtBuffer] = unsafe {
+                std::slice::from_raw_parts(prep.scratch.as_ptr().cast(), prep.scratch.len())
+            };
+            sched_s += t0.elapsed().as_secs_f64();
+            let mut out = t.exe.execute_b(args)?;
+            prep.slots[t.out_slot] = Some(out.remove(0).remove(0));
+        }
+        let out = prep.slots[self.output_slot].take().expect("output slot filled");
+        Ok((client.to_host_f32(&out)?, sched_s))
+    }
+}
+
+/// Pre-resolved argument reference (integer indices only).
+enum PreparedArg {
+    Slot(u32),
+    Weight(u32),
+}
+
+/// Reusable replay state for one [`TaskSchedule`]: persistent slot table,
+/// weight table, and argument scratch. Not `Send` (holds raw pointers);
+/// it lives on the engine thread like the PJRT state itself.
+pub struct PreparedReplay {
+    args: Vec<PreparedArg>,
+    ranges: Vec<(u32, u32)>,
+    weights: Vec<Arc<xla::PjRtBuffer>>,
+    slots: Vec<Option<xla::PjRtBuffer>>,
+    scratch: Vec<*const xla::PjRtBuffer>,
 }
 
 fn input_slot_of(input_id: usize) -> usize {

@@ -1,0 +1,438 @@
+//! Replay tapes: the flat, fully-resolved form of a task schedule.
+//!
+//! A [`ReplayTape`] compiles a [`LaunchPlan`](crate::stream::LaunchPlan)
+//! into per-stream submission *tapes* — contiguous arrays of
+//! [`TapeOp`] records whose argument sources, output slot, and
+//! wait/record event ids are all plain integers. No strings, no hash
+//! lookups, no per-task `Vec`s: every variable-length list (arguments,
+//! wait events, record events) lives in one shared flat array and each
+//! record carries `(start, end)` index ranges into it. This is the
+//! artifact the parallel executor ([`crate::engine::executor`]) walks at
+//! request time with zero heap allocation per task, and the same
+//! artifact the DES simulator replays to predict multi-stream speedups
+//! ([`crate::sim::simulate_tape`]).
+//!
+//! Invariant: tapes are compiled from launch plans produced by the graph
+//! rewriter, whose sync plans are verified operationally safe
+//! (`stream::sync::plan_is_safe`): every dependency edge is realized by
+//! same-stream FIFO order or a record→wait event pair. The executor's
+//! memory-safety argument rests on this (see the executor docs).
+
+use crate::graph::{Dag, NodeId};
+use crate::ops::{OpGraph, OpKind};
+use crate::stream::rewrite::NodePlan;
+use crate::stream::LaunchPlan;
+
+/// What a tape record does at replay time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TapeRole {
+    /// Slot is filled by the caller before the replay starts; the record
+    /// only fires its `record_events` (so cross-stream consumers of the
+    /// input observe it through the normal event mechanism).
+    Input,
+    /// A real task: resolve args, execute, write the output slot.
+    Task,
+}
+
+/// One pre-resolved argument source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TapeArg {
+    /// Output slot of an earlier record (or an input slot).
+    Slot(u32),
+    /// Index into the context's pre-staged weight table.
+    Weight(u32),
+}
+
+/// One record of the tape. All list-valued fields are `(start, end)`
+/// ranges into the tape's flat arrays.
+#[derive(Debug, Clone, Copy)]
+pub struct TapeOp {
+    /// Graph node this record came from (cost-table / trace index).
+    pub node: u32,
+    /// Stream the record is submitted on.
+    pub stream: u32,
+    pub role: TapeRole,
+    /// Slot receiving this record's output.
+    pub out_slot: u32,
+    /// Output element count (slot arena pre-sizing).
+    pub out_len: u32,
+    args: (u32, u32),
+    waits: (u32, u32),
+    records: (u32, u32),
+}
+
+/// Per-node metadata the tape compiler needs beyond the launch plan.
+pub struct NodeMeta {
+    pub role: TapeRole,
+    pub out_len: usize,
+    pub args: Vec<TapeArg>,
+}
+
+/// The compiled tape: one record per graph node in submission order,
+/// plus per-stream index lists and the shared flat arrays.
+#[derive(Debug, Clone)]
+pub struct ReplayTape {
+    /// All records in global submission order (a topological order).
+    ops: Vec<TapeOp>,
+    /// Per-stream submission order: indices into `ops`.
+    stream_ops: Vec<Vec<u32>>,
+    args: Vec<TapeArg>,
+    waits: Vec<u32>,
+    records: Vec<u32>,
+    n_slots: usize,
+    n_events: usize,
+    /// `(slot, len)` of every [`TapeRole::Input`] record, in submission order.
+    input_slots: Vec<(usize, usize)>,
+    output_slot: usize,
+    max_args: usize,
+}
+
+impl ReplayTape {
+    /// Compile a launch plan into a tape. `output` names the node whose
+    /// slot holds the replay result; `meta` supplies per-node argument
+    /// sources, output length and role.
+    pub fn compile(
+        plan: &LaunchPlan,
+        output: NodeId,
+        mut meta: impl FnMut(NodeId) -> NodeMeta,
+    ) -> ReplayTape {
+        let n_slots = plan.stream_of.len();
+        let mut ops = Vec::with_capacity(plan.order.len());
+        let mut stream_ops: Vec<Vec<u32>> = vec![Vec::new(); plan.n_streams.max(1)];
+        let mut args = Vec::new();
+        let mut waits = Vec::new();
+        let mut records = Vec::new();
+        let mut input_slots = Vec::new();
+        let mut max_args = 0usize;
+
+        for p in &plan.order {
+            let m = meta(p.node);
+            let (a0, w0, r0) = (args.len() as u32, waits.len() as u32, records.len() as u32);
+            args.extend_from_slice(&m.args);
+            waits.extend(p.wait_events.iter().map(|&e| e as u32));
+            records.extend(p.record_events.iter().map(|&e| e as u32));
+            max_args = max_args.max(m.args.len());
+            if m.role == TapeRole::Input {
+                assert!(m.args.is_empty(), "input records take no arguments");
+                input_slots.push((p.node, m.out_len));
+            }
+            let idx = ops.len() as u32;
+            ops.push(TapeOp {
+                node: p.node as u32,
+                stream: p.stream as u32,
+                role: m.role,
+                out_slot: p.node as u32,
+                out_len: m.out_len as u32,
+                args: (a0, args.len() as u32),
+                waits: (w0, waits.len() as u32),
+                records: (r0, records.len() as u32),
+            });
+            stream_ops[p.stream].push(idx);
+        }
+
+        ReplayTape {
+            ops,
+            stream_ops,
+            args,
+            waits,
+            records,
+            n_slots,
+            n_events: plan.n_events,
+            input_slots,
+            output_slot: output,
+            max_args,
+        }
+    }
+
+    /// Compile a tape for an operator graph: arguments are the graph
+    /// predecessors, `Input`-kind nodes become caller-filled input slots,
+    /// and the last node in submission order is the output. Intermediate
+    /// slot lengths are clamped to `max_task_elems` (the synthetic
+    /// substrate does not need full activations; input slots keep their
+    /// true length so request marshalling stays exact).
+    pub fn for_op_graph(g: &OpGraph, plan: &LaunchPlan, max_task_elems: usize) -> ReplayTape {
+        let output = plan.order.last().expect("non-empty plan").node;
+        Self::compile(plan, output, |v| {
+            let op = g.node(v);
+            let numel = op.out_shape.numel().max(1);
+            if matches!(op.kind, OpKind::Input) {
+                NodeMeta { role: TapeRole::Input, out_len: numel, args: Vec::new() }
+            } else {
+                NodeMeta {
+                    role: TapeRole::Task,
+                    out_len: numel.min(max_task_elems.max(1)),
+                    args: g.predecessors(v).iter().map(|&p| TapeArg::Slot(p as u32)).collect(),
+                }
+            }
+        })
+    }
+
+    /// Compile a tape for a payload-free DAG (property tests): every node
+    /// is a task, arguments are the predecessors, and output lengths are
+    /// small deterministic pseudo-sizes derived from the node id.
+    pub fn for_dag(g: &Dag<()>, plan: &LaunchPlan) -> ReplayTape {
+        let output = plan.order.last().expect("non-empty plan").node;
+        Self::compile(plan, output, |v| NodeMeta {
+            role: TapeRole::Task,
+            out_len: 17 + 13 * (v % 29),
+            args: g.predecessors(v).iter().map(|&p| TapeArg::Slot(p as u32)).collect(),
+        })
+    }
+
+    /// Reconstruct the equivalent [`LaunchPlan`] (exact inverse of
+    /// [`compile`](Self::compile) for the plan-level fields) — this is
+    /// how the DES simulator replays the tape.
+    pub fn to_launch_plan(&self) -> LaunchPlan {
+        let mut stream_of = vec![0usize; self.n_slots];
+        let order = self
+            .ops
+            .iter()
+            .map(|op| {
+                stream_of[op.node as usize] = op.stream as usize;
+                NodePlan {
+                    node: op.node as usize,
+                    stream: op.stream as usize,
+                    wait_events: self.waits(op).iter().map(|&e| e as usize).collect(),
+                    record_events: self.records(op).iter().map(|&e| e as usize).collect(),
+                }
+            })
+            .collect();
+        LaunchPlan {
+            order,
+            n_streams: self.n_streams(),
+            n_events: self.n_events,
+            stream_of,
+        }
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Count of real (non-input) tasks.
+    pub fn n_tasks(&self) -> usize {
+        self.ops.iter().filter(|op| op.role == TapeRole::Task).count()
+    }
+
+    pub fn n_streams(&self) -> usize {
+        self.stream_ops.len()
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    pub fn n_events(&self) -> usize {
+        self.n_events
+    }
+
+    /// Largest argument count of any record (scratch pre-sizing).
+    pub fn max_args(&self) -> usize {
+        self.max_args
+    }
+
+    pub fn op(&self, i: usize) -> &TapeOp {
+        &self.ops[i]
+    }
+
+    /// All records in global submission order.
+    pub fn ops(&self) -> &[TapeOp] {
+        &self.ops
+    }
+
+    /// Submission order of one stream (indices into [`ops`](Self::ops)).
+    pub fn stream_ops(&self, stream: usize) -> &[u32] {
+        &self.stream_ops[stream]
+    }
+
+    pub fn args(&self, op: &TapeOp) -> &[TapeArg] {
+        &self.args[op.args.0 as usize..op.args.1 as usize]
+    }
+
+    pub fn n_args(&self, op: &TapeOp) -> usize {
+        (op.args.1 - op.args.0) as usize
+    }
+
+    pub fn waits(&self, op: &TapeOp) -> &[u32] {
+        &self.waits[op.waits.0 as usize..op.waits.1 as usize]
+    }
+
+    pub fn records(&self, op: &TapeOp) -> &[u32] {
+        &self.records[op.records.0 as usize..op.records.1 as usize]
+    }
+
+    pub fn input_slots(&self) -> &[(usize, usize)] {
+        &self.input_slots
+    }
+
+    pub fn output_slot(&self) -> usize {
+        self.output_slot
+    }
+
+    /// Element count each slot's arena buffer needs (0 for never-written
+    /// slots — possible only for plans that skip nodes).
+    pub fn slot_lens(&self) -> Vec<usize> {
+        let mut lens = vec![0usize; self.n_slots];
+        for op in &self.ops {
+            lens[op.out_slot as usize] = op.out_len as usize;
+        }
+        lens
+    }
+
+    /// Check that every slot-argument dependency is realized by the
+    /// tape's own happens-before structure (same-stream FIFO order plus
+    /// record→wait event edges, via `stream::sync::plan_is_safe`), and
+    /// that no record waits on an event nothing records. The parallel
+    /// executor's slot arena relies on exactly this for data-race
+    /// freedom, so [`ReplayContext`](crate::engine::executor::ReplayContext)
+    /// refuses tapes that fail it — a mis-built plan becomes a loud
+    /// construction-time error instead of undefined behavior.
+    pub fn dependencies_are_synchronized(&self) -> bool {
+        use crate::stream::sync::{plan_is_safe, Sync, SyncPlan};
+        // Dependency graph: producer slot → consuming record.
+        let mut deps: Dag<()> = Dag::new();
+        for _ in 0..self.n_slots {
+            deps.add_node(());
+        }
+        for op in &self.ops {
+            for arg in self.args(op) {
+                if let TapeArg::Slot(s) = arg {
+                    if *s as usize == op.node as usize {
+                        return false; // self-dependency can never be satisfied
+                    }
+                    deps.add_edge(*s as usize, op.node as usize);
+                }
+            }
+        }
+        if deps.validate().is_err() {
+            return false;
+        }
+        // Event edges: the unique recorder of each awaited event. A
+        // multiply-recorded event is rejected outright — the runtime
+        // event table releases waiters at the FIRST record, so ordering
+        // against any later recorder would be illusory.
+        let mut recorder = vec![usize::MAX; self.n_events];
+        for op in &self.ops {
+            for &e in self.records(op) {
+                if recorder[e as usize] != usize::MAX {
+                    return false;
+                }
+                recorder[e as usize] = op.node as usize;
+            }
+        }
+        let mut syncs = Vec::new();
+        for op in &self.ops {
+            for &e in self.waits(op) {
+                let src = recorder[e as usize];
+                if src == usize::MAX {
+                    return false; // waiting on an event nothing records
+                }
+                syncs.push(Sync { src, dst: op.node as usize, event: e as usize });
+            }
+        }
+        let plan = SyncPlan::new(syncs, self.n_slots);
+        let order: Vec<usize> = self.ops.iter().map(|op| op.node as usize).collect();
+        let mut stream_of = vec![0usize; self.n_slots];
+        for op in &self.ops {
+            stream_of[op.node as usize] = op.stream as usize;
+        }
+        plan_is_safe(&deps, &stream_of, &order, &plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matching::MatchingAlgo;
+    use crate::models;
+    use crate::stream::rewrite::{rewrite, rewrite_single_stream};
+
+    #[test]
+    fn tape_covers_every_node_once_per_stream() {
+        let g = models::build("mini_inception", 1);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = ReplayTape::for_op_graph(&g, &plan, 4096);
+        assert_eq!(tape.n_ops(), g.n_nodes());
+        assert_eq!(tape.n_streams(), plan.n_streams);
+        let per_stream: usize = (0..tape.n_streams()).map(|s| tape.stream_ops(s).len()).sum();
+        assert_eq!(per_stream, tape.n_ops());
+        // per-stream lists preserve global submission order
+        for s in 0..tape.n_streams() {
+            let idxs = tape.stream_ops(s);
+            assert!(idxs.windows(2).all(|w| w[0] < w[1]), "stream {s} order");
+        }
+        assert_eq!(tape.input_slots().len(), 1);
+        assert_eq!(tape.n_tasks(), tape.n_ops() - 1);
+    }
+
+    #[test]
+    fn tape_round_trips_to_the_same_launch_plan() {
+        let g = models::build("mini_inception", 1);
+        for plan in [rewrite(&g, MatchingAlgo::HopcroftKarp), rewrite_single_stream(&g)] {
+            let tape = ReplayTape::for_op_graph(&g, &plan, 4096);
+            let back = tape.to_launch_plan();
+            assert_eq!(back.n_streams, plan.n_streams);
+            assert_eq!(back.n_events, plan.n_events);
+            assert_eq!(back.stream_of, plan.stream_of);
+            assert_eq!(back.order, plan.order);
+        }
+    }
+
+    #[test]
+    fn args_waits_records_ranges_resolve() {
+        let g = models::build("mini_inception", 1);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = ReplayTape::for_op_graph(&g, &plan, 4096);
+        let mut seen_events = vec![0usize; tape.n_events()];
+        for i in 0..tape.n_ops() {
+            let op = *tape.op(i);
+            let preds = g.predecessors(op.node as usize);
+            assert_eq!(tape.n_args(&op), if op.role == TapeRole::Task { preds.len() } else { 0 });
+            for (a, &p) in tape.args(&op).iter().zip(preds) {
+                assert_eq!(*a, TapeArg::Slot(p as u32));
+            }
+            for &e in tape.records(&op) {
+                seen_events[e as usize] += 1;
+            }
+        }
+        assert!(seen_events.iter().all(|&c| c == 1), "each event recorded exactly once");
+    }
+
+    #[test]
+    fn safe_plans_pass_the_synchronization_check_and_broken_ones_fail() {
+        let g = models::build("mini_inception", 1);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = ReplayTape::for_op_graph(&g, &plan, 64);
+        assert!(tape.dependencies_are_synchronized());
+        assert!(ReplayTape::for_op_graph(&g, &rewrite_single_stream(&g), 64)
+            .dependencies_are_synchronized());
+
+        // Strip every wait from the multi-stream plan: cross-stream
+        // dependencies lose their happens-before edges.
+        let mut broken = plan.clone();
+        let mut any_cross_stream_waits = false;
+        for p in &mut broken.order {
+            any_cross_stream_waits |= !p.wait_events.is_empty();
+            p.wait_events.clear();
+        }
+        assert!(any_cross_stream_waits, "test premise: plan has syncs");
+        let tape = ReplayTape::for_op_graph(&g, &broken, 64);
+        assert!(!tape.dependencies_are_synchronized());
+    }
+
+    #[test]
+    fn input_slots_keep_true_length_tasks_are_clamped() {
+        let g = models::build("mini_inception", 8);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = ReplayTape::for_op_graph(&g, &plan, 64);
+        let (slot, len) = tape.input_slots()[0];
+        let input_numel = g.node(slot).out_shape.numel();
+        assert_eq!(len, input_numel);
+        assert!(input_numel > 64, "test premise: input bigger than the clamp");
+        for op in tape.ops() {
+            if op.role == TapeRole::Task {
+                assert!(op.out_len <= 64);
+            }
+        }
+    }
+}

@@ -1,19 +1,34 @@
 //! The Nimble engine coordinator: ties the pipeline together.
 //!
-//! `NimbleEngine::build` runs the full Figure-4 flow once: load artifacts →
-//! per batch size, build the operator DAG, run the Graph Rewriter
-//! (Algorithm 1 + sync plan) and the AoT scheduler (pre-run interception,
-//! memory reservation) → keep the task schedules for request-time replay.
-//! An eager engine over the same executables serves as the run-time-
-//! scheduling baseline (`ExecMode::Eager`).
+//! The ungated half defines the serving-facing [`InferEngine`] contract
+//! (implemented by the PJRT-backed [`NimbleEngine`] and by the
+//! virtual-substrate [`TapeEngine`](crate::serving::sim_engine::TapeEngine))
+//! plus the engine configuration types.
+//!
+//! With the `xla` feature, `NimbleEngine::build` runs the full Figure-4
+//! flow once: load artifacts → per batch size, build the operator DAG,
+//! run the Graph Rewriter (Algorithm 1 + sync plan) and the AoT
+//! scheduler (pre-run interception, memory reservation) → keep the task
+//! schedules *and a reusable [`PreparedReplay`] context per batch
+//! bucket* for request-time replay with no per-request slot-table or
+//! argument-vector allocation. An eager engine over the same
+//! executables serves as the run-time-scheduling baseline
+//! (`ExecMode::Eager`).
 
-use anyhow::{Context, Result};
-use std::collections::HashMap;
 use std::path::PathBuf;
+
+#[cfg(feature = "xla")]
+use anyhow::{Context, Result};
+#[cfg(feature = "xla")]
+use std::collections::HashMap;
+#[cfg(feature = "xla")]
 use std::sync::Arc;
 
-use crate::aot::TaskSchedule;
+#[cfg(feature = "xla")]
+use crate::aot::{PreparedReplay, TaskSchedule};
+#[cfg(feature = "xla")]
 use crate::engine::EagerEngine;
+#[cfg(feature = "xla")]
 use crate::runtime::{ArtifactRegistry, RuntimeClient};
 
 /// Which execution path serves requests.
@@ -39,14 +54,34 @@ impl Default for EngineConfig {
     }
 }
 
-/// A built engine: one task schedule + one eager engine per batch size.
+/// The serving contract: what the batched server needs from an engine.
+/// Implementations are built *on* the engine thread (PJRT state is not
+/// `Send`) and are driven mutably so they can keep reusable per-bucket
+/// replay contexts.
+pub trait InferEngine {
+    /// Compiled batch-size buckets, ascending.
+    fn batch_sizes(&self) -> Vec<usize>;
+    /// Flattened input length of ONE example.
+    fn example_len(&self) -> usize;
+    /// Flattened output length of ONE example.
+    fn output_len(&self) -> usize;
+    /// Run one padded batch of `bucket` examples; returns the flattened
+    /// outputs of all `bucket` examples (padding included).
+    fn infer_batch(&mut self, bucket: usize, input: &[f32]) -> anyhow::Result<Vec<f32>>;
+}
+
+/// A built engine: one task schedule + prepared replay context + eager
+/// engine per batch size.
+#[cfg(feature = "xla")]
 pub struct NimbleEngine {
     pub registry: Arc<ArtifactRegistry>,
     pub config: EngineConfig,
     schedules: HashMap<usize, TaskSchedule>,
+    prepared: HashMap<usize, PreparedReplay>,
     eager: HashMap<usize, EagerEngine>,
 }
 
+#[cfg(feature = "xla")]
 impl NimbleEngine {
     /// Build the engine (compiles artifacts, runs AoT scheduling + pre-run
     /// for every batch size in the manifest).
@@ -55,12 +90,15 @@ impl NimbleEngine {
         let registry =
             Arc::new(ArtifactRegistry::load(client, config.artifacts_dir.clone())?);
         let mut schedules = HashMap::new();
+        let mut prepared = HashMap::new();
         let mut eager = HashMap::new();
         for batch in registry.manifest.batch_sizes() {
-            schedules.insert(batch, TaskSchedule::build(&registry, batch)?);
+            let schedule = TaskSchedule::build(&registry, batch)?;
+            prepared.insert(batch, schedule.prepare_replay());
+            schedules.insert(batch, schedule);
             eager.insert(batch, EagerEngine::new(registry.clone(), batch)?);
         }
-        Ok(NimbleEngine { registry, config, schedules, eager })
+        Ok(NimbleEngine { registry, config, schedules, prepared, eager })
     }
 
     /// Batch sizes this engine can serve.
@@ -85,7 +123,8 @@ impl NimbleEngine {
         Ok(s.input_dims.iter().product::<usize>() / batch)
     }
 
-    /// Run one batch through the configured path.
+    /// Run one batch through the configured path (unprepared replay;
+    /// kept for A/B measurements against [`infer_prepared`](Self::infer_prepared)).
     pub fn infer(&self, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
         match self.config.mode {
             ExecMode::Replay => self.schedule(batch)?.replay(&self.registry, input),
@@ -99,11 +138,47 @@ impl NimbleEngine {
         }
     }
 
+    /// Replay through the batch bucket's reusable [`PreparedReplay`]
+    /// context — the serving hot path.
+    pub fn infer_prepared(&mut self, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
+        let schedule =
+            self.schedules.get(&batch).with_context(|| format!("no schedule for batch {batch}"))?;
+        let prep = self
+            .prepared
+            .get_mut(&batch)
+            .with_context(|| format!("no prepared context for batch {batch}"))?;
+        schedule.replay_prepared(&self.registry, prep, input).map(|(out, _)| out)
+    }
+
     /// Run one batch through an explicit path (for A/B measurements).
     pub fn infer_mode(&self, mode: ExecMode, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
         match mode {
             ExecMode::Replay => self.schedule(batch)?.replay(&self.registry, input),
             ExecMode::Eager => Ok(self.eager[&batch].infer(input)?.0),
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+impl InferEngine for NimbleEngine {
+    fn batch_sizes(&self) -> Vec<usize> {
+        NimbleEngine::batch_sizes(self)
+    }
+
+    fn example_len(&self) -> usize {
+        NimbleEngine::example_len(self, self.max_batch()).expect("validated at build")
+    }
+
+    fn output_len(&self) -> usize {
+        let batch = self.max_batch();
+        let s = self.schedule(batch).expect("validated at build");
+        s.output_dims.iter().product::<usize>() / batch
+    }
+
+    fn infer_batch(&mut self, bucket: usize, input: &[f32]) -> anyhow::Result<Vec<f32>> {
+        match self.config.mode {
+            ExecMode::Replay => self.infer_prepared(bucket, input),
+            ExecMode::Eager => self.infer(bucket, input),
         }
     }
 }

@@ -1,0 +1,778 @@
+//! Parallel multi-stream replay executor with a zero-allocation hot path.
+//!
+//! This is the run-time half of the paper's claim: the AoT scheduler
+//! already computed *what* to run (`ReplayTape`: per-stream tapes of
+//! integer-resolved task records) — at request time there is nothing
+//! left to decide. A [`ReplayContext`] owns:
+//!
+//! * a **slot arena** — one preallocated `f32` buffer per graph node,
+//!   written in place on every replay (no per-request allocation),
+//! * an **event table** — one atomic flag per cross-stream sync, with
+//!   condvar parking (the `cudaStreamWaitEvent` pattern: record after
+//!   the producer on its stream, wait before the consumer on its
+//!   stream),
+//! * a **persistent worker pool** — one worker per stream, parked
+//!   between replays and released by an epoch handshake, and
+//! * per-worker **scratch argument buffers** sized to the tape's widest
+//!   task, reused across tasks.
+//!
+//! # Memory-safety argument
+//!
+//! The arena hands out `&[f32]` / `&mut [f32]` through `UnsafeCell`, so
+//! the borrow checker does not police slot aliasing; the sync plan
+//! does. Tapes are compiled from launch plans whose sync plans satisfy
+//! `stream::sync::plan_is_safe`: every dependency edge (producer slot →
+//! consumer task) is realized by a path of same-stream FIFO edges
+//! (program order inside one worker) and record→wait event edges
+//! (release/acquire through [`EventTable`]). Therefore every slot read
+//! *happens-after* the unique write of that slot, and the writer holds
+//! the only live `&mut` — each slot is written by exactly one record
+//! per replay. The differential tests in `tests/integration_executor.rs`
+//! check the resulting bit-exactness on every zoo model and on random
+//! DAGs.
+//!
+//! # Zero-allocation accounting
+//!
+//! Every site on the per-task path that *could* allocate (scratch
+//! growth, arena buffer resize) increments an instrumented counter
+//! instead of being assumed away; [`ReplayContext::alloc_events`]
+//! exposes it and a steady-state test asserts it stays at zero.
+
+use crate::aot::tape::{ReplayTape, TapeArg, TapeOp, TapeRole};
+use std::any::Any;
+use std::cell::UnsafeCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A compute backend for tape tasks: reads resolved argument slices,
+/// writes the output slice in place. Implementations must be
+/// deterministic functions of `(op, args)` for the executor's
+/// bit-exactness guarantee to hold.
+pub trait TapeKernel: Send + Sync + 'static {
+    fn execute(&self, op: &TapeOp, args: &[&[f32]], out: &mut [f32]);
+}
+
+/// Deterministic synthetic kernel for the virtual-GPU substrate: mixes
+/// the argument values (order-sensitively) with a node-derived seed and
+/// squashes to keep magnitudes bounded on deep graphs. Bit-identical
+/// however tasks are interleaved, so any missed synchronization shows
+/// up as a differential mismatch.
+pub struct SyntheticKernel;
+
+impl TapeKernel for SyntheticKernel {
+    fn execute(&self, op: &TapeOp, args: &[&[f32]], out: &mut [f32]) {
+        let seed = op.node as f32 * 0.618_034 + 1.0;
+        for (i, o) in out.iter_mut().enumerate() {
+            let mut acc = seed + i as f32 * 1e-3;
+            for a in args {
+                let v = if a.is_empty() { 0.0 } else { a[i % a.len()] };
+                acc = acc * 0.731_25 + v;
+            }
+            *o = acc / (1.0 + acc.abs());
+        }
+    }
+}
+
+/// Event table: one flag per cross-stream synchronization. `record` is
+/// a SeqCst flag store plus a wake only when someone is parked; `wait`
+/// is an acquire fast-path with condvar parking and a hard deadline
+/// (so an unsafe plan or dead worker turns into an error, never a
+/// hang).
+pub struct EventTable {
+    flags: Vec<AtomicU32>,
+    /// Parked (or about-to-park) waiter count; lets `record` skip the
+    /// lock + notify entirely in the common nobody-is-waiting case.
+    waiters: AtomicU32,
+    lock: Mutex<()>,
+    cv: Condvar,
+    timeout: Duration,
+}
+
+impl EventTable {
+    pub fn new(n_events: usize, timeout: Duration) -> EventTable {
+        EventTable {
+            flags: (0..n_events).map(|_| AtomicU32::new(0)).collect(),
+            waiters: AtomicU32::new(0),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+            timeout,
+        }
+    }
+
+    /// Clear all flags. Callers must ensure no worker is mid-replay; the
+    /// pool's epoch handshake publishes the reset to the workers.
+    pub fn reset(&self) {
+        for f in &self.flags {
+            f.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Fire event `e` (exactly once per replay, by its unique recorder).
+    ///
+    /// Missed-wakeup freedom: the flag store and the waiter-count
+    /// accesses are all SeqCst, so in the single total order either the
+    /// recorder sees the waiter's increment (and notifies), or the
+    /// waiter's increment comes after the recorder's store — and then
+    /// the waiter's flag check (made after incrementing, under the
+    /// lock) observes the flag set and never parks.
+    pub fn record(&self, e: usize) {
+        self.flags[e].store(1, Ordering::SeqCst);
+        if self.waiters.load(Ordering::SeqCst) != 0 {
+            // Take and drop the lock so a parked waiter is either inside
+            // `wait_timeout` (and gets the notify) or re-checks the flag
+            // under the lock after us.
+            drop(self.lock.lock().unwrap());
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until event `e` fires, or error out at the deadline.
+    pub fn wait(&self, e: usize) -> Result<(), String> {
+        if self.flags[e].load(Ordering::Acquire) != 0 {
+            return Ok(());
+        }
+        let deadline = Instant::now() + self.timeout;
+        let mut guard = self.lock.lock().unwrap();
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        let result = loop {
+            if self.flags[e].load(Ordering::SeqCst) != 0 {
+                break Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break Err(format!(
+                    "event {e} did not fire within {:?}: unsafe sync plan or failed worker",
+                    self.timeout
+                ));
+            }
+            let (g, _timeout) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        };
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+        result
+    }
+
+    pub fn n_events(&self) -> usize {
+        self.flags.len()
+    }
+}
+
+/// Slot arena: one buffer per graph node, preallocated at context build.
+/// Access is `unsafe` because exclusivity is guaranteed by the verified
+/// sync plan, not the borrow checker (see module docs).
+struct SlotArena {
+    bufs: Vec<UnsafeCell<Vec<f32>>>,
+}
+
+// Safety: concurrent access is coordinated by the sync plan (module docs).
+unsafe impl Sync for SlotArena {}
+
+impl SlotArena {
+    fn new(lens: &[usize]) -> SlotArena {
+        SlotArena { bufs: lens.iter().map(|&l| UnsafeCell::new(vec![0.0f32; l])).collect() }
+    }
+
+    /// Safety: per the sync plan, the slot's writer finished before us.
+    unsafe fn get(&self, slot: usize) -> &[f32] {
+        (*self.bufs[slot].get()).as_slice()
+    }
+
+    /// Safety: per the sync plan, we are the slot's unique live writer.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn get_mut(&self, slot: usize) -> &mut Vec<f32> {
+        &mut *self.bufs[slot].get()
+    }
+}
+
+/// State shared between the coordinator and the worker pool.
+struct PoolState {
+    epoch: u64,
+    remaining: usize,
+    error: Option<String>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    go: Condvar,
+    done: Condvar,
+}
+
+/// Everything the workers need, fixed for the context's lifetime.
+struct ReplayInner {
+    tape: ReplayTape,
+    kernel: Box<dyn TapeKernel>,
+    arena: SlotArena,
+    events: EventTable,
+    weights: Vec<Vec<f32>>,
+    /// Would-allocate events on the per-task path since the last reset.
+    alloc_events: AtomicU64,
+    /// Completion-stamp tracing (off by default: the shared stamp clock
+    /// is an RMW on one cache line per task, instrumentation the
+    /// serving hot path should not pay).
+    trace: AtomicBool,
+    /// Per-record completion stamps (1-based; 0 = not completed).
+    stamps: Vec<AtomicU64>,
+    stamp_clock: AtomicU64,
+}
+
+impl ReplayInner {
+    /// Execute one stream's tape. Runs on that stream's worker (or, for
+    /// the serial executor, inline over the merged order). The scratch
+    /// elements borrow the arena through `&'a self`.
+    fn run_stream<'a>(
+        &'a self,
+        stream: usize,
+        scratch: &mut Vec<&'a [f32]>,
+    ) -> Result<(), String> {
+        // The borrow of `self` inside `scratch` is shared-only; arena
+        // exclusivity is the sync plan's job (module docs).
+        for &op_idx in self.tape.stream_ops(stream) {
+            let op = self.tape.op(op_idx as usize);
+            for &e in self.tape.waits(op) {
+                self.events.wait(e as usize)?;
+            }
+            self.run_op(op_idx as usize, op, scratch, None);
+            for &e in self.tape.records(op) {
+                self.events.record(e as usize);
+            }
+        }
+        Ok(())
+    }
+
+    /// Resolve args, execute, stamp. No events (callers handle those).
+    /// When `sched_s` is given, the bookkeeping time (everything but the
+    /// kernel) is accumulated into it — the serial-stats path; the
+    /// parallel hot path passes `None` and pays no `Instant` calls.
+    fn run_op<'a>(
+        &'a self,
+        op_idx: usize,
+        op: &TapeOp,
+        scratch: &mut Vec<&'a [f32]>,
+        sched_s: Option<&mut f64>,
+    ) {
+        if op.role == TapeRole::Task {
+            let t0 = sched_s.is_some().then(Instant::now);
+            scratch.clear();
+            if scratch.capacity() < self.tape.n_args(op) {
+                self.alloc_events.fetch_add(1, Ordering::Relaxed);
+            }
+            for arg in self.tape.args(op) {
+                scratch.push(match *arg {
+                    // Safety: writer ordered before us by the sync plan.
+                    TapeArg::Slot(s) => unsafe { self.arena.get(s as usize) },
+                    TapeArg::Weight(w) => self.weights[w as usize].as_slice(),
+                });
+            }
+            // Safety: we are this slot's unique writer this replay.
+            let out = unsafe { self.arena.get_mut(op.out_slot as usize) };
+            if out.len() != op.out_len as usize {
+                self.alloc_events.fetch_add(1, Ordering::Relaxed);
+                out.resize(op.out_len as usize, 0.0);
+            }
+            if let (Some(acc), Some(t0)) = (sched_s, t0) {
+                *acc += t0.elapsed().as_secs_f64();
+            }
+            self.kernel.execute(op, scratch, out.as_mut_slice());
+        }
+        if self.trace.load(Ordering::Relaxed) {
+            let stamp = self.stamp_clock.fetch_add(1, Ordering::Relaxed) + 1;
+            self.stamps[op_idx].store(stamp, Ordering::Relaxed);
+        }
+    }
+
+    fn reset_run_state(&self) {
+        self.events.reset();
+        self.stamp_clock.store(0, Ordering::Relaxed);
+        for s in &self.stamps {
+            s.store(0, Ordering::Relaxed);
+        }
+    }
+
+    fn fill_inputs(&self, inputs: &[&[f32]]) -> Result<(), String> {
+        let expected = self.tape.input_slots();
+        if inputs.len() != expected.len() {
+            return Err(format!("expected {} input(s), got {}", expected.len(), inputs.len()));
+        }
+        for (&(slot, len), data) in expected.iter().zip(inputs) {
+            if data.len() != len {
+                return Err(format!("input for slot {slot}: length {} != {len}", data.len()));
+            }
+            // Safety: no replay is in flight (coordinator-only call).
+            let buf = unsafe { self.arena.get_mut(slot) };
+            if buf.len() != len {
+                self.alloc_events.fetch_add(1, Ordering::Relaxed);
+                buf.resize(len, 0.0);
+            }
+            buf.copy_from_slice(data);
+        }
+        Ok(())
+    }
+}
+
+fn panic_message(payload: Box<dyn Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn worker_loop(inner: Arc<ReplayInner>, shared: Arc<PoolShared>, stream: usize) {
+    let mut scratch: Vec<&[f32]> = Vec::with_capacity(inner.tape.max_args());
+    let mut last_epoch = 0u64;
+    loop {
+        {
+            let mut st = shared.state.lock().unwrap();
+            while st.epoch == last_epoch && !st.shutdown {
+                st = shared.go.wait(st).unwrap();
+            }
+            if st.shutdown {
+                return;
+            }
+            last_epoch = st.epoch;
+        }
+        let outcome = catch_unwind(AssertUnwindSafe(|| inner.run_stream(stream, &mut scratch)));
+        // Drop all arena borrows before reporting done: the coordinator
+        // may overwrite input slots as soon as the last worker checks in.
+        scratch.clear();
+        let mut st = shared.state.lock().unwrap();
+        match outcome {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => {
+                st.error.get_or_insert(format!("stream {stream}: {msg}"));
+            }
+            Err(payload) => {
+                let msg = panic_message(payload);
+                st.error.get_or_insert(format!("stream {stream} worker panicked: {msg}"));
+            }
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// A reusable replay context: slot arena + event table + persistent
+/// per-stream worker pool for one compiled tape. Build once per
+/// (model, batch) bucket; replay per request with zero per-task heap
+/// allocation.
+pub struct ReplayContext {
+    inner: Arc<ReplayInner>,
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    timeout: Duration,
+    /// Set when a join timed out with workers possibly still running:
+    /// the arena can no longer be assumed exclusive, so replays refuse.
+    poisoned: bool,
+}
+
+impl ReplayContext {
+    /// Default per-event / join deadline: generous enough for CI, small
+    /// enough that a genuine deadlock fails fast instead of hanging.
+    pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
+
+    pub fn new(tape: ReplayTape, kernel: impl TapeKernel) -> ReplayContext {
+        Self::with_config(tape, kernel, Vec::new(), Self::DEFAULT_TIMEOUT)
+    }
+
+    /// Full constructor: pre-staged weight table + watchdog timeout.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the tape's happens-before structure does not cover its
+    /// own slot dependencies (`ReplayTape::dependencies_are_synchronized`).
+    /// The slot arena's soundness depends on that invariant, so a
+    /// mis-built plan must fail loudly here rather than race at replay.
+    pub fn with_config(
+        tape: ReplayTape,
+        kernel: impl TapeKernel,
+        weights: Vec<Vec<f32>>,
+        timeout: Duration,
+    ) -> ReplayContext {
+        assert!(
+            tape.dependencies_are_synchronized(),
+            "replay tape's sync plan does not cover its slot dependencies — \
+             refusing to build a context that could race"
+        );
+        let slot_lens = tape.slot_lens();
+        let n_ops = tape.n_ops();
+        let n_events = tape.n_events();
+        let n_streams = tape.n_streams();
+        let inner = Arc::new(ReplayInner {
+            tape,
+            kernel: Box::new(kernel),
+            arena: SlotArena::new(&slot_lens),
+            events: EventTable::new(n_events, timeout),
+            weights,
+            alloc_events: AtomicU64::new(0),
+            trace: AtomicBool::new(false),
+            stamps: (0..n_ops).map(|_| AtomicU64::new(0)).collect(),
+            stamp_clock: AtomicU64::new(0),
+        });
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                remaining: 0,
+                error: None,
+                shutdown: false,
+            }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (0..n_streams)
+            .map(|s| {
+                let inner = Arc::clone(&inner);
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("replay-s{s}"))
+                    .spawn(move || worker_loop(inner, shared, s))
+                    .expect("spawning replay worker")
+            })
+            .collect();
+        ReplayContext { inner, shared, workers, timeout, poisoned: false }
+    }
+
+    /// Parallel replay: fill input slots, release the per-stream
+    /// workers, and join. `&mut self` makes a context single-flight;
+    /// independent contexts replay concurrently (the serving path keeps
+    /// one per batch bucket).
+    pub fn replay(&mut self, inputs: &[&[f32]]) -> Result<(), String> {
+        if self.poisoned {
+            return Err("context poisoned by an earlier timed-out replay".into());
+        }
+        self.inner.fill_inputs(inputs)?;
+        self.inner.reset_run_state();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.remaining = self.workers.len();
+            st.error = None;
+        }
+        self.shared.go.notify_all();
+
+        let deadline = Instant::now() + self.timeout + self.timeout / 2;
+        let mut st = self.shared.state.lock().unwrap();
+        while st.remaining > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                drop(st);
+                self.poisoned = true;
+                return Err("replay join timed out; context poisoned".into());
+            }
+            let (g, _timeout) = self.shared.done.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+        }
+        match st.error.take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Convenience for single-input tapes (the model-zoo case).
+    pub fn replay_one(&mut self, input: &[f32]) -> Result<(), String> {
+        self.replay(&[input])
+    }
+
+    /// Serial replay over the merged submission order on the calling
+    /// thread. Events are skipped entirely — the submission order is
+    /// topological, so FIFO order alone is safe. This is the differential
+    /// oracle and the single-stream baseline.
+    pub fn replay_serial(&mut self, inputs: &[&[f32]]) -> Result<(), String> {
+        self.replay_serial_with_stats(inputs).map(|_| ())
+    }
+
+    /// Serial replay reporting the wall time spent on submission
+    /// bookkeeping (argument resolution and slot lookup — everything but
+    /// the kernel itself), the tape analogue of the eager engine's
+    /// `sched_s`.
+    pub fn replay_serial_with_stats(&mut self, inputs: &[&[f32]]) -> Result<f64, String> {
+        if self.poisoned {
+            return Err("context poisoned by an earlier timed-out replay".into());
+        }
+        let inner = &self.inner;
+        inner.fill_inputs(inputs)?;
+        inner.reset_run_state();
+        let mut scratch: Vec<&[f32]> = Vec::with_capacity(inner.tape.max_args());
+        let mut sched_s = 0.0f64;
+        for i in 0..inner.tape.n_ops() {
+            // Same per-task body as the parallel workers (run_op), just
+            // on one thread in merged order, with bookkeeping timed.
+            let op = inner.tape.op(i);
+            inner.run_op(i, op, &mut scratch, Some(&mut sched_s));
+        }
+        Ok(sched_s)
+    }
+
+    /// Serial replay replicating the *pre-tape* bookkeeping per task — a
+    /// fresh argument vector and per-slot `Option` checks, exactly what
+    /// `TaskSchedule::replay_with_stats` pays — as the measurement
+    /// baseline for the bench. Returns bookkeeping seconds.
+    pub fn replay_serial_alloc_baseline(&mut self, inputs: &[&[f32]]) -> Result<f64, String> {
+        if self.poisoned {
+            return Err("context poisoned by an earlier timed-out replay".into());
+        }
+        let inner = &self.inner;
+        inner.fill_inputs(inputs)?;
+        inner.reset_run_state();
+        let mut written: Vec<bool> = vec![false; inner.tape.n_slots()];
+        for &(slot, _) in inner.tape.input_slots() {
+            written[slot] = true;
+        }
+        let mut sched_s = 0.0f64;
+        for i in 0..inner.tape.n_ops() {
+            let op = inner.tape.op(i);
+            if op.role != TapeRole::Task {
+                continue;
+            }
+            let t0 = Instant::now();
+            // Fresh per-task argument vector: the allocation the tape
+            // path removes.
+            let mut args: Vec<&[f32]> = Vec::with_capacity(inner.tape.n_args(op));
+            for arg in inner.tape.args(op) {
+                args.push(match *arg {
+                    TapeArg::Slot(s) => {
+                        assert!(written[s as usize], "slot written before use");
+                        // Safety: serial topological order.
+                        unsafe { inner.arena.get(s as usize) }
+                    }
+                    TapeArg::Weight(w) => inner.weights[w as usize].as_slice(),
+                });
+            }
+            // Safety: single-threaded here.
+            let out = unsafe { inner.arena.get_mut(op.out_slot as usize) };
+            if out.len() != op.out_len as usize {
+                out.resize(op.out_len as usize, 0.0);
+            }
+            sched_s += t0.elapsed().as_secs_f64();
+            inner.kernel.execute(op, &args, out.as_mut_slice());
+            written[op.out_slot as usize] = true;
+        }
+        Ok(sched_s)
+    }
+
+    /// A poisoned context may still have a straggler worker writing the
+    /// arena (the join timed out), so reads would race — refuse loudly.
+    fn assert_not_poisoned(&self) {
+        assert!(
+            !self.poisoned,
+            "replay context poisoned by a timed-out join; workers may still be running"
+        );
+    }
+
+    /// The replay result (output slot contents). Valid after a
+    /// successful replay; a context is quiescent between replays.
+    ///
+    /// # Panics
+    ///
+    /// Panics on a poisoned context (timed-out join): workers may still
+    /// be writing the arena, so reading would be a data race.
+    pub fn output(&self) -> &[f32] {
+        self.assert_not_poisoned();
+        // Safety: no replay in flight (replay methods are blocking and
+        // a timed-out join poisons the context, checked above).
+        unsafe { self.inner.arena.get(self.inner.tape.output_slot()) }
+    }
+
+    /// Contents of an arbitrary slot (differential tests).
+    ///
+    /// # Panics
+    ///
+    /// Panics on a poisoned context, like [`output`](Self::output).
+    pub fn slot(&self, slot: usize) -> &[f32] {
+        self.assert_not_poisoned();
+        // Safety: no replay in flight (see `output`).
+        unsafe { self.inner.arena.get(slot) }
+    }
+
+    /// Enable or disable completion-stamp tracing for subsequent
+    /// replays. Off by default — the shared stamp clock is per-task
+    /// instrumentation the serving hot path should not pay.
+    pub fn set_tracing(&self, on: bool) {
+        self.inner.trace.store(on, Ordering::Relaxed);
+    }
+
+    /// Completion stamps per tape record (1-based global completion
+    /// order; 0 = did not run or tracing was off). Only meaningful
+    /// after a replay with [`set_tracing`](Self::set_tracing)`(true)`;
+    /// cross-checked against the DES ordering in the executor tests.
+    ///
+    /// # Panics
+    ///
+    /// Panics on a poisoned context, like [`output`](Self::output).
+    pub fn completion_stamps(&self) -> Vec<u64> {
+        self.assert_not_poisoned();
+        self.inner.stamps.iter().map(|s| s.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Would-allocate events observed on the per-task path since the
+    /// last [`reset_alloc_events`](Self::reset_alloc_events).
+    pub fn alloc_events(&self) -> u64 {
+        self.inner.alloc_events.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_alloc_events(&self) {
+        self.inner.alloc_events.store(0, Ordering::Relaxed);
+    }
+
+    pub fn tape(&self) -> &ReplayTape {
+        &self.inner.tape
+    }
+
+    pub fn n_streams(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ReplayContext {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.go.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aot::tape::ReplayTape;
+    use crate::graph::Dag;
+    use crate::matching::MatchingAlgo;
+    use crate::models;
+    use crate::stream::rewrite::rewrite;
+
+    fn mini_tape() -> ReplayTape {
+        let g = models::build("mini_inception", 1);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        ReplayTape::for_op_graph(&g, &plan, 512)
+    }
+
+    fn input_for(tape: &ReplayTape, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::Pcg32::new(seed);
+        (0..tape.input_slots()[0].1).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise_on_mini_inception() {
+        let tape = mini_tape();
+        let input = input_for(&tape, 7);
+        let mut par = ReplayContext::new(tape.clone(), SyntheticKernel);
+        let mut ser = ReplayContext::new(tape.clone(), SyntheticKernel);
+        par.replay_one(&input).unwrap();
+        ser.replay_serial(&[&input]).unwrap();
+        for s in 0..tape.n_slots() {
+            let (a, b) = (par.slot(s), ser.slot(s));
+            assert_eq!(a.len(), b.len(), "slot {s} length");
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "slot {s} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn replay_is_repeatable_and_input_sensitive() {
+        let tape = mini_tape();
+        let (i1, i2) = (input_for(&tape, 1), input_for(&tape, 2));
+        let mut ctx = ReplayContext::new(tape, SyntheticKernel);
+        ctx.replay_one(&i1).unwrap();
+        let out1: Vec<f32> = ctx.output().to_vec();
+        ctx.replay_one(&i2).unwrap();
+        let out2: Vec<f32> = ctx.output().to_vec();
+        ctx.replay_one(&i1).unwrap();
+        let out1b: Vec<f32> = ctx.output().to_vec();
+        assert_eq!(out1, out1b, "same input must reproduce bitwise");
+        assert_ne!(out1, out2, "different inputs must differ");
+    }
+
+    #[test]
+    fn steady_state_is_allocation_free() {
+        let tape = mini_tape();
+        let input = input_for(&tape, 3);
+        let mut ctx = ReplayContext::new(tape, SyntheticKernel);
+        ctx.replay_one(&input).unwrap(); // warm-up
+        ctx.reset_alloc_events();
+        for _ in 0..5 {
+            ctx.replay_one(&input).unwrap();
+            ctx.replay_serial(&[&input]).unwrap();
+        }
+        assert_eq!(ctx.alloc_events(), 0, "hot path must not allocate");
+    }
+
+    #[test]
+    fn wrong_input_length_is_rejected() {
+        let tape = mini_tape();
+        let mut ctx = ReplayContext::new(tape, SyntheticKernel);
+        assert!(ctx.replay_one(&[0.0; 3]).is_err());
+        assert!(ctx.replay(&[]).is_err());
+    }
+
+    #[test]
+    fn event_table_record_then_wait() {
+        let t = EventTable::new(2, Duration::from_millis(50));
+        t.record(1);
+        assert!(t.wait(1).is_ok());
+        assert!(t.wait(0).is_err(), "unfired event must time out, not hang");
+        t.reset();
+        assert!(t.wait(1).is_err());
+    }
+
+    #[test]
+    fn event_table_cross_thread_wakeup() {
+        let t = Arc::new(EventTable::new(1, Duration::from_secs(5)));
+        let t2 = Arc::clone(&t);
+        let waiter = std::thread::spawn(move || t2.wait(0));
+        std::thread::sleep(Duration::from_millis(10));
+        t.record(0);
+        assert!(waiter.join().unwrap().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "does not cover")]
+    fn context_refuses_unsynchronized_tapes() {
+        let g = models::build("mini_inception", 1);
+        let mut plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        for p in &mut plan.order {
+            p.wait_events.clear(); // drop every cross-stream wait
+        }
+        let tape = ReplayTape::for_op_graph(&g, &plan, 64);
+        let _ = ReplayContext::new(tape, SyntheticKernel);
+    }
+
+    #[test]
+    fn diamond_dag_tape_executes_in_parallel() {
+        let mut g: Dag<()> = Dag::new();
+        for _ in 0..4 {
+            g.add_node(());
+        }
+        g.add_edge(0, 1);
+        g.add_edge(0, 2);
+        g.add_edge(1, 3);
+        g.add_edge(2, 3);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        assert_eq!(plan.n_streams, 2);
+        let tape = ReplayTape::for_dag(&g, &plan);
+        let mut par = ReplayContext::new(tape.clone(), SyntheticKernel);
+        let mut ser = ReplayContext::new(tape, SyntheticKernel);
+        par.set_tracing(true);
+        par.replay(&[]).unwrap();
+        ser.replay_serial(&[]).unwrap();
+        assert_eq!(par.output(), ser.output());
+        // every record completed exactly once
+        let stamps = par.completion_stamps();
+        assert!(stamps.iter().all(|&s| s > 0));
+        let mut sorted = stamps.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), stamps.len(), "stamps must be unique");
+    }
+}

@@ -1,18 +1,28 @@
-//! Real execution engines over the XLA/PJRT runtime.
+//! Execution engines.
 //!
-//! * [`eager`] — the run-time scheduling baseline: every request pays the
-//!   full per-operator scheduling procedure of the paper's §2 (shape
-//!   check, dispatch lookup, caching-allocator bookkeeping, argument
-//!   marshalling) before each task submission.
-//! * AoT replay lives in [`crate::aot::schedule`]: the same executables,
-//!   pre-resolved once; requests are raw submission loops.
-//! * [`alloc`] — the caching-allocator bookkeeping both share.
+//! * [`executor`] — the parallel multi-stream replay executor: a
+//!   persistent per-stream worker pool driving a compiled
+//!   [`ReplayTape`](crate::aot::tape::ReplayTape) through a preallocated
+//!   slot arena and event table with zero heap allocation per task. This
+//!   is the paper's multi-stream replay engine on the virtual-GPU
+//!   substrate, and the engine behind the non-PJRT serving path.
+//! * [`eager`] (feature `xla`) — the run-time scheduling baseline over
+//!   real XLA/PJRT executables: every request pays the full per-operator
+//!   scheduling procedure of the paper's §2 (shape check, dispatch
+//!   lookup, caching-allocator bookkeeping, argument marshalling) before
+//!   each task submission.
+//! * [`alloc`] — the caching-allocator bookkeeping the eager baseline
+//!   exercises.
 //!
-//! The measured eager-vs-replay gap on this substrate is the paper's
-//! Fig. 2b experiment (run by `examples/quickstart.rs` and
-//! `rust/benches/bench_overhead.rs`).
+//! AoT replay over PJRT lives in [`crate::aot::schedule`]; the measured
+//! eager-vs-replay gap is the paper's Fig. 2b experiment
+//! (`rust/benches/bench_overhead.rs`).
 
 pub mod alloc;
+#[cfg(feature = "xla")]
 pub mod eager;
+pub mod executor;
 
+#[cfg(feature = "xla")]
 pub use eager::EagerEngine;
+pub use executor::{EventTable, ReplayContext, SyntheticKernel, TapeKernel};

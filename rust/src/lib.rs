@@ -6,24 +6,43 @@
 //! * **L3 (this crate)** — the paper's system: the stream-assignment
 //!   algorithm (Algorithm 1: MEG → bipartite maximum matching → chain
 //!   partition), the graph rewriter, the ahead-of-time (AoT) task scheduler
-//!   with pre-run interception and memory reservation, the multi-stream
-//!   replay engine, a discrete-event virtual-GPU simulator with framework
-//!   baseline profiles, an operator-graph model zoo covering every network
-//!   in the paper's evaluation, and a batched serving front-end.
+//!   with pre-run interception and memory reservation, the **parallel
+//!   multi-stream replay executor** (per-stream submission tapes driven by
+//!   a persistent worker pool through a preallocated slot arena and event
+//!   table — zero heap allocation per task on the steady-state path), a
+//!   discrete-event virtual-GPU simulator that replays the *same* tapes to
+//!   predict multi-stream speedups, framework baseline profiles, an
+//!   operator-graph model zoo covering every network in the paper's
+//!   evaluation, and a batched serving front-end whose batch buckets
+//!   replay on independent contexts.
 //! * **L2 (python/compile/model.py)** — JAX computation graphs (built-time
 //!   only), lowered per-operator to HLO text artifacts.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (MXU-tiled matmul,
 //!   im2col conv, fused epilogues) checked against pure-jnp oracles.
 //!
-//! Python never runs on the request path: the `runtime` module loads the AOT
-//! artifacts through the PJRT C API (`xla` crate) and the replay engine
-//! submits pre-scheduled tasks directly.
+//! ## Execution paths
+//!
+//! The **tape path** (always available): [`stream`] computes the launch
+//! plan, [`aot::tape`] flattens it into per-stream tapes of integer-
+//! resolved records, and [`engine::executor`] replays them — in parallel
+//! with event-based cross-stream synchronization (the
+//! `cudaStreamWaitEvent` pattern), or serially as the differential
+//! oracle. [`sim::simulate_tape`] runs the identical artifact on the
+//! virtual GPU, so predicted speedups and measured interleavings are
+//! cross-checked in `tests/integration_executor.rs`.
+//!
+//! The **PJRT path** (feature `xla`): [`runtime`] loads the AOT artifacts
+//! through the PJRT C API and [`aot::schedule`] replays pre-resolved
+//! executables; Python never runs on the request path. Without the
+//! feature the crate builds against a stub `xla` crate and every PJRT
+//! entry point reports itself unavailable.
 
 pub mod aot;
 pub mod baselines;
 pub mod coordinator;
 pub mod figures;
 pub mod serving;
+#[cfg(feature = "xla")]
 pub mod training;
 pub mod engine;
 pub mod runtime;

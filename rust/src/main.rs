@@ -5,26 +5,27 @@
 //!                         regenerate the paper's tables/figures (VGPU)
 //!   models                list the model zoo (ops, MACs, Deg., streams)
 //!   assign <model>        run Algorithm 1 on a model and report the plan
+//!   replay <model> [--iters K]
+//!                         compile the model's replay tape and run the
+//!                         parallel multi-stream executor vs the serial
+//!                         oracle, with the DES speedup prediction
 //!   sim <model> <system>  one simulated inference run in detail
-//!   infer [--batch N] [--iters K] [--mode replay|eager]
+//!   infer [--batch N] [--iters K] [--mode replay|eager]   (feature xla)
 //!                         run MiniInception on the real XLA path
-//!   serve [--requests N] [--rate RPS] [--mode replay|eager]
+//!   serve [--requests N] [--rate RPS] [--mode replay|eager] (feature xla)
 //!                         batched serving demo over the real XLA path
-//!   train [--steps N]     run the AOT train-step artifact, logging loss
+//!   train [--steps N]     run the AOT train-step artifact   (feature xla)
 
 use anyhow::{bail, Context, Result};
 use nimble::baselines::Baseline;
-use nimble::coordinator::{EngineConfig, ExecMode, NimbleEngine};
 use nimble::matching::MatchingAlgo;
 use nimble::models;
 use nimble::ops::op::total_macs;
-use nimble::serving::{NimbleServer, ServerConfig};
 use nimble::sim::GpuSpec;
 use nimble::stream::{assign_streams, logical_concurrency_degree, plan_syncs};
-use nimble::util::stats::{fmt_secs, Summary};
+use nimble::util::stats::fmt_secs;
 use nimble::util::table::Table;
-use nimble::util::Pcg32;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -45,6 +46,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("assign") => {
             cmd_assign(args.get(1).map(String::as_str).context("usage: nimble assign <model>")?)
         }
+        Some("replay") => cmd_replay(args),
         Some("sim") => cmd_sim(
             args.get(1).map(String::as_str).context("usage: nimble sim <model> <system>")?,
             args.get(2).map(String::as_str).unwrap_or("Nimble"),
@@ -56,7 +58,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         None => {
             println!(
                 "nimble — reproduction of Nimble (NeurIPS 2020)\n\n\
-                 usage: nimble <figures|models|assign|sim|infer|serve|train> [args]\n\
+                 usage: nimble <figures|models|assign|replay|sim|infer|serve|train> [args]\n\
                  see rust/src/main.rs docs for details"
             );
             Ok(())
@@ -117,6 +119,73 @@ fn cmd_assign(model: &str) -> Result<()> {
     Ok(())
 }
 
+/// Compile a model to a replay tape and drive the parallel executor.
+fn cmd_replay(args: &[String]) -> Result<()> {
+    use nimble::aot::tape::ReplayTape;
+    use nimble::engine::executor::{ReplayContext, SyntheticKernel};
+    use nimble::sim::{kernel_cost, simulate_tape, HostProfile};
+    use nimble::stream::rewrite::{rewrite, rewrite_single_stream};
+    use nimble::util::{Pcg32, Summary};
+
+    let model = args
+        .get(1)
+        .map(String::as_str)
+        .context("usage: nimble replay <model> [--iters K]")?;
+    let iters: usize = flag(args, "--iters").map(|s| s.parse()).transpose()?.unwrap_or(20);
+    let g = models::build(model, 1);
+    let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+    let tape = ReplayTape::for_op_graph(&g, &plan, 4096);
+    println!(
+        "{model}: {} tasks on {} streams, {} events, {} slots",
+        tape.n_tasks(),
+        tape.n_streams(),
+        tape.n_events(),
+        tape.n_slots()
+    );
+
+    let input: Vec<f32> = {
+        let mut rng = Pcg32::new(42);
+        (0..tape.input_slots()[0].1).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect()
+    };
+    let mut par = ReplayContext::new(tape.clone(), SyntheticKernel);
+    let mut ser = ReplayContext::new(tape.clone(), SyntheticKernel);
+    par.replay_one(&input).map_err(anyhow::Error::msg)?;
+    ser.replay_serial(&[&input]).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(par.output() == ser.output(), "parallel and serial outputs diverged");
+    println!("differential: parallel output bit-identical to serial ✓");
+
+    let mut t_par = Vec::with_capacity(iters);
+    let mut t_ser = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        par.replay_one(&input).map_err(anyhow::Error::msg)?;
+        t_par.push(t0.elapsed().as_secs_f64());
+        let t0 = Instant::now();
+        ser.replay_serial(&[&input]).map_err(anyhow::Error::msg)?;
+        t_ser.push(t0.elapsed().as_secs_f64());
+    }
+    let (sp, ss) = (Summary::from_samples(t_par), Summary::from_samples(t_ser));
+    println!(
+        "host wall time (synthetic kernels, {iters} iters): parallel p50 {}  serial p50 {}",
+        fmt_secs(sp.median()),
+        fmt_secs(ss.median()),
+    );
+
+    // DES prediction over the same tapes on a V100-class device.
+    let dev = GpuSpec::v100();
+    let costs: Vec<_> = (0..g.n_nodes()).map(|v| kernel_cost(g.node(v), &dev)).collect();
+    let single = ReplayTape::for_op_graph(&g, &rewrite_single_stream(&g), 4096);
+    let multi_s = simulate_tape(&tape, &costs, HostProfile::nimble(), dev.clone()).total_s;
+    let single_s = simulate_tape(&single, &costs, HostProfile::nimble(), dev).total_s;
+    println!(
+        "DES prediction (V100): single-stream {}  multi-stream {}  speedup {:.2}x",
+        fmt_secs(single_s),
+        fmt_secs(multi_s),
+        single_s / multi_s
+    );
+    Ok(())
+}
+
 fn cmd_sim(model: &str, system: &str) -> Result<()> {
     let b = match system.to_lowercase().as_str() {
         "pytorch" => Baseline::PyTorch,
@@ -153,7 +222,11 @@ fn cmd_sim(model: &str, system: &str) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_infer(args: &[String]) -> Result<()> {
+    use nimble::coordinator::{EngineConfig, ExecMode, NimbleEngine};
+    use nimble::util::{Pcg32, Summary};
+
     let batch: usize = flag(args, "--batch").map(|s| s.parse()).transpose()?.unwrap_or(8);
     let iters: usize = flag(args, "--iters").map(|s| s.parse()).transpose()?.unwrap_or(50);
     let mode = match flag(args, "--mode").as_deref() {
@@ -161,7 +234,7 @@ fn cmd_infer(args: &[String]) -> Result<()> {
         _ => ExecMode::Replay,
     };
     nimble::runtime::require_artifacts()?;
-    let engine = NimbleEngine::build(EngineConfig { mode, ..Default::default() })?;
+    let mut engine = NimbleEngine::build(EngineConfig { mode, ..Default::default() })?;
     let sched = engine.schedule(batch)?;
     println!(
         "engine built: {} tasks, {} streams, {} syncs, arena {} KiB (unshared {} KiB)",
@@ -178,7 +251,10 @@ fn cmd_infer(args: &[String]) -> Result<()> {
     let mut out = Vec::new();
     for _ in 0..iters {
         let t0 = Instant::now();
-        out = engine.infer(batch, &input)?;
+        out = match mode {
+            ExecMode::Replay => engine.infer_prepared(batch, &input)?,
+            ExecMode::Eager => engine.infer(batch, &input)?,
+        };
         samples.push(t0.elapsed());
     }
     let s = Summary::from_durations(&samples);
@@ -193,7 +269,18 @@ fn cmd_infer(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_infer(_args: &[String]) -> Result<()> {
+    bail!("`infer` needs the real PJRT runtime — rebuild with `--features xla` and run `make artifacts`")
+}
+
+#[cfg(feature = "xla")]
 fn cmd_serve(args: &[String]) -> Result<()> {
+    use nimble::coordinator::{EngineConfig, ExecMode};
+    use nimble::serving::{NimbleServer, ServerConfig};
+    use nimble::util::Pcg32;
+    use std::time::Duration;
+
     let n: usize = flag(args, "--requests").map(|s| s.parse()).transpose()?.unwrap_or(200);
     let rate: f64 = flag(args, "--rate").map(|s| s.parse()).transpose()?.unwrap_or(200.0);
     let mode = match flag(args, "--mode").as_deref() {
@@ -222,10 +309,21 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_serve(_args: &[String]) -> Result<()> {
+    bail!("`serve` needs the real PJRT runtime — rebuild with `--features xla` and run `make artifacts`")
+}
+
+#[cfg(feature = "xla")]
 fn cmd_train(args: &[String]) -> Result<()> {
     let steps: usize = flag(args, "--steps").map(|s| s.parse()).transpose()?.unwrap_or(300);
     nimble::runtime::require_artifacts()?;
     let report = nimble::training::run_training(steps, 20)?;
     println!("{}", report.render());
     Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_train(_args: &[String]) -> Result<()> {
+    bail!("`train` needs the real PJRT runtime — rebuild with `--features xla` and run `make artifacts`")
 }

@@ -3,13 +3,17 @@
 //! and exposes compiled executables + pre-staged weight buffers to the
 //! engine. Python never runs here — this is the request path.
 
+#[cfg(feature = "xla")]
 pub mod client;
 pub mod manifest;
 pub mod npy;
+#[cfg(feature = "xla")]
 pub mod registry;
 
+#[cfg(feature = "xla")]
 pub use client::RuntimeClient;
 pub use manifest::{Manifest, NodeEntry};
+#[cfg(feature = "xla")]
 pub use registry::ArtifactRegistry;
 
 use std::path::{Path, PathBuf};

@@ -56,6 +56,16 @@ pub struct FormedBatch<T> {
     pub tokens: Vec<(T, Instant)>,
 }
 
+/// A formed batch whose padded input was written into a caller-owned
+/// buffer ([`Batcher::form_with`]) — the server's allocation-reusing path.
+#[derive(Debug)]
+pub struct FormedTokens<T> {
+    /// Compiled batch size (≥ len of tokens; rest is padding).
+    pub bucket: usize,
+    /// Tokens of the real examples, in input order.
+    pub tokens: Vec<(T, Instant)>,
+}
+
 impl<T> Batcher<T> {
     pub fn new(policy: BatchPolicy) -> Self {
         Batcher { policy, queue: Vec::new() }
@@ -86,19 +96,33 @@ impl<T> Batcher<T> {
     /// Form the next batch (call when `ready`). `example_len` is the per-
     /// example input length; padding examples are zero.
     pub fn form(&mut self, example_len: usize) -> Option<FormedBatch<T>> {
+        let mut input = Vec::new();
+        let ft = self.form_with(example_len, &mut input)?;
+        Some(FormedBatch { bucket: ft.bucket, input, tokens: ft.tokens })
+    }
+
+    /// Like [`form`](Self::form), but writes the zero-padded batch input
+    /// into a caller-owned buffer so the server reuses one allocation
+    /// across batches.
+    pub fn form_with(
+        &mut self,
+        example_len: usize,
+        input: &mut Vec<f32>,
+    ) -> Option<FormedTokens<T>> {
         if self.queue.is_empty() {
             return None;
         }
         let take = self.queue.len().min(self.policy.max_batch());
         let bucket = self.policy.bucket_for(take);
-        let mut input = vec![0.0f32; bucket * example_len];
+        input.clear();
+        input.resize(bucket * example_len, 0.0);
         let mut tokens = Vec::with_capacity(take);
         for (i, p) in self.queue.drain(..take).enumerate() {
             assert_eq!(p.input.len(), example_len, "inconsistent example length");
             input[i * example_len..(i + 1) * example_len].copy_from_slice(&p.input);
             tokens.push((p.token, p.enqueued));
         }
-        Some(FormedBatch { bucket, input, tokens })
+        Some(FormedTokens { bucket, tokens })
     }
 }
 
@@ -174,6 +198,27 @@ mod tests {
     fn empty_form_returns_none() {
         let mut b: Batcher<u32> = Batcher::new(policy());
         assert!(b.form(4).is_none());
+        assert!(b.form_with(4, &mut Vec::new()).is_none());
         assert!(b.next_deadline().is_none());
+    }
+
+    #[test]
+    fn form_with_reuses_buffer_and_repads() {
+        let mut b = Batcher::new(policy());
+        let mut buf = Vec::new();
+        b.push(0, vec![1.0; 4]);
+        b.push(1, vec![2.0; 4]);
+        let ft = b.form_with(4, &mut buf).unwrap();
+        assert_eq!(ft.bucket, 8);
+        assert_eq!(buf.len(), 32);
+        assert_eq!(&buf[..4], &[1.0; 4]);
+        assert!(buf[8..].iter().all(|&v| v == 0.0));
+        let cap = buf.capacity();
+        // refill: stale values must not leak, capacity must be reused
+        b.push(2, vec![3.0; 4]);
+        let ft = b.form_with(4, &mut buf).unwrap();
+        assert_eq!(ft.bucket, 1);
+        assert_eq!(buf, vec![3.0; 4]);
+        assert_eq!(buf.capacity(), cap, "no reallocation on a smaller batch");
     }
 }

@@ -1,15 +1,22 @@
 //! Batched serving front-end — the "serving paper" L3 shape: request
-//! queue → dynamic batcher → Nimble engine → latency/throughput metrics.
+//! queue → dynamic batcher → inference engine → latency/throughput
+//! metrics.
 //!
-//! The engine owns PJRT state, which is not `Send`; the server therefore
-//! runs the engine on a dedicated thread and communicates over channels.
-//! Static shapes (the paper's core assumption) mean the batcher pads each
-//! group to the nearest compiled batch size, TensorRT-profile style.
+//! The server is generic over [`InferEngine`](crate::coordinator::InferEngine)
+//! and runs the engine on a dedicated thread (PJRT state is not `Send`),
+//! communicating over channels. Static shapes (the paper's core
+//! assumption) mean the batcher pads each group to the nearest compiled
+//! batch size, TensorRT-profile style, writing into one reused batch
+//! buffer. Each batch bucket replays on its own reusable context:
+//! [`sim_engine::TapeEngine`] on the virtual substrate (always
+//! available), the PJRT `NimbleEngine` with the `xla` feature.
 
 pub mod batcher;
 pub mod metrics;
 pub mod server;
+pub mod sim_engine;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::ServingReport;
-pub use server::{NimbleServer, ServerConfig};
+pub use server::{NimbleServer, ServerClient, ServerConfig};
+pub use sim_engine::TapeEngine;

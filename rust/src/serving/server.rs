@@ -3,7 +3,19 @@
 //!
 //! Wire-up:
 //!   client threads → mpsc<Request> → [server thread: batcher → engine
-//!   (replay or eager) → per-request responses] → mpsc<Response> per client.
+//!   (any [`InferEngine`]) → per-request responses] → mpsc<Response> per
+//!   client.
+//!
+//! The server is engine-agnostic: [`NimbleServer::start_with`] takes a
+//! factory that builds the engine *on the engine thread* (so non-`Send`
+//! engines like the PJRT one work), and the engine keeps its own
+//! reusable per-bucket replay contexts ([`PreparedReplay`] on the PJRT
+//! side, [`ReplayContext`] in the tape engine). The batcher writes each
+//! padded batch into one reused buffer (`form_with`), so the steady-state
+//! serving loop allocates only for response marshalling.
+//!
+//! [`PreparedReplay`]: crate::aot::tape
+//! [`ReplayContext`]: crate::engine::executor::ReplayContext
 
 use anyhow::{Context, Result};
 use std::sync::mpsc;
@@ -12,10 +24,10 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::ServingReport;
-use crate::coordinator::{EngineConfig, ExecMode, NimbleEngine};
+use crate::coordinator::{EngineConfig, ExecMode, InferEngine};
 use crate::util::stats::Summary;
 
-/// Server configuration.
+/// Server configuration (PJRT-backed engine).
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub engine: EngineConfig,
@@ -38,27 +50,94 @@ pub struct NimbleServer {
     tx: mpsc::Sender<Msg>,
     join: Option<JoinHandle<()>>,
     example_len: usize,
+    output_len: usize,
+}
+
+/// Cloneable, `Send` request handle: one per client thread
+/// ([`NimbleServer::client`]). Dropping clients does not stop the server.
+#[derive(Clone)]
+pub struct ServerClient {
+    tx: mpsc::Sender<Msg>,
+    example_len: usize,
+    output_len: usize,
+}
+
+impl ServerClient {
+    pub fn example_len(&self) -> usize {
+        self.example_len
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_len
+    }
+
+    /// Blocking inference of one example.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Infer { input, reply })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().context("server dropped request")?.map_err(anyhow::Error::msg)
+    }
+
+    /// Fire an async request; returns the reply channel.
+    pub fn infer_async(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Infer { input, reply })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rx)
+    }
 }
 
 impl NimbleServer {
-    /// Start the server; blocks until the engine thread finished its AoT
+    /// Start a server over any [`InferEngine`]; the factory runs on the
+    /// engine thread and the call blocks until the engine finished its
     /// build (so the first request is already schedule-replayed).
-    pub fn start(config: ServerConfig) -> Result<NimbleServer> {
+    pub fn start_with<E, F>(factory: F, max_wait: Duration) -> Result<NimbleServer>
+    where
+        E: InferEngine + 'static,
+        F: FnOnce() -> Result<E> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize, String>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize), String>>();
         let join = std::thread::Builder::new()
             .name("nimble-engine".into())
-            .spawn(move || engine_thread(config, rx, ready_tx))
+            .spawn(move || engine_thread(factory, max_wait, rx, ready_tx))
             .context("spawning engine thread")?;
-        let example_len = ready_rx
+        let (example_len, output_len) = ready_rx
             .recv()
             .context("engine thread died during build")?
             .map_err(anyhow::Error::msg)?;
-        Ok(NimbleServer { tx, join: Some(join), example_len })
+        Ok(NimbleServer { tx, join: Some(join), example_len, output_len })
+    }
+
+    /// Start the PJRT-backed server (the paper's real-runtime path).
+    #[cfg(feature = "xla")]
+    pub fn start(config: ServerConfig) -> Result<NimbleServer> {
+        let engine_config = config.engine.clone();
+        Self::start_with(
+            move || crate::coordinator::NimbleEngine::build(engine_config),
+            config.max_wait,
+        )
     }
 
     pub fn example_len(&self) -> usize {
         self.example_len
+    }
+
+    /// Flattened output length of one example.
+    pub fn output_len(&self) -> usize {
+        self.output_len
+    }
+
+    /// A cloneable request handle for client threads.
+    pub fn client(&self) -> ServerClient {
+        ServerClient {
+            tx: self.tx.clone(),
+            example_len: self.example_len,
+            output_len: self.output_len,
+        }
     }
 
     /// Blocking inference of one example.
@@ -91,12 +170,13 @@ impl NimbleServer {
     }
 }
 
-fn engine_thread(
-    config: ServerConfig,
+fn engine_thread<E: InferEngine>(
+    factory: impl FnOnce() -> Result<E>,
+    max_wait: Duration,
     rx: mpsc::Receiver<Msg>,
-    ready: mpsc::Sender<Result<usize, String>>,
+    ready: mpsc::Sender<Result<(usize, usize), String>>,
 ) {
-    let engine = match NimbleEngine::build(config.engine.clone()) {
+    let mut engine = match factory() {
         Ok(e) => e,
         Err(err) => {
             let _ = ready.send(Err(format!("{err:#}")));
@@ -104,18 +184,14 @@ fn engine_thread(
         }
     };
     let batch_sizes = engine.batch_sizes();
-    let max_batch = engine.max_batch();
-    let example_len = match engine.example_len(max_batch) {
-        Ok(l) => l,
-        Err(err) => {
-            let _ = ready.send(Err(format!("{err:#}")));
-            return;
-        }
-    };
-    let _ = ready.send(Ok(example_len));
+    let example_len = engine.example_len();
+    let output_len = engine.output_len();
+    let _ = ready.send(Ok((example_len, output_len)));
 
-    let policy = BatchPolicy { batch_sizes, max_wait: config.max_wait };
+    let policy = BatchPolicy { batch_sizes, max_wait };
     let mut batcher: Batcher<mpsc::Sender<Result<Vec<f32>, String>>> = Batcher::new(policy);
+    // Reused padded-batch input buffer (`Batcher::form_with`).
+    let mut batch_input: Vec<f32> = Vec::new();
     let started = Instant::now();
     let mut latencies: Vec<f64> = Vec::new();
     let mut n_requests = 0usize;
@@ -160,18 +236,16 @@ fn engine_thread(
         while (shutdown_reply.is_some() && batcher.pending() > 0)
             || batcher.ready(Instant::now())
         {
-            let Some(fb) = batcher.form(example_len) else { break };
+            let Some(fb) = batcher.form_with(example_len, &mut batch_input) else { break };
             n_batches += 1;
             fill_sum += fb.tokens.len();
-            let out_len_per_example = 10; // classifier head (manifest-fixed)
-            match engine.infer(fb.bucket, &fb.input) {
+            match engine.infer_batch(fb.bucket, &batch_input) {
                 Ok(out) => {
                     let done = Instant::now();
                     for (i, (reply, enq)) in fb.tokens.into_iter().enumerate() {
                         latencies.push(done.duration_since(enq).as_secs_f64());
                         n_requests += 1;
-                        let slice =
-                            out[i * out_len_per_example..(i + 1) * out_len_per_example].to_vec();
+                        let slice = out[i * output_len..(i + 1) * output_len].to_vec();
                         let _ = reply.send(Ok(slice));
                     }
                 }

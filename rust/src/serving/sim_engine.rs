@@ -1,0 +1,147 @@
+//! Tape-backed serving engine for the virtual-GPU substrate.
+//!
+//! [`TapeEngine`] is the non-PJRT implementation of
+//! [`InferEngine`](crate::coordinator::InferEngine): per compiled batch
+//! bucket it builds the model's operator graph, runs Algorithm 1 + the
+//! graph rewriter, compiles the launch plan into a
+//! [`ReplayTape`](crate::aot::tape::ReplayTape), and keeps an
+//! **independent [`ReplayContext`]** (its own slot arena, event table
+//! and per-stream worker pool). Buckets therefore replay concurrently
+//! and a hot bucket never contends with a cold one — and the steady-
+//! state request loop performs zero per-task heap allocation.
+//!
+//! This engine is what lets the whole serving stack (batcher, deadlines,
+//! padding, reports) run — and be tested — without artifacts or a PJRT
+//! backend.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+use crate::aot::tape::ReplayTape;
+use crate::coordinator::InferEngine;
+use crate::engine::executor::{ReplayContext, SyntheticKernel};
+use crate::matching::MatchingAlgo;
+use crate::models;
+use crate::stream::rewrite::rewrite;
+
+/// Intermediate-activation clamp for the synthetic substrate (input and
+/// output slots keep their true lengths).
+const MAX_TASK_ELEMS: usize = 4096;
+
+/// One independent replay context per compiled batch bucket.
+pub struct TapeEngine {
+    batch_sizes: Vec<usize>,
+    example_len: usize,
+    output_len: usize,
+    contexts: HashMap<usize, ReplayContext>,
+}
+
+impl TapeEngine {
+    /// Build contexts for `model` at each batch bucket.
+    pub fn new(model: &str, batch_sizes: &[usize]) -> Result<TapeEngine> {
+        anyhow::ensure!(!batch_sizes.is_empty(), "need at least one batch size");
+        let mut sizes: Vec<usize> = batch_sizes.to_vec();
+        sizes.sort_unstable();
+        sizes.dedup();
+        let mut contexts = HashMap::new();
+        let mut example_len = 0usize;
+        let mut output_len = 0usize;
+        for &batch in &sizes {
+            let g = models::build(model, batch);
+            let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+            let tape = ReplayTape::for_op_graph(&g, &plan, MAX_TASK_ELEMS);
+            anyhow::ensure!(
+                tape.input_slots().len() == 1,
+                "{model}: expected exactly one input, got {}",
+                tape.input_slots().len()
+            );
+            let in_len = tape.input_slots()[0].1;
+            let out_len = g.node(tape.output_slot()).out_shape.numel();
+            anyhow::ensure!(
+                in_len % batch == 0 && out_len % batch == 0,
+                "{model}: lengths not divisible by batch {batch}"
+            );
+            anyhow::ensure!(
+                out_len <= MAX_TASK_ELEMS,
+                "{model}: output larger than the substrate clamp"
+            );
+            let (per_in, per_out) = (in_len / batch, out_len / batch);
+            if example_len == 0 {
+                example_len = per_in;
+                output_len = per_out;
+            } else {
+                anyhow::ensure!(
+                    example_len == per_in && output_len == per_out,
+                    "{model}: inconsistent per-example shapes across batches"
+                );
+            }
+            contexts.insert(batch, ReplayContext::new(tape, SyntheticKernel));
+        }
+        Ok(TapeEngine { batch_sizes: sizes, example_len, output_len, contexts })
+    }
+
+    /// Direct access to a bucket's context (tests, benches).
+    pub fn context_mut(&mut self, batch: usize) -> Option<&mut ReplayContext> {
+        self.contexts.get_mut(&batch)
+    }
+}
+
+impl InferEngine for TapeEngine {
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.batch_sizes.clone()
+    }
+
+    fn example_len(&self) -> usize {
+        self.example_len
+    }
+
+    fn output_len(&self) -> usize {
+        self.output_len
+    }
+
+    fn infer_batch(&mut self, bucket: usize, input: &[f32]) -> Result<Vec<f32>> {
+        let ctx = self
+            .contexts
+            .get_mut(&bucket)
+            .with_context(|| format!("no replay context for batch {bucket}"))?;
+        ctx.replay_one(input).map_err(anyhow::Error::msg)?;
+        Ok(ctx.output().to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect()).collect()
+    }
+
+    #[test]
+    fn engine_reports_consistent_shapes() {
+        let e = TapeEngine::new("mini_inception", &[1, 8]).unwrap();
+        assert_eq!(e.batch_sizes(), vec![1, 8]);
+        assert!(e.example_len() > 0);
+        assert!(e.output_len() > 0);
+    }
+
+    #[test]
+    fn batch_one_and_padded_batch_agree_on_shared_prefix() {
+        let mut e = TapeEngine::new("mini_inception", &[1, 8]).unwrap();
+        let len = e.example_len();
+        let x = inputs(1, len, 5).pop().unwrap();
+        let out1 = e.infer_batch(1, &x).unwrap();
+        assert_eq!(out1.len(), e.output_len());
+        // replays are deterministic per bucket
+        let out1b = e.infer_batch(1, &x).unwrap();
+        assert_eq!(out1, out1b);
+    }
+
+    #[test]
+    fn unknown_bucket_errors() {
+        let mut e = TapeEngine::new("mini_inception", &[1]).unwrap();
+        assert!(e.infer_batch(4, &[0.0; 16]).is_err());
+    }
+}

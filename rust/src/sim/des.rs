@@ -230,6 +230,23 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
     SimResult { spans, total_s: device_end.max(host_s), host_s, gpu_active_s }
 }
 
+/// Replay a compiled [`ReplayTape`](crate::aot::tape::ReplayTape) on the
+/// simulator. The tape round-trips to the launch plan it was compiled
+/// from, so this predicts exactly what [`simulate`] predicts for that
+/// plan — the DES cross-check for the real parallel executor: predicted
+/// multi-stream speedups on one side, measured task interleavings
+/// (`ReplayContext::completion_stamps`) on the other, over the *same*
+/// artifact.
+pub fn simulate_tape(
+    tape: &crate::aot::tape::ReplayTape,
+    costs: &[KernelCost],
+    host: HostProfile,
+    device: GpuSpec,
+) -> SimResult {
+    let plan = tape.to_launch_plan();
+    simulate(&SimConfig { plan: &plan, costs, host, device })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -379,6 +396,30 @@ mod tests {
         let pt = run(HostProfile::pytorch());
         let nb = run(HostProfile::nimble());
         assert!(pt > 1.5 * nb, "pytorch {pt} vs nimble {nb}");
+    }
+
+    #[test]
+    fn tape_simulation_matches_plan_simulation_exactly() {
+        // The tape is a lossless re-encoding of the launch plan: the DES
+        // must produce bit-identical spans through either route.
+        for name in ["mini_inception", "inception_v3"] {
+            let g = crate::models::build(name, 1);
+            let dev = GpuSpec::v100();
+            let cs = costs(&g, &dev);
+            for plan in [rewrite(&g, MatchingAlgo::HopcroftKarp), rewrite_single_stream(&g)] {
+                let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+                let a = simulate(&SimConfig {
+                    plan: &plan,
+                    costs: &cs,
+                    host: HostProfile::nimble(),
+                    device: dev.clone(),
+                });
+                let b = simulate_tape(&tape, &cs, HostProfile::nimble(), dev.clone());
+                assert_eq!(a.spans, b.spans, "{name}: spans diverged");
+                assert_eq!(a.total_s.to_bits(), b.total_s.to_bits(), "{name}");
+                assert_eq!(a.host_s.to_bits(), b.host_s.to_bits(), "{name}");
+            }
+        }
     }
 
     #[test]

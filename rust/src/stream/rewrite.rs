@@ -74,13 +74,15 @@ fn build_plan<N>(
     syncs: &SyncPlan,
 ) -> LaunchPlan {
     let order = topo_order(g).expect("rewrite requires a DAG");
+    // Per-node event lists come from the plan's precomputed CSR index —
+    // slice copies, not O(|Λ|) scans.
     let plans = order
         .iter()
         .map(|&v| NodePlan {
             node: v,
             stream: stream_of[v],
-            wait_events: syncs.waits_before(v),
-            record_events: syncs.records_after(v),
+            wait_events: syncs.waits_before(v).to_vec(),
+            record_events: syncs.records_after(v).to_vec(),
         })
         .collect();
     LaunchPlan {

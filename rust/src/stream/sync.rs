@@ -6,6 +6,10 @@
 //! A synchronization on edge `(u, v)` means: record an event after task `u`
 //! on stream `f(u)`, and make stream `f(v)` wait on that event before task
 //! `v` (the paper's `cudaStreamWaitEvent` pattern).
+//!
+//! The plan carries a per-node event index (CSR over wait/record lists)
+//! built once at construction, so the rewriter's per-node queries are
+//! allocation-free slice lookups instead of O(|Λ|) scans.
 
 use super::assign::StreamAssignment;
 use crate::graph::{Dag, NodeId};
@@ -19,25 +23,69 @@ pub struct Sync {
     pub event: usize,
 }
 
-/// The synchronization plan Λ.
+/// The synchronization plan Λ, with a per-node CSR index over the wait
+/// (incoming) and record (outgoing) event lists. The sync list is
+/// private so it cannot drift out of sync with the index — construct
+/// through [`SyncPlan::new`], read through [`SyncPlan::syncs`].
 #[derive(Debug, Clone, Default)]
 pub struct SyncPlan {
-    pub syncs: Vec<Sync>,
+    syncs: Vec<Sync>,
+    wait_start: Vec<u32>,
+    wait_evt: Vec<usize>,
+    rec_start: Vec<u32>,
+    rec_evt: Vec<usize>,
 }
 
 impl SyncPlan {
+    /// Build a plan and its per-node event index. Events keep the order
+    /// they appear in `syncs` within each node's list.
+    pub fn new(syncs: Vec<Sync>, n_nodes: usize) -> SyncPlan {
+        let mut wait_start = vec![0u32; n_nodes + 1];
+        let mut rec_start = vec![0u32; n_nodes + 1];
+        for s in &syncs {
+            wait_start[s.dst + 1] += 1;
+            rec_start[s.src + 1] += 1;
+        }
+        for v in 0..n_nodes {
+            wait_start[v + 1] += wait_start[v];
+            rec_start[v + 1] += rec_start[v];
+        }
+        let mut wait_evt = vec![0usize; syncs.len()];
+        let mut rec_evt = vec![0usize; syncs.len()];
+        let mut wait_cursor: Vec<u32> = wait_start[..n_nodes].to_vec();
+        let mut rec_cursor: Vec<u32> = rec_start[..n_nodes].to_vec();
+        for s in &syncs {
+            wait_evt[wait_cursor[s.dst] as usize] = s.event;
+            wait_cursor[s.dst] += 1;
+            rec_evt[rec_cursor[s.src] as usize] = s.event;
+            rec_cursor[s.src] += 1;
+        }
+        SyncPlan { syncs, wait_start, wait_evt, rec_start, rec_evt }
+    }
+
     pub fn n_syncs(&self) -> usize {
         self.syncs.len()
     }
 
-    /// Events to wait on before launching `v`.
-    pub fn waits_before(&self, v: NodeId) -> Vec<usize> {
-        self.syncs.iter().filter(|s| s.dst == v).map(|s| s.event).collect()
+    /// The synchronizations, in construction order.
+    pub fn syncs(&self) -> &[Sync] {
+        &self.syncs
     }
 
-    /// Events to record after `u` completes.
-    pub fn records_after(&self, u: NodeId) -> Vec<usize> {
-        self.syncs.iter().filter(|s| s.src == u).map(|s| s.event).collect()
+    /// Events to wait on before launching `v` (indexed slice, no scan).
+    pub fn waits_before(&self, v: NodeId) -> &[usize] {
+        if v + 1 >= self.wait_start.len() {
+            return &[];
+        }
+        &self.wait_evt[self.wait_start[v] as usize..self.wait_start[v + 1] as usize]
+    }
+
+    /// Events to record after `u` completes (indexed slice, no scan).
+    pub fn records_after(&self, u: NodeId) -> &[usize] {
+        if u + 1 >= self.rec_start.len() {
+            return &[];
+        }
+        &self.rec_evt[self.rec_start[u] as usize..self.rec_start[u + 1] as usize]
     }
 }
 
@@ -50,7 +98,7 @@ pub fn plan_syncs(assignment: &StreamAssignment) -> SyncPlan {
             syncs.push(Sync { src: u, dst: v, event });
         }
     }
-    SyncPlan { syncs }
+    SyncPlan::new(syncs, assignment.stream_of.len())
 }
 
 /// Check the *operational* safety of a plan: build the "guarantee graph" H
@@ -148,14 +196,10 @@ mod tests {
         let order = topo_order(&g).unwrap();
         assert!(plan_is_safe(&g, &a.stream_of, &order, &plan));
         for drop in 0..plan.n_syncs() {
-            let reduced = SyncPlan {
-                syncs: plan
-                    .syncs
-                    .iter()
-                    .copied()
-                    .filter(|s| s.event != drop)
-                    .collect(),
-            };
+            let reduced = SyncPlan::new(
+                plan.syncs.iter().copied().filter(|s| s.event != drop).collect(),
+                g.n_nodes(),
+            );
             assert!(
                 !plan_is_safe(&g, &a.stream_of, &order, &reduced),
                 "plan stayed safe after dropping sync {drop}"
@@ -181,15 +225,38 @@ mod tests {
 
     #[test]
     fn waits_and_records_lookup() {
-        let plan = SyncPlan {
-            syncs: vec![
+        let plan = SyncPlan::new(
+            vec![
                 Sync { src: 0, dst: 3, event: 0 },
                 Sync { src: 1, dst: 3, event: 1 },
                 Sync { src: 0, dst: 2, event: 2 },
             ],
-        };
-        assert_eq!(plan.waits_before(3), vec![0, 1]);
-        assert_eq!(plan.records_after(0), vec![0, 2]);
+            4,
+        );
+        assert_eq!(plan.waits_before(3), &[0, 1][..]);
+        assert_eq!(plan.records_after(0), &[0, 2][..]);
         assert!(plan.waits_before(0).is_empty());
+        // out-of-range nodes (default plans) answer empty, never panic
+        assert!(plan.waits_before(99).is_empty());
+        assert!(SyncPlan::default().waits_before(0).is_empty());
+        assert!(SyncPlan::default().records_after(5).is_empty());
+    }
+
+    #[test]
+    fn index_matches_linear_scan_on_random_plans() {
+        let mut rng = Pcg32::new(0x51DE);
+        for _ in 0..20 {
+            let g = random_dag(&mut rng, 35, 0.12);
+            let a = assign_streams(&g, MatchingAlgo::HopcroftKarp);
+            let plan = plan_syncs(&a);
+            for v in 0..g.n_nodes() {
+                let waits: Vec<usize> =
+                    plan.syncs.iter().filter(|s| s.dst == v).map(|s| s.event).collect();
+                let recs: Vec<usize> =
+                    plan.syncs.iter().filter(|s| s.src == v).map(|s| s.event).collect();
+                assert_eq!(plan.waits_before(v), waits.as_slice(), "waits of {v}");
+                assert_eq!(plan.records_after(v), recs.as_slice(), "records of {v}");
+            }
+        }
     }
 }

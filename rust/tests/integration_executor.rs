@@ -1,0 +1,330 @@
+//! Integration: the parallel multi-stream replay executor.
+//!
+//! * **Differential**: parallel replay must be bit-identical to the
+//!   serial oracle on every model-zoo graph and on random DAGs — any
+//!   missed synchronization surfaces as a slot mismatch.
+//! * **Bounded join**: with a safe sync plan the event table can never
+//!   deadlock; every wait carries a deadline, so even an injected worker
+//!   failure resolves to an error within bounded time, never a hang.
+//! * **Zero allocation**: the instrumented `ReplayContext` counter stays
+//!   at zero across steady-state replays.
+//! * **DES cross-check**: the simulator replays the *same tape*; its
+//!   event ordering and the executor's measured completion stamps must
+//!   both respect every record→wait edge, and the predicted multi-stream
+//!   speedup on wide cells (Inception/NASNet shapes) must be ≥ 1.5×.
+
+use nimble::aot::tape::ReplayTape;
+use nimble::engine::executor::{ReplayContext, SyntheticKernel, TapeKernel};
+use nimble::graph::gen::{layered_dag, random_dag};
+use nimble::matching::MatchingAlgo;
+use nimble::models;
+use nimble::ops::{GraphBuilder, OpGraph};
+use nimble::sim::{kernel_cost, simulate_tape, GpuSpec, HostProfile};
+use nimble::stream::rewrite::{rewrite, rewrite_single_stream};
+use nimble::util::Pcg32;
+use std::time::Duration;
+
+fn random_input(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect()
+}
+
+fn assert_slots_bit_identical(a: &ReplayContext, b: &ReplayContext, what: &str) {
+    let n = a.tape().n_slots();
+    for s in 0..n {
+        let (x, y) = (a.slot(s), b.slot(s));
+        assert_eq!(x.len(), y.len(), "{what}: slot {s} length");
+        for (i, (p, q)) in x.iter().zip(y).enumerate() {
+            assert_eq!(p.to_bits(), q.to_bits(), "{what}: slot {s} elem {i}: {p} vs {q}");
+        }
+    }
+}
+
+#[test]
+fn parallel_replay_is_bit_identical_on_every_zoo_model() {
+    for spec in models::MODELS {
+        let g = models::build(spec.name, 1);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = ReplayTape::for_op_graph(&g, &plan, 256);
+        let input = random_input(tape.input_slots()[0].1, 0xA11 + spec.name.len() as u64);
+        let mut par = ReplayContext::new(tape.clone(), SyntheticKernel);
+        let mut ser = ReplayContext::new(tape, SyntheticKernel);
+        par.replay_one(&input).unwrap_or_else(|e| panic!("{}: parallel: {e}", spec.name));
+        ser.replay_serial(&[&input]).unwrap_or_else(|e| panic!("{}: serial: {e}", spec.name));
+        assert_slots_bit_identical(&par, &ser, spec.name);
+    }
+}
+
+#[test]
+fn parallel_replay_is_bit_identical_on_random_dags() {
+    let mut rng = Pcg32::new(0xD1FF);
+    for case in 0..30 {
+        let g = if case % 2 == 0 {
+            random_dag(&mut rng, 2 + (case as usize * 3) % 45, 0.12)
+        } else {
+            layered_dag(&mut rng, 1 + case as usize % 4, 5, 3)
+        };
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = ReplayTape::for_dag(&g, &plan);
+        let mut par = ReplayContext::new(tape.clone(), SyntheticKernel);
+        let mut ser = ReplayContext::new(tape, SyntheticKernel);
+        par.replay(&[]).unwrap_or_else(|e| panic!("case {case}: parallel: {e}"));
+        ser.replay_serial(&[]).unwrap_or_else(|e| panic!("case {case}: serial: {e}"));
+        assert_slots_bit_identical(&par, &ser, &format!("random case {case}"));
+        // replay twice: slot reuse across requests must stay correct
+        par.replay(&[]).unwrap();
+        assert_slots_bit_identical(&par, &ser, &format!("random case {case} (2nd replay)"));
+    }
+}
+
+#[test]
+fn steady_state_replay_performs_zero_heap_allocation() {
+    for name in ["mini_inception", "inception_v3"] {
+        let g = models::build(name, 1);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = ReplayTape::for_op_graph(&g, &plan, 256);
+        let input = random_input(tape.input_slots()[0].1, 99);
+        let mut ctx = ReplayContext::new(tape, SyntheticKernel);
+        ctx.replay_one(&input).unwrap(); // warm-up sizes everything
+        ctx.reset_alloc_events();
+        for _ in 0..8 {
+            ctx.replay_one(&input).unwrap();
+        }
+        let sched = ctx.replay_serial_with_stats(&[&input]).unwrap();
+        assert!(sched >= 0.0);
+        assert_eq!(
+            ctx.alloc_events(),
+            0,
+            "{name}: steady-state replay loop must not allocate"
+        );
+    }
+}
+
+#[test]
+fn bounded_join_no_deadlock_on_any_safe_plan() {
+    // 40 random safe plans through the parallel executor with a short
+    // watchdog: every replay must complete (Ok) well inside the deadline
+    // — the event table cannot deadlock under a safe plan, and if it
+    // ever did, the watchdog converts the hang into a bounded-time Err.
+    let mut rng = Pcg32::new(0xDEAD);
+    let started = std::time::Instant::now();
+    for case in 0..40 {
+        let g = if case % 2 == 0 {
+            random_dag(&mut rng, 2 + (case as usize * 7) % 50, 0.15)
+        } else {
+            layered_dag(&mut rng, 1 + case as usize % 5, 6, 2)
+        };
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = ReplayTape::for_dag(&g, &plan);
+        let mut ctx = ReplayContext::with_config(
+            tape,
+            SyntheticKernel,
+            Vec::new(),
+            Duration::from_secs(5),
+        );
+        ctx.replay(&[]).unwrap_or_else(|e| panic!("case {case} did not complete: {e}"));
+    }
+    assert!(
+        started.elapsed() < Duration::from_secs(60),
+        "bounded-join suite took too long: {:?}",
+        started.elapsed()
+    );
+}
+
+/// Kernel that panics exactly once (first execution of node 1), to prove
+/// a worker failure resolves to a bounded-time `Err` — never a hang —
+/// and the pool survives for the next replay.
+struct PanicOnceKernel {
+    fired: std::sync::atomic::AtomicBool,
+}
+
+impl TapeKernel for PanicOnceKernel {
+    fn execute(&self, op: &nimble::aot::tape::TapeOp, args: &[&[f32]], out: &mut [f32]) {
+        if op.node == 1 && !self.fired.swap(true, std::sync::atomic::Ordering::SeqCst) {
+            panic!("injected kernel failure");
+        }
+        SyntheticKernel.execute(op, args, out);
+    }
+}
+
+#[test]
+fn worker_failure_errors_in_bounded_time_and_pool_recovers() {
+    let mut g: nimble::graph::Dag<()> = nimble::graph::Dag::new();
+    for _ in 0..4 {
+        g.add_node(());
+    }
+    g.add_edge(0, 1);
+    g.add_edge(0, 2);
+    g.add_edge(1, 3);
+    g.add_edge(2, 3);
+    let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+    let tape = ReplayTape::for_dag(&g, &plan);
+    let kernel = PanicOnceKernel { fired: std::sync::atomic::AtomicBool::new(false) };
+    let mut ctx =
+        ReplayContext::with_config(tape.clone(), kernel, Vec::new(), Duration::from_millis(300));
+    let t0 = std::time::Instant::now();
+    // Note: the injected panic prints a backtrace to stderr; expected.
+    assert!(ctx.replay(&[]).is_err(), "failed worker must surface an error");
+    assert!(t0.elapsed() < Duration::from_secs(5), "failure must resolve in bounded time");
+    // The pool survives: the kernel no longer panics, replay succeeds
+    // and matches the serial oracle.
+    ctx.replay(&[]).expect("pool must recover after a worker panic");
+    let mut ser = ReplayContext::new(tape, SyntheticKernel);
+    ser.replay_serial(&[]).unwrap();
+    assert_slots_bit_identical(&ctx, &ser, "post-recovery replay");
+}
+
+#[test]
+fn executor_interleaving_respects_the_sync_plan_like_the_des() {
+    // The same tape drives both the real executor and the simulator;
+    // both must honor every record→wait edge and per-stream FIFO order.
+    let g = models::build("mini_inception", 1);
+    let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+    assert!(plan.n_streams > 1, "test premise: multi-stream plan");
+    let tape = ReplayTape::for_op_graph(&g, &plan, 256);
+    let input = random_input(tape.input_slots()[0].1, 5);
+    let mut ctx = ReplayContext::new(tape.clone(), SyntheticKernel);
+    ctx.set_tracing(true);
+    ctx.replay_one(&input).unwrap();
+    let stamps = ctx.completion_stamps();
+    assert!(stamps.iter().all(|&s| s > 0), "every record must complete");
+
+    // recorder of each event
+    let mut recorder = vec![usize::MAX; tape.n_events()];
+    for i in 0..tape.n_ops() {
+        for &e in tape.records(tape.op(i)) {
+            recorder[e as usize] = i;
+        }
+    }
+    // (a) measured interleaving: per-stream FIFO + record-before-wait
+    for s in 0..tape.n_streams() {
+        let idxs = tape.stream_ops(s);
+        for w in idxs.windows(2) {
+            assert!(
+                stamps[w[0] as usize] < stamps[w[1] as usize],
+                "stream {s} FIFO violated"
+            );
+        }
+    }
+    for i in 0..tape.n_ops() {
+        for &e in tape.waits(tape.op(i)) {
+            let r = recorder[e as usize];
+            assert!(
+                stamps[r] < stamps[i],
+                "event {e}: recorder stamp {} !< waiter stamp {}",
+                stamps[r],
+                stamps[i]
+            );
+        }
+    }
+    // (b) predicted interleaving: the DES over the same tape obeys the
+    // same edges (recorder finishes before the waiter starts).
+    let dev = GpuSpec::v100();
+    let costs: Vec<_> = (0..g.n_nodes()).map(|v| kernel_cost(g.node(v), &dev)).collect();
+    let sim = simulate_tape(&tape, &costs, HostProfile::nimble(), dev);
+    let span_of = |node: usize| sim.spans.iter().find(|sp| sp.node == node).unwrap();
+    for i in 0..tape.n_ops() {
+        let op = tape.op(i);
+        for &e in tape.waits(op) {
+            let r = tape.op(recorder[e as usize]);
+            assert!(
+                span_of(r.node as usize).end_s <= span_of(op.node as usize).start_s + 1e-12,
+                "DES violated event {e}"
+            );
+        }
+    }
+}
+
+/// Inception-like wide cell: `branches` parallel convolutions joined by
+/// a channel concat — each branch sized to occupy a fraction of the SMs
+/// so true concurrency is possible (the Table 1 shape).
+fn inception_cell(branches: usize) -> OpGraph {
+    let mut b = GraphBuilder::new();
+    let x = b.input(&[1, 32, 28, 28]);
+    let outs: Vec<_> = (0..branches).map(|_| b.conv(x, 32, 3, 1)).collect();
+    let _ = b.concat(&outs);
+    b.finish()
+}
+
+/// NASNet-like cell: parallel conv→relu chains pairwise combined by adds
+/// and concatenated (many small ops, high logical concurrency).
+fn nasnet_cell(branches: usize) -> OpGraph {
+    let mut b = GraphBuilder::new();
+    let x = b.input(&[1, 32, 28, 28]);
+    let outs: Vec<_> = (0..branches)
+        .map(|_| {
+            let c = b.conv(x, 32, 3, 1);
+            b.relu(c)
+        })
+        .collect();
+    let combined: Vec<_> = outs
+        .chunks(2)
+        .map(|pair| if pair.len() == 2 { b.add(pair[0], pair[1]) } else { pair[0] })
+        .collect();
+    let _ = b.concat(&combined);
+    b.finish()
+}
+
+#[test]
+fn des_predicts_multistream_speedup_on_wide_cells() {
+    let dev = GpuSpec::v100();
+    for (name, g) in [
+        ("inception_cell", inception_cell(8)),
+        ("nasnet_cell", nasnet_cell(10)),
+    ] {
+        let costs: Vec<_> = (0..g.n_nodes()).map(|v| kernel_cost(g.node(v), &dev)).collect();
+        let multi = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        assert!(multi.n_streams >= 4, "{name}: expected a wide plan");
+        let tape_multi = ReplayTape::for_op_graph(&g, &multi, 4096);
+        let tape_single = ReplayTape::for_op_graph(&g, &rewrite_single_stream(&g), 4096);
+        let t_multi =
+            simulate_tape(&tape_multi, &costs, HostProfile::nimble(), dev.clone()).total_s;
+        let t_single =
+            simulate_tape(&tape_single, &costs, HostProfile::nimble(), dev.clone()).total_s;
+        let speedup = t_single / t_multi;
+        assert!(
+            speedup >= 1.5,
+            "{name}: multi-stream tape speedup {speedup:.2}x < 1.5x \
+             (single {t_single:.6}s, multi {t_multi:.6}s)"
+        );
+        // And the executor runs the same wide tape bit-identically.
+        let input = random_input(tape_multi.input_slots()[0].1, 21);
+        let mut par = ReplayContext::new(tape_multi.clone(), SyntheticKernel);
+        let mut ser = ReplayContext::new(tape_multi, SyntheticKernel);
+        par.replay_one(&input).unwrap();
+        ser.replay_serial(&[&input]).unwrap();
+        assert_slots_bit_identical(&par, &ser, name);
+    }
+}
+
+#[test]
+fn independent_contexts_replay_concurrently() {
+    // The serving path keeps one context per batch bucket; two contexts
+    // replaying at the same time from different threads must not
+    // interfere (separate arenas, events, pools).
+    let g = models::build("mini_inception", 1);
+    let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+    let tape = ReplayTape::for_op_graph(&g, &plan, 256);
+    let input_a = random_input(tape.input_slots()[0].1, 1);
+    let input_b = random_input(tape.input_slots()[0].1, 2);
+
+    let mut oracle = ReplayContext::new(tape.clone(), SyntheticKernel);
+    oracle.replay_serial(&[&input_a]).unwrap();
+    let expect_a: Vec<f32> = oracle.output().to_vec();
+    oracle.replay_serial(&[&input_b]).unwrap();
+    let expect_b: Vec<f32> = oracle.output().to_vec();
+
+    let spawn = |tape: ReplayTape, input: Vec<f32>, expect: Vec<f32>| {
+        std::thread::spawn(move || {
+            let mut ctx = ReplayContext::new(tape, SyntheticKernel);
+            for _ in 0..10 {
+                ctx.replay_one(&input).unwrap();
+                assert_eq!(ctx.output(), expect.as_slice());
+            }
+        })
+    };
+    let ha = spawn(tape.clone(), input_a, expect_a);
+    let hb = spawn(tape, input_b, expect_b);
+    ha.join().unwrap();
+    hb.join().unwrap();
+}

@@ -4,6 +4,8 @@
 //! claim: Nimble "does not affect the output values of neural networks").
 //!
 //! Skips (with a notice) when `make artifacts` has not been run.
+//! Compiled only with the `xla` feature (the PJRT runtime path).
+#![cfg(feature = "xla")]
 
 use nimble::aot::TaskSchedule;
 use nimble::engine::EagerEngine;

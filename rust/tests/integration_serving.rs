@@ -1,24 +1,21 @@
-//! Integration: the serving stack over the real engine — batching,
-//! correctness under concurrency, mode equivalence, error paths.
-//! Skips without artifacts.
+//! Integration: the serving stack — batching, correctness under
+//! concurrency, error paths, per-bucket replay contexts.
+//!
+//! The primary tests run over the tape-backed [`TapeEngine`] (virtual
+//! substrate, always available, no artifacts needed). The PJRT-backed
+//! server tests live in the `xla` module at the bottom and additionally
+//! skip without artifacts.
 
-use nimble::coordinator::{EngineConfig, ExecMode};
-use nimble::serving::{NimbleServer, ServerConfig};
+use nimble::serving::{NimbleServer, TapeEngine};
 use nimble::util::Pcg32;
 use std::time::Duration;
 
-fn server(mode: ExecMode) -> Option<NimbleServer> {
-    if !nimble::runtime::artifacts_available() {
-        eprintln!("SKIP: artifacts not built");
-        return None;
-    }
-    Some(
-        NimbleServer::start(ServerConfig {
-            engine: EngineConfig { mode, ..Default::default() },
-            max_wait: Duration::from_millis(2),
-        })
-        .expect("server start"),
+fn tape_server() -> NimbleServer {
+    NimbleServer::start_with(
+        || TapeEngine::new("mini_inception", &[1, 8]),
+        Duration::from_millis(2),
     )
+    .expect("tape server start")
 }
 
 fn inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -28,15 +25,17 @@ fn inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
 
 #[test]
 fn serves_requests_and_reports() {
-    let Some(server) = server(ExecMode::Replay) else { return };
+    let server = tape_server();
     let len = server.example_len();
+    let out_len = server.output_len();
     let mut pending = Vec::new();
     for input in inputs(20, len, 1) {
         pending.push(server.infer_async(input).unwrap());
     }
     for rx in pending {
         let logits = rx.recv().unwrap().unwrap();
-        assert_eq!(logits.len(), 10);
+        assert_eq!(logits.len(), out_len);
+        assert!(logits.iter().all(|v| v.is_finite()));
     }
     let report = server.shutdown().unwrap();
     assert_eq!(report.n_requests, 20);
@@ -45,26 +44,8 @@ fn serves_requests_and_reports() {
 }
 
 #[test]
-fn replay_and_eager_servers_agree() {
-    let Some(replay) = server(ExecMode::Replay) else { return };
-    let len = replay.example_len();
-    let ins = inputs(4, len, 7);
-    let out_replay: Vec<Vec<f32>> =
-        ins.iter().map(|i| replay.infer(i.clone()).unwrap()).collect();
-    let _ = replay.shutdown().unwrap();
-    let Some(eager) = server(ExecMode::Eager) else { return };
-    for (input, expected) in ins.into_iter().zip(out_replay) {
-        let got = eager.infer(input).unwrap();
-        for (a, b) in got.iter().zip(&expected) {
-            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
-        }
-    }
-    let _ = eager.shutdown().unwrap();
-}
-
-#[test]
 fn rejects_malformed_input() {
-    let Some(server) = server(ExecMode::Replay) else { return };
+    let server = tape_server();
     let err = server.infer(vec![0.0; 5]);
     assert!(err.is_err(), "wrong-length input must be rejected");
     // server still healthy afterwards
@@ -74,14 +55,147 @@ fn rejects_malformed_input() {
 }
 
 #[test]
-fn batching_pads_and_unpads_correctly() {
-    // A single request goes through the batch-1 engine (or padded bucket);
-    // its logits must match a direct single inference.
-    let Some(server) = server(ExecMode::Replay) else { return };
+fn repeated_requests_are_deterministic() {
+    let server = tape_server();
     let len = server.example_len();
     let input = inputs(1, len, 42).pop().unwrap();
     let a = server.infer(input.clone()).unwrap();
     let b = server.infer(input).unwrap();
     assert_eq!(a, b, "same input, same logits");
     let _ = server.shutdown().unwrap();
+}
+
+#[test]
+fn server_responses_match_direct_engine_replay() {
+    // The padded batch-bucket path must not change single-request results.
+    use nimble::coordinator::InferEngine;
+    let mut direct = TapeEngine::new("mini_inception", &[1, 8]).unwrap();
+    let len = direct.example_len();
+    let input = inputs(1, len, 9).pop().unwrap();
+    let expect = direct.infer_batch(1, &input).unwrap();
+
+    let server = tape_server();
+    let got = server.infer(input).unwrap();
+    assert_eq!(got, expect, "server (bucket 1) vs direct engine");
+    let _ = server.shutdown().unwrap();
+}
+
+#[test]
+fn padded_batch_values_match_direct_bucket_replay() {
+    // Fill exactly one bucket-8 batch and check every row of the
+    // server's un-padding against a direct replay of the same padded
+    // batch — catches any off-by-one in row placement or slicing.
+    use nimble::coordinator::InferEngine;
+    let server = NimbleServer::start_with(
+        || TapeEngine::new("mini_inception", &[1, 8]),
+        Duration::from_millis(500), // long deadline: flush only on a full bucket
+    )
+    .expect("server");
+    let len = server.example_len();
+    let out_len = server.output_len();
+    let ins = inputs(8, len, 1234);
+    let pending: Vec<_> = ins.iter().map(|i| server.infer_async(i.clone()).unwrap()).collect();
+    let got: Vec<Vec<f32>> =
+        pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.n_batches, 1, "test premise: one full bucket-8 batch");
+
+    let mut direct = TapeEngine::new("mini_inception", &[1, 8]).unwrap();
+    let padded: Vec<f32> = ins.concat();
+    let expect = direct.infer_batch(8, &padded).unwrap();
+    for (i, row) in got.iter().enumerate() {
+        assert_eq!(
+            row.as_slice(),
+            &expect[i * out_len..(i + 1) * out_len],
+            "row {i} mixed up by batching/un-padding"
+        );
+    }
+}
+
+#[test]
+fn concurrent_clients_all_get_served() {
+    // Many client threads firing at once through cloneable handles: every
+    // request must get exactly one well-formed response (the synthetic
+    // kernel is not row-separable across batch compositions, so value
+    // equality across buckets is checked by the single-request tests and
+    // the PJRT-mode tests instead).
+    let server = tape_server();
+    let len = server.example_len();
+    let out_len = server.output_len();
+    let handles: Vec<_> = inputs(24, len, 77)
+        .into_iter()
+        .map(|input| {
+            let client = server.client();
+            std::thread::spawn(move || {
+                let got = client.infer(input).unwrap();
+                assert_eq!(got.len(), out_len);
+                assert!(got.iter().all(|v| v.is_finite()));
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.n_requests, 24);
+    assert!(report.n_batches <= 24, "concurrent requests should batch");
+}
+
+/// PJRT-backed serving tests (feature `xla`; skip without artifacts).
+#[cfg(feature = "xla")]
+mod xla {
+    use super::inputs;
+    use nimble::coordinator::{EngineConfig, ExecMode};
+    use nimble::serving::{NimbleServer, ServerConfig};
+    use std::time::Duration;
+
+    fn server(mode: ExecMode) -> Option<NimbleServer> {
+        if !nimble::runtime::artifacts_available() {
+            eprintln!("SKIP: artifacts not built");
+            return None;
+        }
+        Some(
+            NimbleServer::start(ServerConfig {
+                engine: EngineConfig { mode, ..Default::default() },
+                max_wait: Duration::from_millis(2),
+            })
+            .expect("server start"),
+        )
+    }
+
+    #[test]
+    fn serves_requests_and_reports_real_engine() {
+        let Some(server) = server(ExecMode::Replay) else { return };
+        let len = server.example_len();
+        let mut pending = Vec::new();
+        for input in inputs(20, len, 1) {
+            pending.push(server.infer_async(input).unwrap());
+        }
+        for rx in pending {
+            let logits = rx.recv().unwrap().unwrap();
+            assert_eq!(logits.len(), server.output_len());
+        }
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.n_requests, 20);
+        assert!(report.n_batches >= 3, "20 reqs over max batch 8 → ≥3 batches");
+        assert!(report.mean_batch_fill > 1.0);
+    }
+
+    #[test]
+    fn replay_and_eager_servers_agree() {
+        let Some(replay) = server(ExecMode::Replay) else { return };
+        let len = replay.example_len();
+        let ins = inputs(4, len, 7);
+        let out_replay: Vec<Vec<f32>> =
+            ins.iter().map(|i| replay.infer(i.clone()).unwrap()).collect();
+        let _ = replay.shutdown().unwrap();
+        let Some(eager) = server(ExecMode::Eager) else { return };
+        for (input, expected) in ins.into_iter().zip(out_replay) {
+            let got = eager.infer(input).unwrap();
+            for (a, b) in got.iter().zip(&expected) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+        let _ = eager.shutdown().unwrap();
+    }
 }

@@ -1,0 +1,199 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The workspace builds without crates.io access, so this vendored crate
+//! provides exactly the `anyhow` surface the codebase uses: an [`Error`]
+//! type holding a chain of context strings, the [`Context`] extension
+//! trait for `Result` and `Option`, the [`anyhow!`], [`bail!`] and
+//! [`ensure!`] macros, and the `Result<T>` alias. Formatting matches
+//! `anyhow`'s conventions: `{}` prints the outermost context, `{:#}`
+//! prints the whole chain separated by `": "`, and `{:?}` prints the
+//! outermost message followed by a `Caused by:` list.
+
+use std::fmt::{self, Debug, Display};
+
+/// Error type: a root cause plus the contexts attached on the way up.
+/// Stored innermost-first; displayed outermost-first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Attach an outer context message.
+    pub fn context<C: Display>(mut self, context: C) -> Error {
+        self.chain.push(context.to_string());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// Iterate the chain outermost-first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().rev().map(String::as_str)
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, part) in self.chain.iter().rev().enumerate() {
+                if i > 0 {
+                    f.write_str(": ")?;
+                }
+                f.write_str(part)?;
+            }
+            Ok(())
+        } else {
+            f.write_str(self.chain.last().expect("non-empty chain"))
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.last().expect("non-empty chain"))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for part in self.chain.iter().rev().skip(1) {
+                write!(f, "\n    {part}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = Vec::new();
+        let mut source: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        chain.reverse();
+        chain.push(e.to_string());
+        Error { chain }
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(|| ...)`.
+pub trait Context<T> {
+    fn context<C: Display>(self, context: C) -> Result<T>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    fn fails() -> Result<()> {
+        Err(Error::msg("root"))
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let err = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{err}"), "outer");
+        assert_eq!(format!("{err:#}"), "outer: root");
+        assert!(format!("{err:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let err = v.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{err}"), "missing 7");
+    }
+
+    #[test]
+    fn std_error_conversion() {
+        let io: std::io::Error = std::io::Error::new(std::io::ErrorKind::Other, "disk");
+        let err: Error = io.into();
+        assert_eq!(format!("{err}"), "disk");
+    }
+
+    #[test]
+    fn macros() {
+        fn inner(flag: bool) -> Result<u32> {
+            crate::ensure!(flag, "flag was {flag}");
+            Ok(1)
+        }
+        assert_eq!(inner(true).unwrap(), 1);
+        assert_eq!(format!("{:#}", inner(false).unwrap_err()), "flag was false");
+        let e = crate::anyhow!("x = {}", 3);
+        assert_eq!(format!("{e}"), "x = 3");
+    }
+}

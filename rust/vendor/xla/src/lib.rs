@@ -1,0 +1,139 @@
+//! Stub of the `xla` (PJRT) API surface used by the nimble runtime.
+//!
+//! The container this workspace builds in has no PJRT plugin and no
+//! crates.io access, so this crate keeps the `--features xla` code paths
+//! *type-checked* without providing a real backend: every entry point
+//! ([`PjRtClient::cpu`], [`HloModuleProto::from_text_file`]) returns a
+//! clear "stub backend" error, and because no value of [`PjRtClient`] /
+//! [`PjRtBuffer`] / [`PjRtLoadedExecutable`] can ever be constructed, the
+//! remaining methods are statically unreachable. Swapping in the real
+//! `xla` crate (same module paths, same signatures) enables the PJRT
+//! path with no source changes.
+
+use std::fmt;
+
+/// Error type matching the shape of the real crate's error.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Error {
+        Error(format!(
+            "{what}: built against the stub `xla` crate (no PJRT backend in this environment); \
+             vendor the real xla/PJRT crate to enable the real runtime"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle. Unconstructible in the stub.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// The real crate creates the CPU PJRT client here; the stub reports
+    /// that no backend is available.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        unreachable!("stub PjRtClient cannot be constructed")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unreachable!("stub PjRtClient cannot be constructed")
+    }
+
+    pub fn buffer_from_host_buffer(
+        &self,
+        _data: &[f32],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unreachable!("stub PjRtClient cannot be constructed")
+    }
+}
+
+/// Parsed HLO module. Unconstructible in the stub.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        unreachable!("stub HloModuleProto cannot be constructed")
+    }
+}
+
+/// Compiled executable handle. Unconstructible in the stub.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unreachable!("stub PjRtLoadedExecutable cannot be constructed")
+    }
+}
+
+/// Device buffer handle. Unconstructible in the stub.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unreachable!("stub PjRtBuffer cannot be constructed")
+    }
+}
+
+/// Host literal. Unconstructible in the stub.
+pub struct Literal(());
+
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unreachable!("stub Literal cannot be constructed")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unreachable!("stub Literal cannot be constructed")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unreachable!("stub Literal cannot be constructed")
+    }
+}
+
+/// Array shape (dims as i64, matching the real crate).
+pub struct ArrayShape(Vec<i64>);
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_points_report_stub() {
+        let err = PjRtClient::cpu().err().expect("stub must error");
+        assert!(err.to_string().contains("stub"));
+        let err = HloModuleProto::from_text_file("x.hlo.txt").err().expect("stub must error");
+        assert!(err.to_string().contains("stub"));
+    }
+}
