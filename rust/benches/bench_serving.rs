@@ -1,15 +1,171 @@
-//! Serving-path benchmark: offered-load sweep through the batched
-//! server, reporting p50/p99 latency and throughput.
+//! Serving-path benchmark: lane-scheduler throughput against the
+//! single-engine-thread baseline on a 4-bucket mixed workload, plus the
+//! classic offered-load sweep.
 //!
-//! Always runs over the tape-backed engine (independent per-bucket
-//! replay contexts on the synthetic substrate); with the `xla` feature
-//! and artifacts present it also sweeps the real PJRT engine.
+//! The headline measurement replays the *same* 64 pre-formed padded
+//! batches (round-robin over buckets 1/2/4/8 of a chain-shaped model, so
+//! each bucket's tape is single-stream and a lone engine thread cannot
+//! hide any latency) two ways:
+//!
+//! * **serial** — one engine executing the batches back-to-back, exactly
+//!   what the PR-1 `NimbleServer` engine thread does, and
+//! * **lanes** — `LaneServer::submit_batch` through one lane per bucket,
+//!   so the four buckets overlap end-to-end.
+//!
+//! It also runs the multi-lane DES over the same four tapes for the
+//! predicted overlap speedup, and writes everything to
+//! `BENCH_serving.json` (format documented in `rust/README.md`) — the
+//! CI artifact comparing DES-predicted vs measured overlap.
 
 mod common;
 use common::section;
-use nimble::serving::{NimbleServer, TapeEngine};
+use nimble::coordinator::InferEngine;
+use nimble::ops::{GraphBuilder, OpGraph};
+use nimble::serving::{LaneConfig, LaneServer, NimbleServer, TapeEngine};
+use nimble::sim::{kernel_cost, simulate_lanes, GpuSpec, HostProfile, KernelCost, LaneLoad};
 use nimble::util::Pcg32;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// A deep conv chain: every tape is single-stream, so one engine thread
+/// leaves the other cores idle and lane overlap is pure win.
+fn chain_graph(batch: usize, depth: usize) -> OpGraph {
+    let mut b = GraphBuilder::new();
+    let mut x = b.input(&[batch, 16, 16, 16]);
+    for _ in 0..depth {
+        x = b.conv_bn_relu(x, 16, 3, 1);
+    }
+    let pooled = b.gap(x);
+    let _logits = b.linear(pooled, 10);
+    b.finish()
+}
+
+const BUCKETS: [usize; 4] = [1, 2, 4, 8];
+const DEPTH: usize = 12;
+const N_BATCHES: usize = 64;
+
+fn padded_batches(example_len: usize) -> Vec<(usize, Vec<f32>)> {
+    let mut rng = Pcg32::new(4242);
+    (0..N_BATCHES)
+        .map(|i| {
+            let bucket = BUCKETS[i % BUCKETS.len()];
+            let input: Vec<f32> =
+                (0..bucket * example_len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            (bucket, input)
+        })
+        .collect()
+}
+
+fn lane_vs_serial() -> String {
+    section("lane scheduler vs single engine thread (4-bucket mixed chain workload)");
+
+    // --- Serial baseline: one engine, batches back-to-back. ---
+    let mut serial_engine =
+        TapeEngine::from_graph_fn("chain", &BUCKETS, None, |b| chain_graph(b, DEPTH))
+            .expect("serial engine");
+    let example_len = serial_engine.example_len();
+    let batches = padded_batches(example_len);
+    // Warm up every context once.
+    for &bucket in &BUCKETS {
+        let z = vec![0.0f32; bucket * example_len];
+        serial_engine.infer_batch(bucket, &z).unwrap();
+    }
+    let t0 = Instant::now();
+    for (bucket, input) in &batches {
+        std::hint::black_box(serial_engine.infer_batch(*bucket, input).unwrap());
+    }
+    let serial_wall_s = t0.elapsed().as_secs_f64();
+
+    // --- Lane run: same batches through one lane per bucket. ---
+    // Caps derive from the workload so the one-shot burst below can
+    // never trip load-shedding, whatever N_BATCHES/BUCKETS become.
+    let per_lane_cap = N_BATCHES / BUCKETS.len() + 2;
+    let server = LaneServer::start(
+        &BUCKETS,
+        |bucket| TapeEngine::from_graph_fn("chain", &[bucket], None, |b| chain_graph(b, DEPTH)),
+        LaneConfig {
+            max_wait: Duration::from_millis(1),
+            lane_cap: per_lane_cap,
+            buffers_per_lane: per_lane_cap + 2,
+            ..Default::default()
+        },
+    )
+    .expect("lane server");
+    // Warm up each lane once.
+    for &bucket in &BUCKETS {
+        let z = vec![0.0f32; bucket * example_len];
+        server.submit_batch(bucket, z).unwrap().recv().unwrap().unwrap();
+    }
+    let t0 = Instant::now();
+    let pending: Vec<_> = batches
+        .iter()
+        .map(|(bucket, input)| server.submit_batch(*bucket, input.clone()).unwrap())
+        .collect();
+    for rx in pending {
+        rx.recv().unwrap().unwrap();
+    }
+    let lane_wall_s = t0.elapsed().as_secs_f64();
+    let report = server.shutdown().expect("report");
+    let measured_speedup = serial_wall_s / lane_wall_s;
+
+    // --- DES prediction over the same four tapes. ---
+    // Models ONE round of the workload: the four buckets' tapes arriving
+    // together and overlapping on a shared device. The measured run is 16
+    // such rounds pipelined FIFO per lane, so the per-round overlap is
+    // the steady-state prediction; it is labelled `_round_` in the JSON
+    // because simulate_lanes does not model same-lane batch pipelining.
+    use nimble::aot::tape::ReplayTape;
+    use nimble::matching::MatchingAlgo;
+    use nimble::stream::rewrite::rewrite;
+    let dev = GpuSpec::v100();
+    let graphs: Vec<OpGraph> = BUCKETS.iter().map(|&b| chain_graph(b, DEPTH)).collect();
+    let costs: Vec<Vec<KernelCost>> = graphs
+        .iter()
+        .map(|g| (0..g.n_nodes()).map(|v| kernel_cost(g.node(v), &dev)).collect())
+        .collect();
+    let tapes: Vec<ReplayTape> = graphs
+        .iter()
+        .map(|g| ReplayTape::for_op_graph(g, &rewrite(g, MatchingAlgo::HopcroftKarp), 4096))
+        .collect();
+    let lanes: Vec<LaneLoad> = tapes
+        .iter()
+        .zip(&costs)
+        .map(|(tape, costs)| LaneLoad { tape, costs, arrival_s: 0.0 })
+        .collect();
+    let des = simulate_lanes(&lanes, HostProfile::nimble(), dev);
+    let des_round_speedup = des.overlap_speedup();
+
+    let target = 1.5f64;
+    println!(
+        "serial={serial_wall_s:.4}s  lanes={lane_wall_s:.4}s  measured speedup={measured_speedup:.2}x  \
+         DES per-round={des_round_speedup:.2}x  target>={target}x  [{}]",
+        if measured_speedup >= target { "PASS" } else { "FAIL" }
+    );
+    println!("{}", report.render());
+
+    let lane_json: Vec<String> = report
+        .lanes
+        .iter()
+        .map(|l| {
+            format!(
+                "    {{\"bucket\": {}, \"n_batches\": {}, \"busy_s\": {:.6}, \
+                 \"mean_queue_wait_s\": {:.6}, \"alloc_events\": {}}}",
+                l.bucket, l.n_batches, l.busy_s, l.mean_queue_wait_s, l.alloc_events
+            )
+        })
+        .collect();
+    let buckets_json =
+        BUCKETS.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(", ");
+    format!(
+        "{{\n  \"workload\": \"4-bucket-mixed-chain\",\n  \"buckets\": [{buckets_json}],\n  \
+         \"n_batches\": {N_BATCHES},\n  \"chain_depth\": {DEPTH},\n  \
+         \"serial_wall_s\": {serial_wall_s:.6},\n  \"lane_wall_s\": {lane_wall_s:.6},\n  \
+         \"measured_speedup\": {measured_speedup:.4},\n  \
+         \"des_predicted_round_speedup\": {des_round_speedup:.4},\n  \
+         \"target_speedup\": {target},\n  \"pass\": {},\n  \"lanes\": [\n{}\n  ]\n}}",
+        measured_speedup >= target,
+        lane_json.join(",\n")
+    )
+}
 
 fn sweep(label: &str, start: impl Fn() -> NimbleServer) {
     for rate in [5.0f64, 20.0] {
@@ -31,7 +187,39 @@ fn sweep(label: &str, start: impl Fn() -> NimbleServer) {
     }
 }
 
+fn lane_sweep() {
+    section("serving load sweep (lane scheduler, MiniInception, per-bucket lanes)");
+    for rate in [5.0f64, 20.0] {
+        let server = LaneServer::start(
+            &[1, 8],
+            |bucket| TapeEngine::new("mini_inception", &[bucket]),
+            LaneConfig { max_wait: Duration::from_millis(3), ..Default::default() },
+        )
+        .expect("lane server");
+        let len = server.example_len();
+        let mut rng = Pcg32::new(9);
+        let mut pending = Vec::new();
+        for _ in 0..24 {
+            let input: Vec<f32> = (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            pending.push(server.infer_async(input).unwrap());
+            std::thread::sleep(Duration::from_secs_f64(rng.gen_exp(rate)));
+        }
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let report = server.shutdown().expect("report");
+        println!("lane-server @ ~{rate} req/s:\n{}", report.render());
+    }
+}
+
 fn main() {
+    let lane_entry = lane_vs_serial();
+    let json = format!("[\n{lane_entry}\n]\n");
+    match std::fs::write("BENCH_serving.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_serving.json"),
+        Err(e) => println!("\ncould not write BENCH_serving.json: {e}"),
+    }
+
     section("serving load sweep (tape replay engine, MiniInception, per-bucket contexts)");
     sweep("tape-engine", || {
         NimbleServer::start_with(
@@ -40,6 +228,8 @@ fn main() {
         )
         .expect("tape server")
     });
+
+    lane_sweep();
 
     #[cfg(feature = "xla")]
     {

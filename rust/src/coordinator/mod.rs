@@ -68,6 +68,13 @@ pub trait InferEngine {
     /// Run one padded batch of `bucket` examples; returns the flattened
     /// outputs of all `bucket` examples (padding included).
     fn infer_batch(&mut self, bucket: usize, input: &[f32]) -> anyhow::Result<Vec<f32>>;
+
+    /// Stream count of a bucket's replay context, when known — surfaced
+    /// in the lane scheduler's per-lane stats
+    /// ([`LaneStat`](crate::serving::metrics::LaneStat)).
+    fn stream_count(&self, _bucket: usize) -> Option<usize> {
+        None
+    }
 }
 
 /// A built engine: one task schedule + prepared replay context + eager
@@ -86,13 +93,38 @@ impl NimbleEngine {
     /// Build the engine (compiles artifacts, runs AoT scheduling + pre-run
     /// for every batch size in the manifest).
     pub fn build(config: EngineConfig) -> Result<Self> {
+        Self::build_subset(config, None)
+    }
+
+    /// Build an engine restricted to `buckets` — the per-lane constructor
+    /// of the lane scheduler, where each lane thread owns an engine for
+    /// exactly one batch bucket (so lanes never contend on shared PJRT
+    /// state and a hot bucket cannot evict a cold one).
+    pub fn build_for(config: EngineConfig, buckets: &[usize]) -> Result<Self> {
+        Self::build_subset(config, Some(buckets))
+    }
+
+    fn build_subset(config: EngineConfig, buckets: Option<&[usize]>) -> Result<Self> {
         let client = RuntimeClient::cpu()?;
         let registry =
             Arc::new(ArtifactRegistry::load(client, config.artifacts_dir.clone())?);
+        let available = registry.manifest.batch_sizes();
+        let wanted: Vec<usize> = match buckets {
+            Some(b) => {
+                for &batch in b {
+                    anyhow::ensure!(
+                        available.contains(&batch),
+                        "batch bucket {batch} not in the manifest (available: {available:?})"
+                    );
+                }
+                b.to_vec()
+            }
+            None => available,
+        };
         let mut schedules = HashMap::new();
         let mut prepared = HashMap::new();
         let mut eager = HashMap::new();
-        for batch in registry.manifest.batch_sizes() {
+        for batch in wanted {
             let schedule = TaskSchedule::build(&registry, batch)?;
             prepared.insert(batch, schedule.prepare_replay());
             schedules.insert(batch, schedule);

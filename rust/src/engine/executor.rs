@@ -12,7 +12,13 @@
 //!   the producer on its stream, wait before the consumer on its
 //!   stream),
 //! * a **persistent worker pool** — one worker per stream, parked
-//!   between replays and released by an epoch handshake, and
+//!   between replays and released by an epoch handshake — or, with
+//!   [`ExecOptions::max_workers`], a capped **work-sharing pool** where
+//!   fewer workers cooperatively schedule all streams: a stream that
+//!   would block on an unfired event parks (releasing its worker) and
+//!   is re-queued by whichever worker records the event, so a serving
+//!   deployment whose lanes multiply total stream count past the
+//!   physical cores does not drown in idle threads, and
 //! * per-worker **scratch argument buffers** sized to the tape's widest
 //!   task, reused across tasks.
 //!
@@ -157,6 +163,12 @@ impl EventTable {
     pub fn n_events(&self) -> usize {
         self.flags.len()
     }
+
+    /// Non-blocking check (the work-sharing pool parks streams instead
+    /// of blocking a worker thread inside [`wait`](Self::wait)).
+    pub fn is_set(&self, e: usize) -> bool {
+        self.flags[e].load(Ordering::SeqCst) != 0
+    }
 }
 
 /// Slot arena: one buffer per graph node, preallocated at context build.
@@ -198,6 +210,45 @@ struct PoolShared {
     state: Mutex<PoolState>,
     go: Condvar,
     done: Condvar,
+}
+
+/// Shared state of the capped **work-sharing** pool: fewer workers than
+/// streams, each worker picks up whichever stream is runnable. A stream
+/// whose head task waits on an unfired event *parks* (releasing its
+/// worker) instead of blocking inside [`EventTable::wait`]; recording
+/// the event moves every parked stream back to `runnable`. All vectors
+/// are preallocated to `n_streams` capacity, so steady-state scheduling
+/// does not allocate.
+struct CoopState {
+    shutdown: bool,
+    /// Streams ready to run. A stream appears at most once (it is either
+    /// runnable, parked on exactly one event, held by a worker, or done).
+    runnable: Vec<u32>,
+    /// Per-event list of streams parked on it.
+    parked: Vec<Vec<u32>>,
+    /// Per-stream resume position (index into `tape.stream_ops`).
+    cursors: Vec<u32>,
+    /// Streams not yet finished this replay.
+    active: usize,
+    /// Workers currently executing a stream segment.
+    busy: usize,
+    error: Option<String>,
+}
+
+struct CoopShared {
+    state: Mutex<CoopState>,
+    /// Signalled when `runnable` gains entries (or on shutdown).
+    work: Condvar,
+    /// Signalled whenever the pool may have gone quiescent.
+    done: Condvar,
+}
+
+/// Which worker-pool flavour drives a context.
+enum PoolMode {
+    /// One persistent worker per stream; waits block in the event table.
+    PerStream(Arc<PoolShared>),
+    /// `max_workers` shared workers over all streams; waits park.
+    Shared(Arc<CoopShared>),
 }
 
 /// Everything the workers need, fixed for the context's lifetime.
@@ -312,7 +363,9 @@ impl ReplayInner {
     }
 }
 
-fn panic_message(payload: Box<dyn Any + Send>) -> String {
+/// Human-readable text of a caught panic payload (also used by the
+/// serving lanes' per-job panic guard).
+pub(crate) fn panic_message(payload: Box<dyn Any + Send>) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -358,13 +411,141 @@ fn worker_loop(inner: Arc<ReplayInner>, shared: Arc<PoolShared>, stream: usize) 
     }
 }
 
+/// What a work-sharing worker did with the stream it picked up.
+enum Segment {
+    /// Ran the stream to the end of its tape.
+    Finished,
+    /// Hit an unfired event; the stream is parked (cursor and park list
+    /// were updated under the state lock inside the segment).
+    Parked,
+}
+
+/// Run stream `stream` from `*pos` until it finishes or parks on an
+/// unfired event. Parking happens under the state lock *after* a flag
+/// re-check, so a record between the lock-free check and the park is
+/// never missed; recording moves parked streams back to `runnable`
+/// under the same lock, so a parked stream's cursor is always published
+/// before another worker can resume it.
+fn coop_run_segment<'a>(
+    inner: &'a ReplayInner,
+    shared: &CoopShared,
+    stream: usize,
+    pos: &mut usize,
+    scratch: &mut Vec<&'a [f32]>,
+) -> Segment {
+    let ops = inner.tape.stream_ops(stream);
+    while *pos < ops.len() {
+        let op_idx = ops[*pos] as usize;
+        let op = inner.tape.op(op_idx);
+        for &e in inner.tape.waits(op) {
+            if !inner.events.is_set(e as usize) {
+                let mut st = shared.state.lock().unwrap();
+                if !inner.events.is_set(e as usize) {
+                    st.cursors[stream] = *pos as u32;
+                    st.parked[e as usize].push(stream as u32);
+                    return Segment::Parked;
+                }
+                // The event fired between the two checks; fall through.
+            }
+        }
+        inner.run_op(op_idx, op, scratch, None);
+        for &e in inner.tape.records(op) {
+            inner.events.record(e as usize);
+            let mut st = shared.state.lock().unwrap();
+            let woke = !st.parked[e as usize].is_empty();
+            while let Some(s) = st.parked[e as usize].pop() {
+                st.runnable.push(s);
+            }
+            drop(st);
+            if woke {
+                shared.work.notify_all();
+            }
+        }
+        *pos += 1;
+    }
+    Segment::Finished
+}
+
+fn coop_worker_loop(inner: Arc<ReplayInner>, shared: Arc<CoopShared>) {
+    let mut scratch: Vec<&[f32]> = Vec::with_capacity(inner.tape.max_args());
+    loop {
+        let (stream, mut pos) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(s) = st.runnable.pop() {
+                    st.busy += 1;
+                    break (s as usize, st.cursors[s as usize] as usize);
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            coop_run_segment(&inner, &shared, stream, &mut pos, &mut scratch)
+        }));
+        // Drop arena borrows before reporting in (see worker_loop).
+        scratch.clear();
+        let mut st = shared.state.lock().unwrap();
+        match outcome {
+            Ok(Segment::Finished) => st.active -= 1,
+            // Cursor and park list already updated under the lock.
+            Ok(Segment::Parked) => {}
+            Err(payload) => {
+                let msg = panic_message(payload);
+                st.error.get_or_insert(format!("stream {stream} worker panicked: {msg}"));
+                // The stream will not run again this replay.
+                st.active -= 1;
+            }
+        }
+        st.busy -= 1;
+        if st.busy == 0 && st.runnable.is_empty() {
+            // Quiescent: either the replay completed, or every remaining
+            // stream is parked on an event nobody will record. `busy == 0`
+            // means no worker is mid-segment, so no record is pending and
+            // the stuck-ness is definitive, not a transient.
+            if st.active > 0 && st.error.is_none() {
+                st.error = Some(format!(
+                    "{} stream(s) parked with nothing runnable: unsafe sync plan or failed worker",
+                    st.active
+                ));
+            }
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Pool construction options ([`ReplayContext::with_options`]).
+pub struct ExecOptions {
+    /// Pre-staged weight table ([`TapeArg::Weight`] sources).
+    pub weights: Vec<Vec<f32>>,
+    /// Per-event / join deadline.
+    pub timeout: Duration,
+    /// Cap on pool threads. `None` (or a cap ≥ the tape's stream count)
+    /// spawns the classic one-worker-per-stream pool with blocking event
+    /// waits; a smaller cap switches to the work-sharing pool, where
+    /// parked streams release their worker — the right shape when many
+    /// lanes multiply total stream count past the physical cores.
+    pub max_workers: Option<usize>,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions {
+            weights: Vec::new(),
+            timeout: ReplayContext::DEFAULT_TIMEOUT,
+            max_workers: None,
+        }
+    }
+}
+
 /// A reusable replay context: slot arena + event table + persistent
-/// per-stream worker pool for one compiled tape. Build once per
-/// (model, batch) bucket; replay per request with zero per-task heap
-/// allocation.
+/// worker pool for one compiled tape. Build once per (model, batch)
+/// bucket; replay per request with zero per-task heap allocation.
 pub struct ReplayContext {
     inner: Arc<ReplayInner>,
-    shared: Arc<PoolShared>,
+    mode: PoolMode,
     workers: Vec<std::thread::JoinHandle<()>>,
     timeout: Duration,
     /// Set when a join timed out with workers possibly still running:
@@ -395,11 +576,25 @@ impl ReplayContext {
         weights: Vec<Vec<f32>>,
         timeout: Duration,
     ) -> ReplayContext {
+        Self::with_options(tape, kernel, ExecOptions { weights, timeout, max_workers: None })
+    }
+
+    /// Constructor with explicit pool options (see [`ExecOptions`]).
+    ///
+    /// # Panics
+    ///
+    /// Panics on an unsynchronized tape, like [`with_config`](Self::with_config).
+    pub fn with_options(
+        tape: ReplayTape,
+        kernel: impl TapeKernel,
+        opts: ExecOptions,
+    ) -> ReplayContext {
         assert!(
             tape.dependencies_are_synchronized(),
             "replay tape's sync plan does not cover its slot dependencies — \
              refusing to build a context that could race"
         );
+        let timeout = opts.timeout;
         let slot_lens = tape.slot_lens();
         let n_ops = tape.n_ops();
         let n_events = tape.n_events();
@@ -409,33 +604,73 @@ impl ReplayContext {
             kernel: Box::new(kernel),
             arena: SlotArena::new(&slot_lens),
             events: EventTable::new(n_events, timeout),
-            weights,
+            weights: opts.weights,
             alloc_events: AtomicU64::new(0),
             trace: AtomicBool::new(false),
             stamps: (0..n_ops).map(|_| AtomicU64::new(0)).collect(),
             stamp_clock: AtomicU64::new(0),
         });
-        let shared = Arc::new(PoolShared {
-            state: Mutex::new(PoolState {
-                epoch: 0,
-                remaining: 0,
-                error: None,
-                shutdown: false,
-            }),
-            go: Condvar::new(),
-            done: Condvar::new(),
-        });
-        let workers = (0..n_streams)
-            .map(|s| {
-                let inner = Arc::clone(&inner);
-                let shared = Arc::clone(&shared);
-                std::thread::Builder::new()
-                    .name(format!("replay-s{s}"))
-                    .spawn(move || worker_loop(inner, shared, s))
-                    .expect("spawning replay worker")
-            })
-            .collect();
-        ReplayContext { inner, shared, workers, timeout, poisoned: false }
+        let n_workers = opts.max_workers.unwrap_or(n_streams).clamp(1, n_streams.max(1));
+        if n_workers >= n_streams {
+            let shared = Arc::new(PoolShared {
+                state: Mutex::new(PoolState {
+                    epoch: 0,
+                    remaining: 0,
+                    error: None,
+                    shutdown: false,
+                }),
+                go: Condvar::new(),
+                done: Condvar::new(),
+            });
+            let workers = (0..n_streams)
+                .map(|s| {
+                    let inner = Arc::clone(&inner);
+                    let shared = Arc::clone(&shared);
+                    std::thread::Builder::new()
+                        .name(format!("replay-s{s}"))
+                        .spawn(move || worker_loop(inner, shared, s))
+                        .expect("spawning replay worker")
+                })
+                .collect();
+            ReplayContext {
+                inner,
+                mode: PoolMode::PerStream(shared),
+                workers,
+                timeout,
+                poisoned: false,
+            }
+        } else {
+            let shared = Arc::new(CoopShared {
+                state: Mutex::new(CoopState {
+                    shutdown: false,
+                    runnable: Vec::with_capacity(n_streams),
+                    parked: (0..n_events).map(|_| Vec::with_capacity(n_streams)).collect(),
+                    cursors: vec![0u32; n_streams],
+                    active: 0,
+                    busy: 0,
+                    error: None,
+                }),
+                work: Condvar::new(),
+                done: Condvar::new(),
+            });
+            let workers = (0..n_workers)
+                .map(|w| {
+                    let inner = Arc::clone(&inner);
+                    let shared = Arc::clone(&shared);
+                    std::thread::Builder::new()
+                        .name(format!("replay-w{w}"))
+                        .spawn(move || coop_worker_loop(inner, shared))
+                        .expect("spawning replay worker")
+                })
+                .collect();
+            ReplayContext {
+                inner,
+                mode: PoolMode::Shared(shared),
+                workers,
+                timeout,
+                poisoned: false,
+            }
+        }
     }
 
     /// Parallel replay: fill input slots, release the per-stream
@@ -448,16 +683,30 @@ impl ReplayContext {
         }
         self.inner.fill_inputs(inputs)?;
         self.inner.reset_run_state();
+        match &self.mode {
+            PoolMode::PerStream(shared) => {
+                let shared = Arc::clone(shared);
+                self.replay_per_stream(&shared)
+            }
+            PoolMode::Shared(shared) => {
+                let shared = Arc::clone(shared);
+                self.replay_shared_pool(&shared)
+            }
+        }
+    }
+
+    /// Release + join for the one-worker-per-stream pool.
+    fn replay_per_stream(&mut self, shared: &PoolShared) -> Result<(), String> {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = shared.state.lock().unwrap();
             st.epoch += 1;
             st.remaining = self.workers.len();
             st.error = None;
         }
-        self.shared.go.notify_all();
+        shared.go.notify_all();
 
         let deadline = Instant::now() + self.timeout + self.timeout / 2;
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = shared.state.lock().unwrap();
         while st.remaining > 0 {
             let now = Instant::now();
             if now >= deadline {
@@ -465,7 +714,51 @@ impl ReplayContext {
                 self.poisoned = true;
                 return Err("replay join timed out; context poisoned".into());
             }
-            let (g, _timeout) = self.shared.done.wait_timeout(st, deadline - now).unwrap();
+            let (g, _timeout) = shared.done.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+        }
+        match st.error.take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Release + join for the capped work-sharing pool: mark every
+    /// stream runnable at cursor 0, wake the workers, and wait until the
+    /// pool is quiescent (no busy worker, nothing runnable) with either
+    /// every stream finished or an error recorded.
+    fn replay_shared_pool(&mut self, shared: &CoopShared) -> Result<(), String> {
+        let n_streams = self.inner.tape.n_streams();
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.error = None;
+            st.active = n_streams;
+            st.busy = 0;
+            st.runnable.clear();
+            for p in &mut st.parked {
+                p.clear();
+            }
+            for s in 0..n_streams {
+                st.cursors[s] = 0;
+                st.runnable.push(s as u32);
+            }
+        }
+        shared.work.notify_all();
+
+        let deadline = Instant::now() + self.timeout + self.timeout / 2;
+        let mut st = shared.state.lock().unwrap();
+        loop {
+            let quiescent = st.busy == 0 && st.runnable.is_empty();
+            if quiescent && (st.active == 0 || st.error.is_some()) {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                drop(st);
+                self.poisoned = true;
+                return Err("replay join timed out; context poisoned".into());
+            }
+            let (g, _timeout) = shared.done.wait_timeout(st, deadline - now).unwrap();
             st = g;
         }
         match st.error.take() {
@@ -625,17 +918,33 @@ impl ReplayContext {
     }
 
     pub fn n_streams(&self) -> usize {
+        self.inner.tape.n_streams()
+    }
+
+    /// Pool threads actually spawned (≤ streams in work-sharing mode).
+    pub fn n_workers(&self) -> usize {
         self.workers.len()
     }
 }
 
 impl Drop for ReplayContext {
     fn drop(&mut self) {
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            st.shutdown = true;
+        match &self.mode {
+            PoolMode::PerStream(shared) => {
+                {
+                    let mut st = shared.state.lock().unwrap();
+                    st.shutdown = true;
+                }
+                shared.go.notify_all();
+            }
+            PoolMode::Shared(shared) => {
+                {
+                    let mut st = shared.state.lock().unwrap();
+                    st.shutdown = true;
+                }
+                shared.work.notify_all();
+            }
         }
-        self.shared.go.notify_all();
         for handle in self.workers.drain(..) {
             let _ = handle.join();
         }
@@ -746,6 +1055,73 @@ mod tests {
         }
         let tape = ReplayTape::for_op_graph(&g, &plan, 64);
         let _ = ReplayContext::new(tape, SyntheticKernel);
+    }
+
+    #[test]
+    fn capped_pool_matches_serial_bitwise() {
+        // Work-sharing pool with fewer workers than streams must still
+        // produce bit-identical slots (parked streams resume correctly).
+        let tape = mini_tape();
+        assert!(tape.n_streams() >= 2, "test premise: multi-stream tape");
+        let input = input_for(&tape, 11);
+        let mut ser = ReplayContext::new(tape.clone(), SyntheticKernel);
+        ser.replay_serial(&[&input]).unwrap();
+        for cap in [1usize, 2] {
+            let mut par = ReplayContext::with_options(
+                tape.clone(),
+                SyntheticKernel,
+                ExecOptions { max_workers: Some(cap), ..Default::default() },
+            );
+            assert_eq!(par.n_workers(), cap.min(tape.n_streams()));
+            assert_eq!(par.n_streams(), tape.n_streams());
+            for _ in 0..3 {
+                par.replay_one(&input).unwrap();
+                for s in 0..tape.n_slots() {
+                    let (a, b) = (par.slot(s), ser.slot(s));
+                    assert_eq!(a.len(), b.len(), "cap {cap}: slot {s} length");
+                    for (x, y) in a.iter().zip(b) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "cap {cap}: slot {s} diverged");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn capped_pool_steady_state_is_allocation_free() {
+        let tape = mini_tape();
+        let input = input_for(&tape, 4);
+        let mut ctx = ReplayContext::with_options(
+            tape,
+            SyntheticKernel,
+            ExecOptions { max_workers: Some(1), ..Default::default() },
+        );
+        ctx.replay_one(&input).unwrap(); // warm-up
+        ctx.reset_alloc_events();
+        for _ in 0..5 {
+            ctx.replay_one(&input).unwrap();
+        }
+        assert_eq!(ctx.alloc_events(), 0, "work-sharing hot path must not allocate");
+    }
+
+    #[test]
+    fn capped_pool_on_random_layered_dags_matches_serial() {
+        let mut rng = crate::util::Pcg32::new(0xBEEF);
+        for _ in 0..5 {
+            let g = crate::graph::gen::layered_dag(&mut rng, 3, 4, 2);
+            let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+            let tape = ReplayTape::for_dag(&g, &plan);
+            let mut ser = ReplayContext::new(tape.clone(), SyntheticKernel);
+            ser.replay_serial(&[]).unwrap();
+            let cap = 1 + (g.n_nodes() % 2); // alternate 1 and 2 workers
+            let mut par = ReplayContext::with_options(
+                tape.clone(),
+                SyntheticKernel,
+                ExecOptions { max_workers: Some(cap), ..Default::default() },
+            );
+            par.replay(&[]).unwrap();
+            assert_eq!(par.output(), ser.output());
+        }
     }
 
     #[test]

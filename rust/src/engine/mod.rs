@@ -25,4 +25,4 @@ pub mod executor;
 
 #[cfg(feature = "xla")]
 pub use eager::EagerEngine;
-pub use executor::{EventTable, ReplayContext, SyntheticKernel, TapeKernel};
+pub use executor::{EventTable, ExecOptions, ReplayContext, SyntheticKernel, TapeKernel};

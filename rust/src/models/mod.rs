@@ -16,6 +16,7 @@ pub mod mobilenet;
 pub mod modern;
 pub mod nas_misc;
 pub mod nasnet;
+pub mod rand_cell;
 pub mod resnet;
 pub mod train;
 

@@ -1,0 +1,113 @@
+//! Seeded random serving graphs for the differential harness.
+//!
+//! [`random_cell`] builds an NN-shaped operator graph — a stem followed
+//! by blocks of parallel shape-preserving branches joined by adds — with
+//! exactly one input and one sink, the contract
+//! [`TapeEngine::from_graph_fn`](crate::serving::TapeEngine::from_graph_fn)
+//! needs. Every op keeps the `[batch, C, H, W]` shape of the stem, so
+//! any branch pair can join with `add` regardless of how the generator
+//! wandered, and the per-example input/output lengths are independent of
+//! the batch size (the serving engine requires that across buckets).
+//! Structure depends only on the PRNG draws, never on `batch`, so the
+//! same seed yields the same topology at every bucket.
+
+use crate::ops::{GraphBuilder, OpGraph, OpKind};
+use crate::util::Pcg32;
+
+/// Fixed per-example geometry: small enough that a padded batch-16
+/// output stays under the substrate's task clamp, big enough that the
+/// synthetic kernels do real work.
+const CHANNELS: usize = 4;
+const SIDE: usize = 6;
+
+/// Per-example flattened input/output length of every [`random_cell`].
+pub const RANDOM_CELL_EXAMPLE_LEN: usize = CHANNELS * SIDE * SIDE;
+
+/// One random shape-preserving op on top of `from`.
+fn random_unary(b: &mut GraphBuilder, rng: &mut Pcg32, from: usize) -> usize {
+    match rng.gen_range(8) {
+        0 => b.relu(from),
+        1 => b.bn(from),
+        2 => b.act(from, OpKind::Tanh),
+        3 => b.act(from, OpKind::Sigmoid),
+        4 => b.conv(from, CHANNELS, 3, 1),
+        5 => b.conv(from, CHANNELS, 1, 1),
+        6 => b.dwconv(from, 3, 1),
+        _ => b.maxpool(from, 3, 1),
+    }
+}
+
+/// Build a random cell with roughly `max_nodes` operator nodes
+/// (8 ≤ recommended `max_nodes` ≤ 64) at batch size `batch`.
+pub fn random_cell(rng: &mut Pcg32, max_nodes: usize, batch: usize) -> OpGraph {
+    assert!(batch >= 1, "batch must be >= 1");
+    let budget = max_nodes.max(4);
+    let mut b = GraphBuilder::new();
+    let input = b.input(&[batch, CHANNELS, SIDE, SIDE]);
+    // Stem: one op so the input node has a single consumer block below.
+    let mut prev = random_unary(&mut b, rng, input);
+    while b.graph().n_nodes() < budget {
+        let n_branches = rng.gen_range_inclusive(1, 3);
+        let mut outs = Vec::with_capacity(n_branches);
+        for _ in 0..n_branches {
+            let len = rng.gen_range_inclusive(1, 3);
+            let mut cur = prev;
+            for _ in 0..len {
+                cur = random_unary(&mut b, rng, cur);
+            }
+            outs.push(cur);
+        }
+        // Join the branches pairwise with adds (shape-preserving).
+        let mut joined = outs[0];
+        for &o in &outs[1..] {
+            joined = b.add(joined, o);
+        }
+        prev = joined;
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_cells_are_valid_single_input_single_sink() {
+        let mut rng = Pcg32::new(0xA11CE);
+        for _ in 0..20 {
+            let n = 8 + rng.gen_range(57); // 8..=64
+            let g = random_cell(&mut rng, n, 1);
+            assert!(g.validate().is_ok());
+            assert_eq!(g.sources().len(), 1, "exactly one input");
+            assert_eq!(g.sinks().len(), 1, "exactly one output");
+            assert!(g.n_nodes() >= 4);
+        }
+    }
+
+    #[test]
+    fn same_seed_same_topology_across_batches() {
+        let a = random_cell(&mut Pcg32::new(99), 32, 1);
+        let b = random_cell(&mut Pcg32::new(99), 32, 8);
+        assert_eq!(a.n_nodes(), b.n_nodes());
+        for v in 0..a.n_nodes() {
+            assert_eq!(a.predecessors(v), b.predecessors(v), "node {v} wiring");
+            // shapes differ only in the batch dim
+            assert_eq!(
+                a.node(v).out_shape.numel() * 8,
+                b.node(v).out_shape.numel(),
+                "node {v} shape scales with batch"
+            );
+        }
+    }
+
+    #[test]
+    fn example_len_is_batch_independent() {
+        for batch in [1usize, 2, 8, 16] {
+            let g = random_cell(&mut Pcg32::new(7), 24, batch);
+            let input = g.sources()[0];
+            assert_eq!(g.node(input).out_shape.numel() / batch, RANDOM_CELL_EXAMPLE_LEN);
+            let sink = g.sinks()[0];
+            assert_eq!(g.node(sink).out_shape.numel() % batch, 0);
+        }
+    }
+}

@@ -1,0 +1,837 @@
+//! The lane scheduler: pipelined multi-bucket serving.
+//!
+//! The single-engine-thread server ([`super::server`]) funnels every
+//! batch through one thread, so a bucket-1 straggler serializes behind a
+//! bucket-8 replay even though their replay contexts are completely
+//! independent. [`LaneServer`] turns each compiled batch bucket into an
+//! independent **lane**:
+//!
+//! ```text
+//!   clients ──► bounded MPMC admission queue ──► dispatcher thread
+//!                                                 │  (batcher + routing)
+//!                             ┌───────────────────┼──────────────────┐
+//!                             ▼                   ▼                  ▼
+//!                     lane[bucket=1]       lane[bucket=4]     lane[bucket=8]
+//!                     own InferEngine      own InferEngine    own InferEngine
+//! ```
+//!
+//! * **Admission** is a bounded MPMC queue ([`super::queue::Bounded`]):
+//!   when the system is saturated, clients block at the door instead of
+//!   queueing unbounded work.
+//! * The **dispatcher** runs the dynamic batcher and routes each formed
+//!   batch to its bucket's lane. It never blocks on a lane: a batch that
+//!   cannot be enqueued is *staged* (per lane, bounded), and when a
+//!   lane's stage and buffer pool are exhausted the requests simply wait
+//!   in the batcher — so one slow lane never stalls the others
+//!   (head-of-line blocking begins only once the global backlog cap is
+//!   reached and admission pauses). Padded batch inputs come from a
+//!   per-lane pool of reused buffers sized at startup; steady-state
+//!   dispatch performs no buffer allocation (instrumented by
+//!   [`LaneStat::alloc_events`]).
+//! * Each **lane thread** builds its own [`InferEngine`] *on the lane
+//!   thread* (PJRT state is not `Send`) restricted to its bucket, and
+//!   drains its job queue FIFO — same-bucket batches pipeline in order,
+//!   different buckets overlap end-to-end.
+//!
+//! Shutdown closes the admission queue first and then drains everything
+//! already admitted: a request whose `push` succeeded is always
+//! answered; later requests fail fast with "server stopped". The
+//! randomized differential harness (`tests/prop_harness.rs`) asserts
+//! lane-pipelined outputs are bit-identical to the serial-replay oracle.
+
+use anyhow::{Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::{LaneStat, ServingReport};
+use super::queue::{Bounded, PopResult, PushError};
+use crate::coordinator::InferEngine;
+use crate::engine::executor::panic_message;
+use crate::util::stats::Summary;
+
+/// How often the dispatcher re-checks staged batches / drain progress
+/// when it cannot block on the admission queue.
+const POLL: Duration = Duration::from_micros(500);
+
+/// Lane-scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct LaneConfig {
+    /// Max time the oldest request may wait before a partial batch flushes.
+    pub max_wait: Duration,
+    /// Admission-queue capacity; producers block when it is full.
+    pub admission_cap: usize,
+    /// Per-lane job-queue capacity (batches in flight behind the engine).
+    pub lane_cap: usize,
+    /// Reused padded-input buffers pooled per lane. Also bounds how many
+    /// batcher-formed batches a lane can hold overall (queue + stage).
+    pub buffers_per_lane: usize,
+    /// The dispatcher pauses admission once this many requests wait in
+    /// the batcher — the global backpressure valve.
+    pub backlog_cap: usize,
+}
+
+impl Default for LaneConfig {
+    fn default() -> Self {
+        LaneConfig {
+            max_wait: Duration::from_millis(2),
+            admission_cap: 256,
+            lane_cap: 4,
+            buffers_per_lane: 6,
+            backlog_cap: 256,
+        }
+    }
+}
+
+type Reply = mpsc::Sender<Result<Vec<f32>, String>>;
+
+enum Admit {
+    /// One example through the dynamic batcher.
+    Infer { input: Vec<f32>, reply: Reply },
+    /// A pre-formed padded batch straight to `bucket`'s lane (benches,
+    /// the differential harness, upstream batch-aware clients). Replies
+    /// with the full padded output.
+    Batch { bucket: usize, input: Vec<f32>, reply: Reply },
+    Shutdown { reply: mpsc::Sender<ServingReport> },
+}
+
+/// One batch handed to a lane.
+struct LaneJob {
+    /// Padded batch input (pooled; returned to the lane's pool after use).
+    input: Vec<f32>,
+    /// Per-request reply channels in row order (batcher path).
+    tokens: Vec<(Reply, Instant)>,
+    /// Whole-batch reply (pre-formed-batch path).
+    batch_reply: Option<Reply>,
+    /// When the dispatcher routed the job (queue-wait accounting).
+    routed: Instant,
+}
+
+/// Dispatcher-side view of one lane.
+struct Lane {
+    bucket: usize,
+    jobs: Bounded<LaneJob>,
+    free: Bounded<Vec<f32>>,
+    /// Formed jobs waiting for queue space (the dispatcher never blocks
+    /// on a lane).
+    staged: VecDeque<LaneJob>,
+    /// Padded-buffer would-allocate events (buffer growth during form).
+    alloc_events: u64,
+    join: Option<JoinHandle<(LaneStat, Vec<f64>, usize)>>,
+}
+
+fn fail_job(job: LaneJob, msg: &str) {
+    if let Some(reply) = job.batch_reply {
+        let _ = reply.send(Err(msg.to_string()));
+    }
+    for (reply, _) in job.tokens {
+        let _ = reply.send(Err(msg.to_string()));
+    }
+}
+
+/// Push staged jobs into the lane queue until it fills (non-blocking).
+fn flush_staged(lane: &mut Lane) {
+    while let Some(job) = lane.staged.pop_front() {
+        match lane.jobs.try_push(job) {
+            Ok(()) => {}
+            Err(PushError::Full(job)) => {
+                lane.staged.push_front(job);
+                break;
+            }
+            // Only reachable during teardown races; answer explicitly.
+            Err(PushError::Closed(job)) => fail_job(job, "server stopped"),
+        }
+    }
+}
+
+/// The per-lane worker: builds the engine on this thread, reports its
+/// shape, then drains the job queue FIFO until it closes. Returns
+/// `(stats, per-request latencies, real-example fill sum)`.
+fn lane_thread<E, F>(
+    factory: Arc<F>,
+    bucket: usize,
+    jobs: Bounded<LaneJob>,
+    free: Bounded<Vec<f32>>,
+    ready: mpsc::Sender<Result<(usize, usize), String>>,
+) -> (LaneStat, Vec<f64>, usize)
+where
+    E: InferEngine + 'static,
+    F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+{
+    let mut stat = LaneStat {
+        bucket,
+        n_streams: None,
+        n_batches: 0,
+        n_requests: 0,
+        busy_s: 0.0,
+        mean_queue_wait_s: 0.0,
+        alloc_events: 0,
+    };
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut fill_sum = 0usize;
+    let mut engine = match factory(bucket) {
+        Ok(e) => e,
+        Err(err) => {
+            let _ = ready.send(Err(format!("lane {bucket}: {err:#}")));
+            return (stat, latencies, fill_sum);
+        }
+    };
+    if !engine.batch_sizes().contains(&bucket) {
+        let _ = ready.send(Err(format!("lane {bucket}: engine does not serve this bucket")));
+        return (stat, latencies, fill_sum);
+    }
+    let output_len = engine.output_len();
+    stat.n_streams = engine.stream_count(bucket);
+    let _ = ready.send(Ok((engine.example_len(), output_len)));
+
+    let mut wait_sum = 0.0f64;
+    while let Some(job) = jobs.pop() {
+        let LaneJob { input, tokens, batch_reply, routed } = job;
+        let started = Instant::now();
+        wait_sum += started.duration_since(routed).as_secs_f64();
+        stat.n_batches += 1;
+        // An engine panic must not kill the lane: poison shows up as
+        // per-request errors, and the lane keeps draining (and keeps the
+        // dispatcher's buffer pool cycling).
+        let result = catch_unwind(AssertUnwindSafe(|| engine.infer_batch(bucket, &input)))
+            .unwrap_or_else(|p| {
+                Err(anyhow::anyhow!("lane {bucket} engine panicked: {}", panic_message(p)))
+            });
+        let done = Instant::now();
+        stat.busy_s += done.duration_since(started).as_secs_f64();
+        // A short output would panic the row slicing below (outside the
+        // per-job panic guard) and kill the lane; demote it to a per-job
+        // error instead.
+        let result = result.and_then(|out| {
+            let needed = tokens.len() * output_len;
+            anyhow::ensure!(
+                out.len() >= needed,
+                "lane {bucket}: engine returned {} values, need {needed}",
+                out.len()
+            );
+            Ok(out)
+        });
+        match result {
+            Ok(out) => {
+                if let Some(reply) = batch_reply {
+                    // A pre-formed batch counts as one request of
+                    // `bucket` padded rows.
+                    stat.n_requests += 1;
+                    fill_sum += bucket;
+                    latencies.push(done.duration_since(routed).as_secs_f64());
+                    let _ = reply.send(Ok(out));
+                } else {
+                    fill_sum += tokens.len();
+                    for (i, (reply, enqueued)) in tokens.into_iter().enumerate() {
+                        stat.n_requests += 1;
+                        latencies.push(done.duration_since(enqueued).as_secs_f64());
+                        let row = out[i * output_len..(i + 1) * output_len].to_vec();
+                        let _ = reply.send(Ok(row));
+                    }
+                }
+            }
+            Err(err) => {
+                let msg = format!("{err:#}");
+                if let Some(reply) = batch_reply {
+                    let _ = reply.send(Err(msg));
+                } else {
+                    for (reply, _) in tokens {
+                        let _ = reply.send(Err(msg.clone()));
+                    }
+                }
+            }
+        }
+        // Recycle the padded buffer (dropped if the pool is full).
+        let _ = free.try_push(input);
+    }
+    stat.mean_queue_wait_s =
+        if stat.n_batches == 0 { 0.0 } else { wait_sum / stat.n_batches as f64 };
+    (stat, latencies, fill_sum)
+}
+
+/// Route a pre-formed batch to its lane, shedding load when the lane is
+/// saturated (stage full).
+fn route_batch(lane: &mut Lane, stage_cap: usize, input: Vec<f32>, reply: Reply) {
+    if lane.staged.len() >= stage_cap {
+        let _ = reply.send(Err(format!(
+            "lane {} overloaded: {} batches staged",
+            lane.bucket,
+            lane.staged.len()
+        )));
+        return;
+    }
+    lane.staged.push_back(LaneJob {
+        input,
+        tokens: Vec::new(),
+        batch_reply: Some(reply),
+        routed: Instant::now(),
+    });
+    flush_staged(lane);
+}
+
+/// Handle one admitted `Infer`/`Batch` message (`Shutdown` is the
+/// dispatcher's own business). `stage_cap` bounds the per-lane stage for
+/// pre-formed batches; the shutdown drain passes `usize::MAX` so nothing
+/// already admitted is ever load-shed.
+fn admit_one(
+    msg: Admit,
+    lanes: &mut [Lane],
+    lane_index: &HashMap<usize, usize>,
+    batcher: &mut Batcher<Reply>,
+    example_len: usize,
+    stage_cap: usize,
+) {
+    match msg {
+        Admit::Infer { input, reply } => {
+            if input.len() != example_len {
+                let _ =
+                    reply.send(Err(format!("bad input length {} != {example_len}", input.len())));
+            } else {
+                batcher.push(reply, input);
+            }
+        }
+        Admit::Batch { bucket, input, reply } => match lane_index.get(&bucket) {
+            Some(&li) if input.len() == bucket * example_len => {
+                route_batch(&mut lanes[li], stage_cap, input, reply);
+            }
+            Some(_) => {
+                let _ = reply.send(Err(format!(
+                    "bad batch length {} != {}",
+                    input.len(),
+                    bucket * example_len
+                )));
+            }
+            None => {
+                let _ = reply.send(Err(format!("no lane for bucket {bucket}")));
+            }
+        },
+        Admit::Shutdown { .. } => {}
+    }
+}
+
+fn dispatcher_thread(
+    admission: Bounded<Admit>,
+    mut lanes: Vec<Lane>,
+    policy: BatchPolicy,
+    example_len: usize,
+    config: LaneConfig,
+) {
+    let lane_index: HashMap<usize, usize> =
+        lanes.iter().enumerate().map(|(i, l)| (l.bucket, i)).collect();
+    let mut batcher: Batcher<Reply> = Batcher::new(policy.clone());
+    let started = Instant::now();
+    let mut shutdown_reply: Option<mpsc::Sender<ServingReport>> = None;
+    // Admission closed (by shutdown or by the server handle dropping).
+    let mut closed = false;
+    // Last form pass hit a saturated lane: poll instead of spinning on
+    // the (already-passed) batcher deadline.
+    let mut stalled = false;
+
+    'outer: loop {
+        for lane in &mut lanes {
+            flush_staged(lane);
+        }
+
+        // --- Wait for the next admission event. ---
+        let any_staged = lanes.iter().any(|l| !l.staged.is_empty());
+        let msg = if closed {
+            // Nothing left to pop; poll the drain forward.
+            std::thread::sleep(POLL);
+            None
+        } else if batcher.pending() >= config.backlog_cap {
+            // Backpressure: pause admission until the backlog drains.
+            std::thread::sleep(POLL);
+            None
+        } else {
+            let mut deadline = batcher.next_deadline();
+            if any_staged {
+                let poll_at = Instant::now() + POLL;
+                deadline = Some(deadline.map_or(poll_at, |d| d.min(poll_at)));
+            }
+            if stalled {
+                // The oldest deadline already passed but its lane was
+                // saturated; waiting on it again would spin.
+                deadline = Some(Instant::now() + POLL);
+            }
+            match deadline {
+                None => admission.pop().or_else(|| {
+                    closed = true;
+                    None
+                }),
+                Some(d) => match admission.pop_deadline(d) {
+                    PopResult::Item(m) => Some(m),
+                    PopResult::TimedOut => None,
+                    PopResult::Closed => {
+                        closed = true;
+                        None
+                    }
+                },
+            }
+        };
+        match msg {
+            Some(Admit::Shutdown { reply }) => {
+                // Close the door first, then flush everything that got
+                // in before it shut: a request whose push succeeded is
+                // never dropped — and never load-shed (uncapped stage),
+                // since no new work can arrive to justify backpressure.
+                admission.close();
+                closed = true;
+                while let Some(m) = admission.try_pop() {
+                    admit_one(m, &mut lanes, &lane_index, &mut batcher, example_len, usize::MAX);
+                }
+                shutdown_reply = Some(reply);
+            }
+            Some(m) => {
+                admit_one(m, &mut lanes, &lane_index, &mut batcher, example_len, config.lane_cap);
+            }
+            None => {}
+        }
+
+        // --- Form ready batches and route them (never blocking). ---
+        let shutting = closed || shutdown_reply.is_some();
+        stalled = false;
+        loop {
+            let now = Instant::now();
+            if !((shutting && batcher.pending() > 0) || batcher.ready(now)) {
+                break;
+            }
+            let take = batcher.pending().min(policy.max_batch());
+            let bucket = policy.bucket_for(take);
+            let li = lane_index[&bucket];
+            let lane = &mut lanes[li];
+            if lane.staged.len() >= config.lane_cap {
+                stalled = true;
+                break; // lane saturated: requests wait in the batcher
+            }
+            let Some(mut buf) = lane.free.try_pop() else {
+                stalled = true;
+                break; // no pooled buffer: lane is at its in-flight bound
+            };
+            let cap_before = buf.capacity();
+            let Some(formed) = batcher.form_with(example_len, &mut buf) else {
+                let _ = lane.free.try_push(buf);
+                break;
+            };
+            debug_assert_eq!(formed.bucket, bucket, "bucket drifted between plan and form");
+            if buf.capacity() != cap_before {
+                lane.alloc_events += 1;
+            }
+            lane.staged.push_back(LaneJob {
+                input: buf,
+                tokens: formed.tokens,
+                batch_reply: None,
+                routed: Instant::now(),
+            });
+            flush_staged(lane);
+        }
+
+        if shutting
+            && batcher.pending() == 0
+            && lanes.iter().all(|l| l.staged.is_empty())
+        {
+            break 'outer;
+        }
+    }
+
+    // --- Drain lanes and aggregate the report. ---
+    for lane in &lanes {
+        lane.jobs.close();
+    }
+    let mut lane_stats = Vec::with_capacity(lanes.len());
+    let mut all_latencies: Vec<f64> = Vec::new();
+    let (mut n_requests, mut n_batches, mut fill_sum) = (0usize, 0usize, 0usize);
+    for mut lane in lanes {
+        let Some(handle) = lane.join.take() else { continue };
+        match handle.join() {
+            Ok((mut stat, latencies, fill)) => {
+                stat.alloc_events = lane.alloc_events;
+                n_requests += stat.n_requests;
+                n_batches += stat.n_batches;
+                fill_sum += fill;
+                all_latencies.extend(latencies);
+                lane_stats.push(stat);
+            }
+            Err(_) => lane_stats.push(LaneStat {
+                bucket: lane.bucket,
+                n_streams: None,
+                n_batches: 0,
+                n_requests: 0,
+                busy_s: 0.0,
+                mean_queue_wait_s: 0.0,
+                alloc_events: lane.alloc_events,
+            }),
+        }
+    }
+    let report = ServingReport {
+        n_requests,
+        n_batches,
+        wall_time: started.elapsed(),
+        latency: if all_latencies.is_empty() {
+            Summary::from_samples(vec![0.0])
+        } else {
+            Summary::from_samples(all_latencies)
+        },
+        mean_batch_fill: if n_batches == 0 { 0.0 } else { fill_sum as f64 / n_batches as f64 },
+        lanes: lane_stats,
+    };
+    if let Some(reply) = shutdown_reply {
+        let _ = reply.send(report);
+    }
+}
+
+/// Cloneable, `Send` request handle to a [`LaneServer`].
+#[derive(Clone)]
+pub struct LaneClient {
+    admission: Bounded<Admit>,
+    example_len: usize,
+    output_len: usize,
+    batch_sizes: Vec<usize>,
+}
+
+impl LaneClient {
+    pub fn example_len(&self) -> usize {
+        self.example_len
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_len
+    }
+
+    pub fn batch_sizes(&self) -> &[usize] {
+        &self.batch_sizes
+    }
+
+    /// Blocking inference of one example. Blocks at admission when the
+    /// server is saturated (bounded queue).
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        let rx = self.infer_async(input)?;
+        rx.recv().context("server dropped request")?.map_err(anyhow::Error::msg)
+    }
+
+    /// Fire an async request; returns the reply channel.
+    pub fn infer_async(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
+        anyhow::ensure!(
+            input.len() == self.example_len,
+            "bad input length {} != {}",
+            input.len(),
+            self.example_len
+        );
+        let (reply, rx) = mpsc::channel();
+        self.admission
+            .push(Admit::Infer { input, reply })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rx)
+    }
+
+    /// Submit a pre-formed padded batch straight to `bucket`'s lane.
+    /// Replies with the full padded output (`bucket * output_len`
+    /// values) — the deterministic-composition path the differential
+    /// harness and the throughput bench drive. May reply with an
+    /// explicit overload error when the lane is saturated (load shed).
+    pub fn submit_batch(
+        &self,
+        bucket: usize,
+        input: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
+        anyhow::ensure!(self.batch_sizes.contains(&bucket), "no lane for bucket {bucket}");
+        anyhow::ensure!(
+            input.len() == bucket * self.example_len,
+            "bad batch length {} != {}",
+            input.len(),
+            bucket * self.example_len
+        );
+        let (reply, rx) = mpsc::channel();
+        self.admission
+            .push(Admit::Batch { bucket, input, reply })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rx)
+    }
+}
+
+/// Handle to a running lane-scheduled server.
+pub struct LaneServer {
+    admission: Bounded<Admit>,
+    dispatcher: Option<JoinHandle<()>>,
+    example_len: usize,
+    output_len: usize,
+    batch_sizes: Vec<usize>,
+}
+
+impl LaneServer {
+    /// Start one lane per bucket in `batch_sizes`. The factory runs once
+    /// per lane *on that lane's thread* (non-`Send` engines work) and
+    /// must return an engine serving at least that bucket; the call
+    /// blocks until every lane finished building.
+    pub fn start<E, F>(batch_sizes: &[usize], factory: F, config: LaneConfig) -> Result<LaneServer>
+    where
+        E: InferEngine + 'static,
+        F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+    {
+        anyhow::ensure!(!batch_sizes.is_empty(), "need at least one batch bucket");
+        anyhow::ensure!(config.lane_cap >= 1, "lane_cap must be >= 1");
+        anyhow::ensure!(config.buffers_per_lane >= 1, "buffers_per_lane must be >= 1");
+        let mut sizes: Vec<usize> = batch_sizes.to_vec();
+        sizes.sort_unstable();
+        sizes.dedup();
+        let factory = Arc::new(factory);
+        let admission: Bounded<Admit> = Bounded::new(config.admission_cap);
+
+        let mut lanes: Vec<Lane> = Vec::with_capacity(sizes.len());
+        let mut readies = Vec::with_capacity(sizes.len());
+        for &bucket in &sizes {
+            let jobs: Bounded<LaneJob> = Bounded::new(config.lane_cap);
+            let free: Bounded<Vec<f32>> = Bounded::new(config.buffers_per_lane);
+            let (ready_tx, ready_rx) = mpsc::channel();
+            let join = {
+                let factory = Arc::clone(&factory);
+                let jobs = jobs.clone();
+                let free = free.clone();
+                std::thread::Builder::new()
+                    .name(format!("nimble-lane-{bucket}"))
+                    .spawn(move || lane_thread(factory, bucket, jobs, free, ready_tx))
+                    .context("spawning lane thread")?
+            };
+            lanes.push(Lane {
+                bucket,
+                jobs,
+                free,
+                staged: VecDeque::new(),
+                alloc_events: 0,
+                join: Some(join),
+            });
+            readies.push(ready_rx);
+        }
+
+        // Collect readiness from every lane; all shapes must agree.
+        let mut example_len = 0usize;
+        let mut output_len = 0usize;
+        let mut startup_err: Option<String> = None;
+        for (lane, ready_rx) in lanes.iter().zip(&readies) {
+            match ready_rx.recv() {
+                Ok(Ok((el, ol))) => {
+                    if example_len == 0 {
+                        example_len = el;
+                        output_len = ol;
+                    } else if example_len != el || output_len != ol {
+                        startup_err.get_or_insert(format!(
+                            "lane {}: per-example shapes disagree with other lanes",
+                            lane.bucket
+                        ));
+                    }
+                }
+                Ok(Err(e)) => {
+                    startup_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    startup_err
+                        .get_or_insert(format!("lane {} died during build", lane.bucket));
+                }
+            }
+        }
+        if let Some(e) = startup_err {
+            for lane in &lanes {
+                lane.jobs.close();
+            }
+            for lane in &mut lanes {
+                if let Some(h) = lane.join.take() {
+                    let _ = h.join();
+                }
+            }
+            anyhow::bail!("lane startup failed: {e}");
+        }
+
+        // Pre-size the padded-buffer pools so steady-state dispatch never
+        // allocates (asserted via LaneStat::alloc_events).
+        for lane in &lanes {
+            for _ in 0..config.buffers_per_lane {
+                let _ = lane.free.try_push(Vec::with_capacity(lane.bucket * example_len));
+            }
+        }
+
+        let policy = BatchPolicy { batch_sizes: sizes.clone(), max_wait: config.max_wait };
+        let dispatcher = {
+            let admission = admission.clone();
+            std::thread::Builder::new()
+                .name("nimble-dispatch".into())
+                .spawn(move || dispatcher_thread(admission, lanes, policy, example_len, config))
+                .context("spawning dispatcher thread")?
+        };
+        Ok(LaneServer {
+            admission,
+            dispatcher: Some(dispatcher),
+            example_len,
+            output_len,
+            batch_sizes: sizes,
+        })
+    }
+
+    pub fn example_len(&self) -> usize {
+        self.example_len
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_len
+    }
+
+    pub fn batch_sizes(&self) -> &[usize] {
+        &self.batch_sizes
+    }
+
+    /// A cloneable request handle for client threads.
+    pub fn client(&self) -> LaneClient {
+        LaneClient {
+            admission: self.admission.clone(),
+            example_len: self.example_len,
+            output_len: self.output_len,
+            batch_sizes: self.batch_sizes.clone(),
+        }
+    }
+
+    /// Blocking inference of one example.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        self.client().infer(input)
+    }
+
+    /// Fire an async request; returns the reply channel.
+    pub fn infer_async(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
+        self.client().infer_async(input)
+    }
+
+    /// Submit a pre-formed padded batch (see [`LaneClient::submit_batch`]).
+    pub fn submit_batch(
+        &self,
+        bucket: usize,
+        input: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
+        self.client().submit_batch(bucket, input)
+    }
+
+    /// Stop the server: flush everything already admitted, join every
+    /// lane, and collect the per-lane serving report.
+    pub fn shutdown(mut self) -> Result<ServingReport> {
+        let (reply, rx) = mpsc::channel();
+        self.admission
+            .push(Admit::Shutdown { reply })
+            .map_err(|_| anyhow::anyhow!("server already stopped"))?;
+        let report = rx.recv().context("no report from dispatcher")?;
+        if let Some(j) = self.dispatcher.take() {
+            let _ = j.join();
+        }
+        Ok(report)
+    }
+}
+
+impl Drop for LaneServer {
+    fn drop(&mut self) {
+        // Dropping without shutdown still drains admitted work and joins
+        // every lane thread (the dispatcher sees the closed queue).
+        self.admission.close();
+        if let Some(j) = self.dispatcher.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::TapeEngine;
+    use crate::util::Pcg32;
+
+    fn lane_server(max_wait: Duration) -> LaneServer {
+        LaneServer::start(
+            &[1, 8],
+            |bucket| TapeEngine::new("mini_inception", &[bucket]),
+            LaneConfig { max_wait, ..Default::default() },
+        )
+        .expect("lane server start")
+    }
+
+    fn inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect()).collect()
+    }
+
+    #[test]
+    fn serves_requests_and_reports_lane_stats() {
+        let server = lane_server(Duration::from_millis(2));
+        let len = server.example_len();
+        let out_len = server.output_len();
+        let mut pending = Vec::new();
+        for input in inputs(20, len, 1) {
+            pending.push(server.infer_async(input).unwrap());
+        }
+        for rx in pending {
+            let logits = rx.recv().unwrap().unwrap();
+            assert_eq!(logits.len(), out_len);
+            assert!(logits.iter().all(|v| v.is_finite()));
+        }
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.n_requests, 20);
+        assert_eq!(report.lanes.len(), 2, "one stat per bucket");
+        let total: usize = report.lanes.iter().map(|l| l.n_requests).sum();
+        assert_eq!(total, 20);
+        assert!(report.lanes.iter().all(|l| l.alloc_events == 0), "pooled buffers must not grow");
+    }
+
+    #[test]
+    fn single_requests_match_the_direct_engine() {
+        let mut direct = TapeEngine::new("mini_inception", &[1, 8]).unwrap();
+        let server = lane_server(Duration::from_millis(1));
+        let input = inputs(1, server.example_len(), 9).pop().unwrap();
+        let expect = direct.infer_batch(1, &input).unwrap();
+        let got = server.infer(input).unwrap();
+        assert_eq!(got, expect);
+        let _ = server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn submit_batch_replies_with_full_padded_output() {
+        let server = lane_server(Duration::from_millis(1));
+        let len = server.example_len();
+        let out_len = server.output_len();
+        let batch: Vec<f32> = inputs(8, len, 33).concat();
+        let got = server.submit_batch(8, batch.clone()).unwrap().recv().unwrap().unwrap();
+        assert_eq!(got.len(), 8 * out_len);
+        let mut direct = TapeEngine::new("mini_inception", &[8]).unwrap();
+        assert_eq!(got, direct.infer_batch(8, &batch).unwrap());
+        let _ = server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn rejects_malformed_inputs_client_side() {
+        let server = lane_server(Duration::from_millis(1));
+        assert!(server.infer(vec![0.0; 3]).is_err());
+        assert!(server.submit_batch(3, vec![0.0; 3]).is_err(), "unknown bucket");
+        assert!(server.submit_batch(8, vec![0.0; 5]).is_err(), "bad batch length");
+        // server still healthy afterwards
+        assert!(server.infer(vec![0.0; server.example_len()]).is_ok());
+        let _ = server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn drop_without_shutdown_joins_cleanly() {
+        let server = lane_server(Duration::from_millis(1));
+        let _ = server.infer(vec![0.1; server.example_len()]).unwrap();
+        drop(server); // must not hang or leak lane threads
+    }
+
+    #[test]
+    fn factory_failure_tears_down_cleanly() {
+        let r = LaneServer::start(
+            &[1, 2],
+            |bucket| {
+                if bucket == 2 {
+                    anyhow::bail!("injected build failure");
+                }
+                TapeEngine::new("mini_inception", &[bucket])
+            },
+            LaneConfig::default(),
+        );
+        assert!(r.is_err());
+        assert!(format!("{:#}", r.err().unwrap()).contains("injected build failure"));
+    }
+}

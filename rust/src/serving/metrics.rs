@@ -1,7 +1,51 @@
-//! Serving metrics: per-request latency distribution + throughput.
+//! Serving metrics: per-request latency distribution + throughput, and
+//! per-lane breakdowns for the lane scheduler.
 
 use crate::util::stats::{fmt_secs, Summary};
 use std::time::Duration;
+
+/// Per-lane counters reported by the lane scheduler: one entry per batch
+/// bucket, filled by that bucket's lane thread at shutdown.
+#[derive(Debug, Clone)]
+pub struct LaneStat {
+    /// Compiled batch size this lane serves.
+    pub bucket: usize,
+    /// Stream count of the lane engine's replay context, when the engine
+    /// exposes it ([`InferEngine::stream_count`](crate::coordinator::InferEngine::stream_count)).
+    pub n_streams: Option<usize>,
+    pub n_batches: usize,
+    /// Real (unpadded) examples served by this lane.
+    pub n_requests: usize,
+    /// Seconds the lane engine spent inside `infer_batch`.
+    pub busy_s: f64,
+    /// Mean seconds a formed batch waited in this lane's queue.
+    pub mean_queue_wait_s: f64,
+    /// Padded-buffer would-allocate events on this lane's dispatch path
+    /// (0 in steady state: buffers are pooled and reused).
+    pub alloc_events: u64,
+}
+
+impl LaneStat {
+    pub fn render(&self) -> String {
+        format!(
+            "lane[bucket={}]: batches={} requests={} busy={} qwait={}{}{}",
+            self.bucket,
+            self.n_batches,
+            self.n_requests,
+            fmt_secs(self.busy_s),
+            fmt_secs(self.mean_queue_wait_s),
+            match self.n_streams {
+                Some(s) => format!(" streams={s}"),
+                None => String::new(),
+            },
+            if self.alloc_events > 0 {
+                format!(" ALLOC_EVENTS={}", self.alloc_events)
+            } else {
+                String::new()
+            },
+        )
+    }
+}
 
 /// Aggregated report for a serving run.
 #[derive(Debug, Clone)]
@@ -12,6 +56,9 @@ pub struct ServingReport {
     pub latency: Summary,
     /// Mean real (unpadded) examples per formed batch.
     pub mean_batch_fill: f64,
+    /// Per-bucket lane breakdown (empty for the single-engine-thread
+    /// server, one entry per bucket for the lane scheduler).
+    pub lanes: Vec<LaneStat>,
 }
 
 impl ServingReport {
@@ -19,8 +66,13 @@ impl ServingReport {
         self.n_requests as f64 / self.wall_time.as_secs_f64()
     }
 
+    /// Lane stat for one bucket, if this run was lane-scheduled.
+    pub fn lane(&self, bucket: usize) -> Option<&LaneStat> {
+        self.lanes.iter().find(|l| l.bucket == bucket)
+    }
+
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "requests={}  batches={}  fill={:.2}  wall={}  thpt={:.1} req/s\n\
              latency: p50={} p90={} p99={} max={}",
             self.n_requests,
@@ -32,7 +84,12 @@ impl ServingReport {
             fmt_secs(self.latency.percentile(90.0)),
             fmt_secs(self.latency.percentile(99.0)),
             fmt_secs(self.latency.max()),
-        )
+        );
+        for lane in &self.lanes {
+            out.push('\n');
+            out.push_str(&lane.render());
+        }
+        out
     }
 }
 
@@ -48,10 +105,47 @@ mod tests {
             wall_time: Duration::from_secs(2),
             latency: Summary::from_samples(vec![0.01; 100]),
             mean_batch_fill: 5.0,
+            lanes: Vec::new(),
         };
         assert!((r.throughput_rps() - 50.0).abs() < 1e-9);
         let s = r.render();
         assert!(s.contains("requests=100"));
         assert!(s.contains("p99"));
+    }
+
+    #[test]
+    fn lane_stats_render_and_lookup() {
+        let r = ServingReport {
+            n_requests: 10,
+            n_batches: 4,
+            wall_time: Duration::from_secs(1),
+            latency: Summary::from_samples(vec![0.01; 10]),
+            mean_batch_fill: 2.5,
+            lanes: vec![
+                LaneStat {
+                    bucket: 1,
+                    n_streams: Some(2),
+                    n_batches: 2,
+                    n_requests: 2,
+                    busy_s: 0.1,
+                    mean_queue_wait_s: 0.001,
+                    alloc_events: 0,
+                },
+                LaneStat {
+                    bucket: 8,
+                    n_streams: None,
+                    n_batches: 2,
+                    n_requests: 8,
+                    busy_s: 0.2,
+                    mean_queue_wait_s: 0.002,
+                    alloc_events: 0,
+                },
+            ],
+        };
+        assert_eq!(r.lane(8).unwrap().n_requests, 8);
+        assert!(r.lane(4).is_none());
+        let s = r.render();
+        assert!(s.contains("lane[bucket=1]"));
+        assert!(s.contains("streams=2"));
     }
 }

@@ -1,22 +1,38 @@
 //! Batched serving front-end — the "serving paper" L3 shape: request
-//! queue → dynamic batcher → inference engine → latency/throughput
+//! queue → dynamic batcher → inference engine(s) → latency/throughput
 //! metrics.
 //!
-//! The server is generic over [`InferEngine`](crate::coordinator::InferEngine)
-//! and runs the engine on a dedicated thread (PJRT state is not `Send`),
-//! communicating over channels. Static shapes (the paper's core
-//! assumption) mean the batcher pads each group to the nearest compiled
-//! batch size, TensorRT-profile style, writing into one reused batch
-//! buffer. Each batch bucket replays on its own reusable context:
-//! [`sim_engine::TapeEngine`] on the virtual substrate (always
-//! available), the PJRT `NimbleEngine` with the `xla` feature.
+//! Two servers share the batcher and the [`InferEngine`](crate::coordinator::InferEngine)
+//! contract:
+//!
+//! * [`server::NimbleServer`] — the single-engine-thread baseline: one
+//!   dedicated thread owns the engine (PJRT state is not `Send`) and
+//!   executes batches sequentially.
+//! * [`lanes::LaneServer`] — the lane scheduler: a bounded MPMC
+//!   admission queue feeds a dispatcher that routes each formed batch to
+//!   its bucket's **lane**, a dedicated thread with its own engine.
+//!   Same-bucket batches pipeline FIFO; different buckets overlap
+//!   end-to-end. Backpressure flows lane → buffer pool → batcher →
+//!   admission queue → clients.
+//!
+//! Static shapes (the paper's core assumption) mean the batcher pads
+//! each group to the nearest compiled batch size, TensorRT-profile
+//! style, writing into reused batch buffers. Each batch bucket replays
+//! on its own reusable context: [`sim_engine::TapeEngine`] on the
+//! virtual substrate (always available), the PJRT `NimbleEngine` with
+//! the `xla` feature (per-lane instances via
+//! `NimbleEngine::build_for`).
 
 pub mod batcher;
+pub mod lanes;
 pub mod metrics;
+pub mod queue;
 pub mod server;
 pub mod sim_engine;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::ServingReport;
+pub use lanes::{LaneClient, LaneConfig, LaneServer};
+pub use metrics::{LaneStat, ServingReport};
+pub use queue::Bounded;
 pub use server::{NimbleServer, ServerClient, ServerConfig};
 pub use sim_engine::TapeEngine;

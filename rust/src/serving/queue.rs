@@ -1,0 +1,284 @@
+//! Bounded MPMC queue: the admission and lane-dispatch channel of the
+//! lane scheduler.
+//!
+//! `std::sync::mpsc` channels are unbounded, so a burst of clients could
+//! queue arbitrarily much work in front of a busy engine. [`Bounded`] is
+//! a small Mutex+Condvar MPMC queue with a hard capacity: producers
+//! block (or fail fast with [`PushError::Full`] via
+//! [`try_push`](Bounded::try_push)) when the queue is full, which is how
+//! backpressure propagates from a slow lane all the way back to the
+//! clients. Closing the queue wakes everyone: blocked producers fail
+//! with [`PushError::Closed`], consumers drain the remaining items and
+//! then observe the close — nothing enqueued before the close is ever
+//! dropped (the shutdown-flush guarantee of the lane server).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Why a push did not enqueue. The rejected value is handed back so the
+/// caller can reply to it (e.g. with an explicit shutdown error).
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Queue at capacity (returned by [`Bounded::try_push`] only).
+    Full(T),
+    /// Queue closed; no further items are accepted.
+    Closed(T),
+}
+
+/// Outcome of a deadline-bounded pop.
+#[derive(Debug)]
+pub enum PopResult<T> {
+    Item(T),
+    /// Deadline passed with the queue still empty (and open).
+    TimedOut,
+    /// Queue closed and fully drained.
+    Closed,
+}
+
+struct State<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    cap: usize,
+    /// Signalled when an item is pushed or the queue closes.
+    not_empty: Condvar,
+    /// Signalled when an item is popped or the queue closes.
+    not_full: Condvar,
+}
+
+/// A cloneable handle to one bounded MPMC queue; every clone is both a
+/// producer and a consumer.
+pub struct Bounded<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> Clone for Bounded<T> {
+    fn clone(&self) -> Self {
+        Bounded { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl<T> Bounded<T> {
+    /// A queue holding at most `cap` items (`cap` ≥ 1).
+    pub fn new(cap: usize) -> Bounded<T> {
+        assert!(cap >= 1, "bounded queue needs capacity >= 1");
+        Bounded {
+            shared: Arc::new(Shared {
+                state: Mutex::new(State { buf: VecDeque::with_capacity(cap), closed: false }),
+                cap,
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.shared.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.shared.state.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Block until there is space, then enqueue. Fails only when closed.
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(PushError::Closed(item));
+            }
+            if st.buf.len() < self.shared.cap {
+                st.buf.push_back(item);
+                drop(st);
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.shared.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Enqueue without blocking.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        if st.buf.len() >= self.shared.cap {
+            return Err(PushError::Full(item));
+        }
+        st.buf.push_back(item);
+        drop(st);
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Block until an item is available; `None` once closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.buf.pop_front() {
+                drop(st);
+                self.shared.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.shared.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Dequeue without blocking (even on a closed queue, drains leftovers).
+    pub fn try_pop(&self) -> Option<T> {
+        let mut st = self.shared.state.lock().unwrap();
+        let item = st.buf.pop_front();
+        if item.is_some() {
+            drop(st);
+            self.shared.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Block until an item arrives, the queue closes, or `deadline` passes.
+    pub fn pop_deadline(&self, deadline: Instant) -> PopResult<T> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.buf.pop_front() {
+                drop(st);
+                self.shared.not_full.notify_one();
+                return PopResult::Item(item);
+            }
+            if st.closed {
+                return PopResult::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopResult::TimedOut;
+            }
+            let (guard, _timeout) =
+                self.shared.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Close the queue: producers fail from now on, consumers drain what
+    /// is left. Idempotent.
+    pub fn close(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.shared.state.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let q: Bounded<u32> = Bounded::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert!(matches!(q.try_push(3), Err(PushError::Full(3))));
+        assert_eq!(q.pop(), Some(1));
+        q.push(3).unwrap();
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let q: Bounded<u32> = Bounded::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert!(matches!(q.push(8), Err(PushError::Closed(8))));
+        assert_eq!(q.pop(), Some(7), "items enqueued before close survive");
+        assert_eq!(q.pop(), None);
+        assert!(matches!(q.pop_deadline(Instant::now()), PopResult::Closed));
+    }
+
+    #[test]
+    fn pop_deadline_times_out_when_empty() {
+        let q: Bounded<u32> = Bounded::new(1);
+        let t0 = Instant::now();
+        let r = q.pop_deadline(t0 + Duration::from_millis(20));
+        assert!(matches!(r, PopResult::TimedOut));
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn blocked_producer_resumes_after_pop() {
+        let q: Bounded<u32> = Bounded::new(1);
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || q2.push(2));
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.pop(), Some(1));
+        producer.join().unwrap().unwrap();
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn blocked_consumer_wakes_on_close() {
+        let q: Bounded<u32> = Bounded::new(1);
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), None);
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_exactly_once() {
+        let q: Bounded<u64> = Bounded::new(8);
+        let n_producers = 4;
+        let per_producer = 50u64;
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        let producers: Vec<_> = (0..n_producers)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per_producer {
+                        q.push(p as u64 * per_producer + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> =
+            consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        let expect: Vec<u64> = (0..n_producers as u64 * per_producer).collect();
+        assert_eq!(all, expect);
+    }
+}

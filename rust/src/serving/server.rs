@@ -1,5 +1,10 @@
 //! The serving loop: a dedicated engine thread (PJRT state is not `Send`)
-//! consuming a request channel through the dynamic batcher.
+//! consuming a request channel through the dynamic batcher. This is the
+//! **single-engine-thread baseline**; the lane scheduler
+//! ([`super::lanes::LaneServer`]) overlaps batch buckets end-to-end and
+//! is what the serving bench compares against. Shutdown flushes the
+//! request channel before the engine stops: a request sent before
+//! `shutdown` was called is served, never dropped.
 //!
 //! Wire-up:
 //!   client threads → mpsc<Request> → [server thread: batcher → engine
@@ -227,6 +232,25 @@ fn engine_thread<E: InferEngine>(
             }
             Some(Msg::Shutdown { reply }) => {
                 shutdown_reply = Some(reply);
+                // Flush the channel: requests already sent when shutdown
+                // was requested must be served, not dropped with the
+                // receiver. (Anything sent after this drain fails at the
+                // sender once the channel disconnects below.)
+                while let Ok(m) = rx.try_recv() {
+                    match m {
+                        Msg::Infer { input, reply } => {
+                            if input.len() != example_len {
+                                let _ = reply.send(Err(format!(
+                                    "bad input length {} != {example_len}",
+                                    input.len()
+                                )));
+                            } else {
+                                batcher.push(reply, input);
+                            }
+                        }
+                        Msg::Shutdown { .. } => {}
+                    }
+                }
             }
             None if batcher.pending() == 0 && shutdown_reply.is_none() => break 'outer,
             None => {}
@@ -272,6 +296,7 @@ fn engine_thread<E: InferEngine>(
             Summary::from_samples(latencies)
         },
         mean_batch_fill: if n_batches == 0 { 0.0 } else { fill_sum as f64 / n_batches as f64 },
+        lanes: Vec::new(),
     };
     if let Some(reply) = shutdown_reply {
         let _ = reply.send(report);

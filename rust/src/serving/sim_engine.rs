@@ -6,22 +6,30 @@
 //! graph rewriter, compiles the launch plan into a
 //! [`ReplayTape`](crate::aot::tape::ReplayTape), and keeps an
 //! **independent [`ReplayContext`]** (its own slot arena, event table
-//! and per-stream worker pool). Buckets therefore replay concurrently
-//! and a hot bucket never contends with a cold one — and the steady-
-//! state request loop performs zero per-task heap allocation.
+//! and worker pool). Buckets therefore replay concurrently and a hot
+//! bucket never contends with a cold one — and the steady-state request
+//! loop performs zero per-task heap allocation.
 //!
-//! This engine is what lets the whole serving stack (batcher, deadlines,
-//! padding, reports) run — and be tested — without artifacts or a PJRT
-//! backend.
+//! Three knobs matter for the lane scheduler:
+//! * [`from_graph_fn`](TapeEngine::from_graph_fn) builds an engine from
+//!   an arbitrary graph builder (the randomized differential harness
+//!   feeds it seeded random cells),
+//! * [`with_worker_cap`](TapeEngine::with_worker_cap) caps each
+//!   context's pool via the executor's work-sharing mode (many lanes ×
+//!   many streams must not exceed the physical cores by much), and
+//! * [`serial`](TapeEngine::serial) switches `infer_batch` to the
+//!   single-thread serial replay — the differential oracle the lane
+//!   pipeline is checked against bit-for-bit.
 
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 
 use crate::aot::tape::ReplayTape;
 use crate::coordinator::InferEngine;
-use crate::engine::executor::{ReplayContext, SyntheticKernel};
+use crate::engine::executor::{ExecOptions, ReplayContext, SyntheticKernel};
 use crate::matching::MatchingAlgo;
 use crate::models;
+use crate::ops::OpGraph;
 use crate::stream::rewrite::rewrite;
 
 /// Intermediate-activation clamp for the synthetic substrate (input and
@@ -34,11 +42,36 @@ pub struct TapeEngine {
     example_len: usize,
     output_len: usize,
     contexts: HashMap<usize, ReplayContext>,
+    /// Serial-oracle mode: replay on the calling thread in merged
+    /// submission order instead of releasing the worker pool.
+    serial: bool,
 }
 
 impl TapeEngine {
-    /// Build contexts for `model` at each batch bucket.
+    /// Build contexts for the zoo model `model` at each batch bucket.
     pub fn new(model: &str, batch_sizes: &[usize]) -> Result<TapeEngine> {
+        Self::with_worker_cap(model, batch_sizes, None)
+    }
+
+    /// Like [`new`](Self::new), with a per-context worker cap
+    /// ([`ExecOptions::max_workers`]).
+    pub fn with_worker_cap(
+        model: &str,
+        batch_sizes: &[usize],
+        worker_cap: Option<usize>,
+    ) -> Result<TapeEngine> {
+        let name = model.to_string();
+        Self::from_graph_fn(model, batch_sizes, worker_cap, move |b| models::build(&name, b))
+    }
+
+    /// Build contexts from an arbitrary per-bucket graph builder. The
+    /// graph must have exactly one `Input` node; `name` labels errors.
+    pub fn from_graph_fn(
+        name: &str,
+        batch_sizes: &[usize],
+        worker_cap: Option<usize>,
+        build: impl Fn(usize) -> OpGraph,
+    ) -> Result<TapeEngine> {
         anyhow::ensure!(!batch_sizes.is_empty(), "need at least one batch size");
         let mut sizes: Vec<usize> = batch_sizes.to_vec();
         sizes.sort_unstable();
@@ -47,23 +80,23 @@ impl TapeEngine {
         let mut example_len = 0usize;
         let mut output_len = 0usize;
         for &batch in &sizes {
-            let g = models::build(model, batch);
+            let g = build(batch);
             let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
             let tape = ReplayTape::for_op_graph(&g, &plan, MAX_TASK_ELEMS);
             anyhow::ensure!(
                 tape.input_slots().len() == 1,
-                "{model}: expected exactly one input, got {}",
+                "{name}: expected exactly one input, got {}",
                 tape.input_slots().len()
             );
             let in_len = tape.input_slots()[0].1;
             let out_len = g.node(tape.output_slot()).out_shape.numel();
             anyhow::ensure!(
                 in_len % batch == 0 && out_len % batch == 0,
-                "{model}: lengths not divisible by batch {batch}"
+                "{name}: lengths not divisible by batch {batch}"
             );
             anyhow::ensure!(
                 out_len <= MAX_TASK_ELEMS,
-                "{model}: output larger than the substrate clamp"
+                "{name}: output larger than the substrate clamp"
             );
             let (per_in, per_out) = (in_len / batch, out_len / batch);
             if example_len == 0 {
@@ -72,12 +105,28 @@ impl TapeEngine {
             } else {
                 anyhow::ensure!(
                     example_len == per_in && output_len == per_out,
-                    "{model}: inconsistent per-example shapes across batches"
+                    "{name}: inconsistent per-example shapes across batches"
                 );
             }
-            contexts.insert(batch, ReplayContext::new(tape, SyntheticKernel));
+            contexts.insert(
+                batch,
+                ReplayContext::with_options(
+                    tape,
+                    SyntheticKernel,
+                    ExecOptions { max_workers: worker_cap, ..Default::default() },
+                ),
+            );
         }
-        Ok(TapeEngine { batch_sizes: sizes, example_len, output_len, contexts })
+        Ok(TapeEngine { batch_sizes: sizes, example_len, output_len, contexts, serial: false })
+    }
+
+    /// Switch to serial-oracle mode: `infer_batch` replays on the
+    /// calling thread in merged submission order. The parallel and lane
+    /// paths are asserted bit-identical to this in the randomized
+    /// differential harness (`tests/prop_harness.rs`).
+    pub fn serial(mut self) -> Self {
+        self.serial = true;
+        self
     }
 
     /// Direct access to a bucket's context (tests, benches).
@@ -100,12 +149,21 @@ impl InferEngine for TapeEngine {
     }
 
     fn infer_batch(&mut self, bucket: usize, input: &[f32]) -> Result<Vec<f32>> {
+        let serial = self.serial;
         let ctx = self
             .contexts
             .get_mut(&bucket)
             .with_context(|| format!("no replay context for batch {bucket}"))?;
-        ctx.replay_one(input).map_err(anyhow::Error::msg)?;
+        if serial {
+            ctx.replay_serial(&[input]).map_err(anyhow::Error::msg)?;
+        } else {
+            ctx.replay_one(input).map_err(anyhow::Error::msg)?;
+        }
         Ok(ctx.output().to_vec())
+    }
+
+    fn stream_count(&self, bucket: usize) -> Option<usize> {
+        self.contexts.get(&bucket).map(|c| c.n_streams())
     }
 }
 
@@ -125,6 +183,8 @@ mod tests {
         assert_eq!(e.batch_sizes(), vec![1, 8]);
         assert!(e.example_len() > 0);
         assert!(e.output_len() > 0);
+        assert!(e.stream_count(1).unwrap_or(0) >= 1);
+        assert!(e.stream_count(4).is_none());
     }
 
     #[test]
@@ -143,5 +203,20 @@ mod tests {
     fn unknown_bucket_errors() {
         let mut e = TapeEngine::new("mini_inception", &[1]).unwrap();
         assert!(e.infer_batch(4, &[0.0; 16]).is_err());
+    }
+
+    #[test]
+    fn serial_oracle_and_capped_engine_match_parallel_bitwise() {
+        let mut par = TapeEngine::new("mini_inception", &[1, 2]).unwrap();
+        let mut ser = TapeEngine::new("mini_inception", &[1, 2]).unwrap().serial();
+        let mut capped = TapeEngine::with_worker_cap("mini_inception", &[1, 2], Some(1)).unwrap();
+        let len = par.example_len();
+        for (i, x) in inputs(3, len, 77).into_iter().enumerate() {
+            let a = par.infer_batch(1, &x).unwrap();
+            let b = ser.infer_batch(1, &x).unwrap();
+            let c = capped.infer_batch(1, &x).unwrap();
+            assert_eq!(a, b, "case {i}: parallel vs serial oracle");
+            assert_eq!(a, c, "case {i}: parallel vs capped pool");
+        }
     }
 }

@@ -93,6 +93,8 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
     let host_s = host_clock;
 
     // --- Phase 2: device execution. ---
+    // NOTE: `simulate_lanes` mirrors this device model over a merged
+    // multi-lane task list; keep the two in lockstep when changing it.
     // Stream FIFOs hold indices into plan.order.
     let mut queues: Vec<std::collections::VecDeque<usize>> =
         vec![std::collections::VecDeque::new(); n_streams];
@@ -245,6 +247,242 @@ pub fn simulate_tape(
 ) -> SimResult {
     let plan = tape.to_launch_plan();
     simulate(&SimConfig { plan: &plan, costs, host, device })
+}
+
+/// One serving lane's offered work in the multi-lane DES
+/// ([`simulate_lanes`]): a compiled tape, its per-node kernel costs, and
+/// the wall-clock when its batch was dispatched to the lane.
+pub struct LaneLoad<'a> {
+    pub tape: &'a crate::aot::tape::ReplayTape,
+    pub costs: &'a [KernelCost],
+    /// Dispatch time of this lane's batch (≥ 0; the simulation origin is
+    /// the first possible dispatch).
+    pub arrival_s: f64,
+}
+
+/// Multi-lane prediction: the overlapped makespan against the serialized
+/// single-engine-thread baseline, plus a deterministic completion trace.
+#[derive(Debug, Clone)]
+pub struct MultiLaneResult {
+    /// Independent single-lane results (each lane alone on the device,
+    /// starting at t = 0) — the per-lane latency floor.
+    pub per_lane: Vec<SimResult>,
+    /// Absolute completion time of each lane in the overlapped schedule.
+    pub lane_end_s: Vec<f64>,
+    /// Overlapped makespan from t = 0.
+    pub total_s: f64,
+    /// Makespan when the same lanes run back-to-back on one engine
+    /// thread (each starting no earlier than its arrival) — the PR-1
+    /// serving baseline.
+    pub serial_total_s: f64,
+    /// `(lane, node)` pairs sorted by completion time (ties broken by
+    /// lane then node) — the trace the determinism tests compare.
+    pub completion_order: Vec<(usize, NodeId)>,
+}
+
+impl MultiLaneResult {
+    /// Predicted throughput gain of overlapping the lanes.
+    pub fn overlap_speedup(&self) -> f64 {
+        if self.total_s == 0.0 {
+            1.0
+        } else {
+            self.serial_total_s / self.total_s
+        }
+    }
+}
+
+/// Joint DES over several lanes: each lane has its **own host thread**
+/// (per-lane submission clocks starting at its arrival — the lane
+/// scheduler's defining property), while all lanes share one device
+/// (SM pool + front-end serializer). Stream FIFOs and events never
+/// cross lanes, exactly like the independent per-bucket replay contexts.
+pub fn simulate_lanes(lanes: &[LaneLoad], host: HostProfile, device: GpuSpec) -> MultiLaneResult {
+    assert!(!lanes.is_empty(), "need at least one lane");
+    let plans: Vec<LaunchPlan> = lanes.iter().map(|l| l.tape.to_launch_plan()).collect();
+    let per_lane: Vec<SimResult> = lanes
+        .iter()
+        .zip(&plans)
+        .map(|(l, p)| {
+            simulate(&SimConfig { plan: p, costs: l.costs, host, device: device.clone() })
+        })
+        .collect();
+
+    // Serialized baseline: one engine thread replays the lanes in order.
+    let mut serial_clock = 0.0f64;
+    for (l, r) in lanes.iter().zip(&per_lane) {
+        assert!(l.arrival_s >= 0.0, "arrivals must be non-negative");
+        serial_clock = serial_clock.max(l.arrival_s) + r.total_s;
+    }
+    let serial_total_s = serial_clock;
+
+    // --- Merge lanes into one device-level task list. ---
+    struct MTask {
+        lane: usize,
+        node: NodeId,
+        stream: usize,
+        submit: f64,
+        dur: f64,
+        sm: usize,
+        waits: Vec<usize>,
+        records: Vec<usize>,
+    }
+    let n_lanes = lanes.len();
+    let (mut n_streams, mut n_events) = (0usize, 0usize);
+    let mut stream_off = vec![0usize; n_lanes];
+    let mut event_off = vec![0usize; n_lanes];
+    for (i, p) in plans.iter().enumerate() {
+        stream_off[i] = n_streams;
+        event_off[i] = n_events;
+        n_streams += p.n_streams;
+        n_events += p.n_events;
+    }
+    let mut tasks: Vec<MTask> = Vec::new();
+    let mut host_end = vec![0.0f64; n_lanes];
+    for (li, (lane, plan)) in lanes.iter().zip(&plans).enumerate() {
+        // Per-lane host thread: submission starts at the lane's arrival.
+        let mut host_clock = lane.arrival_s;
+        for p in &plan.order {
+            let cost = &lane.costs[p.node];
+            let is_real = cost.duration_s > 0.0 || cost.sm_demand > 0;
+            if is_real {
+                host_clock += host.per_task_s();
+                let sync_ops = p.wait_events.len() + p.record_events.len();
+                host_clock += sync_ops as f64 * host.submit_s;
+            }
+            tasks.push(MTask {
+                lane: li,
+                node: p.node,
+                stream: stream_off[li] + p.stream,
+                submit: host_clock,
+                dur: cost.duration_s,
+                sm: cost.sm_demand.min(device.sm_count),
+                waits: p.wait_events.iter().map(|&e| event_off[li] + e).collect(),
+                records: p.record_events.iter().map(|&e| event_off[li] + e).collect(),
+            });
+        }
+        host_end[li] = host_clock;
+    }
+
+    // --- Shared-device execution. ---
+    // NOTE: this mirrors `simulate`'s phase-2 discipline (SM-pool
+    // admission, front-end serializer, lazy-revalidated ready heap,
+    // running-list pruning) over the merged task list. Any change to the
+    // device model in `simulate` MUST be mirrored here — the
+    // `single_lane_degenerates_to_the_plain_simulation` test pins the
+    // single-lane case to within 1e-12, but multi-lane-only drift would
+    // only show up as wrong BENCH_serving.json predictions.
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    use std::collections::VecDeque;
+    let mut queues: Vec<VecDeque<usize>> = vec![VecDeque::new(); n_streams];
+    for (i, t) in tasks.iter().enumerate() {
+        queues[t.stream].push_back(i);
+    }
+    let mut prev_end = vec![0.0f64; n_streams];
+    let mut event_time: Vec<Option<f64>> = vec![None; n_events];
+    let mut running: Vec<(f64, usize)> = Vec::new();
+    let mut front_clock = 0.0f64;
+    let mut remaining = tasks.len();
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let mut blocked_on: Vec<Vec<usize>> = vec![Vec::new(); n_events];
+    let ready_of = |s: usize,
+                    queues: &[VecDeque<usize>],
+                    prev_end: &[f64],
+                    event_time: &[Option<f64>]|
+     -> Option<std::result::Result<f64, usize>> {
+        let &i = queues[s].front()?;
+        let t = &tasks[i];
+        let mut ready = t.submit.max(prev_end[s]);
+        for &e in &t.waits {
+            match event_time[e] {
+                Some(at) => ready = ready.max(at),
+                None => return Some(Err(e)),
+            }
+        }
+        Some(Ok(ready))
+    };
+    let enqueue_head = |s: usize,
+                        heap: &mut BinaryHeap<Reverse<(u64, usize)>>,
+                        blocked_on: &mut Vec<Vec<usize>>,
+                        queues: &[VecDeque<usize>],
+                        prev_end: &[f64],
+                        event_time: &[Option<f64>]| {
+        match ready_of(s, queues, prev_end, event_time) {
+            Some(Ok(t)) => heap.push(Reverse((t.to_bits(), s))),
+            Some(Err(e)) => blocked_on[e].push(s),
+            None => {}
+        }
+    };
+    for s in 0..n_streams {
+        enqueue_head(s, &mut heap, &mut blocked_on, &queues, &prev_end, &event_time);
+    }
+    let mut lane_end_s = host_end.clone();
+    let mut done: Vec<(usize, NodeId, f64)> = Vec::with_capacity(tasks.len());
+    while remaining > 0 {
+        let Some(Reverse((bits, s))) = heap.pop() else {
+            panic!("no eligible task: a lane's plan is unsafe or non-topological");
+        };
+        let ready = match ready_of(s, &queues, &prev_end, &event_time) {
+            Some(Ok(t)) => t,
+            Some(Err(e)) => {
+                blocked_on[e].push(s);
+                continue;
+            }
+            None => continue, // stream drained by a fresher entry
+        };
+        if ready.to_bits() != bits {
+            heap.push(Reverse((ready.to_bits(), s)));
+            continue;
+        }
+        let i = queues[s].pop_front().unwrap();
+        remaining -= 1;
+        let t = &tasks[i];
+        let mut start = ready;
+        if t.sm > 0 {
+            start = start.max(front_clock);
+            loop {
+                let used: usize =
+                    running.iter().filter(|&&(end, _)| end > start).map(|&(_, sm)| sm).sum();
+                if device.sm_count.saturating_sub(used) >= t.sm {
+                    break;
+                }
+                let next = running
+                    .iter()
+                    .map(|&(end, _)| end)
+                    .filter(|&end| end > start)
+                    .fold(f64::INFINITY, f64::min);
+                assert!(next.is_finite(), "SM demand can never be satisfied");
+                start = next;
+            }
+        }
+        let end = start + t.dur;
+        if t.sm > 0 {
+            front_clock = start + device.front_end_s;
+            running.push((end, t.sm));
+            if running.len() > 256 {
+                running.retain(|&(e, _)| e > start);
+            }
+        }
+        prev_end[s] = end;
+        for &e in &t.records {
+            event_time[e] = Some(end);
+            for w in std::mem::take(&mut blocked_on[e]) {
+                enqueue_head(w, &mut heap, &mut blocked_on, &queues, &prev_end, &event_time);
+            }
+        }
+        lane_end_s[t.lane] = lane_end_s[t.lane].max(end);
+        done.push((t.lane, t.node, end));
+        enqueue_head(s, &mut heap, &mut blocked_on, &queues, &prev_end, &event_time);
+    }
+    done.sort_by_key(|&(lane, node, end)| (end.to_bits(), lane, node));
+    let total_s = lane_end_s.iter().fold(0.0f64, |a, &b| a.max(b));
+    MultiLaneResult {
+        per_lane,
+        lane_end_s,
+        total_s,
+        serial_total_s,
+        completion_order: done.into_iter().map(|(lane, node, _)| (lane, node)).collect(),
+    }
 }
 
 #[cfg(test)]
@@ -420,6 +658,79 @@ mod tests {
                 assert_eq!(a.host_s.to_bits(), b.host_s.to_bits(), "{name}");
             }
         }
+    }
+
+    #[test]
+    fn lanes_overlap_and_beat_the_serial_baseline() {
+        // Two independent lanes of small kernels on a big device must
+        // overlap almost perfectly: the joint makespan sits well under
+        // the back-to-back baseline.
+        let g = branchy();
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+        let lanes = [
+            LaneLoad { tape: &tape, costs: &cs, arrival_s: 0.0 },
+            LaneLoad { tape: &tape, costs: &cs, arrival_s: 0.0 },
+        ];
+        let r = simulate_lanes(&lanes, HostProfile::nimble(), dev);
+        assert_eq!(r.per_lane.len(), 2);
+        assert!(r.total_s > 0.0);
+        assert!(
+            r.total_s < r.serial_total_s,
+            "overlap {} vs serial {}",
+            r.total_s,
+            r.serial_total_s
+        );
+        assert!(r.overlap_speedup() > 1.2, "speedup {}", r.overlap_speedup());
+        assert_eq!(r.completion_order.len(), 2 * plan.order.len());
+    }
+
+    #[test]
+    fn single_lane_degenerates_to_the_plain_simulation() {
+        let g = crate::models::build("mini_inception", 1);
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+        let solo = simulate_tape(&tape, &cs, HostProfile::nimble(), dev.clone());
+        let r = simulate_lanes(
+            &[LaneLoad { tape: &tape, costs: &cs, arrival_s: 0.0 }],
+            HostProfile::nimble(),
+            dev,
+        );
+        assert!((r.total_s - solo.total_s).abs() < 1e-12, "{} vs {}", r.total_s, solo.total_s);
+        assert!((r.serial_total_s - solo.total_s).abs() < 1e-12);
+        assert!((r.overlap_speedup() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multi_lane_completion_trace_is_deterministic() {
+        // Same lanes, same seed-free inputs: the completion-order trace
+        // must be identical run to run (the determinism contract the
+        // lane executor tests rely on).
+        let g = branchy();
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+        let mk = || {
+            simulate_lanes(
+                &[
+                    LaneLoad { tape: &tape, costs: &cs, arrival_s: 0.0 },
+                    LaneLoad { tape: &tape, costs: &cs, arrival_s: 1.0e-6 },
+                    LaneLoad { tape: &tape, costs: &cs, arrival_s: 2.0e-6 },
+                ],
+                HostProfile::nimble(),
+                dev.clone(),
+            )
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.completion_order, b.completion_order);
+        assert_eq!(a.total_s.to_bits(), b.total_s.to_bits());
+        // A lane that arrives later can only finish later.
+        assert!(a.lane_end_s[2] >= a.lane_end_s[0]);
     }
 
     #[test]

@@ -16,6 +16,9 @@ pub mod metrics;
 pub mod trace;
 
 pub use cost::{kernel_cost, KernelCost};
-pub use des::{simulate, simulate_tape, SimConfig, SimResult, TaskSpan};
+pub use des::{
+    simulate, simulate_lanes, simulate_tape, LaneLoad, MultiLaneResult, SimConfig, SimResult,
+    TaskSpan,
+};
 pub use device::GpuSpec;
 pub use framework::HostProfile;

@@ -141,6 +141,162 @@ fn concurrent_clients_all_get_served() {
     assert!(report.n_batches <= 24, "concurrent requests should batch");
 }
 
+/// Shutdown must flush requests already sent, not drop them on the
+/// engine channel (regression: `ServerClient` requests racing shutdown
+/// used to die with "server dropped request").
+#[test]
+fn shutdown_flushes_in_flight_requests_single_engine() {
+    // Long deadline: nothing would flush before shutdown arrives.
+    let server = NimbleServer::start_with(
+        || TapeEngine::new("mini_inception", &[1, 8]),
+        Duration::from_millis(500),
+    )
+    .expect("server");
+    let len = server.example_len();
+    let pending: Vec<_> =
+        inputs(10, len, 5).into_iter().map(|i| server.infer_async(i).unwrap()).collect();
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.n_requests, 10, "all in-flight requests served at shutdown");
+    for rx in pending {
+        assert!(rx.recv().unwrap().is_ok(), "flushed request must succeed, not drop");
+    }
+}
+
+#[test]
+fn shutdown_flushes_in_flight_requests_lane_server() {
+    use nimble::serving::{LaneConfig, LaneServer};
+    let server = LaneServer::start(
+        &[1, 8],
+        |bucket| TapeEngine::new("mini_inception", &[bucket]),
+        LaneConfig { max_wait: Duration::from_millis(500), ..Default::default() },
+    )
+    .expect("lane server");
+    let len = server.example_len();
+    let client = server.client();
+    let pending: Vec<_> =
+        inputs(10, len, 6).into_iter().map(|i| server.infer_async(i).unwrap()).collect();
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.n_requests, 10, "all in-flight requests served at shutdown");
+    for rx in pending {
+        assert!(rx.recv().unwrap().is_ok(), "flushed request must succeed, not drop");
+    }
+    // Requests after shutdown fail fast with an explicit error.
+    let err = client.infer(vec![0.0; len]);
+    assert!(err.is_err(), "post-shutdown request must be rejected");
+}
+
+/// Deadlock/starvation regression: a fault-injected slow lane must not
+/// stall the other lanes, and shutdown must still join every lane
+/// thread cleanly.
+#[test]
+fn slow_lane_does_not_starve_other_lanes_and_shutdown_joins() {
+    use nimble::coordinator::InferEngine;
+    use nimble::serving::{LaneConfig, LaneServer};
+    use std::time::Instant;
+
+    /// Wraps a [`TapeEngine`] and sleeps on one bucket, simulating a
+    /// stuck/overloaded engine.
+    struct SlowLane {
+        inner: TapeEngine,
+        slow_bucket: usize,
+        delay: Duration,
+    }
+
+    impl InferEngine for SlowLane {
+        fn batch_sizes(&self) -> Vec<usize> {
+            self.inner.batch_sizes()
+        }
+        fn example_len(&self) -> usize {
+            self.inner.example_len()
+        }
+        fn output_len(&self) -> usize {
+            self.inner.output_len()
+        }
+        fn infer_batch(&mut self, bucket: usize, input: &[f32]) -> anyhow::Result<Vec<f32>> {
+            if bucket == self.slow_bucket {
+                std::thread::sleep(self.delay);
+            }
+            self.inner.infer_batch(bucket, input)
+        }
+        fn stream_count(&self, bucket: usize) -> Option<usize> {
+            self.inner.stream_count(bucket)
+        }
+    }
+
+    const N_SLOW: usize = 3;
+    const N_FAST: usize = 6;
+
+    // Calibrate on this machine/build: one warmed direct batch-8 replay
+    // bounds what a healthy fast lane needs, so the watchdog scales with
+    // debug-mode and loaded-CI slowness instead of flaking.
+    let t_fast = {
+        let mut probe = TapeEngine::new("mini_inception", &[8]).unwrap();
+        let z = vec![0.0f32; 8 * probe.example_len()];
+        probe.infer_batch(8, &z).unwrap(); // warm-up
+        let t0 = Instant::now();
+        probe.infer_batch(8, &z).unwrap();
+        t0.elapsed()
+    };
+    // Watchdog: generous for the fast lane (per-batch time × batches,
+    // plus fixed headroom)…
+    let watchdog = t_fast * (N_FAST as u32 + 2) + Duration::from_millis(500);
+    // …while each slow-lane batch alone eats a full watchdog, so a
+    // regression to single-engine-thread serialization (fast waits for
+    // N_SLOW × delay) overshoots it 3× and fails loudly.
+    let delay = watchdog;
+
+    let server = LaneServer::start(
+        &[1, 8],
+        move |bucket| {
+            Ok(SlowLane {
+                inner: TapeEngine::new("mini_inception", &[bucket])?,
+                slow_bucket: 1,
+                delay,
+            })
+        },
+        LaneConfig { max_wait: Duration::from_millis(1), ..Default::default() },
+    )
+    .expect("lane server");
+    let len = server.example_len();
+    let out_len = server.output_len();
+
+    // Jam the slow lane first (its queue keeps it busy for 3 × delay)...
+    let slow: Vec<_> = (0..N_SLOW)
+        .map(|i| server.submit_batch(1, inputs(1, len, 100 + i as u64).concat()).unwrap())
+        .collect();
+    // ...then drive the fast lane and demand it drains under the watchdog.
+    let t0 = Instant::now();
+    let fast: Vec<_> = (0..N_FAST)
+        .map(|i| server.submit_batch(8, inputs(8, len, 200 + i as u64).concat()).unwrap())
+        .collect();
+    for (i, rx) in fast.into_iter().enumerate() {
+        let remaining = watchdog.saturating_sub(t0.elapsed());
+        let out = rx
+            .recv_timeout(remaining)
+            .unwrap_or_else(|_| panic!("fast batch {i} starved behind the slow lane"))
+            .expect("fast batch failed");
+        assert_eq!(out.len(), 8 * out_len);
+    }
+    assert!(
+        t0.elapsed() < watchdog,
+        "fast lane took {:?} (watchdog {:?}), starved behind the slow lane",
+        t0.elapsed(),
+        watchdog
+    );
+
+    // The slow jobs still complete, and shutdown joins every lane.
+    for rx in slow {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    let report = server.shutdown().expect("shutdown joins all lanes");
+    assert_eq!(report.lane(1).unwrap().n_batches, N_SLOW);
+    assert_eq!(report.lane(8).unwrap().n_batches, N_FAST);
+    // Sanity: the fast-lane outputs came from the real engine.
+    let mut direct = TapeEngine::new("mini_inception", &[8]).unwrap();
+    let batch = inputs(8, len, 200).concat();
+    assert_eq!(direct.infer_batch(8, &batch).unwrap().len(), 8 * out_len);
+}
+
 /// PJRT-backed serving tests (feature `xla`; skip without artifacts).
 #[cfg(feature = "xla")]
 mod xla {

@@ -1,0 +1,212 @@
+//! Randomized differential harness for the lane scheduler.
+//!
+//! Every case draws a random operator graph (seeded generator, up to 64
+//! nodes), a random bucket set (1–8 compiled batch sizes), and random
+//! traffic in a shuffled arrival order, then pushes it through the
+//! lane-pipelined server and demands **bit-identical** outputs to the
+//! serial single-thread `TapeEngine` replay of the same padded batches.
+//! Batch composition is pinned by submitting pre-formed batches
+//! (`submit_batch`), so the only thing that varies between the two runs
+//! is the execution schedule — exactly the thing the lane scheduler must
+//! not let leak into results.
+//!
+//! The base seed is fixed (overridable via `NIMBLE_PROP_SEED` — CI pins
+//! it), and every failure message carries the case seed that reproduces
+//! it.
+
+use nimble::coordinator::InferEngine;
+use nimble::models::rand_cell::{random_cell, RANDOM_CELL_EXAMPLE_LEN};
+use nimble::serving::{LaneConfig, LaneServer, TapeEngine};
+use nimble::util::prop::{check_from, ensure};
+use nimble::util::Pcg32;
+use std::time::Duration;
+
+fn base_seed() -> u64 {
+    std::env::var("NIMBLE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x1A5E_CAFE)
+}
+
+/// Draw 1–8 distinct bucket sizes.
+fn random_buckets(rng: &mut Pcg32) -> Vec<usize> {
+    const CHOICES: [usize; 8] = [1, 2, 3, 4, 6, 8, 12, 16];
+    let n = rng.gen_range_inclusive(1, 8);
+    let mut picks = CHOICES.to_vec();
+    rng.shuffle(&mut picks);
+    picks.truncate(n);
+    picks.sort_unstable();
+    picks
+}
+
+/// Lane config with headroom so the harness never trips load shedding.
+fn roomy_config(max_wait: Duration) -> LaneConfig {
+    LaneConfig { max_wait, lane_cap: 12, buffers_per_lane: 14, ..Default::default() }
+}
+
+fn random_input(rng: &mut Pcg32, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect()
+}
+
+/// ≥100 random cases: lane-pipelined outputs are bit-identical to the
+/// serial oracle across random graphs, bucket sets, and arrival orders.
+#[test]
+fn lane_pipeline_is_bit_identical_to_serial_replay() {
+    check_from("lane-vs-serial", base_seed(), 100, |rng| {
+        let n_nodes = rng.gen_range_inclusive(8, 64);
+        let graph_seed = rng.next_u64();
+        let buckets = random_buckets(rng);
+        let build = move |b: usize| random_cell(&mut Pcg32::new(graph_seed), n_nodes, b);
+
+        // Serial oracle: one engine, all buckets, single-thread replay.
+        let mut oracle = TapeEngine::from_graph_fn("rand-cell", &buckets, Some(1), build)
+            .map_err(|e| format!("oracle build failed: {e:#}"))?
+            .serial();
+        // Lane server: one single-bucket engine per lane, worker-capped.
+        let server = LaneServer::start(
+            &buckets,
+            move |bucket| TapeEngine::from_graph_fn("rand-cell", &[bucket], Some(2), build),
+            roomy_config(Duration::from_millis(1)),
+        )
+        .map_err(|e| format!("lane server start failed: {e:#}"))?;
+        ensure(server.example_len() == RANDOM_CELL_EXAMPLE_LEN, || {
+            format!("example_len {} != {}", server.example_len(), RANDOM_CELL_EXAMPLE_LEN)
+        })?;
+
+        // Random traffic: padded batches over random buckets, submitted
+        // in a shuffled order so lanes interleave arbitrarily.
+        let n_batches = rng.gen_range_inclusive(3, 10);
+        let mut jobs: Vec<(usize, Vec<f32>)> = (0..n_batches)
+            .map(|_| {
+                let bucket = *rng.choose(&buckets);
+                let input = random_input(rng, bucket * RANDOM_CELL_EXAMPLE_LEN);
+                (bucket, input)
+            })
+            .collect();
+        rng.shuffle(&mut jobs);
+
+        let pending: Vec<_> = jobs
+            .iter()
+            .map(|(bucket, input)| server.submit_batch(*bucket, input.clone()))
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("submit failed: {e:#}"))?;
+        let outputs: Vec<Vec<f32>> = pending
+            .into_iter()
+            .map(|rx| match rx.recv() {
+                Ok(result) => result,
+                Err(_) => Err("reply dropped".to_string()),
+            })
+            .collect::<Result<_, _>>()?;
+
+        for (i, ((bucket, input), got)) in jobs.iter().zip(&outputs).enumerate() {
+            let want = oracle
+                .infer_batch(*bucket, input)
+                .map_err(|e| format!("oracle replay failed: {e:#}"))?;
+            ensure(got.len() == want.len(), || {
+                format!("job {i}: output length {} != {}", got.len(), want.len())
+            })?;
+            for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+                ensure(a.to_bits() == b.to_bits(), || {
+                    format!(
+                        "job {i} (bucket {bucket}) diverged at element {j}: {a:?} vs {b:?}"
+                    )
+                })?;
+            }
+        }
+        let report = server.shutdown().map_err(|e| format!("shutdown failed: {e:#}"))?;
+        ensure(report.n_batches == n_batches, || {
+            format!("served {} batches, submitted {n_batches}", report.n_batches)
+        })?;
+        Ok(())
+    });
+}
+
+/// The batcher path agrees with the oracle when composition is pinned to
+/// single-request batches (strictly sequential blocking clients).
+#[test]
+fn sequential_requests_through_the_batcher_match_the_oracle() {
+    check_from("lane-batcher-vs-serial", base_seed() ^ 0xD1FF, 20, |rng| {
+        let n_nodes = rng.gen_range_inclusive(8, 40);
+        let graph_seed = rng.next_u64();
+        let buckets = random_buckets(rng);
+        let build = move |b: usize| random_cell(&mut Pcg32::new(graph_seed), n_nodes, b);
+        let smallest = buckets[0];
+
+        let mut oracle = TapeEngine::from_graph_fn("rand-cell", &buckets, Some(1), build)
+            .map_err(|e| format!("oracle build failed: {e:#}"))?
+            .serial();
+        let server = LaneServer::start(
+            &buckets,
+            move |bucket| TapeEngine::from_graph_fn("rand-cell", &[bucket], Some(2), build),
+            roomy_config(Duration::from_micros(200)),
+        )
+        .map_err(|e| format!("lane server start failed: {e:#}"))?;
+
+        for i in 0..4 {
+            let input = random_input(rng, RANDOM_CELL_EXAMPLE_LEN);
+            // One blocking request at a time ⇒ the batcher forms a
+            // single-example batch padded to the smallest bucket.
+            let got = server.infer(input.clone()).map_err(|e| format!("infer: {e:#}"))?;
+            let mut padded = input;
+            padded.resize(smallest * RANDOM_CELL_EXAMPLE_LEN, 0.0);
+            let want = oracle
+                .infer_batch(smallest, &padded)
+                .map_err(|e| format!("oracle replay failed: {e:#}"))?;
+            let out_len = got.len();
+            ensure(want.len() >= out_len, || "oracle output too short".to_string())?;
+            for (j, (a, b)) in got.iter().zip(&want[..out_len]).enumerate() {
+                ensure(a.to_bits() == b.to_bits(), || {
+                    format!("request {i} diverged at element {j}: {a:?} vs {b:?}")
+                })?;
+            }
+        }
+        let _ = server.shutdown().map_err(|e| format!("shutdown failed: {e:#}"))?;
+        Ok(())
+    });
+}
+
+/// Mixed async traffic: whatever the batch composition, every request is
+/// answered exactly once with a well-formed, finite output, and the
+/// per-lane stats add up.
+#[test]
+fn mixed_arrivals_all_served_and_lane_stats_consistent() {
+    check_from("lane-mixed-arrivals", base_seed() ^ 0xA11, 15, |rng| {
+        let n_nodes = rng.gen_range_inclusive(8, 40);
+        let graph_seed = rng.next_u64();
+        let buckets = random_buckets(rng);
+        let build = move |b: usize| random_cell(&mut Pcg32::new(graph_seed), n_nodes, b);
+        let server = LaneServer::start(
+            &buckets,
+            move |bucket| TapeEngine::from_graph_fn("rand-cell", &[bucket], Some(2), build),
+            roomy_config(Duration::from_micros(500)),
+        )
+        .map_err(|e| format!("lane server start failed: {e:#}"))?;
+        let n_requests = rng.gen_range_inclusive(5, 24);
+        let pending: Vec<_> = (0..n_requests)
+            .map(|_| server.infer_async(random_input(rng, RANDOM_CELL_EXAMPLE_LEN)))
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("submit failed: {e:#}"))?;
+        for rx in pending {
+            let out = rx
+                .recv()
+                .map_err(|_| "reply dropped".to_string())?
+                .map_err(|e| format!("request failed: {e}"))?;
+            ensure(out.iter().all(|v| v.is_finite()), || "non-finite output".to_string())?;
+        }
+        let report = server.shutdown().map_err(|e| format!("shutdown failed: {e:#}"))?;
+        ensure(report.n_requests == n_requests, || {
+            format!("{} of {n_requests} requests accounted", report.n_requests)
+        })?;
+        ensure(report.lanes.len() == buckets.len(), || {
+            format!("{} lane stats for {} buckets", report.lanes.len(), buckets.len())
+        })?;
+        let lane_total: usize = report.lanes.iter().map(|l| l.n_requests).sum();
+        ensure(lane_total == n_requests, || {
+            format!("lane stats account {lane_total} of {n_requests}")
+        })?;
+        ensure(report.lanes.iter().all(|l| l.alloc_events == 0), || {
+            "steady-state lane dispatch allocated".to_string()
+        })?;
+        Ok(())
+    });
+}
