@@ -1,0 +1,158 @@
+//! Reserved-memory benchmark: the stream-aware arena against per-slot
+//! allocation, cross-checked against the DES.
+//!
+//! For each model (batch 1, multi-stream rewrite) this measures:
+//!
+//! * `unshared_bytes` — per-slot-buffer footprint (no lifetime sharing),
+//! * `arena_bytes` — the packed happens-before arena the executor
+//!   actually reserves (`ReplayContext::reserved_bytes`),
+//! * `serial_arena_bytes` — the serial-interval plan, the lower bound a
+//!   single-thread replay could pack to (unsound for the parallel
+//!   executor; reported for the serial-vs-stream-aware gap),
+//! * `des_peak_bytes` — the DES-predicted peak concurrently-reserved
+//!   bytes over the simulated schedule, and
+//! * `measured_peak_bytes` — the executor's traced high-water mark over
+//!   a real parallel replay.
+//!
+//! On the single-stream rewrite, the DES prediction and the serial
+//! executor's measured peak must agree **exactly** (same order, same
+//! accounting); on the multi-stream tape both peaks must sit inside the
+//! reservation. Results go to `BENCH_memory.json` (format documented in
+//! `rust/README.md`) — the CI artifact for the memory plan.
+
+mod common;
+use common::section;
+use nimble::aot::memory::{interval_conflicts, plan_with_conflicts, serial_lifetimes};
+use nimble::aot::tape::ReplayTape;
+use nimble::engine::executor::{ReplayContext, SyntheticKernel};
+use nimble::matching::MatchingAlgo;
+use nimble::models;
+use nimble::sim::{kernel_cost, peak_reserved_bytes, simulate_tape, GpuSpec, HostProfile};
+use nimble::stream::rewrite::{rewrite, rewrite_single_stream};
+
+const MODELS: [&str; 4] = ["mini_inception", "inception_v3", "nasnet_a_mobile", "mixnet_s"];
+
+struct Row {
+    model: &'static str,
+    n_tasks: usize,
+    n_streams: usize,
+    unshared_bytes: u64,
+    arena_bytes: u64,
+    serial_arena_bytes: u64,
+    des_peak_bytes: u64,
+    measured_peak_bytes: u64,
+    single_stream_peak_match: bool,
+    pass: bool,
+}
+
+fn measure(model: &'static str) -> Row {
+    let dev = GpuSpec::v100();
+    let g = models::build(model, 1);
+    let costs: Vec<_> = (0..g.n_nodes()).map(|v| kernel_cost(g.node(v), &dev)).collect();
+
+    // --- Multi-stream tape: packed arena, DES peak, measured peak. ---
+    let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+    let tape = ReplayTape::for_op_graph(&g, &plan, 4096);
+    let mut ctx = ReplayContext::new(tape.clone(), SyntheticKernel);
+    let arena_bytes = ctx.reserved_bytes();
+    let unshared_bytes = ctx.unshared_bytes();
+    let serial_arena_bytes =
+        plan_with_conflicts(&tape.slot_bytes(), &interval_conflicts(&serial_lifetimes(&tape)))
+            .arena_bytes;
+
+    let sim = simulate_tape(&tape, &costs, HostProfile::nimble(), dev.clone());
+    let des_peak_bytes = peak_reserved_bytes(&tape, &sim.spans, &ctx.arena_plan().rounded_sizes);
+
+    let input = vec![0.5f32; tape.input_slots()[0].1];
+    ctx.set_tracing(true);
+    ctx.replay_one(&input).expect("parallel replay");
+    let measured_peak_bytes = ctx.peak_live_bytes();
+    ctx.check_canaries().expect("canaries intact");
+
+    // --- Single-stream cross-check: prediction == measurement. ---
+    let tape_s = ReplayTape::for_op_graph(&g, &rewrite_single_stream(&g), 4096);
+    let mut ctx_s = ReplayContext::new(tape_s.clone(), SyntheticKernel);
+    let sim_s = simulate_tape(&tape_s, &costs, HostProfile::nimble(), dev);
+    let predicted_s =
+        peak_reserved_bytes(&tape_s, &sim_s.spans, &ctx_s.arena_plan().rounded_sizes);
+    let input_s = vec![0.5f32; tape_s.input_slots()[0].1];
+    ctx_s.set_tracing(true);
+    ctx_s.replay_serial(&[&input_s]).expect("serial replay");
+    let single_stream_peak_match = predicted_s == ctx_s.peak_live_bytes();
+
+    let pass = (plan.n_streams == 1 || arena_bytes < unshared_bytes)
+        && des_peak_bytes <= arena_bytes
+        && measured_peak_bytes <= arena_bytes
+        && single_stream_peak_match;
+    Row {
+        model,
+        n_tasks: tape.n_tasks(),
+        n_streams: plan.n_streams,
+        unshared_bytes,
+        arena_bytes,
+        serial_arena_bytes,
+        des_peak_bytes,
+        measured_peak_bytes,
+        single_stream_peak_match,
+        pass,
+    }
+}
+
+fn main() {
+    section("reserved-memory arena vs unshared vs DES-predicted peak (batch 1)");
+    println!(
+        "{:<18} {:>7} {:>8} {:>12} {:>12} {:>12} {:>12} {:>12}  {}",
+        "model",
+        "tasks",
+        "streams",
+        "unshared",
+        "arena",
+        "serial",
+        "des-peak",
+        "measured",
+        "pass"
+    );
+    let rows: Vec<Row> = MODELS.iter().map(|&m| measure(m)).collect();
+    for r in &rows {
+        println!(
+            "{:<18} {:>7} {:>8} {:>12} {:>12} {:>12} {:>12} {:>12}  {}",
+            r.model,
+            r.n_tasks,
+            r.n_streams,
+            r.unshared_bytes,
+            r.arena_bytes,
+            r.serial_arena_bytes,
+            r.des_peak_bytes,
+            r.measured_peak_bytes,
+            if r.pass { "PASS" } else { "FAIL" }
+        );
+    }
+
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "  {{\"model\": \"{}\", \"n_tasks\": {}, \"n_streams\": {}, \
+                 \"unshared_bytes\": {}, \"arena_bytes\": {}, \"serial_arena_bytes\": {}, \
+                 \"des_peak_bytes\": {}, \"measured_peak_bytes\": {}, \
+                 \"single_stream_peak_match\": {}, \"pass\": {}}}",
+                r.model,
+                r.n_tasks,
+                r.n_streams,
+                r.unshared_bytes,
+                r.arena_bytes,
+                r.serial_arena_bytes,
+                r.des_peak_bytes,
+                r.measured_peak_bytes,
+                r.single_stream_peak_match,
+                r.pass
+            )
+        })
+        .collect();
+    let json = format!("[\n{}\n]\n", entries.join(",\n"));
+    match std::fs::write("BENCH_memory.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_memory.json"),
+        Err(e) => println!("\ncould not write BENCH_memory.json: {e}"),
+    }
+    assert!(rows.iter().all(|r| r.pass), "memory-plan acceptance failed (see table)");
+}

@@ -1,0 +1,307 @@
+//! Arena layout: pack tensors into one contiguous reservation such that
+//! any two *conflicting* tensors (whose lifetimes can overlap in some
+//! legal execution) never share bytes, while non-conflicting tensors
+//! alias freely. Best-fit-decreasing over the conflict relation — the
+//! standard static memory planner (cf. TFLite/TVM planners), generalized
+//! from interval overlap to an arbitrary symmetric conflict set so the
+//! stream-aware lifetime analysis ([`super::lifetime`]) can drive it.
+
+use crate::engine::alloc::round_size;
+
+/// Symmetric boolean relation over `n` tensors: `get(i, j)` is true iff
+/// tensors `i` and `j` may be live at the same time and therefore must
+/// occupy disjoint arena ranges. Stored as a dense row-major bitmap
+/// (`n²` bits) — planning happens once at engine build, n = #slots.
+#[derive(Debug, Clone)]
+pub struct ConflictSet {
+    n: usize,
+    bits: Vec<u64>,
+}
+
+impl ConflictSet {
+    pub fn new(n: usize) -> ConflictSet {
+        ConflictSet { n, bits: vec![0u64; (n * n).div_ceil(64)] }
+    }
+
+    /// Mark `i` and `j` as conflicting (symmetric; `i == j` is ignored —
+    /// a tensor never conflicts with itself).
+    pub fn set(&mut self, i: usize, j: usize) {
+        debug_assert!(i < self.n && j < self.n);
+        if i == j {
+            return;
+        }
+        for idx in [i * self.n + j, j * self.n + i] {
+            self.bits[idx / 64] |= 1u64 << (idx % 64);
+        }
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        debug_assert!(i < self.n && j < self.n);
+        let idx = i * self.n + j;
+        self.bits[idx / 64] >> (idx % 64) & 1 == 1
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of conflicting unordered pairs.
+    pub fn n_conflicts(&self) -> usize {
+        self.bits.iter().map(|w| w.count_ones() as usize).sum::<usize>() / 2
+    }
+}
+
+/// Planned arena: per-tensor byte offsets plus total footprint.
+#[derive(Debug, Clone)]
+pub struct ArenaPlan {
+    /// Byte offset per tensor (same indexing as the input sizes).
+    pub offsets: Vec<u64>,
+    /// Allocator-rounded reservation per tensor (0 for zero-byte tensors).
+    pub rounded_sizes: Vec<u64>,
+    pub arena_bytes: u64,
+}
+
+impl ArenaPlan {
+    /// Sum of all rounded tensor sizes — what per-tensor allocation would
+    /// cost without lifetime reuse.
+    pub fn unshared_bytes(&self) -> u64 {
+        self.rounded_sizes.iter().sum()
+    }
+
+    /// The no-sharing layout: every tensor gets its own range (rounded
+    /// sizes laid end to end). This is the per-slot-buffer baseline the
+    /// differential harness replays against the packed plan.
+    pub fn unshared(bytes: &[u64]) -> ArenaPlan {
+        let rounded: Vec<u64> = bytes.iter().map(|&b| round_nonzero(b)).collect();
+        let mut offsets = Vec::with_capacity(bytes.len());
+        let mut cursor = 0u64;
+        for &r in &rounded {
+            offsets.push(cursor);
+            cursor += r;
+        }
+        ArenaPlan { offsets, rounded_sizes: rounded, arena_bytes: cursor }
+    }
+
+    /// Byte ranges of `[0, arena_bytes)` covered by **no** tensor's data
+    /// extent (`extents[i]` bytes from `offsets[i]` — the *written*
+    /// sizes, not the rounded reservations). These ranges are never
+    /// legally written, so the executor seeds them with canary words and
+    /// verifies them after replays in debug builds.
+    pub fn holes(&self, extents: &[u64]) -> Vec<(u64, u64)> {
+        let mut covered: Vec<(u64, u64)> = self
+            .offsets
+            .iter()
+            .zip(extents)
+            .filter(|&(_, &e)| e > 0)
+            .map(|(&o, &e)| (o, o + e))
+            .collect();
+        covered.sort_unstable();
+        let mut holes = Vec::new();
+        let mut cursor = 0u64;
+        for (start, end) in covered {
+            if start > cursor {
+                holes.push((cursor, start));
+            }
+            cursor = cursor.max(end);
+        }
+        if cursor < self.arena_bytes {
+            holes.push((cursor, self.arena_bytes));
+        }
+        holes
+    }
+}
+
+/// Round like the caching allocator, except that zero-byte tensors
+/// reserve nothing (never-written slots need no arena range).
+fn round_nonzero(bytes: u64) -> u64 {
+    if bytes == 0 {
+        0
+    } else {
+        round_size(bytes)
+    }
+}
+
+/// Plan an arena over an explicit conflict relation. Best-fit-decreasing:
+/// tensors are placed largest-first; each placement scans **every** gap
+/// between the already-placed conflicting ranges (sorted by offset) and
+/// takes the *tightest* gap that fits — not the first one, which can
+/// burn a loose gap a later tensor needed — falling back to the end of
+/// the conflict span. `O(n²)` — engine-build time.
+pub fn plan_with_conflicts(bytes: &[u64], conflicts: &ConflictSet) -> ArenaPlan {
+    let n = bytes.len();
+    assert_eq!(conflicts.n(), n, "conflict set arity != tensor count");
+    let rounded: Vec<u64> = bytes.iter().map(|&b| round_nonzero(b)).collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(rounded[i]));
+
+    let mut offsets = vec![0u64; n];
+    let mut placed: Vec<usize> = Vec::with_capacity(n);
+    let mut arena = 0u64;
+    let mut ranges: Vec<(u64, u64)> = Vec::with_capacity(n);
+    for &i in &order {
+        if rounded[i] == 0 {
+            continue;
+        }
+        ranges.clear();
+        ranges.extend(
+            placed
+                .iter()
+                .filter(|&&j| conflicts.get(i, j))
+                .map(|&j| (offsets[j], offsets[j] + rounded[j])),
+        );
+        ranges.sort_unstable();
+        // Tightest-gap scan over every hole between conflicting ranges
+        // (ties resolve to the lowest offset, scanned first).
+        let mut best: Option<(u64, u64)> = None; // (gap length, gap offset)
+        let mut cursor = 0u64;
+        for &(start, end) in &ranges {
+            if start > cursor {
+                let gap = start - cursor;
+                let tighter = match best {
+                    None => true,
+                    Some((g, _)) => gap < g,
+                };
+                if gap >= rounded[i] && tighter {
+                    best = Some((gap, cursor));
+                }
+            }
+            cursor = cursor.max(end);
+        }
+        offsets[i] = match best {
+            Some((_, off)) => off,
+            None => cursor,
+        };
+        arena = arena.max(offsets[i] + rounded[i]);
+        placed.push(i);
+    }
+    ArenaPlan { offsets, rounded_sizes: rounded, arena_bytes: arena }
+}
+
+/// Verify the plan against a conflict relation: every tensor fits inside
+/// the arena and no conflicting pair shares bytes (test helper and debug
+/// assertion for the engine).
+pub fn plan_respects_conflicts(conflicts: &ConflictSet, plan: &ArenaPlan) -> bool {
+    let n = conflicts.n();
+    if plan.offsets.len() != n || plan.rounded_sizes.len() != n {
+        return false;
+    }
+    for i in 0..n {
+        if plan.offsets[i] + plan.rounded_sizes[i] > plan.arena_bytes {
+            return false;
+        }
+        for j in (i + 1)..n {
+            if conflicts.get(i, j) && plan.rounded_sizes[i] > 0 && plan.rounded_sizes[j] > 0 {
+                let (a0, a1) = (plan.offsets[i], plan.offsets[i] + plan.rounded_sizes[i]);
+                let (b0, b1) = (plan.offsets[j], plan.offsets[j] + plan.rounded_sizes[j]);
+                if a0 < b1 && b0 < a1 {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conflict_set_is_symmetric_and_counts_pairs() {
+        let mut c = ConflictSet::new(5);
+        c.set(0, 3);
+        c.set(4, 1);
+        c.set(2, 2); // self: ignored
+        assert!(c.get(0, 3) && c.get(3, 0));
+        assert!(c.get(1, 4) && c.get(4, 1));
+        assert!(!c.get(2, 2));
+        assert!(!c.get(0, 1));
+        assert_eq!(c.n_conflicts(), 2);
+    }
+
+    /// Satellite regression: a known layout where the old break-on-first-
+    /// fitting-gap scan wastes space. Tensors a..e pack to
+    /// `[a | b | c | d | e]`; X conflicts {a, c, e} only, so it sees a
+    /// loose 1536-byte hole (b's span) and a tight 1024-byte hole (d's
+    /// span). Best-fit puts X over d, leaving the loose hole for Y
+    /// (conflicts everything but b) — total 6656 bytes. First-fit put X
+    /// in the loose hole, whose 512-byte remainder could not take Y, and
+    /// paid 7680.
+    #[test]
+    fn tightest_gap_wins_and_the_packed_footprint_is_pinned() {
+        let bytes = [2048u64, 1536, 1024, 1024, 1024, 1024, 1024];
+        let (a, b, c, d, e, x, y) = (0, 1, 2, 3, 4, 5, 6);
+        let mut conflicts = ConflictSet::new(7);
+        for t in [b, c, d, e] {
+            conflicts.set(a, t); // a..e pack end to end
+        }
+        for (i, j) in [(b, c), (b, d), (b, e), (c, d), (c, e), (d, e)] {
+            conflicts.set(i, j);
+        }
+        for t in [a, c, e] {
+            conflicts.set(x, t);
+        }
+        for t in [a, c, d, e, x] {
+            conflicts.set(y, t);
+        }
+        let plan = plan_with_conflicts(&bytes, &conflicts);
+        assert!(plan_respects_conflicts(&conflicts, &plan));
+        assert_eq!(plan.offsets[..5], [0, 2048, 3584, 4608, 5632], "a..e pack end to end");
+        assert_eq!(plan.offsets[x], 4608, "X takes the tight hole (aliases d)");
+        assert_eq!(plan.offsets[y], 2048, "Y takes the loose hole (aliases b)");
+        assert_eq!(plan.arena_bytes, 6656, "packed footprint is pinned");
+        assert!(plan.arena_bytes < plan.unshared_bytes());
+    }
+
+    #[test]
+    fn non_conflicting_tensors_share_and_conflicting_do_not() {
+        let bytes = [4096u64, 4096];
+        let free = ConflictSet::new(2);
+        let shared = plan_with_conflicts(&bytes, &free);
+        assert_eq!(shared.offsets[0], shared.offsets[1]);
+        assert_eq!(shared.arena_bytes, 4096);
+
+        let mut c = ConflictSet::new(2);
+        c.set(0, 1);
+        let split = plan_with_conflicts(&bytes, &c);
+        assert_ne!(split.offsets[0], split.offsets[1]);
+        assert_eq!(split.arena_bytes, 8192);
+        assert!(plan_respects_conflicts(&c, &split));
+    }
+
+    #[test]
+    fn zero_byte_tensors_reserve_nothing() {
+        let bytes = [0u64, 1024, 0];
+        let mut c = ConflictSet::new(3);
+        c.set(0, 1);
+        c.set(1, 2);
+        let plan = plan_with_conflicts(&bytes, &c);
+        assert_eq!(plan.rounded_sizes, vec![0, 1024, 0]);
+        assert_eq!(plan.arena_bytes, 1024);
+        assert!(plan_respects_conflicts(&c, &plan));
+    }
+
+    #[test]
+    fn unshared_layout_lays_ranges_end_to_end() {
+        let plan = ArenaPlan::unshared(&[100, 600, 0, 1024]);
+        assert_eq!(plan.rounded_sizes, vec![512, 1024, 0, 1024]);
+        assert_eq!(plan.offsets, vec![0, 512, 1536, 1536]);
+        assert_eq!(plan.arena_bytes, 2560);
+        assert_eq!(plan.unshared_bytes(), 2560);
+    }
+
+    #[test]
+    fn holes_cover_everything_outside_the_written_extents() {
+        let plan = ArenaPlan {
+            offsets: vec![0, 1024, 1024],
+            rounded_sizes: vec![512, 512, 512],
+            arena_bytes: 2048,
+        };
+        // written extents smaller than reservations; slot 2 aliases 1
+        let holes = plan.holes(&[100, 40, 512]);
+        assert_eq!(holes, vec![(100, 1024), (1536, 2048)]);
+        // zero-extent tensors are skipped entirely
+        let all = plan.holes(&[0, 0, 0]);
+        assert_eq!(all, vec![(0, 2048)]);
+    }
+}

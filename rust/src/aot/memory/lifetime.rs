@@ -1,0 +1,304 @@
+//! Lifetime analysis for replay tapes.
+//!
+//! Two notions of "when may two slots share memory":
+//!
+//! * **Serial intervals** ([`serial_lifetimes`], [`Lifetime`]) — def step
+//!   to last-use step in the merged submission order. Sound only for
+//!   single-thread replay: under the parallel executor, two slots that
+//!   are disjoint in submission order can still be live *concurrently*
+//!   (their records run on different streams with no ordering between
+//!   them), so an arena packed from serial intervals would race.
+//! * **Happens-before conflicts** ([`happens_before_conflicts`]) — two
+//!   slots may alias only if **every** execution the executor can
+//!   legally produce keeps them temporally disjoint: all accesses of one
+//!   (its defining record plus every reader) must happen strictly before
+//!   the other's defining record in the tape's happens-before order —
+//!   per-stream FIFO submission order joined with the record→wait event
+//!   edges from the sync plan. This is the relation the shared-arena
+//!   executor packs against; it is a superset of the serial conflicts
+//!   (an execution's liveness can only grow when the order is relaxed),
+//!   and any plan the layouter emits is bounded by the unshared
+//!   footprint.
+//!
+//! Special cases: the **output** slot is read by the caller after the
+//! replay, so nothing defined later may overwrite it (it can only be
+//! placed *over* retired early slots, never under later ones); **input**
+//! slots are written by the coordinator *before* the replay starts, so
+//! no slot may retire early enough to sit below one — inputs only give
+//! memory away, they never take it.
+
+use super::layout::ConflictSet;
+use crate::aot::tape::{ReplayTape, TapeArg, TapeRole};
+use crate::graph::{Dag, Reachability};
+
+/// A tensor's lifetime in submission steps, inclusive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lifetime {
+    pub def_step: usize,
+    pub last_use_step: usize,
+    pub bytes: u64,
+}
+
+impl Lifetime {
+    pub(crate) fn overlaps(&self, other: &Lifetime) -> bool {
+        self.def_step <= other.last_use_step && other.def_step <= self.last_use_step
+    }
+}
+
+/// Interval lifetimes of a tape's slots in **merged submission order**
+/// (step i = the tape's i-th record). Input slots are defined at step 0
+/// (the coordinator fills them before the replay starts); the output
+/// slot's last use is `n_ops` (the caller reads it after the replay).
+pub fn serial_lifetimes(tape: &ReplayTape) -> Vec<Lifetime> {
+    let n_slots = tape.n_slots();
+    let mut def = vec![0usize; n_slots];
+    let mut last = vec![0usize; n_slots];
+    let bytes = tape.slot_bytes();
+    for (step, op) in tape.ops().iter().enumerate() {
+        let slot = op.out_slot as usize;
+        def[slot] = if op.role == TapeRole::Input { 0 } else { step };
+        last[slot] = last[slot].max(step);
+        for arg in tape.args(op) {
+            if let TapeArg::Slot(s) = arg {
+                last[*s as usize] = last[*s as usize].max(step);
+            }
+        }
+    }
+    last[tape.output_slot()] = tape.n_ops();
+    (0..n_slots)
+        .map(|s| Lifetime { def_step: def[s], last_use_step: last[s], bytes: bytes[s] })
+        .collect()
+}
+
+/// The happens-before DAG over a tape's records: per-stream FIFO edges
+/// plus one edge from each event's recorder to every record waiting on
+/// it. Every execution the parallel executor can produce is a
+/// linearization of this order.
+pub fn happens_before_dag(tape: &ReplayTape) -> Dag<()> {
+    let mut h: Dag<()> = Dag::new();
+    for _ in 0..tape.n_ops() {
+        h.add_node(());
+    }
+    for s in 0..tape.n_streams() {
+        for w in tape.stream_ops(s).windows(2) {
+            h.add_edge(w[0] as usize, w[1] as usize);
+        }
+    }
+    let mut recorder = vec![usize::MAX; tape.n_events()];
+    for (i, op) in tape.ops().iter().enumerate() {
+        for &e in tape.records(op) {
+            recorder[e as usize] = i;
+        }
+    }
+    for (i, op) in tape.ops().iter().enumerate() {
+        for &e in tape.waits(op) {
+            let src = recorder[e as usize];
+            if src != usize::MAX && src != i && !h.has_edge(src, i) {
+                h.add_edge(src, i);
+            }
+        }
+    }
+    h
+}
+
+/// Stream-aware aliasing: the slot pairs that must NOT share arena bytes
+/// because some legal parallel execution can have both live at once.
+///
+/// Slot `a` may retire below slot `b` iff every access of `a` (defining
+/// record and all readers) strictly happens-before `b`'s defining
+/// record; two slots conflict iff neither retires below the other. The
+/// output slot never retires (caller reads it after the replay); nothing
+/// retires below an input slot (its bytes are written before the replay
+/// starts). Never-written slots occupy no memory and conflict with
+/// nothing.
+pub fn happens_before_conflicts(tape: &ReplayTape) -> ConflictSet {
+    let n_slots = tape.n_slots();
+    let reach = Reachability::compute(&happens_before_dag(tape));
+
+    let mut def = vec![usize::MAX; n_slots];
+    let mut is_input = vec![false; n_slots];
+    let mut readers: Vec<Vec<usize>> = vec![Vec::new(); n_slots];
+    for (i, op) in tape.ops().iter().enumerate() {
+        def[op.out_slot as usize] = i;
+        if op.role == TapeRole::Input {
+            is_input[op.out_slot as usize] = true;
+        }
+        for arg in tape.args(op) {
+            if let TapeArg::Slot(s) = arg {
+                readers[*s as usize].push(i);
+            }
+        }
+    }
+    let output = tape.output_slot();
+
+    // `a` fully retires (def + all reads strictly happen-before) under
+    // `b`'s defining record. Reachability is strict, so a reader that IS
+    // b's def (b consumes a) correctly fails the test and forces a
+    // conflict — argument slots never alias their consumer's output.
+    let retires_below = |a: usize, b: usize| -> bool {
+        if a == output || is_input[b] {
+            return false;
+        }
+        let (da, db) = (def[a], def[b]);
+        if da == usize::MAX || db == usize::MAX {
+            return true; // a never-written slot has no footprint
+        }
+        reach.reaches(da, db) && readers[a].iter().all(|&r| r != db && reach.reaches(r, db))
+    };
+
+    let mut conflicts = ConflictSet::new(n_slots);
+    for i in 0..n_slots {
+        for j in (i + 1)..n_slots {
+            if !(retires_below(i, j) || retires_below(j, i)) {
+                conflicts.set(i, j);
+            }
+        }
+    }
+    conflicts
+}
+
+/// Interval-overlap conflicts of serial lifetimes (the single-thread
+/// analysis, for comparison and for the serial-only arena plan).
+pub fn interval_conflicts(lifetimes: &[Lifetime]) -> ConflictSet {
+    let n = lifetimes.len();
+    let mut conflicts = ConflictSet::new(n);
+    for i in 0..n {
+        if lifetimes[i].bytes == 0 {
+            continue;
+        }
+        for j in (i + 1)..n {
+            if lifetimes[j].bytes != 0 && lifetimes[i].overlaps(&lifetimes[j]) {
+                conflicts.set(i, j);
+            }
+        }
+    }
+    conflicts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aot::memory::{plan_respects_conflicts, plan_with_conflicts};
+    use crate::matching::MatchingAlgo;
+    use crate::models;
+    use crate::stream::rewrite::{rewrite, rewrite_single_stream};
+
+    fn tapes(name: &str) -> (ReplayTape, ReplayTape) {
+        let g = models::build(name, 1);
+        let multi = ReplayTape::for_op_graph(&g, &rewrite(&g, MatchingAlgo::HopcroftKarp), 256);
+        let single = ReplayTape::for_op_graph(&g, &rewrite_single_stream(&g), 256);
+        (multi, single)
+    }
+
+    #[test]
+    fn serial_lifetimes_cover_every_access() {
+        let (tape, _) = tapes("mini_inception");
+        let lts = serial_lifetimes(&tape);
+        for (step, op) in tape.ops().iter().enumerate() {
+            let out = &lts[op.out_slot as usize];
+            assert!(out.def_step <= step && step <= out.last_use_step);
+            for arg in tape.args(op) {
+                if let TapeArg::Slot(s) = arg {
+                    let l = &lts[*s as usize];
+                    assert!(l.def_step <= step && step <= l.last_use_step, "use outside lifetime");
+                }
+            }
+        }
+        assert_eq!(lts[tape.output_slot()].last_use_step, tape.n_ops());
+    }
+
+    #[test]
+    fn hb_conflicts_contain_the_serial_conflicts_on_single_stream() {
+        // On a single-stream tape the happens-before order IS the
+        // submission order, so both analyses agree exactly (modulo the
+        // pessimistic interval treatment of inputs, which serial
+        // lifetimes also pin at step 0).
+        let (_, single) = tapes("mini_inception");
+        let hb = happens_before_conflicts(&single);
+        let serial = interval_conflicts(&serial_lifetimes(&single));
+        for i in 0..single.n_slots() {
+            for j in 0..single.n_slots() {
+                assert_eq!(
+                    hb.get(i, j),
+                    serial.get(i, j),
+                    "single-stream hb vs serial disagree on ({i}, {j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hb_conflicts_are_a_superset_of_serial_conflicts_on_multi_stream() {
+        for name in ["mini_inception", "inception_v3"] {
+            let (multi, _) = tapes(name);
+            let hb = happens_before_conflicts(&multi);
+            let serial = interval_conflicts(&serial_lifetimes(&multi));
+            for i in 0..multi.n_slots() {
+                for j in 0..multi.n_slots() {
+                    if serial.get(i, j) {
+                        assert!(hb.get(i, j), "{name}: serial conflict ({i}, {j}) missing in hb");
+                    }
+                }
+            }
+            assert!(hb.n_conflicts() >= serial.n_conflicts());
+        }
+    }
+
+    #[test]
+    fn args_always_conflict_with_their_consumers_output() {
+        let (multi, _) = tapes("mini_inception");
+        let hb = happens_before_conflicts(&multi);
+        for op in multi.ops() {
+            for arg in multi.args(op) {
+                if let TapeArg::Slot(s) = arg {
+                    assert!(
+                        hb.get(*s as usize, op.out_slot as usize),
+                        "arg slot {s} may alias consumer slot {}",
+                        op.out_slot
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn output_conflicts_with_everything_defined_after_it_can_be_read() {
+        // Nothing may retire *on top of* the output: for every written
+        // slot b ≠ output, the pair (output, b) conflicts unless b fully
+        // retires below the output's def.
+        let (multi, _) = tapes("mini_inception");
+        let hb = happens_before_conflicts(&multi);
+        let out = multi.output_slot();
+        let last = multi.ops().last().unwrap();
+        assert_eq!(last.out_slot as usize, out);
+        // the output's own arguments certainly conflict with it
+        for arg in multi.args(last) {
+            if let TapeArg::Slot(s) = arg {
+                assert!(hb.get(*s as usize, out));
+            }
+        }
+    }
+
+    #[test]
+    fn hb_arena_shares_memory_and_both_plans_stay_valid() {
+        for name in ["mini_inception", "inception_v3"] {
+            let (multi, _) = tapes(name);
+            let bytes = multi.slot_bytes();
+            let hb = happens_before_conflicts(&multi);
+            let serial = interval_conflicts(&serial_lifetimes(&multi));
+            let hb_plan = plan_with_conflicts(&bytes, &hb);
+            let serial_plan = plan_with_conflicts(&bytes, &serial);
+            assert!(plan_respects_conflicts(&hb, &hb_plan), "{name}: hb plan invalid");
+            assert!(plan_respects_conflicts(&serial, &serial_plan), "{name}: serial plan invalid");
+            // The planner never exceeds the no-sharing footprint, and on
+            // these branchy multi-stream models it genuinely shares.
+            assert!(serial_plan.arena_bytes <= serial_plan.unshared_bytes());
+            assert!(
+                hb_plan.arena_bytes < hb_plan.unshared_bytes(),
+                "{name}: hb arena {} not below unshared {}",
+                hb_plan.arena_bytes,
+                hb_plan.unshared_bytes()
+            );
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Reserved-memory planning (paper §4.1): "since a static neural network
+//! makes the same sequence of memory requests for different runs, we can
+//! pre-allocate the exact amount of GPU memory required for its execution."
+//!
+//! The subsystem has three layers:
+//!
+//! * [`lifetime`] — when may two tensors share bytes. Serial interval
+//!   lifetimes (submission order) for single-thread replay, and the
+//!   **stream-aware** happens-before analysis for the parallel executor:
+//!   two slots alias only if every legal execution keeps them temporally
+//!   disjoint (per-stream FIFO order joined with the sync plan's
+//!   record→wait edges).
+//! * [`layout`] — pack tensors into one contiguous arena against a
+//!   [`ConflictSet`], best-fit-decreasing with a tightest-gap scan;
+//!   emits the [`ArenaPlan`] the executor's slot arena resolves views
+//!   from.
+//! * [`pool`] — recycle arena backing buffers across context builds
+//!   ([`ArenaPool`]), so serving lanes re-draw their per-lane arenas
+//!   from bucket-sized classes instead of growing the heap.
+//!
+//! The executor ([`crate::engine::executor`]) packs against the
+//! happens-before conflicts, keeps its zero-allocation hot path (views
+//! are resolved at build), and — in debug builds — seeds the plan's
+//! holes with canary words to catch overlap corruption.
+
+pub mod layout;
+pub mod lifetime;
+pub mod pool;
+
+pub use layout::{plan_respects_conflicts, plan_with_conflicts, ArenaPlan, ConflictSet};
+pub use lifetime::{
+    happens_before_conflicts, happens_before_dag, interval_conflicts, serial_lifetimes, Lifetime,
+};
+pub use pool::{ArenaLease, ArenaPool, ArenaPoolStats};
+
+/// Plan an arena from interval lifetimes (the serial-order analysis —
+/// see [`lifetime`] for when this is sound). Kept as the compact API the
+/// PJRT task schedule uses; conflict-set callers go through
+/// [`plan_with_conflicts`].
+pub fn plan_arena(lifetimes: &[Lifetime]) -> ArenaPlan {
+    let bytes: Vec<u64> = lifetimes.iter().map(|l| l.bytes).collect();
+    plan_with_conflicts(&bytes, &interval_conflicts(lifetimes))
+}
+
+/// Verify no two lifetime-overlapping tensors share bytes (test helper
+/// and debug assertion for the engine).
+pub fn plan_is_valid(lifetimes: &[Lifetime], plan: &ArenaPlan) -> bool {
+    plan_respects_conflicts(&interval_conflicts(lifetimes), plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Pcg32};
+
+    fn lt(def: usize, last: usize, bytes: u64) -> Lifetime {
+        Lifetime { def_step: def, last_use_step: last, bytes }
+    }
+
+    #[test]
+    fn disjoint_lifetimes_share_memory() {
+        let lts = [lt(0, 1, 4096), lt(2, 3, 4096)];
+        let plan = plan_arena(&lts);
+        assert!(plan_is_valid(&lts, &plan));
+        assert_eq!(plan.offsets[0], plan.offsets[1], "disjoint tensors reuse");
+        assert!(plan.arena_bytes < plan.unshared_bytes());
+    }
+
+    #[test]
+    fn overlapping_lifetimes_do_not_share() {
+        let lts = [lt(0, 5, 4096), lt(2, 3, 4096)];
+        let plan = plan_arena(&lts);
+        assert!(plan_is_valid(&lts, &plan));
+        assert_ne!(plan.offsets[0], plan.offsets[1]);
+        assert_eq!(plan.arena_bytes, plan.unshared_bytes());
+    }
+
+    #[test]
+    fn chain_arena_is_two_tensors_wide() {
+        // A chain a→b→c→d: at any step at most two tensors live.
+        let lts = [lt(0, 1, 1000), lt(1, 2, 1000), lt(2, 3, 1000), lt(3, 4, 1000)];
+        let plan = plan_arena(&lts);
+        assert!(plan_is_valid(&lts, &plan));
+        assert_eq!(plan.arena_bytes, 2 * 1024);
+    }
+
+    #[test]
+    fn empty_plan() {
+        let plan = plan_arena(&[]);
+        assert_eq!(plan.arena_bytes, 0);
+    }
+
+    #[test]
+    fn random_plans_are_valid_and_never_worse_than_unshared() {
+        prop::check("arena planner validity", 80, |rng: &mut Pcg32| {
+            let n = rng.gen_range_inclusive(1, 40);
+            let lts: Vec<Lifetime> = (0..n)
+                .map(|_| {
+                    let def = rng.gen_range(60);
+                    let len = rng.gen_range(20);
+                    lt(def, def + len, (rng.gen_range(100_000) + 1) as u64)
+                })
+                .collect();
+            let plan = plan_arena(&lts);
+            prop::ensure(plan_is_valid(&lts, &plan), || format!("invalid plan for {lts:?}"))?;
+            prop::ensure(plan.arena_bytes <= plan.unshared_bytes(), || {
+                "arena larger than unshared".to_string()
+            })
+        });
+    }
+}

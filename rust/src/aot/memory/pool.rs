@@ -1,0 +1,195 @@
+//! Arena pooling: recycle the backing buffers of slot arenas across
+//! replay-context builds.
+//!
+//! Every replay context reserves one contiguous `f32` arena. A serving
+//! deployment builds many contexts — one per (lane, bucket) — and
+//! rebuilds them whenever lanes restart or scale, so the arenas are the
+//! dominant steady-state reservation. [`ArenaPool`] keeps retired
+//! backing buffers in power-of-two size classes ("sized by bucket": one
+//! class per bucket-footprint shape) and hands them back out on the next
+//! build, so a lane restart re-uses the previous lane's reservation
+//! instead of growing the heap. Acquire/release happen at context
+//! build/drop time — never on the replay hot path.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Cheaply cloneable handle to a shared pool of arena backing buffers.
+#[derive(Clone, Default)]
+pub struct ArenaPool {
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+#[derive(Default)]
+struct PoolInner {
+    /// size class (elements) → retired buffers of that capacity.
+    free: BTreeMap<usize, Vec<Vec<f32>>>,
+    acquires: u64,
+    hits: u64,
+    /// Elements sitting in `free`.
+    resident_elems: usize,
+    /// Elements currently leased out.
+    leased_elems: usize,
+    /// Peak of `resident_elems + leased_elems`.
+    high_water_elems: usize,
+}
+
+/// Pool counters (bytes assume `f32` elements).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaPoolStats {
+    /// Total `acquire` calls.
+    pub acquires: u64,
+    /// Acquires served from a retired buffer instead of a fresh one.
+    pub hits: u64,
+    /// Bytes held in the free lists right now.
+    pub resident_bytes: u64,
+    /// Bytes leased to live arenas right now.
+    pub leased_bytes: u64,
+    /// Peak bytes ever held by the pool (leased + resident).
+    pub high_water_bytes: u64,
+}
+
+/// A leased (or owned) arena backing buffer. Pooled leases return their
+/// buffer to the pool's size class on drop; owned leases just free it.
+pub struct ArenaLease {
+    pub(crate) buf: Vec<f32>,
+    class_elems: usize,
+    pool: Option<ArenaPool>,
+}
+
+impl ArenaLease {
+    /// A pool-less backing buffer (freed on drop like any `Vec`).
+    pub fn owned() -> ArenaLease {
+        ArenaLease { buf: Vec::new(), class_elems: 0, pool: None }
+    }
+
+    pub fn is_pooled(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// Capacity class the lease came from (0 for owned leases).
+    pub fn class_elems(&self) -> usize {
+        self.class_elems
+    }
+}
+
+impl Drop for ArenaLease {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.give_back(std::mem::take(&mut self.buf), self.class_elems);
+        }
+    }
+}
+
+/// Round a request up to its size class: the next power of two, floored
+/// at 1 KiB of elements so tiny tapes share one class.
+fn class_of(elems: usize) -> usize {
+    elems.max(1024).next_power_of_two()
+}
+
+impl ArenaPool {
+    pub fn new() -> ArenaPool {
+        ArenaPool::default()
+    }
+
+    /// Lease a buffer with capacity for at least `elems` f32s. The
+    /// buffer's length and contents are unspecified — the slot arena
+    /// resizes and re-seeds it at build. Returns to the pool on drop.
+    pub fn acquire(&self, elems: usize) -> ArenaLease {
+        let class = class_of(elems);
+        let mut inner = self.inner.lock().unwrap();
+        inner.acquires += 1;
+        let buf = match inner.free.get_mut(&class).and_then(Vec::pop) {
+            Some(buf) => {
+                inner.hits += 1;
+                inner.resident_elems -= class;
+                buf
+            }
+            None => Vec::with_capacity(class),
+        };
+        inner.leased_elems += class;
+        inner.high_water_elems =
+            inner.high_water_elems.max(inner.leased_elems + inner.resident_elems);
+        drop(inner);
+        ArenaLease { buf, class_elems: class, pool: Some(self.clone()) }
+    }
+
+    fn give_back(&self, buf: Vec<f32>, class: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.leased_elems = inner.leased_elems.saturating_sub(class);
+        inner.resident_elems += class;
+        inner.free.entry(class).or_default().push(buf);
+    }
+
+    pub fn stats(&self) -> ArenaPoolStats {
+        let inner = self.inner.lock().unwrap();
+        ArenaPoolStats {
+            acquires: inner.acquires,
+            hits: inner.hits,
+            resident_bytes: 4 * inner.resident_elems as u64,
+            leased_bytes: 4 * inner.leased_elems as u64,
+            high_water_bytes: 4 * inner.high_water_elems as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_acquire_hits_the_class() {
+        let pool = ArenaPool::new();
+        let lease = pool.acquire(5000);
+        assert!(lease.is_pooled());
+        assert_eq!(lease.class_elems(), 8192);
+        assert!(lease.buf.capacity() >= 8192);
+        let stats = pool.stats();
+        assert_eq!((stats.acquires, stats.hits), (1, 0));
+        assert_eq!(stats.leased_bytes, 4 * 8192);
+        drop(lease);
+        let stats = pool.stats();
+        assert_eq!(stats.leased_bytes, 0);
+        assert_eq!(stats.resident_bytes, 4 * 8192);
+
+        // same class → hit; the pool does not grow
+        let lease2 = pool.acquire(8192);
+        let stats = pool.stats();
+        assert_eq!((stats.acquires, stats.hits), (2, 1));
+        assert_eq!(stats.high_water_bytes, 4 * 8192);
+        drop(lease2);
+
+        // different class → miss
+        let lease3 = pool.acquire(100_000);
+        assert_eq!(lease3.class_elems(), 131_072);
+        let stats = pool.stats();
+        assert_eq!((stats.acquires, stats.hits), (3, 1));
+    }
+
+    #[test]
+    fn tiny_requests_share_the_floor_class() {
+        let pool = ArenaPool::new();
+        let a = pool.acquire(1);
+        assert_eq!(a.class_elems(), 1024);
+        drop(a);
+        let b = pool.acquire(900);
+        assert_eq!(b.class_elems(), 1024);
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn owned_leases_do_not_touch_any_pool() {
+        let lease = ArenaLease::owned();
+        assert!(!lease.is_pooled());
+        drop(lease); // must not panic
+    }
+
+    #[test]
+    fn pool_is_shared_across_clones() {
+        let pool = ArenaPool::new();
+        let clone = pool.clone();
+        drop(clone.acquire(2048));
+        assert_eq!(pool.stats().acquires, 1);
+        assert_eq!(pool.stats().resident_bytes, 4 * 2048);
+    }
+}

@@ -2,8 +2,10 @@
 //! and compile it down to the flat **replay tape** the executors submit
 //! from, with no run-time scheduling work.
 //!
-//! * [`memory`] — the reserved-memory half (lifetime-interval arena
-//!   planning, the "pre-allocate the exact amount of GPU memory" step).
+//! * [`memory`] — the reserved-memory subsystem (the "pre-allocate the
+//!   exact amount of GPU memory" step): serial and stream-aware
+//!   (happens-before) lifetime analysis, conflict-driven arena layout,
+//!   and the arena pool serving lanes draw their reservations from.
 //! * [`tape`] — the fully-resolved replay artifact: per-stream tapes of
 //!   integer-indexed task records shared by the parallel executor
 //!   ([`crate::engine::executor`]) and the DES simulator
@@ -17,7 +19,10 @@ pub mod memory;
 pub mod schedule;
 pub mod tape;
 
-pub use memory::{plan_arena, ArenaPlan, Lifetime};
+pub use memory::{
+    happens_before_conflicts, plan_arena, plan_with_conflicts, ArenaPlan, ArenaPool, ConflictSet,
+    Lifetime,
+};
 #[cfg(feature = "xla")]
 pub use schedule::{ArgSource, PreparedReplay, ReplayTask, TaskSchedule};
 pub use tape::{NodeMeta, ReplayTape, TapeArg, TapeOp, TapeRole};

@@ -14,7 +14,7 @@
 use anyhow::{Context, Result};
 use std::sync::Arc;
 
-use crate::aot::memory::{plan_arena, ArenaPlan, Lifetime};
+use crate::aot::memory::{plan_arena, plan_is_valid, ArenaPlan, Lifetime};
 use crate::graph::Dag;
 use crate::matching::MatchingAlgo;
 use crate::runtime::manifest::{InputRef, NodeEntry};
@@ -146,7 +146,12 @@ impl TaskSchedule {
         let lifetimes: Vec<Lifetime> = (0..n_slots)
             .map(|s| Lifetime { def_step: def_step[s], last_use_step: last_use[s], bytes: bytes[s] })
             .collect();
+        // Serial-interval lifetimes are sound here: `replay` submits in
+        // recorded order on one PJRT thread. The parallel tape executor
+        // packs against the stream-aware happens-before plan instead
+        // (`aot::memory::happens_before_conflicts`).
         let arena = plan_arena(&lifetimes);
+        debug_assert!(plan_is_valid(&lifetimes, &arena), "arena plan violates slot lifetimes");
 
         let output_dims = tasks.last().unwrap().out_dims.clone();
         let schedule = TaskSchedule {

@@ -279,6 +279,12 @@ impl ReplayTape {
         lens
     }
 
+    /// Byte size of each slot's tensor (`f32` elements), the input to the
+    /// reserved-memory planner ([`crate::aot::memory`]).
+    pub fn slot_bytes(&self) -> Vec<u64> {
+        self.slot_lens().iter().map(|&l| 4 * l as u64).collect()
+    }
+
     /// Check that every slot-argument dependency is realized by the
     /// tape's own happens-before structure (same-stream FIFO order plus
     /// record→wait event edges, via `stream::sync::plan_is_safe`), and

@@ -75,6 +75,14 @@ pub trait InferEngine {
     fn stream_count(&self, _bucket: usize) -> Option<usize> {
         None
     }
+
+    /// Reserved arena bytes of a bucket's replay context, when known —
+    /// the packed footprint from the stream-aware memory plan
+    /// ([`crate::aot::memory`]), surfaced in the lane scheduler's
+    /// per-lane stats.
+    fn reserved_bytes(&self, _bucket: usize) -> Option<u64> {
+        None
+    }
 }
 
 /// A built engine: one task schedule + prepared replay context + eager

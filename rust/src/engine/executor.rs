@@ -5,8 +5,17 @@
 //! integer-resolved task records) — at request time there is nothing
 //! left to decide. A [`ReplayContext`] owns:
 //!
-//! * a **slot arena** — one preallocated `f32` buffer per graph node,
-//!   written in place on every replay (no per-request allocation),
+//! * a **slot arena** — ONE contiguous preallocated `f32` reservation
+//!   for the whole tape, with per-slot `(offset, len)` views resolved at
+//!   build from the stream-aware [`ArenaPlan`](crate::aot::memory::ArenaPlan):
+//!   two slots share bytes only if the tape's happens-before order keeps
+//!   them temporally disjoint in *every* legal execution
+//!   ([`crate::aot::memory::happens_before_conflicts`]). Written in
+//!   place on every replay (no per-request allocation); optionally drawn
+//!   from a shared [`ArenaPool`] so serving lanes recycle reservations
+//!   across context builds. In debug builds the plan's uncovered holes
+//!   are seeded with canary words and re-checked after every replay, so
+//!   a task writing outside its view is caught, not silently aliased,
 //! * an **event table** — one atomic flag per cross-stream sync, with
 //!   condvar parking (the `cudaStreamWaitEvent` pattern: record after
 //!   the producer on its stream, wait before the consumer on its
@@ -24,26 +33,36 @@
 //!
 //! # Memory-safety argument
 //!
-//! The arena hands out `&[f32]` / `&mut [f32]` through `UnsafeCell`, so
-//! the borrow checker does not police slot aliasing; the sync plan
-//! does. Tapes are compiled from launch plans whose sync plans satisfy
-//! `stream::sync::plan_is_safe`: every dependency edge (producer slot →
-//! consumer task) is realized by a path of same-stream FIFO edges
-//! (program order inside one worker) and record→wait event edges
-//! (release/acquire through [`EventTable`]). Therefore every slot read
-//! *happens-after* the unique write of that slot, and the writer holds
-//! the only live `&mut` — each slot is written by exactly one record
-//! per replay. The differential tests in `tests/integration_executor.rs`
-//! check the resulting bit-exactness on every zoo model and on random
-//! DAGs.
+//! The arena hands out `&[f32]` / `&mut [f32]` views through
+//! `UnsafeCell`, so the borrow checker does not police slot aliasing;
+//! the sync plan does. Tapes are compiled from launch plans whose sync
+//! plans satisfy `stream::sync::plan_is_safe`: every dependency edge
+//! (producer slot → consumer task) is realized by a path of same-stream
+//! FIFO edges (program order inside one worker) and record→wait event
+//! edges (release/acquire through [`EventTable`]). Therefore every slot
+//! read *happens-after* the unique write of that slot, and the writer
+//! holds the only live `&mut` — each slot is written by exactly one
+//! record per replay. Views of **different** slots may overlap bytes,
+//! but only when the arena plan proved the pair temporally disjoint
+//! under that same happens-before order — so two live borrows never
+//! overlap, and the bytes any read observes are exactly the producer's.
+//! The differential tests in `tests/integration_executor.rs` and the
+//! arena property in `tests/prop_harness.rs` check the resulting
+//! bit-exactness on every zoo model and on random graphs, against both
+//! the serial oracle and the unshared per-slot layout.
 //!
 //! # Zero-allocation accounting
 //!
 //! Every site on the per-task path that *could* allocate (scratch
-//! growth, arena buffer resize) increments an instrumented counter
-//! instead of being assumed away; [`ReplayContext::alloc_events`]
-//! exposes it and a steady-state test asserts it stays at zero.
+//! growth — slot views are fixed slices, so they cannot) increments an
+//! instrumented counter instead of being assumed away;
+//! [`ReplayContext::alloc_events`] exposes it and a steady-state test
+//! asserts it stays at zero.
 
+use crate::aot::memory::{
+    happens_before_conflicts, plan_respects_conflicts, plan_with_conflicts, ArenaLease, ArenaPlan,
+    ArenaPool,
+};
 use crate::aot::tape::{ReplayTape, TapeArg, TapeOp, TapeRole};
 use std::any::Any;
 use std::cell::UnsafeCell;
@@ -171,30 +190,102 @@ impl EventTable {
     }
 }
 
-/// Slot arena: one buffer per graph node, preallocated at context build.
-/// Access is `unsafe` because exclusivity is guaranteed by the verified
-/// sync plan, not the borrow checker (see module docs).
+/// Canary bit pattern seeding the arena's uncovered holes (any `u32` is
+/// a valid `f32` bit pattern; this one is distinctive in a debugger).
+const CANARY_BITS: u32 = 0xDEAD_F00D;
+
+/// Guard elements appended past the arena's top, canary-seeded like the
+/// holes — catches kernels running off the end of the last slot.
+const GUARD_ELEMS: usize = 64;
+
+/// Slot arena: one contiguous preallocated buffer for the whole tape,
+/// with per-slot `(offset, len)` views resolved at build from the
+/// [`ArenaPlan`]. Access is `unsafe` because exclusivity is guaranteed
+/// by the verified sync plan plus the plan's conflict-disjointness, not
+/// the borrow checker (see module docs). Bytes covered by no slot view
+/// (packing holes, reservation slack, the tail guard) are seeded with
+/// canary words; [`check_canaries`](Self::check_canaries) detects any
+/// task that wrote outside its view.
 struct SlotArena {
-    bufs: Vec<UnsafeCell<Vec<f32>>>,
+    /// Owns the backing buffer (sized once at build, never reallocated);
+    /// replay-time access goes through `base`, never through the `Vec`,
+    /// so concurrent disjoint views never materialize a borrow of the
+    /// whole buffer.
+    lease: UnsafeCell<ArenaLease>,
+    /// Cached data pointer of the backing buffer.
+    base: *mut f32,
+    /// `(offset, len)` in elements, per slot.
+    views: Vec<(usize, usize)>,
+    /// Canary element ranges: plan holes + the tail guard.
+    canaries: Vec<(usize, usize)>,
 }
 
-// Safety: concurrent access is coordinated by the sync plan (module docs).
+// Safety: concurrent access is coordinated by the sync plan (module
+// docs); `base` points into the heap allocation `lease` owns, which is
+// stable for the arena's lifetime.
+unsafe impl Send for SlotArena {}
 unsafe impl Sync for SlotArena {}
 
 impl SlotArena {
-    fn new(lens: &[usize]) -> SlotArena {
-        SlotArena { bufs: lens.iter().map(|&l| UnsafeCell::new(vec![0.0f32; l])).collect() }
+    fn new(lens: &[usize], plan: &ArenaPlan, mut lease: ArenaLease) -> SlotArena {
+        debug_assert_eq!(plan.offsets.len(), lens.len());
+        let arena_elems = (plan.arena_bytes / 4) as usize;
+        // Byte offsets are allocator-rounded (512-byte quanta), so every
+        // offset and hole boundary is element-aligned.
+        let views: Vec<(usize, usize)> =
+            lens.iter().enumerate().map(|(s, &l)| ((plan.offsets[s] / 4) as usize, l)).collect();
+        let extents: Vec<u64> = lens.iter().map(|&l| 4 * l as u64).collect();
+        let mut canaries: Vec<(usize, usize)> = plan
+            .holes(&extents)
+            .into_iter()
+            .map(|(a, b)| ((a / 4) as usize, (b / 4) as usize))
+            .collect();
+        canaries.push((arena_elems, arena_elems + GUARD_ELEMS));
+        lease.buf.clear();
+        lease.buf.resize(arena_elems + GUARD_ELEMS, 0.0);
+        let canary = f32::from_bits(CANARY_BITS);
+        for &(a, b) in &canaries {
+            for v in &mut lease.buf[a..b] {
+                *v = canary;
+            }
+        }
+        // Moving the lease moves only the Vec's header; the heap block
+        // (and so this pointer) is stable until the lease drops.
+        let base = lease.buf.as_mut_ptr();
+        SlotArena { lease: UnsafeCell::new(lease), base, views, canaries }
     }
 
     /// Safety: per the sync plan, the slot's writer finished before us.
     unsafe fn get(&self, slot: usize) -> &[f32] {
-        (*self.bufs[slot].get()).as_slice()
+        let (off, len) = self.views[slot];
+        std::slice::from_raw_parts(self.base.add(off), len)
     }
 
-    /// Safety: per the sync plan, we are the slot's unique live writer.
+    /// Safety: per the sync plan, we are the unique live writer of any
+    /// byte in this view.
     #[allow(clippy::mut_from_ref)]
-    unsafe fn get_mut(&self, slot: usize) -> &mut Vec<f32> {
-        &mut *self.bufs[slot].get()
+    unsafe fn get_mut(&self, slot: usize) -> &mut [f32] {
+        let (off, len) = self.views[slot];
+        std::slice::from_raw_parts_mut(self.base.add(off), len)
+    }
+
+    /// Verify every canary word is intact. Callers must ensure no replay
+    /// is in flight.
+    fn check_canaries(&self) -> Result<(), String> {
+        // Safety: quiescent per the caller (coordinator-only call).
+        let buf = unsafe { &(*self.lease.get()).buf };
+        for &(a, b) in &self.canaries {
+            for (i, v) in buf[a..b].iter().enumerate() {
+                if v.to_bits() != CANARY_BITS {
+                    return Err(format!(
+                        "arena canary corrupted at element {} (hole {a}..{b}): \
+                         a task wrote outside its slot view",
+                        a + i
+                    ));
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -256,17 +347,29 @@ struct ReplayInner {
     tape: ReplayTape,
     kernel: Box<dyn TapeKernel>,
     arena: SlotArena,
+    /// The layout the arena's views were resolved from.
+    plan: ArenaPlan,
     events: EventTable,
     weights: Vec<Vec<f32>>,
     /// Would-allocate events on the per-task path since the last reset.
     alloc_events: AtomicU64,
     /// Completion-stamp tracing (off by default: the shared stamp clock
     /// is an RMW on one cache line per task, instrumentation the
-    /// serving hot path should not pay).
+    /// serving hot path should not pay). Also gates the live-bytes
+    /// accounting below.
     trace: AtomicBool,
     /// Per-record completion stamps (1-based; 0 = not completed).
     stamps: Vec<AtomicU64>,
     stamp_clock: AtomicU64,
+    /// Reader count of each slot (static; reloads `reader_left` per replay).
+    n_readers: Vec<u32>,
+    /// Traced liveness accounting: a slot's rounded reservation counts
+    /// as live from its defining record until its last reader finishes
+    /// (forever, if nothing reads it — the DES uses the same rule, so
+    /// predicted and measured peaks are comparable).
+    reader_left: Vec<AtomicU32>,
+    live_bytes: AtomicU64,
+    peak_bytes: AtomicU64,
 }
 
 impl ReplayInner {
@@ -317,20 +420,41 @@ impl ReplayInner {
                     TapeArg::Weight(w) => self.weights[w as usize].as_slice(),
                 });
             }
-            // Safety: we are this slot's unique writer this replay.
+            // Safety: we hold the only live borrow of these bytes this
+            // replay (sync plan + conflict-disjoint arena plan).
             let out = unsafe { self.arena.get_mut(op.out_slot as usize) };
-            if out.len() != op.out_len as usize {
-                self.alloc_events.fetch_add(1, Ordering::Relaxed);
-                out.resize(op.out_len as usize, 0.0);
-            }
+            debug_assert_eq!(out.len(), op.out_len as usize, "slot views are sized at build");
             if let (Some(acc), Some(t0)) = (sched_s, t0) {
                 *acc += t0.elapsed().as_secs_f64();
             }
-            self.kernel.execute(op, scratch, out.as_mut_slice());
+            self.kernel.execute(op, scratch, out);
         }
         if self.trace.load(Ordering::Relaxed) {
             let stamp = self.stamp_clock.fetch_add(1, Ordering::Relaxed) + 1;
             self.stamps[op_idx].store(stamp, Ordering::Relaxed);
+            self.account_op(op);
+        }
+    }
+
+    /// Traced liveness accounting: mark this record's slot live, retire
+    /// argument slots whose last read this was. The instantaneous live
+    /// set is always pairwise-conflicting under the happens-before plan,
+    /// so `peak_bytes ≤ plan.arena_bytes` — asserted in tests and
+    /// cross-checked against the DES's predicted peak
+    /// ([`crate::sim::peak_reserved_bytes`]).
+    fn account_op(&self, op: &TapeOp) {
+        let bytes = self.plan.rounded_sizes[op.out_slot as usize];
+        if bytes > 0 {
+            let live = self.live_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+            self.peak_bytes.fetch_max(live, Ordering::Relaxed);
+        }
+        for arg in self.tape.args(op) {
+            if let TapeArg::Slot(s) = *arg {
+                let s = s as usize;
+                if self.reader_left[s].fetch_sub(1, Ordering::Relaxed) == 1 {
+                    self.live_bytes.fetch_sub(self.plan.rounded_sizes[s], Ordering::Relaxed);
+                }
+            }
         }
     }
 
@@ -339,6 +463,11 @@ impl ReplayInner {
         self.stamp_clock.store(0, Ordering::Relaxed);
         for s in &self.stamps {
             s.store(0, Ordering::Relaxed);
+        }
+        self.live_bytes.store(0, Ordering::Relaxed);
+        self.peak_bytes.store(0, Ordering::Relaxed);
+        for (left, &n) in self.reader_left.iter().zip(&self.n_readers) {
+            left.store(n, Ordering::Relaxed);
         }
     }
 
@@ -353,10 +482,7 @@ impl ReplayInner {
             }
             // Safety: no replay is in flight (coordinator-only call).
             let buf = unsafe { self.arena.get_mut(slot) };
-            if buf.len() != len {
-                self.alloc_events.fetch_add(1, Ordering::Relaxed);
-                buf.resize(len, 0.0);
-            }
+            debug_assert_eq!(buf.len(), len, "input views are sized at build");
             buf.copy_from_slice(data);
         }
         Ok(())
@@ -528,6 +654,15 @@ pub struct ExecOptions {
     /// parked streams release their worker — the right shape when many
     /// lanes multiply total stream count past the physical cores.
     pub max_workers: Option<usize>,
+    /// Lay every slot out in its own arena range (the per-slot-buffer
+    /// baseline) instead of packing temporally-disjoint slots onto
+    /// shared bytes per the happens-before plan. The differential
+    /// harness replays both layouts and demands bit-identical outputs.
+    pub unshared_slots: bool,
+    /// Draw the arena's backing buffer from this pool (and return it on
+    /// drop) instead of allocating a fresh one — serving lanes share one
+    /// pool so rebuilt contexts recycle bucket-sized reservations.
+    pub arena_pool: Option<ArenaPool>,
 }
 
 impl Default for ExecOptions {
@@ -536,6 +671,8 @@ impl Default for ExecOptions {
             weights: Vec::new(),
             timeout: ReplayContext::DEFAULT_TIMEOUT,
             max_workers: None,
+            unshared_slots: false,
+            arena_pool: None,
         }
     }
 }
@@ -576,7 +713,7 @@ impl ReplayContext {
         weights: Vec<Vec<f32>>,
         timeout: Duration,
     ) -> ReplayContext {
-        Self::with_options(tape, kernel, ExecOptions { weights, timeout, max_workers: None })
+        Self::with_options(tape, kernel, ExecOptions { weights, timeout, ..Default::default() })
     }
 
     /// Constructor with explicit pool options (see [`ExecOptions`]).
@@ -599,16 +736,47 @@ impl ReplayContext {
         let n_ops = tape.n_ops();
         let n_events = tape.n_events();
         let n_streams = tape.n_streams();
+        // Resolve the arena layout: stream-aware packing by default, the
+        // end-to-end per-slot layout for the differential baseline.
+        let slot_bytes = tape.slot_bytes();
+        let plan = if opts.unshared_slots {
+            ArenaPlan::unshared(&slot_bytes)
+        } else {
+            let conflicts = happens_before_conflicts(&tape);
+            let plan = plan_with_conflicts(&slot_bytes, &conflicts);
+            debug_assert!(
+                plan_respects_conflicts(&conflicts, &plan),
+                "arena plan violates its own conflict set"
+            );
+            plan
+        };
+        let lease = match &opts.arena_pool {
+            Some(pool) => pool.acquire((plan.arena_bytes / 4) as usize + GUARD_ELEMS),
+            None => ArenaLease::owned(),
+        };
+        let mut n_readers = vec![0u32; slot_lens.len()];
+        for op in tape.ops() {
+            for arg in tape.args(op) {
+                if let TapeArg::Slot(s) = *arg {
+                    n_readers[s as usize] += 1;
+                }
+            }
+        }
         let inner = Arc::new(ReplayInner {
+            arena: SlotArena::new(&slot_lens, &plan, lease),
+            plan,
             tape,
             kernel: Box::new(kernel),
-            arena: SlotArena::new(&slot_lens),
             events: EventTable::new(n_events, timeout),
             weights: opts.weights,
             alloc_events: AtomicU64::new(0),
             trace: AtomicBool::new(false),
             stamps: (0..n_ops).map(|_| AtomicU64::new(0)).collect(),
             stamp_clock: AtomicU64::new(0),
+            reader_left: n_readers.iter().map(|&n| AtomicU32::new(n)).collect(),
+            n_readers,
+            live_bytes: AtomicU64::new(0),
+            peak_bytes: AtomicU64::new(0),
         });
         let n_workers = opts.max_workers.unwrap_or(n_streams).clamp(1, n_streams.max(1));
         if n_workers >= n_streams {
@@ -683,7 +851,7 @@ impl ReplayContext {
         }
         self.inner.fill_inputs(inputs)?;
         self.inner.reset_run_state();
-        match &self.mode {
+        let result = match &self.mode {
             PoolMode::PerStream(shared) => {
                 let shared = Arc::clone(shared);
                 self.replay_per_stream(&shared)
@@ -692,7 +860,13 @@ impl ReplayContext {
                 let shared = Arc::clone(shared);
                 self.replay_shared_pool(&shared)
             }
+        };
+        // Debug-mode overlap-corruption check: a task that wrote outside
+        // its slot view trips an arena canary.
+        if cfg!(debug_assertions) && result.is_ok() {
+            self.inner.arena.check_canaries()?;
         }
+        result
     }
 
     /// Release + join for the one-worker-per-stream pool.
@@ -799,6 +973,10 @@ impl ReplayContext {
             let op = inner.tape.op(i);
             inner.run_op(i, op, &mut scratch, Some(&mut sched_s));
         }
+        drop(scratch);
+        if cfg!(debug_assertions) {
+            self.inner.arena.check_canaries()?;
+        }
         Ok(sched_s)
     }
 
@@ -839,11 +1017,8 @@ impl ReplayContext {
             }
             // Safety: single-threaded here.
             let out = unsafe { inner.arena.get_mut(op.out_slot as usize) };
-            if out.len() != op.out_len as usize {
-                out.resize(op.out_len as usize, 0.0);
-            }
             sched_s += t0.elapsed().as_secs_f64();
-            inner.kernel.execute(op, &args, out.as_mut_slice());
+            inner.kernel.execute(op, &args, out);
             written[op.out_slot as usize] = true;
         }
         Ok(sched_s)
@@ -901,6 +1076,43 @@ impl ReplayContext {
     pub fn completion_stamps(&self) -> Vec<u64> {
         self.assert_not_poisoned();
         self.inner.stamps.iter().map(|s| s.load(Ordering::Relaxed)).collect()
+    }
+
+    /// The arena layout this context executes against.
+    pub fn arena_plan(&self) -> &ArenaPlan {
+        &self.inner.plan
+    }
+
+    /// Bytes of the single contiguous arena reservation (the packed
+    /// footprint; excludes the debug tail guard).
+    pub fn reserved_bytes(&self) -> u64 {
+        self.inner.plan.arena_bytes
+    }
+
+    /// What per-slot allocation would reserve without lifetime sharing.
+    pub fn unshared_bytes(&self) -> u64 {
+        self.inner.plan.unshared_bytes()
+    }
+
+    /// Verify the arena's canary words (always available; the replay
+    /// paths run this automatically in debug builds).
+    ///
+    /// # Panics
+    ///
+    /// Panics on a poisoned context, like [`output`](Self::output).
+    pub fn check_canaries(&self) -> Result<(), String> {
+        self.assert_not_poisoned();
+        self.inner.arena.check_canaries()
+    }
+
+    /// Peak concurrently-live reserved bytes observed during the last
+    /// traced replay ([`set_tracing`](Self::set_tracing)`(true)`; 0
+    /// otherwise). A slot is live from its defining record until its
+    /// last reader finishes — the same rule the DES prediction uses
+    /// ([`crate::sim::peak_reserved_bytes`]), so the two are directly
+    /// comparable; both are bounded by [`reserved_bytes`](Self::reserved_bytes).
+    pub fn peak_live_bytes(&self) -> u64 {
+        self.inner.peak_bytes.load(Ordering::Relaxed)
     }
 
     /// Would-allocate events observed on the per-task path since the
@@ -1150,5 +1362,95 @@ mod tests {
         sorted.sort_unstable();
         sorted.dedup();
         assert_eq!(sorted.len(), stamps.len(), "stamps must be unique");
+    }
+
+    #[test]
+    fn arena_packs_below_unshared_with_intact_canaries() {
+        let tape = mini_tape();
+        let input = input_for(&tape, 6);
+        let mut ctx = ReplayContext::new(tape, SyntheticKernel);
+        assert!(
+            ctx.reserved_bytes() < ctx.unshared_bytes(),
+            "packed arena {} must beat unshared {}",
+            ctx.reserved_bytes(),
+            ctx.unshared_bytes()
+        );
+        for _ in 0..3 {
+            ctx.replay_one(&input).unwrap();
+            ctx.replay_serial(&[&input]).unwrap();
+        }
+        ctx.check_canaries().expect("no task may write outside its slot view");
+    }
+
+    #[test]
+    fn unshared_layout_is_bit_identical_to_packed_arena() {
+        let tape = mini_tape();
+        let input = input_for(&tape, 8);
+        let mut packed = ReplayContext::new(tape.clone(), SyntheticKernel);
+        let mut unshared = ReplayContext::with_options(
+            tape,
+            SyntheticKernel,
+            ExecOptions { unshared_slots: true, ..Default::default() },
+        );
+        assert_eq!(unshared.reserved_bytes(), unshared.unshared_bytes());
+        assert!(packed.reserved_bytes() < unshared.reserved_bytes());
+        packed.replay_one(&input).unwrap();
+        unshared.replay_one(&input).unwrap();
+        assert_eq!(packed.output(), unshared.output(), "layout must not leak into results");
+    }
+
+    #[test]
+    fn pooled_arena_is_recycled_across_context_builds() {
+        let pool = crate::aot::memory::ArenaPool::new();
+        let tape = mini_tape();
+        let input = input_for(&tape, 9);
+        let expect: Vec<f32> = {
+            let mut ctx = ReplayContext::with_options(
+                tape.clone(),
+                SyntheticKernel,
+                ExecOptions { arena_pool: Some(pool.clone()), ..Default::default() },
+            );
+            ctx.replay_one(&input).unwrap();
+            ctx.output().to_vec()
+        };
+        let stats = pool.stats();
+        assert_eq!((stats.acquires, stats.hits), (1, 0));
+        assert!(stats.resident_bytes > 0, "dropping the context returns the arena");
+        assert_eq!(stats.leased_bytes, 0);
+
+        // A rebuild of the same shape draws the recycled buffer — and
+        // the recycled (dirty) arena replays bit-identically.
+        let mut ctx = ReplayContext::with_options(
+            tape,
+            SyntheticKernel,
+            ExecOptions { arena_pool: Some(pool.clone()), ..Default::default() },
+        );
+        let stats = pool.stats();
+        assert_eq!((stats.acquires, stats.hits), (2, 1));
+        ctx.replay_one(&input).unwrap();
+        assert_eq!(ctx.output(), expect.as_slice());
+    }
+
+    #[test]
+    fn traced_replay_peak_live_bytes_is_bounded_by_the_reservation() {
+        let tape = mini_tape();
+        let input = input_for(&tape, 10);
+        let mut ctx = ReplayContext::new(tape, SyntheticKernel);
+        assert_eq!(ctx.peak_live_bytes(), 0, "untraced replays pay no accounting");
+        ctx.set_tracing(true);
+        ctx.replay_one(&input).unwrap();
+        let peak = ctx.peak_live_bytes();
+        let max_slot = ctx.arena_plan().rounded_sizes.iter().copied().max().unwrap();
+        assert!(peak >= max_slot, "peak {peak} below the largest slot {max_slot}");
+        assert!(
+            peak <= ctx.reserved_bytes(),
+            "measured peak {peak} exceeds the reservation {}",
+            ctx.reserved_bytes()
+        );
+        // Serial replay of the same tape accounts deterministically and
+        // stays within the same bound.
+        ctx.replay_serial(&[&input]).unwrap();
+        let serial_peak = ctx.peak_live_bytes();
+        assert!(serial_peak >= max_slot && serial_peak <= ctx.reserved_bytes());
     }
 }

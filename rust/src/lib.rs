@@ -6,10 +6,12 @@
 //! * **L3 (this crate)** — the paper's system: the stream-assignment
 //!   algorithm (Algorithm 1: MEG → bipartite maximum matching → chain
 //!   partition), the graph rewriter, the ahead-of-time (AoT) task scheduler
-//!   with pre-run interception and memory reservation, the **parallel
-//!   multi-stream replay executor** (per-stream submission tapes driven by
-//!   a persistent worker pool through a preallocated slot arena and event
-//!   table — zero heap allocation per task on the steady-state path), a
+//!   with pre-run interception and **stream-aware memory reservation**
+//!   ([`aot::memory`]: happens-before lifetimes → conflict-packed shared
+//!   arena → pooled reservations), the **parallel multi-stream replay
+//!   executor** (per-stream submission tapes driven by a persistent worker
+//!   pool through one contiguous slot arena and an event table — zero heap
+//!   allocation per task on the steady-state path), a
 //!   discrete-event virtual-GPU simulator that replays the *same* tapes to
 //!   predict multi-stream speedups, framework baseline profiles, an
 //!   operator-graph model zoo covering every network in the paper's

@@ -149,6 +149,12 @@ fn cmd_replay(args: &[String]) -> Result<()> {
     };
     let mut par = ReplayContext::new(tape.clone(), SyntheticKernel);
     let mut ser = ReplayContext::new(tape.clone(), SyntheticKernel);
+    println!(
+        "reserved memory: arena {} B (unshared {} B, {:.1}% saved by stream-aware aliasing)",
+        par.reserved_bytes(),
+        par.unshared_bytes(),
+        100.0 * (1.0 - par.reserved_bytes() as f64 / par.unshared_bytes().max(1) as f64),
+    );
     par.replay_one(&input).map_err(anyhow::Error::msg)?;
     ser.replay_serial(&[&input]).map_err(anyhow::Error::msg)?;
     anyhow::ensure!(par.output() == ser.output(), "parallel and serial outputs diverged");

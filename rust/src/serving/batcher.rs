@@ -30,11 +30,13 @@ impl BatchPolicy {
     }
 }
 
-/// A queued request: opaque id + one example's input.
+/// A queued request: opaque id + one example's input, plus an optional
+/// bucket hint (validated against the policy at push).
 #[derive(Debug, Clone)]
 pub struct Pending<T> {
     pub token: T,
     pub input: Vec<f32>,
+    pub hint: Option<usize>,
     pub enqueued: Instant,
 }
 
@@ -72,20 +74,64 @@ impl<T> Batcher<T> {
     }
 
     pub fn push(&mut self, token: T, input: Vec<f32>) {
-        self.queue.push(Pending { token, input, enqueued: Instant::now() });
+        self.push_hinted(token, input, None);
+    }
+
+    /// Queue a request with an optional bucket hint. A hint naming a
+    /// compiled bucket routes the request's batch to that bucket
+    /// (sequence-length-style routing the client decides) **instead of**
+    /// deriving the bucket from queue depth; hints naming no compiled
+    /// bucket are ignored.
+    pub fn push_hinted(&mut self, token: T, input: Vec<f32>, hint: Option<usize>) {
+        let hint = hint.filter(|h| self.policy.batch_sizes.contains(h));
+        self.queue.push(Pending { token, input, hint, enqueued: Instant::now() });
     }
 
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
 
-    /// Should a batch be formed now?
+    /// The batch the next [`form_with`](Self::form_with) will produce,
+    /// as `(request count, bucket)` — `None` on an empty queue. The
+    /// oldest request decides: a hinted head groups the maximal run of
+    /// identically-hinted requests behind it (capped at the hinted
+    /// bucket, which is honored verbatim); an unhinted head takes the
+    /// maximal unhinted run, bucketed by size as before. Dispatchers
+    /// route by this plan *before* forming, so a saturated lane leaves
+    /// the queue untouched.
+    pub fn plan_next(&self) -> Option<(usize, usize)> {
+        let head = self.queue.first()?;
+        Some(match head.hint {
+            Some(b) => {
+                let run = self.queue.iter().take_while(|p| p.hint == Some(b)).count();
+                (run.min(b), b)
+            }
+            None => {
+                let run = self.queue.iter().take_while(|p| p.hint.is_none()).count();
+                let take = run.min(self.policy.max_batch());
+                (take, self.policy.bucket_for(take))
+            }
+        })
+    }
+
+    /// Should a batch be formed now? A full batch (the planned run fills
+    /// its bucket) flushes immediately; otherwise the oldest request's
+    /// deadline governs.
     pub fn ready(&self, now: Instant) -> bool {
-        if self.queue.is_empty() {
+        let Some(head) = self.queue.first() else {
             return false;
-        }
-        self.queue.len() >= self.policy.max_batch()
-            || now.duration_since(self.queue[0].enqueued) >= self.policy.max_wait
+        };
+        let full = match head.hint {
+            Some(b) => self.queue.iter().take_while(|p| p.hint == Some(b)).count() >= b,
+            // Count only the unhinted prefix `plan_next` will actually
+            // take — hinted requests queued behind the head must not
+            // trigger a premature, underfilled flush.
+            None => {
+                self.queue.iter().take_while(|p| p.hint.is_none()).count()
+                    >= self.policy.max_batch()
+            }
+        };
+        full || now.duration_since(head.enqueued) >= self.policy.max_wait
     }
 
     /// Time until the oldest request's deadline (for the server's poll).
@@ -109,11 +155,7 @@ impl<T> Batcher<T> {
         example_len: usize,
         input: &mut Vec<f32>,
     ) -> Option<FormedTokens<T>> {
-        if self.queue.is_empty() {
-            return None;
-        }
-        let take = self.queue.len().min(self.policy.max_batch());
-        let bucket = self.policy.bucket_for(take);
+        let (take, bucket) = self.plan_next()?;
         input.clear();
         input.resize(bucket * example_len, 0.0);
         let mut tokens = Vec::with_capacity(take);
@@ -200,6 +242,68 @@ mod tests {
         assert!(b.form(4).is_none());
         assert!(b.form_with(4, &mut Vec::new()).is_none());
         assert!(b.next_deadline().is_none());
+    }
+
+    #[test]
+    fn hinted_head_routes_to_its_bucket_over_queue_depth() {
+        let mut b = Batcher::new(policy()); // buckets [1, 8]
+        b.push_hinted(0, vec![1.0; 4], Some(8));
+        // queue-depth routing would pick bucket 1 for a lone request;
+        // the hint must win
+        assert_eq!(b.plan_next(), Some((1, 8)));
+        let fb = b.form(4).unwrap();
+        assert_eq!((fb.bucket, fb.tokens.len()), (8, 1));
+        assert_eq!(fb.input.len(), 32);
+    }
+
+    #[test]
+    fn hinted_full_batch_is_ready_immediately_and_caps_its_run() {
+        let mut b = Batcher::new(policy());
+        b.push_hinted(0, vec![1.0; 4], Some(1));
+        assert!(b.ready(Instant::now()), "a full hinted batch flushes immediately");
+        b.push_hinted(1, vec![2.0; 4], Some(1));
+        // head hint 1 caps the run at one request per batch
+        assert_eq!(b.plan_next(), Some((1, 1)));
+        let fb = b.form(4).unwrap();
+        assert_eq!((fb.bucket, fb.tokens.len()), (1, 1));
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn mixed_hints_form_in_arrival_runs() {
+        let mut b = Batcher::new(policy());
+        b.push(0, vec![0.0; 4]);
+        b.push(1, vec![1.0; 4]);
+        b.push_hinted(2, vec![2.0; 4], Some(8));
+        // the unhinted prefix forms first, depth-routed as before
+        assert_eq!(b.plan_next(), Some((2, 8)));
+        let fb = b.form(4).unwrap();
+        assert_eq!((fb.bucket, fb.tokens.len()), (8, 2));
+        // then the hinted run
+        assert_eq!(b.plan_next(), Some((1, 8)));
+    }
+
+    #[test]
+    fn hinted_tail_does_not_trigger_a_premature_unhinted_flush() {
+        // 1 unhinted head + 7 hinted requests: the queue is 8 deep but
+        // the plannable unhinted run is 1, so only the deadline (not the
+        // depth) may flush the head.
+        let mut b = Batcher::new(policy());
+        b.push(0, vec![0.0; 4]);
+        for i in 1..8 {
+            b.push_hinted(i, vec![i as f32; 4], Some(8));
+        }
+        assert_eq!(b.pending(), 8);
+        assert!(!b.ready(Instant::now()), "underfilled batch must wait for its deadline");
+        assert!(b.ready(Instant::now() + Duration::from_millis(10)));
+        assert_eq!(b.plan_next(), Some((1, 1)));
+    }
+
+    #[test]
+    fn unknown_hints_are_ignored() {
+        let mut b = Batcher::new(policy());
+        b.push_hinted(0, vec![0.0; 4], Some(3)); // 3 is not a compiled bucket
+        assert_eq!(b.plan_next(), Some((1, 1)), "depth routing applies");
     }
 
     #[test]

@@ -89,8 +89,10 @@ impl Default for LaneConfig {
 type Reply = mpsc::Sender<Result<Vec<f32>, String>>;
 
 enum Admit {
-    /// One example through the dynamic batcher.
-    Infer { input: Vec<f32>, reply: Reply },
+    /// One example through the dynamic batcher. `hint` optionally names
+    /// the bucket (and so the lane) the request's batch must route to —
+    /// honored over queue-depth routing when it names a compiled bucket.
+    Infer { input: Vec<f32>, hint: Option<usize>, reply: Reply },
     /// A pre-formed padded batch straight to `bucket`'s lane (benches,
     /// the differential harness, upstream batch-aware clients). Replies
     /// with the full padded output.
@@ -164,6 +166,7 @@ where
     let mut stat = LaneStat {
         bucket,
         n_streams: None,
+        reserved_bytes: None,
         n_batches: 0,
         n_requests: 0,
         busy_s: 0.0,
@@ -185,6 +188,7 @@ where
     }
     let output_len = engine.output_len();
     stat.n_streams = engine.stream_count(bucket);
+    stat.reserved_bytes = engine.reserved_bytes(bucket);
     let _ = ready.send(Ok((engine.example_len(), output_len)));
 
     let mut wait_sum = 0.0f64;
@@ -285,12 +289,12 @@ fn admit_one(
     stage_cap: usize,
 ) {
     match msg {
-        Admit::Infer { input, reply } => {
+        Admit::Infer { input, hint, reply } => {
             if input.len() != example_len {
                 let _ =
                     reply.send(Err(format!("bad input length {} != {example_len}", input.len())));
             } else {
-                batcher.push(reply, input);
+                batcher.push_hinted(reply, input, hint);
             }
         }
         Admit::Batch { bucket, input, reply } => match lane_index.get(&bucket) {
@@ -321,7 +325,7 @@ fn dispatcher_thread(
 ) {
     let lane_index: HashMap<usize, usize> =
         lanes.iter().enumerate().map(|(i, l)| (l.bucket, i)).collect();
-    let mut batcher: Batcher<Reply> = Batcher::new(policy.clone());
+    let mut batcher: Batcher<Reply> = Batcher::new(policy);
     let started = Instant::now();
     let mut shutdown_reply: Option<mpsc::Sender<ServingReport>> = None;
     // Admission closed (by shutdown or by the server handle dropping).
@@ -398,8 +402,10 @@ fn dispatcher_thread(
             if !((shutting && batcher.pending() > 0) || batcher.ready(now)) {
                 break;
             }
-            let take = batcher.pending().min(policy.max_batch());
-            let bucket = policy.bucket_for(take);
+            // The batcher plans the bucket (honoring client hints over
+            // queue-depth routing); routing happens before forming so a
+            // saturated lane leaves the queue untouched.
+            let Some((_, bucket)) = batcher.plan_next() else { break };
             let li = lane_index[&bucket];
             let lane = &mut lanes[li];
             if lane.staged.len() >= config.lane_cap {
@@ -457,6 +463,7 @@ fn dispatcher_thread(
             Err(_) => lane_stats.push(LaneStat {
                 bucket: lane.bucket,
                 n_streams: None,
+                reserved_bytes: None,
                 n_batches: 0,
                 n_requests: 0,
                 busy_s: 0.0,
@@ -513,6 +520,33 @@ impl LaneClient {
 
     /// Fire an async request; returns the reply channel.
     pub fn infer_async(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
+        self.submit_infer(input, None)
+    }
+
+    /// Blocking inference with a bucket hint: the dispatcher routes the
+    /// request's batch to `bucket`'s lane (honored over queue-depth
+    /// routing) — sequence-length-aware clients pick their own lane.
+    pub fn infer_hinted(&self, input: Vec<f32>, bucket: usize) -> Result<Vec<f32>> {
+        let rx = self.infer_hinted_async(input, bucket)?;
+        rx.recv().context("server dropped request")?.map_err(anyhow::Error::msg)
+    }
+
+    /// Async variant of [`infer_hinted`](Self::infer_hinted). The hint
+    /// must name a compiled bucket.
+    pub fn infer_hinted_async(
+        &self,
+        input: Vec<f32>,
+        bucket: usize,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
+        anyhow::ensure!(self.batch_sizes.contains(&bucket), "no lane for bucket {bucket}");
+        self.submit_infer(input, Some(bucket))
+    }
+
+    fn submit_infer(
+        &self,
+        input: Vec<f32>,
+        hint: Option<usize>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
         anyhow::ensure!(
             input.len() == self.example_len,
             "bad input length {} != {}",
@@ -521,7 +555,7 @@ impl LaneClient {
         );
         let (reply, rx) = mpsc::channel();
         self.admission
-            .push(Admit::Infer { input, reply })
+            .push(Admit::Infer { input, hint, reply })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         Ok(rx)
     }
@@ -668,6 +702,35 @@ impl LaneServer {
         })
     }
 
+    /// Start one [`TapeEngine`](super::TapeEngine) lane per bucket, all
+    /// lanes drawing their per-bucket slot arenas from the given shared
+    /// [`ArenaPool`](crate::aot::memory::ArenaPool) — a restarted or
+    /// rebuilt lane server re-draws the same bucket-sized reservations
+    /// instead of growing the heap. The caller keeps a clone of the pool
+    /// for stats; per-lane reserved footprints surface in
+    /// [`LaneStat::reserved_bytes`].
+    pub fn start_pooled_tape<G>(
+        batch_sizes: &[usize],
+        worker_cap: Option<usize>,
+        pool: crate::aot::memory::ArenaPool,
+        config: LaneConfig,
+        build: G,
+    ) -> Result<LaneServer>
+    where
+        G: Fn(usize) -> crate::ops::OpGraph + Send + Sync + Clone + 'static,
+    {
+        use super::sim_engine::{TapeEngine, TapeEngineOptions};
+        let factory = move |bucket: usize| {
+            let opts = TapeEngineOptions {
+                worker_cap,
+                unshared_slots: false,
+                arena_pool: Some(pool.clone()),
+            };
+            TapeEngine::from_graph_fn_opts("pooled-lane", &[bucket], opts, build.clone())
+        };
+        Self::start(batch_sizes, factory, config)
+    }
+
     pub fn example_len(&self) -> usize {
         self.example_len
     }
@@ -693,6 +756,12 @@ impl LaneServer {
     /// Blocking inference of one example.
     pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
         self.client().infer(input)
+    }
+
+    /// Blocking inference with a bucket hint
+    /// ([`LaneClient::infer_hinted`]).
+    pub fn infer_hinted(&self, input: Vec<f32>, bucket: usize) -> Result<Vec<f32>> {
+        self.client().infer_hinted(input, bucket)
     }
 
     /// Fire an async request; returns the reply channel.
@@ -802,6 +871,27 @@ mod tests {
     }
 
     #[test]
+    fn bucket_hint_overrides_queue_depth_routing() {
+        let server = lane_server(Duration::from_millis(1));
+        let len = server.example_len();
+        let out_len = server.output_len();
+        let input = inputs(1, len, 55).pop().unwrap();
+        // A lone request depth-routes to bucket 1; the hint forces lane 8.
+        let got = server.infer_hinted(input.clone(), 8).unwrap();
+        assert_eq!(got.len(), out_len);
+        let mut direct = TapeEngine::new("mini_inception", &[8]).unwrap();
+        let mut padded = input;
+        padded.resize(8 * len, 0.0);
+        let want = direct.infer_batch(8, &padded).unwrap();
+        assert_eq!(got.as_slice(), &want[..out_len]);
+        // hints naming no lane are rejected client-side
+        assert!(server.infer_hinted(vec![0.0; len], 3).is_err());
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.lane(8).unwrap().n_requests, 1, "hinted request must land on lane 8");
+        assert_eq!(report.lane(1).unwrap().n_requests, 0);
+    }
+
+    #[test]
     fn rejects_malformed_inputs_client_side() {
         let server = lane_server(Duration::from_millis(1));
         assert!(server.infer(vec![0.0; 3]).is_err());
@@ -810,6 +900,40 @@ mod tests {
         // server still healthy afterwards
         assert!(server.infer(vec![0.0; server.example_len()]).is_ok());
         let _ = server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn pooled_lanes_report_reserved_bytes_and_recycle_arenas() {
+        let pool = crate::aot::memory::ArenaPool::new();
+        let build = |b: usize| crate::models::build("mini_inception", b);
+        let start = || {
+            LaneServer::start_pooled_tape(
+                &[1, 8],
+                Some(2),
+                pool.clone(),
+                LaneConfig::default(),
+                build,
+            )
+            .expect("pooled lane server")
+        };
+        let server = start();
+        let _ = server.infer(vec![0.1; server.example_len()]).unwrap();
+        let report = server.shutdown().unwrap();
+        assert!(
+            report.lanes.iter().all(|l| l.reserved_bytes.unwrap_or(0) > 0),
+            "every lane must report its packed arena footprint"
+        );
+        assert!(report.render().contains("arena="));
+        let first = pool.stats();
+        assert_eq!(first.acquires, 2, "one arena per single-bucket lane engine");
+        assert_eq!(first.leased_bytes, 0, "shutdown returns the arenas to the pool");
+
+        // A restarted server re-draws the same bucket-sized classes.
+        drop(start());
+        let second = pool.stats();
+        assert_eq!(second.acquires, 4);
+        assert!(second.hits >= 2, "restart must recycle, got {} hits", second.hits);
+        assert_eq!(second.high_water_bytes, first.high_water_bytes, "the pool did not grow");
     }
 
     #[test]

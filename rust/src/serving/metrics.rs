@@ -13,6 +13,10 @@ pub struct LaneStat {
     /// Stream count of the lane engine's replay context, when the engine
     /// exposes it ([`InferEngine::stream_count`](crate::coordinator::InferEngine::stream_count)).
     pub n_streams: Option<usize>,
+    /// Packed arena reservation of the lane engine's replay context,
+    /// when the engine exposes it
+    /// ([`InferEngine::reserved_bytes`](crate::coordinator::InferEngine::reserved_bytes)).
+    pub reserved_bytes: Option<u64>,
     pub n_batches: usize,
     /// Real (unpadded) examples served by this lane.
     pub n_requests: usize,
@@ -28,7 +32,7 @@ pub struct LaneStat {
 impl LaneStat {
     pub fn render(&self) -> String {
         format!(
-            "lane[bucket={}]: batches={} requests={} busy={} qwait={}{}{}",
+            "lane[bucket={}]: batches={} requests={} busy={} qwait={}{}{}{}",
             self.bucket,
             self.n_batches,
             self.n_requests,
@@ -36,6 +40,10 @@ impl LaneStat {
             fmt_secs(self.mean_queue_wait_s),
             match self.n_streams {
                 Some(s) => format!(" streams={s}"),
+                None => String::new(),
+            },
+            match self.reserved_bytes {
+                Some(b) => format!(" arena={b}B"),
                 None => String::new(),
             },
             if self.alloc_events > 0 {
@@ -125,6 +133,7 @@ mod tests {
                 LaneStat {
                     bucket: 1,
                     n_streams: Some(2),
+                    reserved_bytes: Some(1536),
                     n_batches: 2,
                     n_requests: 2,
                     busy_s: 0.1,
@@ -134,6 +143,7 @@ mod tests {
                 LaneStat {
                     bucket: 8,
                     n_streams: None,
+                    reserved_bytes: None,
                     n_batches: 2,
                     n_requests: 8,
                     busy_s: 0.2,
@@ -147,5 +157,6 @@ mod tests {
         let s = r.render();
         assert!(s.contains("lane[bucket=1]"));
         assert!(s.contains("streams=2"));
+        assert!(s.contains("arena=1536B"));
     }
 }

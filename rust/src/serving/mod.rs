@@ -35,4 +35,4 @@ pub use lanes::{LaneClient, LaneConfig, LaneServer};
 pub use metrics::{LaneStat, ServingReport};
 pub use queue::Bounded;
 pub use server::{NimbleServer, ServerClient, ServerConfig};
-pub use sim_engine::TapeEngine;
+pub use sim_engine::{TapeEngine, TapeEngineOptions};

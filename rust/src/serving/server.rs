@@ -46,7 +46,13 @@ impl Default for ServerConfig {
 }
 
 enum Msg {
-    Infer { input: Vec<f32>, reply: mpsc::Sender<Result<Vec<f32>, String>> },
+    Infer {
+        input: Vec<f32>,
+        /// Optional bucket hint the batcher honors over queue-depth
+        /// routing (ignored unless it names a compiled bucket).
+        hint: Option<usize>,
+        reply: mpsc::Sender<Result<Vec<f32>, String>>,
+    },
     Shutdown { reply: mpsc::Sender<ServingReport> },
 }
 
@@ -80,7 +86,19 @@ impl ServerClient {
     pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Msg::Infer { input, reply })
+            .send(Msg::Infer { input, hint: None, reply })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().context("server dropped request")?.map_err(anyhow::Error::msg)
+    }
+
+    /// Blocking inference carrying a bucket hint: the batcher routes the
+    /// request's batch to `bucket` (if compiled) instead of deriving the
+    /// bucket from queue depth — sequence-length-aware clients pick
+    /// their own lane.
+    pub fn infer_hinted(&self, input: Vec<f32>, bucket: usize) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Infer { input, hint: Some(bucket), reply })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         rx.recv().context("server dropped request")?.map_err(anyhow::Error::msg)
     }
@@ -89,7 +107,7 @@ impl ServerClient {
     pub fn infer_async(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Msg::Infer { input, reply })
+            .send(Msg::Infer { input, hint: None, reply })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         Ok(rx)
     }
@@ -147,20 +165,18 @@ impl NimbleServer {
 
     /// Blocking inference of one example.
     pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Infer { input, reply })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        rx.recv().context("server dropped request")?.map_err(anyhow::Error::msg)
+        self.client().infer(input)
+    }
+
+    /// Blocking inference with a bucket hint
+    /// ([`ServerClient::infer_hinted`]).
+    pub fn infer_hinted(&self, input: Vec<f32>, bucket: usize) -> Result<Vec<f32>> {
+        self.client().infer_hinted(input, bucket)
     }
 
     /// Fire an async request; returns the reply channel.
     pub fn infer_async(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Infer { input, reply })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        Ok(rx)
+        self.client().infer_async(input)
     }
 
     /// Stop the server and collect the serving report.
@@ -222,12 +238,12 @@ fn engine_thread<E: InferEngine>(
             }
         };
         match msg {
-            Some(Msg::Infer { input, reply }) => {
+            Some(Msg::Infer { input, hint, reply }) => {
                 if input.len() != example_len {
                     let _ = reply
                         .send(Err(format!("bad input length {} != {example_len}", input.len())));
                 } else {
-                    batcher.push(reply, input);
+                    batcher.push_hinted(reply, input, hint);
                 }
             }
             Some(Msg::Shutdown { reply }) => {
@@ -238,14 +254,14 @@ fn engine_thread<E: InferEngine>(
                 // sender once the channel disconnects below.)
                 while let Ok(m) = rx.try_recv() {
                     match m {
-                        Msg::Infer { input, reply } => {
+                        Msg::Infer { input, hint, reply } => {
                             if input.len() != example_len {
                                 let _ = reply.send(Err(format!(
                                     "bad input length {} != {example_len}",
                                     input.len()
                                 )));
                             } else {
-                                batcher.push(reply, input);
+                                batcher.push_hinted(reply, input, hint);
                             }
                         }
                         Msg::Shutdown { .. } => {}

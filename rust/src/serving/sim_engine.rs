@@ -24,6 +24,7 @@
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 
+use crate::aot::memory::ArenaPool;
 use crate::aot::tape::ReplayTape;
 use crate::coordinator::InferEngine;
 use crate::engine::executor::{ExecOptions, ReplayContext, SyntheticKernel};
@@ -35,6 +36,20 @@ use crate::stream::rewrite::rewrite;
 /// Intermediate-activation clamp for the synthetic substrate (input and
 /// output slots keep their true lengths).
 const MAX_TASK_ELEMS: usize = 4096;
+
+/// Build-time knobs for [`TapeEngine`] (see
+/// [`from_graph_fn_opts`](TapeEngine::from_graph_fn_opts)).
+#[derive(Default, Clone)]
+pub struct TapeEngineOptions {
+    /// Per-context worker cap ([`ExecOptions::max_workers`]).
+    pub worker_cap: Option<usize>,
+    /// Per-slot-buffer layout instead of the packed stream-aware arena
+    /// (the differential harness's baseline engine).
+    pub unshared_slots: bool,
+    /// Draw every context's arena from this shared pool (serving lanes
+    /// pass one pool so rebuilt lanes recycle their reservations).
+    pub arena_pool: Option<ArenaPool>,
+}
 
 /// One independent replay context per compiled batch bucket.
 pub struct TapeEngine {
@@ -70,6 +85,19 @@ impl TapeEngine {
         name: &str,
         batch_sizes: &[usize],
         worker_cap: Option<usize>,
+        build: impl Fn(usize) -> OpGraph,
+    ) -> Result<TapeEngine> {
+        let opts = TapeEngineOptions { worker_cap, ..Default::default() };
+        Self::from_graph_fn_opts(name, batch_sizes, opts, build)
+    }
+
+    /// Like [`from_graph_fn`](Self::from_graph_fn) with full build-time
+    /// options: worker cap, per-slot (unshared) arena layout, and a
+    /// shared [`ArenaPool`] to draw the contexts' arenas from.
+    pub fn from_graph_fn_opts(
+        name: &str,
+        batch_sizes: &[usize],
+        opts: TapeEngineOptions,
         build: impl Fn(usize) -> OpGraph,
     ) -> Result<TapeEngine> {
         anyhow::ensure!(!batch_sizes.is_empty(), "need at least one batch size");
@@ -113,7 +141,12 @@ impl TapeEngine {
                 ReplayContext::with_options(
                     tape,
                     SyntheticKernel,
-                    ExecOptions { max_workers: worker_cap, ..Default::default() },
+                    ExecOptions {
+                        max_workers: opts.worker_cap,
+                        unshared_slots: opts.unshared_slots,
+                        arena_pool: opts.arena_pool.clone(),
+                        ..Default::default()
+                    },
                 ),
             );
         }
@@ -165,6 +198,10 @@ impl InferEngine for TapeEngine {
     fn stream_count(&self, bucket: usize) -> Option<usize> {
         self.contexts.get(&bucket).map(|c| c.n_streams())
     }
+
+    fn reserved_bytes(&self, bucket: usize) -> Option<u64> {
+        self.contexts.get(&bucket).map(|c| c.reserved_bytes())
+    }
 }
 
 #[cfg(test)]
@@ -197,6 +234,48 @@ mod tests {
         // replays are deterministic per bucket
         let out1b = e.infer_batch(1, &x).unwrap();
         assert_eq!(out1, out1b);
+    }
+
+    #[test]
+    fn engine_reports_reserved_bytes_and_unshared_layout_matches() {
+        let mut packed = TapeEngine::new("mini_inception", &[1]).unwrap();
+        let mut unshared = TapeEngine::from_graph_fn_opts(
+            "mini_inception",
+            &[1],
+            TapeEngineOptions { unshared_slots: true, ..Default::default() },
+            |b| models::build("mini_inception", b),
+        )
+        .unwrap();
+        let packed_bytes = packed.reserved_bytes(1).unwrap();
+        let unshared_bytes = unshared.reserved_bytes(1).unwrap();
+        assert!(packed_bytes < unshared_bytes, "{packed_bytes} !< {unshared_bytes}");
+        assert!(packed.reserved_bytes(4).is_none());
+        let x = inputs(1, packed.example_len(), 31).pop().unwrap();
+        assert_eq!(
+            packed.infer_batch(1, &x).unwrap(),
+            unshared.infer_batch(1, &x).unwrap(),
+            "arena layout must not leak into results"
+        );
+    }
+
+    #[test]
+    fn pooled_engines_recycle_arenas_across_builds() {
+        let pool = crate::aot::memory::ArenaPool::new();
+        let opts =
+            TapeEngineOptions { arena_pool: Some(pool.clone()), ..Default::default() };
+        let build = |b: usize| models::build("mini_inception", b);
+        let e1 = TapeEngine::from_graph_fn_opts("mini_inception", &[1, 2], opts.clone(), build)
+            .unwrap();
+        let first = pool.stats();
+        assert_eq!(first.acquires, 2, "one arena per bucket context");
+        drop(e1);
+        assert_eq!(pool.stats().leased_bytes, 0, "arenas return on engine drop");
+        let _e2 = TapeEngine::from_graph_fn_opts("mini_inception", &[1, 2], opts, build)
+            .unwrap();
+        let second = pool.stats();
+        assert_eq!(second.acquires, 4);
+        assert!(second.hits >= 1, "rebuilt buckets must recycle size classes");
+        assert_eq!(second.high_water_bytes, first.high_water_bytes, "the pool did not grow");
     }
 
     #[test]

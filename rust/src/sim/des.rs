@@ -249,6 +249,56 @@ pub fn simulate_tape(
     simulate(&SimConfig { plan: &plan, costs, host, device })
 }
 
+/// Predicted peak concurrently-reserved bytes of a simulated replay: a
+/// slot's reservation (`bytes[slot]`, normally the arena plan's
+/// `rounded_sizes`) is live from its defining record until its last
+/// reader finishes (forever, if nothing reads it). Spans are processed
+/// in the simulator's execution order — a legal linearization of the
+/// tape's happens-before order — with the same point-event discipline as
+/// the executor's traced accounting (`ReplayContext::peak_live_bytes`):
+/// mark the record's slot live, then retire exhausted argument slots.
+/// On a single-stream tape both sides walk the identical order, so
+/// prediction and measurement agree **exactly**; on multi-stream tapes
+/// both are bounded by the arena plan's `arena_bytes` (the live set is
+/// always pairwise-conflicting, and conflicting slots occupy disjoint
+/// ranges).
+pub fn peak_reserved_bytes(
+    tape: &crate::aot::tape::ReplayTape,
+    spans: &[TaskSpan],
+    bytes: &[u64],
+) -> u64 {
+    use crate::aot::tape::TapeArg;
+    let n_slots = tape.n_slots();
+    assert_eq!(bytes.len(), n_slots, "one reservation size per slot");
+    let mut op_of = vec![usize::MAX; n_slots];
+    let mut readers = vec![0u32; n_slots];
+    for (i, op) in tape.ops().iter().enumerate() {
+        op_of[op.out_slot as usize] = i;
+        for arg in tape.args(op) {
+            if let TapeArg::Slot(s) = *arg {
+                readers[s as usize] += 1;
+            }
+        }
+    }
+    let (mut live, mut peak) = (0u64, 0u64);
+    for sp in spans {
+        let i = op_of[sp.node];
+        assert!(i != usize::MAX, "span for a slot the tape never writes");
+        live += bytes[sp.node];
+        peak = peak.max(live);
+        for arg in tape.args(tape.op(i)) {
+            if let TapeArg::Slot(s) = *arg {
+                let s = s as usize;
+                readers[s] -= 1;
+                if readers[s] == 0 {
+                    live -= bytes[s];
+                }
+            }
+        }
+    }
+    peak
+}
+
 /// One serving lane's offered work in the multi-lane DES
 /// ([`simulate_lanes`]): a compiled tape, its per-node kernel costs, and
 /// the wall-clock when its batch was dispatched to the lane.
@@ -731,6 +781,44 @@ mod tests {
         assert_eq!(a.total_s.to_bits(), b.total_s.to_bits());
         // A lane that arrives later can only finish later.
         assert!(a.lane_end_s[2] >= a.lane_end_s[0]);
+    }
+
+    #[test]
+    fn des_peak_matches_the_serial_executors_measured_peak_exactly() {
+        use crate::engine::executor::{ReplayContext, SyntheticKernel};
+        let g = crate::models::build("mini_inception", 1);
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+
+        // Single stream: the simulator's execution order IS the merged
+        // submission order the serial executor walks, so predicted and
+        // measured peaks agree bit-for-bit.
+        let tape =
+            crate::aot::tape::ReplayTape::for_op_graph(&g, &rewrite_single_stream(&g), 64);
+        let input = vec![0.5f32; tape.input_slots()[0].1];
+        let mut ctx = ReplayContext::new(tape.clone(), SyntheticKernel);
+        let sim = simulate_tape(&tape, &cs, HostProfile::nimble(), dev.clone());
+        let predicted = peak_reserved_bytes(&tape, &sim.spans, &ctx.arena_plan().rounded_sizes);
+        ctx.set_tracing(true);
+        ctx.replay_serial(&[&input]).unwrap();
+        assert_eq!(predicted, ctx.peak_live_bytes(), "single-stream peaks must match exactly");
+        assert!(predicted > 0 && predicted <= ctx.reserved_bytes());
+
+        // Multi stream: any legal schedule's live set is pairwise-
+        // conflicting, so both peaks are bounded by the reservation.
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(
+            &g,
+            &rewrite(&g, MatchingAlgo::HopcroftKarp),
+            64,
+        );
+        let input = vec![0.5f32; tape.input_slots()[0].1];
+        let mut ctx = ReplayContext::new(tape.clone(), SyntheticKernel);
+        let sim = simulate_tape(&tape, &cs, HostProfile::nimble(), dev.clone());
+        let predicted = peak_reserved_bytes(&tape, &sim.spans, &ctx.arena_plan().rounded_sizes);
+        assert!(predicted <= ctx.reserved_bytes(), "DES peak exceeds the reservation");
+        ctx.set_tracing(true);
+        ctx.replay_one(&input).unwrap();
+        assert!(ctx.peak_live_bytes() <= ctx.reserved_bytes());
     }
 
     #[test]

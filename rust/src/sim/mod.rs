@@ -17,8 +17,8 @@ pub mod trace;
 
 pub use cost::{kernel_cost, KernelCost};
 pub use des::{
-    simulate, simulate_lanes, simulate_tape, LaneLoad, MultiLaneResult, SimConfig, SimResult,
-    TaskSpan,
+    peak_reserved_bytes, simulate, simulate_lanes, simulate_tape, LaneLoad, MultiLaneResult,
+    SimConfig, SimResult, TaskSpan,
 };
 pub use device::GpuSpec;
 pub use framework::HostProfile;

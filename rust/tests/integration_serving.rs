@@ -55,6 +55,34 @@ fn rejects_malformed_input() {
 }
 
 #[test]
+fn server_client_bucket_hint_is_honored_over_queue_depth() {
+    // A lone request would depth-route to bucket 1; a client hint must
+    // put it on the bucket-8 engine instead (satellite of the lane-aware
+    // admission follow-up). The padded bucket-8 replay of the same input
+    // is the oracle.
+    use nimble::coordinator::InferEngine;
+    let mut direct = TapeEngine::new("mini_inception", &[1, 8]).unwrap();
+    let len = direct.example_len();
+    let out_len = direct.output_len();
+    let input = inputs(1, len, 77).pop().unwrap();
+    let mut padded = input.clone();
+    padded.resize(8 * len, 0.0);
+    let want_hinted = direct.infer_batch(8, &padded).unwrap()[..out_len].to_vec();
+    let want_plain = direct.infer_batch(1, &input).unwrap();
+
+    let server = tape_server();
+    let client = server.client();
+    let hinted = client.infer_hinted(input.clone(), 8).unwrap();
+    assert_eq!(hinted, want_hinted, "hint must route through the bucket-8 engine");
+    let plain = client.infer(input).unwrap();
+    assert_eq!(plain, want_plain, "unhinted requests keep depth routing");
+    // A hint naming no compiled bucket is ignored, not an error.
+    let ignored = client.infer_hinted(inputs(1, len, 78).pop().unwrap(), 5).unwrap();
+    assert_eq!(ignored.len(), out_len);
+    let _ = server.shutdown().unwrap();
+}
+
+#[test]
 fn repeated_requests_are_deterministic() {
     let server = tape_server();
     let len = server.example_len();

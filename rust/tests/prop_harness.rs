@@ -121,6 +121,93 @@ fn lane_pipeline_is_bit_identical_to_serial_replay() {
     });
 }
 
+/// ≥100 random cases (memory-reservation satellite): for random cells
+/// replayed with 1–8 worker caps, the shared-arena layout is
+/// bit-identical to the per-slot-buffer layout AND to the serial oracle,
+/// the packed plan respects its own happens-before conflicts, the debug
+/// canaries stay intact, and the steady-state hot path still performs
+/// zero allocations.
+#[test]
+fn arena_replay_is_bit_identical_to_per_slot_replay() {
+    use nimble::aot::memory::{
+        happens_before_conflicts, plan_respects_conflicts, plan_with_conflicts,
+    };
+    use nimble::aot::tape::ReplayTape;
+    use nimble::engine::executor::{ExecOptions, ReplayContext, SyntheticKernel};
+    use nimble::matching::MatchingAlgo;
+    use nimble::stream::rewrite::rewrite;
+
+    check_from("arena-vs-per-slot", base_seed() ^ 0x00AE_0A0A, 100, |rng| {
+        let n_nodes = rng.gen_range_inclusive(8, 64);
+        let graph_seed = rng.next_u64();
+        let batch = rng.gen_range_inclusive(1, 4);
+        let g = random_cell(&mut Pcg32::new(graph_seed), n_nodes, batch);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = ReplayTape::for_op_graph(&g, &plan, 4096);
+
+        // `plan_is_valid` on the happens-before lifetimes: the packed
+        // plan must respect the conflict set it was derived from.
+        let conflicts = happens_before_conflicts(&tape);
+        let arena_plan = plan_with_conflicts(&tape.slot_bytes(), &conflicts);
+        ensure(plan_respects_conflicts(&conflicts, &arena_plan), || {
+            format!("invalid hb arena plan (graph seed {graph_seed:#x})")
+        })?;
+        ensure(arena_plan.arena_bytes <= arena_plan.unshared_bytes(), || {
+            "packed arena larger than unshared".to_string()
+        })?;
+
+        let workers = rng.gen_range_inclusive(1, 8);
+        let input = random_input(rng, tape.input_slots()[0].1);
+        let mut packed = ReplayContext::with_options(
+            tape.clone(),
+            SyntheticKernel,
+            ExecOptions { max_workers: Some(workers), ..Default::default() },
+        );
+        let mut per_slot = ReplayContext::with_options(
+            tape.clone(),
+            SyntheticKernel,
+            ExecOptions { max_workers: Some(workers), unshared_slots: true, ..Default::default() },
+        );
+        let mut serial = ReplayContext::with_options(
+            tape.clone(),
+            SyntheticKernel,
+            ExecOptions { max_workers: Some(1), ..Default::default() },
+        );
+        packed.replay_one(&input).map_err(|e| format!("packed replay: {e}"))?;
+        per_slot.replay_one(&input).map_err(|e| format!("per-slot replay: {e}"))?;
+        serial.replay_serial(&[&input]).map_err(|e| format!("serial replay: {e}"))?;
+
+        for (name, other) in [("per-slot", &per_slot), ("serial", &serial)] {
+            let (a, b) = (packed.output(), other.output());
+            ensure(a.len() == b.len(), || format!("{name}: output length mismatch"))?;
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                ensure(x.to_bits() == y.to_bits(), || {
+                    format!(
+                        "{name}: output diverged at {i}: {x:?} vs {y:?} \
+                         (graph seed {graph_seed:#x}, {workers} workers)"
+                    )
+                })?;
+            }
+        }
+        // Same layout ⇒ every slot (even retired, partially-overwritten
+        // ones) is bit-identical between parallel and serial schedules.
+        for s in 0..tape.n_slots() {
+            let (a, b) = (packed.slot(s), serial.slot(s));
+            for (x, y) in a.iter().zip(b) {
+                ensure(x.to_bits() == y.to_bits(), || {
+                    format!("slot {s} diverged (graph seed {graph_seed:#x})")
+                })?;
+            }
+        }
+        packed.check_canaries().map_err(|e| format!("canary: {e}"))?;
+
+        // Steady state stays allocation-free on the packed arena.
+        packed.reset_alloc_events();
+        packed.replay_one(&input).map_err(|e| format!("second packed replay: {e}"))?;
+        ensure(packed.alloc_events() == 0, || "packed hot path allocated".to_string())
+    });
+}
+
 /// The batcher path agrees with the oracle when composition is pinned to
 /// single-request batches (strictly sequential blocking clients).
 #[test]
