@@ -167,6 +167,163 @@ fn lane_vs_serial() -> String {
     )
 }
 
+/// Bursty-trace scaling benchmark: the same waves of hot-bucket batches
+/// through (a) the static one-lane-per-bucket scheduler and (b) the
+/// elastic scheduler (shared work-stealing worker pool + shared arena
+/// pool, up to `MAX_LANES` lanes on the hot bucket), plus the
+/// `simulate_scaling` DES prediction over the identical arrival trace.
+/// The elastic run must match static throughput or better while keeping
+/// worker threads capped at the shared pool size and retiring its extra
+/// lanes between bursts.
+fn elastic_vs_static() -> String {
+    use nimble::aot::memory::ArenaPool;
+    use nimble::aot::tape::ReplayTape;
+    use nimble::engine::executor::SharedWorkerPool;
+    use nimble::matching::MatchingAlgo;
+    use nimble::serving::ScaleOptions;
+    use nimble::sim::{simulate_scaling, ScaleSimPolicy, ScalingTrace};
+    use nimble::stream::rewrite::rewrite;
+
+    section("elastic vs static lanes (bursty hot-bucket chain workload)");
+
+    const HOT: usize = 8;
+    const COLD: usize = 1;
+    const WAVES: usize = 4;
+    const HOT_PER_WAVE: usize = 12;
+    const COLD_PER_WAVE: usize = 2;
+    const MAX_LANES: usize = 3;
+    const WORKERS: usize = 4;
+    let idle_retire = Duration::from_millis(10);
+    let gap = Duration::from_millis(25);
+    let buckets = [COLD, HOT];
+
+    let run = |elastic: bool| -> (f64, nimble::serving::ServingReport) {
+        let scale = if elastic {
+            ScaleOptions {
+                max_lanes_per_bucket: MAX_LANES,
+                idle_retire,
+                scale_up_backlog: 2,
+            }
+        } else {
+            ScaleOptions::default() // max_lanes_per_bucket = 1: static
+        };
+        let config = LaneConfig {
+            max_wait: Duration::from_millis(1),
+            lane_cap: HOT_PER_WAVE + 2,
+            buffers_per_lane: 4,
+            scale,
+            ..Default::default()
+        };
+        let server = LaneServer::start_elastic_tape(
+            &buckets,
+            SharedWorkerPool::new(WORKERS),
+            ArenaPool::new(),
+            config,
+            |b| chain_graph(b, DEPTH),
+        )
+        .expect("scaling bench server");
+        let example_len = server.example_len();
+        let mut rng = Pcg32::new(7171);
+        let mut mk = |bucket: usize| -> Vec<f32> {
+            (0..bucket * example_len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect()
+        };
+        // Warm up both buckets once (outside the timed region).
+        for &b in &buckets {
+            server.submit_batch(b, vec![0.0; b * example_len]).unwrap().recv().unwrap().unwrap();
+        }
+        let t0 = Instant::now();
+        for wave in 0..WAVES {
+            let mut pending = Vec::new();
+            for _ in 0..HOT_PER_WAVE {
+                pending.push(server.submit_batch(HOT, mk(HOT)).unwrap());
+            }
+            for _ in 0..COLD_PER_WAVE {
+                pending.push(server.submit_batch(COLD, mk(COLD)).unwrap());
+            }
+            for rx in pending {
+                rx.recv().unwrap().unwrap();
+            }
+            if wave + 1 < WAVES {
+                std::thread::sleep(gap);
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        (wall_s, server.shutdown().expect("scaling report"))
+    };
+
+    let (static_wall_s, static_report) = run(false);
+    let (elastic_wall_s, elastic_report) = run(true);
+    let measured_speedup = static_wall_s / elastic_wall_s;
+
+    // --- DES prediction over the identical arrival trace. ---
+    let dev = GpuSpec::v100();
+    let graphs: Vec<OpGraph> = buckets.iter().map(|&b| chain_graph(b, DEPTH)).collect();
+    let costs: Vec<Vec<KernelCost>> = graphs
+        .iter()
+        .map(|g| (0..g.n_nodes()).map(|v| kernel_cost(g.node(v), &dev)).collect())
+        .collect();
+    let tapes: Vec<ReplayTape> = graphs
+        .iter()
+        .map(|g| ReplayTape::for_op_graph(g, &rewrite(g, MatchingAlgo::HopcroftKarp), 4096))
+        .collect();
+    let gap_s = gap.as_secs_f64();
+    let mut hot_arrivals = Vec::new();
+    let mut cold_arrivals = Vec::new();
+    for wave in 0..WAVES {
+        let t = wave as f64 * gap_s;
+        hot_arrivals.extend(std::iter::repeat(t).take(HOT_PER_WAVE));
+        cold_arrivals.extend(std::iter::repeat(t).take(COLD_PER_WAVE));
+    }
+    let des = simulate_scaling(
+        &[
+            ScalingTrace { tape: &tapes[0], costs: &costs[0], arrivals_s: &cold_arrivals },
+            ScalingTrace { tape: &tapes[1], costs: &costs[1], arrivals_s: &hot_arrivals },
+        ],
+        HostProfile::nimble(),
+        dev,
+        &ScaleSimPolicy {
+            max_lanes_per_bucket: MAX_LANES,
+            idle_retire_s: idle_retire.as_secs_f64(),
+            scale_up_backlog: 2,
+        },
+    );
+
+    let pass = measured_speedup >= 1.0;
+    println!(
+        "static={static_wall_s:.4}s  elastic={elastic_wall_s:.4}s  speedup={measured_speedup:.2}x  \
+         lanes spawned={} retired={}  steals={}  workers={WORKERS}  \
+         DES speedup={:.2}x peak-lanes={}  [{}]",
+        elastic_report.lanes_spawned(),
+        elastic_report.lanes_retired(),
+        elastic_report.steals(),
+        des.scaling_speedup(),
+        des.per_bucket.iter().map(|b| b.peak_lanes).max().unwrap_or(1),
+        if pass { "PASS" } else { "FAIL" }
+    );
+    println!("{}", elastic_report.render());
+
+    format!(
+        "{{\n  \"workload\": \"bursty-elastic-chain\",\n  \"buckets\": [{COLD}, {HOT}],\n  \
+         \"waves\": {WAVES},\n  \"hot_per_wave\": {HOT_PER_WAVE},\n  \
+         \"cold_per_wave\": {COLD_PER_WAVE},\n  \"gap_s\": {gap_s},\n  \
+         \"worker_pool_size\": {WORKERS},\n  \"max_lanes_per_bucket\": {MAX_LANES},\n  \
+         \"static_wall_s\": {static_wall_s:.6},\n  \"elastic_wall_s\": {elastic_wall_s:.6},\n  \
+         \"measured_speedup\": {measured_speedup:.4},\n  \
+         \"static_lanes_spawned\": {},\n  \"elastic_lanes_spawned\": {},\n  \
+         \"elastic_lanes_retired\": {},\n  \"elastic_steals\": {},\n  \
+         \"des_predicted_speedup\": {:.4},\n  \"des_predicted_peak_lanes\": {},\n  \
+         \"des_lanes_spawned\": {},\n  \"des_lanes_retired\": {},\n  \"pass\": {pass}\n}}",
+        static_report.lanes_spawned(),
+        elastic_report.lanes_spawned(),
+        elastic_report.lanes_retired(),
+        elastic_report.steals(),
+        des.scaling_speedup(),
+        des.per_bucket.iter().map(|b| b.peak_lanes).max().unwrap_or(1),
+        des.lanes_spawned(),
+        des.lanes_retired(),
+    )
+}
+
 fn sweep(label: &str, start: impl Fn() -> NimbleServer) {
     for rate in [5.0f64, 20.0] {
         let server = start();
@@ -214,7 +371,8 @@ fn lane_sweep() {
 
 fn main() {
     let lane_entry = lane_vs_serial();
-    let json = format!("[\n{lane_entry}\n]\n");
+    let scaling_entry = elastic_vs_static();
+    let json = format!("[\n{lane_entry},\n{scaling_entry}\n]\n");
     match std::fs::write("BENCH_serving.json", &json) {
         Ok(()) => println!("\nwrote BENCH_serving.json"),
         Err(e) => println!("\ncould not write BENCH_serving.json: {e}"),

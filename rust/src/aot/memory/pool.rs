@@ -5,11 +5,12 @@
 //! deployment builds many contexts — one per (lane, bucket) — and
 //! rebuilds them whenever lanes restart or scale, so the arenas are the
 //! dominant steady-state reservation. [`ArenaPool`] keeps retired
-//! backing buffers in power-of-two size classes ("sized by bucket": one
-//! class per bucket-footprint shape) and hands them back out on the next
-//! build, so a lane restart re-uses the previous lane's reservation
-//! instead of growing the heap. Acquire/release happen at context
-//! build/drop time — never on the replay hot path.
+//! backing buffers in half-stepped size classes (1.0× and 1.5× per
+//! power-of-two decade, "sized by bucket": one class per
+//! bucket-footprint shape) and hands them back out on the next build,
+//! so a lane restart — or an elastic scale-up — re-uses a previous
+//! lane's reservation instead of growing the heap. Acquire/release
+//! happen at context build/drop time — never on the replay hot path.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -81,10 +82,30 @@ impl Drop for ArenaLease {
     }
 }
 
-/// Round a request up to its size class: the next power of two, floored
-/// at 1 KiB of elements so tiny tapes share one class.
+/// Round a request up to its size class.
+///
+/// Classes step at 1.0× and 1.5× per power-of-two decade (…, 4096,
+/// 6144, 8192, 12288, 16384, …), floored at 1 KiB of elements so tiny
+/// tapes share one class. Pure power-of-two classes waste up to 2×
+/// resident bytes on odd footprints (the ROADMAP defragmentation item);
+/// the half-class step caps rounding waste at ~33% while keeping the
+/// class count logarithmic — two classes per decade — so recycling
+/// still hits across rebuilds of the same bucket shapes.
 fn class_of(elems: usize) -> usize {
-    elems.max(1024).next_power_of_two()
+    let n = elems.max(1024);
+    let pow2 = n.next_power_of_two();
+    if n == pow2 {
+        return pow2;
+    }
+    // 1.5× the decade below `pow2`; element counts here are ≥ 1024, so
+    // `pow2 / 4` is exact and the half class is 512-aligned like the
+    // arena's allocation quanta.
+    let half_class = pow2 / 2 + pow2 / 4;
+    if n <= half_class {
+        half_class
+    } else {
+        pow2
+    }
 }
 
 impl ArenaPool {
@@ -142,28 +163,65 @@ mod tests {
         let pool = ArenaPool::new();
         let lease = pool.acquire(5000);
         assert!(lease.is_pooled());
-        assert_eq!(lease.class_elems(), 8192);
-        assert!(lease.buf.capacity() >= 8192);
+        assert_eq!(lease.class_elems(), 6144, "5000 rounds to the 1.5×4096 half class");
+        assert!(lease.buf.capacity() >= 6144);
         let stats = pool.stats();
         assert_eq!((stats.acquires, stats.hits), (1, 0));
-        assert_eq!(stats.leased_bytes, 4 * 8192);
+        assert_eq!(stats.leased_bytes, 4 * 6144);
         drop(lease);
         let stats = pool.stats();
         assert_eq!(stats.leased_bytes, 0);
-        assert_eq!(stats.resident_bytes, 4 * 8192);
+        assert_eq!(stats.resident_bytes, 4 * 6144);
 
         // same class → hit; the pool does not grow
-        let lease2 = pool.acquire(8192);
+        let lease2 = pool.acquire(6000);
+        assert_eq!(lease2.class_elems(), 6144);
         let stats = pool.stats();
         assert_eq!((stats.acquires, stats.hits), (2, 1));
-        assert_eq!(stats.high_water_bytes, 4 * 8192);
+        assert_eq!(stats.high_water_bytes, 4 * 6144);
         drop(lease2);
 
         // different class → miss
         let lease3 = pool.acquire(100_000);
-        assert_eq!(lease3.class_elems(), 131_072);
+        assert_eq!(lease3.class_elems(), 131_072, "past 1.5×65536 rounds to the next pow2");
         let stats = pool.stats();
         assert_eq!((stats.acquires, stats.hits), (3, 1));
+    }
+
+    #[test]
+    fn half_classes_step_at_one_and_one_point_five_per_decade() {
+        assert_eq!(class_of(1), 1024, "floor class");
+        assert_eq!(class_of(1024), 1024, "exact pow2 keeps its class");
+        assert_eq!(class_of(1025), 1536);
+        assert_eq!(class_of(1536), 1536, "exact half class keeps its class");
+        assert_eq!(class_of(1537), 2048);
+        assert_eq!(class_of(4096), 4096);
+        assert_eq!(class_of(5000), 6144);
+        assert_eq!(class_of(6144), 6144);
+        assert_eq!(class_of(6145), 8192);
+    }
+
+    /// Regression (pow2-waste bugfix): an odd-sized footprint must pin
+    /// pool resident bytes to its HALF class, not the next power of two
+    /// — the pow2 rounding held up to 2× the bytes resident.
+    #[test]
+    fn odd_footprint_resident_bytes_are_pinned_to_the_half_class() {
+        let pool = ArenaPool::new();
+        drop(pool.acquire(5000));
+        let stats = pool.stats();
+        assert_eq!(stats.resident_bytes, 4 * 6144, "resident bytes pinned to the half class");
+        assert!(
+            stats.resident_bytes < 4 * 8192,
+            "half class must beat the old pow2 class ({} !< {})",
+            stats.resident_bytes,
+            4 * 8192
+        );
+        // Same odd footprint re-acquired → recycled, and the counters
+        // reflect the new class granularity.
+        drop(pool.acquire(5000));
+        let stats = pool.stats();
+        assert_eq!((stats.acquires, stats.hits), (2, 1));
+        assert_eq!(stats.high_water_bytes, 4 * 6144, "recycling kept the pool flat");
     }
 
     #[test]

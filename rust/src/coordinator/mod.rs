@@ -83,6 +83,16 @@ pub trait InferEngine {
     fn reserved_bytes(&self, _bucket: usize) -> Option<u64> {
         None
     }
+
+    /// Cross-context worker steals this engine's replay contexts have
+    /// received from a shared work-stealing pool
+    /// ([`SharedWorkerPool`](crate::engine::executor::SharedWorkerPool)),
+    /// when known — surfaced in the lane scheduler's per-lane stats
+    /// (`LaneStat::steals`). `None` when the engine does not lease from
+    /// a shared pool.
+    fn steals(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// A built engine: one task schedule + prepared replay context + eager

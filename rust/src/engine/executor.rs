@@ -27,7 +27,13 @@
 //!   would block on an unfired event parks (releasing its worker) and
 //!   is re-queued by whichever worker records the event, so a serving
 //!   deployment whose lanes multiply total stream count past the
-//!   physical cores does not drown in idle threads, and
+//!   physical cores does not drown in idle threads — or, with
+//!   [`ExecOptions::shared_pool`], a lease on ONE process-wide
+//!   **work-stealing pool** ([`SharedWorkerPool`]) whose workers serve
+//!   *every* leased context: a parked stream releases its worker back
+//!   to the global pool (not to its own context), so elastic serving
+//!   deployments can scale lanes × streams far past the cores while
+//!   total worker threads stay capped at the pool size, and
 //! * per-worker **scratch argument buffers** sized to the tape's widest
 //!   task, reused across tasks.
 //!
@@ -334,12 +340,347 @@ struct CoopShared {
     done: Condvar,
 }
 
+/// One runnable stream of one leased context in the global queue.
+type RunEntry = (Arc<ReplayJob>, u32);
+
+/// Per-context coordination state for a [`SharedWorkerPool`] lease. One
+/// job lives for the whole context lifetime and is re-armed per replay.
+///
+/// All quiescence bookkeeping is **job-local** (`running`/`queued`/
+/// `active` below), never pool-global: a worker being "reclaimed" by the
+/// pool to serve another context does not change this job's counters, so
+/// the deadlock detector cannot mistake a temporarily worker-less
+/// context for a stuck one (the scale-down race a pool-global
+/// `busy == 0 && runnable.is_empty()` check would trip over).
+struct ReplayJob {
+    /// Pool-unique id (steal attribution + queue purging on cancel).
+    id: u64,
+    inner: Arc<ReplayInner>,
+    state: Mutex<JobState>,
+    /// Signalled whenever the job may have gone quiescent
+    /// (`running == 0 && queued == 0`).
+    done: Condvar,
+    /// Segments of this job run by a worker whose previous segment
+    /// belonged to a *different* job — the work actually stolen across
+    /// contexts, surfaced as `LaneStat::steals` by the lane scheduler.
+    steals: AtomicU64,
+}
+
+struct JobState {
+    /// Per-stream resume position (index into `tape.stream_ops`).
+    cursors: Vec<u32>,
+    /// Per-event list of streams parked on it.
+    parked: Vec<Vec<u32>>,
+    /// Streams not yet finished this replay.
+    active: usize,
+    /// Workers currently executing a segment of THIS job.
+    running: usize,
+    /// Entries of this job sitting in (or being claimed from) the
+    /// pool's global runnable queue.
+    queued: usize,
+    /// Set by [`cancel_job`]: drop pending work, suppress the deadlock
+    /// detector, never run another segment.
+    canceled: bool,
+    error: Option<String>,
+}
+
+struct SharedPoolState {
+    shutdown: bool,
+    /// Global FIFO of runnable streams across every leased context —
+    /// the single queue all workers steal from.
+    runnable: std::collections::VecDeque<RunEntry>,
+}
+
+struct PoolCore {
+    state: Mutex<SharedPoolState>,
+    /// Signalled when `runnable` gains entries (or on shutdown).
+    work: Condvar,
+    next_job_id: AtomicU64,
+    /// Total cross-context steals (see [`ReplayJob::steals`]).
+    steals: AtomicU64,
+    n_workers: usize,
+}
+
+/// Joins the pool's workers when the **last** [`SharedWorkerPool`]
+/// handle drops. Workers hold only `Arc<PoolCore>`, so they never keep
+/// the pool alive by themselves.
+struct PoolWorkersGuard {
+    core: Arc<PoolCore>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for PoolWorkersGuard {
+    fn drop(&mut self) {
+        {
+            let mut st = self.core.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.core.work.notify_all();
+        for handle in self.workers.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// A process-wide **work-stealing worker pool** shared by any number of
+/// replay contexts ([`ExecOptions::shared_pool`]).
+///
+/// Where [`ExecOptions::max_workers`] caps threads *per context* (an
+/// elastic serving deployment still pays cap × contexts threads), a
+/// `SharedWorkerPool` owns exactly `n_workers` threads for the whole
+/// process: contexts **lease** workers per replay by posting their
+/// runnable streams to one global queue, and every worker steals
+/// whichever context's stream is ready next. A stream that parks on an
+/// unfired event releases its worker back to the *global* pool, so
+/// lanes × streams can exceed the cores without oversubscription —
+/// total live worker threads never exceed the pool size, however many
+/// contexts lease from it.
+///
+/// Handles are cheap clones of one pool; workers shut down when the
+/// last handle (including those held by leased contexts) drops.
+#[derive(Clone)]
+pub struct SharedWorkerPool {
+    core: Arc<PoolCore>,
+    _guard: Arc<PoolWorkersGuard>,
+}
+
+impl SharedWorkerPool {
+    /// Spawn a pool of `n_workers` stealing workers (`n_workers` ≥ 1).
+    pub fn new(n_workers: usize) -> SharedWorkerPool {
+        assert!(n_workers >= 1, "shared worker pool needs at least one worker");
+        let core = Arc::new(PoolCore {
+            state: Mutex::new(SharedPoolState {
+                shutdown: false,
+                runnable: std::collections::VecDeque::new(),
+            }),
+            work: Condvar::new(),
+            next_job_id: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            n_workers,
+        });
+        let workers = (0..n_workers)
+            .map(|w| {
+                let core = Arc::clone(&core);
+                std::thread::Builder::new()
+                    .name(format!("nimble-steal-w{w}"))
+                    .spawn(move || stealing_worker_loop(core))
+                    .expect("spawning shared pool worker")
+            })
+            .collect();
+        SharedWorkerPool {
+            _guard: Arc::new(PoolWorkersGuard {
+                core: Arc::clone(&core),
+                workers: Mutex::new(workers),
+            }),
+            core,
+        }
+    }
+
+    /// The fixed worker-thread count — the hard cap on concurrently
+    /// leased workers across ALL contexts.
+    pub fn n_workers(&self) -> usize {
+        self.core.n_workers
+    }
+
+    /// Total cross-context steals since the pool started: segments run
+    /// by a worker whose previous segment belonged to a different
+    /// context.
+    pub fn total_steals(&self) -> u64 {
+        self.core.steals.load(Ordering::Relaxed)
+    }
+
+    /// Streams currently waiting in the global runnable queue (tests,
+    /// diagnostics).
+    pub fn queued_streams(&self) -> usize {
+        self.core.state.lock().unwrap().runnable.len()
+    }
+}
+
+/// Signal `done` if the job has gone quiescent, first converting
+/// genuine stuck-ness into an error. Stuck-ness is decided from
+/// job-local counters ONLY (see [`ReplayJob`] docs): no segment of this
+/// job is running and none is queued — so no future record can wake the
+/// `active` parked streams. A canceled job is quiescent-by-request, not
+/// deadlocked.
+fn signal_if_quiescent(job: &ReplayJob, js: &mut JobState) {
+    if js.running == 0 && js.queued == 0 {
+        if js.active > 0 && !js.canceled && js.error.is_none() {
+            js.error = Some(format!(
+                "{} stream(s) parked with nothing runnable: unsafe sync plan or failed worker",
+                js.active
+            ));
+        }
+        job.done.notify_all();
+    }
+}
+
+/// Cancel a leased context's job: purge its queued entries from the
+/// global queue (a retired lane must not occupy pool slots), then wait
+/// for any in-flight segments to finish so the arena is quiescent when
+/// the context's memory is released. Safe to call with no replay in
+/// flight (the common drop path) — it is then a no-op.
+fn cancel_job(core: &PoolCore, job: &Arc<ReplayJob>) {
+    {
+        let mut js = job.state.lock().unwrap();
+        js.canceled = true;
+    }
+    let mut purged = 0usize;
+    {
+        let mut st = core.state.lock().unwrap();
+        st.runnable.retain(|(j, _)| {
+            let keep = j.id != job.id;
+            if !keep {
+                purged += 1;
+            }
+            keep
+        });
+    }
+    let mut js = job.state.lock().unwrap();
+    js.queued -= purged;
+    // Entries claimed (popped) but not yet checked in still count in
+    // `queued`/`running`; the claimer observes `canceled` and signals.
+    while js.running > 0 || js.queued > 0 {
+        js = job.done.wait(js).unwrap();
+    }
+}
+
+/// Run stream `stream` of a leased job from `*pos` until it finishes or
+/// parks. Identical discipline to [`coop_run_segment`] except that
+/// woken streams go to the POOL's global queue (any worker may resume
+/// them) and parking/waking race-freedom hangs off the JOB lock: the
+/// parker re-checks the event flag under `job.state`, and the recorder
+/// drains `parked` under the same lock after its SeqCst flag store, so
+/// a record between the lock-free check and the park is never missed.
+fn shared_run_segment<'a>(
+    inner: &'a ReplayInner,
+    core: &PoolCore,
+    job: &Arc<ReplayJob>,
+    stream: usize,
+    pos: &mut usize,
+    scratch: &mut Vec<&'a [f32]>,
+) -> Segment {
+    let ops = inner.tape.stream_ops(stream);
+    while *pos < ops.len() {
+        let op_idx = ops[*pos] as usize;
+        let op = inner.tape.op(op_idx);
+        for &e in inner.tape.waits(op) {
+            if !inner.events.is_set(e as usize) {
+                let mut js = job.state.lock().unwrap();
+                if !inner.events.is_set(e as usize) {
+                    js.cursors[stream] = *pos as u32;
+                    js.parked[e as usize].push(stream as u32);
+                    return Segment::Parked;
+                }
+                // The event fired between the two checks; fall through.
+            }
+        }
+        inner.run_op(op_idx, op, scratch, None);
+        for &e in inner.tape.records(op) {
+            inner.events.record(e as usize);
+            let woken = {
+                let mut js = job.state.lock().unwrap();
+                let woken = std::mem::take(&mut js.parked[e as usize]);
+                // Count them queued BEFORE they reach the global queue,
+                // so a concurrent quiescence check cannot miss them.
+                js.queued += woken.len();
+                woken
+            };
+            if !woken.is_empty() {
+                let mut st = core.state.lock().unwrap();
+                for s in woken {
+                    st.runnable.push_back((Arc::clone(job), s));
+                }
+                drop(st);
+                core.work.notify_all();
+            }
+        }
+        *pos += 1;
+    }
+    Segment::Finished
+}
+
+fn stealing_worker_loop(core: Arc<PoolCore>) {
+    // One scratch allocation per worker, recycled across contexts: the
+    // Vec is always CLEARED before its borrow lifetime is widened, so
+    // only the raw allocation survives a context switch, never a
+    // reference (see the transmute safety comment below).
+    let mut store: Vec<&'static [f32]> = Vec::new();
+    let mut last_job = u64::MAX;
+    loop {
+        let (job, stream) = {
+            let mut st = core.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(entry) = st.runnable.pop_front() {
+                    break entry;
+                }
+                st = core.work.wait(st).unwrap();
+            }
+        };
+        let stream = stream as usize;
+        // Claim the entry on its job; a canceled job's work is dropped.
+        let mut pos = {
+            let mut js = job.state.lock().unwrap();
+            js.queued -= 1;
+            if js.canceled {
+                signal_if_quiescent(&job, &mut js);
+                continue;
+            }
+            js.running += 1;
+            js.cursors[stream] as usize
+        };
+        if job.id != last_job {
+            if last_job != u64::MAX {
+                core.steals.fetch_add(1, Ordering::Relaxed);
+                job.steals.fetch_add(1, Ordering::Relaxed);
+            }
+            last_job = job.id;
+        }
+        let inner = Arc::clone(&job.inner);
+        // `store` moves into the segment's shorter borrow lifetime
+        // (covariance); presizing here keeps the per-task path growth-
+        // free for whatever tape this context runs.
+        let mut scratch: Vec<&[f32]> = store;
+        if scratch.capacity() < inner.tape.max_args() {
+            scratch.reserve(inner.tape.max_args());
+        }
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            shared_run_segment(&inner, &core, &job, stream, &mut pos, &mut scratch)
+        }));
+        // Drop arena borrows before reporting in (see worker_loop).
+        scratch.clear();
+        // Safety: `scratch` is empty, so the Vec carries no references —
+        // only its raw allocation — and widening the lifetime parameter
+        // of a reference type it no longer contains is sound.
+        store = unsafe { std::mem::transmute::<Vec<&[f32]>, Vec<&'static [f32]>>(scratch) };
+        let mut js = job.state.lock().unwrap();
+        match outcome {
+            Ok(Segment::Finished) => js.active -= 1,
+            // Cursor and park list already updated under the job lock.
+            Ok(Segment::Parked) => {}
+            Err(payload) => {
+                let msg = panic_message(payload);
+                js.error.get_or_insert(format!("stream {stream} worker panicked: {msg}"));
+                // The stream will not run again this replay.
+                js.active -= 1;
+            }
+        }
+        js.running -= 1;
+        signal_if_quiescent(&job, &mut js);
+    }
+}
+
 /// Which worker-pool flavour drives a context.
 enum PoolMode {
     /// One persistent worker per stream; waits block in the event table.
     PerStream(Arc<PoolShared>),
     /// `max_workers` shared workers over all streams; waits park.
     Shared(Arc<CoopShared>),
+    /// A lease on a process-wide work-stealing pool; this context owns
+    /// no threads at all.
+    Leased { job: Arc<ReplayJob>, pool: SharedWorkerPool },
 }
 
 /// Everything the workers need, fixed for the context's lifetime.
@@ -663,6 +1004,12 @@ pub struct ExecOptions {
     /// drop) instead of allocating a fresh one — serving lanes share one
     /// pool so rebuilt contexts recycle bucket-sized reservations.
     pub arena_pool: Option<ArenaPool>,
+    /// Lease workers from this process-wide work-stealing pool instead
+    /// of spawning any threads for this context ([`SharedWorkerPool`]).
+    /// Takes precedence over `max_workers` — the pool size is the only
+    /// thread cap. The elastic lane scheduler backs every lane's
+    /// contexts with one such pool.
+    pub shared_pool: Option<SharedWorkerPool>,
 }
 
 impl Default for ExecOptions {
@@ -673,6 +1020,7 @@ impl Default for ExecOptions {
             max_workers: None,
             unshared_slots: false,
             arena_pool: None,
+            shared_pool: None,
         }
     }
 }
@@ -778,6 +1126,30 @@ impl ReplayContext {
             live_bytes: AtomicU64::new(0),
             peak_bytes: AtomicU64::new(0),
         });
+        if let Some(pool) = opts.shared_pool {
+            let job = Arc::new(ReplayJob {
+                id: pool.core.next_job_id.fetch_add(1, Ordering::Relaxed),
+                inner: Arc::clone(&inner),
+                state: Mutex::new(JobState {
+                    cursors: vec![0u32; n_streams],
+                    parked: (0..n_events).map(|_| Vec::with_capacity(n_streams)).collect(),
+                    active: 0,
+                    running: 0,
+                    queued: 0,
+                    canceled: false,
+                    error: None,
+                }),
+                done: Condvar::new(),
+                steals: AtomicU64::new(0),
+            });
+            return ReplayContext {
+                inner,
+                mode: PoolMode::Leased { job, pool },
+                workers: Vec::new(),
+                timeout,
+                poisoned: false,
+            };
+        }
         let n_workers = opts.max_workers.unwrap_or(n_streams).clamp(1, n_streams.max(1));
         if n_workers >= n_streams {
             let shared = Arc::new(PoolShared {
@@ -860,6 +1232,11 @@ impl ReplayContext {
                 let shared = Arc::clone(shared);
                 self.replay_shared_pool(&shared)
             }
+            PoolMode::Leased { job, pool } => {
+                let job = Arc::clone(job);
+                let pool = pool.clone();
+                self.replay_leased(&job, &pool)
+            }
         };
         // Debug-mode overlap-corruption check: a task that wrote outside
         // its slot view trips an arena canary.
@@ -936,6 +1313,62 @@ impl ReplayContext {
             st = g;
         }
         match st.error.take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Release + join for a lease on the process-wide work-stealing
+    /// pool: arm the job (all streams runnable at cursor 0), post every
+    /// stream to the pool's global queue, and wait until the job — not
+    /// the pool — is quiescent with either every stream finished or an
+    /// error recorded. Quiescence is judged from job-local counters
+    /// only, so workers being stolen away to other contexts mid-replay
+    /// can never read as a deadlock (see [`ReplayJob`]).
+    fn replay_leased(
+        &mut self,
+        job: &Arc<ReplayJob>,
+        pool: &SharedWorkerPool,
+    ) -> Result<(), String> {
+        let n_streams = self.inner.tape.n_streams();
+        {
+            let mut js = job.state.lock().unwrap();
+            js.error = None;
+            js.active = n_streams;
+            js.running = 0;
+            js.queued = n_streams;
+            for p in &mut js.parked {
+                p.clear();
+            }
+            for c in &mut js.cursors {
+                *c = 0;
+            }
+        }
+        {
+            let mut st = pool.core.state.lock().unwrap();
+            for s in 0..n_streams {
+                st.runnable.push_back((Arc::clone(job), s as u32));
+            }
+        }
+        pool.core.work.notify_all();
+
+        let deadline = Instant::now() + self.timeout + self.timeout / 2;
+        let mut js = job.state.lock().unwrap();
+        loop {
+            let quiescent = js.running == 0 && js.queued == 0;
+            if quiescent && (js.active == 0 || js.error.is_some()) {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                drop(js);
+                self.poisoned = true;
+                return Err("replay join timed out; context poisoned".into());
+            }
+            let (g, _timeout) = job.done.wait_timeout(js, deadline - now).unwrap();
+            js = g;
+        }
+        match js.error.take() {
             Some(e) => Err(e),
             None => Ok(()),
         }
@@ -1133,9 +1566,21 @@ impl ReplayContext {
         self.inner.tape.n_streams()
     }
 
-    /// Pool threads actually spawned (≤ streams in work-sharing mode).
+    /// Pool threads actually spawned by THIS context (≤ streams in
+    /// work-sharing mode; 0 on a [`SharedWorkerPool`] lease, which owns
+    /// no threads at all).
     pub fn n_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Cross-context steals this context received from its shared pool:
+    /// segments run by a worker arriving from a different context
+    /// (always 0 outside [`ExecOptions::shared_pool`] mode).
+    pub fn steal_count(&self) -> u64 {
+        match &self.mode {
+            PoolMode::Leased { job, .. } => job.steals.load(Ordering::Relaxed),
+            _ => 0,
+        }
     }
 }
 
@@ -1155,6 +1600,12 @@ impl Drop for ReplayContext {
                     st.shutdown = true;
                 }
                 shared.work.notify_all();
+            }
+            PoolMode::Leased { job, pool } => {
+                // A retiring context must not leave queued entries
+                // occupying the global pool, and its arena must be
+                // quiescent before the memory is released.
+                cancel_job(&pool.core, job);
             }
         }
         for handle in self.workers.drain(..) {
@@ -1452,5 +1903,146 @@ mod tests {
         ctx.replay_serial(&[&input]).unwrap();
         let serial_peak = ctx.peak_live_bytes();
         assert!(serial_peak >= max_slot && serial_peak <= ctx.reserved_bytes());
+    }
+
+    fn leased(tape: ReplayTape, pool: &SharedWorkerPool) -> ReplayContext {
+        ReplayContext::with_options(
+            tape,
+            SyntheticKernel,
+            ExecOptions { shared_pool: Some(pool.clone()), ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn one_stealing_worker_serves_two_contexts_bit_identically() {
+        // A single shared worker must drive two multi-stream contexts to
+        // completion (parked streams resume via the global queue), the
+        // results must match the serial oracle bitwise, and alternating
+        // replays must show up in the steal counters.
+        let tape = mini_tape();
+        assert!(tape.n_streams() >= 2, "test premise: multi-stream tape");
+        let input = input_for(&tape, 21);
+        let mut ser = ReplayContext::new(tape.clone(), SyntheticKernel);
+        ser.replay_serial(&[&input]).unwrap();
+
+        let pool = SharedWorkerPool::new(1);
+        assert_eq!(pool.n_workers(), 1);
+        let mut a = leased(tape.clone(), &pool);
+        let mut b = leased(tape.clone(), &pool);
+        assert_eq!(a.n_workers(), 0, "a lease owns no threads");
+        for _ in 0..3 {
+            a.replay_one(&input).unwrap();
+            b.replay_one(&input).unwrap();
+        }
+        for ctx in [&a, &b] {
+            for s in 0..tape.n_slots() {
+                let (x, y) = (ctx.slot(s), ser.slot(s));
+                assert_eq!(x.len(), y.len(), "slot {s} length");
+                for (p, q) in x.iter().zip(y) {
+                    assert_eq!(p.to_bits(), q.to_bits(), "slot {s} diverged");
+                }
+            }
+        }
+        // The lone worker alternated jobs ≥ once per b-replay.
+        assert!(pool.total_steals() >= 3, "steals: {}", pool.total_steals());
+        assert_eq!(a.steal_count() + b.steal_count(), pool.total_steals());
+        assert_eq!(pool.queued_streams(), 0, "quiescent pool holds no queued streams");
+    }
+
+    #[test]
+    fn leased_contexts_replay_concurrently_from_many_threads() {
+        let tape = mini_tape();
+        let input = input_for(&tape, 22);
+        let mut ser = ReplayContext::new(tape.clone(), SyntheticKernel);
+        ser.replay_serial(&[&input]).unwrap();
+        let expect: Vec<f32> = ser.output().to_vec();
+
+        let pool = SharedWorkerPool::new(2);
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let mut ctx = leased(tape.clone(), &pool);
+                let input = input.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..4 {
+                        ctx.replay_one(&input).unwrap();
+                    }
+                    ctx.output().to_vec()
+                })
+            })
+            .collect();
+        for h in handles {
+            let got = h.join().expect("leased replay thread");
+            assert_eq!(got, expect, "concurrent leases must not corrupt each other");
+        }
+    }
+
+    #[test]
+    fn leased_steady_state_is_allocation_free() {
+        let tape = mini_tape();
+        let input = input_for(&tape, 23);
+        let pool = SharedWorkerPool::new(2);
+        let mut ctx = leased(tape, &pool);
+        ctx.replay_one(&input).unwrap(); // warm-up
+        ctx.reset_alloc_events();
+        for _ in 0..5 {
+            ctx.replay_one(&input).unwrap();
+        }
+        assert_eq!(ctx.alloc_events(), 0, "stealing hot path must not allocate");
+    }
+
+    #[test]
+    fn retiring_a_leased_context_does_not_deadlock_survivors() {
+        // The scale-down regression: dropping one lease (a retired
+        // lane's context) while a sibling is mid-replay-queue must purge
+        // only the retiree's work — the survivor completes without a
+        // spurious "parked with nothing runnable" error, and the retire
+        // itself does not hang.
+        let tape = mini_tape();
+        let input = input_for(&tape, 24);
+        let pool = SharedWorkerPool::new(1);
+        let survivor_tape = tape.clone();
+        let survivor_pool = pool.clone();
+        let survivor_input = input.clone();
+        let survivor = std::thread::spawn(move || {
+            let mut ctx = leased(survivor_tape, &survivor_pool);
+            let mut outs = Vec::new();
+            for _ in 0..8 {
+                ctx.replay_one(&survivor_input).unwrap();
+                outs.push(ctx.output().to_vec());
+            }
+            outs
+        });
+        // Churn: build, replay once, and retire leases while the
+        // survivor replays on the same lone worker.
+        for _ in 0..4 {
+            let mut ctx = leased(tape.clone(), &pool);
+            ctx.replay_one(&input).unwrap();
+            drop(ctx);
+            let never_replayed = leased(tape.clone(), &pool);
+            drop(never_replayed); // cancel with no replay in flight
+        }
+        let outs = survivor.join().expect("survivor thread");
+        let mut ser = ReplayContext::new(tape, SyntheticKernel);
+        ser.replay_serial(&[&input]).unwrap();
+        for out in outs {
+            assert_eq!(out, ser.output(), "survivor output diverged under churn");
+        }
+        assert_eq!(pool.queued_streams(), 0);
+    }
+
+    #[test]
+    fn stealing_pool_on_random_layered_dags_matches_serial() {
+        let pool = SharedWorkerPool::new(2);
+        let mut rng = crate::util::Pcg32::new(0xFEED);
+        for _ in 0..5 {
+            let g = crate::graph::gen::layered_dag(&mut rng, 3, 4, 2);
+            let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+            let tape = ReplayTape::for_dag(&g, &plan);
+            let mut ser = ReplayContext::new(tape.clone(), SyntheticKernel);
+            ser.replay_serial(&[]).unwrap();
+            let mut par = leased(tape, &pool);
+            par.replay(&[]).unwrap();
+            assert_eq!(par.output(), ser.output());
+        }
     }
 }

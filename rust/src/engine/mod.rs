@@ -25,4 +25,6 @@ pub mod executor;
 
 #[cfg(feature = "xla")]
 pub use eager::EagerEngine;
-pub use executor::{EventTable, ExecOptions, ReplayContext, SyntheticKernel, TapeKernel};
+pub use executor::{
+    EventTable, ExecOptions, ReplayContext, SharedWorkerPool, SyntheticKernel, TapeKernel,
+};

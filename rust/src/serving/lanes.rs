@@ -32,6 +32,20 @@
 //!   thread* (PJRT state is not `Send`) restricted to its bucket, and
 //!   drains its job queue FIFO — same-bucket batches pipeline in order,
 //!   different buckets overlap end-to-end.
+//! * Lanes are **elastic** ([`ScaleOptions`]): the dispatcher tracks
+//!   per-bucket admission pressure (staged + queued batches, hinted
+//!   arrivals) and spawns extra lanes for a saturated bucket up to
+//!   `max_lanes_per_bucket`, retiring lanes idle past `idle_retire`
+//!   (the seed lane per bucket never retires). Elastic deployments back
+//!   every lane with one shared
+//!   [`SharedWorkerPool`](crate::engine::executor::SharedWorkerPool)
+//!   and one [`ArenaPool`](crate::aot::memory::ArenaPool)
+//!   ([`LaneServer::start_elastic_tape`]), so scale-ups re-draw retired
+//!   reservations instead of growing the heap and total replay threads
+//!   stay capped however many lanes are live. Batches on replica lanes
+//!   of one bucket run deterministic engine copies, so outputs stay
+//!   bit-identical to the static single-lane scheduler (asserted by the
+//!   scaling property in `tests/prop_harness.rs`).
 //!
 //! Shutdown closes the admission queue first and then drains everything
 //! already admitted: a request whose `push` succeeded is always
@@ -42,6 +56,7 @@
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -56,6 +71,45 @@ use crate::util::stats::Summary;
 /// How often the dispatcher re-checks staged batches / drain progress
 /// when it cannot block on the admission queue.
 const POLL: Duration = Duration::from_micros(500);
+
+/// How often the dispatcher runs the scaling pass (reap + retire) while
+/// elastic lanes exist. Static deployments (`max_lanes_per_bucket` = 1,
+/// nothing retiring) never pay this wakeup.
+const SCALE_POLL: Duration = Duration::from_millis(5);
+
+/// Elastic scaling policy ([`LaneConfig::scale`]).
+///
+/// The dispatcher tracks per-bucket admission pressure — staged + queued
+/// batches across the bucket's lanes, plus hinted-bucket arrivals since
+/// the last scaling pass — and spawns an extra lane for a bucket whose
+/// least-loaded lane is saturated while that pressure is at
+/// `scale_up_backlog` or more. A lane with no in-flight work at all —
+/// nothing staged, queued, or executing — for `idle_retire` is retired
+/// and its engine dropped, returning its arena to the shared
+/// [`ArenaPool`](crate::aot::memory::ArenaPool); the bucket's seed lane
+/// never retires, so every compiled bucket always has a live engine.
+#[derive(Debug, Clone)]
+pub struct ScaleOptions {
+    /// Max lanes (thread + engine) per batch bucket. 1 = static lanes,
+    /// exactly the pre-elastic scheduler.
+    pub max_lanes_per_bucket: usize,
+    /// Retire an elastic lane once it has been idle this long.
+    pub idle_retire: Duration,
+    /// Minimum per-bucket pressure (staged + queued batches + hinted
+    /// arrivals since the last pass) before a saturated bucket spawns
+    /// another lane.
+    pub scale_up_backlog: usize,
+}
+
+impl Default for ScaleOptions {
+    fn default() -> Self {
+        ScaleOptions {
+            max_lanes_per_bucket: 1,
+            idle_retire: Duration::from_millis(50),
+            scale_up_backlog: 2,
+        }
+    }
+}
 
 /// Lane-scheduler configuration.
 #[derive(Debug, Clone)]
@@ -72,6 +126,8 @@ pub struct LaneConfig {
     /// The dispatcher pauses admission once this many requests wait in
     /// the batcher — the global backpressure valve.
     pub backlog_cap: usize,
+    /// Elastic lane scaling (defaults to static single-lane buckets).
+    pub scale: ScaleOptions,
 }
 
 impl Default for LaneConfig {
@@ -82,6 +138,7 @@ impl Default for LaneConfig {
             lane_cap: 4,
             buffers_per_lane: 6,
             backlog_cap: 256,
+            scale: ScaleOptions::default(),
         }
     }
 }
@@ -112,7 +169,7 @@ struct LaneJob {
     routed: Instant,
 }
 
-/// Dispatcher-side view of one lane.
+/// Dispatcher-side view of one lane instance.
 struct Lane {
     bucket: usize,
     jobs: Bounded<LaneJob>,
@@ -123,6 +180,115 @@ struct Lane {
     /// Padded-buffer would-allocate events (buffer growth during form).
     alloc_events: u64,
     join: Option<JoinHandle<(LaneStat, Vec<f64>, usize)>>,
+    /// Jobs the dispatcher has routed to this lane (staged or pushed).
+    routed_jobs: u64,
+    /// Jobs the lane thread has finished, published after each batch —
+    /// `routed_jobs - done_jobs` is the true in-flight count, including
+    /// the batch the engine is executing right now (a queue-only view
+    /// would let the scaling pass retire a lane mid-batch).
+    done_jobs: Arc<AtomicU64>,
+    /// `done_jobs` value last observed by the scaling pass.
+    seen_done: u64,
+    /// Last routing or observed completion (idle-retire clock).
+    last_active: Instant,
+    /// Elastic lanes may retire; the per-bucket seed lane never does.
+    elastic: bool,
+}
+
+impl Lane {
+    /// Batches routed to this lane and not yet completed: staged +
+    /// queued + the one the engine is executing. The routing and
+    /// pressure load metric, and the scaling pass's busy test.
+    fn in_flight(&self) -> usize {
+        self.routed_jobs.saturating_sub(self.done_jobs.load(Ordering::Relaxed)) as usize
+    }
+
+    /// Route one job to this lane (both the batcher-formed and the
+    /// pre-formed-batch path go through here so the in-flight and
+    /// idleness accounting cannot drift).
+    fn stage(&mut self, job: LaneJob) {
+        self.routed_jobs += 1;
+        self.last_active = Instant::now();
+        self.staged.push_back(job);
+    }
+}
+
+/// All lanes — live, and draining toward retirement — of one batch
+/// bucket, plus the folded stats of lanes already gone.
+struct LaneGroup {
+    bucket: usize,
+    /// Live lanes; `lanes[0]` is the seed lane and never retires.
+    lanes: Vec<Lane>,
+    /// Retired/dead lanes whose job queues are closed; joined (and their
+    /// stats folded) once their threads finish draining.
+    retiring: Vec<Lane>,
+    /// Lanes ever spawned for this bucket (seed included).
+    spawned: usize,
+    /// Elastic lanes retired before shutdown.
+    retired: usize,
+    /// Hinted arrivals for this bucket since the last scaling pass (one
+    /// of the admission-pressure inputs).
+    hinted_since_scale: usize,
+    /// Folded runtime counters of joined lanes.
+    stat: LaneStat,
+    latencies: Vec<f64>,
+    fill_sum: usize,
+    /// Padded buffers recovered from retired lanes, re-seeded into the
+    /// next spawned lane so scale-up re-uses warm allocations.
+    spare_buffers: Vec<Vec<f32>>,
+}
+
+impl LaneGroup {
+    fn new(bucket: usize, seed: Lane) -> LaneGroup {
+        LaneGroup {
+            bucket,
+            lanes: vec![seed],
+            retiring: Vec::new(),
+            spawned: 1,
+            retired: 0,
+            hinted_since_scale: 0,
+            stat: LaneStat::empty(bucket),
+            latencies: Vec::new(),
+            fill_sum: 0,
+            spare_buffers: Vec::new(),
+        }
+    }
+
+    /// Index of the least-loaded live lane (ties go to the seed end, so
+    /// low traffic concentrates on the seed and elastic lanes go idle).
+    fn pick_lane(&self) -> usize {
+        let mut best = 0;
+        let mut best_load = usize::MAX;
+        for (i, lane) in self.lanes.iter().enumerate() {
+            let load = lane.in_flight();
+            if load < best_load {
+                best_load = load;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Per-bucket admission pressure: batches in flight across live
+    /// lanes plus hinted arrivals since the last scaling pass.
+    fn pressure(&self) -> usize {
+        self.lanes.iter().map(Lane::in_flight).sum::<usize>() + self.hinted_since_scale
+    }
+
+    /// Join a finished lane thread and fold its counters in.
+    fn fold_joined(&mut self, mut lane: Lane) {
+        // Recover pooled padded buffers for the next spawn.
+        while let Some(buf) = lane.free.try_pop() {
+            self.spare_buffers.push(buf);
+        }
+        self.stat.alloc_events += lane.alloc_events;
+        let Some(handle) = lane.join.take() else { return };
+        if let Ok((stat, latencies, fill)) = handle.join() {
+            self.stat.absorb(&stat);
+            self.latencies.extend(latencies);
+            self.fill_sum += fill;
+        }
+    }
 }
 
 fn fail_job(job: LaneJob, msg: &str) {
@@ -143,8 +309,14 @@ fn flush_staged(lane: &mut Lane) {
                 lane.staged.push_front(job);
                 break;
             }
-            // Only reachable during teardown races; answer explicitly.
-            Err(PushError::Closed(job)) => fail_job(job, "server stopped"),
+            // The lane died (its engine build failed closed the queue):
+            // keep the job staged — the scaling pass re-routes a dead
+            // lane's stage to the group's surviving lanes rather than
+            // failing requests the seed lane could serve.
+            Err(PushError::Closed(job)) => {
+                lane.staged.push_front(job);
+                break;
+            }
         }
     }
 }
@@ -157,33 +329,35 @@ fn lane_thread<E, F>(
     bucket: usize,
     jobs: Bounded<LaneJob>,
     free: Bounded<Vec<f32>>,
+    done_jobs: Arc<AtomicU64>,
     ready: mpsc::Sender<Result<(usize, usize), String>>,
 ) -> (LaneStat, Vec<f64>, usize)
 where
     E: InferEngine + 'static,
     F: Fn(usize) -> Result<E> + Send + Sync + 'static,
 {
-    let mut stat = LaneStat {
-        bucket,
-        n_streams: None,
-        reserved_bytes: None,
-        n_batches: 0,
-        n_requests: 0,
-        busy_s: 0.0,
-        mean_queue_wait_s: 0.0,
-        alloc_events: 0,
-    };
+    let mut stat = LaneStat::empty(bucket);
     let mut latencies: Vec<f64> = Vec::new();
     let mut fill_sum = 0usize;
+    // A lane that cannot build its engine must not strand work: close
+    // the queue itself (elastic spawns have no startup handshake) and
+    // answer whatever the dispatcher already routed.
+    let die = |msg: String| {
+        let _ = ready.send(Err(msg.clone()));
+        jobs.close();
+        while let Some(job) = jobs.try_pop() {
+            fail_job(job, &msg);
+        }
+    };
     let mut engine = match factory(bucket) {
         Ok(e) => e,
         Err(err) => {
-            let _ = ready.send(Err(format!("lane {bucket}: {err:#}")));
+            die(format!("lane {bucket}: {err:#}"));
             return (stat, latencies, fill_sum);
         }
     };
     if !engine.batch_sizes().contains(&bucket) {
-        let _ = ready.send(Err(format!("lane {bucket}: engine does not serve this bucket")));
+        die(format!("lane {bucket}: engine does not serve this bucket"));
         return (stat, latencies, fill_sum);
     }
     let output_len = engine.output_len();
@@ -248,26 +422,134 @@ where
                 }
             }
         }
-        // Recycle the padded buffer (dropped if the pool is full).
+        // Recycle the padded buffer (dropped if the pool is full), then
+        // publish the completion (the scaling pass's in-flight clock).
         let _ = free.try_push(input);
+        done_jobs.fetch_add(1, Ordering::Relaxed);
     }
     stat.mean_queue_wait_s =
         if stat.n_batches == 0 { 0.0 } else { wait_sum / stat.n_batches as f64 };
+    stat.steals = engine.steals().unwrap_or(0);
     (stat, latencies, fill_sum)
 }
 
-/// Route a pre-formed batch to its lane, shedding load when the lane is
-/// saturated (stage full).
-fn route_batch(lane: &mut Lane, stage_cap: usize, input: Vec<f32>, reply: Reply) {
-    if lane.staged.len() >= stage_cap {
-        let _ = reply.send(Err(format!(
-            "lane {} overloaded: {} batches staged",
-            lane.bucket,
-            lane.staged.len()
-        )));
-        return;
+/// A lane thread's startup handshake: `(example_len, output_len)` on a
+/// successful engine build, the build error otherwise.
+type ReadySignal = mpsc::Receiver<Result<(usize, usize), String>>;
+
+/// Spawn one lane instance (thread + queues). The engine is built on the
+/// lane thread; seed lanes block on the returned readiness channel at
+/// server start. Elastic spawns drop the channel: a failed elastic build
+/// closes the lane's queue (jobs already queued are answered with the
+/// build error) and the scaling pass re-routes its staged work to the
+/// group's survivors.
+fn spawn_lane<E, F>(
+    factory: &Arc<F>,
+    bucket: usize,
+    config: &LaneConfig,
+    elastic: bool,
+) -> Result<(Lane, ReadySignal)>
+where
+    E: InferEngine + 'static,
+    F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+{
+    let jobs: Bounded<LaneJob> = Bounded::new(config.lane_cap);
+    let free: Bounded<Vec<f32>> = Bounded::new(config.buffers_per_lane);
+    let done_jobs = Arc::new(AtomicU64::new(0));
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let join = {
+        let factory = Arc::clone(factory);
+        let jobs = jobs.clone();
+        let free = free.clone();
+        let done_jobs = Arc::clone(&done_jobs);
+        std::thread::Builder::new()
+            .name(format!("nimble-lane-{bucket}"))
+            .spawn(move || lane_thread(factory, bucket, jobs, free, done_jobs, ready_tx))
+            .context("spawning lane thread")?
+    };
+    Ok((
+        Lane {
+            bucket,
+            jobs,
+            free,
+            staged: VecDeque::new(),
+            alloc_events: 0,
+            join: Some(join),
+            routed_jobs: 0,
+            done_jobs,
+            seen_done: 0,
+            last_active: Instant::now(),
+            elastic,
+        },
+        ready_rx,
+    ))
+}
+
+/// Spawn an elastic lane for a saturated group if the scaling policy
+/// allows; returns the new lane's index. The lane's padded-buffer pool
+/// is seeded from the group's spare buffers (recovered from retired
+/// lanes) so repeat scale-ups re-use warm allocations.
+fn maybe_spawn<E, F>(
+    group: &mut LaneGroup,
+    config: &LaneConfig,
+    example_len: usize,
+    factory: &Arc<F>,
+) -> Option<usize>
+where
+    E: InferEngine + 'static,
+    F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+{
+    if group.lanes.len() >= config.scale.max_lanes_per_bucket
+        || group.pressure() < config.scale.scale_up_backlog
+    {
+        return None;
     }
-    lane.staged.push_back(LaneJob {
+    let Ok((lane, _ready)) = spawn_lane(factory, group.bucket, config, true) else {
+        return None;
+    };
+    for _ in 0..config.buffers_per_lane {
+        let buf = group
+            .spare_buffers
+            .pop()
+            .unwrap_or_else(|| Vec::with_capacity(group.bucket * example_len));
+        let _ = lane.free.try_push(buf);
+    }
+    group.spawned += 1;
+    group.lanes.push(lane);
+    Some(group.lanes.len() - 1)
+}
+
+/// Route a pre-formed batch to its bucket's least-loaded lane, spawning
+/// an elastic lane when that lane is saturated and the scaling policy
+/// allows, and shedding load only once the group cannot grow.
+fn route_batch<E, F>(
+    group: &mut LaneGroup,
+    stage_cap: usize,
+    input: Vec<f32>,
+    reply: Reply,
+    config: &LaneConfig,
+    example_len: usize,
+    factory: &Arc<F>,
+) where
+    E: InferEngine + 'static,
+    F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+{
+    let mut li = group.pick_lane();
+    if group.lanes[li].staged.len() >= stage_cap {
+        match maybe_spawn(group, config, example_len, factory) {
+            Some(fresh) => li = fresh,
+            None => {
+                let _ = reply.send(Err(format!(
+                    "lane {} overloaded: {} batches staged",
+                    group.bucket,
+                    group.lanes[li].staged.len()
+                )));
+                return;
+            }
+        }
+    }
+    let lane = &mut group.lanes[li];
+    lane.stage(LaneJob {
         input,
         tokens: Vec::new(),
         batch_reply: Some(reply),
@@ -280,26 +562,36 @@ fn route_batch(lane: &mut Lane, stage_cap: usize, input: Vec<f32>, reply: Reply)
 /// dispatcher's own business). `stage_cap` bounds the per-lane stage for
 /// pre-formed batches; the shutdown drain passes `usize::MAX` so nothing
 /// already admitted is ever load-shed.
-fn admit_one(
+#[allow(clippy::too_many_arguments)]
+fn admit_one<E, F>(
     msg: Admit,
-    lanes: &mut [Lane],
-    lane_index: &HashMap<usize, usize>,
+    groups: &mut [LaneGroup],
+    group_index: &HashMap<usize, usize>,
     batcher: &mut Batcher<Reply>,
     example_len: usize,
     stage_cap: usize,
-) {
+    config: &LaneConfig,
+    factory: &Arc<F>,
+) where
+    E: InferEngine + 'static,
+    F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+{
     match msg {
         Admit::Infer { input, hint, reply } => {
             if input.len() != example_len {
                 let _ =
                     reply.send(Err(format!("bad input length {} != {example_len}", input.len())));
             } else {
+                // Hinted arrivals feed the bucket's admission pressure.
+                if let Some(gi) = hint.and_then(|h| group_index.get(&h)) {
+                    groups[*gi].hinted_since_scale += 1;
+                }
                 batcher.push_hinted(reply, input, hint);
             }
         }
-        Admit::Batch { bucket, input, reply } => match lane_index.get(&bucket) {
-            Some(&li) if input.len() == bucket * example_len => {
-                route_batch(&mut lanes[li], stage_cap, input, reply);
+        Admit::Batch { bucket, input, reply } => match group_index.get(&bucket) {
+            Some(&gi) if input.len() == bucket * example_len => {
+                route_batch(&mut groups[gi], stage_cap, input, reply, config, example_len, factory);
             }
             Some(_) => {
                 let _ = reply.send(Err(format!(
@@ -316,15 +608,92 @@ fn admit_one(
     }
 }
 
-fn dispatcher_thread(
+/// The periodic scaling pass: reap finished retiring lanes, detect dead
+/// lanes (engine build failed — their queues closed themselves), and
+/// retire elastic lanes idle past the quiescence window. Spawning is
+/// event-driven (at routing time, where saturation is observed), not
+/// part of this pass.
+fn scale_groups(groups: &mut [LaneGroup], config: &LaneConfig) {
+    for group in groups.iter_mut() {
+        // Reap retiring lanes whose threads finished draining.
+        let mut i = 0;
+        while i < group.retiring.len() {
+            let finished =
+                group.retiring[i].join.as_ref().map_or(true, |handle| handle.is_finished());
+            if finished {
+                let lane = group.retiring.swap_remove(i);
+                group.fold_joined(lane);
+            } else {
+                i += 1;
+            }
+        }
+        // Advance each live lane's idleness clock past any completions
+        // since the last pass (completion times themselves are not
+        // published; observing them at pass cadence only delays retire
+        // by at most one SCALE_POLL, never hastens it).
+        for lane in &mut group.lanes {
+            let done = lane.done_jobs.load(Ordering::Relaxed);
+            if done != lane.seen_done {
+                lane.seen_done = done;
+                lane.last_active = Instant::now();
+            }
+        }
+        // A dead lane closed its own queue (failed engine build): move
+        // it out of the routing set and re-route its staged work to the
+        // seed lane — clients must not eat a build failure while
+        // survivors have capacity. The seed lane is exempt: if it were
+        // dead, startup would have failed the whole server.
+        let mut i = 1;
+        while i < group.lanes.len() {
+            if group.lanes[i].jobs.is_closed() {
+                let mut lane = group.lanes.remove(i);
+                group.retired += 1;
+                let rerouted: Vec<LaneJob> = lane.staged.drain(..).collect();
+                group.retiring.push(lane);
+                let seed = &mut group.lanes[0];
+                for job in rerouted {
+                    seed.stage(job);
+                }
+                flush_staged(seed);
+            } else {
+                i += 1;
+            }
+        }
+        // Retire elastic lanes idle past the window (seed lane exempt).
+        // `in_flight` covers staged, queued, AND the batch the engine is
+        // executing, so a busy lane is never retired mid-batch.
+        let mut i = 1;
+        while i < group.lanes.len() {
+            let lane = &group.lanes[i];
+            let idle = lane.elastic
+                && lane.in_flight() == 0
+                && lane.last_active.elapsed() >= config.scale.idle_retire;
+            if idle {
+                let lane = group.lanes.remove(i);
+                lane.jobs.close();
+                group.retired += 1;
+                group.retiring.push(lane);
+            } else {
+                i += 1;
+            }
+        }
+        group.hinted_since_scale = 0;
+    }
+}
+
+fn dispatcher_thread<E, F>(
     admission: Bounded<Admit>,
-    mut lanes: Vec<Lane>,
+    mut groups: Vec<LaneGroup>,
     policy: BatchPolicy,
     example_len: usize,
     config: LaneConfig,
-) {
-    let lane_index: HashMap<usize, usize> =
-        lanes.iter().enumerate().map(|(i, l)| (l.bucket, i)).collect();
+    factory: Arc<F>,
+) where
+    E: InferEngine + 'static,
+    F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+{
+    let group_index: HashMap<usize, usize> =
+        groups.iter().enumerate().map(|(i, g)| (g.bucket, i)).collect();
     let mut batcher: Batcher<Reply> = Batcher::new(policy);
     let started = Instant::now();
     let mut shutdown_reply: Option<mpsc::Sender<ServingReport>> = None;
@@ -333,14 +702,30 @@ fn dispatcher_thread(
     // Last form pass hit a saturated lane: poll instead of spinning on
     // the (already-passed) batcher deadline.
     let mut stalled = false;
+    let mut last_scale = Instant::now();
 
     'outer: loop {
-        for lane in &mut lanes {
-            flush_staged(lane);
+        for group in &mut groups {
+            for lane in &mut group.lanes {
+                flush_staged(lane);
+            }
+        }
+        // The scaling pass runs at SCALE_POLL cadence, not per message:
+        // hinted-arrival pressure accumulates across a whole window
+        // (resetting it every admitted message would erase the signal
+        // before it could ever reach scale_up_backlog).
+        if last_scale.elapsed() >= SCALE_POLL {
+            scale_groups(&mut groups, &config);
+            last_scale = Instant::now();
         }
 
         // --- Wait for the next admission event. ---
-        let any_staged = lanes.iter().any(|l| !l.staged.is_empty());
+        let any_staged =
+            groups.iter().any(|g| g.lanes.iter().any(|l| !l.staged.is_empty()));
+        // Elastic activity (scaled-up groups or draining retirees) needs
+        // periodic scaling passes; static deployments never poll for it.
+        let elastic_active =
+            groups.iter().any(|g| g.lanes.len() > 1 || !g.retiring.is_empty());
         let msg = if closed {
             // Nothing left to pop; poll the drain forward.
             std::thread::sleep(POLL);
@@ -359,6 +744,10 @@ fn dispatcher_thread(
                 // The oldest deadline already passed but its lane was
                 // saturated; waiting on it again would spin.
                 deadline = Some(Instant::now() + POLL);
+            }
+            if elastic_active {
+                let scale_at = Instant::now() + SCALE_POLL;
+                deadline = Some(deadline.map_or(scale_at, |d| d.min(scale_at)));
             }
             match deadline {
                 None => admission.pop().or_else(|| {
@@ -384,12 +773,30 @@ fn dispatcher_thread(
                 admission.close();
                 closed = true;
                 while let Some(m) = admission.try_pop() {
-                    admit_one(m, &mut lanes, &lane_index, &mut batcher, example_len, usize::MAX);
+                    admit_one(
+                        m,
+                        &mut groups,
+                        &group_index,
+                        &mut batcher,
+                        example_len,
+                        usize::MAX,
+                        &config,
+                        &factory,
+                    );
                 }
                 shutdown_reply = Some(reply);
             }
             Some(m) => {
-                admit_one(m, &mut lanes, &lane_index, &mut batcher, example_len, config.lane_cap);
+                admit_one(
+                    m,
+                    &mut groups,
+                    &group_index,
+                    &mut batcher,
+                    example_len,
+                    config.lane_cap,
+                    &config,
+                    &factory,
+                );
             }
             None => {}
         }
@@ -406,12 +813,24 @@ fn dispatcher_thread(
             // queue-depth routing); routing happens before forming so a
             // saturated lane leaves the queue untouched.
             let Some((_, bucket)) = batcher.plan_next() else { break };
-            let li = lane_index[&bucket];
-            let lane = &mut lanes[li];
-            if lane.staged.len() >= config.lane_cap {
-                stalled = true;
-                break; // lane saturated: requests wait in the batcher
+            let gi = group_index[&bucket];
+            let group = &mut groups[gi];
+            let mut li = group.pick_lane();
+            if group.lanes[li].staged.len() >= config.lane_cap
+                || group.lanes[li].free.is_empty()
+            {
+                // Saturated (stage full, or every pooled buffer in
+                // flight): grow the group if the policy allows,
+                // otherwise the requests wait in the batcher.
+                match maybe_spawn(group, &config, example_len, &factory) {
+                    Some(fresh) => li = fresh,
+                    None => {
+                        stalled = true;
+                        break;
+                    }
+                }
             }
+            let lane = &mut group.lanes[li];
             let Some(mut buf) = lane.free.try_pop() else {
                 stalled = true;
                 break; // no pooled buffer: lane is at its in-flight bound
@@ -425,7 +844,7 @@ fn dispatcher_thread(
             if buf.capacity() != cap_before {
                 lane.alloc_events += 1;
             }
-            lane.staged.push_back(LaneJob {
+            lane.stage(LaneJob {
                 input: buf,
                 tokens: formed.tokens,
                 batch_reply: None,
@@ -436,41 +855,33 @@ fn dispatcher_thread(
 
         if shutting
             && batcher.pending() == 0
-            && lanes.iter().all(|l| l.staged.is_empty())
+            && groups.iter().all(|g| g.lanes.iter().all(|l| l.staged.is_empty()))
         {
             break 'outer;
         }
     }
 
-    // --- Drain lanes and aggregate the report. ---
-    for lane in &lanes {
-        lane.jobs.close();
+    // --- Drain lanes and aggregate the per-bucket report. ---
+    for group in &groups {
+        for lane in group.lanes.iter().chain(&group.retiring) {
+            lane.jobs.close();
+        }
     }
-    let mut lane_stats = Vec::with_capacity(lanes.len());
+    let mut lane_stats = Vec::with_capacity(groups.len());
     let mut all_latencies: Vec<f64> = Vec::new();
     let (mut n_requests, mut n_batches, mut fill_sum) = (0usize, 0usize, 0usize);
-    for mut lane in lanes {
-        let Some(handle) = lane.join.take() else { continue };
-        match handle.join() {
-            Ok((mut stat, latencies, fill)) => {
-                stat.alloc_events = lane.alloc_events;
-                n_requests += stat.n_requests;
-                n_batches += stat.n_batches;
-                fill_sum += fill;
-                all_latencies.extend(latencies);
-                lane_stats.push(stat);
-            }
-            Err(_) => lane_stats.push(LaneStat {
-                bucket: lane.bucket,
-                n_streams: None,
-                reserved_bytes: None,
-                n_batches: 0,
-                n_requests: 0,
-                busy_s: 0.0,
-                mean_queue_wait_s: 0.0,
-                alloc_events: lane.alloc_events,
-            }),
+    for mut group in groups {
+        for lane in group.lanes.drain(..).chain(group.retiring.drain(..)).collect::<Vec<_>>() {
+            group.fold_joined(lane);
         }
+        let mut stat = group.stat;
+        stat.lanes_spawned = group.spawned;
+        stat.lanes_retired = group.retired;
+        n_requests += stat.n_requests;
+        n_batches += stat.n_batches;
+        fill_sum += group.fill_sum;
+        all_latencies.extend(group.latencies);
+        lane_stats.push(stat);
     }
     let report = ServingReport {
         n_requests,
@@ -607,6 +1018,10 @@ impl LaneServer {
         anyhow::ensure!(!batch_sizes.is_empty(), "need at least one batch bucket");
         anyhow::ensure!(config.lane_cap >= 1, "lane_cap must be >= 1");
         anyhow::ensure!(config.buffers_per_lane >= 1, "buffers_per_lane must be >= 1");
+        anyhow::ensure!(
+            config.scale.max_lanes_per_bucket >= 1,
+            "max_lanes_per_bucket must be >= 1"
+        );
         let mut sizes: Vec<usize> = batch_sizes.to_vec();
         sizes.sort_unstable();
         sizes.dedup();
@@ -616,26 +1031,8 @@ impl LaneServer {
         let mut lanes: Vec<Lane> = Vec::with_capacity(sizes.len());
         let mut readies = Vec::with_capacity(sizes.len());
         for &bucket in &sizes {
-            let jobs: Bounded<LaneJob> = Bounded::new(config.lane_cap);
-            let free: Bounded<Vec<f32>> = Bounded::new(config.buffers_per_lane);
-            let (ready_tx, ready_rx) = mpsc::channel();
-            let join = {
-                let factory = Arc::clone(&factory);
-                let jobs = jobs.clone();
-                let free = free.clone();
-                std::thread::Builder::new()
-                    .name(format!("nimble-lane-{bucket}"))
-                    .spawn(move || lane_thread(factory, bucket, jobs, free, ready_tx))
-                    .context("spawning lane thread")?
-            };
-            lanes.push(Lane {
-                bucket,
-                jobs,
-                free,
-                staged: VecDeque::new(),
-                alloc_events: 0,
-                join: Some(join),
-            });
+            let (lane, ready_rx) = spawn_lane(&factory, bucket, &config, false)?;
+            lanes.push(lane);
             readies.push(ready_rx);
         }
 
@@ -684,13 +1081,17 @@ impl LaneServer {
                 let _ = lane.free.try_push(Vec::with_capacity(lane.bucket * example_len));
             }
         }
+        let groups: Vec<LaneGroup> =
+            lanes.into_iter().map(|lane| LaneGroup::new(lane.bucket, lane)).collect();
 
         let policy = BatchPolicy { batch_sizes: sizes.clone(), max_wait: config.max_wait };
         let dispatcher = {
             let admission = admission.clone();
             std::thread::Builder::new()
                 .name("nimble-dispatch".into())
-                .spawn(move || dispatcher_thread(admission, lanes, policy, example_len, config))
+                .spawn(move || {
+                    dispatcher_thread(admission, groups, policy, example_len, config, factory)
+                })
                 .context("spawning dispatcher thread")?
         };
         Ok(LaneServer {
@@ -723,10 +1124,42 @@ impl LaneServer {
         let factory = move |bucket: usize| {
             let opts = TapeEngineOptions {
                 worker_cap,
-                unshared_slots: false,
                 arena_pool: Some(pool.clone()),
+                ..Default::default()
             };
             TapeEngine::from_graph_fn_opts("pooled-lane", &[bucket], opts, build.clone())
+        };
+        Self::start(batch_sizes, factory, config)
+    }
+
+    /// Start an **elastic** tape-engine server: every lane (seed and
+    /// scale-up alike) draws its arena from the shared
+    /// [`ArenaPool`](crate::aot::memory::ArenaPool) — so spawning a lane
+    /// for a bucket the pool has served before is allocation-free on the
+    /// warm path — and leases its replay workers from the ONE
+    /// process-wide work-stealing pool, so however many lanes the
+    /// scaling policy ([`LaneConfig::scale`]) spins up, total replay
+    /// worker threads never exceed `workers.n_workers()`. Cross-lane
+    /// steals surface in [`LaneStat::steals`], scaling decisions in
+    /// [`LaneStat::lanes_spawned`] / [`LaneStat::lanes_retired`].
+    pub fn start_elastic_tape<G>(
+        batch_sizes: &[usize],
+        workers: crate::engine::executor::SharedWorkerPool,
+        pool: crate::aot::memory::ArenaPool,
+        config: LaneConfig,
+        build: G,
+    ) -> Result<LaneServer>
+    where
+        G: Fn(usize) -> crate::ops::OpGraph + Send + Sync + Clone + 'static,
+    {
+        use super::sim_engine::{TapeEngine, TapeEngineOptions};
+        let factory = move |bucket: usize| {
+            let opts = TapeEngineOptions {
+                arena_pool: Some(pool.clone()),
+                shared_pool: Some(workers.clone()),
+                ..Default::default()
+            };
+            TapeEngine::from_graph_fn_opts("elastic-lane", &[bucket], opts, build.clone())
         };
         Self::start(batch_sizes, factory, config)
     }
@@ -941,6 +1374,102 @@ mod tests {
         let server = lane_server(Duration::from_millis(1));
         let _ = server.infer(vec![0.1; server.example_len()]).unwrap();
         drop(server); // must not hang or leak lane threads
+    }
+
+    #[test]
+    fn elastic_lanes_spawn_and_retire_without_spurious_deadlocks() {
+        // The scale-down regression test: bursty traffic forces a
+        // scale-up, an idle window retires the elastic lane (its engine
+        // drops, returning workers to the shared pool and its arena to
+        // the arena pool), and traffic AFTER the retirement must still
+        // be served — no request may fail with a spurious
+        // "parked with nothing runnable" deadlock report.
+        let arena_pool = crate::aot::memory::ArenaPool::new();
+        let workers = crate::engine::executor::SharedWorkerPool::new(2);
+        let server = LaneServer::start_elastic_tape(
+            &[1, 4],
+            workers.clone(),
+            arena_pool.clone(),
+            LaneConfig {
+                max_wait: Duration::from_micros(200),
+                lane_cap: 2,
+                buffers_per_lane: 3,
+                scale: ScaleOptions {
+                    max_lanes_per_bucket: 3,
+                    idle_retire: Duration::from_millis(5),
+                    scale_up_backlog: 1,
+                },
+                ..Default::default()
+            },
+            |b| crate::models::build("mini_inception", b),
+        )
+        .expect("elastic lane server");
+        let len = server.example_len();
+        let batch: Vec<f32> = inputs(4, len, 71).concat();
+
+        // Burst: more in-flight batches than one lane can hold.
+        let pending: Vec<_> =
+            (0..12).map(|_| server.submit_batch(4, batch.clone()).unwrap()).collect();
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        // Idle long enough for the scaling pass to retire extras.
+        std::thread::sleep(Duration::from_millis(60));
+        // Traffic resumes against the shrunken group.
+        let pending: Vec<_> =
+            (0..4).map(|_| server.submit_batch(4, batch.clone()).unwrap()).collect();
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+
+        let report = server.shutdown().unwrap();
+        let lane4 = report.lane(4).unwrap();
+        assert_eq!(lane4.n_batches, 16, "every batch served exactly once");
+        assert!(lane4.lanes_spawned >= 2, "the burst must trigger a scale-up");
+        assert!(lane4.lanes_retired >= 1, "the idle window must retire a lane");
+        assert!(
+            lane4.lanes_spawned <= 3 && report.lane(1).unwrap().lanes_spawned == 1,
+            "scaling stays within policy bounds"
+        );
+        // Retired lanes' arenas are back in the pool, none leaked (the
+        // warm-path recycling across bursts is pinned by the scaling
+        // property in tests/prop_harness.rs).
+        assert_eq!(arena_pool.stats().leased_bytes, 0, "all arenas returned after shutdown");
+    }
+
+    #[test]
+    fn elastic_output_matches_the_direct_engine_bitwise() {
+        let arena_pool = crate::aot::memory::ArenaPool::new();
+        let workers = crate::engine::executor::SharedWorkerPool::new(2);
+        let server = LaneServer::start_elastic_tape(
+            &[2],
+            workers,
+            arena_pool,
+            LaneConfig {
+                max_wait: Duration::from_micros(200),
+                lane_cap: 4,
+                scale: ScaleOptions {
+                    max_lanes_per_bucket: 2,
+                    idle_retire: Duration::from_millis(4),
+                    scale_up_backlog: 1,
+                },
+                ..Default::default()
+            },
+            |b| crate::models::build("mini_inception", b),
+        )
+        .expect("elastic lane server");
+        let len = server.example_len();
+        let batch: Vec<f32> = inputs(2, len, 72).concat();
+        let mut direct = TapeEngine::new("mini_inception", &[2]).unwrap();
+        let want = direct.infer_batch(2, &batch).unwrap();
+        // Concurrent duplicates may land on different replica lanes; all
+        // must agree with the direct engine bit-for-bit.
+        let pending: Vec<_> =
+            (0..10).map(|_| server.submit_batch(2, batch.clone()).unwrap()).collect();
+        for rx in pending {
+            assert_eq!(rx.recv().unwrap().unwrap(), want);
+        }
+        let _ = server.shutdown().unwrap();
     }
 
     #[test]

@@ -4,8 +4,11 @@
 use crate::util::stats::{fmt_secs, Summary};
 use std::time::Duration;
 
-/// Per-lane counters reported by the lane scheduler: one entry per batch
-/// bucket, filled by that bucket's lane thread at shutdown.
+/// Per-bucket counters reported by the lane scheduler, filled by that
+/// bucket's lane thread(s) at shutdown. Under elastic scaling a bucket
+/// may be served by several lanes over its lifetime; the scheduler
+/// folds them into ONE stat per bucket ([`absorb`](Self::absorb)) and
+/// records the scaling decisions in `lanes_spawned` / `lanes_retired`.
 #[derive(Debug, Clone)]
 pub struct LaneStat {
     /// Compiled batch size this lane serves.
@@ -27,12 +30,66 @@ pub struct LaneStat {
     /// Padded-buffer would-allocate events on this lane's dispatch path
     /// (0 in steady state: buffers are pooled and reused).
     pub alloc_events: u64,
+    /// Lanes ever spawned for this bucket (the seed lane counts, so ≥ 1
+    /// on a live report; elastic scale-ups add to it).
+    pub lanes_spawned: usize,
+    /// Elastic lanes retired before shutdown (idle past
+    /// `ScaleOptions::idle_retire`).
+    pub lanes_retired: usize,
+    /// Cross-context worker steals this bucket's engines received from
+    /// the shared work-stealing pool
+    /// ([`SharedWorkerPool`](crate::engine::executor::SharedWorkerPool));
+    /// 0 without one.
+    pub steals: u64,
 }
 
 impl LaneStat {
+    /// A zeroed stat for `bucket` — the fold identity for
+    /// [`absorb`](Self::absorb).
+    pub fn empty(bucket: usize) -> LaneStat {
+        LaneStat {
+            bucket,
+            n_streams: None,
+            reserved_bytes: None,
+            n_batches: 0,
+            n_requests: 0,
+            busy_s: 0.0,
+            mean_queue_wait_s: 0.0,
+            alloc_events: 0,
+            lanes_spawned: 0,
+            lanes_retired: 0,
+            steals: 0,
+        }
+    }
+
+    /// Fold another lane instance's runtime counters into this
+    /// per-bucket aggregate (queue wait re-weighted by batch count).
+    /// `lanes_spawned` / `lanes_retired` are scheduler-level decisions,
+    /// not per-instance counters, so the scheduler sets them directly.
+    pub fn absorb(&mut self, other: &LaneStat) {
+        debug_assert_eq!(self.bucket, other.bucket, "absorb folds within one bucket");
+        let total = self.n_batches + other.n_batches;
+        if total > 0 {
+            self.mean_queue_wait_s = (self.mean_queue_wait_s * self.n_batches as f64
+                + other.mean_queue_wait_s * other.n_batches as f64)
+                / total as f64;
+        }
+        self.n_batches = total;
+        self.n_requests += other.n_requests;
+        self.busy_s += other.busy_s;
+        self.alloc_events += other.alloc_events;
+        self.steals += other.steals;
+        if self.n_streams.is_none() {
+            self.n_streams = other.n_streams;
+        }
+        if self.reserved_bytes.is_none() {
+            self.reserved_bytes = other.reserved_bytes;
+        }
+    }
+
     pub fn render(&self) -> String {
         format!(
-            "lane[bucket={}]: batches={} requests={} busy={} qwait={}{}{}{}",
+            "lane[bucket={}]: batches={} requests={} busy={} qwait={}{}{}{}{}{}",
             self.bucket,
             self.n_batches,
             self.n_requests,
@@ -46,6 +103,13 @@ impl LaneStat {
                 Some(b) => format!(" arena={b}B"),
                 None => String::new(),
             },
+            if self.lanes_spawned > 1 || self.lanes_retired > 0 {
+                format!(" lanes={}/{} retired={}", self.lanes_spawned - self.lanes_retired,
+                    self.lanes_spawned, self.lanes_retired)
+            } else {
+                String::new()
+            },
+            if self.steals > 0 { format!(" steals={}", self.steals) } else { String::new() },
             if self.alloc_events > 0 {
                 format!(" ALLOC_EVENTS={}", self.alloc_events)
             } else {
@@ -77,6 +141,22 @@ impl ServingReport {
     /// Lane stat for one bucket, if this run was lane-scheduled.
     pub fn lane(&self, bucket: usize) -> Option<&LaneStat> {
         self.lanes.iter().find(|l| l.bucket == bucket)
+    }
+
+    /// Total lanes ever spawned across buckets (elastic scale-ups
+    /// included; 0 for the single-engine-thread server).
+    pub fn lanes_spawned(&self) -> usize {
+        self.lanes.iter().map(|l| l.lanes_spawned).sum()
+    }
+
+    /// Total elastic lanes retired before shutdown.
+    pub fn lanes_retired(&self) -> usize {
+        self.lanes.iter().map(|l| l.lanes_retired).sum()
+    }
+
+    /// Total cross-context worker steals across buckets.
+    pub fn steals(&self) -> u64 {
+        self.lanes.iter().map(|l| l.steals).sum()
     }
 
     pub fn render(&self) -> String {
@@ -131,32 +211,67 @@ mod tests {
             mean_batch_fill: 2.5,
             lanes: vec![
                 LaneStat {
-                    bucket: 1,
                     n_streams: Some(2),
                     reserved_bytes: Some(1536),
                     n_batches: 2,
                     n_requests: 2,
                     busy_s: 0.1,
                     mean_queue_wait_s: 0.001,
-                    alloc_events: 0,
+                    lanes_spawned: 1,
+                    ..LaneStat::empty(1)
                 },
                 LaneStat {
-                    bucket: 8,
-                    n_streams: None,
-                    reserved_bytes: None,
                     n_batches: 2,
                     n_requests: 8,
                     busy_s: 0.2,
                     mean_queue_wait_s: 0.002,
-                    alloc_events: 0,
+                    lanes_spawned: 3,
+                    lanes_retired: 2,
+                    steals: 5,
+                    ..LaneStat::empty(8)
                 },
             ],
         };
         assert_eq!(r.lane(8).unwrap().n_requests, 8);
         assert!(r.lane(4).is_none());
+        assert_eq!((r.lanes_spawned(), r.lanes_retired(), r.steals()), (4, 2, 5));
         let s = r.render();
         assert!(s.contains("lane[bucket=1]"));
         assert!(s.contains("streams=2"));
         assert!(s.contains("arena=1536B"));
+        assert!(s.contains("lanes=1/3 retired=2"), "scaling decisions must render: {s}");
+        assert!(s.contains("steals=5"));
+    }
+
+    #[test]
+    fn absorb_folds_runtime_counters_and_reweights_queue_wait() {
+        let mut agg = LaneStat::empty(4);
+        agg.absorb(&LaneStat {
+            n_batches: 3,
+            n_requests: 9,
+            busy_s: 0.3,
+            mean_queue_wait_s: 0.010,
+            n_streams: Some(2),
+            reserved_bytes: Some(4096),
+            steals: 2,
+            ..LaneStat::empty(4)
+        });
+        agg.absorb(&LaneStat {
+            n_batches: 1,
+            n_requests: 2,
+            busy_s: 0.1,
+            mean_queue_wait_s: 0.002,
+            alloc_events: 1,
+            steals: 1,
+            ..LaneStat::empty(4)
+        });
+        assert_eq!(agg.n_batches, 4);
+        assert_eq!(agg.n_requests, 11);
+        assert!((agg.busy_s - 0.4).abs() < 1e-12);
+        assert!((agg.mean_queue_wait_s - 0.008).abs() < 1e-12, "batch-weighted mean");
+        assert_eq!(agg.alloc_events, 1);
+        assert_eq!(agg.steals, 3);
+        assert_eq!(agg.n_streams, Some(2), "first known shape wins");
+        assert_eq!(agg.reserved_bytes, Some(4096));
     }
 }

@@ -31,7 +31,7 @@ pub mod server;
 pub mod sim_engine;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use lanes::{LaneClient, LaneConfig, LaneServer};
+pub use lanes::{LaneClient, LaneConfig, LaneServer, ScaleOptions};
 pub use metrics::{LaneStat, ServingReport};
 pub use queue::Bounded;
 pub use server::{NimbleServer, ServerClient, ServerConfig};

@@ -27,7 +27,7 @@ use std::collections::HashMap;
 use crate::aot::memory::ArenaPool;
 use crate::aot::tape::ReplayTape;
 use crate::coordinator::InferEngine;
-use crate::engine::executor::{ExecOptions, ReplayContext, SyntheticKernel};
+use crate::engine::executor::{ExecOptions, ReplayContext, SharedWorkerPool, SyntheticKernel};
 use crate::matching::MatchingAlgo;
 use crate::models;
 use crate::ops::OpGraph;
@@ -49,6 +49,12 @@ pub struct TapeEngineOptions {
     /// Draw every context's arena from this shared pool (serving lanes
     /// pass one pool so rebuilt lanes recycle their reservations).
     pub arena_pool: Option<ArenaPool>,
+    /// Lease workers from this process-wide work-stealing pool instead
+    /// of spawning per-context threads ([`ExecOptions::shared_pool`]) —
+    /// the elastic lane scheduler backs every lane with one pool so
+    /// lanes × streams never exceed the pool's worker count. Takes
+    /// precedence over `worker_cap`.
+    pub shared_pool: Option<SharedWorkerPool>,
 }
 
 /// One independent replay context per compiled batch bucket.
@@ -60,6 +66,9 @@ pub struct TapeEngine {
     /// Serial-oracle mode: replay on the calling thread in merged
     /// submission order instead of releasing the worker pool.
     serial: bool,
+    /// Contexts lease from a shared work-stealing pool (steal counts
+    /// are meaningful).
+    shared_pool: bool,
 }
 
 impl TapeEngine {
@@ -145,12 +154,20 @@ impl TapeEngine {
                         max_workers: opts.worker_cap,
                         unshared_slots: opts.unshared_slots,
                         arena_pool: opts.arena_pool.clone(),
+                        shared_pool: opts.shared_pool.clone(),
                         ..Default::default()
                     },
                 ),
             );
         }
-        Ok(TapeEngine { batch_sizes: sizes, example_len, output_len, contexts, serial: false })
+        Ok(TapeEngine {
+            batch_sizes: sizes,
+            example_len,
+            output_len,
+            contexts,
+            serial: false,
+            shared_pool: opts.shared_pool.is_some(),
+        })
     }
 
     /// Switch to serial-oracle mode: `infer_batch` replays on the
@@ -201,6 +218,13 @@ impl InferEngine for TapeEngine {
 
     fn reserved_bytes(&self, bucket: usize) -> Option<u64> {
         self.contexts.get(&bucket).map(|c| c.reserved_bytes())
+    }
+
+    fn steals(&self) -> Option<u64> {
+        if !self.shared_pool {
+            return None;
+        }
+        Some(self.contexts.values().map(|c| c.steal_count()).sum())
     }
 }
 

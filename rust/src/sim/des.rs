@@ -535,6 +535,215 @@ pub fn simulate_lanes(lanes: &[LaneLoad], host: HostProfile, device: GpuSpec) ->
     }
 }
 
+/// One bucket's offered traffic for the scaling DES
+/// ([`simulate_scaling`]): the bucket's compiled tape and costs, plus
+/// the wall-clock dispatch times of its batches.
+pub struct ScalingTrace<'a> {
+    pub tape: &'a crate::aot::tape::ReplayTape,
+    pub costs: &'a [KernelCost],
+    /// Batch dispatch times for this bucket, ascending, ≥ 0.
+    pub arrivals_s: &'a [f64],
+}
+
+/// The scaling policy the DES mirrors — the offline counterpart of the
+/// lane scheduler's `ScaleOptions`.
+#[derive(Debug, Clone)]
+pub struct ScaleSimPolicy {
+    /// Max lanes per bucket (1 = static).
+    pub max_lanes_per_bucket: usize,
+    /// Retire an elastic lane once idle this long.
+    pub idle_retire_s: f64,
+    /// Spawn another lane when a bucket has this many batches in flight
+    /// and its least-loaded lane is busy.
+    pub scale_up_backlog: usize,
+}
+
+/// Per-bucket prediction of [`simulate_scaling`].
+#[derive(Debug, Clone)]
+pub struct BucketScaling {
+    /// Peak concurrently-live lanes in the elastic schedule.
+    pub peak_lanes: usize,
+    /// Lanes ever spawned (seed included).
+    pub lanes_spawned: usize,
+    /// Elastic lanes retired (every elastic lane eventually retires
+    /// once idle, so this converges to `lanes_spawned - 1`).
+    pub lanes_retired: usize,
+    /// When the bucket's last batch completes, elastic lanes.
+    pub elastic_end_s: f64,
+    /// When it completes on the static single lane.
+    pub static_end_s: f64,
+    /// Integral of live lane count over time in the elastic schedule
+    /// (lane-seconds) — each lane counts from spawn to retirement (or
+    /// to its last completion, for the seed lane).
+    pub elastic_lane_alive_s: f64,
+}
+
+/// Output of [`simulate_scaling`].
+#[derive(Debug, Clone)]
+pub struct ScalingResult {
+    pub per_bucket: Vec<BucketScaling>,
+    /// Elastic makespan across all buckets (buckets independent).
+    pub elastic_total_s: f64,
+    /// Static (one lane per bucket) makespan across all buckets.
+    pub static_total_s: f64,
+}
+
+impl ScalingResult {
+    /// Predicted makespan gain of elastic over static lanes.
+    pub fn scaling_speedup(&self) -> f64 {
+        if self.elastic_total_s == 0.0 {
+            1.0
+        } else {
+            self.static_total_s / self.elastic_total_s
+        }
+    }
+
+    pub fn lanes_spawned(&self) -> usize {
+        self.per_bucket.iter().map(|b| b.lanes_spawned).sum()
+    }
+
+    pub fn lanes_retired(&self) -> usize {
+        self.per_bucket.iter().map(|b| b.lanes_retired).sum()
+    }
+
+    /// Total elastic lane-seconds; compare against
+    /// `n_buckets × max_lanes × static_total_s`, the cost of statically
+    /// provisioning every bucket at the elastic peak.
+    pub fn elastic_lane_alive_s(&self) -> f64 {
+        self.per_bucket.iter().map(|b| b.elastic_lane_alive_s).sum()
+    }
+}
+
+/// Offline prediction of the elastic lane scheduler: replays per-bucket
+/// batch-arrival traces against the scaling policy and predicts lane
+/// counts, spawn/retire decisions, and the elastic-vs-static makespan.
+///
+/// The model is a per-bucket multi-server queue at **batch**
+/// granularity: each lane is a FIFO server whose per-batch service time
+/// is the bucket tape's single-lane DES latency
+/// ([`simulate_tape`]`.total_s`), arrivals route to the
+/// earliest-available lane, a new lane spawns (up to the policy cap)
+/// when every lane is busy and the bucket's in-flight count reaches
+/// `scale_up_backlog`, and a lane retires after `idle_retire_s` of
+/// idleness. Buckets are independent — the device is assumed
+/// uncontended across lanes, the same approximation the per-round
+/// overlap prediction in `bench_serving` makes (valid while per-lane SM
+/// demand is low; [`simulate_lanes`] models the contended case for a
+/// fixed lane set).
+pub fn simulate_scaling(
+    traces: &[ScalingTrace],
+    host: HostProfile,
+    device: GpuSpec,
+    policy: &ScaleSimPolicy,
+) -> ScalingResult {
+    assert!(!traces.is_empty(), "need at least one bucket trace");
+    assert!(policy.max_lanes_per_bucket >= 1, "need at least one lane per bucket");
+    struct SimLane {
+        /// Completion times of batches assigned and not yet known-done.
+        pending_ends: std::collections::VecDeque<f64>,
+        free_at: f64,
+        spawned_at: f64,
+        elastic: bool,
+    }
+    let mut per_bucket = Vec::with_capacity(traces.len());
+    for trace in traces {
+        let service_s =
+            simulate_tape(trace.tape, trace.costs, host, device.clone()).total_s;
+
+        // Static single-lane baseline.
+        let mut static_end = 0.0f64;
+        for &arr in trace.arrivals_s {
+            assert!(arr >= 0.0, "arrivals must be non-negative");
+            static_end = static_end.max(arr) + service_s;
+        }
+
+        // Elastic multi-server queue.
+        let mut lanes = vec![SimLane {
+            pending_ends: std::collections::VecDeque::new(),
+            free_at: 0.0,
+            spawned_at: 0.0,
+            elastic: false,
+        }];
+        let (mut spawned, mut retired, mut peak) = (1usize, 0usize, 1usize);
+        let mut alive_s = 0.0f64;
+        for &arr in trace.arrivals_s {
+            // Prune completed batches everywhere (the seed lane too —
+            // its deque would otherwise grow with the whole trace and
+            // turn the in-flight recount quadratic), then retire lanes
+            // idle past the window, exactly like the dispatcher's
+            // scaling pass observed at this arrival.
+            for lane in &mut lanes {
+                lane.pending_ends.retain(|&e| e > arr);
+            }
+            let mut i = 1;
+            while i < lanes.len() {
+                let lane = &lanes[i];
+                if lane.elastic
+                    && lane.pending_ends.is_empty()
+                    && lane.free_at + policy.idle_retire_s <= arr
+                {
+                    let lane = lanes.remove(i);
+                    retired += 1;
+                    alive_s += (lane.free_at + policy.idle_retire_s) - lane.spawned_at;
+                } else {
+                    i += 1;
+                }
+            }
+            // In-flight batches across the bucket (admission pressure).
+            let in_flight: usize = lanes.iter().map(|l| l.pending_ends.len()).sum();
+            // Earliest-available lane, ties to the seed end.
+            let mut li = 0;
+            for (i, l) in lanes.iter().enumerate() {
+                if l.free_at < lanes[li].free_at {
+                    li = i;
+                }
+            }
+            if lanes[li].free_at > arr
+                && in_flight >= policy.scale_up_backlog
+                && lanes.len() < policy.max_lanes_per_bucket
+            {
+                lanes.push(SimLane {
+                    pending_ends: std::collections::VecDeque::new(),
+                    free_at: arr,
+                    spawned_at: arr,
+                    elastic: true,
+                });
+                spawned += 1;
+                li = lanes.len() - 1;
+            }
+            peak = peak.max(lanes.len());
+            let start = lanes[li].free_at.max(arr);
+            let end = start + service_s;
+            lanes[li].free_at = end;
+            lanes[li].pending_ends.push_back(end);
+        }
+        // Wind down: every surviving elastic lane retires once idle.
+        let elastic_end =
+            lanes.iter().map(|l| l.free_at).fold(0.0f64, f64::max);
+        for lane in &lanes {
+            if lane.elastic {
+                retired += 1;
+                alive_s += (lane.free_at + policy.idle_retire_s) - lane.spawned_at;
+            }
+        }
+        // The seed lane is alive for the whole bucket schedule.
+        alive_s += elastic_end;
+        per_bucket.push(BucketScaling {
+            peak_lanes: peak,
+            lanes_spawned: spawned,
+            lanes_retired: retired,
+            elastic_end_s: elastic_end,
+            static_end_s: static_end,
+            elastic_lane_alive_s: alive_s,
+        });
+    }
+    let elastic_total_s =
+        per_bucket.iter().map(|b| b.elastic_end_s).fold(0.0f64, f64::max);
+    let static_total_s =
+        per_bucket.iter().map(|b| b.static_end_s).fold(0.0f64, f64::max);
+    ScalingResult { per_bucket, elastic_total_s, static_total_s }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -819,6 +1028,101 @@ mod tests {
         ctx.set_tracing(true);
         ctx.replay_one(&input).unwrap();
         assert!(ctx.peak_live_bytes() <= ctx.reserved_bytes());
+    }
+
+    #[test]
+    fn scaling_sim_with_one_lane_degenerates_to_the_static_schedule() {
+        let g = crate::models::build("mini_inception", 1);
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+        let arrivals = [0.0, 1e-6, 2e-6, 3e-6];
+        let r = simulate_scaling(
+            &[ScalingTrace { tape: &tape, costs: &cs, arrivals_s: &arrivals }],
+            HostProfile::nimble(),
+            dev,
+            &ScaleSimPolicy { max_lanes_per_bucket: 1, idle_retire_s: 1e-3, scale_up_backlog: 1 },
+        );
+        assert_eq!(r.per_bucket.len(), 1);
+        let b = &r.per_bucket[0];
+        assert_eq!((b.peak_lanes, b.lanes_spawned, b.lanes_retired), (1, 1, 0));
+        assert_eq!(
+            b.elastic_end_s.to_bits(),
+            b.static_end_s.to_bits(),
+            "a capped-at-one policy IS the static schedule"
+        );
+        assert!((r.scaling_speedup() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaling_sim_spawns_for_bursts_and_retires_after_them() {
+        let g = crate::models::build("mini_inception", 1);
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+        let service = simulate_tape(&tape, &cs, HostProfile::nimble(), dev.clone()).total_s;
+        // A burst of 6 simultaneous batches, a long gap, then a small
+        // second burst.
+        let late = 100.0 * service;
+        let arrivals = [0.0, 0.0, 0.0, 0.0, 0.0, 0.0, late, late];
+        let policy =
+            ScaleSimPolicy { max_lanes_per_bucket: 3, idle_retire_s: service, scale_up_backlog: 1 };
+        let r = simulate_scaling(
+            &[ScalingTrace { tape: &tape, costs: &cs, arrivals_s: &arrivals }],
+            HostProfile::nimble(),
+            dev,
+            &policy,
+        );
+        let b = &r.per_bucket[0];
+        assert_eq!(b.peak_lanes, 3, "the first burst must scale to the cap");
+        assert_eq!(b.lanes_spawned, 4, "both bursts spawn (the gap retired the first extras)");
+        assert_eq!(
+            b.lanes_retired, 3,
+            "the gap retires the first burst's lanes; wind-down retires the second's"
+        );
+        assert!(
+            b.elastic_end_s < b.static_end_s,
+            "elastic {} must beat static {}",
+            b.elastic_end_s,
+            b.static_end_s
+        );
+        assert!(r.scaling_speedup() > 1.0);
+        // Elastic lane-seconds undercut provisioning every bucket at the
+        // peak for the whole static makespan.
+        assert!(r.elastic_lane_alive_s() < 3.0 * r.static_total_s);
+    }
+
+    #[test]
+    fn scaling_sim_is_deterministic() {
+        let g = branchy();
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+        let arrivals_a = [0.0, 0.0, 1e-5];
+        let arrivals_b = [5e-6, 6e-6];
+        let mk = || {
+            simulate_scaling(
+                &[
+                    ScalingTrace { tape: &tape, costs: &cs, arrivals_s: &arrivals_a },
+                    ScalingTrace { tape: &tape, costs: &cs, arrivals_s: &arrivals_b },
+                ],
+                HostProfile::nimble(),
+                dev.clone(),
+                &ScaleSimPolicy {
+                    max_lanes_per_bucket: 2,
+                    idle_retire_s: 1e-4,
+                    scale_up_backlog: 1,
+                },
+            )
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.elastic_total_s.to_bits(), b.elastic_total_s.to_bits());
+        assert_eq!(a.static_total_s.to_bits(), b.static_total_s.to_bits());
+        assert_eq!(a.lanes_spawned(), b.lanes_spawned());
+        assert_eq!(a.lanes_retired(), b.lanes_retired());
     }
 
     #[test]

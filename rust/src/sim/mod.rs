@@ -17,7 +17,8 @@ pub mod trace;
 
 pub use cost::{kernel_cost, KernelCost};
 pub use des::{
-    peak_reserved_bytes, simulate, simulate_lanes, simulate_tape, LaneLoad, MultiLaneResult,
+    peak_reserved_bytes, simulate, simulate_lanes, simulate_scaling, simulate_tape,
+    BucketScaling, LaneLoad, MultiLaneResult, ScaleSimPolicy, ScalingResult, ScalingTrace,
     SimConfig, SimResult, TaskSpan,
 };
 pub use device::GpuSpec;

@@ -208,6 +208,132 @@ fn arena_replay_is_bit_identical_to_per_slot_replay() {
     });
 }
 
+/// ≥100 random cases (dynamic-lane-scaling tentpole): bursty per-bucket
+/// traffic with random scale-up/scale-down churn through an ELASTIC
+/// lane server — every lane leasing replay workers from ONE shared
+/// work-stealing pool and drawing its arena from ONE shared
+/// [`ArenaPool`] — produces outputs bit-identical to the serial oracle.
+/// The companion `lane_pipeline_is_bit_identical_to_serial_replay`
+/// property pins the static-lane server to the same oracle, so this is
+/// exactly the elastic-vs-static bit-identity the scaling work must
+/// preserve. Retired lanes must hand their arenas back: the pool
+/// balances to zero leased bytes after shutdown, and acquires equal
+/// lanes ever spawned (one single-bucket context per lane).
+#[test]
+fn elastic_scaling_is_bit_identical_and_returns_arenas_to_the_pool() {
+    use nimble::aot::memory::ArenaPool;
+    use nimble::engine::executor::SharedWorkerPool;
+    use nimble::serving::ScaleOptions;
+
+    check_from("elastic-scaling", base_seed() ^ 0x005C_A1E5, 100, |rng| {
+        let n_nodes = rng.gen_range_inclusive(8, 48);
+        let graph_seed = rng.next_u64();
+        let mut buckets = random_buckets(rng);
+        buckets.truncate(3); // elastic churn matters more than bucket count
+        let build = move |b: usize| random_cell(&mut Pcg32::new(graph_seed), n_nodes, b);
+
+        let mut oracle = TapeEngine::from_graph_fn("rand-cell", &buckets, Some(1), build)
+            .map_err(|e| format!("oracle build failed: {e:#}"))?
+            .serial();
+        let arena_pool = ArenaPool::new();
+        let workers = SharedWorkerPool::new(rng.gen_range_inclusive(1, 3));
+        let idle_retire = Duration::from_micros(rng.gen_range_inclusive(200, 2000) as u64);
+        let scale = ScaleOptions {
+            max_lanes_per_bucket: rng.gen_range_inclusive(1, 3),
+            idle_retire,
+            scale_up_backlog: rng.gen_range_inclusive(1, 3),
+        };
+        let server = LaneServer::start_elastic_tape(
+            &buckets,
+            workers.clone(),
+            arena_pool.clone(),
+            LaneConfig {
+                max_wait: Duration::from_micros(200),
+                lane_cap: rng.gen_range_inclusive(4, 8),
+                buffers_per_lane: 10,
+                scale,
+                ..Default::default()
+            },
+            build,
+        )
+        .map_err(|e| format!("elastic server start failed: {e:#}"))?;
+
+        // Bursty traffic: waves of pre-formed batches concentrated on a
+        // hot bucket, with occasional quiet gaps long enough for the
+        // scaling pass to retire idle lanes — so lanes churn up AND
+        // down while results are checked.
+        let n_waves = rng.gen_range_inclusive(2, 4);
+        let hot = *rng.choose(&buckets);
+        let mut total_batches = 0usize;
+        for wave in 0..n_waves {
+            let clump = rng.gen_range_inclusive(3, 8);
+            let jobs: Vec<(usize, Vec<f32>)> = (0..clump)
+                .map(|i| {
+                    // ~2/3 of a wave hammers the hot bucket.
+                    let bucket =
+                        if i % 3 == 2 { *rng.choose(&buckets) } else { hot };
+                    let input = random_input(rng, bucket * RANDOM_CELL_EXAMPLE_LEN);
+                    (bucket, input)
+                })
+                .collect();
+            total_batches += jobs.len();
+            let pending: Vec<_> = jobs
+                .iter()
+                .map(|(bucket, input)| server.submit_batch(*bucket, input.clone()))
+                .collect::<Result<_, _>>()
+                .map_err(|e| format!("submit failed: {e:#}"))?;
+            for (i, ((bucket, input), rx)) in jobs.iter().zip(pending).enumerate() {
+                let got = rx
+                    .recv()
+                    .map_err(|_| "reply dropped".to_string())?
+                    .map_err(|e| format!("wave {wave} job {i} failed: {e}"))?;
+                let want = oracle
+                    .infer_batch(*bucket, input)
+                    .map_err(|e| format!("oracle replay failed: {e:#}"))?;
+                ensure(got.len() == want.len(), || {
+                    format!("wave {wave} job {i}: output length {} != {}", got.len(), want.len())
+                })?;
+                for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+                    ensure(a.to_bits() == b.to_bits(), || {
+                        format!(
+                            "wave {wave} job {i} (bucket {bucket}) diverged at {j}: {a:?} vs {b:?} \
+                             (graph seed {graph_seed:#x})"
+                        )
+                    })?;
+                }
+            }
+            // A quiet gap past the idle window (and the dispatcher's
+            // scaling-pass cadence) forces scale-down churn between
+            // waves on roughly half the cases.
+            if wave + 1 < n_waves && rng.gen_range_inclusive(0, 1) == 1 {
+                std::thread::sleep(idle_retire + Duration::from_millis(12));
+            }
+        }
+
+        let report = server.shutdown().map_err(|e| format!("shutdown failed: {e:#}"))?;
+        ensure(report.n_batches == total_batches, || {
+            format!("served {} batches, submitted {total_batches}", report.n_batches)
+        })?;
+        ensure(report.lanes_spawned() >= buckets.len(), || {
+            "fewer lanes spawned than buckets".to_string()
+        })?;
+        // Pool balance: every lane ever spawned acquired exactly one
+        // arena, and every one of them is back after shutdown.
+        let stats = arena_pool.stats();
+        ensure(stats.leased_bytes == 0, || {
+            format!("{} arena bytes still leased after shutdown", stats.leased_bytes)
+        })?;
+        ensure(stats.acquires == report.lanes_spawned() as u64, || {
+            format!(
+                "{} arena acquires for {} lanes spawned (graph seed {graph_seed:#x})",
+                stats.acquires,
+                report.lanes_spawned()
+            )
+        })?;
+        Ok(())
+    });
+}
+
 /// The batcher path agrees with the oracle when composition is pinned to
 /// single-request batches (strictly sequential blocking clients).
 #[test]
