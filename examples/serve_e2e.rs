@@ -6,29 +6,30 @@
 //!
 //!     make artifacts && cargo run --release --example serve_e2e
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use nimble::coordinator::{EngineConfig, ExecMode};
-use nimble::serving::{NimbleServer, ServerConfig};
+use nimble::serving::{InferRequest, Runtime};
 use nimble::util::Pcg32;
 use std::time::Duration;
 
 fn run_mode(mode: ExecMode, n_requests: usize, rate_rps: f64) -> Result<()> {
     println!("\n=== mode: {mode:?} ({n_requests} requests, ~{rate_rps} req/s offered) ===");
-    let server = NimbleServer::start(ServerConfig {
-        engine: EngineConfig { mode, ..Default::default() },
-        max_wait: Duration::from_millis(3),
-    })?;
+    let server = Runtime::builder()
+        .artifacts(EngineConfig { mode, ..Default::default() })
+        .single_thread()
+        .max_wait(Duration::from_millis(3))
+        .build()?;
     let len = server.example_len();
     let mut rng = Pcg32::new(2718);
     let mut pending = Vec::with_capacity(n_requests);
     for _ in 0..n_requests {
         let input: Vec<f32> = (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
-        pending.push(server.infer_async(input)?);
+        pending.push(server.submit(InferRequest::new(input))?);
         std::thread::sleep(Duration::from_secs_f64(rng.gen_exp(rate_rps)));
     }
     let mut checked = 0;
-    for rx in pending {
-        let logits = rx.recv().context("lost response")?.map_err(anyhow::Error::msg)?;
+    for ticket in pending {
+        let logits = ticket.wait()?;
         assert_eq!(logits.len(), 10, "classifier head width");
         assert!(logits.iter().all(|v| v.is_finite()));
         checked += 1;

@@ -12,7 +12,10 @@
 //! * `des_peak_bytes` — the DES-predicted peak concurrently-reserved
 //!   bytes over the simulated schedule, and
 //! * `measured_peak_bytes` — the executor's traced high-water mark over
-//!   a real parallel replay.
+//!   a real parallel replay, and
+//! * `runtime_lane_reserved_bytes` — the same reservation surfaced
+//!   through the serving façade (`Runtime::builder()` lane report),
+//!   which must equal `arena_bytes` exactly.
 //!
 //! On the single-stream rewrite, the DES prediction and the serial
 //! executor's measured peak must agree **exactly** (same order, same
@@ -27,6 +30,7 @@ use nimble::aot::tape::ReplayTape;
 use nimble::engine::executor::{ReplayContext, SyntheticKernel};
 use nimble::matching::MatchingAlgo;
 use nimble::models;
+use nimble::serving::Runtime;
 use nimble::sim::{kernel_cost, peak_reserved_bytes, simulate_tape, GpuSpec, HostProfile};
 use nimble::stream::rewrite::{rewrite, rewrite_single_stream};
 
@@ -42,6 +46,9 @@ struct Row {
     des_peak_bytes: u64,
     measured_peak_bytes: u64,
     single_stream_peak_match: bool,
+    /// The same reservation surfaced through the serving façade
+    /// (`Runtime` lane report) — must equal `arena_bytes` exactly.
+    runtime_lane_reserved_bytes: u64,
     pass: bool,
 }
 
@@ -80,10 +87,22 @@ fn measure(model: &'static str) -> Row {
     ctx_s.replay_serial(&[&input_s]).expect("serial replay");
     let single_stream_peak_match = predicted_s == ctx_s.peak_live_bytes();
 
+    // --- Façade cross-check: the serving runtime's per-lane report
+    // must surface the exact same packed reservation. ---
+    let server = Runtime::builder()
+        .model(model)
+        .buckets(&[1])
+        .build()
+        .expect("façade runtime for the memory cross-check");
+    let runtime_report = server.shutdown().expect("runtime report");
+    let runtime_lane_reserved_bytes =
+        runtime_report.lane(1).and_then(|l| l.reserved_bytes).unwrap_or(0);
+
     let pass = (plan.n_streams == 1 || arena_bytes < unshared_bytes)
         && des_peak_bytes <= arena_bytes
         && measured_peak_bytes <= arena_bytes
-        && single_stream_peak_match;
+        && single_stream_peak_match
+        && runtime_lane_reserved_bytes == arena_bytes;
     Row {
         model,
         n_tasks: tape.n_tasks(),
@@ -94,6 +113,7 @@ fn measure(model: &'static str) -> Row {
         des_peak_bytes,
         measured_peak_bytes,
         single_stream_peak_match,
+        runtime_lane_reserved_bytes,
         pass,
     }
 }
@@ -135,7 +155,8 @@ fn main() {
                 "  {{\"model\": \"{}\", \"n_tasks\": {}, \"n_streams\": {}, \
                  \"unshared_bytes\": {}, \"arena_bytes\": {}, \"serial_arena_bytes\": {}, \
                  \"des_peak_bytes\": {}, \"measured_peak_bytes\": {}, \
-                 \"single_stream_peak_match\": {}, \"pass\": {}}}",
+                 \"single_stream_peak_match\": {}, \"runtime_lane_reserved_bytes\": {}, \
+                 \"pass\": {}}}",
                 r.model,
                 r.n_tasks,
                 r.n_streams,
@@ -145,6 +166,7 @@ fn main() {
                 r.des_peak_bytes,
                 r.measured_peak_bytes,
                 r.single_stream_peak_match,
+                r.runtime_lane_reserved_bytes,
                 r.pass
             )
         })

@@ -1,6 +1,7 @@
 //! Serving-path benchmark: lane-scheduler throughput against the
-//! single-engine-thread baseline on a 4-bucket mixed workload, plus the
-//! classic offered-load sweep.
+//! single-engine-thread baseline on a 4-bucket mixed workload, the
+//! elastic-scaling burst trace, a deadline-shedding sweep, and the
+//! classic offered-load sweep — all driven through the `Runtime` façade.
 //!
 //! The headline measurement replays the *same* 64 pre-formed padded
 //! batches (round-robin over buckets 1/2/4/8 of a chain-shaped model, so
@@ -9,19 +10,20 @@
 //!
 //! * **serial** — one engine executing the batches back-to-back, exactly
 //!   what the PR-1 `NimbleServer` engine thread does, and
-//! * **lanes** — `LaneServer::submit_batch` through one lane per bucket,
-//!   so the four buckets overlap end-to-end.
+//! * **lanes** — `InferRequest::batch` submissions through one lane per
+//!   bucket, so the four buckets overlap end-to-end.
 //!
 //! It also runs the multi-lane DES over the same four tapes for the
 //! predicted overlap speedup, and writes everything to
 //! `BENCH_serving.json` (format documented in `rust/README.md`) — the
-//! CI artifact comparing DES-predicted vs measured overlap.
+//! CI artifact comparing DES-predicted vs measured overlap and
+//! DES-predicted vs measured deadline shedding.
 
 mod common;
 use common::section;
 use nimble::coordinator::InferEngine;
 use nimble::ops::{GraphBuilder, OpGraph};
-use nimble::serving::{LaneConfig, LaneServer, NimbleServer, TapeEngine};
+use nimble::serving::{InferOutcome, InferRequest, Runtime, TapeEngine};
 use nimble::sim::{kernel_cost, simulate_lanes, GpuSpec, HostProfile, KernelCost, LaneLoad};
 use nimble::util::Pcg32;
 use std::time::{Duration, Instant};
@@ -43,6 +45,15 @@ const BUCKETS: [usize; 4] = [1, 2, 4, 8];
 const DEPTH: usize = 12;
 const N_BATCHES: usize = 64;
 
+fn chain_engine(buckets: &[usize]) -> TapeEngine {
+    Runtime::builder()
+        .label("chain")
+        .graph_fn(|b| chain_graph(b, DEPTH))
+        .buckets(buckets)
+        .build_engine()
+        .expect("chain engine")
+}
+
 fn padded_batches(example_len: usize) -> Vec<(usize, Vec<f32>)> {
     let mut rng = Pcg32::new(4242);
     (0..N_BATCHES)
@@ -59,9 +70,7 @@ fn lane_vs_serial() -> String {
     section("lane scheduler vs single engine thread (4-bucket mixed chain workload)");
 
     // --- Serial baseline: one engine, batches back-to-back. ---
-    let mut serial_engine =
-        TapeEngine::from_graph_fn("chain", &BUCKETS, None, |b| chain_graph(b, DEPTH))
-            .expect("serial engine");
+    let mut serial_engine = chain_engine(&BUCKETS);
     let example_len = serial_engine.example_len();
     let batches = padded_batches(example_len);
     // Warm up every context once.
@@ -79,29 +88,29 @@ fn lane_vs_serial() -> String {
     // Caps derive from the workload so the one-shot burst below can
     // never trip load-shedding, whatever N_BATCHES/BUCKETS become.
     let per_lane_cap = N_BATCHES / BUCKETS.len() + 2;
-    let server = LaneServer::start(
-        &BUCKETS,
-        |bucket| TapeEngine::from_graph_fn("chain", &[bucket], None, |b| chain_graph(b, DEPTH)),
-        LaneConfig {
-            max_wait: Duration::from_millis(1),
-            lane_cap: per_lane_cap,
-            buffers_per_lane: per_lane_cap + 2,
-            ..Default::default()
-        },
-    )
-    .expect("lane server");
+    let server = Runtime::builder()
+        .label("chain")
+        .graph_fn(|b| chain_graph(b, DEPTH))
+        .buckets(&BUCKETS)
+        .max_wait(Duration::from_millis(1))
+        .lane_cap(per_lane_cap)
+        .buffers_per_lane(per_lane_cap + 2)
+        .build()
+        .expect("lane server");
     // Warm up each lane once.
     for &bucket in &BUCKETS {
         let z = vec![0.0f32; bucket * example_len];
-        server.submit_batch(bucket, z).unwrap().recv().unwrap().unwrap();
+        server.submit(InferRequest::batch(bucket, z)).unwrap().wait().unwrap();
     }
     let t0 = Instant::now();
     let pending: Vec<_> = batches
         .iter()
-        .map(|(bucket, input)| server.submit_batch(*bucket, input.clone()).unwrap())
+        .map(|(bucket, input)| {
+            server.submit(InferRequest::batch(*bucket, input.clone())).unwrap()
+        })
         .collect();
-    for rx in pending {
-        rx.recv().unwrap().unwrap();
+    for ticket in pending {
+        ticket.wait().unwrap();
     }
     let lane_wall_s = t0.elapsed().as_secs_f64();
     let report = server.shutdown().expect("report");
@@ -207,21 +216,18 @@ fn elastic_vs_static() -> String {
         } else {
             ScaleOptions::default() // max_lanes_per_bucket = 1: static
         };
-        let config = LaneConfig {
-            max_wait: Duration::from_millis(1),
-            lane_cap: HOT_PER_WAVE + 2,
-            buffers_per_lane: 4,
-            scale,
-            ..Default::default()
-        };
-        let server = LaneServer::start_elastic_tape(
-            &buckets,
-            SharedWorkerPool::new(WORKERS),
-            ArenaPool::new(),
-            config,
-            |b| chain_graph(b, DEPTH),
-        )
-        .expect("scaling bench server");
+        let server = Runtime::builder()
+            .label("chain")
+            .graph_fn(|b| chain_graph(b, DEPTH))
+            .buckets(&buckets)
+            .max_wait(Duration::from_millis(1))
+            .lane_cap(HOT_PER_WAVE + 2)
+            .buffers_per_lane(4)
+            .elastic(scale)
+            .shared_pool_handle(SharedWorkerPool::new(WORKERS))
+            .arena_pool(ArenaPool::new())
+            .build()
+            .expect("scaling bench server");
         let example_len = server.example_len();
         let mut rng = Pcg32::new(7171);
         let mut mk = |bucket: usize| -> Vec<f32> {
@@ -229,19 +235,20 @@ fn elastic_vs_static() -> String {
         };
         // Warm up both buckets once (outside the timed region).
         for &b in &buckets {
-            server.submit_batch(b, vec![0.0; b * example_len]).unwrap().recv().unwrap().unwrap();
+            let z = vec![0.0; b * example_len];
+            server.submit(InferRequest::batch(b, z)).unwrap().wait().unwrap();
         }
         let t0 = Instant::now();
         for wave in 0..WAVES {
             let mut pending = Vec::new();
             for _ in 0..HOT_PER_WAVE {
-                pending.push(server.submit_batch(HOT, mk(HOT)).unwrap());
+                pending.push(server.submit(InferRequest::batch(HOT, mk(HOT))).unwrap());
             }
             for _ in 0..COLD_PER_WAVE {
-                pending.push(server.submit_batch(COLD, mk(COLD)).unwrap());
+                pending.push(server.submit(InferRequest::batch(COLD, mk(COLD))).unwrap());
             }
-            for rx in pending {
-                rx.recv().unwrap().unwrap();
+            for ticket in pending {
+                ticket.wait().unwrap();
             }
             if wave + 1 < WAVES {
                 std::thread::sleep(gap);
@@ -324,7 +331,148 @@ fn elastic_vs_static() -> String {
     )
 }
 
-fn sweep(label: &str, start: impl Fn() -> NimbleServer) {
+/// Deadline-shedding sweep: a burst of same-bucket batches under a
+/// per-request deadline budget of `k ×` the measured per-batch service
+/// time, swept over `k`. Measured shed counts come from the live lane
+/// scheduler (`ServingReport::deadline_shed`), predicted counts from
+/// the deadline-aware DES (`simulate_lanes_deadline`) over the same
+/// arrival pattern in *its* service-time units — with batch `j` of a
+/// simultaneous burst starting at `j × service`, both sides should shed
+/// the tail `j ≥ k`.
+fn deadline_sweep() -> String {
+    use nimble::aot::tape::ReplayTape;
+    use nimble::matching::MatchingAlgo;
+    use nimble::sim::{simulate_lanes_deadline, LaneTraffic};
+    use nimble::stream::rewrite::rewrite;
+
+    section("deadline shedding vs budget (single-bucket chain burst, measured vs DES)");
+
+    const BUCKET: usize = 4;
+    const BURST: usize = 8;
+    let budgets: [f64; 4] = [0.5, 1.5, 3.5, f64::INFINITY];
+
+    // Measured per-batch service time: warmed direct replays.
+    let mut probe = chain_engine(&[BUCKET]);
+    let example_len = probe.example_len();
+    let zeros = vec![0.0f32; BUCKET * example_len];
+    probe.infer_batch(BUCKET, &zeros).unwrap(); // warm-up
+    let mut samples: Vec<f64> = (0..5)
+        .map(|_| {
+            let t0 = Instant::now();
+            probe.infer_batch(BUCKET, &zeros).unwrap();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(f64::total_cmp);
+    let service_s = samples[samples.len() / 2];
+
+    // DES service time for the same tape.
+    let dev = GpuSpec::v100();
+    let g = chain_graph(BUCKET, DEPTH);
+    let costs: Vec<KernelCost> =
+        (0..g.n_nodes()).map(|v| kernel_cost(g.node(v), &dev)).collect();
+    let tape = ReplayTape::for_op_graph(&g, &rewrite(&g, MatchingAlgo::HopcroftKarp), 4096);
+
+    let mut rows = Vec::new();
+    let mut shed_curve = Vec::new();
+    for &budget_x in &budgets {
+        // --- Measured: one lane, BURST simultaneous batches. ---
+        let server = Runtime::builder()
+            .label("chain")
+            .graph_fn(|b| chain_graph(b, DEPTH))
+            .buckets(&[BUCKET])
+            .max_wait(Duration::from_millis(1))
+            .lane_cap(BURST + 2)
+            .buffers_per_lane(BURST + 2)
+            .build()
+            .expect("deadline sweep server");
+        server.submit(InferRequest::batch(BUCKET, zeros.clone())).unwrap().wait().unwrap();
+        let mut rng = Pcg32::new(99);
+        let pending: Vec<_> = (0..BURST)
+            .map(|_| {
+                let input: Vec<f32> = (0..BUCKET * example_len)
+                    .map(|_| rng.gen_f32_range(-1.0, 1.0))
+                    .collect();
+                let req = InferRequest::batch(BUCKET, input);
+                let req = if budget_x.is_finite() {
+                    req.deadline_in(Duration::from_secs_f64(budget_x * service_s))
+                } else {
+                    req
+                };
+                server.submit(req).unwrap()
+            })
+            .collect();
+        let (mut measured_completed, mut measured_shed) = (0usize, 0usize);
+        for ticket in pending {
+            match ticket.outcome().unwrap() {
+                InferOutcome::Output(_) => measured_completed += 1,
+                InferOutcome::DeadlineShed => measured_shed += 1,
+                InferOutcome::Failed(e) => panic!("sweep batch failed: {e}"),
+            }
+        }
+        let report = server.shutdown().expect("sweep report");
+        assert_eq!(report.deadline_shed, measured_shed, "report must match client outcomes");
+
+        // --- DES over the same burst in its own service units. ---
+        let des_service =
+            nimble::sim::simulate_tape(&tape, &costs, HostProfile::nimble(), dev.clone())
+                .total_s;
+        let deadline = if budget_x.is_finite() {
+            budget_x * des_service
+        } else {
+            f64::INFINITY
+        };
+        let batches: Vec<(f64, f64)> = (0..BURST).map(|_| (0.0, deadline)).collect();
+        let des = simulate_lanes_deadline(
+            &[LaneTraffic { tape: &tape, costs: &costs, batches: &batches }],
+            HostProfile::nimble(),
+            dev.clone(),
+        );
+
+        let label =
+            if budget_x.is_finite() { format!("{budget_x:.1}") } else { "inf".to_string() };
+        println!(
+            "budget={label}x service: measured completed={measured_completed} \
+             shed={measured_shed}  DES completed={} shed={}",
+            des.completed(),
+            des.shed()
+        );
+        shed_curve.push(measured_shed);
+        assert_eq!(
+            measured_completed + measured_shed,
+            BURST,
+            "accounting must close at every budget"
+        );
+        let budget_json = if budget_x.is_finite() {
+            format!("{budget_x}")
+        } else {
+            "null".to_string()
+        };
+        rows.push(format!(
+            "    {{\"budget_x\": {budget_json}, \"measured_completed\": {measured_completed}, \
+             \"measured_shed\": {measured_shed}, \"des_completed\": {}, \"des_shed\": {}}}",
+            des.completed(),
+            des.shed()
+        ));
+    }
+
+    // Pass: an infinite budget sheds nothing, and shedding is monotone
+    // non-increasing in the budget (timing noise may move a marginal
+    // batch by one, never break monotonicity across the 1x steps).
+    let pass = *shed_curve.last().unwrap() == 0
+        && shed_curve.windows(2).all(|w| w[1] <= w[0]);
+    println!("deadline sweep [{}]", if pass { "PASS" } else { "FAIL" });
+
+    format!(
+        "{{\n  \"workload\": \"deadline-sweep-chain\",\n  \"bucket\": {BUCKET},\n  \
+         \"burst\": {BURST},\n  \"chain_depth\": {DEPTH},\n  \
+         \"measured_service_s\": {service_s:.6},\n  \"pass\": {pass},\n  \
+         \"sweep\": [\n{}\n  ]\n}}",
+        rows.join(",\n")
+    )
+}
+
+fn sweep(label: &str, start: impl Fn() -> Runtime) {
     for rate in [5.0f64, 20.0] {
         let server = start();
         let len = server.example_len();
@@ -333,11 +481,11 @@ fn sweep(label: &str, start: impl Fn() -> NimbleServer) {
         let mut pending = Vec::new();
         for _ in 0..n {
             let input: Vec<f32> = (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
-            pending.push(server.infer_async(input).unwrap());
+            pending.push(server.submit(InferRequest::new(input)).unwrap());
             std::thread::sleep(Duration::from_secs_f64(rng.gen_exp(rate)));
         }
-        for rx in pending {
-            rx.recv().unwrap().unwrap();
+        for ticket in pending {
+            ticket.wait().unwrap();
         }
         let report = server.shutdown().expect("report");
         println!("{label} @ ~{rate} req/s:\n{}", report.render());
@@ -346,33 +494,21 @@ fn sweep(label: &str, start: impl Fn() -> NimbleServer) {
 
 fn lane_sweep() {
     section("serving load sweep (lane scheduler, MiniInception, per-bucket lanes)");
-    for rate in [5.0f64, 20.0] {
-        let server = LaneServer::start(
-            &[1, 8],
-            |bucket| TapeEngine::new("mini_inception", &[bucket]),
-            LaneConfig { max_wait: Duration::from_millis(3), ..Default::default() },
-        )
-        .expect("lane server");
-        let len = server.example_len();
-        let mut rng = Pcg32::new(9);
-        let mut pending = Vec::new();
-        for _ in 0..24 {
-            let input: Vec<f32> = (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
-            pending.push(server.infer_async(input).unwrap());
-            std::thread::sleep(Duration::from_secs_f64(rng.gen_exp(rate)));
-        }
-        for rx in pending {
-            rx.recv().unwrap().unwrap();
-        }
-        let report = server.shutdown().expect("report");
-        println!("lane-server @ ~{rate} req/s:\n{}", report.render());
-    }
+    sweep("lane-server", || {
+        Runtime::builder()
+            .model("mini_inception")
+            .buckets(&[1, 8])
+            .max_wait(Duration::from_millis(3))
+            .build()
+            .expect("lane server")
+    });
 }
 
 fn main() {
     let lane_entry = lane_vs_serial();
     let scaling_entry = elastic_vs_static();
-    let json = format!("[\n{lane_entry},\n{scaling_entry}\n]\n");
+    let deadline_entry = deadline_sweep();
+    let json = format!("[\n{lane_entry},\n{scaling_entry},\n{deadline_entry}\n]\n");
     match std::fs::write("BENCH_serving.json", &json) {
         Ok(()) => println!("\nwrote BENCH_serving.json"),
         Err(e) => println!("\ncould not write BENCH_serving.json: {e}"),
@@ -380,11 +516,13 @@ fn main() {
 
     section("serving load sweep (tape replay engine, MiniInception, per-bucket contexts)");
     sweep("tape-engine", || {
-        NimbleServer::start_with(
-            || TapeEngine::new("mini_inception", &[1, 8]),
-            Duration::from_millis(3),
-        )
-        .expect("tape server")
+        Runtime::builder()
+            .model("mini_inception")
+            .buckets(&[1, 8])
+            .single_thread()
+            .max_wait(Duration::from_millis(3))
+            .build()
+            .expect("tape server")
     });
 
     lane_sweep();
@@ -392,15 +530,15 @@ fn main() {
     #[cfg(feature = "xla")]
     {
         use nimble::coordinator::EngineConfig;
-        use nimble::serving::ServerConfig;
         if nimble::runtime::artifacts_available() {
             section("serving load sweep (real PJRT replay engine, MiniInception)");
             sweep("pjrt-engine", || {
-                NimbleServer::start(ServerConfig {
-                    engine: EngineConfig::default(),
-                    max_wait: Duration::from_millis(3),
-                })
-                .expect("server")
+                Runtime::builder()
+                    .artifacts(EngineConfig::default())
+                    .single_thread()
+                    .max_wait(Duration::from_millis(3))
+                    .build()
+                    .expect("server")
             });
         } else {
             println!("\nSKIP real-engine sweep: run `make artifacts` first");

@@ -15,12 +15,17 @@
 //!   discrete-event virtual-GPU simulator that replays the *same* tapes to
 //!   predict multi-stream speedups, framework baseline profiles, an
 //!   operator-graph model zoo covering every network in the paper's
-//!   evaluation, and a batched serving front-end whose batch buckets
-//!   replay on independent contexts — pipelined end-to-end by the lane
-//!   scheduler ([`serving::lanes`]): a bounded MPMC admission queue
-//!   feeding one lane (thread + engine) per batch bucket, validated
-//!   bit-exact against serial replay by a randomized differential
-//!   harness (`tests/prop_harness.rs`).
+//!   evaluation, and a batched serving front-end behind ONE runtime
+//!   façade ([`serving::Runtime`]): a fluent builder composes engines,
+//!   batch buckets, pools and elastic scaling, and exactly two submit
+//!   paths — blocking `infer(InferRequest)` and waitable
+//!   `submit(InferRequest) -> Ticket` — carry bucket hints and
+//!   per-request **deadlines** (expired-while-queued requests are shed
+//!   before execution). Batch buckets replay on independent contexts,
+//!   pipelined end-to-end by the lane scheduler ([`serving::lanes`]): a
+//!   bounded MPMC admission queue feeding one lane (thread + engine)
+//!   per batch bucket, validated bit-exact against serial replay by a
+//!   randomized differential harness (`tests/prop_harness.rs`).
 //! * **L2 (python/compile/model.py)** — JAX computation graphs (built-time
 //!   only), lowered per-operator to HLO text artifacts.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (MXU-tiled matmul,

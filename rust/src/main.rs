@@ -12,8 +12,11 @@
 //!   sim <model> <system>  one simulated inference run in detail
 //!   infer [--batch N] [--iters K] [--mode replay|eager]   (feature xla)
 //!                         run MiniInception on the real XLA path
-//!   serve [--requests N] [--rate RPS] [--mode replay|eager] (feature xla)
-//!                         batched serving demo over the real XLA path
+//!   serve [--requests N] [--rate RPS] [--deadline-ms D]
+//!         [--mode replay|eager (feature xla) | --model NAME (tape path)]
+//!                         batched serving demo through the Runtime
+//!                         façade: the real XLA path with the feature,
+//!                         tape-backed lanes without it
 //!   train [--steps N]     run the AOT train-step artifact   (feature xla)
 
 use anyhow::{bail, Context, Result};
@@ -280,44 +283,73 @@ fn cmd_infer(_args: &[String]) -> Result<()> {
     bail!("`infer` needs the real PJRT runtime — rebuild with `--features xla` and run `make artifacts`")
 }
 
-#[cfg(feature = "xla")]
+/// `nimble serve`: drive the Runtime façade with Poisson traffic. The
+/// PJRT artifact registry serves when built with `--features xla`
+/// (`--mode replay|eager`); otherwise the tape-backed model zoo serves
+/// on per-bucket lanes (`--model`, default mini_inception).
 fn cmd_serve(args: &[String]) -> Result<()> {
-    use nimble::coordinator::{EngineConfig, ExecMode};
-    use nimble::serving::{NimbleServer, ServerConfig};
+    use nimble::serving::{InferRequest, Runtime};
     use nimble::util::Pcg32;
     use std::time::Duration;
 
     let n: usize = flag(args, "--requests").map(|s| s.parse()).transpose()?.unwrap_or(200);
     let rate: f64 = flag(args, "--rate").map(|s| s.parse()).transpose()?.unwrap_or(200.0);
-    let mode = match flag(args, "--mode").as_deref() {
-        Some("eager") => ExecMode::Eager,
-        _ => ExecMode::Replay,
+    let deadline_ms: Option<u64> =
+        flag(args, "--deadline-ms").map(|s| s.parse()).transpose()?;
+
+    #[cfg(feature = "xla")]
+    let server = {
+        use nimble::coordinator::{EngineConfig, ExecMode};
+        let mode = match flag(args, "--mode").as_deref() {
+            Some("eager") => ExecMode::Eager,
+            _ => ExecMode::Replay,
+        };
+        nimble::runtime::require_artifacts()?;
+        println!("starting PJRT server (mode {mode:?}, {n} requests @ {rate} rps)...");
+        Runtime::builder()
+            .artifacts(EngineConfig { mode, ..Default::default() })
+            .single_thread()
+            .max_wait(Duration::from_millis(2))
+            .build()?
     };
-    nimble::runtime::require_artifacts()?;
-    println!("starting server (mode {mode:?}, {n} requests @ {rate} rps)...");
-    let server = NimbleServer::start(ServerConfig {
-        engine: EngineConfig { mode, ..Default::default() },
-        max_wait: Duration::from_millis(2),
-    })?;
+    #[cfg(not(feature = "xla"))]
+    let server = {
+        let model = flag(args, "--model").unwrap_or_else(|| "mini_inception".to_string());
+        println!("starting tape-backed lane server ({model}, {n} requests @ {rate} rps)...");
+        Runtime::builder()
+            .model(&model)
+            .buckets(&[1, 8])
+            .max_wait(Duration::from_millis(2))
+            .build()?
+    };
+
     let len = server.example_len();
     let mut rng = Pcg32::new(1);
     let mut pending = Vec::with_capacity(n);
     for _ in 0..n {
         let input: Vec<f32> = (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
-        pending.push(server.infer_async(input)?);
+        let mut req = InferRequest::new(input);
+        if let Some(ms) = deadline_ms {
+            req = req.deadline_in(Duration::from_millis(ms));
+        }
+        pending.push(server.submit(req)?);
         std::thread::sleep(Duration::from_secs_f64(rng.gen_exp(rate)));
     }
-    for rx in pending {
-        rx.recv().context("response lost")?.map_err(anyhow::Error::msg)?;
+    let mut shed = 0usize;
+    for ticket in pending {
+        use nimble::serving::InferOutcome;
+        match ticket.outcome().context("response lost")? {
+            InferOutcome::Output(_) => {}
+            InferOutcome::DeadlineShed => shed += 1,
+            InferOutcome::Failed(e) => return Err(anyhow::anyhow!(e)),
+        }
     }
     let report = server.shutdown()?;
+    if shed > 0 {
+        println!("({shed} requests shed past their {} ms deadline)", deadline_ms.unwrap_or(0));
+    }
     println!("{}", report.render());
     Ok(())
-}
-
-#[cfg(not(feature = "xla"))]
-fn cmd_serve(_args: &[String]) -> Result<()> {
-    bail!("`serve` needs the real PJRT runtime — rebuild with `--features xla` and run `make artifacts`")
 }
 
 #[cfg(feature = "xla")]

@@ -47,11 +47,28 @@
 //!   bit-identical to the static single-lane scheduler (asserted by the
 //!   scaling property in `tests/prop_harness.rs`).
 //!
+//! * Requests carry optional **deadlines**
+//!   ([`RequestOptions::deadline`](crate::serving::RequestOptions)): a
+//!   request whose deadline expires while it waits — batcher queue,
+//!   lane stage, or lane job queue — is shed at lane-pop time, before
+//!   the engine runs it. Shed requests resolve their tickets as
+//!   [`InferOutcome::DeadlineShed`](crate::serving::InferOutcome) and
+//!   count into [`LaneStat::deadline_shed`]; execution already started
+//!   is never interrupted, and surviving rows of a partially-shed batch
+//!   stay bit-identical to the oracle. The DES predicts shed counts
+//!   offline ([`crate::sim::simulate_lanes_deadline`]).
+//!
 //! Shutdown closes the admission queue first and then drains everything
 //! already admitted: a request whose `push` succeeded is always
-//! answered; later requests fail fast with "server stopped". The
-//! randomized differential harness (`tests/prop_harness.rs`) asserts
-//! lane-pipelined outputs are bit-identical to the serial-replay oracle.
+//! answered (served or deadline-shed); later requests fail fast with
+//! "server stopped". The randomized differential harness
+//! (`tests/prop_harness.rs`) asserts lane-pipelined outputs are
+//! bit-identical to the serial-replay oracle.
+//!
+//! Construct through [`Runtime::builder()`](crate::serving::Runtime) —
+//! the `LaneServer::start*` constructors and the `infer*` /
+//! `submit_batch` method variants are deprecated shims over the same
+//! internals.
 
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
@@ -64,6 +81,7 @@ use std::time::{Duration, Instant};
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::{LaneStat, ServingReport};
 use super::queue::{Bounded, PopResult, PushError};
+use super::runtime::ReqToken;
 use crate::coordinator::InferEngine;
 use crate::engine::executor::panic_message;
 use crate::util::stats::Summary;
@@ -149,11 +167,12 @@ enum Admit {
     /// One example through the dynamic batcher. `hint` optionally names
     /// the bucket (and so the lane) the request's batch must route to —
     /// honored over queue-depth routing when it names a compiled bucket.
-    Infer { input: Vec<f32>, hint: Option<usize>, reply: Reply },
+    /// `deadline` sheds the request if it still waits when it expires.
+    Infer { input: Vec<f32>, hint: Option<usize>, deadline: Option<Instant>, reply: Reply },
     /// A pre-formed padded batch straight to `bucket`'s lane (benches,
     /// the differential harness, upstream batch-aware clients). Replies
     /// with the full padded output.
-    Batch { bucket: usize, input: Vec<f32>, reply: Reply },
+    Batch { bucket: usize, input: Vec<f32>, deadline: Option<Instant>, reply: Reply },
     Shutdown { reply: mpsc::Sender<ServingReport> },
 }
 
@@ -161,10 +180,10 @@ enum Admit {
 struct LaneJob {
     /// Padded batch input (pooled; returned to the lane's pool after use).
     input: Vec<f32>,
-    /// Per-request reply channels in row order (batcher path).
-    tokens: Vec<(Reply, Instant)>,
-    /// Whole-batch reply (pre-formed-batch path).
-    batch_reply: Option<Reply>,
+    /// Per-request reply tokens in row order (batcher path).
+    tokens: Vec<(ReqToken, Instant)>,
+    /// Whole-batch reply token (pre-formed-batch path).
+    batch: Option<ReqToken>,
     /// When the dispatcher routed the job (queue-wait accounting).
     routed: Instant,
 }
@@ -292,11 +311,11 @@ impl LaneGroup {
 }
 
 fn fail_job(job: LaneJob, msg: &str) {
-    if let Some(reply) = job.batch_reply {
-        let _ = reply.send(Err(msg.to_string()));
+    if let Some(tok) = job.batch {
+        let _ = tok.reply.send(Err(msg.to_string()));
     }
-    for (reply, _) in job.tokens {
-        let _ = reply.send(Err(msg.to_string()));
+    for (tok, _) in job.tokens {
+        let _ = tok.reply.send(Err(msg.to_string()));
     }
 }
 
@@ -367,8 +386,35 @@ where
 
     let mut wait_sum = 0.0f64;
     while let Some(job) = jobs.pop() {
-        let LaneJob { input, tokens, batch_reply, routed } = job;
+        let LaneJob { input, tokens, batch, routed } = job;
         let started = Instant::now();
+        // Deadline shedding happens HERE, at pop time: a request whose
+        // deadline expired while it was staged or queued is resolved as
+        // shed and never reaches the engine. Shed rows stay in the
+        // padded input (surviving rows keep their positions); a job
+        // with nothing live left skips the engine entirely.
+        if let Some(tok) = &batch {
+            if tok.expired(started) {
+                tok.shed();
+                stat.deadline_shed += 1;
+                let _ = free.try_push(input);
+                done_jobs.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+        }
+        let shed: Vec<bool> = tokens.iter().map(|(tok, _)| tok.expired(started)).collect();
+        let n_live = shed.iter().filter(|s| !**s).count();
+        for ((tok, _), is_shed) in tokens.iter().zip(&shed) {
+            if *is_shed {
+                tok.shed();
+                stat.deadline_shed += 1;
+            }
+        }
+        if batch.is_none() && n_live == 0 {
+            let _ = free.try_push(input);
+            done_jobs.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
         wait_sum += started.duration_since(routed).as_secs_f64();
         stat.n_batches += 1;
         // An engine panic must not kill the lane: poison shows up as
@@ -394,30 +440,37 @@ where
         });
         match result {
             Ok(out) => {
-                if let Some(reply) = batch_reply {
+                if let Some(tok) = batch {
                     // A pre-formed batch counts as one request of
                     // `bucket` padded rows.
                     stat.n_requests += 1;
                     fill_sum += bucket;
                     latencies.push(done.duration_since(routed).as_secs_f64());
-                    let _ = reply.send(Ok(out));
+                    let _ = tok.reply.send(Ok(out));
                 } else {
-                    fill_sum += tokens.len();
-                    for (i, (reply, enqueued)) in tokens.into_iter().enumerate() {
+                    fill_sum += n_live;
+                    for (i, ((tok, enqueued), is_shed)) in
+                        tokens.into_iter().zip(shed).enumerate()
+                    {
+                        if is_shed {
+                            continue;
+                        }
                         stat.n_requests += 1;
                         latencies.push(done.duration_since(enqueued).as_secs_f64());
                         let row = out[i * output_len..(i + 1) * output_len].to_vec();
-                        let _ = reply.send(Ok(row));
+                        let _ = tok.reply.send(Ok(row));
                     }
                 }
             }
             Err(err) => {
                 let msg = format!("{err:#}");
-                if let Some(reply) = batch_reply {
-                    let _ = reply.send(Err(msg));
+                if let Some(tok) = batch {
+                    let _ = tok.reply.send(Err(msg));
                 } else {
-                    for (reply, _) in tokens {
-                        let _ = reply.send(Err(msg.clone()));
+                    for ((tok, _), is_shed) in tokens.into_iter().zip(shed) {
+                        if !is_shed {
+                            let _ = tok.reply.send(Err(msg.clone()));
+                        }
                     }
                 }
             }
@@ -522,10 +575,12 @@ where
 /// Route a pre-formed batch to its bucket's least-loaded lane, spawning
 /// an elastic lane when that lane is saturated and the scaling policy
 /// allows, and shedding load only once the group cannot grow.
+#[allow(clippy::too_many_arguments)]
 fn route_batch<E, F>(
     group: &mut LaneGroup,
     stage_cap: usize,
     input: Vec<f32>,
+    deadline: Option<Instant>,
     reply: Reply,
     config: &LaneConfig,
     example_len: usize,
@@ -552,7 +607,7 @@ fn route_batch<E, F>(
     lane.stage(LaneJob {
         input,
         tokens: Vec::new(),
-        batch_reply: Some(reply),
+        batch: Some(ReqToken { reply, deadline }),
         routed: Instant::now(),
     });
     flush_staged(lane);
@@ -567,7 +622,7 @@ fn admit_one<E, F>(
     msg: Admit,
     groups: &mut [LaneGroup],
     group_index: &HashMap<usize, usize>,
-    batcher: &mut Batcher<Reply>,
+    batcher: &mut Batcher<ReqToken>,
     example_len: usize,
     stage_cap: usize,
     config: &LaneConfig,
@@ -577,7 +632,7 @@ fn admit_one<E, F>(
     F: Fn(usize) -> Result<E> + Send + Sync + 'static,
 {
     match msg {
-        Admit::Infer { input, hint, reply } => {
+        Admit::Infer { input, hint, deadline, reply } => {
             if input.len() != example_len {
                 let _ =
                     reply.send(Err(format!("bad input length {} != {example_len}", input.len())));
@@ -586,12 +641,21 @@ fn admit_one<E, F>(
                 if let Some(gi) = hint.and_then(|h| group_index.get(&h)) {
                     groups[*gi].hinted_since_scale += 1;
                 }
-                batcher.push_hinted(reply, input, hint);
+                batcher.push_hinted(ReqToken { reply, deadline }, input, hint);
             }
         }
-        Admit::Batch { bucket, input, reply } => match group_index.get(&bucket) {
+        Admit::Batch { bucket, input, deadline, reply } => match group_index.get(&bucket) {
             Some(&gi) if input.len() == bucket * example_len => {
-                route_batch(&mut groups[gi], stage_cap, input, reply, config, example_len, factory);
+                route_batch(
+                    &mut groups[gi],
+                    stage_cap,
+                    input,
+                    deadline,
+                    reply,
+                    config,
+                    example_len,
+                    factory,
+                );
             }
             Some(_) => {
                 let _ = reply.send(Err(format!(
@@ -694,7 +758,7 @@ fn dispatcher_thread<E, F>(
 {
     let group_index: HashMap<usize, usize> =
         groups.iter().enumerate().map(|(i, g)| (g.bucket, i)).collect();
-    let mut batcher: Batcher<Reply> = Batcher::new(policy);
+    let mut batcher: Batcher<ReqToken> = Batcher::new(policy);
     let started = Instant::now();
     let mut shutdown_reply: Option<mpsc::Sender<ServingReport>> = None;
     // Admission closed (by shutdown or by the server handle dropping).
@@ -847,7 +911,7 @@ fn dispatcher_thread<E, F>(
             lane.stage(LaneJob {
                 input: buf,
                 tokens: formed.tokens,
-                batch_reply: None,
+                batch: None,
                 routed: Instant::now(),
             });
             flush_staged(lane);
@@ -893,6 +957,7 @@ fn dispatcher_thread<E, F>(
             Summary::from_samples(all_latencies)
         },
         mean_batch_fill: if n_batches == 0 { 0.0 } else { fill_sum as f64 / n_batches as f64 },
+        deadline_shed: lane_stats.iter().map(|l| l.deadline_shed).sum(),
         lanes: lane_stats,
     };
     if let Some(reply) = shutdown_reply {
@@ -922,41 +987,15 @@ impl LaneClient {
         &self.batch_sizes
     }
 
-    /// Blocking inference of one example. Blocks at admission when the
-    /// server is saturated (bounded queue).
-    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
-        let rx = self.infer_async(input)?;
-        rx.recv().context("server dropped request")?.map_err(anyhow::Error::msg)
-    }
-
-    /// Fire an async request; returns the reply channel.
-    pub fn infer_async(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
-        self.submit_infer(input, None)
-    }
-
-    /// Blocking inference with a bucket hint: the dispatcher routes the
-    /// request's batch to `bucket`'s lane (honored over queue-depth
-    /// routing) — sequence-length-aware clients pick their own lane.
-    pub fn infer_hinted(&self, input: Vec<f32>, bucket: usize) -> Result<Vec<f32>> {
-        let rx = self.infer_hinted_async(input, bucket)?;
-        rx.recv().context("server dropped request")?.map_err(anyhow::Error::msg)
-    }
-
-    /// Async variant of [`infer_hinted`](Self::infer_hinted). The hint
-    /// must name a compiled bucket.
-    pub fn infer_hinted_async(
-        &self,
-        input: Vec<f32>,
-        bucket: usize,
-    ) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
-        anyhow::ensure!(self.batch_sizes.contains(&bucket), "no lane for bucket {bucket}");
-        self.submit_infer(input, Some(bucket))
-    }
-
-    fn submit_infer(
+    /// The one single-example submit path: enqueue
+    /// `(input, hint, deadline)` and hand back the raw reply channel.
+    /// [`RuntimeHandle`](crate::serving::RuntimeHandle) wraps this (and
+    /// validates); the deprecated `infer*` variants are shims over it.
+    pub(crate) fn submit_raw(
         &self,
         input: Vec<f32>,
         hint: Option<usize>,
+        deadline: Option<Instant>,
     ) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
         anyhow::ensure!(
             input.len() == self.example_len,
@@ -966,20 +1005,20 @@ impl LaneClient {
         );
         let (reply, rx) = mpsc::channel();
         self.admission
-            .push(Admit::Infer { input, hint, reply })
+            .push(Admit::Infer { input, hint, deadline, reply })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         Ok(rx)
     }
 
-    /// Submit a pre-formed padded batch straight to `bucket`'s lane.
-    /// Replies with the full padded output (`bucket * output_len`
-    /// values) — the deterministic-composition path the differential
-    /// harness and the throughput bench drive. May reply with an
+    /// The one pre-formed-batch submit path: route a padded batch
+    /// straight to `bucket`'s lane; the reply carries the full padded
+    /// output (`bucket * output_len` values). May reply with an
     /// explicit overload error when the lane is saturated (load shed).
-    pub fn submit_batch(
+    pub(crate) fn submit_batch_raw(
         &self,
         bucket: usize,
         input: Vec<f32>,
+        deadline: Option<Instant>,
     ) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
         anyhow::ensure!(self.batch_sizes.contains(&bucket), "no lane for bucket {bucket}");
         anyhow::ensure!(
@@ -990,9 +1029,55 @@ impl LaneClient {
         );
         let (reply, rx) = mpsc::channel();
         self.admission
-            .push(Admit::Batch { bucket, input, reply })
+            .push(Admit::Batch { bucket, input, deadline, reply })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         Ok(rx)
+    }
+
+    /// Blocking inference of one example. Blocks at admission when the
+    /// server is saturated (bounded queue).
+    #[deprecated(note = "build a Runtime and call infer(InferRequest) — see rust/README.md")]
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        let rx = self.submit_raw(input, None, None)?;
+        rx.recv().context("server dropped request")?.map_err(anyhow::Error::msg)
+    }
+
+    /// Fire an async request; returns the reply channel.
+    #[deprecated(note = "use Runtime::submit(InferRequest) -> Ticket")]
+    pub fn infer_async(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
+        self.submit_raw(input, None, None)
+    }
+
+    /// Blocking inference with a bucket hint: the dispatcher routes the
+    /// request's batch to `bucket`'s lane (honored over queue-depth
+    /// routing) — sequence-length-aware clients pick their own lane.
+    #[deprecated(note = "use Runtime::infer(InferRequest::new(..).hint(bucket))")]
+    pub fn infer_hinted(&self, input: Vec<f32>, bucket: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(self.batch_sizes.contains(&bucket), "no lane for bucket {bucket}");
+        let rx = self.submit_raw(input, Some(bucket), None)?;
+        rx.recv().context("server dropped request")?.map_err(anyhow::Error::msg)
+    }
+
+    /// Async variant of [`infer_hinted`](Self::infer_hinted). The hint
+    /// must name a compiled bucket.
+    #[deprecated(note = "use Runtime::submit(InferRequest::new(..).hint(bucket)) -> Ticket")]
+    pub fn infer_hinted_async(
+        &self,
+        input: Vec<f32>,
+        bucket: usize,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
+        anyhow::ensure!(self.batch_sizes.contains(&bucket), "no lane for bucket {bucket}");
+        self.submit_raw(input, Some(bucket), None)
+    }
+
+    /// Submit a pre-formed padded batch straight to `bucket`'s lane.
+    #[deprecated(note = "use Runtime::submit(InferRequest::batch(bucket, input)) -> Ticket")]
+    pub fn submit_batch(
+        &self,
+        bucket: usize,
+        input: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
+        self.submit_batch_raw(bucket, input, None)
     }
 }
 
@@ -1009,8 +1094,13 @@ impl LaneServer {
     /// Start one lane per bucket in `batch_sizes`. The factory runs once
     /// per lane *on that lane's thread* (non-`Send` engines work) and
     /// must return an engine serving at least that bucket; the call
-    /// blocks until every lane finished building.
-    pub fn start<E, F>(batch_sizes: &[usize], factory: F, config: LaneConfig) -> Result<LaneServer>
+    /// blocks until every lane finished building. The public spellings
+    /// are `Runtime::builder().build()` / `build_with_factory()`.
+    pub(crate) fn start_inner<E, F>(
+        batch_sizes: &[usize],
+        factory: F,
+        config: LaneConfig,
+    ) -> Result<LaneServer>
     where
         E: InferEngine + 'static,
         F: Fn(usize) -> Result<E> + Send + Sync + 'static,
@@ -1103,6 +1193,18 @@ impl LaneServer {
         })
     }
 
+    /// Start one lane per bucket over a custom engine factory.
+    #[deprecated(
+        note = "use Runtime::builder().build() or build_with_factory() — see rust/README.md"
+    )]
+    pub fn start<E, F>(batch_sizes: &[usize], factory: F, config: LaneConfig) -> Result<LaneServer>
+    where
+        E: InferEngine + 'static,
+        F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+    {
+        Self::start_inner(batch_sizes, factory, config)
+    }
+
     /// Start one [`TapeEngine`](super::TapeEngine) lane per bucket, all
     /// lanes drawing their per-bucket slot arenas from the given shared
     /// [`ArenaPool`](crate::aot::memory::ArenaPool) — a restarted or
@@ -1110,6 +1212,7 @@ impl LaneServer {
     /// instead of growing the heap. The caller keeps a clone of the pool
     /// for stats; per-lane reserved footprints surface in
     /// [`LaneStat::reserved_bytes`].
+    #[deprecated(note = "use Runtime::builder().graph_fn(..).arena_pool(pool).build()")]
     pub fn start_pooled_tape<G>(
         batch_sizes: &[usize],
         worker_cap: Option<usize>,
@@ -1127,9 +1230,9 @@ impl LaneServer {
                 arena_pool: Some(pool.clone()),
                 ..Default::default()
             };
-            TapeEngine::from_graph_fn_opts("pooled-lane", &[bucket], opts, build.clone())
+            TapeEngine::build_opts("pooled-lane", &[bucket], opts, build.clone())
         };
-        Self::start(batch_sizes, factory, config)
+        Self::start_inner(batch_sizes, factory, config)
     }
 
     /// Start an **elastic** tape-engine server: every lane (seed and
@@ -1142,6 +1245,10 @@ impl LaneServer {
     /// worker threads never exceed `workers.n_workers()`. Cross-lane
     /// steals surface in [`LaneStat::steals`], scaling decisions in
     /// [`LaneStat::lanes_spawned`] / [`LaneStat::lanes_retired`].
+    #[deprecated(
+        note = "use Runtime::builder().graph_fn(..).elastic(scale)\
+                .shared_pool_handle(workers).arena_pool(pool).build()"
+    )]
     pub fn start_elastic_tape<G>(
         batch_sizes: &[usize],
         workers: crate::engine::executor::SharedWorkerPool,
@@ -1159,9 +1266,9 @@ impl LaneServer {
                 shared_pool: Some(workers.clone()),
                 ..Default::default()
             };
-            TapeEngine::from_graph_fn_opts("elastic-lane", &[bucket], opts, build.clone())
+            TapeEngine::build_opts("elastic-lane", &[bucket], opts, build.clone())
         };
-        Self::start(batch_sizes, factory, config)
+        Self::start_inner(batch_sizes, factory, config)
     }
 
     pub fn example_len(&self) -> usize {
@@ -1187,28 +1294,33 @@ impl LaneServer {
     }
 
     /// Blocking inference of one example.
+    #[deprecated(note = "build a Runtime and call infer(InferRequest) — see rust/README.md")]
     pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
-        self.client().infer(input)
+        let rx = self.client().submit_raw(input, None, None)?;
+        rx.recv().context("server dropped request")?.map_err(anyhow::Error::msg)
     }
 
     /// Blocking inference with a bucket hint
     /// ([`LaneClient::infer_hinted`]).
+    #[deprecated(note = "use Runtime::infer(InferRequest::new(..).hint(bucket))")]
     pub fn infer_hinted(&self, input: Vec<f32>, bucket: usize) -> Result<Vec<f32>> {
         self.client().infer_hinted(input, bucket)
     }
 
     /// Fire an async request; returns the reply channel.
+    #[deprecated(note = "use Runtime::submit(InferRequest) -> Ticket")]
     pub fn infer_async(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
-        self.client().infer_async(input)
+        self.client().submit_raw(input, None, None)
     }
 
     /// Submit a pre-formed padded batch (see [`LaneClient::submit_batch`]).
+    #[deprecated(note = "use Runtime::submit(InferRequest::batch(bucket, input)) -> Ticket")]
     pub fn submit_batch(
         &self,
         bucket: usize,
         input: Vec<f32>,
     ) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
-        self.client().submit_batch(bucket, input)
+        self.client().submit_batch_raw(bucket, input, None)
     }
 
     /// Stop the server: flush everything already admitted, join every
@@ -1240,16 +1352,24 @@ impl Drop for LaneServer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serving::TapeEngine;
+    use crate::serving::{InferRequest, Runtime, TapeEngine};
     use crate::util::Pcg32;
 
-    fn lane_server(max_wait: Duration) -> LaneServer {
-        LaneServer::start(
-            &[1, 8],
-            |bucket| TapeEngine::new("mini_inception", &[bucket]),
-            LaneConfig { max_wait, ..Default::default() },
-        )
-        .expect("lane server start")
+    fn lane_server(max_wait: Duration) -> Runtime {
+        Runtime::builder()
+            .model("mini_inception")
+            .buckets(&[1, 8])
+            .max_wait(max_wait)
+            .build()
+            .expect("lane server start")
+    }
+
+    fn direct_engine(buckets: &[usize]) -> TapeEngine {
+        Runtime::builder()
+            .model("mini_inception")
+            .buckets(buckets)
+            .build_engine()
+            .expect("direct engine")
     }
 
     fn inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -1264,10 +1384,10 @@ mod tests {
         let out_len = server.output_len();
         let mut pending = Vec::new();
         for input in inputs(20, len, 1) {
-            pending.push(server.infer_async(input).unwrap());
+            pending.push(server.submit(InferRequest::new(input)).unwrap());
         }
-        for rx in pending {
-            let logits = rx.recv().unwrap().unwrap();
+        for ticket in pending {
+            let logits = ticket.wait().unwrap();
             assert_eq!(logits.len(), out_len);
             assert!(logits.iter().all(|v| v.is_finite()));
         }
@@ -1281,11 +1401,11 @@ mod tests {
 
     #[test]
     fn single_requests_match_the_direct_engine() {
-        let mut direct = TapeEngine::new("mini_inception", &[1, 8]).unwrap();
+        let mut direct = direct_engine(&[1, 8]);
         let server = lane_server(Duration::from_millis(1));
         let input = inputs(1, server.example_len(), 9).pop().unwrap();
         let expect = direct.infer_batch(1, &input).unwrap();
-        let got = server.infer(input).unwrap();
+        let got = server.infer(InferRequest::new(input)).unwrap();
         assert_eq!(got, expect);
         let _ = server.shutdown().unwrap();
     }
@@ -1296,9 +1416,9 @@ mod tests {
         let len = server.example_len();
         let out_len = server.output_len();
         let batch: Vec<f32> = inputs(8, len, 33).concat();
-        let got = server.submit_batch(8, batch.clone()).unwrap().recv().unwrap().unwrap();
+        let got = server.submit(InferRequest::batch(8, batch.clone())).unwrap().wait().unwrap();
         assert_eq!(got.len(), 8 * out_len);
-        let mut direct = TapeEngine::new("mini_inception", &[8]).unwrap();
+        let mut direct = direct_engine(&[8]);
         assert_eq!(got, direct.infer_batch(8, &batch).unwrap());
         let _ = server.shutdown().unwrap();
     }
@@ -1310,15 +1430,15 @@ mod tests {
         let out_len = server.output_len();
         let input = inputs(1, len, 55).pop().unwrap();
         // A lone request depth-routes to bucket 1; the hint forces lane 8.
-        let got = server.infer_hinted(input.clone(), 8).unwrap();
+        let got = server.infer(InferRequest::new(input.clone()).hint(8)).unwrap();
         assert_eq!(got.len(), out_len);
-        let mut direct = TapeEngine::new("mini_inception", &[8]).unwrap();
+        let mut direct = direct_engine(&[8]);
         let mut padded = input;
         padded.resize(8 * len, 0.0);
         let want = direct.infer_batch(8, &padded).unwrap();
         assert_eq!(got.as_slice(), &want[..out_len]);
         // hints naming no lane are rejected client-side
-        assert!(server.infer_hinted(vec![0.0; len], 3).is_err());
+        assert!(server.submit(InferRequest::new(vec![0.0; len]).hint(3)).is_err());
         let report = server.shutdown().unwrap();
         assert_eq!(report.lane(8).unwrap().n_requests, 1, "hinted request must land on lane 8");
         assert_eq!(report.lane(1).unwrap().n_requests, 0);
@@ -1327,30 +1447,31 @@ mod tests {
     #[test]
     fn rejects_malformed_inputs_client_side() {
         let server = lane_server(Duration::from_millis(1));
-        assert!(server.infer(vec![0.0; 3]).is_err());
-        assert!(server.submit_batch(3, vec![0.0; 3]).is_err(), "unknown bucket");
-        assert!(server.submit_batch(8, vec![0.0; 5]).is_err(), "bad batch length");
+        assert!(server.infer(InferRequest::new(vec![0.0; 3])).is_err());
+        assert!(server.submit(InferRequest::batch(3, vec![0.0; 3])).is_err(), "unknown bucket");
+        assert!(
+            server.submit(InferRequest::batch(8, vec![0.0; 5])).is_err(),
+            "bad batch length"
+        );
         // server still healthy afterwards
-        assert!(server.infer(vec![0.0; server.example_len()]).is_ok());
+        assert!(server.infer(InferRequest::new(vec![0.0; server.example_len()])).is_ok());
         let _ = server.shutdown().unwrap();
     }
 
     #[test]
     fn pooled_lanes_report_reserved_bytes_and_recycle_arenas() {
         let pool = crate::aot::memory::ArenaPool::new();
-        let build = |b: usize| crate::models::build("mini_inception", b);
         let start = || {
-            LaneServer::start_pooled_tape(
-                &[1, 8],
-                Some(2),
-                pool.clone(),
-                LaneConfig::default(),
-                build,
-            )
-            .expect("pooled lane server")
+            Runtime::builder()
+                .model("mini_inception")
+                .buckets(&[1, 8])
+                .worker_cap(2)
+                .arena_pool(pool.clone())
+                .build()
+                .expect("pooled lane server")
         };
         let server = start();
-        let _ = server.infer(vec![0.1; server.example_len()]).unwrap();
+        let _ = server.infer(InferRequest::new(vec![0.1; server.example_len()])).unwrap();
         let report = server.shutdown().unwrap();
         assert!(
             report.lanes.iter().all(|l| l.reserved_bytes.unwrap_or(0) > 0),
@@ -1372,7 +1493,7 @@ mod tests {
     #[test]
     fn drop_without_shutdown_joins_cleanly() {
         let server = lane_server(Duration::from_millis(1));
-        let _ = server.infer(vec![0.1; server.example_len()]).unwrap();
+        let _ = server.infer(InferRequest::new(vec![0.1; server.example_len()])).unwrap();
         drop(server); // must not hang or leak lane threads
     }
 
@@ -1386,40 +1507,39 @@ mod tests {
         // "parked with nothing runnable" deadlock report.
         let arena_pool = crate::aot::memory::ArenaPool::new();
         let workers = crate::engine::executor::SharedWorkerPool::new(2);
-        let server = LaneServer::start_elastic_tape(
-            &[1, 4],
-            workers.clone(),
-            arena_pool.clone(),
-            LaneConfig {
-                max_wait: Duration::from_micros(200),
-                lane_cap: 2,
-                buffers_per_lane: 3,
-                scale: ScaleOptions {
-                    max_lanes_per_bucket: 3,
-                    idle_retire: Duration::from_millis(5),
-                    scale_up_backlog: 1,
-                },
-                ..Default::default()
-            },
-            |b| crate::models::build("mini_inception", b),
-        )
-        .expect("elastic lane server");
+        let server = Runtime::builder()
+            .model("mini_inception")
+            .buckets(&[1, 4])
+            .max_wait(Duration::from_micros(200))
+            .lane_cap(2)
+            .buffers_per_lane(3)
+            .elastic(ScaleOptions {
+                max_lanes_per_bucket: 3,
+                idle_retire: Duration::from_millis(5),
+                scale_up_backlog: 1,
+            })
+            .shared_pool_handle(workers.clone())
+            .arena_pool(arena_pool.clone())
+            .build()
+            .expect("elastic lane server");
         let len = server.example_len();
         let batch: Vec<f32> = inputs(4, len, 71).concat();
 
         // Burst: more in-flight batches than one lane can hold.
-        let pending: Vec<_> =
-            (0..12).map(|_| server.submit_batch(4, batch.clone()).unwrap()).collect();
-        for rx in pending {
-            rx.recv().unwrap().unwrap();
+        let pending: Vec<_> = (0..12)
+            .map(|_| server.submit(InferRequest::batch(4, batch.clone())).unwrap())
+            .collect();
+        for ticket in pending {
+            ticket.wait().unwrap();
         }
         // Idle long enough for the scaling pass to retire extras.
         std::thread::sleep(Duration::from_millis(60));
         // Traffic resumes against the shrunken group.
-        let pending: Vec<_> =
-            (0..4).map(|_| server.submit_batch(4, batch.clone()).unwrap()).collect();
-        for rx in pending {
-            rx.recv().unwrap().unwrap();
+        let pending: Vec<_> = (0..4)
+            .map(|_| server.submit(InferRequest::batch(4, batch.clone())).unwrap())
+            .collect();
+        for ticket in pending {
+            ticket.wait().unwrap();
         }
 
         let report = server.shutdown().unwrap();
@@ -1441,49 +1561,43 @@ mod tests {
     fn elastic_output_matches_the_direct_engine_bitwise() {
         let arena_pool = crate::aot::memory::ArenaPool::new();
         let workers = crate::engine::executor::SharedWorkerPool::new(2);
-        let server = LaneServer::start_elastic_tape(
-            &[2],
-            workers,
-            arena_pool,
-            LaneConfig {
-                max_wait: Duration::from_micros(200),
-                lane_cap: 4,
-                scale: ScaleOptions {
-                    max_lanes_per_bucket: 2,
-                    idle_retire: Duration::from_millis(4),
-                    scale_up_backlog: 1,
-                },
-                ..Default::default()
-            },
-            |b| crate::models::build("mini_inception", b),
-        )
-        .expect("elastic lane server");
+        let server = Runtime::builder()
+            .model("mini_inception")
+            .buckets(&[2])
+            .max_wait(Duration::from_micros(200))
+            .lane_cap(4)
+            .elastic(ScaleOptions {
+                max_lanes_per_bucket: 2,
+                idle_retire: Duration::from_millis(4),
+                scale_up_backlog: 1,
+            })
+            .shared_pool_handle(workers)
+            .arena_pool(arena_pool)
+            .build()
+            .expect("elastic lane server");
         let len = server.example_len();
         let batch: Vec<f32> = inputs(2, len, 72).concat();
-        let mut direct = TapeEngine::new("mini_inception", &[2]).unwrap();
+        let mut direct = direct_engine(&[2]);
         let want = direct.infer_batch(2, &batch).unwrap();
         // Concurrent duplicates may land on different replica lanes; all
         // must agree with the direct engine bit-for-bit.
-        let pending: Vec<_> =
-            (0..10).map(|_| server.submit_batch(2, batch.clone()).unwrap()).collect();
-        for rx in pending {
-            assert_eq!(rx.recv().unwrap().unwrap(), want);
+        let pending: Vec<_> = (0..10)
+            .map(|_| server.submit(InferRequest::batch(2, batch.clone())).unwrap())
+            .collect();
+        for ticket in pending {
+            assert_eq!(ticket.wait().unwrap(), want);
         }
         let _ = server.shutdown().unwrap();
     }
 
     #[test]
     fn factory_failure_tears_down_cleanly() {
-        let r = LaneServer::start(
-            &[1, 2],
-            |bucket| {
-                if bucket == 2 {
-                    anyhow::bail!("injected build failure");
-                }
-                TapeEngine::new("mini_inception", &[bucket])
-            },
-            LaneConfig::default(),
-        );
+        let r = Runtime::builder().buckets(&[1, 2]).build_with_factory(|bucket| {
+            if bucket == 2 {
+                anyhow::bail!("injected build failure");
+            }
+            Runtime::builder().model("mini_inception").buckets(&[bucket]).build_engine()
+        });
         assert!(r.is_err());
         assert!(format!("{:#}", r.err().unwrap()).contains("injected build failure"));
     }

@@ -30,6 +30,15 @@ pub struct LaneStat {
     /// Padded-buffer would-allocate events on this lane's dispatch path
     /// (0 in steady state: buffers are pooled and reused).
     pub alloc_events: u64,
+    /// Requests shed because their deadline
+    /// ([`RequestOptions::deadline`](crate::serving::RequestOptions))
+    /// expired while they waited (staged or queued) — resolved as
+    /// [`InferOutcome::DeadlineShed`](crate::serving::InferOutcome),
+    /// never executed. `n_requests` counts completions only, so
+    /// `n_requests + deadline_shed` accounts every admitted request
+    /// that did not fail outright (load-shed overload replies and
+    /// engine errors are resolved as `Failed` and counted in neither).
+    pub deadline_shed: usize,
     /// Lanes ever spawned for this bucket (the seed lane counts, so ≥ 1
     /// on a live report; elastic scale-ups add to it).
     pub lanes_spawned: usize,
@@ -56,6 +65,7 @@ impl LaneStat {
             busy_s: 0.0,
             mean_queue_wait_s: 0.0,
             alloc_events: 0,
+            deadline_shed: 0,
             lanes_spawned: 0,
             lanes_retired: 0,
             steals: 0,
@@ -78,6 +88,7 @@ impl LaneStat {
         self.n_requests += other.n_requests;
         self.busy_s += other.busy_s;
         self.alloc_events += other.alloc_events;
+        self.deadline_shed += other.deadline_shed;
         self.steals += other.steals;
         if self.n_streams.is_none() {
             self.n_streams = other.n_streams;
@@ -89,7 +100,7 @@ impl LaneStat {
 
     pub fn render(&self) -> String {
         format!(
-            "lane[bucket={}]: batches={} requests={} busy={} qwait={}{}{}{}{}{}",
+            "lane[bucket={}]: batches={} requests={} busy={} qwait={}{}{}{}{}{}{}",
             self.bucket,
             self.n_batches,
             self.n_requests,
@@ -109,6 +120,11 @@ impl LaneStat {
             } else {
                 String::new()
             },
+            if self.deadline_shed > 0 {
+                format!(" shed={}", self.deadline_shed)
+            } else {
+                String::new()
+            },
             if self.steals > 0 { format!(" steals={}", self.steals) } else { String::new() },
             if self.alloc_events > 0 {
                 format!(" ALLOC_EVENTS={}", self.alloc_events)
@@ -122,12 +138,19 @@ impl LaneStat {
 /// Aggregated report for a serving run.
 #[derive(Debug, Clone)]
 pub struct ServingReport {
+    /// Requests completed. Deadline-shed requests are counted
+    /// separately in [`deadline_shed`](Self::deadline_shed); requests
+    /// resolved as errors (overload load-shed, engine failures) are in
+    /// neither count.
     pub n_requests: usize,
     pub n_batches: usize,
     pub wall_time: Duration,
     pub latency: Summary,
     /// Mean real (unpadded) examples per formed batch.
     pub mean_batch_fill: f64,
+    /// Requests shed because their deadline expired while they waited
+    /// (sum over lanes for the lane scheduler).
+    pub deadline_shed: usize,
     /// Per-bucket lane breakdown (empty for the single-engine-thread
     /// server, one entry per bucket for the lane scheduler).
     pub lanes: Vec<LaneStat>,
@@ -161,11 +184,16 @@ impl ServingReport {
 
     pub fn render(&self) -> String {
         let mut out = format!(
-            "requests={}  batches={}  fill={:.2}  wall={}  thpt={:.1} req/s\n\
+            "requests={}  batches={}  fill={:.2}{}  wall={}  thpt={:.1} req/s\n\
              latency: p50={} p90={} p99={} max={}",
             self.n_requests,
             self.n_batches,
             self.mean_batch_fill,
+            if self.deadline_shed > 0 {
+                format!("  shed={}", self.deadline_shed)
+            } else {
+                String::new()
+            },
             fmt_secs(self.wall_time.as_secs_f64()),
             self.throughput_rps(),
             fmt_secs(self.latency.percentile(50.0)),
@@ -193,12 +221,14 @@ mod tests {
             wall_time: Duration::from_secs(2),
             latency: Summary::from_samples(vec![0.01; 100]),
             mean_batch_fill: 5.0,
+            deadline_shed: 0,
             lanes: Vec::new(),
         };
         assert!((r.throughput_rps() - 50.0).abs() < 1e-9);
         let s = r.render();
         assert!(s.contains("requests=100"));
         assert!(s.contains("p99"));
+        assert!(!s.contains("shed="), "no shed counter rendered when nothing shed");
     }
 
     #[test]
@@ -209,6 +239,7 @@ mod tests {
             wall_time: Duration::from_secs(1),
             latency: Summary::from_samples(vec![0.01; 10]),
             mean_batch_fill: 2.5,
+            deadline_shed: 3,
             lanes: vec![
                 LaneStat {
                     n_streams: Some(2),
@@ -227,6 +258,7 @@ mod tests {
                     mean_queue_wait_s: 0.002,
                     lanes_spawned: 3,
                     lanes_retired: 2,
+                    deadline_shed: 3,
                     steals: 5,
                     ..LaneStat::empty(8)
                 },
@@ -240,6 +272,7 @@ mod tests {
         assert!(s.contains("streams=2"));
         assert!(s.contains("arena=1536B"));
         assert!(s.contains("lanes=1/3 retired=2"), "scaling decisions must render: {s}");
+        assert!(s.contains("shed=3"), "deadline sheds must render: {s}");
         assert!(s.contains("steals=5"));
     }
 
@@ -262,6 +295,7 @@ mod tests {
             busy_s: 0.1,
             mean_queue_wait_s: 0.002,
             alloc_events: 1,
+            deadline_shed: 2,
             steals: 1,
             ..LaneStat::empty(4)
         });
@@ -270,6 +304,7 @@ mod tests {
         assert!((agg.busy_s - 0.4).abs() < 1e-12);
         assert!((agg.mean_queue_wait_s - 0.008).abs() < 1e-12, "batch-weighted mean");
         assert_eq!(agg.alloc_events, 1);
+        assert_eq!(agg.deadline_shed, 2);
         assert_eq!(agg.steals, 3);
         assert_eq!(agg.n_streams, Some(2), "first known shape wins");
         assert_eq!(agg.reserved_bytes, Some(4096));

@@ -1,32 +1,50 @@
 //! Batched serving front-end — the "serving paper" L3 shape: request
 //! queue → dynamic batcher → inference engine(s) → latency/throughput
-//! metrics.
+//! metrics — behind ONE runtime façade.
 //!
-//! Two servers share the batcher and the [`InferEngine`](crate::coordinator::InferEngine)
-//! contract:
+//! The public surface is [`runtime`]: compose everything on
+//! [`Runtime::builder()`] (model / graph-fn / PJRT artifacts, batch
+//! buckets, worker caps, arena + shared worker pools, elastic scaling,
+//! topology) and submit through exactly two methods — blocking
+//! [`Runtime::infer`] and waitable [`Runtime::submit`] — both taking an
+//! [`InferRequest`] whose [`RequestOptions`] carry bucket hints and
+//! **deadlines** (expired-while-waiting requests are shed before
+//! execution, surfaced as [`InferOutcome::DeadlineShed`] and counted in
+//! [`ServingReport::deadline_shed`]).
 //!
-//! * [`server::NimbleServer`] — the single-engine-thread baseline: one
-//!   dedicated thread owns the engine (PJRT state is not `Send`) and
-//!   executes batches sequentially.
-//! * [`lanes::LaneServer`] — the lane scheduler: a bounded MPMC
-//!   admission queue feeds a dispatcher that routes each formed batch to
-//!   its bucket's **lane**, a dedicated thread with its own engine.
-//!   Same-bucket batches pipeline FIFO; different buckets overlap
-//!   end-to-end. Backpressure flows lane → buffer pool → batcher →
-//!   admission queue → clients.
+//! Two server topologies sit behind the façade, sharing the batcher and
+//! the [`InferEngine`](crate::coordinator::InferEngine) contract:
+//!
+//! * [`server::NimbleServer`] — the single-engine-thread baseline
+//!   (`builder().single_thread()`): one dedicated thread owns the
+//!   engine (PJRT state is not `Send`) and executes batches
+//!   sequentially.
+//! * [`lanes::LaneServer`] — the lane scheduler (the default): a
+//!   bounded MPMC admission queue feeds a dispatcher that routes each
+//!   formed batch to its bucket's **lane**, a dedicated thread with its
+//!   own engine. Same-bucket batches pipeline FIFO; different buckets
+//!   overlap end-to-end; saturated buckets scale elastically
+//!   ([`ScaleOptions`]). Backpressure flows lane → buffer pool →
+//!   batcher → admission queue → clients.
 //!
 //! Static shapes (the paper's core assumption) mean the batcher pads
 //! each group to the nearest compiled batch size, TensorRT-profile
 //! style, writing into reused batch buffers. Each batch bucket replays
 //! on its own reusable context: [`sim_engine::TapeEngine`] on the
 //! virtual substrate (always available), the PJRT `NimbleEngine` with
-//! the `xla` feature (per-lane instances via
-//! `NimbleEngine::build_for`).
+//! the `xla` feature (per-lane instances via `NimbleEngine::build_for`).
+//!
+//! The pre-façade constructors (`TapeEngine::new` …,
+//! `LaneServer::start*`, `NimbleServer::start*`) and per-client method
+//! variants (`infer`/`infer_hinted`/`infer_async`/`infer_hinted_async`/
+//! `submit_batch`) are `#[deprecated]` shims over the same internals —
+//! see the migration table in `rust/README.md`.
 
 pub mod batcher;
 pub mod lanes;
 pub mod metrics;
 pub mod queue;
+pub mod runtime;
 pub mod server;
 pub mod sim_engine;
 
@@ -34,5 +52,9 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use lanes::{LaneClient, LaneConfig, LaneServer, ScaleOptions};
 pub use metrics::{LaneStat, ServingReport};
 pub use queue::Bounded;
+pub use runtime::{
+    InferOutcome, InferRequest, RequestOptions, Runtime, RuntimeBuilder, RuntimeHandle, Ticket,
+    DEADLINE_SHED,
+};
 pub use server::{NimbleServer, ServerClient, ServerConfig};
 pub use sim_engine::{TapeEngine, TapeEngineOptions};

@@ -1,0 +1,891 @@
+//! The one runtime façade: [`Runtime::builder()`] + [`InferRequest`].
+//!
+//! Nimble's pitch is that every scheduling decision is made ahead of
+//! time, so the run-time surface should be one cheap, uniform submit
+//! path. Before this module the public API was a matrix of constructors
+//! (`TapeEngine::{new, with_worker_cap, from_graph_fn, from_graph_fn_opts}`,
+//! `LaneServer::{start, start_pooled_tape, start_elastic_tape}`,
+//! `NimbleServer::{start, start_with}`) and per-client method variants
+//! (`infer` / `infer_hinted` / `infer_async` / `infer_hinted_async`).
+//! All of those are now thin `#[deprecated]` shims; the supported
+//! surface is:
+//!
+//! ```no_run
+//! use nimble::serving::{InferRequest, Runtime, ScaleOptions};
+//! # fn main() -> anyhow::Result<()> {
+//! let rt = Runtime::builder()
+//!     .model("mini_inception")
+//!     .buckets(&[1, 4, 16])
+//!     .elastic(ScaleOptions { max_lanes_per_bucket: 3, ..Default::default() })
+//!     .shared_pool(8)
+//!     .build()?;
+//!
+//! // Blocking:
+//! let out = rt.infer(InferRequest::new(vec![0.0; rt.example_len()]))?;
+//!
+//! // Async, with routing + deadline composed on the request:
+//! let req = InferRequest::new(vec![0.0; rt.example_len()])
+//!     .hint(16)
+//!     .deadline_in(std::time::Duration::from_millis(20));
+//! let ticket = rt.submit(req)?;
+//! let outcome = ticket.outcome()?; // Output(..) | DeadlineShed | Failed(..)
+//! # let _ = (out, outcome);
+//! # Ok(()) }
+//! ```
+//!
+//! Exactly two submit paths exist — blocking [`Runtime::infer`] and
+//! waitable [`Runtime::submit`] returning a [`Ticket`] — and every knob
+//! that used to force a new constructor (worker caps, arena pools, the
+//! shared work-stealing pool, elastic scaling) composes on
+//! [`RuntimeBuilder`]. **Deadlines** are the capability the old matrix
+//! could not express: a request whose deadline expires while it waits
+//! (batcher queue, lane stage, or lane queue) is *shed* before the
+//! engine runs it, surfaced as [`InferOutcome::DeadlineShed`] to the
+//! caller and counted in `ServingReport::deadline_shed` /
+//! `LaneStat::deadline_shed`. The DES predicts shed counts offline
+//! ([`crate::sim::simulate_lanes_deadline`]).
+
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::lanes::{LaneClient, LaneConfig, LaneServer, ScaleOptions};
+use super::metrics::ServingReport;
+use super::server::{NimbleServer, ServerClient};
+use super::sim_engine::{TapeEngine, TapeEngineOptions};
+use crate::aot::memory::ArenaPool;
+use crate::coordinator::InferEngine;
+use crate::engine::executor::SharedWorkerPool;
+use crate::models;
+use crate::ops::OpGraph;
+
+/// The exact reply string of a deadline-shed request — a reserved
+/// sentinel on the legacy `Result<_, String>` reply channel. A reply
+/// equal to this whole string classifies as
+/// [`InferOutcome::DeadlineShed`]; every other error is
+/// [`InferOutcome::Failed`] (engines must not return this exact
+/// message as a genuine error).
+pub const DEADLINE_SHED: &str = "deadline shed: expired before execution";
+
+/// The reply a shed request receives (always equals [`DEADLINE_SHED`]).
+pub(crate) fn shed_error() -> String {
+    DEADLINE_SHED.to_string()
+}
+
+/// Internal request token carried through the batcher and the lane
+/// queues: the per-request reply channel plus the request's deadline.
+pub(crate) struct ReqToken {
+    pub reply: mpsc::Sender<Result<Vec<f32>, String>>,
+    pub deadline: Option<Instant>,
+}
+
+impl ReqToken {
+    /// The shed rule, shared by the lane threads, the single-engine
+    /// thread, and the DES: expired once `now` reaches the deadline.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+
+    /// Resolve this token as shed (the receiver may already be gone).
+    pub fn shed(&self) {
+        let _ = self.reply.send(Err(shed_error()));
+    }
+}
+
+/// Per-request options ([`InferRequest::opts`]).
+#[derive(Debug, Clone, Default)]
+pub struct RequestOptions {
+    /// Route the request's batch to this compiled bucket instead of
+    /// deriving the bucket from queue depth (sequence-length-aware
+    /// clients pick their own lane). Must name a compiled bucket.
+    pub bucket_hint: Option<usize>,
+    /// Shed the request (resolving its [`Ticket`] with
+    /// [`InferOutcome::DeadlineShed`]) if it is still waiting —
+    /// batcher queue, lane stage, or lane queue — at this instant.
+    /// Execution already started is never interrupted.
+    pub deadline: Option<Instant>,
+}
+
+/// One inference request: the input plus composable [`RequestOptions`].
+/// Built with [`new`](Self::new) (one example, runs through the dynamic
+/// batcher) or [`batch`](Self::batch) (a pre-formed padded batch routed
+/// straight to its bucket's lane).
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    /// Flattened input: one example ([`new`](Self::new)) or
+    /// `bucket * example_len` values ([`batch`](Self::batch)).
+    pub input: Vec<f32>,
+    pub opts: RequestOptions,
+    /// `Some(bucket)` for a pre-formed padded batch.
+    batch: Option<usize>,
+}
+
+impl InferRequest {
+    /// One example through the dynamic batcher.
+    pub fn new(input: Vec<f32>) -> InferRequest {
+        InferRequest { input, opts: RequestOptions::default(), batch: None }
+    }
+
+    /// A pre-formed padded batch (`bucket * example_len` values) routed
+    /// straight to `bucket`'s lane; the reply carries the full padded
+    /// output. Requires the lane topology (the builder default).
+    pub fn batch(bucket: usize, input: Vec<f32>) -> InferRequest {
+        InferRequest { input, opts: RequestOptions::default(), batch: Some(bucket) }
+    }
+
+    /// Replace the whole option set.
+    pub fn with_options(mut self, opts: RequestOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Route to this compiled bucket ([`RequestOptions::bucket_hint`]).
+    pub fn hint(mut self, bucket: usize) -> Self {
+        self.opts.bucket_hint = Some(bucket);
+        self
+    }
+
+    /// Absolute deadline ([`RequestOptions::deadline`]).
+    pub fn deadline(mut self, at: Instant) -> Self {
+        self.opts.deadline = Some(at);
+        self
+    }
+
+    /// Deadline `budget` from now.
+    pub fn deadline_in(self, budget: Duration) -> Self {
+        self.deadline(Instant::now() + budget)
+    }
+
+    /// The pre-formed batch bucket, if this is a batch request.
+    pub fn bucket(&self) -> Option<usize> {
+        self.batch
+    }
+}
+
+impl From<Vec<f32>> for InferRequest {
+    fn from(input: Vec<f32>) -> InferRequest {
+        InferRequest::new(input)
+    }
+}
+
+/// How a submitted request resolved.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InferOutcome {
+    /// The flattened output (one example's logits, or the full padded
+    /// batch output for [`InferRequest::batch`]).
+    Output(Vec<f32>),
+    /// The deadline expired while the request waited; the engine never
+    /// ran it.
+    DeadlineShed,
+    /// The engine (or the server) failed the request.
+    Failed(String),
+}
+
+impl InferOutcome {
+    pub fn is_shed(&self) -> bool {
+        matches!(self, InferOutcome::DeadlineShed)
+    }
+
+    /// The output, if the request completed.
+    pub fn output(self) -> Option<Vec<f32>> {
+        match self {
+            InferOutcome::Output(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+fn classify(reply: Result<Vec<f32>, String>) -> InferOutcome {
+    match reply {
+        Ok(v) => InferOutcome::Output(v),
+        // Exact-equality on the reserved sentinel: only ReqToken::shed
+        // produces this whole string, so a genuine engine error cannot
+        // masquerade as a shed by sharing a prefix.
+        Err(e) if e == DEADLINE_SHED => InferOutcome::DeadlineShed,
+        Err(e) => InferOutcome::Failed(e),
+    }
+}
+
+/// Waitable handle to a submitted request ([`Runtime::submit`]) — the
+/// typed replacement for the raw `mpsc::Receiver` the deprecated
+/// `infer_async` variants exposed. Every submitted ticket resolves
+/// exactly once: output, deadline-shed, or failure.
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<Vec<f32>, String>>,
+}
+
+impl Ticket {
+    pub(crate) fn new(rx: mpsc::Receiver<Result<Vec<f32>, String>>) -> Ticket {
+        Ticket { rx }
+    }
+
+    /// Block for the outcome. `Err` only if the server dropped the
+    /// reply channel (it never does for an admitted request).
+    pub fn outcome(self) -> Result<InferOutcome> {
+        let reply = self.rx.recv().context("server dropped request")?;
+        Ok(classify(reply))
+    }
+
+    /// Like [`outcome`](Self::outcome) with a wait bound; `Err` on
+    /// timeout (distinct from the server dropping the reply channel).
+    pub fn outcome_timeout(self, timeout: Duration) -> Result<InferOutcome> {
+        let reply = self.rx.recv_timeout(timeout).map_err(|e| match e {
+            mpsc::RecvTimeoutError::Timeout => {
+                anyhow::anyhow!("timed out waiting for the request outcome")
+            }
+            mpsc::RecvTimeoutError::Disconnected => {
+                anyhow::anyhow!("server dropped request")
+            }
+        })?;
+        Ok(classify(reply))
+    }
+
+    /// Block for the output; shed and failed requests become errors
+    /// (shed errors carry the [`DEADLINE_SHED`] marker).
+    pub fn wait(self) -> Result<Vec<f32>> {
+        match self.outcome()? {
+            InferOutcome::Output(v) => Ok(v),
+            InferOutcome::DeadlineShed => Err(anyhow::anyhow!(shed_error())),
+            InferOutcome::Failed(e) => Err(anyhow::anyhow!(e)),
+        }
+    }
+
+    /// Like [`wait`](Self::wait) with a wait bound.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Vec<f32>> {
+        match self.outcome_timeout(timeout)? {
+            InferOutcome::Output(v) => Ok(v),
+            InferOutcome::DeadlineShed => Err(anyhow::anyhow!(shed_error())),
+            InferOutcome::Failed(e) => Err(anyhow::anyhow!(e)),
+        }
+    }
+}
+
+/// What the engines execute: a zoo model / arbitrary graph builder on
+/// the tape substrate, or the PJRT artifact registry (`xla` feature).
+enum Source {
+    Graph {
+        label: String,
+        build: Arc<dyn Fn(usize) -> OpGraph + Send + Sync>,
+    },
+    #[cfg(feature = "xla")]
+    Artifacts(crate::coordinator::EngineConfig),
+}
+
+/// How the shared work-stealing pool is provided.
+enum PoolSpec {
+    Size(usize),
+    Handle(SharedWorkerPool),
+}
+
+/// Fluent, typed composition of everything the old constructor matrix
+/// spread over nine entry points. See the [module docs](self) for the
+/// shape; every method is optional except a source
+/// ([`model`](Self::model) / [`graph_fn`](Self::graph_fn) /
+/// `artifacts`).
+pub struct RuntimeBuilder {
+    label: String,
+    source: Option<Source>,
+    buckets: Vec<usize>,
+    lane: LaneConfig,
+    worker_cap: Option<usize>,
+    unshared_slots: bool,
+    arena_pool: Option<ArenaPool>,
+    shared_pool: Option<PoolSpec>,
+    single_thread: bool,
+    serial: bool,
+}
+
+impl Default for RuntimeBuilder {
+    fn default() -> Self {
+        RuntimeBuilder {
+            label: "runtime".to_string(),
+            source: None,
+            buckets: vec![1, 8],
+            lane: LaneConfig::default(),
+            worker_cap: None,
+            unshared_slots: false,
+            arena_pool: None,
+            shared_pool: None,
+            single_thread: false,
+            serial: false,
+        }
+    }
+}
+
+impl RuntimeBuilder {
+    /// Serve a model-zoo network on the tape substrate.
+    pub fn model(mut self, name: &str) -> Self {
+        let owned = name.to_string();
+        self.label = name.to_string();
+        self.source = Some(Source::Graph {
+            label: name.to_string(),
+            build: Arc::new(move |b| models::build(&owned, b)),
+        });
+        self
+    }
+
+    /// Serve an arbitrary per-bucket operator-graph builder (the
+    /// differential harness feeds seeded random cells through this).
+    pub fn graph_fn(
+        mut self,
+        build: impl Fn(usize) -> OpGraph + Send + Sync + 'static,
+    ) -> Self {
+        self.source =
+            Some(Source::Graph { label: self.label.clone(), build: Arc::new(build) });
+        self
+    }
+
+    /// Serve the PJRT artifact registry (the paper's real-runtime path).
+    #[cfg(feature = "xla")]
+    pub fn artifacts(mut self, config: crate::coordinator::EngineConfig) -> Self {
+        self.source = Some(Source::Artifacts(config));
+        self
+    }
+
+    /// Label used in error messages (defaults to the model name).
+    pub fn label(mut self, label: &str) -> Self {
+        self.label = label.to_string();
+        if let Some(Source::Graph { label: l, .. }) = &mut self.source {
+            *l = label.to_string();
+        }
+        self
+    }
+
+    /// Compiled batch-size buckets (deduplicated, sorted). Default
+    /// `[1, 8]`.
+    pub fn buckets(mut self, buckets: &[usize]) -> Self {
+        self.buckets = buckets.to_vec();
+        self
+    }
+
+    /// Max time the oldest request may wait before a partial batch
+    /// flushes ([`LaneConfig::max_wait`]).
+    pub fn max_wait(mut self, max_wait: Duration) -> Self {
+        self.lane.max_wait = max_wait;
+        self
+    }
+
+    /// Replace the whole lane configuration (admission/lane caps,
+    /// buffer pools, backlog valve, scaling) in one call.
+    pub fn lane_config(mut self, config: LaneConfig) -> Self {
+        self.lane = config;
+        self
+    }
+
+    /// Per-lane job-queue capacity ([`LaneConfig::lane_cap`]).
+    pub fn lane_cap(mut self, cap: usize) -> Self {
+        self.lane.lane_cap = cap;
+        self
+    }
+
+    /// Pooled padded-input buffers per lane
+    /// ([`LaneConfig::buffers_per_lane`]).
+    pub fn buffers_per_lane(mut self, n: usize) -> Self {
+        self.lane.buffers_per_lane = n;
+        self
+    }
+
+    /// Admission-queue capacity ([`LaneConfig::admission_cap`]).
+    pub fn admission_cap(mut self, cap: usize) -> Self {
+        self.lane.admission_cap = cap;
+        self
+    }
+
+    /// Batcher-backlog valve ([`LaneConfig::backlog_cap`]).
+    pub fn backlog_cap(mut self, cap: usize) -> Self {
+        self.lane.backlog_cap = cap;
+        self
+    }
+
+    /// Elastic lane scaling ([`LaneConfig::scale`]; default static).
+    pub fn elastic(mut self, scale: ScaleOptions) -> Self {
+        self.lane.scale = scale;
+        self
+    }
+
+    /// Per-context worker cap (the executor's capped work-sharing
+    /// pool). Ignored when a shared pool is set.
+    pub fn worker_cap(mut self, cap: usize) -> Self {
+        self.worker_cap = Some(cap);
+        self
+    }
+
+    /// Per-slot-buffer layout instead of the packed stream-aware arena
+    /// (the differential harness's baseline engine).
+    pub fn unshared_slots(mut self) -> Self {
+        self.unshared_slots = true;
+        self
+    }
+
+    /// Draw every replay context's arena from this shared pool, so
+    /// rebuilt/respawned lanes recycle their reservations.
+    pub fn arena_pool(mut self, pool: ArenaPool) -> Self {
+        self.arena_pool = Some(pool);
+        self
+    }
+
+    /// Lease replay workers from ONE process-wide work-stealing pool of
+    /// `n_workers` threads instead of spawning per-context workers —
+    /// however many lanes scale up, total replay threads stay capped.
+    pub fn shared_pool(mut self, n_workers: usize) -> Self {
+        self.shared_pool = Some(PoolSpec::Size(n_workers));
+        self
+    }
+
+    /// Like [`shared_pool`](Self::shared_pool) with a caller-owned pool
+    /// (share one pool across several runtimes, or keep a handle for
+    /// stats).
+    pub fn shared_pool_handle(mut self, pool: SharedWorkerPool) -> Self {
+        self.shared_pool = Some(PoolSpec::Handle(pool));
+        self
+    }
+
+    /// Single-engine-thread topology (the measured PR-1 baseline)
+    /// instead of per-bucket lanes. Pre-formed batch requests require
+    /// the lane topology; of the lane knobs only
+    /// [`max_wait`](Self::max_wait) applies here, and combining with
+    /// [`elastic`](Self::elastic) is rejected at build.
+    pub fn single_thread(mut self) -> Self {
+        self.single_thread = true;
+        self
+    }
+
+    /// Serial-oracle engines: replay on the submitting thread in merged
+    /// submission order (the differential oracle the parallel paths are
+    /// checked against bit-for-bit).
+    pub fn serial_oracle(mut self) -> Self {
+        self.serial = true;
+        self
+    }
+
+    fn engine_opts(&self) -> Result<TapeEngineOptions> {
+        let shared_pool = match &self.shared_pool {
+            None => None,
+            Some(PoolSpec::Handle(p)) => Some(p.clone()),
+            Some(PoolSpec::Size(n)) => {
+                anyhow::ensure!(*n >= 1, "shared_pool needs at least one worker");
+                Some(SharedWorkerPool::new(*n))
+            }
+        };
+        Ok(TapeEngineOptions {
+            worker_cap: self.worker_cap,
+            unshared_slots: self.unshared_slots,
+            arena_pool: self.arena_pool.clone(),
+            shared_pool,
+        })
+    }
+
+    /// Build the runtime: per-bucket serving lanes by default, the
+    /// single-engine-thread topology under
+    /// [`single_thread`](Self::single_thread).
+    ///
+    /// Incompatible knob combinations are rejected, not silently
+    /// dropped: elastic scaling requires the lane topology, and the
+    /// tape-engine knobs (worker caps, pools, serial oracle) do not
+    /// apply to the PJRT artifact engines.
+    pub fn build(self) -> Result<Runtime> {
+        anyhow::ensure!(
+            !(self.single_thread && self.lane.scale.max_lanes_per_bucket != 1),
+            "elastic scaling needs the lane topology: drop single_thread() or elastic()"
+        );
+        #[cfg(feature = "xla")]
+        if matches!(&self.source, Some(Source::Artifacts(_))) {
+            anyhow::ensure!(
+                self.worker_cap.is_none()
+                    && !self.unshared_slots
+                    && self.arena_pool.is_none()
+                    && self.shared_pool.is_none()
+                    && !self.serial,
+                "worker_cap/unshared_slots/arena_pool/shared_pool/serial_oracle are \
+                 tape-engine knobs; the PJRT artifact engines do not take them"
+            );
+        }
+        let opts = self.engine_opts()?;
+        let source = self
+            .source
+            .context("RuntimeBuilder needs a source: model(), graph_fn(), or artifacts()")?;
+        let serial = self.serial;
+        match source {
+            Source::Graph { label, build } => {
+                if self.single_thread {
+                    let buckets = self.buckets.clone();
+                    let factory = move || {
+                        let e =
+                            TapeEngine::build_opts(&label, &buckets, opts, |b| (*build)(b))?;
+                        Ok(if serial { e.serial() } else { e })
+                    };
+                    NimbleServer::spawn(factory, self.lane.max_wait)
+                        .map(Runtime::from_single)
+                } else {
+                    let factory = move |bucket: usize| {
+                        let e = TapeEngine::build_opts(
+                            &label,
+                            &[bucket],
+                            opts.clone(),
+                            |b| (*build)(b),
+                        )?;
+                        Ok(if serial { e.serial() } else { e })
+                    };
+                    LaneServer::start_inner(&self.buckets, factory, self.lane)
+                        .map(Runtime::from_lanes)
+                }
+            }
+            #[cfg(feature = "xla")]
+            Source::Artifacts(config) => {
+                use crate::coordinator::NimbleEngine;
+                if self.single_thread {
+                    NimbleServer::spawn(move || NimbleEngine::build(config), self.lane.max_wait)
+                        .map(Runtime::from_single)
+                } else {
+                    let factory =
+                        move |bucket: usize| NimbleEngine::build_for(config.clone(), &[bucket]);
+                    LaneServer::start_inner(&self.buckets, factory, self.lane)
+                        .map(Runtime::from_lanes)
+                }
+            }
+        }
+    }
+
+    /// Build a bare [`TapeEngine`] (all buckets in one engine, no
+    /// server) with this builder's engine knobs — the direct-replay /
+    /// differential-oracle path (compose with
+    /// [`serial_oracle`](Self::serial_oracle)).
+    pub fn build_engine(self) -> Result<TapeEngine> {
+        let opts = self.engine_opts()?;
+        let source = self
+            .source
+            .context("RuntimeBuilder needs a source: model() or graph_fn()")?;
+        match source {
+            Source::Graph { label, build } => {
+                let e = TapeEngine::build_opts(&label, &self.buckets, opts, |b| (*build)(b))?;
+                Ok(if self.serial { e.serial() } else { e })
+            }
+            #[cfg(feature = "xla")]
+            Source::Artifacts(_) => anyhow::bail!(
+                "build_engine() is tape-backed; the PJRT artifact path serves via build()"
+            ),
+        }
+    }
+
+    /// Build serving lanes over a custom engine factory (fault
+    /// injection, engine wrappers): the factory runs once per lane *on
+    /// that lane's thread* and must return an engine serving at least
+    /// that bucket. Engine knobs ([`worker_cap`](Self::worker_cap),
+    /// pools, …) are the factory's business here; lane and scaling
+    /// knobs still apply.
+    pub fn build_with_factory<E, F>(self, factory: F) -> Result<Runtime>
+    where
+        E: InferEngine + 'static,
+        F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+    {
+        anyhow::ensure!(
+            !self.single_thread,
+            "build_with_factory uses the lane topology (per-bucket factories)"
+        );
+        LaneServer::start_inner(&self.buckets, factory, self.lane)
+            .map(Runtime::from_lanes)
+    }
+}
+
+enum ServerInner {
+    Single(NimbleServer),
+    Lanes(LaneServer),
+}
+
+/// One handle over the whole serving stack — subsumes the deprecated
+/// `NimbleServer` / `LaneServer` pair. Built by [`Runtime::builder`];
+/// submit with [`infer`](Self::infer) / [`submit`](Self::submit), clone
+/// [`handle`](Self::handle)s for client threads, stop with
+/// [`shutdown`](Self::shutdown).
+pub struct Runtime {
+    inner: ServerInner,
+    /// Built once so the hot `infer`/`submit` path never re-clones the
+    /// client (its batch-size vector in particular).
+    handle: RuntimeHandle,
+}
+
+impl Runtime {
+    fn from_single(server: NimbleServer) -> Runtime {
+        let handle = RuntimeHandle { inner: HandleInner::Single(server.client()) };
+        Runtime { inner: ServerInner::Single(server), handle }
+    }
+
+    fn from_lanes(server: LaneServer) -> Runtime {
+        let handle = RuntimeHandle { inner: HandleInner::Lanes(server.client()) };
+        Runtime { inner: ServerInner::Lanes(server), handle }
+    }
+
+    pub fn builder() -> RuntimeBuilder {
+        RuntimeBuilder::default()
+    }
+
+    /// Flattened input length of one example.
+    pub fn example_len(&self) -> usize {
+        match &self.inner {
+            ServerInner::Single(s) => s.example_len(),
+            ServerInner::Lanes(s) => s.example_len(),
+        }
+    }
+
+    /// Flattened output length of one example.
+    pub fn output_len(&self) -> usize {
+        match &self.inner {
+            ServerInner::Single(s) => s.output_len(),
+            ServerInner::Lanes(s) => s.output_len(),
+        }
+    }
+
+    /// Compiled batch buckets, ascending.
+    pub fn batch_sizes(&self) -> &[usize] {
+        match &self.inner {
+            ServerInner::Single(s) => s.batch_sizes(),
+            ServerInner::Lanes(s) => s.batch_sizes(),
+        }
+    }
+
+    /// A cloneable, `Send` request handle for client threads.
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+
+    /// Blocking inference: submit and wait for the output.
+    pub fn infer(&self, req: InferRequest) -> Result<Vec<f32>> {
+        self.handle.infer(req)
+    }
+
+    /// Submit a request; returns a waitable [`Ticket`].
+    pub fn submit(&self, req: InferRequest) -> Result<Ticket> {
+        self.handle.submit(req)
+    }
+
+    /// Stop the runtime: flush everything already admitted, join every
+    /// engine/lane thread, and collect the serving report.
+    pub fn shutdown(self) -> Result<ServingReport> {
+        match self.inner {
+            ServerInner::Single(s) => s.shutdown(),
+            ServerInner::Lanes(s) => s.shutdown(),
+        }
+    }
+}
+
+#[derive(Clone)]
+enum HandleInner {
+    Single(ServerClient),
+    Lanes(LaneClient),
+}
+
+/// Cloneable, `Send` request handle to a [`Runtime`] — one per client
+/// thread. Dropping handles does not stop the runtime.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    inner: HandleInner,
+}
+
+impl RuntimeHandle {
+    pub fn example_len(&self) -> usize {
+        match &self.inner {
+            HandleInner::Single(c) => c.example_len(),
+            HandleInner::Lanes(c) => c.example_len(),
+        }
+    }
+
+    pub fn output_len(&self) -> usize {
+        match &self.inner {
+            HandleInner::Single(c) => c.output_len(),
+            HandleInner::Lanes(c) => c.output_len(),
+        }
+    }
+
+    /// Compiled batch buckets, ascending.
+    pub fn batch_sizes(&self) -> &[usize] {
+        match &self.inner {
+            HandleInner::Single(c) => c.batch_sizes(),
+            HandleInner::Lanes(c) => c.batch_sizes(),
+        }
+    }
+
+    /// Blocking inference: submit and wait for the output (shed and
+    /// failed requests become errors).
+    pub fn infer(&self, req: InferRequest) -> Result<Vec<f32>> {
+        self.submit(req)?.wait()
+    }
+
+    /// Submit a request; returns a waitable [`Ticket`]. Validates the
+    /// input length and any bucket hint against the compiled buckets —
+    /// identically on both topologies.
+    pub fn submit(&self, req: InferRequest) -> Result<Ticket> {
+        let InferRequest { input, opts, batch } = req;
+        if let Some(hint) = opts.bucket_hint {
+            anyhow::ensure!(
+                self.batch_sizes().contains(&hint),
+                "no compiled bucket {hint} to hint"
+            );
+        }
+        if let Some(bucket) = batch {
+            anyhow::ensure!(
+                self.batch_sizes().contains(&bucket),
+                "no compiled bucket {bucket}"
+            );
+            anyhow::ensure!(
+                input.len() == bucket * self.example_len(),
+                "bad batch length {} != {}",
+                input.len(),
+                bucket * self.example_len()
+            );
+            if let Some(hint) = opts.bucket_hint {
+                anyhow::ensure!(
+                    hint == bucket,
+                    "bucket hint {hint} contradicts the pre-formed batch bucket {bucket}"
+                );
+            }
+            match &self.inner {
+                HandleInner::Lanes(c) => {
+                    c.submit_batch_raw(bucket, input, opts.deadline).map(Ticket::new)
+                }
+                HandleInner::Single(_) => anyhow::bail!(
+                    "pre-formed batch requests need the lane topology \
+                     (the builder default; this runtime is single_thread)"
+                ),
+            }
+        } else {
+            anyhow::ensure!(
+                input.len() == self.example_len(),
+                "bad input length {} != {}",
+                input.len(),
+                self.example_len()
+            );
+            match &self.inner {
+                HandleInner::Single(c) => {
+                    c.submit_raw(input, opts.bucket_hint, opts.deadline).map(Ticket::new)
+                }
+                HandleInner::Lanes(c) => {
+                    c.submit_raw(input, opts.bucket_hint, opts.deadline).map(Ticket::new)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect()).collect()
+    }
+
+    #[test]
+    fn builder_serves_on_both_topologies_bit_identically() {
+        let lanes = Runtime::builder().model("mini_inception").build().unwrap();
+        let single =
+            Runtime::builder().model("mini_inception").single_thread().build().unwrap();
+        assert_eq!(lanes.batch_sizes(), &[1, 8], "default buckets");
+        assert_eq!(lanes.batch_sizes(), single.batch_sizes());
+        let len = lanes.example_len();
+        assert_eq!(len, single.example_len());
+        for input in inputs(3, len, 11) {
+            let a = lanes.infer(InferRequest::new(input.clone())).unwrap();
+            let b = single.infer(InferRequest::new(input)).unwrap();
+            assert_eq!(a, b, "topology must not leak into results");
+        }
+        let _ = lanes.shutdown().unwrap();
+        let _ = single.shutdown().unwrap();
+    }
+
+    #[test]
+    fn batch_requests_route_to_their_bucket_and_match_the_engine() {
+        let rt = Runtime::builder().model("mini_inception").buckets(&[1, 4]).build().unwrap();
+        let len = rt.example_len();
+        let batch: Vec<f32> = inputs(4, len, 21).concat();
+        let got = rt.submit(InferRequest::batch(4, batch.clone())).unwrap().wait().unwrap();
+        let mut direct = Runtime::builder()
+            .model("mini_inception")
+            .buckets(&[4])
+            .build_engine()
+            .unwrap();
+        assert_eq!(got, direct.infer_batch(4, &batch).unwrap());
+        // Validation: unknown bucket, bad length, contradictory hint.
+        assert!(rt.submit(InferRequest::batch(3, vec![0.0; 3 * len])).is_err());
+        assert!(rt.submit(InferRequest::batch(4, vec![0.0; len])).is_err());
+        assert!(rt.submit(InferRequest::batch(4, batch.clone()).hint(1)).is_err());
+        let report = rt.shutdown().unwrap();
+        assert_eq!(report.n_batches, 1);
+    }
+
+    #[test]
+    fn batch_requests_require_the_lane_topology() {
+        let rt = Runtime::builder()
+            .model("mini_inception")
+            .buckets(&[1, 4])
+            .single_thread()
+            .build()
+            .unwrap();
+        let err = rt.submit(InferRequest::batch(4, vec![0.0; 4 * rt.example_len()]));
+        assert!(err.is_err());
+        let _ = rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn hints_are_validated_identically_on_both_topologies() {
+        for single in [false, true] {
+            let b = Runtime::builder().model("mini_inception").buckets(&[1, 8]);
+            let rt = if single { b.single_thread() } else { b }.build().unwrap();
+            let len = rt.example_len();
+            let ok = rt.infer(InferRequest::new(vec![0.1; len]).hint(8));
+            assert!(ok.is_ok(), "valid hint must serve (single={single})");
+            let bad = rt.submit(InferRequest::new(vec![0.1; len]).hint(3));
+            assert!(bad.is_err(), "unknown hint must be rejected (single={single})");
+            let short = rt.submit(InferRequest::new(vec![0.1; len - 1]));
+            assert!(short.is_err(), "bad length must be rejected (single={single})");
+            let _ = rt.shutdown().unwrap();
+        }
+    }
+
+    #[test]
+    fn expired_deadlines_shed_and_are_accounted() {
+        for single in [false, true] {
+            let b = Runtime::builder()
+                .model("mini_inception")
+                .buckets(&[1])
+                .max_wait(Duration::from_micros(200));
+            let rt = if single { b.single_thread() } else { b }.build().unwrap();
+            let len = rt.example_len();
+            // Already expired at submit: the engine must never run it.
+            let shed = rt
+                .submit(InferRequest::new(vec![0.2; len]).deadline(Instant::now()))
+                .unwrap();
+            assert_eq!(shed.outcome().unwrap(), InferOutcome::DeadlineShed);
+            // A roomy deadline completes normally.
+            let ok = rt
+                .submit(InferRequest::new(vec![0.2; len]).deadline_in(Duration::from_secs(60)))
+                .unwrap();
+            assert!(matches!(ok.outcome().unwrap(), InferOutcome::Output(_)));
+            let report = rt.shutdown().unwrap();
+            assert_eq!(report.deadline_shed, 1, "single={single}");
+            assert_eq!(report.n_requests, 1, "completed excludes shed (single={single})");
+        }
+    }
+
+    #[test]
+    fn wait_surfaces_shed_as_a_marked_error() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(Err(shed_error())).unwrap();
+        let err = Ticket::new(rx).wait().unwrap_err();
+        assert!(format!("{err:#}").starts_with(DEADLINE_SHED));
+        let (tx, rx) = mpsc::channel();
+        tx.send(Err("engine exploded".to_string())).unwrap();
+        assert_eq!(
+            Ticket::new(rx).outcome().unwrap(),
+            InferOutcome::Failed("engine exploded".to_string())
+        );
+    }
+
+    #[test]
+    fn builder_requires_a_source() {
+        assert!(Runtime::builder().build().is_err());
+        assert!(Runtime::builder().buckets(&[1]).build_engine().is_err());
+    }
+}

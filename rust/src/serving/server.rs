@@ -4,20 +4,29 @@
 //! ([`super::lanes::LaneServer`]) overlaps batch buckets end-to-end and
 //! is what the serving bench compares against. Shutdown flushes the
 //! request channel before the engine stops: a request sent before
-//! `shutdown` was called is served, never dropped.
+//! `shutdown` was called is served, never dropped. Requests whose
+//! [`deadline`](crate::serving::RequestOptions::deadline) expires while
+//! they wait in the batcher are shed before the engine runs them
+//! (`ServingReport::deadline_shed`).
+//!
+//! Construct through [`Runtime::builder()`](crate::serving::Runtime)
+//! with [`single_thread()`](crate::serving::RuntimeBuilder::single_thread);
+//! the old `NimbleServer::{start, start_with}` constructors and the
+//! `infer*` method variants are deprecated shims over the same
+//! internals.
 //!
 //! Wire-up:
 //!   client threads → mpsc<Request> → [server thread: batcher → engine
 //!   (any [`InferEngine`]) → per-request responses] → mpsc<Response> per
 //!   client.
 //!
-//! The server is engine-agnostic: [`NimbleServer::start_with`] takes a
-//! factory that builds the engine *on the engine thread* (so non-`Send`
-//! engines like the PJRT one work), and the engine keeps its own
-//! reusable per-bucket replay contexts ([`PreparedReplay`] on the PJRT
-//! side, [`ReplayContext`] in the tape engine). The batcher writes each
-//! padded batch into one reused buffer (`form_with`), so the steady-state
-//! serving loop allocates only for response marshalling.
+//! The server is engine-agnostic: the factory runs *on the engine
+//! thread* (so non-`Send` engines like the PJRT one work), and the
+//! engine keeps its own reusable per-bucket replay contexts
+//! ([`PreparedReplay`] on the PJRT side, [`ReplayContext`] in the tape
+//! engine). The batcher writes each padded batch into one reused buffer
+//! (`form_with`), so the steady-state serving loop allocates only for
+//! response marshalling.
 //!
 //! [`PreparedReplay`]: crate::aot::tape
 //! [`ReplayContext`]: crate::engine::executor::ReplayContext
@@ -29,6 +38,7 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::ServingReport;
+use super::runtime::ReqToken;
 use crate::coordinator::{EngineConfig, ExecMode, InferEngine};
 use crate::util::stats::Summary;
 
@@ -51,6 +61,9 @@ enum Msg {
         /// Optional bucket hint the batcher honors over queue-depth
         /// routing (ignored unless it names a compiled bucket).
         hint: Option<usize>,
+        /// Shed the request if it still waits in the batcher at this
+        /// instant.
+        deadline: Option<Instant>,
         reply: mpsc::Sender<Result<Vec<f32>, String>>,
     },
     Shutdown { reply: mpsc::Sender<ServingReport> },
@@ -62,6 +75,7 @@ pub struct NimbleServer {
     join: Option<JoinHandle<()>>,
     example_len: usize,
     output_len: usize,
+    batch_sizes: Vec<usize>,
 }
 
 /// Cloneable, `Send` request handle: one per client thread
@@ -71,6 +85,7 @@ pub struct ServerClient {
     tx: mpsc::Sender<Msg>,
     example_len: usize,
     output_len: usize,
+    batch_sizes: Vec<usize>,
 }
 
 impl ServerClient {
@@ -82,12 +97,33 @@ impl ServerClient {
         self.output_len
     }
 
-    /// Blocking inference of one example.
-    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+    /// Compiled batch buckets of the engine, ascending.
+    pub fn batch_sizes(&self) -> &[usize] {
+        &self.batch_sizes
+    }
+
+    /// The one submit path: enqueue `(input, hint, deadline)` and hand
+    /// back the raw reply channel. [`RuntimeHandle`] wraps this (and
+    /// validates) — the deprecated `infer*` variants are shims over it.
+    ///
+    /// [`RuntimeHandle`]: crate::serving::RuntimeHandle
+    pub(crate) fn submit_raw(
+        &self,
+        input: Vec<f32>,
+        hint: Option<usize>,
+        deadline: Option<Instant>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Msg::Infer { input, hint: None, reply })
+            .send(Msg::Infer { input, hint, deadline, reply })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rx)
+    }
+
+    /// Blocking inference of one example.
+    #[deprecated(note = "build a Runtime and call infer(InferRequest) — see rust/README.md")]
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        let rx = self.submit_raw(input, None, None)?;
         rx.recv().context("server dropped request")?.map_err(anyhow::Error::msg)
     }
 
@@ -95,51 +131,74 @@ impl ServerClient {
     /// request's batch to `bucket` (if compiled) instead of deriving the
     /// bucket from queue depth — sequence-length-aware clients pick
     /// their own lane.
+    #[deprecated(note = "use Runtime::infer(InferRequest::new(..).hint(bucket))")]
     pub fn infer_hinted(&self, input: Vec<f32>, bucket: usize) -> Result<Vec<f32>> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Infer { input, hint: Some(bucket), reply })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        let rx = self.submit_raw(input, Some(bucket), None)?;
         rx.recv().context("server dropped request")?.map_err(anyhow::Error::msg)
     }
 
     /// Fire an async request; returns the reply channel.
+    #[deprecated(note = "use Runtime::submit(InferRequest) -> Ticket")]
     pub fn infer_async(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Infer { input, hint: None, reply })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        Ok(rx)
+        self.submit_raw(input, None, None)
+    }
+
+    /// Async variant of [`infer_hinted`](Self::infer_hinted) — closes
+    /// the historical parity gap with `LaneClient::infer_hinted_async`.
+    #[deprecated(note = "use Runtime::submit(InferRequest::new(..).hint(bucket)) -> Ticket")]
+    pub fn infer_hinted_async(
+        &self,
+        input: Vec<f32>,
+        bucket: usize,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
+        self.submit_raw(input, Some(bucket), None)
     }
 }
 
 impl NimbleServer {
     /// Start a server over any [`InferEngine`]; the factory runs on the
     /// engine thread and the call blocks until the engine finished its
-    /// build (so the first request is already schedule-replayed).
-    pub fn start_with<E, F>(factory: F, max_wait: Duration) -> Result<NimbleServer>
+    /// build (so the first request is already schedule-replayed). The
+    /// non-deprecated spelling is
+    /// `Runtime::builder().single_thread().build()`.
+    pub(crate) fn spawn<E, F>(factory: F, max_wait: Duration) -> Result<NimbleServer>
     where
         E: InferEngine + 'static,
         F: FnOnce() -> Result<E> + Send + 'static,
     {
         let (tx, rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize), String>>();
+        type Ready = Result<(usize, usize, Vec<usize>), String>;
+        let (ready_tx, ready_rx) = mpsc::channel::<Ready>();
         let join = std::thread::Builder::new()
             .name("nimble-engine".into())
             .spawn(move || engine_thread(factory, max_wait, rx, ready_tx))
             .context("spawning engine thread")?;
-        let (example_len, output_len) = ready_rx
+        let (example_len, output_len, batch_sizes) = ready_rx
             .recv()
             .context("engine thread died during build")?
             .map_err(anyhow::Error::msg)?;
-        Ok(NimbleServer { tx, join: Some(join), example_len, output_len })
+        Ok(NimbleServer { tx, join: Some(join), example_len, output_len, batch_sizes })
+    }
+
+    /// Start a server over any [`InferEngine`] built by `factory` on
+    /// the engine thread.
+    #[deprecated(note = "use Runtime::builder().single_thread().build() — see rust/README.md")]
+    pub fn start_with<E, F>(factory: F, max_wait: Duration) -> Result<NimbleServer>
+    where
+        E: InferEngine + 'static,
+        F: FnOnce() -> Result<E> + Send + 'static,
+    {
+        Self::spawn(factory, max_wait)
     }
 
     /// Start the PJRT-backed server (the paper's real-runtime path).
     #[cfg(feature = "xla")]
+    #[deprecated(
+        note = "use Runtime::builder().artifacts(config.engine).single_thread().build()"
+    )]
     pub fn start(config: ServerConfig) -> Result<NimbleServer> {
         let engine_config = config.engine.clone();
-        Self::start_with(
+        Self::spawn(
             move || crate::coordinator::NimbleEngine::build(engine_config),
             config.max_wait,
         )
@@ -154,29 +213,39 @@ impl NimbleServer {
         self.output_len
     }
 
+    /// Compiled batch buckets of the engine, ascending.
+    pub fn batch_sizes(&self) -> &[usize] {
+        &self.batch_sizes
+    }
+
     /// A cloneable request handle for client threads.
     pub fn client(&self) -> ServerClient {
         ServerClient {
             tx: self.tx.clone(),
             example_len: self.example_len,
             output_len: self.output_len,
+            batch_sizes: self.batch_sizes.clone(),
         }
     }
 
     /// Blocking inference of one example.
+    #[deprecated(note = "build a Runtime and call infer(InferRequest) — see rust/README.md")]
     pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
-        self.client().infer(input)
+        let rx = self.client().submit_raw(input, None, None)?;
+        rx.recv().context("server dropped request")?.map_err(anyhow::Error::msg)
     }
 
-    /// Blocking inference with a bucket hint
-    /// ([`ServerClient::infer_hinted`]).
+    /// Blocking inference with a bucket hint.
+    #[deprecated(note = "use Runtime::infer(InferRequest::new(..).hint(bucket))")]
     pub fn infer_hinted(&self, input: Vec<f32>, bucket: usize) -> Result<Vec<f32>> {
-        self.client().infer_hinted(input, bucket)
+        let rx = self.client().submit_raw(input, Some(bucket), None)?;
+        rx.recv().context("server dropped request")?.map_err(anyhow::Error::msg)
     }
 
     /// Fire an async request; returns the reply channel.
+    #[deprecated(note = "use Runtime::submit(InferRequest) -> Ticket")]
     pub fn infer_async(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
-        self.client().infer_async(input)
+        self.client().submit_raw(input, None, None)
     }
 
     /// Stop the server and collect the serving report.
@@ -195,7 +264,7 @@ fn engine_thread<E: InferEngine>(
     factory: impl FnOnce() -> Result<E>,
     max_wait: Duration,
     rx: mpsc::Receiver<Msg>,
-    ready: mpsc::Sender<Result<(usize, usize), String>>,
+    ready: mpsc::Sender<Result<(usize, usize, Vec<usize>), String>>,
 ) {
     let mut engine = match factory() {
         Ok(e) => e,
@@ -207,10 +276,10 @@ fn engine_thread<E: InferEngine>(
     let batch_sizes = engine.batch_sizes();
     let example_len = engine.example_len();
     let output_len = engine.output_len();
-    let _ = ready.send(Ok((example_len, output_len)));
+    let _ = ready.send(Ok((example_len, output_len, batch_sizes.clone())));
 
     let policy = BatchPolicy { batch_sizes, max_wait };
-    let mut batcher: Batcher<mpsc::Sender<Result<Vec<f32>, String>>> = Batcher::new(policy);
+    let mut batcher: Batcher<ReqToken> = Batcher::new(policy);
     // Reused padded-batch input buffer (`Batcher::form_with`).
     let mut batch_input: Vec<f32> = Vec::new();
     let started = Instant::now();
@@ -218,7 +287,21 @@ fn engine_thread<E: InferEngine>(
     let mut n_requests = 0usize;
     let mut n_batches = 0usize;
     let mut fill_sum = 0usize;
+    let mut deadline_shed = 0usize;
     let mut shutdown_reply: Option<mpsc::Sender<ServingReport>> = None;
+
+    let admit = |batcher: &mut Batcher<ReqToken>,
+                 input: Vec<f32>,
+                 hint: Option<usize>,
+                 deadline: Option<Instant>,
+                 reply: mpsc::Sender<Result<Vec<f32>, String>>| {
+        if input.len() != example_len {
+            let _ =
+                reply.send(Err(format!("bad input length {} != {example_len}", input.len())));
+        } else {
+            batcher.push_hinted(ReqToken { reply, deadline }, input, hint);
+        }
+    };
 
     'outer: loop {
         // Wait for work (bounded by the oldest request's flush deadline).
@@ -238,13 +321,8 @@ fn engine_thread<E: InferEngine>(
             }
         };
         match msg {
-            Some(Msg::Infer { input, hint, reply }) => {
-                if input.len() != example_len {
-                    let _ = reply
-                        .send(Err(format!("bad input length {} != {example_len}", input.len())));
-                } else {
-                    batcher.push_hinted(reply, input, hint);
-                }
+            Some(Msg::Infer { input, hint, deadline, reply }) => {
+                admit(&mut batcher, input, hint, deadline, reply);
             }
             Some(Msg::Shutdown { reply }) => {
                 shutdown_reply = Some(reply);
@@ -254,15 +332,8 @@ fn engine_thread<E: InferEngine>(
                 // sender once the channel disconnects below.)
                 while let Ok(m) = rx.try_recv() {
                     match m {
-                        Msg::Infer { input, hint, reply } => {
-                            if input.len() != example_len {
-                                let _ = reply.send(Err(format!(
-                                    "bad input length {} != {example_len}",
-                                    input.len()
-                                )));
-                            } else {
-                                batcher.push_hinted(reply, input, hint);
-                            }
+                        Msg::Infer { input, hint, deadline, reply } => {
+                            admit(&mut batcher, input, hint, deadline, reply);
                         }
                         Msg::Shutdown { .. } => {}
                     }
@@ -277,21 +348,44 @@ fn engine_thread<E: InferEngine>(
             || batcher.ready(Instant::now())
         {
             let Some(fb) = batcher.form_with(example_len, &mut batch_input) else { break };
+            // Shed whatever expired while it waited in the batcher —
+            // shed rows stay in the padded input (zero-risk: surviving
+            // rows keep their positions), but an all-shed batch skips
+            // the engine entirely.
+            let now = Instant::now();
+            let shed: Vec<bool> = fb.tokens.iter().map(|(tok, _)| tok.expired(now)).collect();
+            let n_live = shed.iter().filter(|s| !**s).count();
+            for ((tok, _), is_shed) in fb.tokens.iter().zip(&shed) {
+                if *is_shed {
+                    tok.shed();
+                    deadline_shed += 1;
+                }
+            }
+            if n_live == 0 {
+                continue;
+            }
             n_batches += 1;
-            fill_sum += fb.tokens.len();
+            fill_sum += n_live;
             match engine.infer_batch(fb.bucket, &batch_input) {
                 Ok(out) => {
                     let done = Instant::now();
-                    for (i, (reply, enq)) in fb.tokens.into_iter().enumerate() {
+                    for (i, ((tok, enq), is_shed)) in
+                        fb.tokens.into_iter().zip(shed).enumerate()
+                    {
+                        if is_shed {
+                            continue;
+                        }
                         latencies.push(done.duration_since(enq).as_secs_f64());
                         n_requests += 1;
                         let slice = out[i * output_len..(i + 1) * output_len].to_vec();
-                        let _ = reply.send(Ok(slice));
+                        let _ = tok.reply.send(Ok(slice));
                     }
                 }
                 Err(err) => {
-                    for (reply, _) in fb.tokens {
-                        let _ = reply.send(Err(format!("{err:#}")));
+                    for ((tok, _), is_shed) in fb.tokens.into_iter().zip(shed) {
+                        if !is_shed {
+                            let _ = tok.reply.send(Err(format!("{err:#}")));
+                        }
                     }
                 }
             }
@@ -312,6 +406,7 @@ fn engine_thread<E: InferEngine>(
             Summary::from_samples(latencies)
         },
         mean_batch_fill: if n_batches == 0 { 0.0 } else { fill_sum as f64 / n_batches as f64 },
+        deadline_shed,
         lanes: Vec::new(),
     };
     if let Some(reply) = shutdown_reply {

@@ -10,16 +10,18 @@
 //! bucket never contends with a cold one — and the steady-state request
 //! loop performs zero per-task heap allocation.
 //!
-//! Three knobs matter for the lane scheduler:
-//! * [`from_graph_fn`](TapeEngine::from_graph_fn) builds an engine from
-//!   an arbitrary graph builder (the randomized differential harness
-//!   feeds it seeded random cells),
-//! * [`with_worker_cap`](TapeEngine::with_worker_cap) caps each
-//!   context's pool via the executor's work-sharing mode (many lanes ×
-//!   many streams must not exceed the physical cores by much), and
-//! * [`serial`](TapeEngine::serial) switches `infer_batch` to the
-//!   single-thread serial replay — the differential oracle the lane
-//!   pipeline is checked against bit-for-bit.
+//! Build through
+//! [`Runtime::builder().build_engine()`](crate::serving::RuntimeBuilder::build_engine)
+//! — `graph_fn` feeds arbitrary builders (the randomized differential
+//! harness uses seeded random cells), `worker_cap` caps each context's
+//! pool via the executor's work-sharing mode (many lanes × many streams
+//! must not exceed the physical cores by much), and
+//! [`serial`](TapeEngine::serial) (or the builder's `serial_oracle()`)
+//! switches `infer_batch` to the single-thread serial replay — the
+//! differential oracle the lane pipeline is checked against
+//! bit-for-bit. The old `TapeEngine::{new, with_worker_cap,
+//! from_graph_fn, from_graph_fn_opts}` constructors are deprecated
+//! shims over the same internals.
 
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -73,23 +75,30 @@ pub struct TapeEngine {
 
 impl TapeEngine {
     /// Build contexts for the zoo model `model` at each batch bucket.
+    #[deprecated(note = "use Runtime::builder().model(..).buckets(..).build_engine()")]
     pub fn new(model: &str, batch_sizes: &[usize]) -> Result<TapeEngine> {
-        Self::with_worker_cap(model, batch_sizes, None)
+        let name = model.to_string();
+        Self::build_opts(model, batch_sizes, TapeEngineOptions::default(), move |b| {
+            models::build(&name, b)
+        })
     }
 
     /// Like [`new`](Self::new), with a per-context worker cap
     /// ([`ExecOptions::max_workers`]).
+    #[deprecated(note = "use Runtime::builder().model(..).worker_cap(..).build_engine()")]
     pub fn with_worker_cap(
         model: &str,
         batch_sizes: &[usize],
         worker_cap: Option<usize>,
     ) -> Result<TapeEngine> {
         let name = model.to_string();
-        Self::from_graph_fn(model, batch_sizes, worker_cap, move |b| models::build(&name, b))
+        let opts = TapeEngineOptions { worker_cap, ..Default::default() };
+        Self::build_opts(model, batch_sizes, opts, move |b| models::build(&name, b))
     }
 
     /// Build contexts from an arbitrary per-bucket graph builder. The
     /// graph must have exactly one `Input` node; `name` labels errors.
+    #[deprecated(note = "use Runtime::builder().graph_fn(..).build_engine()")]
     pub fn from_graph_fn(
         name: &str,
         batch_sizes: &[usize],
@@ -97,13 +106,30 @@ impl TapeEngine {
         build: impl Fn(usize) -> OpGraph,
     ) -> Result<TapeEngine> {
         let opts = TapeEngineOptions { worker_cap, ..Default::default() };
-        Self::from_graph_fn_opts(name, batch_sizes, opts, build)
+        Self::build_opts(name, batch_sizes, opts, build)
     }
 
     /// Like [`from_graph_fn`](Self::from_graph_fn) with full build-time
     /// options: worker cap, per-slot (unshared) arena layout, and a
     /// shared [`ArenaPool`] to draw the contexts' arenas from.
+    #[deprecated(
+        note = "use Runtime::builder().graph_fn(..) with worker_cap()/unshared_slots()/\
+                arena_pool()/shared_pool() and build_engine()"
+    )]
     pub fn from_graph_fn_opts(
+        name: &str,
+        batch_sizes: &[usize],
+        opts: TapeEngineOptions,
+        build: impl Fn(usize) -> OpGraph,
+    ) -> Result<TapeEngine> {
+        Self::build_opts(name, batch_sizes, opts, build)
+    }
+
+    /// The one constructor behind the deprecated public matrix and
+    /// [`RuntimeBuilder::build_engine`](crate::serving::RuntimeBuilder):
+    /// contexts from a per-bucket graph builder with full build-time
+    /// options.
+    pub(crate) fn build_opts(
         name: &str,
         batch_sizes: &[usize],
         opts: TapeEngineOptions,
@@ -238,9 +264,16 @@ mod tests {
         (0..n).map(|_| (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect()).collect()
     }
 
+    fn mini(batch_sizes: &[usize], opts: TapeEngineOptions) -> TapeEngine {
+        TapeEngine::build_opts("mini_inception", batch_sizes, opts, |b| {
+            models::build("mini_inception", b)
+        })
+        .expect("mini_inception engine")
+    }
+
     #[test]
     fn engine_reports_consistent_shapes() {
-        let e = TapeEngine::new("mini_inception", &[1, 8]).unwrap();
+        let e = mini(&[1, 8], TapeEngineOptions::default());
         assert_eq!(e.batch_sizes(), vec![1, 8]);
         assert!(e.example_len() > 0);
         assert!(e.output_len() > 0);
@@ -249,8 +282,18 @@ mod tests {
     }
 
     #[test]
+    fn deprecated_constructors_still_build_the_same_engine() {
+        #[allow(deprecated)]
+        let legacy = TapeEngine::new("mini_inception", &[1, 8]).unwrap();
+        let modern = mini(&[1, 8], TapeEngineOptions::default());
+        assert_eq!(legacy.batch_sizes(), modern.batch_sizes());
+        assert_eq!(legacy.example_len(), modern.example_len());
+        assert_eq!(legacy.output_len(), modern.output_len());
+    }
+
+    #[test]
     fn batch_one_and_padded_batch_agree_on_shared_prefix() {
-        let mut e = TapeEngine::new("mini_inception", &[1, 8]).unwrap();
+        let mut e = mini(&[1, 8], TapeEngineOptions::default());
         let len = e.example_len();
         let x = inputs(1, len, 5).pop().unwrap();
         let out1 = e.infer_batch(1, &x).unwrap();
@@ -262,14 +305,9 @@ mod tests {
 
     #[test]
     fn engine_reports_reserved_bytes_and_unshared_layout_matches() {
-        let mut packed = TapeEngine::new("mini_inception", &[1]).unwrap();
-        let mut unshared = TapeEngine::from_graph_fn_opts(
-            "mini_inception",
-            &[1],
-            TapeEngineOptions { unshared_slots: true, ..Default::default() },
-            |b| models::build("mini_inception", b),
-        )
-        .unwrap();
+        let mut packed = mini(&[1], TapeEngineOptions::default());
+        let mut unshared =
+            mini(&[1], TapeEngineOptions { unshared_slots: true, ..Default::default() });
         let packed_bytes = packed.reserved_bytes(1).unwrap();
         let unshared_bytes = unshared.reserved_bytes(1).unwrap();
         assert!(packed_bytes < unshared_bytes, "{packed_bytes} !< {unshared_bytes}");
@@ -287,15 +325,12 @@ mod tests {
         let pool = crate::aot::memory::ArenaPool::new();
         let opts =
             TapeEngineOptions { arena_pool: Some(pool.clone()), ..Default::default() };
-        let build = |b: usize| models::build("mini_inception", b);
-        let e1 = TapeEngine::from_graph_fn_opts("mini_inception", &[1, 2], opts.clone(), build)
-            .unwrap();
+        let e1 = mini(&[1, 2], opts.clone());
         let first = pool.stats();
         assert_eq!(first.acquires, 2, "one arena per bucket context");
         drop(e1);
         assert_eq!(pool.stats().leased_bytes, 0, "arenas return on engine drop");
-        let _e2 = TapeEngine::from_graph_fn_opts("mini_inception", &[1, 2], opts, build)
-            .unwrap();
+        let _e2 = mini(&[1, 2], opts);
         let second = pool.stats();
         assert_eq!(second.acquires, 4);
         assert!(second.hits >= 1, "rebuilt buckets must recycle size classes");
@@ -304,15 +339,16 @@ mod tests {
 
     #[test]
     fn unknown_bucket_errors() {
-        let mut e = TapeEngine::new("mini_inception", &[1]).unwrap();
+        let mut e = mini(&[1], TapeEngineOptions::default());
         assert!(e.infer_batch(4, &[0.0; 16]).is_err());
     }
 
     #[test]
     fn serial_oracle_and_capped_engine_match_parallel_bitwise() {
-        let mut par = TapeEngine::new("mini_inception", &[1, 2]).unwrap();
-        let mut ser = TapeEngine::new("mini_inception", &[1, 2]).unwrap().serial();
-        let mut capped = TapeEngine::with_worker_cap("mini_inception", &[1, 2], Some(1)).unwrap();
+        let mut par = mini(&[1, 2], TapeEngineOptions::default());
+        let mut ser = mini(&[1, 2], TapeEngineOptions::default()).serial();
+        let mut capped =
+            mini(&[1, 2], TapeEngineOptions { worker_cap: Some(1), ..Default::default() });
         let len = par.example_len();
         for (i, x) in inputs(3, len, 77).into_iter().enumerate() {
             let a = par.infer_batch(1, &x).unwrap();

@@ -535,6 +535,89 @@ pub fn simulate_lanes(lanes: &[LaneLoad], host: HostProfile, device: GpuSpec) ->
     }
 }
 
+/// One lane's queued batch traffic for the deadline-aware DES
+/// ([`simulate_lanes_deadline`]): the lane's compiled tape and costs,
+/// plus per-batch `(arrival_s, deadline_s)` pairs
+/// (`f64::INFINITY` = no deadline).
+pub struct LaneTraffic<'a> {
+    pub tape: &'a crate::aot::tape::ReplayTape,
+    pub costs: &'a [KernelCost],
+    /// Batch arrivals, ascending: `(arrival_s, absolute deadline_s)`.
+    pub batches: &'a [(f64, f64)],
+}
+
+/// Per-lane prediction of [`simulate_lanes_deadline`].
+#[derive(Debug, Clone)]
+pub struct DeadlineLaneStat {
+    /// Per-batch service time of this lane's tape (single-lane DES
+    /// latency, [`simulate_tape`]`.total_s`).
+    pub service_s: f64,
+    /// Batches that started before their deadline.
+    pub completed: usize,
+    /// Batches whose deadline passed while they queued (never served).
+    pub shed: usize,
+    /// When the lane's last served batch completes.
+    pub lane_end_s: f64,
+}
+
+/// Output of [`simulate_lanes_deadline`].
+#[derive(Debug, Clone)]
+pub struct DeadlineShedResult {
+    pub per_lane: Vec<DeadlineLaneStat>,
+    /// Makespan across lanes (lanes independent).
+    pub total_s: f64,
+}
+
+impl DeadlineShedResult {
+    pub fn completed(&self) -> usize {
+        self.per_lane.iter().map(|l| l.completed).sum()
+    }
+
+    pub fn shed(&self) -> usize {
+        self.per_lane.iter().map(|l| l.shed).sum()
+    }
+}
+
+/// Deadline-aware lane prediction: how many queued batches the lane
+/// scheduler will shed under a given deadline budget.
+///
+/// Each lane is one FIFO server whose per-batch service time is its
+/// tape's single-lane DES latency ([`simulate_tape`]`.total_s`) — the
+/// same batch-granularity queue model (and uncontended-device
+/// assumption) as [`simulate_scaling`]. The shed rule mirrors the live
+/// dispatcher's pop-time check exactly: a batch whose execution would
+/// start at or after its deadline (`start >= deadline_s`) is shed and
+/// the server stays free; execution already started always completes.
+/// With every deadline at `f64::INFINITY` nothing sheds and the lane
+/// degenerates to plain FIFO pipelining.
+pub fn simulate_lanes_deadline(
+    lanes: &[LaneTraffic],
+    host: HostProfile,
+    device: GpuSpec,
+) -> DeadlineShedResult {
+    assert!(!lanes.is_empty(), "need at least one lane");
+    let mut per_lane = Vec::with_capacity(lanes.len());
+    for lane in lanes {
+        let service_s = simulate_tape(lane.tape, lane.costs, host, device.clone()).total_s;
+        let (mut free_at, mut lane_end_s) = (0.0f64, 0.0f64);
+        let (mut completed, mut shed) = (0usize, 0usize);
+        for &(arrival, deadline) in lane.batches {
+            assert!(arrival >= 0.0, "arrivals must be non-negative");
+            let start = free_at.max(arrival);
+            if start >= deadline {
+                shed += 1;
+            } else {
+                completed += 1;
+                free_at = start + service_s;
+                lane_end_s = free_at;
+            }
+        }
+        per_lane.push(DeadlineLaneStat { service_s, completed, shed, lane_end_s });
+    }
+    let total_s = per_lane.iter().fold(0.0f64, |a, l| a.max(l.lane_end_s));
+    DeadlineShedResult { per_lane, total_s }
+}
+
 /// One bucket's offered traffic for the scaling DES
 /// ([`simulate_scaling`]): the bucket's compiled tape and costs, plus
 /// the wall-clock dispatch times of its batches.
@@ -1028,6 +1111,92 @@ mod tests {
         ctx.set_tracing(true);
         ctx.replay_one(&input).unwrap();
         assert!(ctx.peak_live_bytes() <= ctx.reserved_bytes());
+    }
+
+    #[test]
+    fn deadline_sim_with_infinite_budget_never_sheds() {
+        let g = crate::models::build("mini_inception", 1);
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+        let batches: Vec<(f64, f64)> = (0..6).map(|_| (0.0, f64::INFINITY)).collect();
+        let r = simulate_lanes_deadline(
+            &[LaneTraffic { tape: &tape, costs: &cs, batches: &batches }],
+            HostProfile::nimble(),
+            dev,
+        );
+        assert_eq!((r.completed(), r.shed()), (6, 0));
+        let l = &r.per_lane[0];
+        // Plain FIFO pipelining: makespan = n × service.
+        assert!((l.lane_end_s - 6.0 * l.service_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_sim_sheds_exactly_the_batches_past_their_budget() {
+        let g = crate::models::build("mini_inception", 1);
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+        let service = simulate_tape(&tape, &cs, HostProfile::nimble(), dev.clone()).total_s;
+        // 8 batches arrive together with budget k×service: batch j
+        // starts at j×service, so exactly min(8, k) are served.
+        for k in [0usize, 1, 3, 8] {
+            let batches: Vec<(f64, f64)> =
+                (0..8).map(|_| (0.0, k as f64 * service)).collect();
+            let r = simulate_lanes_deadline(
+                &[LaneTraffic { tape: &tape, costs: &cs, batches: &batches }],
+                HostProfile::nimble(),
+                dev.clone(),
+            );
+            assert_eq!(r.completed(), k.min(8), "budget {k}x");
+            assert_eq!(r.shed(), 8 - k.min(8), "budget {k}x");
+            assert_eq!(r.completed() + r.shed(), 8, "accounting must close");
+        }
+        // A zero budget (deadline == arrival) sheds everything — the
+        // live system's `deadline = now` behavior.
+        let batches = [(0.0, 0.0), (1e-3, 1e-3)];
+        let r = simulate_lanes_deadline(
+            &[LaneTraffic { tape: &tape, costs: &cs, batches: &batches }],
+            HostProfile::nimble(),
+            dev,
+        );
+        assert_eq!((r.completed(), r.shed()), (0, 2));
+        assert_eq!(r.per_lane[0].lane_end_s, 0.0, "a fully-shed lane never runs");
+    }
+
+    #[test]
+    fn deadline_sim_is_deterministic_and_monotone_in_budget() {
+        let g = branchy();
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+        let service = simulate_tape(&tape, &cs, HostProfile::nimble(), dev.clone()).total_s;
+        let mk = |budget_x: f64| {
+            let batches: Vec<(f64, f64)> = (0..10)
+                .map(|i| {
+                    let arrival = i as f64 * 0.25 * service;
+                    (arrival, arrival + budget_x * service)
+                })
+                .collect();
+            simulate_lanes_deadline(
+                &[LaneTraffic { tape: &tape, costs: &cs, batches: &batches }],
+                HostProfile::nimble(),
+                dev.clone(),
+            )
+        };
+        let (a, b) = (mk(2.0), mk(2.0));
+        assert_eq!(a.completed(), b.completed());
+        assert_eq!(a.total_s.to_bits(), b.total_s.to_bits());
+        // More budget can only shed fewer batches.
+        let mut last = usize::MAX;
+        for budget_x in [0.5, 1.5, 3.0, 8.0] {
+            let shed = mk(budget_x).shed();
+            assert!(shed <= last, "shed must be monotone non-increasing in budget");
+            last = shed;
+        }
     }
 
     #[test]

@@ -1,21 +1,33 @@
-//! Integration: the serving stack — batching, correctness under
-//! concurrency, error paths, per-bucket replay contexts.
+//! Integration: the serving stack through the [`Runtime`] façade —
+//! batching, correctness under concurrency, error paths, per-bucket
+//! replay contexts, hint/deadline routing parity across topologies.
 //!
-//! The primary tests run over the tape-backed [`TapeEngine`] (virtual
+//! The primary tests run over the tape-backed engines (virtual
 //! substrate, always available, no artifacts needed). The PJRT-backed
 //! server tests live in the `xla` module at the bottom and additionally
 //! skip without artifacts.
 
-use nimble::serving::{NimbleServer, TapeEngine};
+use nimble::serving::{InferRequest, Runtime, TapeEngineOptions};
 use nimble::util::Pcg32;
 use std::time::Duration;
 
-fn tape_server() -> NimbleServer {
-    NimbleServer::start_with(
-        || TapeEngine::new("mini_inception", &[1, 8]),
-        Duration::from_millis(2),
-    )
-    .expect("tape server start")
+/// Single-engine-thread runtime (the PR-1 baseline topology).
+fn tape_server() -> Runtime {
+    Runtime::builder()
+        .model("mini_inception")
+        .buckets(&[1, 8])
+        .single_thread()
+        .max_wait(Duration::from_millis(2))
+        .build()
+        .expect("tape server start")
+}
+
+fn direct_engine(buckets: &[usize]) -> nimble::serving::TapeEngine {
+    Runtime::builder()
+        .model("mini_inception")
+        .buckets(buckets)
+        .build_engine()
+        .expect("direct engine")
 }
 
 fn inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -30,10 +42,10 @@ fn serves_requests_and_reports() {
     let out_len = server.output_len();
     let mut pending = Vec::new();
     for input in inputs(20, len, 1) {
-        pending.push(server.infer_async(input).unwrap());
+        pending.push(server.submit(InferRequest::new(input)).unwrap());
     }
-    for rx in pending {
-        let logits = rx.recv().unwrap().unwrap();
+    for ticket in pending {
+        let logits = ticket.wait().unwrap();
         assert_eq!(logits.len(), out_len);
         assert!(logits.iter().all(|v| v.is_finite()));
     }
@@ -41,27 +53,28 @@ fn serves_requests_and_reports() {
     assert_eq!(report.n_requests, 20);
     assert!(report.n_batches >= 3, "20 reqs over max batch 8 → ≥3 batches");
     assert!(report.mean_batch_fill > 1.0);
+    assert_eq!(report.deadline_shed, 0, "no deadlines were set");
 }
 
 #[test]
 fn rejects_malformed_input() {
     let server = tape_server();
-    let err = server.infer(vec![0.0; 5]);
+    let err = server.infer(InferRequest::new(vec![0.0; 5]));
     assert!(err.is_err(), "wrong-length input must be rejected");
     // server still healthy afterwards
-    let ok = server.infer(vec![0.0; server.example_len()]);
+    let ok = server.infer(InferRequest::new(vec![0.0; server.example_len()]));
     assert!(ok.is_ok());
     let _ = server.shutdown().unwrap();
 }
 
+/// The client-parity regression (the old matrix had no
+/// `ServerClient::infer_hinted_async`): hinted + async submission must
+/// work — and route — identically through BOTH topologies' handles,
+/// with the padded bucket-8 replay of the same input as the oracle.
 #[test]
-fn server_client_bucket_hint_is_honored_over_queue_depth() {
-    // A lone request would depth-route to bucket 1; a client hint must
-    // put it on the bucket-8 engine instead (satellite of the lane-aware
-    // admission follow-up). The padded bucket-8 replay of the same input
-    // is the oracle.
+fn hinted_async_routing_is_identical_through_both_topologies() {
     use nimble::coordinator::InferEngine;
-    let mut direct = TapeEngine::new("mini_inception", &[1, 8]).unwrap();
+    let mut direct = direct_engine(&[1, 8]);
     let len = direct.example_len();
     let out_len = direct.output_len();
     let input = inputs(1, len, 77).pop().unwrap();
@@ -70,16 +83,62 @@ fn server_client_bucket_hint_is_honored_over_queue_depth() {
     let want_hinted = direct.infer_batch(8, &padded).unwrap()[..out_len].to_vec();
     let want_plain = direct.infer_batch(1, &input).unwrap();
 
-    let server = tape_server();
-    let client = server.client();
-    let hinted = client.infer_hinted(input.clone(), 8).unwrap();
-    assert_eq!(hinted, want_hinted, "hint must route through the bucket-8 engine");
-    let plain = client.infer(input).unwrap();
-    assert_eq!(plain, want_plain, "unhinted requests keep depth routing");
-    // A hint naming no compiled bucket is ignored, not an error.
-    let ignored = client.infer_hinted(inputs(1, len, 78).pop().unwrap(), 5).unwrap();
-    assert_eq!(ignored.len(), out_len);
-    let _ = server.shutdown().unwrap();
+    let single = tape_server();
+    let lanes = Runtime::builder()
+        .model("mini_inception")
+        .buckets(&[1, 8])
+        .max_wait(Duration::from_millis(2))
+        .build()
+        .expect("lane runtime");
+    for (name, server) in [("single", &single), ("lanes", &lanes)] {
+        let handle = server.handle();
+        // Async + hinted: the exact combination ServerClient could not
+        // express before the façade.
+        let ticket = handle.submit(InferRequest::new(input.clone()).hint(8)).unwrap();
+        assert_eq!(
+            ticket.wait().unwrap(),
+            want_hinted,
+            "{name}: hint must route through the bucket-8 engine"
+        );
+        let plain = handle.infer(InferRequest::new(input.clone())).unwrap();
+        assert_eq!(plain, want_plain, "{name}: unhinted requests keep depth routing");
+        // Unknown hints are rejected identically on both topologies.
+        let bad = handle.submit(InferRequest::new(input.clone()).hint(5));
+        assert!(bad.is_err(), "{name}: hints must name a compiled bucket");
+    }
+    let report = lanes.shutdown().unwrap();
+    assert_eq!(report.lane(8).unwrap().n_requests, 1, "hinted request must land on lane 8");
+    let _ = single.shutdown().unwrap();
+}
+
+/// The deprecated shims keep their historical semantics: a legacy
+/// `infer_hinted` with an unknown bucket is ignored (depth-routed), not
+/// an error, and the once-missing `ServerClient::infer_hinted_async`
+/// now exists (closing the parity gap on the legacy surface too).
+#[test]
+#[allow(deprecated)]
+fn legacy_shims_still_serve_with_their_old_semantics() {
+    let legacy = nimble::serving::NimbleServer::start_with(
+        || {
+            nimble::serving::TapeEngine::from_graph_fn_opts(
+                "mini_inception",
+                &[1, 8],
+                TapeEngineOptions::default(),
+                |b| nimble::models::build("mini_inception", b),
+            )
+        },
+        Duration::from_millis(2),
+    )
+    .expect("legacy server");
+    let len = legacy.example_len();
+    let out_len = legacy.output_len();
+    let input = inputs(1, len, 78).pop().unwrap();
+    let ignored = legacy.client().infer_hinted(input.clone(), 5).unwrap();
+    assert_eq!(ignored.len(), out_len, "legacy unknown hints are ignored, not errors");
+    let rx = legacy.client().infer_hinted_async(input.clone(), 8).unwrap();
+    assert_eq!(rx.recv().unwrap().unwrap().len(), out_len);
+    assert_eq!(legacy.infer(input).unwrap().len(), out_len);
+    let _ = legacy.shutdown().unwrap();
 }
 
 #[test]
@@ -87,8 +146,8 @@ fn repeated_requests_are_deterministic() {
     let server = tape_server();
     let len = server.example_len();
     let input = inputs(1, len, 42).pop().unwrap();
-    let a = server.infer(input.clone()).unwrap();
-    let b = server.infer(input).unwrap();
+    let a = server.infer(InferRequest::new(input.clone())).unwrap();
+    let b = server.infer(InferRequest::new(input)).unwrap();
     assert_eq!(a, b, "same input, same logits");
     let _ = server.shutdown().unwrap();
 }
@@ -97,13 +156,13 @@ fn repeated_requests_are_deterministic() {
 fn server_responses_match_direct_engine_replay() {
     // The padded batch-bucket path must not change single-request results.
     use nimble::coordinator::InferEngine;
-    let mut direct = TapeEngine::new("mini_inception", &[1, 8]).unwrap();
+    let mut direct = direct_engine(&[1, 8]);
     let len = direct.example_len();
     let input = inputs(1, len, 9).pop().unwrap();
     let expect = direct.infer_batch(1, &input).unwrap();
 
     let server = tape_server();
-    let got = server.infer(input).unwrap();
+    let got = server.infer(InferRequest::new(input)).unwrap();
     assert_eq!(got, expect, "server (bucket 1) vs direct engine");
     let _ = server.shutdown().unwrap();
 }
@@ -114,21 +173,23 @@ fn padded_batch_values_match_direct_bucket_replay() {
     // server's un-padding against a direct replay of the same padded
     // batch — catches any off-by-one in row placement or slicing.
     use nimble::coordinator::InferEngine;
-    let server = NimbleServer::start_with(
-        || TapeEngine::new("mini_inception", &[1, 8]),
-        Duration::from_millis(500), // long deadline: flush only on a full bucket
-    )
-    .expect("server");
+    let server = Runtime::builder()
+        .model("mini_inception")
+        .buckets(&[1, 8])
+        .single_thread()
+        .max_wait(Duration::from_millis(500)) // flush only on a full bucket
+        .build()
+        .expect("server");
     let len = server.example_len();
     let out_len = server.output_len();
     let ins = inputs(8, len, 1234);
-    let pending: Vec<_> = ins.iter().map(|i| server.infer_async(i.clone()).unwrap()).collect();
-    let got: Vec<Vec<f32>> =
-        pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+    let pending: Vec<_> =
+        ins.iter().map(|i| server.submit(InferRequest::new(i.clone())).unwrap()).collect();
+    let got: Vec<Vec<f32>> = pending.into_iter().map(|t| t.wait().unwrap()).collect();
     let report = server.shutdown().unwrap();
     assert_eq!(report.n_batches, 1, "test premise: one full bucket-8 batch");
 
-    let mut direct = TapeEngine::new("mini_inception", &[1, 8]).unwrap();
+    let mut direct = direct_engine(&[1, 8]);
     let padded: Vec<f32> = ins.concat();
     let expect = direct.infer_batch(8, &padded).unwrap();
     for (i, row) in got.iter().enumerate() {
@@ -153,9 +214,9 @@ fn concurrent_clients_all_get_served() {
     let handles: Vec<_> = inputs(24, len, 77)
         .into_iter()
         .map(|input| {
-            let client = server.client();
+            let handle = server.handle();
             std::thread::spawn(move || {
-                let got = client.infer(input).unwrap();
+                let got = handle.infer(InferRequest::new(input)).unwrap();
                 assert_eq!(got.len(), out_len);
                 assert!(got.iter().all(|v| v.is_finite()));
             })
@@ -175,41 +236,46 @@ fn concurrent_clients_all_get_served() {
 #[test]
 fn shutdown_flushes_in_flight_requests_single_engine() {
     // Long deadline: nothing would flush before shutdown arrives.
-    let server = NimbleServer::start_with(
-        || TapeEngine::new("mini_inception", &[1, 8]),
-        Duration::from_millis(500),
-    )
-    .expect("server");
+    let server = Runtime::builder()
+        .model("mini_inception")
+        .buckets(&[1, 8])
+        .single_thread()
+        .max_wait(Duration::from_millis(500))
+        .build()
+        .expect("server");
     let len = server.example_len();
-    let pending: Vec<_> =
-        inputs(10, len, 5).into_iter().map(|i| server.infer_async(i).unwrap()).collect();
+    let pending: Vec<_> = inputs(10, len, 5)
+        .into_iter()
+        .map(|i| server.submit(InferRequest::new(i)).unwrap())
+        .collect();
     let report = server.shutdown().unwrap();
     assert_eq!(report.n_requests, 10, "all in-flight requests served at shutdown");
-    for rx in pending {
-        assert!(rx.recv().unwrap().is_ok(), "flushed request must succeed, not drop");
+    for ticket in pending {
+        assert!(ticket.wait().is_ok(), "flushed request must succeed, not drop");
     }
 }
 
 #[test]
 fn shutdown_flushes_in_flight_requests_lane_server() {
-    use nimble::serving::{LaneConfig, LaneServer};
-    let server = LaneServer::start(
-        &[1, 8],
-        |bucket| TapeEngine::new("mini_inception", &[bucket]),
-        LaneConfig { max_wait: Duration::from_millis(500), ..Default::default() },
-    )
-    .expect("lane server");
+    let server = Runtime::builder()
+        .model("mini_inception")
+        .buckets(&[1, 8])
+        .max_wait(Duration::from_millis(500))
+        .build()
+        .expect("lane server");
     let len = server.example_len();
-    let client = server.client();
-    let pending: Vec<_> =
-        inputs(10, len, 6).into_iter().map(|i| server.infer_async(i).unwrap()).collect();
+    let handle = server.handle();
+    let pending: Vec<_> = inputs(10, len, 6)
+        .into_iter()
+        .map(|i| server.submit(InferRequest::new(i)).unwrap())
+        .collect();
     let report = server.shutdown().unwrap();
     assert_eq!(report.n_requests, 10, "all in-flight requests served at shutdown");
-    for rx in pending {
-        assert!(rx.recv().unwrap().is_ok(), "flushed request must succeed, not drop");
+    for ticket in pending {
+        assert!(ticket.wait().is_ok(), "flushed request must succeed, not drop");
     }
     // Requests after shutdown fail fast with an explicit error.
-    let err = client.infer(vec![0.0; len]);
+    let err = handle.infer(InferRequest::new(vec![0.0; len]));
     assert!(err.is_err(), "post-shutdown request must be rejected");
 }
 
@@ -219,7 +285,7 @@ fn shutdown_flushes_in_flight_requests_lane_server() {
 #[test]
 fn slow_lane_does_not_starve_other_lanes_and_shutdown_joins() {
     use nimble::coordinator::InferEngine;
-    use nimble::serving::{LaneConfig, LaneServer};
+    use nimble::serving::TapeEngine;
     use std::time::Instant;
 
     /// Wraps a [`TapeEngine`] and sleeps on one bucket, simulating a
@@ -258,7 +324,7 @@ fn slow_lane_does_not_starve_other_lanes_and_shutdown_joins() {
     // bounds what a healthy fast lane needs, so the watchdog scales with
     // debug-mode and loaded-CI slowness instead of flaking.
     let t_fast = {
-        let mut probe = TapeEngine::new("mini_inception", &[8]).unwrap();
+        let mut probe = direct_engine(&[8]);
         let z = vec![0.0f32; 8 * probe.example_len()];
         probe.infer_batch(8, &z).unwrap(); // warm-up
         let t0 = Instant::now();
@@ -273,36 +339,45 @@ fn slow_lane_does_not_starve_other_lanes_and_shutdown_joins() {
     // N_SLOW × delay) overshoots it 3× and fails loudly.
     let delay = watchdog;
 
-    let server = LaneServer::start(
-        &[1, 8],
-        move |bucket| {
+    let server = Runtime::builder()
+        .buckets(&[1, 8])
+        .max_wait(Duration::from_millis(1))
+        .build_with_factory(move |bucket| {
             Ok(SlowLane {
-                inner: TapeEngine::new("mini_inception", &[bucket])?,
+                inner: Runtime::builder()
+                    .model("mini_inception")
+                    .buckets(&[bucket])
+                    .build_engine()?,
                 slow_bucket: 1,
                 delay,
             })
-        },
-        LaneConfig { max_wait: Duration::from_millis(1), ..Default::default() },
-    )
-    .expect("lane server");
+        })
+        .expect("lane server");
     let len = server.example_len();
     let out_len = server.output_len();
 
     // Jam the slow lane first (its queue keeps it busy for 3 × delay)...
     let slow: Vec<_> = (0..N_SLOW)
-        .map(|i| server.submit_batch(1, inputs(1, len, 100 + i as u64).concat()).unwrap())
+        .map(|i| {
+            server
+                .submit(InferRequest::batch(1, inputs(1, len, 100 + i as u64).concat()))
+                .unwrap()
+        })
         .collect();
     // ...then drive the fast lane and demand it drains under the watchdog.
     let t0 = Instant::now();
     let fast: Vec<_> = (0..N_FAST)
-        .map(|i| server.submit_batch(8, inputs(8, len, 200 + i as u64).concat()).unwrap())
+        .map(|i| {
+            server
+                .submit(InferRequest::batch(8, inputs(8, len, 200 + i as u64).concat()))
+                .unwrap()
+        })
         .collect();
-    for (i, rx) in fast.into_iter().enumerate() {
+    for (i, ticket) in fast.into_iter().enumerate() {
         let remaining = watchdog.saturating_sub(t0.elapsed());
-        let out = rx
-            .recv_timeout(remaining)
-            .unwrap_or_else(|_| panic!("fast batch {i} starved behind the slow lane"))
-            .expect("fast batch failed");
+        let out = ticket
+            .wait_timeout(remaining)
+            .unwrap_or_else(|_| panic!("fast batch {i} starved behind the slow lane"));
         assert_eq!(out.len(), 8 * out_len);
     }
     assert!(
@@ -313,14 +388,14 @@ fn slow_lane_does_not_starve_other_lanes_and_shutdown_joins() {
     );
 
     // The slow jobs still complete, and shutdown joins every lane.
-    for rx in slow {
-        assert!(rx.recv().unwrap().is_ok());
+    for ticket in slow {
+        assert!(ticket.wait().is_ok());
     }
     let report = server.shutdown().expect("shutdown joins all lanes");
     assert_eq!(report.lane(1).unwrap().n_batches, N_SLOW);
     assert_eq!(report.lane(8).unwrap().n_batches, N_FAST);
     // Sanity: the fast-lane outputs came from the real engine.
-    let mut direct = TapeEngine::new("mini_inception", &[8]).unwrap();
+    let mut direct = direct_engine(&[8]);
     let batch = inputs(8, len, 200).concat();
     assert_eq!(direct.infer_batch(8, &batch).unwrap().len(), 8 * out_len);
 }
@@ -330,20 +405,21 @@ fn slow_lane_does_not_starve_other_lanes_and_shutdown_joins() {
 mod xla {
     use super::inputs;
     use nimble::coordinator::{EngineConfig, ExecMode};
-    use nimble::serving::{NimbleServer, ServerConfig};
+    use nimble::serving::{InferRequest, Runtime};
     use std::time::Duration;
 
-    fn server(mode: ExecMode) -> Option<NimbleServer> {
+    fn server(mode: ExecMode) -> Option<Runtime> {
         if !nimble::runtime::artifacts_available() {
             eprintln!("SKIP: artifacts not built");
             return None;
         }
         Some(
-            NimbleServer::start(ServerConfig {
-                engine: EngineConfig { mode, ..Default::default() },
-                max_wait: Duration::from_millis(2),
-            })
-            .expect("server start"),
+            Runtime::builder()
+                .artifacts(EngineConfig { mode, ..Default::default() })
+                .single_thread()
+                .max_wait(Duration::from_millis(2))
+                .build()
+                .expect("server start"),
         )
     }
 
@@ -353,10 +429,10 @@ mod xla {
         let len = server.example_len();
         let mut pending = Vec::new();
         for input in inputs(20, len, 1) {
-            pending.push(server.infer_async(input).unwrap());
+            pending.push(server.submit(InferRequest::new(input)).unwrap());
         }
-        for rx in pending {
-            let logits = rx.recv().unwrap().unwrap();
+        for ticket in pending {
+            let logits = ticket.wait().unwrap();
             assert_eq!(logits.len(), server.output_len());
         }
         let report = server.shutdown().unwrap();
@@ -371,11 +447,11 @@ mod xla {
         let len = replay.example_len();
         let ins = inputs(4, len, 7);
         let out_replay: Vec<Vec<f32>> =
-            ins.iter().map(|i| replay.infer(i.clone()).unwrap()).collect();
+            ins.iter().map(|i| replay.infer(InferRequest::new(i.clone())).unwrap()).collect();
         let _ = replay.shutdown().unwrap();
         let Some(eager) = server(ExecMode::Eager) else { return };
         for (input, expected) in ins.into_iter().zip(out_replay) {
-            let got = eager.infer(input).unwrap();
+            let got = eager.infer(InferRequest::new(input)).unwrap();
             for (a, b) in got.iter().zip(&expected) {
                 assert!((a - b).abs() < 1e-4, "{a} vs {b}");
             }

@@ -1,14 +1,20 @@
-//! Randomized differential harness for the lane scheduler.
+//! Randomized differential harness for the lane scheduler, driven
+//! through the [`Runtime`] façade.
 //!
 //! Every case draws a random operator graph (seeded generator, up to 64
 //! nodes), a random bucket set (1–8 compiled batch sizes), and random
 //! traffic in a shuffled arrival order, then pushes it through the
-//! lane-pipelined server and demands **bit-identical** outputs to the
+//! lane-pipelined runtime and demands **bit-identical** outputs to the
 //! serial single-thread `TapeEngine` replay of the same padded batches.
 //! Batch composition is pinned by submitting pre-formed batches
-//! (`submit_batch`), so the only thing that varies between the two runs
-//! is the execution schedule — exactly the thing the lane scheduler must
-//! not let leak into results.
+//! (`InferRequest::batch`), so the only thing that varies between the
+//! two runs is the execution schedule — exactly the thing the lane
+//! scheduler must not let leak into results.
+//!
+//! The deadline property additionally pins the shed accounting: with
+//! `deadline = ∞` outputs stay bit-identical to the oracle; with
+//! already-expired deadlines every shed is observed exactly once
+//! (`completed + deadline_shed == submitted`, no ticket unresolved).
 //!
 //! The base seed is fixed (overridable via `NIMBLE_PROP_SEED` — CI pins
 //! it), and every failure message carries the case seed that reproduces
@@ -16,10 +22,10 @@
 
 use nimble::coordinator::InferEngine;
 use nimble::models::rand_cell::{random_cell, RANDOM_CELL_EXAMPLE_LEN};
-use nimble::serving::{LaneConfig, LaneServer, TapeEngine};
+use nimble::serving::{InferOutcome, InferRequest, LaneConfig, Runtime, TapeEngine};
 use nimble::util::prop::{check_from, ensure};
 use nimble::util::Pcg32;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn base_seed() -> u64 {
     std::env::var("NIMBLE_PROP_SEED")
@@ -48,6 +54,22 @@ fn random_input(rng: &mut Pcg32, len: usize) -> Vec<f32> {
     (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect()
 }
 
+/// Single-thread serial oracle over all buckets of a random cell.
+fn oracle_engine(
+    graph_seed: u64,
+    n_nodes: usize,
+    buckets: &[usize],
+) -> Result<TapeEngine, String> {
+    Runtime::builder()
+        .label("rand-cell")
+        .graph_fn(move |b| random_cell(&mut Pcg32::new(graph_seed), n_nodes, b))
+        .buckets(buckets)
+        .worker_cap(1)
+        .serial_oracle()
+        .build_engine()
+        .map_err(|e| format!("oracle build failed: {e:#}"))
+}
+
 /// ≥100 random cases: lane-pipelined outputs are bit-identical to the
 /// serial oracle across random graphs, bucket sets, and arrival orders.
 #[test]
@@ -59,16 +81,16 @@ fn lane_pipeline_is_bit_identical_to_serial_replay() {
         let build = move |b: usize| random_cell(&mut Pcg32::new(graph_seed), n_nodes, b);
 
         // Serial oracle: one engine, all buckets, single-thread replay.
-        let mut oracle = TapeEngine::from_graph_fn("rand-cell", &buckets, Some(1), build)
-            .map_err(|e| format!("oracle build failed: {e:#}"))?
-            .serial();
-        // Lane server: one single-bucket engine per lane, worker-capped.
-        let server = LaneServer::start(
-            &buckets,
-            move |bucket| TapeEngine::from_graph_fn("rand-cell", &[bucket], Some(2), build),
-            roomy_config(Duration::from_millis(1)),
-        )
-        .map_err(|e| format!("lane server start failed: {e:#}"))?;
+        let mut oracle = oracle_engine(graph_seed, n_nodes, &buckets)?;
+        // Lane runtime: one single-bucket engine per lane, worker-capped.
+        let server = Runtime::builder()
+            .label("rand-cell")
+            .graph_fn(build)
+            .buckets(&buckets)
+            .worker_cap(2)
+            .lane_config(roomy_config(Duration::from_millis(1)))
+            .build()
+            .map_err(|e| format!("lane server start failed: {e:#}"))?;
         ensure(server.example_len() == RANDOM_CELL_EXAMPLE_LEN, || {
             format!("example_len {} != {}", server.example_len(), RANDOM_CELL_EXAMPLE_LEN)
         })?;
@@ -87,15 +109,12 @@ fn lane_pipeline_is_bit_identical_to_serial_replay() {
 
         let pending: Vec<_> = jobs
             .iter()
-            .map(|(bucket, input)| server.submit_batch(*bucket, input.clone()))
+            .map(|(bucket, input)| server.submit(InferRequest::batch(*bucket, input.clone())))
             .collect::<Result<_, _>>()
             .map_err(|e| format!("submit failed: {e:#}"))?;
         let outputs: Vec<Vec<f32>> = pending
             .into_iter()
-            .map(|rx| match rx.recv() {
-                Ok(result) => result,
-                Err(_) => Err("reply dropped".to_string()),
-            })
+            .map(|ticket| ticket.wait().map_err(|e| format!("{e:#}")))
             .collect::<Result<_, _>>()?;
 
         for (i, ((bucket, input), got)) in jobs.iter().zip(&outputs).enumerate() {
@@ -210,11 +229,11 @@ fn arena_replay_is_bit_identical_to_per_slot_replay() {
 
 /// ≥100 random cases (dynamic-lane-scaling tentpole): bursty per-bucket
 /// traffic with random scale-up/scale-down churn through an ELASTIC
-/// lane server — every lane leasing replay workers from ONE shared
+/// lane runtime — every lane leasing replay workers from ONE shared
 /// work-stealing pool and drawing its arena from ONE shared
 /// [`ArenaPool`] — produces outputs bit-identical to the serial oracle.
 /// The companion `lane_pipeline_is_bit_identical_to_serial_replay`
-/// property pins the static-lane server to the same oracle, so this is
+/// property pins the static-lane runtime to the same oracle, so this is
 /// exactly the elastic-vs-static bit-identity the scaling work must
 /// preserve. Retired lanes must hand their arenas back: the pool
 /// balances to zero leased bytes after shutdown, and acquires equal
@@ -232,9 +251,7 @@ fn elastic_scaling_is_bit_identical_and_returns_arenas_to_the_pool() {
         buckets.truncate(3); // elastic churn matters more than bucket count
         let build = move |b: usize| random_cell(&mut Pcg32::new(graph_seed), n_nodes, b);
 
-        let mut oracle = TapeEngine::from_graph_fn("rand-cell", &buckets, Some(1), build)
-            .map_err(|e| format!("oracle build failed: {e:#}"))?
-            .serial();
+        let mut oracle = oracle_engine(graph_seed, n_nodes, &buckets)?;
         let arena_pool = ArenaPool::new();
         let workers = SharedWorkerPool::new(rng.gen_range_inclusive(1, 3));
         let idle_retire = Duration::from_micros(rng.gen_range_inclusive(200, 2000) as u64);
@@ -243,20 +260,18 @@ fn elastic_scaling_is_bit_identical_and_returns_arenas_to_the_pool() {
             idle_retire,
             scale_up_backlog: rng.gen_range_inclusive(1, 3),
         };
-        let server = LaneServer::start_elastic_tape(
-            &buckets,
-            workers.clone(),
-            arena_pool.clone(),
-            LaneConfig {
-                max_wait: Duration::from_micros(200),
-                lane_cap: rng.gen_range_inclusive(4, 8),
-                buffers_per_lane: 10,
-                scale,
-                ..Default::default()
-            },
-            build,
-        )
-        .map_err(|e| format!("elastic server start failed: {e:#}"))?;
+        let server = Runtime::builder()
+            .label("rand-cell")
+            .graph_fn(build)
+            .buckets(&buckets)
+            .max_wait(Duration::from_micros(200))
+            .lane_cap(rng.gen_range_inclusive(4, 8))
+            .buffers_per_lane(10)
+            .elastic(scale)
+            .shared_pool_handle(workers.clone())
+            .arena_pool(arena_pool.clone())
+            .build()
+            .map_err(|e| format!("elastic server start failed: {e:#}"))?;
 
         // Bursty traffic: waves of pre-formed batches concentrated on a
         // hot bucket, with occasional quiet gaps long enough for the
@@ -279,14 +294,15 @@ fn elastic_scaling_is_bit_identical_and_returns_arenas_to_the_pool() {
             total_batches += jobs.len();
             let pending: Vec<_> = jobs
                 .iter()
-                .map(|(bucket, input)| server.submit_batch(*bucket, input.clone()))
+                .map(|(bucket, input)| {
+                    server.submit(InferRequest::batch(*bucket, input.clone()))
+                })
                 .collect::<Result<_, _>>()
                 .map_err(|e| format!("submit failed: {e:#}"))?;
-            for (i, ((bucket, input), rx)) in jobs.iter().zip(pending).enumerate() {
-                let got = rx
-                    .recv()
-                    .map_err(|_| "reply dropped".to_string())?
-                    .map_err(|e| format!("wave {wave} job {i} failed: {e}"))?;
+            for (i, ((bucket, input), ticket)) in jobs.iter().zip(pending).enumerate() {
+                let got = ticket
+                    .wait()
+                    .map_err(|e| format!("wave {wave} job {i} failed: {e:#}"))?;
                 let want = oracle
                     .infer_batch(*bucket, input)
                     .map_err(|e| format!("oracle replay failed: {e:#}"))?;
@@ -334,6 +350,198 @@ fn elastic_scaling_is_bit_identical_and_returns_arenas_to_the_pool() {
     });
 }
 
+/// ≥100 random cases (deadline satellite): through the ELASTIC runtime,
+/// requests with `deadline = ∞` stay bit-identical to the serial
+/// oracle, requests whose deadline already expired at submit are shed
+/// exactly, every ticket resolves (`completed + deadline_shed ==
+/// submitted`), and the report's shed accounting matches what the
+/// clients observed.
+#[test]
+fn deadline_shed_accounting_closes_and_infinite_deadlines_stay_bit_identical() {
+    use nimble::serving::ScaleOptions;
+
+    check_from("deadline-shed", base_seed() ^ 0x00DE_AD11, 100, |rng| {
+        let n_nodes = rng.gen_range_inclusive(8, 48);
+        let graph_seed = rng.next_u64();
+        let mut buckets = random_buckets(rng);
+        buckets.truncate(2);
+        let build = move |b: usize| random_cell(&mut Pcg32::new(graph_seed), n_nodes, b);
+
+        let mut oracle = oracle_engine(graph_seed, n_nodes, &buckets)?;
+        let scale = ScaleOptions {
+            max_lanes_per_bucket: rng.gen_range_inclusive(1, 2),
+            idle_retire: Duration::from_millis(2),
+            scale_up_backlog: 2,
+        };
+        let server = Runtime::builder()
+            .label("rand-cell")
+            .graph_fn(build)
+            .buckets(&buckets)
+            .max_wait(Duration::from_micros(200))
+            .lane_cap(12)
+            .buffers_per_lane(14)
+            .elastic(scale)
+            .shared_pool(2)
+            .build()
+            .map_err(|e| format!("server start failed: {e:#}"))?;
+
+        // Mixed traffic: every job is a pre-formed batch; a random
+        // subset carries a deadline that already expired at submit
+        // (certain shed), the rest split between NO deadline (∞, the
+        // default) and a one-minute budget (never shed) — so the
+        // completing path is exercised both with and without deadline
+        // plumbing.
+        let n_jobs = rng.gen_range_inclusive(4, 10);
+        let jobs: Vec<(usize, Vec<f32>, bool)> = (0..n_jobs)
+            .map(|_| {
+                let bucket = *rng.choose(&buckets);
+                let input = random_input(rng, bucket * RANDOM_CELL_EXAMPLE_LEN);
+                let expired = rng.gen_range_inclusive(0, 2) == 0;
+                (bucket, input, expired)
+            })
+            .collect();
+        let n_expired = jobs.iter().filter(|(_, _, e)| *e).count();
+
+        let pending: Vec<_> = jobs
+            .iter()
+            .map(|(bucket, input, expired)| {
+                let req = InferRequest::batch(*bucket, input.clone());
+                let req = if *expired {
+                    req.deadline(Instant::now())
+                } else if bucket % 2 == 0 {
+                    req.deadline_in(Duration::from_secs(60))
+                } else {
+                    req // deadline = ∞ (none)
+                };
+                server.submit(req)
+            })
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("submit failed: {e:#}"))?;
+
+        let (mut completed, mut shed) = (0usize, 0usize);
+        for (i, ((bucket, input, expired), ticket)) in jobs.iter().zip(pending).enumerate() {
+            // No ticket may be dropped unresolved.
+            let outcome = ticket
+                .outcome()
+                .map_err(|e| format!("job {i}: ticket unresolved: {e:#}"))?;
+            match outcome {
+                InferOutcome::Output(got) => {
+                    completed += 1;
+                    ensure(!*expired, || {
+                        format!("job {i}: expired-at-submit request was served")
+                    })?;
+                    let want = oracle
+                        .infer_batch(*bucket, input)
+                        .map_err(|e| format!("oracle replay failed: {e:#}"))?;
+                    ensure(got.len() == want.len(), || {
+                        format!("job {i}: output length {} != {}", got.len(), want.len())
+                    })?;
+                    for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+                        ensure(a.to_bits() == b.to_bits(), || {
+                            format!(
+                                "job {i} (bucket {bucket}) diverged at {j}: {a:?} vs {b:?} \
+                                 (graph seed {graph_seed:#x})"
+                            )
+                        })?;
+                    }
+                }
+                InferOutcome::DeadlineShed => {
+                    shed += 1;
+                    ensure(*expired, || {
+                        format!("job {i}: a one-minute deadline was shed")
+                    })?;
+                }
+                InferOutcome::Failed(e) => {
+                    return Err(format!("job {i} failed: {e}"));
+                }
+            }
+        }
+        ensure(completed + shed == n_jobs, || {
+            format!("{completed} completed + {shed} shed != {n_jobs} submitted")
+        })?;
+        ensure(shed == n_expired, || {
+            format!("{shed} shed but {n_expired} expired at submit")
+        })?;
+
+        let report = server.shutdown().map_err(|e| format!("shutdown failed: {e:#}"))?;
+        ensure(report.deadline_shed == shed, || {
+            format!(
+                "report counts {} sheds, clients observed {shed} (graph seed {graph_seed:#x})",
+                report.deadline_shed
+            )
+        })?;
+        ensure(report.n_requests == completed, || {
+            format!("report counts {} completions, clients saw {completed}", report.n_requests)
+        })?;
+        ensure(report.n_requests + report.deadline_shed == n_jobs, || {
+            "report-side accounting must close".to_string()
+        })?;
+        Ok(())
+    });
+}
+
+/// ≥20 random cases (builder-equivalence satellite): `Runtime::builder()`
+/// with default knobs is bit-identical to the legacy
+/// `TapeEngine` + `NimbleServer::start_with` constructor path on the
+/// same sequential traffic (single blocking requests pin the batch
+/// composition on both sides).
+#[test]
+fn builder_default_runtime_matches_the_legacy_single_engine_path() {
+    check_from("builder-vs-legacy", base_seed() ^ 0x00B1_14DE, 20, |rng| {
+        let n_nodes = rng.gen_range_inclusive(8, 40);
+        let graph_seed = rng.next_u64();
+        let buckets = random_buckets(rng);
+        let build = move |b: usize| random_cell(&mut Pcg32::new(graph_seed), n_nodes, b);
+
+        // The legacy constructor matrix, exactly as PR-2 clients wrote it.
+        #[allow(deprecated)]
+        let legacy = nimble::serving::NimbleServer::start_with(
+            move || TapeEngine::from_graph_fn("rand-cell", &buckets, None, build),
+            Duration::from_micros(200),
+        )
+        .map_err(|e| format!("legacy server start failed: {e:#}"))?;
+        // The façade with default knobs (lane topology, same buckets).
+        let modern = Runtime::builder()
+            .label("rand-cell")
+            .graph_fn(build)
+            .buckets(legacy.batch_sizes())
+            .max_wait(Duration::from_micros(200))
+            .build()
+            .map_err(|e| format!("builder runtime start failed: {e:#}"))?;
+        ensure(modern.batch_sizes() == legacy.batch_sizes(), || {
+            "bucket sets must agree".to_string()
+        })?;
+
+        for i in 0..4 {
+            let input = random_input(rng, RANDOM_CELL_EXAMPLE_LEN);
+            // One blocking request at a time pins the batch composition
+            // to a single-example batch on the smallest bucket in BOTH
+            // servers.
+            #[allow(deprecated)]
+            let want = legacy
+                .infer(input.clone())
+                .map_err(|e| format!("legacy infer failed: {e:#}"))?;
+            let got = modern
+                .infer(InferRequest::new(input))
+                .map_err(|e| format!("builder infer failed: {e:#}"))?;
+            ensure(got.len() == want.len(), || {
+                format!("request {i}: output length {} != {}", got.len(), want.len())
+            })?;
+            for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+                ensure(a.to_bits() == b.to_bits(), || {
+                    format!(
+                        "request {i} diverged at element {j}: {a:?} vs {b:?} \
+                         (graph seed {graph_seed:#x})"
+                    )
+                })?;
+            }
+        }
+        let _ = modern.shutdown().map_err(|e| format!("shutdown failed: {e:#}"))?;
+        let _ = legacy.shutdown().map_err(|e| format!("shutdown failed: {e:#}"))?;
+        Ok(())
+    });
+}
+
 /// The batcher path agrees with the oracle when composition is pinned to
 /// single-request batches (strictly sequential blocking clients).
 #[test]
@@ -345,21 +553,23 @@ fn sequential_requests_through_the_batcher_match_the_oracle() {
         let build = move |b: usize| random_cell(&mut Pcg32::new(graph_seed), n_nodes, b);
         let smallest = buckets[0];
 
-        let mut oracle = TapeEngine::from_graph_fn("rand-cell", &buckets, Some(1), build)
-            .map_err(|e| format!("oracle build failed: {e:#}"))?
-            .serial();
-        let server = LaneServer::start(
-            &buckets,
-            move |bucket| TapeEngine::from_graph_fn("rand-cell", &[bucket], Some(2), build),
-            roomy_config(Duration::from_micros(200)),
-        )
-        .map_err(|e| format!("lane server start failed: {e:#}"))?;
+        let mut oracle = oracle_engine(graph_seed, n_nodes, &buckets)?;
+        let server = Runtime::builder()
+            .label("rand-cell")
+            .graph_fn(build)
+            .buckets(&buckets)
+            .worker_cap(2)
+            .lane_config(roomy_config(Duration::from_micros(200)))
+            .build()
+            .map_err(|e| format!("lane server start failed: {e:#}"))?;
 
         for i in 0..4 {
             let input = random_input(rng, RANDOM_CELL_EXAMPLE_LEN);
             // One blocking request at a time ⇒ the batcher forms a
             // single-example batch padded to the smallest bucket.
-            let got = server.infer(input.clone()).map_err(|e| format!("infer: {e:#}"))?;
+            let got = server
+                .infer(InferRequest::new(input.clone()))
+                .map_err(|e| format!("infer: {e:#}"))?;
             let mut padded = input;
             padded.resize(smallest * RANDOM_CELL_EXAMPLE_LEN, 0.0);
             let want = oracle
@@ -388,22 +598,23 @@ fn mixed_arrivals_all_served_and_lane_stats_consistent() {
         let graph_seed = rng.next_u64();
         let buckets = random_buckets(rng);
         let build = move |b: usize| random_cell(&mut Pcg32::new(graph_seed), n_nodes, b);
-        let server = LaneServer::start(
-            &buckets,
-            move |bucket| TapeEngine::from_graph_fn("rand-cell", &[bucket], Some(2), build),
-            roomy_config(Duration::from_micros(500)),
-        )
-        .map_err(|e| format!("lane server start failed: {e:#}"))?;
+        let server = Runtime::builder()
+            .label("rand-cell")
+            .graph_fn(build)
+            .buckets(&buckets)
+            .worker_cap(2)
+            .lane_config(roomy_config(Duration::from_micros(500)))
+            .build()
+            .map_err(|e| format!("lane server start failed: {e:#}"))?;
         let n_requests = rng.gen_range_inclusive(5, 24);
         let pending: Vec<_> = (0..n_requests)
-            .map(|_| server.infer_async(random_input(rng, RANDOM_CELL_EXAMPLE_LEN)))
+            .map(|_| {
+                server.submit(InferRequest::new(random_input(rng, RANDOM_CELL_EXAMPLE_LEN)))
+            })
             .collect::<Result<_, _>>()
             .map_err(|e| format!("submit failed: {e:#}"))?;
-        for rx in pending {
-            let out = rx
-                .recv()
-                .map_err(|_| "reply dropped".to_string())?
-                .map_err(|e| format!("request failed: {e}"))?;
+        for ticket in pending {
+            let out = ticket.wait().map_err(|e| format!("request failed: {e:#}"))?;
             ensure(out.iter().all(|v| v.is_finite()), || "non-finite output".to_string())?;
         }
         let report = server.shutdown().map_err(|e| format!("shutdown failed: {e:#}"))?;
