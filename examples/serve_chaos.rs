@@ -1,0 +1,105 @@
+//! Chaos-hardened serving on the virtual substrate — no artifacts, no
+//! `xla` feature needed:
+//!
+//!     cargo run --release --example serve_chaos
+//!
+//! Builds a serving runtime with a seeded [`FaultPlan`] injecting
+//! engine errors/panics, replay worker deaths, and poisoning join
+//! timeouts into every lane, then drives a burst of requests through
+//! it. Lane supervision retries transient failures under the
+//! [`RetryPolicy`] and replaces poisoned lanes; every ticket still
+//! resolves exactly once, survivors carry correct outputs, and a
+//! graceful [`Runtime::drain`] flushes the rest and closes the books
+//! (`admitted == completed + shed + failed`).
+
+use anyhow::Result;
+use nimble::serving::{FaultPlan, Health, InferOutcome, InferRequest, RetryPolicy, Runtime};
+use nimble::util::Pcg32;
+use std::time::Duration;
+
+fn main() -> Result<()> {
+    // A seeded plan makes every "random" fault reproducible: same seed,
+    // same faults, same schedule — chaos you can put in a regression
+    // test. The probabilities are per engine call / per replay.
+    let plan = FaultPlan {
+        engine_error: 0.15,    // infer_batch returns Err
+        engine_panic: 0.05,    // infer_batch panics (caught by the lane)
+        worker_death: 0.05,    // a replay worker dies mid-replay (transient)
+        join_timeout: 0.02,    // a replay times out and POISONS the lane
+        ..FaultPlan::seeded(0xC4A0_5EED)
+    };
+    let rt = Runtime::builder()
+        .model("mini_inception")
+        .buckets(&[1, 4])
+        .max_wait(Duration::from_millis(1))
+        .fault_plan(plan)
+        .retry_policy(RetryPolicy { max_retries: 2, backoff: Duration::from_micros(200) })
+        .build()?;
+    println!("chaos runtime up: buckets {:?}, health {:?}", rt.batch_sizes(), rt.health());
+
+    // A burst of pre-formed batches into the storm. No deadline: each
+    // ticket resolves as Output (possibly after in-lane retries or a
+    // lane replacement) or Failed (retry budget exhausted) — never
+    // hangs, never disappears.
+    let mut rng = Pcg32::new(7);
+    let len = rt.example_len();
+    let mut mk = |n: usize| -> Vec<f32> {
+        (0..n * len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect()
+    };
+    let n_jobs = 24;
+    let tickets: Vec<_> = (0..n_jobs)
+        .map(|i| rt.submit(InferRequest::batch(if i % 3 == 0 { 4 } else { 1 }, mk(if i % 3 == 0 { 4 } else { 1 }))))
+        .collect::<Result<_>>()?;
+
+    let (mut served, mut failed) = (0usize, 0usize);
+    for t in tickets {
+        match t.outcome()? {
+            InferOutcome::Output(out) => {
+                assert!(out.iter().all(|v| v.is_finite()));
+                served += 1;
+            }
+            InferOutcome::Failed(e) => {
+                // Every failure is traceable to an injection or the
+                // lane it took down.
+                assert!(
+                    e.contains("injected") || e.contains("lane") || e.contains("poisoned"),
+                    "unexpected failure: {e}"
+                );
+                failed += 1;
+            }
+            InferOutcome::DeadlineShed => unreachable!("no deadlines in this burst"),
+        }
+    }
+    println!("burst resolved: {served} served, {failed} failed (of {n_jobs})");
+    assert_eq!(served + failed, n_jobs, "every ticket resolves exactly once");
+
+    // Health probe: still Healthy (or Degraded if a bucket lost its
+    // lanes for good — not with these rates), then Draining once the
+    // graceful drain begins.
+    let handle = rt.handle();
+    match rt.health() {
+        Health::Healthy => println!("health: Healthy"),
+        h => println!("health: {h:?}"),
+    }
+
+    // Graceful drain: reject new work, flush everything admitted, join
+    // every lane, and return the final report with the chaos ledger.
+    let report = rt.drain()?;
+    assert_eq!(handle.health(), Health::Draining);
+    assert!(handle.submit(InferRequest::new(vec![0.0; len])).is_err(), "drained = closed");
+    println!("\n{}", report.render());
+    assert_eq!(report.n_requests, served);
+    assert_eq!(report.failed, failed);
+    assert_eq!(
+        report.n_requests + report.deadline_shed + report.failed,
+        n_jobs,
+        "accounting closes under chaos"
+    );
+    println!(
+        "\nserve_chaos OK: {} retries absorbed, {} lanes spawned, {} retired",
+        report.retries,
+        report.lanes_spawned(),
+        report.lanes_retired()
+    );
+    Ok(())
+}

@@ -472,6 +472,121 @@ fn deadline_sweep() -> String {
     )
 }
 
+/// Chaos cross-check: sequential pre-formed batches through ONE lane
+/// whose engine is wrapped in a seeded `ChaosEngine` (engine errors +
+/// panics, bounded in-lane retries, no deadlines), against the
+/// fault-aware DES (`simulate_faults`) rolling the *identical* derived
+/// fault schedule. Sequential blocking submission pins the engine-call
+/// order to the arrival order and there is no warm-up request, so the
+/// live `ChaosEngine` call counter and the simulated one advance in
+/// lockstep — completed/failed/retried must match **exactly**, not
+/// statistically.
+fn chaos_check() -> String {
+    use nimble::aot::tape::ReplayTape;
+    use nimble::matching::MatchingAlgo;
+    use nimble::serving::{FaultPlan, RetryPolicy};
+    use nimble::sim::{simulate_faults, FaultTraffic};
+    use nimble::stream::rewrite::rewrite;
+
+    section("chaos faults: measured vs DES (single-bucket chain, seeded fault schedule)");
+
+    const BUCKET: usize = 2;
+    const N_JOBS: usize = 48;
+    const SEED: u64 = 0xC4A0_5EED;
+    const MAX_RETRIES: u32 = 2;
+    let plan = FaultPlan {
+        engine_error: 0.15,
+        engine_panic: 0.05,
+        ..FaultPlan::seeded(SEED)
+    };
+
+    // --- Measured: one chaos lane, strictly sequential traffic. ---
+    let server = Runtime::builder()
+        .label("chain")
+        .graph_fn(|b| chain_graph(b, DEPTH))
+        .buckets(&[BUCKET])
+        .max_wait(Duration::from_millis(1))
+        .lane_cap(4)
+        .buffers_per_lane(4)
+        .fault_plan(plan.clone())
+        .retry_policy(RetryPolicy { max_retries: MAX_RETRIES, backoff: Duration::ZERO })
+        .build()
+        .expect("chaos bench server");
+    let example_len = server.example_len();
+    let mut rng = Pcg32::new(515);
+    let (mut measured_completed, mut measured_failed) = (0usize, 0usize);
+    for i in 0..N_JOBS {
+        let input: Vec<f32> =
+            (0..BUCKET * example_len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+        let outcome = server
+            .submit(InferRequest::batch(BUCKET, input))
+            .unwrap()
+            .outcome()
+            .unwrap();
+        match outcome {
+            InferOutcome::Output(_) => measured_completed += 1,
+            InferOutcome::Failed(e) => {
+                assert!(e.contains("injected"), "job {i}: non-injected failure: {e}");
+                measured_failed += 1;
+            }
+            InferOutcome::DeadlineShed => panic!("job {i} shed without a deadline"),
+        }
+    }
+    let report = server.shutdown().expect("chaos report");
+    let measured_retries = report.retries;
+    assert_eq!(report.n_requests, measured_completed, "report/client completion mismatch");
+    assert_eq!(report.failed, measured_failed, "report/client failure mismatch");
+
+    // --- DES: the identical derived fault schedule over the same tape. ---
+    let dev = GpuSpec::v100();
+    let g = chain_graph(BUCKET, DEPTH);
+    let costs: Vec<KernelCost> =
+        (0..g.n_nodes()).map(|v| kernel_cost(g.node(v), &dev)).collect();
+    let tape = ReplayTape::for_op_graph(&g, &rewrite(&g, MatchingAlgo::HopcroftKarp), 4096);
+    let batches: Vec<(f64, f64)> = (0..N_JOBS).map(|_| (0.0, f64::INFINITY)).collect();
+    let des = simulate_faults(
+        &[FaultTraffic {
+            tape: &tape,
+            costs: &costs,
+            batches: &batches,
+            // The builder hands each lane engine plan.derive(bucket).
+            plan: plan.derive(BUCKET as u64),
+            max_retries: MAX_RETRIES,
+            backoff_s: 0.0,
+        }],
+        HostProfile::nimble(),
+        dev,
+    );
+
+    let pass = measured_completed == des.completed()
+        && measured_failed == des.failed()
+        && measured_retries == des.retried();
+    println!(
+        "measured completed={measured_completed} failed={measured_failed} \
+         retries={measured_retries}  DES completed={} failed={} retried={}  [{}]",
+        des.completed(),
+        des.failed(),
+        des.retried(),
+        if pass { "PASS" } else { "FAIL" }
+    );
+    println!("{}", report.render());
+
+    format!(
+        "{{\n  \"workload\": \"chaos-chain\",\n  \"bucket\": {BUCKET},\n  \
+         \"n_batches\": {N_JOBS},\n  \"chain_depth\": {DEPTH},\n  \"seed\": {SEED},\n  \
+         \"engine_error\": 0.15,\n  \"engine_panic\": 0.05,\n  \
+         \"max_retries\": {MAX_RETRIES},\n  \
+         \"measured_completed\": {measured_completed},\n  \
+         \"measured_failed\": {measured_failed},\n  \
+         \"measured_retries\": {measured_retries},\n  \
+         \"des_completed\": {},\n  \"des_failed\": {},\n  \"des_retried\": {},\n  \
+         \"pass\": {pass}\n}}",
+        des.completed(),
+        des.failed(),
+        des.retried(),
+    )
+}
+
 fn sweep(label: &str, start: impl Fn() -> Runtime) {
     for rate in [5.0f64, 20.0] {
         let server = start();
@@ -508,7 +623,9 @@ fn main() {
     let lane_entry = lane_vs_serial();
     let scaling_entry = elastic_vs_static();
     let deadline_entry = deadline_sweep();
-    let json = format!("[\n{lane_entry},\n{scaling_entry},\n{deadline_entry}\n]\n");
+    let chaos_entry = chaos_check();
+    let json =
+        format!("[\n{lane_entry},\n{scaling_entry},\n{deadline_entry},\n{chaos_entry}\n]\n");
     match std::fs::write("BENCH_serving.json", &json) {
         Ok(()) => println!("\nwrote BENCH_serving.json"),
         Err(e) => println!("\ncould not write BENCH_serving.json: {e}"),

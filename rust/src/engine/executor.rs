@@ -70,6 +70,7 @@ use crate::aot::memory::{
     ArenaPool,
 };
 use crate::aot::tape::{ReplayTape, TapeArg, TapeOp, TapeRole};
+use crate::fault::{FaultInjector, FaultPlan, OpFault, ReplayFault};
 use std::any::Any;
 use std::cell::UnsafeCell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -699,6 +700,10 @@ struct ReplayInner {
     /// serving hot path should not pay). Also gates the live-bytes
     /// accounting below.
     trace: AtomicBool,
+    /// Seeded chaos injection: consulted per replay (entry faults) and
+    /// per op (errors/stalls) when a [`FaultPlan`] with replay-level
+    /// probabilities was configured ([`ExecOptions::fault`]).
+    fault: Option<FaultInjector>,
     /// Per-record completion stamps (1-based; 0 = not completed).
     stamps: Vec<AtomicU64>,
     stamp_clock: AtomicU64,
@@ -749,6 +754,15 @@ impl ReplayInner {
         sched_s: Option<&mut f64>,
     ) {
         if op.role == TapeRole::Task {
+            if let Some(inj) = &self.fault {
+                match inj.op_fault(op_idx as u64) {
+                    Some(OpFault::Delay) => std::thread::sleep(inj.delay()),
+                    Some(OpFault::Error) => {
+                        panic!("{}: op {op_idx} execution failed", crate::fault::INJECTED)
+                    }
+                    None => {}
+                }
+            }
             let t0 = sched_s.is_some().then(Instant::now);
             scratch.clear();
             if scratch.capacity() < self.tape.n_args(op) {
@@ -1010,6 +1024,11 @@ pub struct ExecOptions {
     /// thread cap. The elastic lane scheduler backs every lane's
     /// contexts with one such pool.
     pub shared_pool: Option<SharedWorkerPool>,
+    /// Seeded chaos injection ([`crate::fault`]): per-op errors and
+    /// stalls plus replay-entry faults (join timeout → poison, worker
+    /// death, arena exhaustion). `None` (the default) injects nothing
+    /// and costs nothing on the hot path.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for ExecOptions {
@@ -1021,6 +1040,7 @@ impl Default for ExecOptions {
             unshared_slots: false,
             arena_pool: None,
             shared_pool: None,
+            fault: None,
         }
     }
 }
@@ -1118,6 +1138,10 @@ impl ReplayContext {
             events: EventTable::new(n_events, timeout),
             weights: opts.weights,
             alloc_events: AtomicU64::new(0),
+            fault: opts
+                .fault
+                .filter(|p| p.has_replay_faults())
+                .map(FaultInjector::new),
             trace: AtomicBool::new(false),
             stamps: (0..n_ops).map(|_| AtomicU64::new(0)).collect(),
             stamp_clock: AtomicU64::new(0),
@@ -1221,6 +1245,7 @@ impl ReplayContext {
         if self.poisoned {
             return Err("context poisoned by an earlier timed-out replay".into());
         }
+        self.inject_replay_fault()?;
         self.inner.fill_inputs(inputs)?;
         self.inner.reset_run_state();
         let result = match &self.mode {
@@ -1395,6 +1420,7 @@ impl ReplayContext {
         if self.poisoned {
             return Err("context poisoned by an earlier timed-out replay".into());
         }
+        self.inject_replay_fault()?;
         let inner = &self.inner;
         inner.fill_inputs(inputs)?;
         inner.reset_run_state();
@@ -1455,6 +1481,32 @@ impl ReplayContext {
             written[op.out_slot as usize] = true;
         }
         Ok(sched_s)
+    }
+
+    /// Consult the chaos injector at replay entry. An injected join
+    /// timeout poisons the context exactly like a real timed-out join —
+    /// the serving lanes' supervision path must replace the lane; the
+    /// other replay faults are transient errors the retry policy covers.
+    fn inject_replay_fault(&mut self) -> Result<(), String> {
+        let Some(inj) = &self.inner.fault else { return Ok(()) };
+        let (idx, fault) = inj.begin_replay();
+        match fault {
+            None => Ok(()),
+            Some(ReplayFault::JoinTimeout) => {
+                self.poisoned = true;
+                Err(format!(
+                    "{}: replay {idx} join timed out; context poisoned",
+                    crate::fault::INJECTED
+                ))
+            }
+            Some(ReplayFault::WorkerDeath) => {
+                Err(format!("{}: worker died during replay {idx}", crate::fault::INJECTED))
+            }
+            Some(ReplayFault::ArenaExhausted) => Err(format!(
+                "{}: arena capacity exhausted in replay {idx}",
+                crate::fault::INJECTED
+            )),
+        }
     }
 
     /// A poisoned context may still have a straggler worker writing the
@@ -1686,6 +1738,81 @@ mod tests {
         let mut ctx = ReplayContext::new(tape, SyntheticKernel);
         assert!(ctx.replay_one(&[0.0; 3]).is_err());
         assert!(ctx.replay(&[]).is_err());
+    }
+
+    #[test]
+    fn injected_join_timeout_poisons_and_worker_death_is_transient() {
+        let tape = mini_tape();
+        let input = input_for(&tape, 11);
+        let death = FaultPlan { worker_death: 1.0, ..FaultPlan::seeded(1) };
+        let mut ctx = ReplayContext::with_options(
+            tape.clone(),
+            SyntheticKernel,
+            ExecOptions { fault: Some(death), ..Default::default() },
+        );
+        let err = ctx.replay_one(&input).unwrap_err();
+        assert!(err.contains("injected fault"), "{err}");
+        assert!(!err.contains("poisoned"), "worker death is transient: {err}");
+        let err2 = ctx.replay_one(&input).unwrap_err();
+        assert!(!err2.contains("poisoned"), "still transient on the next replay: {err2}");
+
+        let wedge = FaultPlan { join_timeout: 1.0, ..FaultPlan::seeded(2) };
+        let mut ctx = ReplayContext::with_options(
+            tape,
+            SyntheticKernel,
+            ExecOptions { fault: Some(wedge), ..Default::default() },
+        );
+        let err = ctx.replay_one(&input).unwrap_err();
+        assert!(err.contains("injected fault"), "{err}");
+        assert!(err.contains("poisoned"), "{err}");
+        let err = ctx.replay_one(&input).unwrap_err();
+        assert!(
+            err.contains("poisoned by an earlier timed-out replay"),
+            "context must stay poisoned: {err}"
+        );
+    }
+
+    #[test]
+    fn injected_op_error_fails_the_replay_without_poisoning() {
+        let tape = mini_tape();
+        let input = input_for(&tape, 12);
+        // Every Task op panics; a short watchdog keeps streams that wait
+        // on the dead streams' events from stalling the test.
+        let plan = FaultPlan { op_error: 1.0, ..FaultPlan::seeded(3) };
+        let mut ctx = ReplayContext::with_options(
+            tape,
+            SyntheticKernel,
+            ExecOptions {
+                fault: Some(plan),
+                timeout: Duration::from_millis(200),
+                ..Default::default()
+            },
+        );
+        let err = ctx.replay_one(&input).unwrap_err();
+        assert!(err.contains("injected fault"), "{err}");
+        assert!(!err.contains("poisoned by an earlier"), "op errors are transient: {err}");
+        let err2 = ctx.replay_one(&input).unwrap_err();
+        assert!(!err2.contains("poisoned by an earlier"), "{err2}");
+    }
+
+    #[test]
+    fn injected_fault_sequences_are_reproducible_across_contexts() {
+        let tape = mini_tape();
+        let input = input_for(&tape, 13);
+        let plan = FaultPlan { worker_death: 0.4, ..FaultPlan::seeded(99) };
+        let run = |plan: FaultPlan| -> Vec<bool> {
+            let mut ctx = ReplayContext::with_options(
+                tape.clone(),
+                SyntheticKernel,
+                ExecOptions { fault: Some(plan), ..Default::default() },
+            );
+            (0..12).map(|_| ctx.replay_one(&input).is_ok()).collect()
+        };
+        let a = run(plan.clone());
+        let b = run(plan.clone());
+        assert_eq!(a, b, "same plan, same fault sequence");
+        let expect: Vec<bool> = (0..12).map(|i| plan.replay_fault(i).is_none()).collect();
+        assert_eq!(a, expect, "executor mirrors the plan's stateless decisions");
     }
 
     #[test]

@@ -1,0 +1,514 @@
+//! Seeded, deterministic fault injection for chaos-hardening the
+//! serving stack.
+//!
+//! A [`FaultPlan`] is a probability grammar over the failure modes a
+//! production runtime built on AoT schedules must survive even though
+//! the schedule cannot predict them:
+//!
+//! * **op error / op delay** — a tape op panics or stalls mid-replay
+//!   (injected inside the executor's per-op dispatch, so the parallel
+//!   worker pools exercise their real panic-recovery paths);
+//! * **replay-join timeout** — the replay wedges and the context is
+//!   poisoned, exactly like a real timed-out join
+//!   ([`ReplayContext::replay`](crate::engine::executor::ReplayContext::replay));
+//! * **worker death / arena exhaustion** — a whole replay fails outright
+//!   with a transient error;
+//! * **engine error / engine panic** — an `infer_batch` call fails
+//!   before reaching the replay context (the [`ChaosEngine`] wrapper,
+//!   wired by `Runtime::builder().fault_plan(..)` through the existing
+//!   engine-factory hook).
+//!
+//! Every decision is a **pure hash** of `(seed, fault kind, replay
+//! index, op/call index)` — no shared RNG state — so concurrent lanes,
+//! bounded retries, and re-runs of the same seed draw identical fault
+//! sequences, and the DES mirror
+//! ([`sim::simulate_faults`](crate::sim::simulate_faults)) can predict
+//! measured completed/retried/failed counts exactly.
+//!
+//! The recovery side lives in the lane scheduler
+//! ([`serving::lanes`](crate::serving::lanes)): transient failures are
+//! retried in place under a bounded, deadline-aware [`RetryPolicy`];
+//! a poisoned context kills its lane, the dispatcher's supervision
+//! pass replaces the lane and re-admits its in-flight jobs.
+
+use crate::coordinator::InferEngine;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Marker every injected failure message carries, so operators (and
+/// tests) can tell chaos from organic failures.
+pub const INJECTED: &str = "injected fault";
+
+// Per-kind hash salts: distinct fault kinds draw independent streams
+// from one seed.
+const SALT_OP_ERROR: u64 = 0x0FA1_1ED0;
+const SALT_OP_DELAY: u64 = 0x0DE1_A7ED;
+const SALT_ENGINE_ERROR: u64 = 0x0E66_E44E;
+const SALT_ENGINE_PANIC: u64 = 0x0E66_AA1C;
+const SALT_WORKER_DEATH: u64 = 0x0D0A_DEAD;
+const SALT_JOIN_TIMEOUT: u64 = 0x0707_1AEA;
+const SALT_ARENA_EXHAUSTED: u64 = 0x0A4E_AA00;
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A fault injected around one tape op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpFault {
+    /// The op's execution panics (`"injected fault: op .."`).
+    Error,
+    /// The op stalls for [`FaultPlan::delay`] before executing.
+    Delay,
+}
+
+/// A fault injected at replay entry, before any op runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplayFault {
+    /// The replay "wedges": the context poisons itself and returns the
+    /// same error a real timed-out join produces. Fatal to a lane.
+    JoinTimeout,
+    /// A replay worker dies mid-lease; the replay fails, transiently.
+    WorkerDeath,
+    /// The arena cannot satisfy the replay's reservation; transient.
+    ArenaExhausted,
+}
+
+/// A fault injected around one whole `infer_batch` call
+/// ([`ChaosEngine`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineFault {
+    /// The call returns `Err` without executing.
+    Error,
+    /// The call panics without executing (exercises the lane thread's
+    /// catch-unwind path).
+    Panic,
+}
+
+/// Seeded probability grammar over the injectable failure modes. All
+/// probabilities default to 0 (a no-op plan); [`Default`] is the
+/// fault-free plan with seed 0.
+///
+/// Decisions are stateless hashes, so a plan can be cloned freely:
+/// every copy (live engine wrapper, executor injector, DES mirror)
+/// draws the identical fault sequence for the same indices. Use
+/// [`derive`](Self::derive) to fork an independent stream per bucket
+/// or per subsystem.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Base seed; every decision hashes it with the fault kind and the
+    /// replay/op/call indices.
+    pub seed: u64,
+    /// Probability an op execution panics mid-replay.
+    pub op_error: f64,
+    /// Probability an op stalls for [`delay`](Self::delay) first.
+    pub op_delay: f64,
+    /// Stall length for [`op_delay`](Self::op_delay) spikes.
+    pub delay: Duration,
+    /// Probability an `infer_batch` call fails with `Err` outright.
+    pub engine_error: f64,
+    /// Probability an `infer_batch` call panics outright.
+    pub engine_panic: f64,
+    /// Probability a replay fails with a worker-death error.
+    pub worker_death: f64,
+    /// Probability a replay "wedges" and poisons its context — fatal
+    /// to the owning lane until supervision replaces it.
+    pub join_timeout: f64,
+    /// Probability a replay fails with an arena-exhaustion error.
+    pub arena_exhaustion: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            op_error: 0.0,
+            op_delay: 0.0,
+            delay: Duration::ZERO,
+            engine_error: 0.0,
+            engine_panic: 0.0,
+            worker_death: 0.0,
+            join_timeout: 0.0,
+            arena_exhaustion: 0.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// A fault-free plan with the given seed (set probabilities on it).
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan { seed, ..FaultPlan::default() }
+    }
+
+    /// `true` when no fault can ever fire (all probabilities zero).
+    pub fn is_noop(&self) -> bool {
+        self.op_error == 0.0
+            && self.op_delay == 0.0
+            && self.engine_error == 0.0
+            && self.engine_panic == 0.0
+            && self.worker_death == 0.0
+            && self.join_timeout == 0.0
+            && self.arena_exhaustion == 0.0
+    }
+
+    /// `true` when any replay-level fault (op error/delay, worker
+    /// death, join timeout, arena exhaustion) can fire — the executor
+    /// only installs an injector when this holds.
+    pub fn has_replay_faults(&self) -> bool {
+        self.op_error > 0.0
+            || self.op_delay > 0.0
+            || self.worker_death > 0.0
+            || self.join_timeout > 0.0
+            || self.arena_exhaustion > 0.0
+    }
+
+    /// Fork an independent decision stream (same probabilities, hashed
+    /// seed). The runtime derives one stream per bucket: the engine
+    /// wrapper for bucket `b` runs `plan.derive(b as u64)`, and the
+    /// executor-level injector runs
+    /// `plan.derive(b as u64 ^ FaultPlan::REPLAY_SALT)` — the DES
+    /// mirror must apply the same derivation to predict a bucket.
+    pub fn derive(&self, salt: u64) -> FaultPlan {
+        FaultPlan { seed: splitmix64(self.seed ^ salt), ..self.clone() }
+    }
+
+    /// Derivation salt separating a bucket's executor-level injector
+    /// stream from its engine-wrapper stream (see [`derive`](Self::derive)).
+    pub const REPLAY_SALT: u64 = 0x4EA1_5A17;
+
+    /// Uniform roll in `[0, 1)` for `(kind, a, b)`.
+    fn roll(&self, salt: u64, a: u64, b: u64) -> f64 {
+        let mut h = splitmix64(self.seed ^ salt);
+        h = splitmix64(h ^ a);
+        h = splitmix64(h ^ b);
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Fault decision for op `op` of replay number `replay`.
+    pub fn op_fault(&self, replay: u64, op: u64) -> Option<OpFault> {
+        if self.op_error > 0.0 && self.roll(SALT_OP_ERROR, replay, op) < self.op_error {
+            return Some(OpFault::Error);
+        }
+        if self.op_delay > 0.0 && self.roll(SALT_OP_DELAY, replay, op) < self.op_delay {
+            return Some(OpFault::Delay);
+        }
+        None
+    }
+
+    /// Fault decision for replay number `replay` (checked at entry).
+    pub fn replay_fault(&self, replay: u64) -> Option<ReplayFault> {
+        if self.join_timeout > 0.0 && self.roll(SALT_JOIN_TIMEOUT, replay, 0) < self.join_timeout
+        {
+            return Some(ReplayFault::JoinTimeout);
+        }
+        if self.worker_death > 0.0 && self.roll(SALT_WORKER_DEATH, replay, 0) < self.worker_death
+        {
+            return Some(ReplayFault::WorkerDeath);
+        }
+        if self.arena_exhaustion > 0.0
+            && self.roll(SALT_ARENA_EXHAUSTED, replay, 0) < self.arena_exhaustion
+        {
+            return Some(ReplayFault::ArenaExhausted);
+        }
+        None
+    }
+
+    /// Fault decision for `infer_batch` call number `call` of one
+    /// engine instance — the grammar [`ChaosEngine`] and
+    /// [`sim::simulate_faults`](crate::sim::simulate_faults) share.
+    pub fn engine_fault(&self, call: u64) -> Option<EngineFault> {
+        if self.engine_error > 0.0 && self.roll(SALT_ENGINE_ERROR, call, 0) < self.engine_error {
+            return Some(EngineFault::Error);
+        }
+        if self.engine_panic > 0.0 && self.roll(SALT_ENGINE_PANIC, call, 0) < self.engine_panic {
+            return Some(EngineFault::Panic);
+        }
+        None
+    }
+}
+
+/// A [`FaultPlan`] plus the per-context replay counter the executor
+/// consults. Shared with replay workers (`&self` decisions only);
+/// replays themselves are serialized by `&mut ReplayContext`, so the
+/// current replay index is stable while its ops run.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    /// Replays begun on this context (next replay's index).
+    replays: AtomicU64,
+    /// Index of the replay currently executing.
+    current: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        FaultInjector { plan, replays: AtomicU64::new(0), current: AtomicU64::new(0) }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Advance to the next replay: returns its index and any
+    /// replay-level fault to apply before running ops.
+    pub fn begin_replay(&self) -> (u64, Option<ReplayFault>) {
+        let idx = self.replays.fetch_add(1, Ordering::SeqCst);
+        self.current.store(idx, Ordering::SeqCst);
+        (idx, self.plan.replay_fault(idx))
+    }
+
+    /// Fault decision for op `op` of the replay currently executing.
+    pub fn op_fault(&self, op: u64) -> Option<OpFault> {
+        self.plan.op_fault(self.current.load(Ordering::SeqCst), op)
+    }
+
+    /// Stall length for injected [`OpFault::Delay`] spikes.
+    pub fn delay(&self) -> Duration {
+        self.plan.delay
+    }
+}
+
+/// Bounded, deadline-aware retry budget for failed lane jobs.
+///
+/// A job may execute at most `max_retries + 1` times; each
+/// re-execution waits `backoff` first and is skipped entirely (the
+/// job resolves `Failed`) if every live request in it would already be
+/// past its deadline when the backoff elapses — a retry never runs
+/// past a request's deadline.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Re-executions allowed after the first attempt fails.
+    pub max_retries: u32,
+    /// Wait before each re-execution.
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 2, backoff: Duration::ZERO }
+    }
+}
+
+/// Fault-injecting [`InferEngine`] wrapper: consults
+/// [`FaultPlan::engine_fault`] with a per-instance call counter before
+/// delegating. `Runtime::builder().fault_plan(..)` wraps every lane
+/// engine in one (stream derived per bucket), but it composes with any
+/// engine via `build_with_factory`.
+pub struct ChaosEngine<E> {
+    inner: E,
+    plan: FaultPlan,
+    calls: u64,
+}
+
+impl<E> ChaosEngine<E> {
+    pub fn new(inner: E, plan: FaultPlan) -> ChaosEngine<E> {
+        ChaosEngine { inner, plan, calls: 0 }
+    }
+
+    /// The wrapped engine.
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    /// `infer_batch` calls attempted so far (fault decisions consumed).
+    pub fn calls(&self) -> u64 {
+        self.calls
+    }
+}
+
+impl<E: InferEngine> InferEngine for ChaosEngine<E> {
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.inner.batch_sizes()
+    }
+
+    fn example_len(&self) -> usize {
+        self.inner.example_len()
+    }
+
+    fn output_len(&self) -> usize {
+        self.inner.output_len()
+    }
+
+    fn infer_batch(&mut self, bucket: usize, input: &[f32]) -> Result<Vec<f32>> {
+        let call = self.calls;
+        self.calls += 1;
+        match self.plan.engine_fault(call) {
+            Some(EngineFault::Error) => {
+                anyhow::bail!("{INJECTED}: engine call {call} failed")
+            }
+            Some(EngineFault::Panic) => panic!("{INJECTED}: engine call {call} panicked"),
+            None => {}
+        }
+        self.inner.infer_batch(bucket, input)
+    }
+
+    fn stream_count(&self, bucket: usize) -> Option<usize> {
+        self.inner.stream_count(bucket)
+    }
+
+    fn reserved_bytes(&self, bucket: usize) -> Option<u64> {
+        self.inner.reserved_bytes(bucket)
+    }
+
+    fn steals(&self) -> Option<u64> {
+        self.inner.steals()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chaotic_plan(seed: u64) -> FaultPlan {
+        FaultPlan {
+            op_error: 0.3,
+            op_delay: 0.2,
+            engine_error: 0.25,
+            engine_panic: 0.1,
+            worker_death: 0.15,
+            join_timeout: 0.1,
+            arena_exhaustion: 0.1,
+            ..FaultPlan::seeded(seed)
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_stateless() {
+        let plan = chaotic_plan(42);
+        let clone = plan.clone();
+        for replay in 0..50u64 {
+            assert_eq!(plan.replay_fault(replay), clone.replay_fault(replay));
+            for op in 0..20u64 {
+                assert_eq!(plan.op_fault(replay, op), clone.op_fault(replay, op));
+            }
+            assert_eq!(plan.engine_fault(replay), clone.engine_fault(replay));
+        }
+        // Re-querying an index never perturbs later decisions.
+        let first: Vec<_> = (0..50).map(|c| plan.engine_fault(c)).collect();
+        let _ = plan.engine_fault(7);
+        let again: Vec<_> = (0..50).map(|c| plan.engine_fault(c)).collect();
+        assert_eq!(first, again);
+    }
+
+    #[test]
+    fn probabilities_gate_the_fault_kinds() {
+        let noop = FaultPlan::seeded(9);
+        assert!(noop.is_noop());
+        assert!(!noop.has_replay_faults());
+        for i in 0..200u64 {
+            assert_eq!(noop.op_fault(i, i), None);
+            assert_eq!(noop.replay_fault(i), None);
+            assert_eq!(noop.engine_fault(i), None);
+        }
+        let certain = FaultPlan { engine_error: 1.0, ..FaultPlan::seeded(9) };
+        assert!(!certain.is_noop());
+        assert!(!certain.has_replay_faults(), "engine faults are not replay faults");
+        for i in 0..50u64 {
+            assert_eq!(certain.engine_fault(i), Some(EngineFault::Error));
+        }
+        let wedge = FaultPlan { join_timeout: 1.0, ..FaultPlan::seeded(9) };
+        assert!(wedge.has_replay_faults());
+        assert_eq!(wedge.replay_fault(3), Some(ReplayFault::JoinTimeout));
+    }
+
+    #[test]
+    fn rates_roughly_match_probabilities() {
+        let plan = FaultPlan { engine_error: 0.25, ..FaultPlan::seeded(1234) };
+        let n = 4000u64;
+        let hits = (0..n).filter(|&c| plan.engine_fault(c).is_some()).count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.03, "observed rate {rate} for p=0.25");
+    }
+
+    #[test]
+    fn derived_streams_are_independent_but_reproducible() {
+        let plan = chaotic_plan(7);
+        let a = plan.derive(1);
+        let b = plan.derive(2);
+        assert_eq!(a.seed, plan.derive(1).seed, "derivation is deterministic");
+        assert_ne!(a.seed, b.seed);
+        assert_ne!(a.seed, plan.seed);
+        // Streams diverge somewhere early.
+        let differs = (0..64u64).any(|c| a.engine_fault(c) != b.engine_fault(c));
+        assert!(differs, "derived streams should not be identical");
+    }
+
+    #[test]
+    fn injector_tracks_replays_and_scopes_op_faults_to_the_current_replay() {
+        let plan = chaotic_plan(77);
+        let inj = FaultInjector::new(plan.clone());
+        for expect in 0..20u64 {
+            let (idx, fault) = inj.begin_replay();
+            assert_eq!(idx, expect);
+            assert_eq!(fault, plan.replay_fault(expect));
+            for op in 0..8u64 {
+                assert_eq!(inj.op_fault(op), plan.op_fault(expect, op));
+            }
+        }
+    }
+
+    #[test]
+    fn retry_policy_default_is_bounded() {
+        let p = RetryPolicy::default();
+        assert!(p.max_retries >= 1);
+        assert_eq!(p.backoff, Duration::ZERO);
+    }
+
+    struct FixedEngine;
+    impl InferEngine for FixedEngine {
+        fn batch_sizes(&self) -> Vec<usize> {
+            vec![1]
+        }
+        fn example_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            2
+        }
+        fn infer_batch(&mut self, _bucket: usize, input: &[f32]) -> Result<Vec<f32>> {
+            Ok(input.to_vec())
+        }
+    }
+
+    #[test]
+    fn chaos_engine_injects_errors_and_passes_clean_calls_through() {
+        let plan = FaultPlan { engine_error: 0.4, ..FaultPlan::seeded(2024) };
+        let mut chaos = ChaosEngine::new(FixedEngine, plan.clone());
+        assert_eq!(chaos.batch_sizes(), vec![1]);
+        let mut failures = Vec::new();
+        for call in 0..40u64 {
+            let out = chaos.infer_batch(1, &[1.0, 2.0]);
+            match plan.engine_fault(call) {
+                Some(EngineFault::Error) => {
+                    let msg = format!("{:#}", out.unwrap_err());
+                    assert!(msg.contains(INJECTED), "marked as injected: {msg}");
+                    failures.push(call);
+                }
+                Some(EngineFault::Panic) => unreachable!("p(panic)=0"),
+                None => assert_eq!(out.unwrap(), vec![1.0, 2.0]),
+            }
+        }
+        assert!(!failures.is_empty(), "p=0.4 over 40 calls should fail at least once");
+        assert_eq!(chaos.calls(), 40);
+    }
+
+    #[test]
+    fn chaos_engine_panics_are_marked() {
+        let plan = FaultPlan { engine_panic: 1.0, ..FaultPlan::seeded(5) };
+        let mut chaos = ChaosEngine::new(FixedEngine, plan);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            chaos.infer_batch(1, &[0.0, 0.0])
+        }));
+        let payload = caught.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains(INJECTED), "panic payload marked: {msg}");
+    }
+}

@@ -56,6 +56,7 @@ pub mod serving;
 #[cfg(feature = "xla")]
 pub mod training;
 pub mod engine;
+pub mod fault;
 pub mod runtime;
 pub mod graph;
 pub mod matching;

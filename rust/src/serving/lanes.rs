@@ -58,10 +58,22 @@
 //!   stay bit-identical to the oracle. The DES predicts shed counts
 //!   offline ([`crate::sim::simulate_lanes_deadline`]).
 //!
+//! * Lanes are **supervised**: transient engine failures (errors,
+//!   panics, short outputs) are retried in-lane under a bounded
+//!   deadline-aware [`RetryPolicy`]; a lane whose replay context is
+//!   *poisoned* (fatal — nothing it runs can succeed again) hands its
+//!   work to a dead-letter queue and retires, and the dispatcher
+//!   rebuilds a replacement lane and re-admits the orphaned jobs.
+//!   Requests that exhaust their retry budget resolve as
+//!   [`InferOutcome::Failed`](crate::serving::InferOutcome) and count
+//!   into [`LaneStat::failed`] — no ticket ever dangles. A bucket whose
+//!   rebuild also fails is marked broken and fails fast
+//!   ([`Health::Degraded`]).
+//!
 //! Shutdown closes the admission queue first and then drains everything
 //! already admitted: a request whose `push` succeeded is always
-//! answered (served or deadline-shed); later requests fail fast with
-//! "server stopped". The randomized differential harness
+//! answered (served, deadline-shed, or failed); later requests fail
+//! fast with "server stopped". The randomized differential harness
 //! (`tests/prop_harness.rs`) asserts lane-pipelined outputs are
 //! bit-identical to the serial-replay oracle.
 //!
@@ -73,17 +85,18 @@
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::{LaneStat, ServingReport};
 use super::queue::{Bounded, PopResult, PushError};
-use super::runtime::ReqToken;
+use super::runtime::{Health, ReqToken};
 use crate::coordinator::InferEngine;
 use crate::engine::executor::panic_message;
+use crate::fault::RetryPolicy;
 use crate::util::stats::Summary;
 
 /// How often the dispatcher re-checks staged batches / drain progress
@@ -146,6 +159,9 @@ pub struct LaneConfig {
     pub backlog_cap: usize,
     /// Elastic lane scaling (defaults to static single-lane buckets).
     pub scale: ScaleOptions,
+    /// Bounded retry of transiently-failed batches (engine errors and
+    /// panics). Retries never extend past a request's deadline.
+    pub retry: RetryPolicy,
 }
 
 impl Default for LaneConfig {
@@ -157,6 +173,7 @@ impl Default for LaneConfig {
             buffers_per_lane: 6,
             backlog_cap: 256,
             scale: ScaleOptions::default(),
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -173,7 +190,6 @@ enum Admit {
     /// the differential harness, upstream batch-aware clients). Replies
     /// with the full padded output.
     Batch { bucket: usize, input: Vec<f32>, deadline: Option<Instant>, reply: Reply },
-    Shutdown { reply: mpsc::Sender<ServingReport> },
 }
 
 /// One batch handed to a lane.
@@ -186,6 +202,51 @@ struct LaneJob {
     batch: Option<ReqToken>,
     /// When the dispatcher routed the job (queue-wait accounting).
     routed: Instant,
+    /// Engine executions this job has survived — carried across lanes
+    /// when a dead lane's work is re-admitted, so the retry budget
+    /// ([`RetryPolicy::max_retries`]) is global per job, not per lane.
+    attempts: u32,
+    /// Row-resolution mask (parallel to `tokens`): a row already shed or
+    /// answered must not be resolved twice when the job is retried.
+    /// Empty until the first lane pop normalizes it.
+    done: Vec<bool>,
+}
+
+/// Jobs orphaned by a dead lane, waiting for the dispatcher to retry
+/// them on a replacement lane or resolve them as failed.
+type DeadLetter = Arc<Mutex<Vec<(usize, LaneJob, String)>>>;
+
+/// Shared liveness flags between the dispatcher and the server/client
+/// handles (surfaced as [`Health`] via `Runtime::health()`).
+pub(crate) struct HealthState {
+    draining: AtomicBool,
+    degraded: Mutex<Vec<usize>>,
+}
+
+impl HealthState {
+    pub(crate) fn new() -> Arc<HealthState> {
+        Arc::new(HealthState { draining: AtomicBool::new(false), degraded: Mutex::new(Vec::new()) })
+    }
+
+    pub(crate) fn set_draining(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    fn set_degraded(&self, buckets: Vec<usize>) {
+        *self.degraded.lock().unwrap() = buckets;
+    }
+
+    pub(crate) fn snapshot(&self) -> Health {
+        if self.draining.load(Ordering::SeqCst) {
+            return Health::Draining;
+        }
+        let degraded = self.degraded.lock().unwrap();
+        if degraded.is_empty() {
+            Health::Healthy
+        } else {
+            Health::Degraded { buckets: degraded.clone() }
+        }
+    }
 }
 
 /// Dispatcher-side view of one lane instance.
@@ -255,6 +316,10 @@ struct LaneGroup {
     /// Padded buffers recovered from retired lanes, re-seeded into the
     /// next spawned lane so scale-up re-uses warm allocations.
     spare_buffers: Vec<Vec<f32>>,
+    /// Set when the bucket's last lane died AND rebuilding a replacement
+    /// failed: the bucket fails fast from then on (and the server
+    /// reports `Health::Degraded`) instead of rebuilding forever.
+    broken: Option<String>,
 }
 
 impl LaneGroup {
@@ -270,6 +335,7 @@ impl LaneGroup {
             latencies: Vec::new(),
             fill_sum: 0,
             spare_buffers: Vec::new(),
+            broken: None,
         }
     }
 
@@ -294,29 +360,76 @@ impl LaneGroup {
         self.lanes.iter().map(Lane::in_flight).sum::<usize>() + self.hinted_since_scale
     }
 
-    /// Join a finished lane thread and fold its counters in.
+    /// Join a finished lane thread and fold its counters in. Anything
+    /// the lane thread never answered — staged jobs, or queue leftovers
+    /// of a thread that died early — is resolved as failed here, so no
+    /// ticket ever dangles past the fold.
     fn fold_joined(&mut self, mut lane: Lane) {
         // Recover pooled padded buffers for the next spawn.
         while let Some(buf) = lane.free.try_pop() {
             self.spare_buffers.push(buf);
         }
         self.stat.alloc_events += lane.alloc_events;
-        let Some(handle) = lane.join.take() else { return };
-        if let Ok((stat, latencies, fill)) = handle.join() {
-            self.stat.absorb(&stat);
-            self.latencies.extend(latencies);
-            self.fill_sum += fill;
+        if let Some(handle) = lane.join.take() {
+            if let Ok((stat, latencies, fill)) = handle.join() {
+                self.stat.absorb(&stat);
+                self.latencies.extend(latencies);
+                self.fill_sum += fill;
+            }
+        }
+        lane.jobs.close();
+        let msg = format!("lane {} shut down before serving this job", self.bucket);
+        for job in lane.staged.drain(..) {
+            self.stat.failed += fail_job(job, &msg);
+        }
+        while let Some(job) = lane.jobs.try_pop() {
+            self.stat.failed += fail_job(job, &msg);
         }
     }
 }
 
-fn fail_job(job: LaneJob, msg: &str) {
-    if let Some(tok) = job.batch {
+/// Resolve every still-unresolved request of a job as failed; returns
+/// how many were failed (a pre-formed batch counts as one request,
+/// matching `n_requests` accounting).
+fn fail_job(job: LaneJob, msg: &str) -> usize {
+    let LaneJob { tokens, batch, done, .. } = job;
+    fail_requests(tokens, batch, &done, msg)
+}
+
+/// [`fail_job`] over a job's already-destructured parts.
+fn fail_requests(
+    tokens: Vec<(ReqToken, Instant)>,
+    batch: Option<ReqToken>,
+    done: &[bool],
+    msg: &str,
+) -> usize {
+    let mut failed = 0;
+    if let Some(tok) = batch {
         let _ = tok.reply.send(Err(msg.to_string()));
+        failed += 1;
     }
-    for (tok, _) in job.tokens {
+    for (i, (tok, _)) in tokens.into_iter().enumerate() {
+        if done.get(i).copied().unwrap_or(false) {
+            continue;
+        }
         let _ = tok.reply.send(Err(msg.to_string()));
+        failed += 1;
     }
+    failed
+}
+
+/// True when at least one unresolved request of the job could still be
+/// served by an execution happening at `at` (requests without deadlines
+/// always qualify) — the deadline-aware retry gate: a retry no request
+/// could benefit from is skipped and the job resolves immediately.
+fn retry_viable(job: &LaneJob, at: Instant) -> bool {
+    if let Some(tok) = &job.batch {
+        return !tok.expired(at);
+    }
+    job.tokens
+        .iter()
+        .zip(&job.done)
+        .any(|((tok, _), done)| !done && !tok.expired(at))
 }
 
 /// Push staged jobs into the lane queue until it fills (non-blocking).
@@ -341,8 +454,14 @@ fn flush_staged(lane: &mut Lane) {
 }
 
 /// The per-lane worker: builds the engine on this thread, reports its
-/// shape, then drains the job queue FIFO until it closes. Returns
+/// shape, then drains the job queue FIFO until it closes. Transient
+/// engine failures (errors, panics, short outputs) are retried in-lane
+/// under the [`RetryPolicy`]; a *fatal* failure — a poisoned replay
+/// context, which can serve nothing further — dead-letters the current
+/// job plus everything queued and retires the thread, leaving the
+/// dispatcher's supervision pass to spawn a replacement. Returns
 /// `(stats, per-request latencies, real-example fill sum)`.
+#[allow(clippy::too_many_arguments)]
 fn lane_thread<E, F>(
     factory: Arc<F>,
     bucket: usize,
@@ -350,6 +469,8 @@ fn lane_thread<E, F>(
     free: Bounded<Vec<f32>>,
     done_jobs: Arc<AtomicU64>,
     ready: mpsc::Sender<Result<(usize, usize), String>>,
+    retry: RetryPolicy,
+    dead_letter: DeadLetter,
 ) -> (LaneStat, Vec<f64>, usize)
 where
     E: InferEngine + 'static,
@@ -361,22 +482,22 @@ where
     // A lane that cannot build its engine must not strand work: close
     // the queue itself (elastic spawns have no startup handshake) and
     // answer whatever the dispatcher already routed.
-    let die = |msg: String| {
+    let die = |stat: &mut LaneStat, msg: String| {
         let _ = ready.send(Err(msg.clone()));
         jobs.close();
         while let Some(job) = jobs.try_pop() {
-            fail_job(job, &msg);
+            stat.failed += fail_job(job, &msg);
         }
     };
     let mut engine = match factory(bucket) {
         Ok(e) => e,
         Err(err) => {
-            die(format!("lane {bucket}: {err:#}"));
+            die(&mut stat, format!("lane {bucket}: {err:#}"));
             return (stat, latencies, fill_sum);
         }
     };
     if !engine.batch_sizes().contains(&bucket) {
-        die(format!("lane {bucket}: engine does not serve this bucket"));
+        die(&mut stat, format!("lane {bucket}: engine does not serve this bucket"));
         return (stat, latencies, fill_sum);
     }
     let output_len = engine.output_len();
@@ -385,59 +506,118 @@ where
     let _ = ready.send(Ok((engine.example_len(), output_len)));
 
     let mut wait_sum = 0.0f64;
-    while let Some(job) = jobs.pop() {
-        let LaneJob { input, tokens, batch, routed } = job;
+    while let Some(mut job) = jobs.pop() {
         let started = Instant::now();
         // Deadline shedding happens HERE, at pop time: a request whose
         // deadline expired while it was staged or queued is resolved as
         // shed and never reaches the engine. Shed rows stay in the
         // padded input (surviving rows keep their positions); a job
         // with nothing live left skips the engine entirely.
-        if let Some(tok) = &batch {
+        if let Some(tok) = &job.batch {
             if tok.expired(started) {
                 tok.shed();
                 stat.deadline_shed += 1;
-                let _ = free.try_push(input);
+                let _ = free.try_push(job.input);
                 done_jobs.fetch_add(1, Ordering::Relaxed);
                 continue;
             }
         }
-        let shed: Vec<bool> = tokens.iter().map(|(tok, _)| tok.expired(started)).collect();
-        let n_live = shed.iter().filter(|s| !**s).count();
-        for ((tok, _), is_shed) in tokens.iter().zip(&shed) {
-            if *is_shed {
+        if job.done.len() != job.tokens.len() {
+            job.done = vec![false; job.tokens.len()];
+        }
+        for ((tok, _), done) in job.tokens.iter().zip(job.done.iter_mut()) {
+            if !*done && tok.expired(started) {
                 tok.shed();
                 stat.deadline_shed += 1;
+                *done = true;
             }
         }
-        if batch.is_none() && n_live == 0 {
-            let _ = free.try_push(input);
+        if job.batch.is_none() && job.done.iter().all(|d| *d) {
+            let _ = free.try_push(job.input);
             done_jobs.fetch_add(1, Ordering::Relaxed);
             continue;
         }
-        wait_sum += started.duration_since(routed).as_secs_f64();
+        wait_sum += started.duration_since(job.routed).as_secs_f64();
         stat.n_batches += 1;
-        // An engine panic must not kill the lane: poison shows up as
-        // per-request errors, and the lane keeps draining (and keeps the
-        // dispatcher's buffer pool cycling).
-        let result = catch_unwind(AssertUnwindSafe(|| engine.infer_batch(bucket, &input)))
-            .unwrap_or_else(|p| {
-                Err(anyhow::anyhow!("lane {bucket} engine panicked: {}", panic_message(p)))
+        // Execute with bounded in-lane retry. An engine panic must not
+        // kill the lane: it is caught and treated like any transient
+        // engine error. A *poisoned* replay context is fatal — nothing
+        // this engine runs can ever succeed again — so the lane hands
+        // all its work to the dead-letter queue and retires itself.
+        let result = loop {
+            let t0 = Instant::now();
+            let attempt = catch_unwind(AssertUnwindSafe(|| engine.infer_batch(bucket, &job.input)))
+                .unwrap_or_else(|p| {
+                    Err(anyhow::anyhow!("lane {bucket} engine panicked: {}", panic_message(p)))
+                });
+            stat.busy_s += t0.elapsed().as_secs_f64();
+            job.attempts += 1;
+            // A short output would panic the row slicing below (outside
+            // the per-job panic guard) and kill the lane; demote it to a
+            // retryable per-job error instead.
+            let attempt = attempt.and_then(|out| {
+                let needed = job.tokens.len() * output_len;
+                anyhow::ensure!(
+                    out.len() >= needed,
+                    "lane {bucket}: engine returned {} values, need {needed}",
+                    out.len()
+                );
+                Ok(out)
             });
-        let done = Instant::now();
-        stat.busy_s += done.duration_since(started).as_secs_f64();
-        // A short output would panic the row slicing below (outside the
-        // per-job panic guard) and kill the lane; demote it to a per-job
-        // error instead.
-        let result = result.and_then(|out| {
-            let needed = tokens.len() * output_len;
-            anyhow::ensure!(
-                out.len() >= needed,
-                "lane {bucket}: engine returned {} values, need {needed}",
-                out.len()
-            );
-            Ok(out)
-        });
+            let err = match attempt {
+                Ok(out) => break Ok(out),
+                Err(err) => err,
+            };
+            let msg = format!("{err:#}");
+            if msg.contains("poisoned") {
+                jobs.close();
+                {
+                    let mut dl = dead_letter.lock().unwrap();
+                    let queued_msg = format!("lane {bucket} died: {msg}");
+                    dl.push((bucket, job, msg));
+                    while let Some(q) = jobs.try_pop() {
+                        dl.push((bucket, q, queued_msg.clone()));
+                    }
+                }
+                stat.mean_queue_wait_s =
+                    if stat.n_batches == 0 { 0.0 } else { wait_sum / stat.n_batches as f64 };
+                stat.steals = engine.steals().unwrap_or(0);
+                return (stat, latencies, fill_sum);
+            }
+            if job.attempts > retry.max_retries
+                || !retry_viable(&job, Instant::now() + retry.backoff)
+            {
+                break Err(msg);
+            }
+            stat.retries += 1;
+            if !retry.backoff.is_zero() {
+                std::thread::sleep(retry.backoff);
+            }
+            // Shed whatever expired during the failed attempt or the
+            // backoff; a job with nothing live left is already resolved.
+            let now = Instant::now();
+            if let Some(tok) = &job.batch {
+                if tok.expired(now) {
+                    tok.shed();
+                    stat.deadline_shed += 1;
+                    job.batch = None;
+                    break Ok(Vec::new());
+                }
+            } else {
+                for ((tok, _), done) in job.tokens.iter().zip(job.done.iter_mut()) {
+                    if !*done && tok.expired(now) {
+                        tok.shed();
+                        stat.deadline_shed += 1;
+                        *done = true;
+                    }
+                }
+                if job.done.iter().all(|d| *d) {
+                    break Ok(Vec::new());
+                }
+            }
+        };
+        let finished = Instant::now();
+        let LaneJob { input, tokens, batch, routed, done, .. } = job;
         match result {
             Ok(out) => {
                 if let Some(tok) = batch {
@@ -445,34 +625,26 @@ where
                     // `bucket` padded rows.
                     stat.n_requests += 1;
                     fill_sum += bucket;
-                    latencies.push(done.duration_since(routed).as_secs_f64());
+                    latencies.push(finished.duration_since(routed).as_secs_f64());
                     let _ = tok.reply.send(Ok(out));
                 } else {
-                    fill_sum += n_live;
-                    for (i, ((tok, enqueued), is_shed)) in
-                        tokens.into_iter().zip(shed).enumerate()
+                    for (i, ((tok, enqueued), was_done)) in
+                        tokens.into_iter().zip(done).enumerate()
                     {
-                        if is_shed {
+                        if was_done {
                             continue;
                         }
                         stat.n_requests += 1;
-                        latencies.push(done.duration_since(enqueued).as_secs_f64());
+                        fill_sum += 1;
+                        latencies.push(finished.duration_since(enqueued).as_secs_f64());
                         let row = out[i * output_len..(i + 1) * output_len].to_vec();
                         let _ = tok.reply.send(Ok(row));
                     }
                 }
             }
-            Err(err) => {
-                let msg = format!("{err:#}");
-                if let Some(tok) = batch {
-                    let _ = tok.reply.send(Err(msg));
-                } else {
-                    for ((tok, _), is_shed) in tokens.into_iter().zip(shed) {
-                        if !is_shed {
-                            let _ = tok.reply.send(Err(msg.clone()));
-                        }
-                    }
-                }
+            Err(msg) => {
+                stat.failed +=
+                    fail_requests(tokens, batch, &done, &msg);
             }
         }
         // Recycle the padded buffer (dropped if the pool is full), then
@@ -501,6 +673,7 @@ fn spawn_lane<E, F>(
     bucket: usize,
     config: &LaneConfig,
     elastic: bool,
+    dead_letter: &DeadLetter,
 ) -> Result<(Lane, ReadySignal)>
 where
     E: InferEngine + 'static,
@@ -515,9 +688,13 @@ where
         let jobs = jobs.clone();
         let free = free.clone();
         let done_jobs = Arc::clone(&done_jobs);
+        let retry = config.retry.clone();
+        let dead_letter = Arc::clone(dead_letter);
         std::thread::Builder::new()
             .name(format!("nimble-lane-{bucket}"))
-            .spawn(move || lane_thread(factory, bucket, jobs, free, done_jobs, ready_tx))
+            .spawn(move || {
+                lane_thread(factory, bucket, jobs, free, done_jobs, ready_tx, retry, dead_letter)
+            })
             .context("spawning lane thread")?
     };
     Ok((
@@ -547,6 +724,7 @@ fn maybe_spawn<E, F>(
     config: &LaneConfig,
     example_len: usize,
     factory: &Arc<F>,
+    dead_letter: &DeadLetter,
 ) -> Option<usize>
 where
     E: InferEngine + 'static,
@@ -557,7 +735,7 @@ where
     {
         return None;
     }
-    let Ok((lane, _ready)) = spawn_lane(factory, group.bucket, config, true) else {
+    let Ok((lane, _ready)) = spawn_lane(factory, group.bucket, config, true, dead_letter) else {
         return None;
     };
     for _ in 0..config.buffers_per_lane {
@@ -585,13 +763,23 @@ fn route_batch<E, F>(
     config: &LaneConfig,
     example_len: usize,
     factory: &Arc<F>,
+    dead_letter: &DeadLetter,
 ) where
     E: InferEngine + 'static,
     F: Fn(usize) -> Result<E> + Send + Sync + 'static,
 {
+    if group.lanes.is_empty() {
+        let msg = group
+            .broken
+            .clone()
+            .unwrap_or_else(|| format!("lane {} unavailable", group.bucket));
+        let _ = reply.send(Err(msg));
+        group.stat.failed += 1;
+        return;
+    }
     let mut li = group.pick_lane();
     if group.lanes[li].staged.len() >= stage_cap {
-        match maybe_spawn(group, config, example_len, factory) {
+        match maybe_spawn(group, config, example_len, factory, dead_letter) {
             Some(fresh) => li = fresh,
             None => {
                 let _ = reply.send(Err(format!(
@@ -599,6 +787,7 @@ fn route_batch<E, F>(
                     group.bucket,
                     group.lanes[li].staged.len()
                 )));
+                group.stat.failed += 1;
                 return;
             }
         }
@@ -609,14 +798,18 @@ fn route_batch<E, F>(
         tokens: Vec::new(),
         batch: Some(ReqToken { reply, deadline }),
         routed: Instant::now(),
+        attempts: 0,
+        done: Vec::new(),
     });
     flush_staged(lane);
 }
 
-/// Handle one admitted `Infer`/`Batch` message (`Shutdown` is the
-/// dispatcher's own business). `stage_cap` bounds the per-lane stage for
-/// pre-formed batches; the shutdown drain passes `usize::MAX` so nothing
-/// already admitted is ever load-shed.
+/// Handle one admitted `Infer`/`Batch` message. `stage_cap` bounds the
+/// per-lane stage for pre-formed batches; the shutdown drain passes
+/// `usize::MAX` so nothing already admitted is ever load-shed.
+/// `misc_failed` counts requests rejected here without reaching a lane
+/// (malformed lengths, unknown buckets) so the report's accounting
+/// still closes.
 #[allow(clippy::too_many_arguments)]
 fn admit_one<E, F>(
     msg: Admit,
@@ -627,6 +820,8 @@ fn admit_one<E, F>(
     stage_cap: usize,
     config: &LaneConfig,
     factory: &Arc<F>,
+    dead_letter: &DeadLetter,
+    misc_failed: &mut usize,
 ) where
     E: InferEngine + 'static,
     F: Fn(usize) -> Result<E> + Send + Sync + 'static,
@@ -636,6 +831,7 @@ fn admit_one<E, F>(
             if input.len() != example_len {
                 let _ =
                     reply.send(Err(format!("bad input length {} != {example_len}", input.len())));
+                *misc_failed += 1;
             } else {
                 // Hinted arrivals feed the bucket's admission pressure.
                 if let Some(gi) = hint.and_then(|h| group_index.get(&h)) {
@@ -655,6 +851,7 @@ fn admit_one<E, F>(
                     config,
                     example_len,
                     factory,
+                    dead_letter,
                 );
             }
             Some(_) => {
@@ -663,21 +860,33 @@ fn admit_one<E, F>(
                     input.len(),
                     bucket * example_len
                 )));
+                *misc_failed += 1;
             }
             None => {
                 let _ = reply.send(Err(format!("no lane for bucket {bucket}")));
+                *misc_failed += 1;
             }
         },
-        Admit::Shutdown { .. } => {}
     }
 }
 
-/// The periodic scaling pass: reap finished retiring lanes, detect dead
-/// lanes (engine build failed — their queues closed themselves), and
-/// retire elastic lanes idle past the quiescence window. Spawning is
+/// The periodic scaling + supervision pass: reap finished retiring
+/// lanes, detect dead lanes (engine build failed, fatal poisoned
+/// context, or a thread that died without cleanup), rebuild a
+/// replacement when a bucket loses its last lane, and retire elastic
+/// lanes idle past the quiescence window. Spawning for load is
 /// event-driven (at routing time, where saturation is observed), not
 /// part of this pass.
-fn scale_groups(groups: &mut [LaneGroup], config: &LaneConfig) {
+fn scale_groups<E, F>(
+    groups: &mut [LaneGroup],
+    config: &LaneConfig,
+    example_len: usize,
+    factory: &Arc<F>,
+    dead_letter: &DeadLetter,
+) where
+    E: InferEngine + 'static,
+    F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+{
     for group in groups.iter_mut() {
         // Reap retiring lanes whose threads finished draining.
         let mut i = 0;
@@ -702,25 +911,84 @@ fn scale_groups(groups: &mut [LaneGroup], config: &LaneConfig) {
                 lane.last_active = Instant::now();
             }
         }
-        // A dead lane closed its own queue (failed engine build): move
-        // it out of the routing set and re-route its staged work to the
-        // seed lane — clients must not eat a build failure while
-        // survivors have capacity. The seed lane is exempt: if it were
-        // dead, startup would have failed the whole server.
-        let mut i = 1;
+        // Dead-lane detection, seed included: a dead lane either closed
+        // its own queue (failed engine build, fatal poisoned context —
+        // its queued jobs are already failed or dead-lettered) or its
+        // thread died without cleanup (salvage the queue here). Its
+        // staged jobs re-route to a surviving lane below.
+        let mut rerouted: Vec<LaneJob> = Vec::new();
+        let mut i = 0;
         while i < group.lanes.len() {
-            if group.lanes[i].jobs.is_closed() {
+            let dead = group.lanes[i].jobs.is_closed()
+                || group.lanes[i].join.as_ref().map_or(true, |handle| handle.is_finished());
+            if dead {
                 let mut lane = group.lanes.remove(i);
                 group.retired += 1;
-                let rerouted: Vec<LaneJob> = lane.staged.drain(..).collect();
-                group.retiring.push(lane);
-                let seed = &mut group.lanes[0];
-                for job in rerouted {
-                    seed.stage(job);
+                if !lane.jobs.is_closed() {
+                    lane.jobs.close();
                 }
-                flush_staged(seed);
+                {
+                    let mut dl = dead_letter.lock().unwrap();
+                    while let Some(job) = lane.jobs.try_pop() {
+                        dl.push((
+                            group.bucket,
+                            job,
+                            format!("lane {} died before serving this job", group.bucket),
+                        ));
+                    }
+                }
+                rerouted.extend(lane.staged.drain(..));
+                group.retiring.push(lane);
             } else {
                 i += 1;
+            }
+        }
+        // A bucket that lost its last lane gets ONE replacement build
+        // per failure (blocking on the readiness handshake keeps this
+        // deterministic); if the rebuild itself fails the bucket is
+        // marked broken and fails fast instead of rebuilding forever.
+        if group.lanes.is_empty() && group.broken.is_none() {
+            match spawn_lane(factory, group.bucket, config, false, dead_letter) {
+                Ok((lane, ready_rx)) => match ready_rx.recv() {
+                    Ok(Ok(_shape)) => {
+                        for _ in 0..config.buffers_per_lane {
+                            let buf = group
+                                .spare_buffers
+                                .pop()
+                                .unwrap_or_else(|| Vec::with_capacity(group.bucket * example_len));
+                            let _ = lane.free.try_push(buf);
+                        }
+                        group.spawned += 1;
+                        group.lanes.push(lane);
+                    }
+                    Ok(Err(e)) => {
+                        group.broken = Some(format!("lane {} rebuild failed: {e}", group.bucket));
+                        group.retiring.push(lane);
+                    }
+                    Err(_) => {
+                        group.broken =
+                            Some(format!("lane {} died during rebuild", group.bucket));
+                        group.retiring.push(lane);
+                    }
+                },
+                Err(e) => {
+                    group.broken = Some(format!("lane {} rebuild failed: {e:#}", group.bucket));
+                }
+            }
+        }
+        if let Some(survivor) = group.lanes.first_mut() {
+            for job in rerouted {
+                survivor.stage(job);
+            }
+            flush_staged(survivor);
+        } else if !rerouted.is_empty() {
+            let msg = group
+                .broken
+                .clone()
+                .unwrap_or_else(|| format!("lane {} unavailable", group.bucket));
+            let mut dl = dead_letter.lock().unwrap();
+            for job in rerouted {
+                dl.push((group.bucket, job, msg.clone()));
             }
         }
         // Retire elastic lanes idle past the window (seed lane exempt).
@@ -745,6 +1013,7 @@ fn scale_groups(groups: &mut [LaneGroup], config: &LaneConfig) {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn dispatcher_thread<E, F>(
     admission: Bounded<Admit>,
     mut groups: Vec<LaneGroup>,
@@ -752,6 +1021,9 @@ fn dispatcher_thread<E, F>(
     example_len: usize,
     config: LaneConfig,
     factory: Arc<F>,
+    dead_letter: DeadLetter,
+    health: Arc<HealthState>,
+    report_tx: mpsc::Sender<ServingReport>,
 ) where
     E: InferEngine + 'static,
     F: Fn(usize) -> Result<E> + Send + Sync + 'static,
@@ -760,13 +1032,18 @@ fn dispatcher_thread<E, F>(
         groups.iter().enumerate().map(|(i, g)| (g.bucket, i)).collect();
     let mut batcher: Batcher<ReqToken> = Batcher::new(policy);
     let started = Instant::now();
-    let mut shutdown_reply: Option<mpsc::Sender<ServingReport>> = None;
-    // Admission closed (by shutdown or by the server handle dropping).
+    // Admission closed (by shutdown/drain or the server handle dropping).
     let mut closed = false;
     // Last form pass hit a saturated lane: poll instead of spinning on
     // the (already-passed) batcher deadline.
     let mut stalled = false;
     let mut last_scale = Instant::now();
+    // Requests rejected before reaching any lane (malformed inputs,
+    // unknown buckets) — folded into the report so accounting closes.
+    let mut misc_failed = 0usize;
+    // Dead-lettered jobs waiting out their retry backoff before being
+    // re-admitted to a replacement lane.
+    let mut retry_backlog: Vec<(Instant, usize, LaneJob)> = Vec::new();
 
     'outer: loop {
         for group in &mut groups {
@@ -779,8 +1056,54 @@ fn dispatcher_thread<E, F>(
         // (resetting it every admitted message would erase the signal
         // before it could ever reach scale_up_backlog).
         if last_scale.elapsed() >= SCALE_POLL {
-            scale_groups(&mut groups, &config);
+            scale_groups(&mut groups, &config, example_len, &factory, &dead_letter);
+            health.set_degraded(
+                groups.iter().filter(|g| g.broken.is_some()).map(|g| g.bucket).collect(),
+            );
             last_scale = Instant::now();
+        }
+
+        // --- Supervision: re-admit dead-lettered jobs and due retries. ---
+        let dead: Vec<(usize, LaneJob, String)> =
+            std::mem::take(&mut *dead_letter.lock().unwrap());
+        for (bucket, job, msg) in dead {
+            let group = &mut groups[group_index[&bucket]];
+            if job.attempts > config.retry.max_retries || group.broken.is_some() {
+                group.stat.failed += fail_job(job, &msg);
+            } else {
+                if job.attempts > 0 {
+                    group.stat.retries += 1;
+                }
+                retry_backlog.push((Instant::now() + config.retry.backoff, bucket, job));
+            }
+        }
+        if !retry_backlog.is_empty() {
+            let now = Instant::now();
+            let mut i = 0;
+            while i < retry_backlog.len() {
+                if retry_backlog[i].0 > now {
+                    i += 1;
+                    continue;
+                }
+                let gi = group_index[&retry_backlog[i].1];
+                if groups[gi].lanes.is_empty() {
+                    if let Some(msg) = groups[gi].broken.clone() {
+                        let (_, _, job) = retry_backlog.swap_remove(i);
+                        groups[gi].stat.failed += fail_job(job, &msg);
+                    } else {
+                        // Replacement lane still rebuilding: keep waiting.
+                        i += 1;
+                    }
+                    continue;
+                }
+                let (_, _, job) = retry_backlog.swap_remove(i);
+                let group = &mut groups[gi];
+                let li = group.pick_lane();
+                // Deliberately bypasses the stage cap: re-admitted work
+                // was already accounted once and must not be load-shed.
+                group.lanes[li].stage(job);
+                flush_staged(&mut group.lanes[li]);
+            }
         }
 
         // --- Wait for the next admission event. ---
@@ -790,6 +1113,38 @@ fn dispatcher_thread<E, F>(
         // periodic scaling passes; static deployments never poll for it.
         let elastic_active =
             groups.iter().any(|g| g.lanes.len() > 1 || !g.retiring.is_empty());
+        // While anything is in flight, a lane could die and dead-letter
+        // its work with no admission event to wake us — bound the wait
+        // so the supervision pass always runs soon after. A fully idle
+        // server still blocks indefinitely.
+        let supervision = !retry_backlog.is_empty()
+            || groups.iter().any(|g| {
+                g.broken.is_some()
+                    || !g.retiring.is_empty()
+                    || g.lanes.iter().any(|l| l.in_flight() > 0)
+            });
+        if !closed && admission.is_closed() {
+            // The server handle closed the door (shutdown, drain, or
+            // drop): flush everything that got in before it shut — a
+            // request whose push succeeded is never dropped, and never
+            // load-shed (uncapped stage), since no new work can arrive
+            // to justify backpressure.
+            closed = true;
+            while let Some(m) = admission.try_pop() {
+                admit_one(
+                    m,
+                    &mut groups,
+                    &group_index,
+                    &mut batcher,
+                    example_len,
+                    usize::MAX,
+                    &config,
+                    &factory,
+                    &dead_letter,
+                    &mut misc_failed,
+                );
+            }
+        }
         let msg = if closed {
             // Nothing left to pop; poll the drain forward.
             std::thread::sleep(POLL);
@@ -809,7 +1164,7 @@ fn dispatcher_thread<E, F>(
                 // saturated; waiting on it again would spin.
                 deadline = Some(Instant::now() + POLL);
             }
-            if elastic_active {
+            if elastic_active || supervision {
                 let scale_at = Instant::now() + SCALE_POLL;
                 deadline = Some(deadline.map_or(scale_at, |d| d.min(scale_at)));
             }
@@ -828,45 +1183,23 @@ fn dispatcher_thread<E, F>(
                 },
             }
         };
-        match msg {
-            Some(Admit::Shutdown { reply }) => {
-                // Close the door first, then flush everything that got
-                // in before it shut: a request whose push succeeded is
-                // never dropped — and never load-shed (uncapped stage),
-                // since no new work can arrive to justify backpressure.
-                admission.close();
-                closed = true;
-                while let Some(m) = admission.try_pop() {
-                    admit_one(
-                        m,
-                        &mut groups,
-                        &group_index,
-                        &mut batcher,
-                        example_len,
-                        usize::MAX,
-                        &config,
-                        &factory,
-                    );
-                }
-                shutdown_reply = Some(reply);
-            }
-            Some(m) => {
-                admit_one(
-                    m,
-                    &mut groups,
-                    &group_index,
-                    &mut batcher,
-                    example_len,
-                    config.lane_cap,
-                    &config,
-                    &factory,
-                );
-            }
-            None => {}
+        if let Some(m) = msg {
+            admit_one(
+                m,
+                &mut groups,
+                &group_index,
+                &mut batcher,
+                example_len,
+                config.lane_cap,
+                &config,
+                &factory,
+                &dead_letter,
+                &mut misc_failed,
+            );
         }
 
         // --- Form ready batches and route them (never blocking). ---
-        let shutting = closed || shutdown_reply.is_some();
+        let shutting = closed;
         stalled = false;
         loop {
             let now = Instant::now();
@@ -879,6 +1212,19 @@ fn dispatcher_thread<E, F>(
             let Some((_, bucket)) = batcher.plan_next() else { break };
             let gi = group_index[&bucket];
             let group = &mut groups[gi];
+            if group.lanes.is_empty() {
+                // The bucket is broken (its last lane died and the
+                // rebuild failed): resolve its requests instead of
+                // leaving them in the batcher forever.
+                let Some(msg) = group.broken.clone() else { break };
+                let mut buf = Vec::new();
+                let Some(formed) = batcher.form_with(example_len, &mut buf) else { break };
+                for (tok, _) in formed.tokens {
+                    let _ = tok.reply.send(Err(msg.clone()));
+                    group.stat.failed += 1;
+                }
+                continue;
+            }
             let mut li = group.pick_lane();
             if group.lanes[li].staged.len() >= config.lane_cap
                 || group.lanes[li].free.is_empty()
@@ -886,7 +1232,7 @@ fn dispatcher_thread<E, F>(
                 // Saturated (stage full, or every pooled buffer in
                 // flight): grow the group if the policy allows,
                 // otherwise the requests wait in the batcher.
-                match maybe_spawn(group, &config, example_len, &factory) {
+                match maybe_spawn(group, &config, example_len, &factory, &dead_letter) {
                     Some(fresh) => li = fresh,
                     None => {
                         stalled = true;
@@ -913,6 +1259,8 @@ fn dispatcher_thread<E, F>(
                 tokens: formed.tokens,
                 batch: None,
                 routed: Instant::now(),
+                attempts: 0,
+                done: Vec::new(),
             });
             flush_staged(lane);
         }
@@ -920,6 +1268,8 @@ fn dispatcher_thread<E, F>(
         if shutting
             && batcher.pending() == 0
             && groups.iter().all(|g| g.lanes.iter().all(|l| l.staged.is_empty()))
+            && retry_backlog.is_empty()
+            && dead_letter.lock().unwrap().is_empty()
         {
             break 'outer;
         }
@@ -931,20 +1281,33 @@ fn dispatcher_thread<E, F>(
             lane.jobs.close();
         }
     }
+    for group in &mut groups {
+        let lanes: Vec<Lane> =
+            group.lanes.drain(..).chain(group.retiring.drain(..)).collect();
+        for lane in lanes {
+            group.fold_joined(lane);
+        }
+    }
+    // A lane that died while we were exiting may have dead-lettered its
+    // work after the last supervision pass; every lane thread is joined
+    // now, so whatever is here is final — resolve it as failed.
+    for (bucket, job, msg) in dead_letter.lock().unwrap().drain(..) {
+        groups[group_index[&bucket]].stat.failed += fail_job(job, &msg);
+    }
+    for (_, _, job) in retry_backlog.drain(..) {
+        misc_failed += fail_job(job, "server shut down before the retry could run");
+    }
     let mut lane_stats = Vec::with_capacity(groups.len());
     let mut all_latencies: Vec<f64> = Vec::new();
     let (mut n_requests, mut n_batches, mut fill_sum) = (0usize, 0usize, 0usize);
     for mut group in groups {
-        for lane in group.lanes.drain(..).chain(group.retiring.drain(..)).collect::<Vec<_>>() {
-            group.fold_joined(lane);
-        }
         let mut stat = group.stat;
         stat.lanes_spawned = group.spawned;
         stat.lanes_retired = group.retired;
         n_requests += stat.n_requests;
         n_batches += stat.n_batches;
         fill_sum += group.fill_sum;
-        all_latencies.extend(group.latencies);
+        all_latencies.append(&mut group.latencies);
         lane_stats.push(stat);
     }
     let report = ServingReport {
@@ -958,11 +1321,11 @@ fn dispatcher_thread<E, F>(
         },
         mean_batch_fill: if n_batches == 0 { 0.0 } else { fill_sum as f64 / n_batches as f64 },
         deadline_shed: lane_stats.iter().map(|l| l.deadline_shed).sum(),
+        failed: lane_stats.iter().map(|l| l.failed).sum::<usize>() + misc_failed,
+        retries: lane_stats.iter().map(|l| l.retries).sum(),
         lanes: lane_stats,
     };
-    if let Some(reply) = shutdown_reply {
-        let _ = reply.send(report);
-    }
+    let _ = report_tx.send(report);
 }
 
 /// Cloneable, `Send` request handle to a [`LaneServer`].
@@ -972,11 +1335,18 @@ pub struct LaneClient {
     example_len: usize,
     output_len: usize,
     batch_sizes: Vec<usize>,
+    health: Arc<HealthState>,
 }
 
 impl LaneClient {
     pub fn example_len(&self) -> usize {
         self.example_len
+    }
+
+    /// Liveness probe: `Draining` once shutdown began, `Degraded` while
+    /// any bucket is failing fast after losing its lanes for good.
+    pub fn health(&self) -> Health {
+        self.health.snapshot()
     }
 
     pub fn output_len(&self) -> usize {
@@ -1088,6 +1458,8 @@ pub struct LaneServer {
     example_len: usize,
     output_len: usize,
     batch_sizes: Vec<usize>,
+    health: Arc<HealthState>,
+    report_rx: mpsc::Receiver<ServingReport>,
 }
 
 impl LaneServer {
@@ -1117,11 +1489,13 @@ impl LaneServer {
         sizes.dedup();
         let factory = Arc::new(factory);
         let admission: Bounded<Admit> = Bounded::new(config.admission_cap);
+        let dead_letter: DeadLetter = Arc::new(Mutex::new(Vec::new()));
+        let health = HealthState::new();
 
         let mut lanes: Vec<Lane> = Vec::with_capacity(sizes.len());
         let mut readies = Vec::with_capacity(sizes.len());
         for &bucket in &sizes {
-            let (lane, ready_rx) = spawn_lane(&factory, bucket, &config, false)?;
+            let (lane, ready_rx) = spawn_lane(&factory, bucket, &config, false, &dead_letter)?;
             lanes.push(lane);
             readies.push(ready_rx);
         }
@@ -1175,12 +1549,24 @@ impl LaneServer {
             lanes.into_iter().map(|lane| LaneGroup::new(lane.bucket, lane)).collect();
 
         let policy = BatchPolicy { batch_sizes: sizes.clone(), max_wait: config.max_wait };
+        let (report_tx, report_rx) = mpsc::channel();
         let dispatcher = {
             let admission = admission.clone();
+            let health = Arc::clone(&health);
             std::thread::Builder::new()
                 .name("nimble-dispatch".into())
                 .spawn(move || {
-                    dispatcher_thread(admission, groups, policy, example_len, config, factory)
+                    dispatcher_thread(
+                        admission,
+                        groups,
+                        policy,
+                        example_len,
+                        config,
+                        factory,
+                        dead_letter,
+                        health,
+                        report_tx,
+                    )
                 })
                 .context("spawning dispatcher thread")?
         };
@@ -1190,6 +1576,8 @@ impl LaneServer {
             example_len,
             output_len,
             batch_sizes: sizes,
+            health,
+            report_rx,
         })
     }
 
@@ -1290,7 +1678,14 @@ impl LaneServer {
             example_len: self.example_len,
             output_len: self.output_len,
             batch_sizes: self.batch_sizes.clone(),
+            health: Arc::clone(&self.health),
         }
+    }
+
+    /// Liveness probe: `Draining` once shutdown began, `Degraded` while
+    /// any bucket is failing fast after losing its lanes for good.
+    pub fn health(&self) -> Health {
+        self.health.snapshot()
     }
 
     /// Blocking inference of one example.
@@ -1323,14 +1718,15 @@ impl LaneServer {
         self.client().submit_batch_raw(bucket, input, None)
     }
 
-    /// Stop the server: flush everything already admitted, join every
-    /// lane, and collect the per-lane serving report.
+    /// Stop the server: close admission (new submits fail fast with
+    /// "server stopped"), flush everything already admitted, join every
+    /// lane, and collect the per-lane serving report. This IS the
+    /// graceful drain — `Runtime::drain()` and `Runtime::shutdown()`
+    /// both land here.
     pub fn shutdown(mut self) -> Result<ServingReport> {
-        let (reply, rx) = mpsc::channel();
-        self.admission
-            .push(Admit::Shutdown { reply })
-            .map_err(|_| anyhow::anyhow!("server already stopped"))?;
-        let report = rx.recv().context("no report from dispatcher")?;
+        self.health.set_draining();
+        self.admission.close();
+        let report = self.report_rx.recv().context("no report from dispatcher")?;
         if let Some(j) = self.dispatcher.take() {
             let _ = j.join();
         }
@@ -1342,6 +1738,7 @@ impl Drop for LaneServer {
     fn drop(&mut self) {
         // Dropping without shutdown still drains admitted work and joins
         // every lane thread (the dispatcher sees the closed queue).
+        self.health.set_draining();
         self.admission.close();
         if let Some(j) = self.dispatcher.take() {
             let _ = j.join();
@@ -1600,5 +1997,57 @@ mod tests {
         });
         assert!(r.is_err());
         assert!(format!("{:#}", r.err().unwrap()).contains("injected build failure"));
+    }
+
+    #[test]
+    fn poisoned_lane_is_replaced_and_later_requests_succeed() {
+        use crate::fault::{FaultPlan, ReplayFault, RetryPolicy};
+        // The regression this pins: before lane supervision, a replay
+        // context poisoned by one timed-out join failed every later
+        // request on that lane forever. Now the lane dead-letters its
+        // work and retires, the dispatcher rebuilds a replacement, and
+        // the wedged request is retried there.
+        //
+        // Deterministic seed search: the runtime derives the bucket-1
+        // replay fault stream as plan.derive(1 ^ REPLAY_SALT); pick a
+        // seed whose stream wedges exactly at replay 2 and nowhere else
+        // among the first 40, so the replacement lane (a fresh injector,
+        // replay indices restarting at 0) never wedges again within this
+        // test's four requests.
+        let plan_for = |seed: u64| FaultPlan { join_timeout: 0.08, ..FaultPlan::seeded(seed) };
+        let seed = (0..20_000u64)
+            .find(|&s| {
+                let replays = plan_for(s).derive(1u64 ^ FaultPlan::REPLAY_SALT);
+                replays.replay_fault(2) == Some(ReplayFault::JoinTimeout)
+                    && (0..40).filter(|&j| j != 2).all(|j| replays.replay_fault(j).is_none())
+            })
+            .expect("a seed that wedges only replay 2");
+
+        let server = Runtime::builder()
+            .model("mini_inception")
+            .buckets(&[1])
+            .max_wait(Duration::from_micros(200))
+            .fault_plan(plan_for(seed))
+            .retry_policy(RetryPolicy { max_retries: 2, backoff: Duration::ZERO })
+            .build()
+            .expect("chaos lane server");
+        let len = server.example_len();
+        let mut direct = direct_engine(&[1]);
+        // Sequential blocking submits pin the replay order: requests 0-1
+        // succeed on the seed lane, request 2 poisons it (retried on the
+        // replacement), request 3 lands on the replacement directly.
+        for input in inputs(4, len, 77) {
+            let want = direct.infer_batch(1, &input).unwrap();
+            let got = server.infer(InferRequest::new(input)).unwrap();
+            assert_eq!(got, want, "recovered outputs stay bit-identical to the oracle");
+        }
+        assert!(matches!(server.health(), crate::serving::Health::Healthy));
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.n_requests, 4, "every request must be served");
+        assert_eq!(report.failed, 0, "the wedged request is retried, not failed");
+        assert!(report.retries >= 1, "recovery must count at least one retry");
+        let lane1 = report.lane(1).unwrap();
+        assert!(lane1.lanes_spawned >= 2, "a replacement lane must have been built");
+        assert!(lane1.lanes_retired >= 1, "the poisoned lane must have been retired");
     }
 }

@@ -34,11 +34,20 @@ pub struct LaneStat {
     /// ([`RequestOptions::deadline`](crate::serving::RequestOptions))
     /// expired while they waited (staged or queued) — resolved as
     /// [`InferOutcome::DeadlineShed`](crate::serving::InferOutcome),
-    /// never executed. `n_requests` counts completions only, so
-    /// `n_requests + deadline_shed` accounts every admitted request
-    /// that did not fail outright (load-shed overload replies and
-    /// engine errors are resolved as `Failed` and counted in neither).
+    /// never executed. `n_requests` counts completions only; requests
+    /// that fail outright (overload load-shed, engine errors after the
+    /// retry budget, lane death) are counted in
+    /// [`failed`](Self::failed), closing the invariant
+    /// `admitted == n_requests + deadline_shed + failed`.
     pub deadline_shed: usize,
+    /// Requests resolved as [`InferOutcome::Failed`](crate::serving::InferOutcome):
+    /// overload load-shed replies, engine errors that exhausted the
+    /// [`RetryPolicy`](crate::fault::RetryPolicy), and jobs orphaned by
+    /// a dead lane that could not be recovered.
+    pub failed: usize,
+    /// Batch re-executions after a transient engine failure (each
+    /// counts one extra `infer_batch` attempt beyond the first).
+    pub retries: usize,
     /// Lanes ever spawned for this bucket (the seed lane counts, so ≥ 1
     /// on a live report; elastic scale-ups add to it).
     pub lanes_spawned: usize,
@@ -66,6 +75,8 @@ impl LaneStat {
             mean_queue_wait_s: 0.0,
             alloc_events: 0,
             deadline_shed: 0,
+            failed: 0,
+            retries: 0,
             lanes_spawned: 0,
             lanes_retired: 0,
             steals: 0,
@@ -89,6 +100,8 @@ impl LaneStat {
         self.busy_s += other.busy_s;
         self.alloc_events += other.alloc_events;
         self.deadline_shed += other.deadline_shed;
+        self.failed += other.failed;
+        self.retries += other.retries;
         self.steals += other.steals;
         if self.n_streams.is_none() {
             self.n_streams = other.n_streams;
@@ -100,7 +113,7 @@ impl LaneStat {
 
     pub fn render(&self) -> String {
         format!(
-            "lane[bucket={}]: batches={} requests={} busy={} qwait={}{}{}{}{}{}{}",
+            "lane[bucket={}]: batches={} requests={} busy={} qwait={}{}{}{}{}{}{}{}{}",
             self.bucket,
             self.n_batches,
             self.n_requests,
@@ -125,6 +138,8 @@ impl LaneStat {
             } else {
                 String::new()
             },
+            if self.failed > 0 { format!(" failed={}", self.failed) } else { String::new() },
+            if self.retries > 0 { format!(" retries={}", self.retries) } else { String::new() },
             if self.steals > 0 { format!(" steals={}", self.steals) } else { String::new() },
             if self.alloc_events > 0 {
                 format!(" ALLOC_EVENTS={}", self.alloc_events)
@@ -139,9 +154,10 @@ impl LaneStat {
 #[derive(Debug, Clone)]
 pub struct ServingReport {
     /// Requests completed. Deadline-shed requests are counted
-    /// separately in [`deadline_shed`](Self::deadline_shed); requests
-    /// resolved as errors (overload load-shed, engine failures) are in
-    /// neither count.
+    /// separately in [`deadline_shed`](Self::deadline_shed) and
+    /// requests resolved as errors in [`failed`](Self::failed), so
+    /// every admitted request lands in exactly one of the three
+    /// counts: `admitted == n_requests + deadline_shed + failed`.
     pub n_requests: usize,
     pub n_batches: usize,
     pub wall_time: Duration,
@@ -151,6 +167,12 @@ pub struct ServingReport {
     /// Requests shed because their deadline expired while they waited
     /// (sum over lanes for the lane scheduler).
     pub deadline_shed: usize,
+    /// Requests resolved as `Failed` (sum over lanes): overload
+    /// load-shed, engine errors past the retry budget, lane death.
+    pub failed: usize,
+    /// Batch re-executions after transient engine failures (sum over
+    /// lanes).
+    pub retries: usize,
     /// Per-bucket lane breakdown (empty for the single-engine-thread
     /// server, one entry per bucket for the lane scheduler).
     pub lanes: Vec<LaneStat>,
@@ -189,10 +211,18 @@ impl ServingReport {
             self.n_requests,
             self.n_batches,
             self.mean_batch_fill,
-            if self.deadline_shed > 0 {
-                format!("  shed={}", self.deadline_shed)
-            } else {
-                String::new()
+            {
+                let mut extra = String::new();
+                if self.deadline_shed > 0 {
+                    extra.push_str(&format!("  shed={}", self.deadline_shed));
+                }
+                if self.failed > 0 {
+                    extra.push_str(&format!("  failed={}", self.failed));
+                }
+                if self.retries > 0 {
+                    extra.push_str(&format!("  retries={}", self.retries));
+                }
+                extra
             },
             fmt_secs(self.wall_time.as_secs_f64()),
             self.throughput_rps(),
@@ -222,6 +252,8 @@ mod tests {
             latency: Summary::from_samples(vec![0.01; 100]),
             mean_batch_fill: 5.0,
             deadline_shed: 0,
+            failed: 0,
+            retries: 0,
             lanes: Vec::new(),
         };
         assert!((r.throughput_rps() - 50.0).abs() < 1e-9);
@@ -229,6 +261,7 @@ mod tests {
         assert!(s.contains("requests=100"));
         assert!(s.contains("p99"));
         assert!(!s.contains("shed="), "no shed counter rendered when nothing shed");
+        assert!(!s.contains("failed="), "no failure counter rendered when nothing failed");
     }
 
     #[test]
@@ -240,6 +273,8 @@ mod tests {
             latency: Summary::from_samples(vec![0.01; 10]),
             mean_batch_fill: 2.5,
             deadline_shed: 3,
+            failed: 2,
+            retries: 1,
             lanes: vec![
                 LaneStat {
                     n_streams: Some(2),
@@ -259,6 +294,8 @@ mod tests {
                     lanes_spawned: 3,
                     lanes_retired: 2,
                     deadline_shed: 3,
+                    failed: 2,
+                    retries: 1,
                     steals: 5,
                     ..LaneStat::empty(8)
                 },
@@ -273,6 +310,8 @@ mod tests {
         assert!(s.contains("arena=1536B"));
         assert!(s.contains("lanes=1/3 retired=2"), "scaling decisions must render: {s}");
         assert!(s.contains("shed=3"), "deadline sheds must render: {s}");
+        assert!(s.contains("failed=2"), "failures must render: {s}");
+        assert!(s.contains("retries=1"), "retries must render: {s}");
         assert!(s.contains("steals=5"));
     }
 
@@ -296,6 +335,8 @@ mod tests {
             mean_queue_wait_s: 0.002,
             alloc_events: 1,
             deadline_shed: 2,
+            failed: 3,
+            retries: 2,
             steals: 1,
             ..LaneStat::empty(4)
         });
@@ -305,6 +346,8 @@ mod tests {
         assert!((agg.mean_queue_wait_s - 0.008).abs() < 1e-12, "batch-weighted mean");
         assert_eq!(agg.alloc_events, 1);
         assert_eq!(agg.deadline_shed, 2);
+        assert_eq!(agg.failed, 3);
+        assert_eq!(agg.retries, 2);
         assert_eq!(agg.steals, 3);
         assert_eq!(agg.n_streams, Some(2), "first known shape wins");
         assert_eq!(agg.reserved_bytes, Some(4096));

@@ -34,6 +34,15 @@
 //! virtual substrate (always available), the PJRT `NimbleEngine` with
 //! the `xla` feature (per-lane instances via `NimbleEngine::build_for`).
 //!
+//! Failure semantics: every admitted request resolves exactly once —
+//! output, [`InferOutcome::DeadlineShed`], or [`InferOutcome::Failed`].
+//! Lane supervision retries transient engine failures under a bounded
+//! [`RetryPolicy`], replaces lanes whose contexts were poisoned, and
+//! [`Runtime::drain`] flushes everything before the final report.
+//! Seeded chaos ([`FaultPlan`] via `builder().fault_plan(..)`) makes
+//! all of it deterministic and testable; [`Runtime::health`] /
+//! [`RuntimeHandle::health`] expose the [`Health`] probe.
+//!
 //! The pre-façade constructors (`TapeEngine::new` …,
 //! `LaneServer::start*`, `NimbleServer::start*`) and per-client method
 //! variants (`infer`/`infer_hinted`/`infer_async`/`infer_hinted_async`/
@@ -52,9 +61,10 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use lanes::{LaneClient, LaneConfig, LaneServer, ScaleOptions};
 pub use metrics::{LaneStat, ServingReport};
 pub use queue::Bounded;
+pub use crate::fault::{ChaosEngine, FaultPlan, RetryPolicy};
 pub use runtime::{
-    InferOutcome, InferRequest, RequestOptions, Runtime, RuntimeBuilder, RuntimeHandle, Ticket,
-    DEADLINE_SHED,
+    Health, InferOutcome, InferRequest, RequestOptions, Runtime, RuntimeBuilder, RuntimeHandle,
+    Ticket, DEADLINE_SHED,
 };
 pub use server::{NimbleServer, ServerClient, ServerConfig};
 pub use sim_engine::{TapeEngine, TapeEngineOptions};

@@ -50,13 +50,14 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::lanes::{LaneClient, LaneConfig, LaneServer, ScaleOptions};
+use super::lanes::{HealthState, LaneClient, LaneConfig, LaneServer, ScaleOptions};
 use super::metrics::ServingReport;
 use super::server::{NimbleServer, ServerClient};
 use super::sim_engine::{TapeEngine, TapeEngineOptions};
 use crate::aot::memory::ArenaPool;
 use crate::coordinator::InferEngine;
 use crate::engine::executor::SharedWorkerPool;
+use crate::fault::{ChaosEngine, FaultPlan, RetryPolicy};
 use crate::models;
 use crate::ops::OpGraph;
 
@@ -196,6 +197,19 @@ impl InferOutcome {
     }
 }
 
+/// Liveness probe ([`Runtime::health`] / [`RuntimeHandle::health`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Health {
+    /// Serving normally.
+    Healthy,
+    /// One or more buckets lost their lanes for good (the replacement
+    /// rebuild failed too) and fail fast; the rest serve normally.
+    Degraded { buckets: Vec<usize> },
+    /// [`Runtime::drain`] / shutdown began: admission rejects new work
+    /// while everything already admitted flushes.
+    Draining,
+}
+
 fn classify(reply: Result<Vec<f32>, String>) -> InferOutcome {
     match reply {
         Ok(v) => InferOutcome::Output(v),
@@ -220,25 +234,29 @@ impl Ticket {
         Ticket { rx }
     }
 
-    /// Block for the outcome. `Err` only if the server dropped the
-    /// reply channel (it never does for an admitted request).
+    /// Block for the outcome. A dropped reply channel (the server was
+    /// torn down before resolving the request) classifies as
+    /// [`InferOutcome::Failed`], not an `Err`: every submitted ticket
+    /// resolves exactly once no matter how the server dies.
     pub fn outcome(self) -> Result<InferOutcome> {
-        let reply = self.rx.recv().context("server dropped request")?;
-        Ok(classify(reply))
+        match self.rx.recv() {
+            Ok(reply) => Ok(classify(reply)),
+            Err(_) => Ok(InferOutcome::Failed("server dropped request".to_string())),
+        }
     }
 
-    /// Like [`outcome`](Self::outcome) with a wait bound; `Err` on
-    /// timeout (distinct from the server dropping the reply channel).
+    /// Like [`outcome`](Self::outcome) with a wait bound; `Err` only on
+    /// timeout (a dropped reply channel still resolves as `Failed`).
     pub fn outcome_timeout(self, timeout: Duration) -> Result<InferOutcome> {
-        let reply = self.rx.recv_timeout(timeout).map_err(|e| match e {
-            mpsc::RecvTimeoutError::Timeout => {
-                anyhow::anyhow!("timed out waiting for the request outcome")
+        match self.rx.recv_timeout(timeout) {
+            Ok(reply) => Ok(classify(reply)),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(anyhow::anyhow!("timed out waiting for the request outcome"))
             }
-            mpsc::RecvTimeoutError::Disconnected => {
-                anyhow::anyhow!("server dropped request")
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Ok(InferOutcome::Failed("server dropped request".to_string()))
             }
-        })?;
-        Ok(classify(reply))
+        }
     }
 
     /// Block for the output; shed and failed requests become errors
@@ -294,6 +312,7 @@ pub struct RuntimeBuilder {
     shared_pool: Option<PoolSpec>,
     single_thread: bool,
     serial: bool,
+    fault: Option<FaultPlan>,
 }
 
 impl Default for RuntimeBuilder {
@@ -309,6 +328,7 @@ impl Default for RuntimeBuilder {
             shared_pool: None,
             single_thread: false,
             serial: false,
+            fault: None,
         }
     }
 }
@@ -459,6 +479,29 @@ impl RuntimeBuilder {
         self
     }
 
+    /// Seeded, deterministic chaos: each lane's engine is wrapped in
+    /// [`ChaosEngine`] with a per-bucket derivation of `plan`, and its
+    /// replay executor injects `plan`'s replay-level faults (worker
+    /// deaths, arena exhaustion, poisoning join timeouts). Lane
+    /// supervision retries or replaces per
+    /// [`retry_policy`](Self::retry_policy); the DES predicts the
+    /// resulting counts ([`crate::sim::simulate_faults`]). Requires the
+    /// lane topology (the builder default).
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault = Some(plan);
+        self
+    }
+
+    /// Bounded, deadline-aware retry for transient lane failures
+    /// ([`LaneConfig::retry`]): a failed job is re-run up to
+    /// `max_retries` times (after `backoff`) as long as some of its
+    /// requests can still meet their deadlines, then resolved as
+    /// [`InferOutcome::Failed`].
+    pub fn retry_policy(mut self, retry: RetryPolicy) -> Self {
+        self.lane.retry = retry;
+        self
+    }
+
     fn engine_opts(&self) -> Result<TapeEngineOptions> {
         let shared_pool = match &self.shared_pool {
             None => None,
@@ -473,6 +516,7 @@ impl RuntimeBuilder {
             unshared_slots: self.unshared_slots,
             arena_pool: self.arena_pool.clone(),
             shared_pool,
+            fault: None,
         })
     }
 
@@ -489,6 +533,11 @@ impl RuntimeBuilder {
             !(self.single_thread && self.lane.scale.max_lanes_per_bucket != 1),
             "elastic scaling needs the lane topology: drop single_thread() or elastic()"
         );
+        anyhow::ensure!(
+            !(self.single_thread && self.fault.is_some()),
+            "fault_plan() needs the lane topology (supervision and retry live in the \
+             lanes): drop single_thread() or fault_plan()"
+        );
         #[cfg(feature = "xla")]
         if matches!(&self.source, Some(Source::Artifacts(_))) {
             anyhow::ensure!(
@@ -496,9 +545,10 @@ impl RuntimeBuilder {
                     && !self.unshared_slots
                     && self.arena_pool.is_none()
                     && self.shared_pool.is_none()
-                    && !self.serial,
-                "worker_cap/unshared_slots/arena_pool/shared_pool/serial_oracle are \
-                 tape-engine knobs; the PJRT artifact engines do not take them"
+                    && !self.serial
+                    && self.fault.is_none(),
+                "worker_cap/unshared_slots/arena_pool/shared_pool/serial_oracle/fault_plan \
+                 are tape-engine knobs; the PJRT artifact engines do not take them"
             );
         }
         let opts = self.engine_opts()?;
@@ -517,6 +567,25 @@ impl RuntimeBuilder {
                     };
                     NimbleServer::spawn(factory, self.lane.max_wait)
                         .map(Runtime::from_single)
+                } else if let Some(plan) = self.fault.clone() {
+                    // Chaos topology: the executor gets a per-bucket
+                    // derivation of the plan for replay-level faults,
+                    // and the engine is wrapped in ChaosEngine for
+                    // call-level errors/panics. Both derivations are
+                    // pure functions of (plan.seed, bucket), so a
+                    // respawned lane replays the same fault schedule.
+                    let factory = move |bucket: usize| {
+                        let mut opts = opts.clone();
+                        opts.fault =
+                            Some(plan.derive(bucket as u64 ^ FaultPlan::REPLAY_SALT));
+                        let e = TapeEngine::build_opts(&label, &[bucket], opts, |b| {
+                            (*build)(b)
+                        })?;
+                        let e = if serial { e.serial() } else { e };
+                        Ok(ChaosEngine::new(e, plan.derive(bucket as u64)))
+                    };
+                    LaneServer::start_inner(&self.buckets, factory, self.lane)
+                        .map(Runtime::from_lanes)
                 } else {
                     let factory = move |bucket: usize| {
                         let e = TapeEngine::build_opts(
@@ -552,6 +621,11 @@ impl RuntimeBuilder {
     /// differential-oracle path (compose with
     /// [`serial_oracle`](Self::serial_oracle)).
     pub fn build_engine(self) -> Result<TapeEngine> {
+        anyhow::ensure!(
+            self.fault.is_none(),
+            "fault_plan() applies to served lanes; wrap the bare engine in \
+             nimble::fault::ChaosEngine instead"
+        );
         let opts = self.engine_opts()?;
         let source = self
             .source
@@ -583,13 +657,20 @@ impl RuntimeBuilder {
             !self.single_thread,
             "build_with_factory uses the lane topology (per-bucket factories)"
         );
+        anyhow::ensure!(
+            self.fault.is_none(),
+            "build_with_factory owns engine construction; wrap its engines in \
+             nimble::fault::ChaosEngine instead of fault_plan()"
+        );
         LaneServer::start_inner(&self.buckets, factory, self.lane)
             .map(Runtime::from_lanes)
     }
 }
 
 enum ServerInner {
-    Single(NimbleServer),
+    /// The single topology has no supervisor, so the runtime owns its
+    /// health flag directly (only `Healthy`/`Draining` apply).
+    Single(NimbleServer, Arc<HealthState>),
     Lanes(LaneServer),
 }
 
@@ -607,8 +688,11 @@ pub struct Runtime {
 
 impl Runtime {
     fn from_single(server: NimbleServer) -> Runtime {
-        let handle = RuntimeHandle { inner: HandleInner::Single(server.client()) };
-        Runtime { inner: ServerInner::Single(server), handle }
+        let health = HealthState::new();
+        let handle = RuntimeHandle {
+            inner: HandleInner::Single(server.client(), Arc::clone(&health)),
+        };
+        Runtime { inner: ServerInner::Single(server, health), handle }
     }
 
     fn from_lanes(server: LaneServer) -> Runtime {
@@ -623,7 +707,7 @@ impl Runtime {
     /// Flattened input length of one example.
     pub fn example_len(&self) -> usize {
         match &self.inner {
-            ServerInner::Single(s) => s.example_len(),
+            ServerInner::Single(s, _) => s.example_len(),
             ServerInner::Lanes(s) => s.example_len(),
         }
     }
@@ -631,7 +715,7 @@ impl Runtime {
     /// Flattened output length of one example.
     pub fn output_len(&self) -> usize {
         match &self.inner {
-            ServerInner::Single(s) => s.output_len(),
+            ServerInner::Single(s, _) => s.output_len(),
             ServerInner::Lanes(s) => s.output_len(),
         }
     }
@@ -639,8 +723,19 @@ impl Runtime {
     /// Compiled batch buckets, ascending.
     pub fn batch_sizes(&self) -> &[usize] {
         match &self.inner {
-            ServerInner::Single(s) => s.batch_sizes(),
+            ServerInner::Single(s, _) => s.batch_sizes(),
             ServerInner::Lanes(s) => s.batch_sizes(),
+        }
+    }
+
+    /// Liveness probe: `Healthy`, `Degraded { buckets }` (a bucket lost
+    /// its lanes for good and fails fast), or `Draining` once
+    /// [`drain`](Self::drain)/[`shutdown`](Self::shutdown) began. Also
+    /// available on every [`RuntimeHandle`].
+    pub fn health(&self) -> Health {
+        match &self.inner {
+            ServerInner::Single(_, h) => h.snapshot(),
+            ServerInner::Lanes(s) => s.health(),
         }
     }
 
@@ -663,15 +758,32 @@ impl Runtime {
     /// engine/lane thread, and collect the serving report.
     pub fn shutdown(self) -> Result<ServingReport> {
         match self.inner {
-            ServerInner::Single(s) => s.shutdown(),
+            ServerInner::Single(s, health) => {
+                health.set_draining();
+                s.shutdown()
+            }
             ServerInner::Lanes(s) => s.shutdown(),
         }
+    }
+
+    /// Gracefully drain the runtime. Admission flips to reject-new
+    /// first (retained handles see submit errors and
+    /// [`Health::Draining`]), then everything already admitted —
+    /// staged partial batches, queued lane jobs, retry backlog — is
+    /// flushed or resolved, every lane/engine thread is joined, and the
+    /// final [`ServingReport`] is returned. After a drain every ticket
+    /// ever issued has resolved: output, deadline-shed, or failed.
+    ///
+    /// `drain` and [`shutdown`](Self::shutdown) are the same operation;
+    /// this is the serving-facing name.
+    pub fn drain(self) -> Result<ServingReport> {
+        self.shutdown()
     }
 }
 
 #[derive(Clone)]
 enum HandleInner {
-    Single(ServerClient),
+    Single(ServerClient, Arc<HealthState>),
     Lanes(LaneClient),
 }
 
@@ -685,14 +797,14 @@ pub struct RuntimeHandle {
 impl RuntimeHandle {
     pub fn example_len(&self) -> usize {
         match &self.inner {
-            HandleInner::Single(c) => c.example_len(),
+            HandleInner::Single(c, _) => c.example_len(),
             HandleInner::Lanes(c) => c.example_len(),
         }
     }
 
     pub fn output_len(&self) -> usize {
         match &self.inner {
-            HandleInner::Single(c) => c.output_len(),
+            HandleInner::Single(c, _) => c.output_len(),
             HandleInner::Lanes(c) => c.output_len(),
         }
     }
@@ -700,8 +812,17 @@ impl RuntimeHandle {
     /// Compiled batch buckets, ascending.
     pub fn batch_sizes(&self) -> &[usize] {
         match &self.inner {
-            HandleInner::Single(c) => c.batch_sizes(),
+            HandleInner::Single(c, _) => c.batch_sizes(),
             HandleInner::Lanes(c) => c.batch_sizes(),
+        }
+    }
+
+    /// Current [`Health`] of the runtime this handle points at (valid
+    /// even after the runtime was drained: it reports `Draining`).
+    pub fn health(&self) -> Health {
+        match &self.inner {
+            HandleInner::Single(_, h) => h.snapshot(),
+            HandleInner::Lanes(c) => c.health(),
         }
     }
 
@@ -743,7 +864,7 @@ impl RuntimeHandle {
                 HandleInner::Lanes(c) => {
                     c.submit_batch_raw(bucket, input, opts.deadline).map(Ticket::new)
                 }
-                HandleInner::Single(_) => anyhow::bail!(
+                HandleInner::Single(..) => anyhow::bail!(
                     "pre-formed batch requests need the lane topology \
                      (the builder default; this runtime is single_thread)"
                 ),
@@ -756,7 +877,7 @@ impl RuntimeHandle {
                 self.example_len()
             );
             match &self.inner {
-                HandleInner::Single(c) => {
+                HandleInner::Single(c, _) => {
                     c.submit_raw(input, opts.bucket_hint, opts.deadline).map(Ticket::new)
                 }
                 HandleInner::Lanes(c) => {
@@ -887,5 +1008,109 @@ mod tests {
     fn builder_requires_a_source() {
         assert!(Runtime::builder().build().is_err());
         assert!(Runtime::builder().buckets(&[1]).build_engine().is_err());
+    }
+
+    #[test]
+    fn dropped_reply_channels_resolve_tickets_as_failed() {
+        let failed = InferOutcome::Failed("server dropped request".to_string());
+        let (tx, rx) = mpsc::channel::<Result<Vec<f32>, String>>();
+        drop(tx);
+        assert_eq!(Ticket::new(rx).outcome().unwrap(), failed);
+        let (tx, rx) = mpsc::channel::<Result<Vec<f32>, String>>();
+        drop(tx);
+        assert_eq!(
+            Ticket::new(rx).outcome_timeout(Duration::from_millis(50)).unwrap(),
+            failed
+        );
+        // A still-pending (not dropped) channel times out as an error,
+        // distinct from resolution.
+        let (_tx, rx) = mpsc::channel::<Result<Vec<f32>, String>>();
+        assert!(Ticket::new(rx).outcome_timeout(Duration::from_millis(10)).is_err());
+    }
+
+    #[test]
+    fn drain_flushes_admitted_work_then_rejects_new_submissions() {
+        let rt = Runtime::builder()
+            .model("mini_inception")
+            .buckets(&[1, 4])
+            .max_wait(Duration::from_micros(200))
+            .build()
+            .unwrap();
+        assert_eq!(rt.health(), Health::Healthy);
+        let len = rt.example_len();
+        let tickets: Vec<Ticket> = inputs(6, len, 31)
+            .into_iter()
+            .map(|i| rt.submit(InferRequest::new(i)).unwrap())
+            .collect();
+        let handle = rt.handle();
+        let report = rt.drain().unwrap();
+        // Everything admitted before the drain was served, not dropped.
+        for t in tickets {
+            assert!(matches!(t.outcome().unwrap(), InferOutcome::Output(_)));
+        }
+        assert_eq!(report.n_requests, 6);
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.deadline_shed, 0);
+        // The drained runtime rejects new work and reports Draining on
+        // retained handles.
+        assert_eq!(handle.health(), Health::Draining);
+        assert!(handle.submit(InferRequest::new(vec![0.0; len])).is_err());
+    }
+
+    #[test]
+    fn single_topology_drain_reports_draining_via_the_handle() {
+        let rt = Runtime::builder()
+            .model("mini_inception")
+            .buckets(&[1])
+            .single_thread()
+            .build()
+            .unwrap();
+        let handle = rt.handle();
+        assert_eq!(handle.health(), Health::Healthy);
+        let _ = rt.drain().unwrap();
+        assert_eq!(handle.health(), Health::Draining);
+    }
+
+    #[test]
+    fn fault_plan_is_rejected_off_the_lane_topology() {
+        let err = Runtime::builder()
+            .model("mini_inception")
+            .single_thread()
+            .fault_plan(FaultPlan::seeded(7))
+            .build();
+        assert!(err.is_err());
+        let err = Runtime::builder()
+            .model("mini_inception")
+            .fault_plan(FaultPlan::seeded(7))
+            .build_engine();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn chaos_engine_faults_surface_as_failed_and_are_counted() {
+        // Every engine call errors and no retries are allowed, so the
+        // one request must fail with the injected marker and be counted
+        // in the report without inflating n_requests.
+        let plan = FaultPlan { engine_error: 1.0, ..FaultPlan::seeded(3) };
+        let rt = Runtime::builder()
+            .model("mini_inception")
+            .buckets(&[1])
+            .max_wait(Duration::from_micros(200))
+            .fault_plan(plan)
+            .retry_policy(RetryPolicy { max_retries: 0, backoff: Duration::ZERO })
+            .build()
+            .unwrap();
+        let len = rt.example_len();
+        let out =
+            rt.submit(InferRequest::new(vec![0.3; len])).unwrap().outcome().unwrap();
+        match out {
+            InferOutcome::Failed(msg) => {
+                assert!(msg.contains(crate::fault::INJECTED), "got: {msg}")
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        let report = rt.shutdown().unwrap();
+        assert_eq!(report.failed, 1);
+        assert_eq!(report.n_requests, 0);
     }
 }

@@ -288,9 +288,11 @@ fn engine_thread<E: InferEngine>(
     let mut n_batches = 0usize;
     let mut fill_sum = 0usize;
     let mut deadline_shed = 0usize;
+    let mut failed = 0usize;
     let mut shutdown_reply: Option<mpsc::Sender<ServingReport>> = None;
 
     let admit = |batcher: &mut Batcher<ReqToken>,
+                 failed: &mut usize,
                  input: Vec<f32>,
                  hint: Option<usize>,
                  deadline: Option<Instant>,
@@ -298,6 +300,7 @@ fn engine_thread<E: InferEngine>(
         if input.len() != example_len {
             let _ =
                 reply.send(Err(format!("bad input length {} != {example_len}", input.len())));
+            *failed += 1;
         } else {
             batcher.push_hinted(ReqToken { reply, deadline }, input, hint);
         }
@@ -322,7 +325,7 @@ fn engine_thread<E: InferEngine>(
         };
         match msg {
             Some(Msg::Infer { input, hint, deadline, reply }) => {
-                admit(&mut batcher, input, hint, deadline, reply);
+                admit(&mut batcher, &mut failed, input, hint, deadline, reply);
             }
             Some(Msg::Shutdown { reply }) => {
                 shutdown_reply = Some(reply);
@@ -333,7 +336,7 @@ fn engine_thread<E: InferEngine>(
                 while let Ok(m) = rx.try_recv() {
                     match m {
                         Msg::Infer { input, hint, deadline, reply } => {
-                            admit(&mut batcher, input, hint, deadline, reply);
+                            admit(&mut batcher, &mut failed, input, hint, deadline, reply);
                         }
                         Msg::Shutdown { .. } => {}
                     }
@@ -385,6 +388,7 @@ fn engine_thread<E: InferEngine>(
                     for ((tok, _), is_shed) in fb.tokens.into_iter().zip(shed) {
                         if !is_shed {
                             let _ = tok.reply.send(Err(format!("{err:#}")));
+                            failed += 1;
                         }
                     }
                 }
@@ -407,6 +411,8 @@ fn engine_thread<E: InferEngine>(
         },
         mean_batch_fill: if n_batches == 0 { 0.0 } else { fill_sum as f64 / n_batches as f64 },
         deadline_shed,
+        failed,
+        retries: 0,
         lanes: Vec::new(),
     };
     if let Some(reply) = shutdown_reply {

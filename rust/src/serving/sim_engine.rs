@@ -57,6 +57,10 @@ pub struct TapeEngineOptions {
     /// lanes × streams never exceed the pool's worker count. Takes
     /// precedence over `worker_cap`.
     pub shared_pool: Option<SharedWorkerPool>,
+    /// Seeded replay-level fault injection for every context
+    /// ([`ExecOptions::fault`]); `Runtime::builder().fault_plan(..)`
+    /// derives one independent stream per bucket before building.
+    pub fault: Option<crate::fault::FaultPlan>,
 }
 
 /// One independent replay context per compiled batch bucket.
@@ -181,6 +185,7 @@ impl TapeEngine {
                         unshared_slots: opts.unshared_slots,
                         arena_pool: opts.arena_pool.clone(),
                         shared_pool: opts.shared_pool.clone(),
+                        fault: opts.fault.clone(),
                         ..Default::default()
                     },
                 ),

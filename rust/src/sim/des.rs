@@ -827,6 +827,151 @@ pub fn simulate_scaling(
     ScalingResult { per_bucket, elastic_total_s, static_total_s }
 }
 
+/// One lane's chaos traffic for [`simulate_faults`]: deadline traffic
+/// ([`LaneTraffic`]-shaped) plus the lane's seeded engine-fault
+/// schedule and retry policy.
+pub struct FaultTraffic<'a> {
+    pub tape: &'a crate::aot::tape::ReplayTape,
+    pub costs: &'a [KernelCost],
+    /// Batch arrivals, ascending: `(arrival_s, absolute deadline_s)`
+    /// (`f64::INFINITY` = no deadline).
+    pub batches: &'a [(f64, f64)],
+    /// The engine-level fault schedule this lane's `ChaosEngine` rolls
+    /// — already derived for the lane's bucket
+    /// (`FaultPlan::derive(bucket)`), exactly as the runtime builder
+    /// derives it.
+    pub plan: crate::fault::FaultPlan,
+    /// Mirror of the live `RetryPolicy`: re-executions allowed per
+    /// batch after its first attempt.
+    pub max_retries: u32,
+    /// Mirror of the live `RetryPolicy::backoff`, in seconds.
+    pub backoff_s: f64,
+}
+
+/// Per-lane prediction of [`simulate_faults`].
+#[derive(Debug, Clone)]
+pub struct FaultLaneStat {
+    /// Per-batch service time of this lane's tape (single-lane DES
+    /// latency, [`simulate_tape`]`.total_s`).
+    pub service_s: f64,
+    /// Batches that eventually completed (possibly after retries).
+    pub completed: usize,
+    /// Batches that exhausted their retry budget (or could no longer
+    /// retry within their deadline) and resolved as failed.
+    pub failed: usize,
+    /// Re-executions: every attempt after a batch's first.
+    pub retried: usize,
+    /// Batches shed before execution (deadline passed while queued).
+    pub shed: usize,
+    /// When the lane goes idle for good.
+    pub lane_end_s: f64,
+}
+
+/// Output of [`simulate_faults`].
+#[derive(Debug, Clone)]
+pub struct FaultSimResult {
+    pub per_lane: Vec<FaultLaneStat>,
+    /// Makespan across lanes (lanes independent).
+    pub total_s: f64,
+}
+
+impl FaultSimResult {
+    pub fn completed(&self) -> usize {
+        self.per_lane.iter().map(|l| l.completed).sum()
+    }
+
+    pub fn failed(&self) -> usize {
+        self.per_lane.iter().map(|l| l.failed).sum()
+    }
+
+    pub fn retried(&self) -> usize {
+        self.per_lane.iter().map(|l| l.retried).sum()
+    }
+
+    pub fn shed(&self) -> usize {
+        self.per_lane.iter().map(|l| l.shed).sum()
+    }
+}
+
+/// Chaos-aware lane prediction: how many batches the lane scheduler
+/// completes, retries, fails, and sheds under a seeded
+/// [`FaultPlan`](crate::fault::FaultPlan).
+///
+/// Extends [`simulate_lanes_deadline`]'s per-lane FIFO model with the
+/// live chaos stack's engine-call semantics, mirrored bit-for-bit:
+/// each lane's `ChaosEngine` rolls `plan.engine_fault(call)` on a
+/// per-engine call counter that starts at 0 and advances once per
+/// attempt, so the fault schedule here is *identical* to the one the
+/// live engine sees as long as batches reach the engine in the same
+/// order. A faulted attempt bails before the engine runs (costing only
+/// the retry backoff); the lane retries until the attempt count
+/// exceeds `max_retries` or the next attempt could not start before
+/// the batch's deadline, then resolves the batch as failed. (The live
+/// lane sheds still-unserved *rows* individually at that point; at
+/// batch granularity the sim folds those into `failed`.) Replay-level
+/// faults (worker death, poisoning join timeouts) are supervision
+/// territory — lane replacement, re-admission — and are not modeled
+/// here; drive them with zero replay probabilities when validating
+/// against a measured run, as `bench_serving`'s chaos section does.
+pub fn simulate_faults(
+    lanes: &[FaultTraffic],
+    host: HostProfile,
+    device: GpuSpec,
+) -> FaultSimResult {
+    assert!(!lanes.is_empty(), "need at least one lane");
+    let mut per_lane = Vec::with_capacity(lanes.len());
+    for lane in lanes {
+        let service_s = simulate_tape(lane.tape, lane.costs, host, device.clone()).total_s;
+        let (mut free_at, mut lane_end_s) = (0.0f64, 0.0f64);
+        let (mut completed, mut failed, mut retried, mut shed) =
+            (0usize, 0usize, 0usize, 0usize);
+        let mut call = 0u64; // the lane engine's ChaosEngine call counter
+        for &(arrival, deadline) in lane.batches {
+            assert!(arrival >= 0.0, "arrivals must be non-negative");
+            let start = free_at.max(arrival);
+            if start >= deadline {
+                // Shed at pop time: no engine call, server stays free.
+                shed += 1;
+                continue;
+            }
+            let mut t = start;
+            let mut attempts = 0u32;
+            loop {
+                let fault = lane.plan.engine_fault(call);
+                call += 1;
+                attempts += 1;
+                if fault.is_none() {
+                    t += service_s;
+                    completed += 1;
+                    break;
+                }
+                if attempts > lane.max_retries {
+                    failed += 1;
+                    break;
+                }
+                if t + lane.backoff_s >= deadline {
+                    failed += 1;
+                    break;
+                }
+                retried += 1;
+                t += lane.backoff_s;
+            }
+            free_at = t;
+            lane_end_s = lane_end_s.max(t);
+        }
+        per_lane.push(FaultLaneStat {
+            service_s,
+            completed,
+            failed,
+            retried,
+            shed,
+            lane_end_s,
+        });
+    }
+    let total_s = per_lane.iter().fold(0.0f64, |a, l| a.max(l.lane_end_s));
+    FaultSimResult { per_lane, total_s }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1197,6 +1342,154 @@ mod tests {
             assert!(shed <= last, "shed must be monotone non-increasing in budget");
             last = shed;
         }
+    }
+
+    #[test]
+    fn fault_sim_with_a_noop_plan_matches_the_deadline_sim() {
+        let g = crate::models::build("mini_inception", 1);
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+        let service = simulate_tape(&tape, &cs, HostProfile::nimble(), dev.clone()).total_s;
+        let batches: Vec<(f64, f64)> = (0..8)
+            .map(|i| {
+                let arrival = i as f64 * 0.5 * service;
+                (arrival, arrival + 2.0 * service)
+            })
+            .collect();
+        let base = simulate_lanes_deadline(
+            &[LaneTraffic { tape: &tape, costs: &cs, batches: &batches }],
+            HostProfile::nimble(),
+            dev.clone(),
+        );
+        let chaos = simulate_faults(
+            &[FaultTraffic {
+                tape: &tape,
+                costs: &cs,
+                batches: &batches,
+                plan: crate::fault::FaultPlan::seeded(9),
+                max_retries: 3,
+                backoff_s: 1e-4,
+            }],
+            HostProfile::nimble(),
+            dev,
+        );
+        // FaultPlan::seeded has all-zero probabilities: no faults fire,
+        // so the chaos sim degenerates to the deadline sim bit-for-bit.
+        assert_eq!(chaos.completed(), base.completed());
+        assert_eq!(chaos.shed(), base.shed());
+        assert_eq!((chaos.failed(), chaos.retried()), (0, 0));
+        assert_eq!(chaos.total_s.to_bits(), base.total_s.to_bits());
+    }
+
+    #[test]
+    fn fault_sim_accounting_closes_and_is_deterministic() {
+        let g = branchy();
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+        let batches: Vec<(f64, f64)> = (0..24).map(|_| (0.0, f64::INFINITY)).collect();
+        let mk = |seed: u64| {
+            simulate_faults(
+                &[FaultTraffic {
+                    tape: &tape,
+                    costs: &cs,
+                    batches: &batches,
+                    plan: crate::fault::FaultPlan {
+                        engine_error: 0.5,
+                        engine_panic: 0.1,
+                        ..crate::fault::FaultPlan::seeded(seed)
+                    },
+                    max_retries: 2,
+                    backoff_s: 5e-5,
+                }],
+                HostProfile::nimble(),
+                dev.clone(),
+            )
+        };
+        let mut any_retry = false;
+        for seed in 0..8u64 {
+            let (a, b) = (mk(seed), mk(seed));
+            assert_eq!(
+                a.completed() + a.failed() + a.shed(),
+                24,
+                "accounting must close (seed {seed})"
+            );
+            assert_eq!(a.shed(), 0, "infinite budgets never shed");
+            assert_eq!(
+                (a.completed(), a.failed(), a.retried()),
+                (b.completed(), b.failed(), b.retried()),
+                "seeded chaos must be deterministic (seed {seed})"
+            );
+            assert_eq!(a.total_s.to_bits(), b.total_s.to_bits());
+            any_retry |= a.retried() > 0;
+        }
+        assert!(any_retry, "a 60% fault rate over 24 batches must retry somewhere");
+    }
+
+    #[test]
+    fn fault_sim_certain_faults_exhaust_the_retry_budget() {
+        let g = branchy();
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+        let batches: Vec<(f64, f64)> = (0..5).map(|_| (0.0, f64::INFINITY)).collect();
+        for max_retries in [0u32, 2] {
+            let r = simulate_faults(
+                &[FaultTraffic {
+                    tape: &tape,
+                    costs: &cs,
+                    batches: &batches,
+                    plan: crate::fault::FaultPlan {
+                        engine_error: 1.0,
+                        ..crate::fault::FaultPlan::seeded(1)
+                    },
+                    max_retries,
+                    backoff_s: 1e-4,
+                }],
+                HostProfile::nimble(),
+                dev.clone(),
+            );
+            assert_eq!(r.completed(), 0, "certain faults never complete");
+            assert_eq!(r.failed(), 5);
+            assert_eq!(r.retried(), 5 * max_retries as usize);
+            // Faulted attempts bail before the engine runs: only the
+            // backoffs advance the lane clock.
+            let expected_end = 5.0 * max_retries as f64 * 1e-4;
+            assert!((r.per_lane[0].lane_end_s - expected_end).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fault_sim_stops_retrying_at_the_deadline() {
+        let g = branchy();
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+        // Certain faults and a deadline that admits exactly two
+        // backoffs: the third retry would start past the deadline, so
+        // the batch fails after two retries despite the roomy budget.
+        let batches = [(0.0, 2.5e-4)];
+        let r = simulate_faults(
+            &[FaultTraffic {
+                tape: &tape,
+                costs: &cs,
+                batches: &batches,
+                plan: crate::fault::FaultPlan {
+                    engine_error: 1.0,
+                    ..crate::fault::FaultPlan::seeded(4)
+                },
+                max_retries: 10,
+                backoff_s: 1e-4,
+            }],
+            HostProfile::nimble(),
+            dev,
+        );
+        assert_eq!((r.completed(), r.failed(), r.retried(), r.shed()), (0, 1, 2, 0));
     }
 
     #[test]

@@ -634,3 +634,174 @@ fn mixed_arrivals_all_served_and_lane_stats_consistent() {
         Ok(())
     });
 }
+
+/// ≥100 random cases (chaos-hardening tentpole): a random seeded
+/// [`FaultPlan`] (engine errors/panics, replay worker deaths, arena
+/// exhaustion, poisoning join timeouts — each often zero) under a
+/// random [`RetryPolicy`] and bursty pre-formed batch traffic. The
+/// invariants that must survive ANY plan:
+///
+/// * every ticket resolves (60 s cap turns a deadlock into a failure,
+///   never a hang);
+/// * survivors are bit-identical to the fault-free serial oracle —
+///   retries and lane replacement must not leak into results;
+/// * client-observed tallies match the report and accounting closes
+///   (`n_requests + deadline_shed + failed == submitted`);
+/// * a no-op plan degenerates to the fault-free system: zero failures,
+///   zero retries;
+/// * the shared [`ArenaPool`] balances to zero leased bytes after
+///   shutdown even when lanes died and were replaced mid-run.
+#[test]
+fn chaos_faults_leave_survivors_bit_identical_and_accounting_closed() {
+    use nimble::aot::memory::ArenaPool;
+    use nimble::serving::{FaultPlan, RetryPolicy, ScaleOptions};
+
+    check_from("chaos-faults", base_seed() ^ 0x00C4_A05, 100, |rng| {
+        let n_nodes = rng.gen_range_inclusive(8, 48);
+        let graph_seed = rng.next_u64();
+        let mut buckets = random_buckets(rng);
+        buckets.truncate(2);
+        let build = move |b: usize| random_cell(&mut Pcg32::new(graph_seed), n_nodes, b);
+
+        // Often-zero probabilities: roughly half the draws leave each
+        // channel silent, so the property also pins the noop → fault-free
+        // degeneracy; join timeouts (lane-fatal) stay rare to bound the
+        // respawn churn per case.
+        fn maybe(rng: &mut Pcg32, max_pct: usize) -> f64 {
+            if rng.gen_range_inclusive(0, 1) == 0 {
+                0.0
+            } else {
+                rng.gen_range_inclusive(1, max_pct) as f64 / 100.0
+            }
+        }
+        let plan = FaultPlan {
+            op_error: maybe(rng, 8),
+            engine_error: maybe(rng, 25),
+            engine_panic: maybe(rng, 10),
+            worker_death: maybe(rng, 10),
+            arena_exhaustion: maybe(rng, 10),
+            join_timeout: if rng.gen_range_inclusive(0, 3) == 0 { 0.04 } else { 0.0 },
+            ..FaultPlan::seeded(rng.next_u64())
+        };
+        let noop = plan.is_noop();
+        let retry = RetryPolicy {
+            max_retries: rng.gen_range_inclusive(0, 3) as u32,
+            backoff: if rng.gen_range_inclusive(0, 1) == 0 {
+                Duration::ZERO
+            } else {
+                Duration::from_micros(200)
+            },
+        };
+
+        let mut oracle = oracle_engine(graph_seed, n_nodes, &buckets)?;
+        let arena_pool = ArenaPool::new();
+        let builder = Runtime::builder()
+            .label("rand-cell")
+            .graph_fn(build)
+            .buckets(&buckets)
+            .max_wait(Duration::from_micros(200))
+            .lane_cap(12)
+            .buffers_per_lane(14)
+            .worker_cap(2)
+            .arena_pool(arena_pool.clone())
+            .fault_plan(plan.clone())
+            .retry_policy(retry);
+        let builder = if rng.gen_range_inclusive(0, 1) == 1 {
+            builder.elastic(ScaleOptions {
+                max_lanes_per_bucket: 2,
+                idle_retire: Duration::from_millis(2),
+                scale_up_backlog: 2,
+            })
+        } else {
+            builder
+        };
+        let server =
+            builder.build().map_err(|e| format!("chaos server start failed: {e:#}"))?;
+
+        // One burst of pre-formed batches (pinned composition, no
+        // deadlines): each must resolve as Output or Failed, nothing
+        // else, and nothing may dangle.
+        let n_jobs = rng.gen_range_inclusive(4, 12);
+        let jobs: Vec<(usize, Vec<f32>)> = (0..n_jobs)
+            .map(|_| {
+                let bucket = *rng.choose(&buckets);
+                let input = random_input(rng, bucket * RANDOM_CELL_EXAMPLE_LEN);
+                (bucket, input)
+            })
+            .collect();
+        let pending: Vec<_> = jobs
+            .iter()
+            .map(|(bucket, input)| server.submit(InferRequest::batch(*bucket, input.clone())))
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("submit failed: {e:#}"))?;
+
+        let (mut completed, mut failed) = (0usize, 0usize);
+        for (i, ((bucket, input), ticket)) in jobs.iter().zip(pending).enumerate() {
+            let outcome = ticket
+                .outcome_timeout(Duration::from_secs(60))
+                .map_err(|e| format!("job {i}: ticket unresolved (deadlock?): {e:#}"))?;
+            match outcome {
+                InferOutcome::Output(got) => {
+                    completed += 1;
+                    let want = oracle
+                        .infer_batch(*bucket, input)
+                        .map_err(|e| format!("oracle replay failed: {e:#}"))?;
+                    ensure(got.len() == want.len(), || {
+                        format!("job {i}: output length {} != {}", got.len(), want.len())
+                    })?;
+                    for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+                        ensure(a.to_bits() == b.to_bits(), || {
+                            format!(
+                                "job {i} (bucket {bucket}) diverged at {j}: {a:?} vs {b:?} \
+                                 (graph seed {graph_seed:#x})"
+                            )
+                        })?;
+                    }
+                }
+                InferOutcome::Failed(e) => {
+                    failed += 1;
+                    ensure(!noop, || {
+                        format!("job {i} failed under a no-op fault plan: {e}")
+                    })?;
+                    ensure(
+                        e.contains("injected") || e.contains("lane") || e.contains("poisoned"),
+                        || format!("job {i}: failure not traceable to an injection: {e}"),
+                    )?;
+                }
+                InferOutcome::DeadlineShed => {
+                    return Err(format!("job {i} shed without a deadline"));
+                }
+            }
+        }
+        ensure(completed + failed == n_jobs, || {
+            format!("{completed} completed + {failed} failed != {n_jobs} submitted")
+        })?;
+
+        let report = server.shutdown().map_err(|e| format!("shutdown failed: {e:#}"))?;
+        ensure(report.n_requests == completed, || {
+            format!("report counts {} completions, clients saw {completed}", report.n_requests)
+        })?;
+        ensure(report.failed == failed, || {
+            format!("report counts {} failures, clients saw {failed}", report.failed)
+        })?;
+        ensure(report.deadline_shed == 0, || {
+            format!("{} sheds without deadlines", report.deadline_shed)
+        })?;
+        ensure(report.n_requests + report.deadline_shed + report.failed == n_jobs, || {
+            "report-side accounting must close".to_string()
+        })?;
+        if noop {
+            ensure(report.retries == 0, || {
+                format!("{} retries under a no-op plan", report.retries)
+            })?;
+        }
+        let stats = arena_pool.stats();
+        ensure(stats.leased_bytes == 0, || {
+            format!(
+                "{} arena bytes still leased after chaos shutdown (graph seed {graph_seed:#x})",
+                stats.leased_bytes
+            )
+        })?;
+        Ok(())
+    });
+}
