@@ -3,10 +3,15 @@
 //!
 //!     cargo run --release --example serve_runtime
 //!
-//! Builds an elastic, deadline-aware serving runtime for MiniInception
+//! Builds an elastic, deadline-first serving runtime for MiniInception
 //! with one fluent builder call, then drives it three ways: plain
 //! blocking requests, hinted + async tickets, and a deadline burst that
-//! demonstrates shedding (`ServingReport::deadline_shed`).
+//! demonstrates admission-time shedding (`ServingReport::deadline_shed`
+//! with the `admission_shed` subset — requests the scheduler proves
+//! undeliverable are resolved at the door, before they occupy backlog).
+//! The builder also arms the SLO controller (`.slo(target)`), which
+//! force-spawns elastic lanes when the live shed rate breaches the
+//! target; `.edf(false)` would restore the plain FIFO baseline.
 
 use anyhow::Result;
 use nimble::serving::{InferOutcome, InferRequest, Runtime, ScaleOptions};
@@ -22,6 +27,7 @@ fn main() -> Result<()> {
         .max_wait(Duration::from_millis(1))
         .elastic(ScaleOptions { max_lanes_per_bucket: 2, ..Default::default() })
         .shared_pool(4)
+        .slo(0.25) // shed-rate target: breach it and the controller adds lanes
         .build()?;
     println!(
         "runtime up: buckets {:?}, example_len {}, output_len {}",
@@ -53,8 +59,9 @@ fn main() -> Result<()> {
     println!("hinted async requests served on the bucket-8 lane");
 
     // 3. Deadlines: a pre-formed burst where half the requests carry an
-    // already-expired deadline — the lane sheds them without running
-    // the engine; the rest complete normally.
+    // already-expired deadline — the dispatcher sheds them AT ADMISSION
+    // (an expired budget can never be met, so it never occupies
+    // backlog); the rest complete normally.
     let tickets: Vec<_> = (0..8)
         .map(|i| {
             let req = InferRequest::batch(4, mk(4));
@@ -81,6 +88,7 @@ fn main() -> Result<()> {
     let report = rt.shutdown()?;
     println!("\n{}", report.render());
     assert_eq!(report.deadline_shed, shed);
+    assert_eq!(report.admission_shed, 4, "expired-at-submit sheds resolve at the door");
     println!("\nserve_runtime OK");
     Ok(())
 }

@@ -1,7 +1,8 @@
 //! Serving-path benchmark: lane-scheduler throughput against the
 //! single-engine-thread baseline on a 4-bucket mixed workload, the
-//! elastic-scaling burst trace, a deadline-shedding sweep, and the
-//! classic offered-load sweep — all driven through the `Runtime` façade.
+//! elastic-scaling burst trace, a deadline-shedding sweep, the EDF /
+//! SLO-controller cross-check, and the classic offered-load sweep —
+//! all driven through the `Runtime` façade.
 //!
 //! The headline measurement replays the *same* 64 pre-formed padded
 //! batches (round-robin over buckets 1/2/4/8 of a chain-shaped model, so
@@ -587,6 +588,329 @@ fn chaos_check() -> String {
     )
 }
 
+/// Deadline-first scheduling cross-check, three sub-runs:
+///
+/// * **(a) FIFO vs EDF** — six deadline-less requests submitted ahead
+///   of three tight (`3.5×` service) budgets through ONE single-buffer
+///   bucket-1 lane. Arrival order dooms the tight requests under FIFO
+///   (they queue behind ~6 service times); EDF forms their batches
+///   first, so every one starts inside its budget. The budget also
+///   clears the warm admission estimate (at most `2×` service with one
+///   buffer in flight), so the comparison isolates *ordering*, not
+///   admission shedding. EDF must shed strictly fewer.
+/// * **(b) live vs `simulate_edf`, exact** — a seeded chaos-free run of
+///   degenerate budgets (expired at the door vs infinite) submitted
+///   sequentially-blocking through one static lane. Both sides resolve
+///   every job deterministically (expired → admission shed even with a
+///   cold estimate, infinite → complete), so completed / shed /
+///   admission-shed must match **exactly**, not statistically.
+/// * **(c) SLO controller** — the same bursty tight-deadline waves with
+///   and without `.slo(target)`, with the pressure-gated scale-up
+///   disabled (`scale_up_backlog` unreachable) so any spawned lane is
+///   the controller's doing. The controller run must spawn lanes and
+///   shed fewer requests than the static run.
+fn edf_slo() -> String {
+    use nimble::aot::memory::ArenaPool;
+    use nimble::aot::tape::ReplayTape;
+    use nimble::engine::executor::SharedWorkerPool;
+    use nimble::matching::MatchingAlgo;
+    use nimble::serving::ScaleOptions;
+    use nimble::sim::{simulate_edf, simulate_tape, EdfSimPolicy, EdfTraffic};
+    use nimble::stream::rewrite::rewrite;
+
+    section("EDF + SLO: FIFO vs EDF sheds, live vs simulate_edf (exact), SLO controller");
+
+    let dev = GpuSpec::v100();
+    let host = HostProfile::nimble();
+    let tape_for = |bucket: usize| {
+        let g = chain_graph(bucket, DEPTH);
+        let costs: Vec<KernelCost> =
+            (0..g.n_nodes()).map(|v| kernel_cost(g.node(v), &dev)).collect();
+        let tape =
+            ReplayTape::for_op_graph(&g, &rewrite(&g, MatchingAlgo::HopcroftKarp), 4096);
+        (tape, costs)
+    };
+    let measured_service = |bucket: usize| -> f64 {
+        let mut probe = chain_engine(&[bucket]);
+        let zeros = vec![0.0f32; bucket * probe.example_len()];
+        probe.infer_batch(bucket, &zeros).unwrap(); // warm-up
+        let mut samples: Vec<f64> = (0..5)
+            .map(|_| {
+                let t0 = Instant::now();
+                probe.infer_batch(bucket, &zeros).unwrap();
+                t0.elapsed().as_secs_f64()
+            })
+            .collect();
+        samples.sort_by(f64::total_cmp);
+        samples[samples.len() / 2]
+    };
+
+    // --- (a) FIFO vs EDF ordering. ---
+    const N_INF: usize = 6;
+    const N_TIGHT: usize = 3;
+    let budget_x = 3.5f64;
+    let service_1 = measured_service(1);
+    let ordering_run = |edf: bool| -> (usize, usize, nimble::serving::ServingReport) {
+        let server = Runtime::builder()
+            .label("chain")
+            .graph_fn(|b| chain_graph(b, DEPTH))
+            .buckets(&[1])
+            .max_wait(Duration::from_millis(1))
+            .lane_cap(2)
+            .buffers_per_lane(1)
+            .edf(edf)
+            .build()
+            .expect("edf ordering server");
+        let len = server.example_len();
+        // Warm the context AND the admission EWMA outside the burst.
+        server.submit(InferRequest::new(vec![0.0; len])).unwrap().wait().unwrap();
+        let mut rng = Pcg32::new(808);
+        let budget = Duration::from_secs_f64(budget_x * service_1);
+        let mut pending = Vec::new();
+        for i in 0..N_INF + N_TIGHT {
+            let input: Vec<f32> = (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            let req = InferRequest::new(input);
+            let req = if i < N_INF { req } else { req.deadline_in(budget) };
+            pending.push(server.submit(req).unwrap());
+        }
+        let (mut completed, mut shed) = (0usize, 0usize);
+        for ticket in pending {
+            match ticket.outcome().unwrap() {
+                InferOutcome::Output(_) => completed += 1,
+                InferOutcome::DeadlineShed => shed += 1,
+                InferOutcome::Failed(e) => panic!("edf ordering request failed: {e}"),
+            }
+        }
+        assert_eq!(completed + shed, N_INF + N_TIGHT, "ordering accounting must close");
+        let report = server.shutdown().expect("edf ordering report");
+        assert_eq!(report.deadline_shed, shed, "report must match client outcomes");
+        (completed, shed, report)
+    };
+    let (fifo_completed, fifo_shed, fifo_report) = ordering_run(false);
+    let (edf_completed, edf_shed, edf_report) = ordering_run(true);
+    assert_eq!(fifo_report.admission_shed, 0, "edf(false) must never shed at admission");
+
+    // DES prediction over the same arrival pattern in its service units.
+    let (tape_1, costs_1) = tape_for(1);
+    let des_service_1 = simulate_tape(&tape_1, &costs_1, host, dev.clone()).total_s;
+    let mut batches_a: Vec<(f64, f64)> = vec![(0.0, f64::INFINITY); N_INF];
+    batches_a.extend(std::iter::repeat((0.0, budget_x * des_service_1)).take(N_TIGHT));
+    let traffic_a = [EdfTraffic { tape: &tape_1, costs: &costs_1, batches: &batches_a }];
+    let des_fifo = simulate_edf(
+        &traffic_a,
+        host,
+        dev.clone(),
+        &EdfSimPolicy { edf: false, slo: None, max_lanes_per_bucket: 1 },
+    );
+    let des_edf = simulate_edf(
+        &traffic_a,
+        host,
+        dev.clone(),
+        &EdfSimPolicy { edf: true, slo: None, max_lanes_per_bucket: 1 },
+    );
+    let pass_a = edf_shed < fifo_shed;
+    println!(
+        "ordering: FIFO completed={fifo_completed} shed={fifo_shed}  \
+         EDF completed={edf_completed} shed={edf_shed} (adm={})  \
+         DES FIFO shed={} EDF shed={}  [{}]",
+        edf_report.admission_shed,
+        des_fifo.shed(),
+        des_edf.shed(),
+        if pass_a { "PASS" } else { "FAIL" }
+    );
+
+    // --- (b) live vs simulate_edf, exact accounting. ---
+    const EXACT_BUCKET: usize = 2;
+    const EXACT_JOBS: usize = 12;
+    let mut rng = Pcg32::new(0xEDF0);
+    let expired: Vec<bool> =
+        (0..EXACT_JOBS).map(|_| rng.gen_range_inclusive(0, 2) == 0).collect();
+    let n_expired = expired.iter().filter(|e| **e).count();
+    let server = Runtime::builder()
+        .label("chain")
+        .graph_fn(|b| chain_graph(b, DEPTH))
+        .buckets(&[EXACT_BUCKET])
+        .max_wait(Duration::from_millis(1))
+        .lane_cap(4)
+        .buffers_per_lane(4)
+        .build()
+        .expect("edf exact server");
+    let len = server.example_len();
+    let (mut exact_completed, mut exact_shed) = (0usize, 0usize);
+    for (i, is_expired) in expired.iter().enumerate() {
+        let input: Vec<f32> =
+            (0..EXACT_BUCKET * len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+        let req = InferRequest::batch(EXACT_BUCKET, input);
+        let req = if *is_expired { req.deadline(Instant::now()) } else { req };
+        match server.submit(req).unwrap().outcome().unwrap() {
+            InferOutcome::Output(_) => exact_completed += 1,
+            InferOutcome::DeadlineShed => exact_shed += 1,
+            InferOutcome::Failed(e) => panic!("exact-run job {i} failed: {e}"),
+        }
+    }
+    let exact_report = server.shutdown().expect("edf exact report");
+    let (tape_2, costs_2) = tape_for(EXACT_BUCKET);
+    let batches_b: Vec<(f64, f64)> =
+        expired.iter().map(|e| (0.0, if *e { 0.0 } else { f64::INFINITY })).collect();
+    let des_exact = simulate_edf(
+        &[EdfTraffic { tape: &tape_2, costs: &costs_2, batches: &batches_b }],
+        host,
+        dev.clone(),
+        &EdfSimPolicy { edf: true, slo: None, max_lanes_per_bucket: 1 },
+    );
+    let pass_b = exact_completed == des_exact.completed()
+        && exact_shed == des_exact.shed()
+        && exact_report.admission_shed == des_exact.admission_shed()
+        && exact_shed == n_expired;
+    println!(
+        "exact: measured completed={exact_completed} shed={exact_shed} (adm={})  \
+         DES completed={} shed={} (adm={})  [{}]",
+        exact_report.admission_shed,
+        des_exact.completed(),
+        des_exact.shed(),
+        des_exact.admission_shed(),
+        if pass_b { "PASS" } else { "FAIL" }
+    );
+
+    // --- (c) SLO controller on the bursty tight-deadline waves. ---
+    const SLO_BUCKET: usize = 4;
+    const WAVES: usize = 3;
+    const PER_WAVE: usize = 8;
+    const MAX_LANES: usize = 3;
+    let slo_target = 0.05f64;
+    let gap = Duration::from_millis(30);
+    let service_4 = measured_service(SLO_BUCKET);
+    let slo_run = |slo: Option<f64>| -> (usize, usize, nimble::serving::ServingReport) {
+        let builder = Runtime::builder()
+            .label("chain")
+            .graph_fn(|b| chain_graph(b, DEPTH))
+            .buckets(&[SLO_BUCKET])
+            .max_wait(Duration::from_millis(1))
+            .lane_cap(PER_WAVE + 2)
+            .buffers_per_lane(PER_WAVE + 2)
+            .elastic(ScaleOptions {
+                max_lanes_per_bucket: MAX_LANES,
+                idle_retire: Duration::from_millis(200),
+                // Unreachable: only the SLO controller may spawn.
+                scale_up_backlog: 64,
+            })
+            .shared_pool_handle(SharedWorkerPool::new(4))
+            .arena_pool(ArenaPool::new());
+        let builder = match slo {
+            Some(t) => builder.slo(t),
+            None => builder,
+        };
+        let server = builder.build().expect("slo bench server");
+        let len = server.example_len();
+        let zeros = vec![0.0f32; SLO_BUCKET * len];
+        server.submit(InferRequest::batch(SLO_BUCKET, zeros)).unwrap().wait().unwrap();
+        let mut rng = Pcg32::new(4545);
+        let budget = Duration::from_secs_f64(budget_x * service_4);
+        let (mut completed, mut shed) = (0usize, 0usize);
+        for wave in 0..WAVES {
+            let pending: Vec<_> = (0..PER_WAVE)
+                .map(|_| {
+                    let input: Vec<f32> = (0..SLO_BUCKET * len)
+                        .map(|_| rng.gen_f32_range(-1.0, 1.0))
+                        .collect();
+                    server
+                        .submit(InferRequest::batch(SLO_BUCKET, input).deadline_in(budget))
+                        .unwrap()
+                })
+                .collect();
+            for ticket in pending {
+                match ticket.outcome().unwrap() {
+                    InferOutcome::Output(_) => completed += 1,
+                    InferOutcome::DeadlineShed => shed += 1,
+                    InferOutcome::Failed(e) => panic!("slo bench batch failed: {e}"),
+                }
+            }
+            if wave + 1 < WAVES {
+                std::thread::sleep(gap);
+            }
+        }
+        assert_eq!(completed + shed, WAVES * PER_WAVE, "slo accounting must close");
+        (completed, shed, server.shutdown().expect("slo report"))
+    };
+    let (off_completed, off_shed, off_report) = slo_run(None);
+    let (on_completed, on_shed, on_report) = slo_run(Some(slo_target));
+    assert_eq!(off_report.lanes_spawned(), 0, "pressure gate must stay closed");
+
+    // DES prediction of the same wave structure in its service units.
+    let (tape_4, costs_4) = tape_for(SLO_BUCKET);
+    let des_service_4 = simulate_tape(&tape_4, &costs_4, host, dev.clone()).total_s;
+    let mut batches_c: Vec<(f64, f64)> = Vec::new();
+    for wave in 0..WAVES {
+        let t = wave as f64 * 3.0 * des_service_4;
+        batches_c
+            .extend(std::iter::repeat((t, t + budget_x * des_service_4)).take(PER_WAVE));
+    }
+    let traffic_c = [EdfTraffic { tape: &tape_4, costs: &costs_4, batches: &batches_c }];
+    let des_off = simulate_edf(
+        &traffic_c,
+        host,
+        dev.clone(),
+        &EdfSimPolicy { edf: true, slo: None, max_lanes_per_bucket: MAX_LANES },
+    );
+    let des_on = simulate_edf(
+        &traffic_c,
+        host,
+        dev,
+        &EdfSimPolicy { edf: true, slo: Some(slo_target), max_lanes_per_bucket: MAX_LANES },
+    );
+    let pass_c = on_report.lanes_spawned() >= 1 && on_shed < off_shed;
+    println!(
+        "slo: off completed={off_completed} shed={off_shed} spawned={}  \
+         on completed={on_completed} shed={on_shed} (adm={}) spawned={}  \
+         DES off shed={} on shed={} lanes-live={}  [{}]",
+        off_report.lanes_spawned(),
+        on_report.admission_shed,
+        on_report.lanes_spawned(),
+        des_off.shed(),
+        des_on.shed(),
+        des_on.lanes_spawned(),
+        if pass_c { "PASS" } else { "FAIL" }
+    );
+
+    let pass = pass_a && pass_b && pass_c;
+    println!("edf-slo [{}]", if pass { "PASS" } else { "FAIL" });
+
+    format!(
+        "{{\n  \"workload\": \"edf-slo-chain\",\n  \"chain_depth\": {DEPTH},\n  \
+         \"budget_x\": {budget_x},\n  \
+         \"ordering\": {{\"bucket\": 1, \"n_inf\": {N_INF}, \"n_tight\": {N_TIGHT}, \
+         \"fifo_completed\": {fifo_completed}, \"fifo_shed\": {fifo_shed}, \
+         \"edf_completed\": {edf_completed}, \"edf_shed\": {edf_shed}, \
+         \"edf_admission_shed\": {}, \"des_fifo_shed\": {}, \"des_edf_shed\": {}, \
+         \"pass\": {pass_a}}},\n  \
+         \"sim_exact\": {{\"bucket\": {EXACT_BUCKET}, \"n_jobs\": {EXACT_JOBS}, \
+         \"n_expired\": {n_expired}, \"measured_completed\": {exact_completed}, \
+         \"measured_shed\": {exact_shed}, \"measured_admission_shed\": {}, \
+         \"des_completed\": {}, \"des_shed\": {}, \"des_admission_shed\": {}, \
+         \"pass\": {pass_b}}},\n  \
+         \"slo\": {{\"bucket\": {SLO_BUCKET}, \"waves\": {WAVES}, \
+         \"per_wave\": {PER_WAVE}, \"target_shed_rate\": {slo_target}, \
+         \"max_lanes_per_bucket\": {MAX_LANES}, \
+         \"off_completed\": {off_completed}, \"off_shed\": {off_shed}, \
+         \"on_completed\": {on_completed}, \"on_shed\": {on_shed}, \
+         \"on_admission_shed\": {}, \"on_lanes_spawned\": {}, \
+         \"des_off_shed\": {}, \"des_on_shed\": {}, \"des_on_lanes_live\": {}, \
+         \"pass\": {pass_c}}},\n  \"pass\": {pass}\n}}",
+        edf_report.admission_shed,
+        des_fifo.shed(),
+        des_edf.shed(),
+        exact_report.admission_shed,
+        des_exact.completed(),
+        des_exact.shed(),
+        des_exact.admission_shed(),
+        on_report.admission_shed,
+        on_report.lanes_spawned(),
+        des_off.shed(),
+        des_on.shed(),
+        des_on.lanes_spawned(),
+    )
+}
+
 fn sweep(label: &str, start: impl Fn() -> Runtime) {
     for rate in [5.0f64, 20.0] {
         let server = start();
@@ -624,8 +948,10 @@ fn main() {
     let scaling_entry = elastic_vs_static();
     let deadline_entry = deadline_sweep();
     let chaos_entry = chaos_check();
-    let json =
-        format!("[\n{lane_entry},\n{scaling_entry},\n{deadline_entry},\n{chaos_entry}\n]\n");
+    let edf_entry = edf_slo();
+    let json = format!(
+        "[\n{lane_entry},\n{scaling_entry},\n{deadline_entry},\n{chaos_entry},\n{edf_entry}\n]\n"
+    );
     match std::fs::write("BENCH_serving.json", &json) {
         Ok(()) => println!("\nwrote BENCH_serving.json"),
         Err(e) => println!("\ncould not write BENCH_serving.json: {e}"),

@@ -2,6 +2,13 @@
 //! batch size, or flush early when the oldest request has waited past the
 //! deadline. Static shapes ⇒ partial batches are padded with zeros and the
 //! padding outputs dropped (one compiled engine per batch size bucket).
+//!
+//! Queued requests are kept in **EDF order** (earliest deadline first):
+//! a request with a deadline is inserted ahead of every queued request
+//! with a later deadline and ahead of all deadline-less requests;
+//! requests with equal deadlines — and all deadline-less requests —
+//! stay in FIFO arrival order. A workload that never sets deadlines
+//! therefore sees exactly the old FIFO batcher, bit for bit.
 
 use std::time::{Duration, Instant};
 
@@ -31,12 +38,14 @@ impl BatchPolicy {
 }
 
 /// A queued request: opaque id + one example's input, plus an optional
-/// bucket hint (validated against the policy at push).
+/// bucket hint (validated against the policy at push) and an optional
+/// deadline (drives the EDF queue order).
 #[derive(Debug, Clone)]
 pub struct Pending<T> {
     pub token: T,
     pub input: Vec<f32>,
     pub hint: Option<usize>,
+    pub deadline: Option<Instant>,
     pub enqueued: Instant,
 }
 
@@ -74,7 +83,7 @@ impl<T> Batcher<T> {
     }
 
     pub fn push(&mut self, token: T, input: Vec<f32>) {
-        self.push_hinted(token, input, None);
+        self.push_request(token, input, None, None);
     }
 
     /// Queue a request with an optional bucket hint. A hint naming a
@@ -83,8 +92,37 @@ impl<T> Batcher<T> {
     /// deriving the bucket from queue depth; hints naming no compiled
     /// bucket are ignored.
     pub fn push_hinted(&mut self, token: T, input: Vec<f32>, hint: Option<usize>) {
+        self.push_request(token, input, hint, None);
+    }
+
+    /// Queue a request with an optional bucket hint and an optional
+    /// deadline. The deadline decides the queue position (EDF): the
+    /// request slots ahead of every queued request with a strictly later
+    /// deadline and ahead of all deadline-less requests, behind requests
+    /// with an equal or earlier deadline (FIFO among equals). A
+    /// deadline-less request appends at the back exactly like the old
+    /// FIFO batcher.
+    pub fn push_request(
+        &mut self,
+        token: T,
+        input: Vec<f32>,
+        hint: Option<usize>,
+        deadline: Option<Instant>,
+    ) {
         let hint = hint.filter(|h| self.policy.batch_sizes.contains(h));
-        self.queue.push(Pending { token, input, hint, enqueued: Instant::now() });
+        let at = match deadline {
+            None => self.queue.len(),
+            Some(d) => self
+                .queue
+                .iter()
+                .position(|p| match p.deadline {
+                    None => true,
+                    Some(pd) => pd > d,
+                })
+                .unwrap_or(self.queue.len()),
+        };
+        self.queue
+            .insert(at, Pending { token, input, hint, deadline, enqueued: Instant::now() });
     }
 
     pub fn pending(&self) -> usize {
@@ -134,9 +172,39 @@ impl<T> Batcher<T> {
         full || now.duration_since(head.enqueued) >= self.policy.max_wait
     }
 
-    /// Time until the oldest request's deadline (for the server's poll).
+    /// When the dispatcher must next look at this queue: the head's
+    /// flush point (`enqueued + max_wait`) folded with the earliest
+    /// request deadline still queued. The queue is EDF-ordered, so the
+    /// earliest deadline (if any request carries one) is the head's —
+    /// deadline-less requests always sort behind deadline-carrying ones.
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.queue.first().map(|p| p.enqueued + self.policy.max_wait)
+        let head = self.queue.first()?;
+        let flush = head.enqueued + self.policy.max_wait;
+        Some(match head.deadline {
+            Some(d) => flush.min(d),
+            None => flush,
+        })
+    }
+
+    /// The earliest request deadline still queued, if any.
+    pub fn earliest_request_deadline(&self) -> Option<Instant> {
+        self.queue.first().and_then(|p| p.deadline)
+    }
+
+    /// Remove every queued request whose deadline has passed
+    /// (`now >= deadline`) and hand the tokens back so the caller can
+    /// resolve them as shed — before they occupy a formed batch. The
+    /// EDF order means expired requests form a prefix of the queue.
+    pub fn shed_expired(&mut self, now: Instant) -> Vec<T> {
+        let keep = self
+            .queue
+            .iter()
+            .position(|p| match p.deadline {
+                Some(d) => now < d,
+                None => true,
+            })
+            .unwrap_or(self.queue.len());
+        self.queue.drain(..keep).map(|p| p.token).collect()
     }
 
     /// Form the next batch (call when `ready`). `example_len` is the per-
@@ -304,6 +372,61 @@ mod tests {
         let mut b = Batcher::new(policy());
         b.push_hinted(0, vec![0.0; 4], Some(3)); // 3 is not a compiled bucket
         assert_eq!(b.plan_next(), Some((1, 1)), "depth routing applies");
+    }
+
+    #[test]
+    fn edf_orders_tight_deadlines_first_and_deadline_less_last() {
+        let mut b = Batcher::new(policy());
+        let now = Instant::now();
+        b.push_request(0, vec![0.0; 4], None, None); // no deadline
+        b.push_request(1, vec![1.0; 4], None, Some(now + Duration::from_millis(50)));
+        b.push_request(2, vec![2.0; 4], None, Some(now + Duration::from_millis(10)));
+        b.push_request(3, vec![3.0; 4], None, Some(now + Duration::from_millis(50)));
+        b.push_request(4, vec![4.0; 4], None, None);
+        // EDF: 10ms first, then the two 50ms in arrival order (FIFO among
+        // equals), then the deadline-less in arrival order.
+        let order: Vec<u32> = b.queue.iter().map(|p| p.token).collect();
+        assert_eq!(order, vec![2, 1, 3, 0, 4]);
+    }
+
+    #[test]
+    fn deadline_free_pushes_stay_in_fifo_order() {
+        let mut b = Batcher::new(policy());
+        for i in 0..6u32 {
+            b.push_hinted(i, vec![i as f32; 4], if i % 2 == 0 { Some(8) } else { None });
+        }
+        let order: Vec<u32> = b.queue.iter().map(|p| p.token).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5], "no deadline ⇒ identical to FIFO");
+    }
+
+    #[test]
+    fn next_deadline_folds_in_the_earliest_request_deadline() {
+        let mut b = Batcher::new(policy()); // max_wait = 5ms
+        let now = Instant::now();
+        b.push(0, vec![0.0; 4]);
+        // flush point only: ~now + 5ms
+        let nd = b.next_deadline().unwrap();
+        assert!(nd >= now + Duration::from_millis(4));
+        // a 1ms-deadline request jumps the queue and pulls the wakeup in
+        b.push_request(1, vec![1.0; 4], None, Some(now + Duration::from_millis(1)));
+        let nd = b.next_deadline().unwrap();
+        assert!(nd <= now + Duration::from_millis(1));
+        assert_eq!(b.earliest_request_deadline(), Some(now + Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn shed_expired_removes_exactly_the_expired_prefix() {
+        let mut b = Batcher::new(policy());
+        let now = Instant::now();
+        b.push_request(0, vec![0.0; 4], None, None);
+        b.push_request(1, vec![1.0; 4], None, Some(now - Duration::from_millis(1)));
+        b.push_request(2, vec![2.0; 4], None, Some(now + Duration::from_secs(60)));
+        let shed = b.shed_expired(now);
+        assert_eq!(shed, vec![1]);
+        assert_eq!(b.pending(), 2);
+        let order: Vec<u32> = b.queue.iter().map(|p| p.token).collect();
+        assert_eq!(order, vec![2, 0]);
+        assert!(b.shed_expired(now).is_empty(), "idempotent once drained");
     }
 
     #[test]

@@ -48,15 +48,27 @@
 //!   scaling property in `tests/prop_harness.rs`).
 //!
 //! * Requests carry optional **deadlines**
-//!   ([`RequestOptions::deadline`](crate::serving::RequestOptions)): a
-//!   request whose deadline expires while it waits — batcher queue,
-//!   lane stage, or lane job queue — is shed at lane-pop time, before
+//!   ([`RequestOptions::deadline`](crate::serving::RequestOptions)),
+//!   and deadlines are the scheduling discipline, not an afterthought
+//!   ([`LaneConfig::edf`], on by default). The batcher forms batches
+//!   **earliest-deadline-first** (deadline-less requests rank last,
+//!   FIFO among equals — a deadline-free workload is bit-identical to
+//!   strict FIFO), the dispatcher sheds a request at **admission**
+//!   when its per-bucket EWMA queue-delay estimate says the budget
+//!   cannot be met ([`ServingReport::admission_shed`]), and deadlines
+//!   that expire in the batcher queue or a lane stage are shed by the
+//!   dispatcher the moment they come due. A deadline that expires
+//!   inside a lane's job queue still sheds at lane-pop time, before
 //!   the engine runs it. Shed requests resolve their tickets as
 //!   [`InferOutcome::DeadlineShed`](crate::serving::InferOutcome) and
 //!   count into [`LaneStat::deadline_shed`]; execution already started
 //!   is never interrupted, and surviving rows of a partially-shed batch
-//!   stay bit-identical to the oracle. The DES predicts shed counts
-//!   offline ([`crate::sim::simulate_lanes_deadline`]).
+//!   stay bit-identical to the oracle. An optional **SLO controller**
+//!   ([`LaneConfig::slo`]) holds the live shed rate under a target by
+//!   force-spawning lanes for the breaching bucket. The DES predicts
+//!   shed counts offline ([`crate::sim::simulate_lanes_deadline`] for
+//!   pop-time FIFO, [`crate::sim::simulate_edf`] for the full
+//!   admission-estimate + EDF + controller discipline).
 //!
 //! * Lanes are **supervised**: transient engine failures (errors,
 //!   panics, short outputs) are retried in-lane under a bounded
@@ -99,14 +111,15 @@ use crate::engine::executor::panic_message;
 use crate::fault::RetryPolicy;
 use crate::util::stats::Summary;
 
-/// How often the dispatcher re-checks staged batches / drain progress
-/// when it cannot block on the admission queue.
-const POLL: Duration = Duration::from_micros(500);
-
 /// How often the dispatcher runs the scaling pass (reap + retire) while
 /// elastic lanes exist. Static deployments (`max_lanes_per_bucket` = 1,
 /// nothing retiring) never pay this wakeup.
 const SCALE_POLL: Duration = Duration::from_millis(5);
+
+/// Smoothing factor of the per-bucket EWMA batch-service-time estimate
+/// (updated at scale-pass cadence from lane completion counters) that
+/// drives admission-time shedding and the SLO controller.
+const EWMA_ALPHA: f64 = 0.3;
 
 /// Elastic scaling policy ([`LaneConfig::scale`]).
 ///
@@ -162,6 +175,23 @@ pub struct LaneConfig {
     /// Bounded retry of transiently-failed batches (engine errors and
     /// panics). Retries never extend past a request's deadline.
     pub retry: RetryPolicy,
+    /// Deadline-first scheduling (default). The batcher orders staged
+    /// requests earliest-deadline-first (deadline-less requests rank
+    /// last, FIFO among equals), the dispatcher sheds a request at
+    /// *admission* when the per-bucket queue-delay estimate says its
+    /// budget cannot be met, and deadlines that expire in the batcher
+    /// or a lane stage shed there instead of waiting for a lane pop.
+    /// `false` restores the pre-EDF discipline — strict FIFO formation
+    /// with pop-time-only shedding — kept as the bench baseline.
+    pub edf: bool,
+    /// SLO target shed rate (fraction of admitted requests, e.g. 0.05).
+    /// When set, a periodic control pass compares the live shed rate —
+    /// and the predicted rate over the current backlog, the same
+    /// FIFO-server law [`crate::sim::simulate_lanes_deadline`] uses —
+    /// against the target and force-spawns a lane for the breaching
+    /// bucket, bypassing `scale_up_backlog` but never
+    /// `max_lanes_per_bucket`. `None` disables the controller.
+    pub slo: Option<f64>,
 }
 
 impl Default for LaneConfig {
@@ -174,6 +204,8 @@ impl Default for LaneConfig {
             backlog_cap: 256,
             scale: ScaleOptions::default(),
             retry: RetryPolicy::default(),
+            edf: true,
+            slo: None,
         }
     }
 }
@@ -269,6 +301,17 @@ struct Lane {
     done_jobs: Arc<AtomicU64>,
     /// `done_jobs` value last observed by the scaling pass.
     seen_done: u64,
+    /// Cumulative nanoseconds the lane engine spent inside
+    /// `infer_batch`, published after each attempt — with `done_jobs`
+    /// this yields the per-bucket service-time EWMA behind
+    /// admission-time shedding and the SLO controller.
+    busy_ns: Arc<AtomicU64>,
+    /// `busy_ns` value last observed by the scaling pass.
+    seen_busy_ns: u64,
+    /// Requests this lane thread has deadline-shed so far, published
+    /// live (the folded [`LaneStat`] only lands at join) — the SLO
+    /// controller's feedback signal.
+    shed_live: Arc<AtomicU64>,
     /// Last routing or observed completion (idle-retire clock).
     last_active: Instant,
     /// Elastic lanes may retire; the per-bucket seed lane never does.
@@ -453,6 +496,166 @@ fn flush_staged(lane: &mut Lane) {
     }
 }
 
+/// Earliest deadline among unresolved requests staged at any lane —
+/// jobs the batcher no longer sees. Folded into the dispatcher's wait
+/// deadline so a deadline whose only copy sits in a staged batch still
+/// wakes the dispatcher on time; it would otherwise shed only at the
+/// next unrelated wakeup, later than the `now >= deadline` rule
+/// promises.
+fn staged_min_deadline(groups: &[LaneGroup]) -> Option<Instant> {
+    let mut min: Option<Instant> = None;
+    let mut fold = |d: Option<Instant>| {
+        if let Some(d) = d {
+            min = Some(min.map_or(d, |m| m.min(d)));
+        }
+    };
+    for group in groups {
+        for lane in &group.lanes {
+            for job in &lane.staged {
+                if let Some(tok) = &job.batch {
+                    fold(tok.deadline);
+                }
+                for (i, (tok, _)) in job.tokens.iter().enumerate() {
+                    if !job.done.get(i).copied().unwrap_or(false) {
+                        fold(tok.deadline);
+                    }
+                }
+            }
+        }
+    }
+    min
+}
+
+/// Dispatcher-side shed pass: resolve every request whose deadline has
+/// already expired while it waits where the lane pop cannot see it —
+/// the batcher queue (EDF order keeps expired entries a contiguous
+/// prefix) and the per-lane stages. Shed staged rows are marked done in
+/// place and the job stays staged, so the routed/done accounting is
+/// untouched and the lane pop recycles an all-shed job without running
+/// the engine. Batcher sheds (no definite bucket) land in `misc_shed`;
+/// staged sheds in the owning bucket's stat.
+fn shed_expired_work(
+    groups: &mut [LaneGroup],
+    batcher: &mut Batcher<ReqToken>,
+    now: Instant,
+    misc_shed: &mut usize,
+) {
+    for tok in batcher.shed_expired(now) {
+        tok.shed();
+        *misc_shed += 1;
+    }
+    for group in groups.iter_mut() {
+        let mut shed = 0usize;
+        for lane in &mut group.lanes {
+            for job in &mut lane.staged {
+                if let Some(tok) = &job.batch {
+                    if tok.expired(now) {
+                        tok.shed();
+                        shed += 1;
+                        job.batch = None;
+                    }
+                }
+                if job.done.len() != job.tokens.len() {
+                    job.done = vec![false; job.tokens.len()];
+                }
+                for ((tok, _), done) in job.tokens.iter().zip(job.done.iter_mut()) {
+                    if !*done && tok.expired(now) {
+                        tok.shed();
+                        shed += 1;
+                        *done = true;
+                    }
+                }
+            }
+        }
+        group.stat.deadline_shed += shed;
+    }
+}
+
+/// Estimated queue delay (seconds) a request admitted *now* would see
+/// before its batch starts on one of `group`'s lanes: the EWMA batch
+/// service time scaled by the per-lane backlog it queues behind, plus
+/// its own slot. 0 while the estimate is unknown (no completed batch
+/// yet), so a cold server never sheds a live budget.
+fn admission_estimate_s(group: &LaneGroup, ewma_s: f64) -> f64 {
+    if ewma_s <= 0.0 {
+        return 0.0;
+    }
+    let lanes = group.lanes.len().max(1);
+    let backlog: usize = group.lanes.iter().map(Lane::in_flight).sum();
+    ewma_s * (backlog as f64 / lanes as f64 + 1.0)
+}
+
+/// The admission-time shed test: true when the request's budget already
+/// cannot be met — it is expired at the door (`now >= deadline`,
+/// deterministic regardless of the estimate), or the queue-delay
+/// estimate reaches past its deadline. Hinted and pre-formed-batch
+/// requests are judged against their bucket; an unhinted request
+/// against the most optimistic bucket (it sheds only when every bucket
+/// is doomed). Deadline-less requests never shed here.
+fn admission_doomed(
+    deadline: Option<Instant>,
+    hint_gi: Option<usize>,
+    groups: &[LaneGroup],
+    ewma: &[f64],
+    now: Instant,
+) -> bool {
+    let Some(d) = deadline else { return false };
+    if now >= d {
+        return true;
+    }
+    let est = match hint_gi {
+        Some(gi) => admission_estimate_s(&groups[gi], ewma[gi]),
+        None => groups
+            .iter()
+            .zip(ewma)
+            .map(|(g, &e)| admission_estimate_s(g, e))
+            .fold(f64::INFINITY, f64::min),
+    };
+    if !est.is_finite() {
+        return false;
+    }
+    now + Duration::from_secs_f64(est) >= d
+}
+
+/// Index of the bucket with the lowest queue-delay estimate — where an
+/// unhinted admission-shed is attributed (the bucket that came closest
+/// to serving it).
+fn best_group(groups: &[LaneGroup], ewma: &[f64]) -> usize {
+    let mut best = 0;
+    let mut best_est = f64::INFINITY;
+    for (gi, (group, &e)) in groups.iter().zip(ewma).enumerate() {
+        let est = admission_estimate_s(group, e);
+        if est < best_est {
+            best_est = est;
+            best = gi;
+        }
+    }
+    best
+}
+
+/// Live deadline-shed total across the server: per-bucket folded stats
+/// (admission + staged sheds, and lanes already joined) plus the
+/// running counters of lane threads still alive. Monotone — a lane's
+/// counter is absorbed into its group's stat exactly when the lane is
+/// folded away. The SLO controller's feedback signal.
+fn live_shed(groups: &[LaneGroup]) -> u64 {
+    let mut total = 0u64;
+    for group in groups {
+        total += group.stat.deadline_shed as u64;
+        for lane in group.lanes.iter().chain(&group.retiring) {
+            total += lane.shed_live.load(Ordering::Relaxed);
+        }
+    }
+    total
+}
+
+/// Shed-rate totals at the SLO controller's last control pass
+/// ([`LaneConfig::slo`]); deltas against them give the per-window rate.
+struct SloWindow {
+    admitted: u64,
+    shed: u64,
+}
+
 /// The per-lane worker: builds the engine on this thread, reports its
 /// shape, then drains the job queue FIFO until it closes. Transient
 /// engine failures (errors, panics, short outputs) are retried in-lane
@@ -468,6 +671,9 @@ fn lane_thread<E, F>(
     jobs: Bounded<LaneJob>,
     free: Bounded<Vec<f32>>,
     done_jobs: Arc<AtomicU64>,
+    busy_ns: Arc<AtomicU64>,
+    shed_live: Arc<AtomicU64>,
+    wake: Bounded<Admit>,
     ready: mpsc::Sender<Result<(usize, usize), String>>,
     retry: RetryPolicy,
     dead_letter: DeadLetter,
@@ -507,6 +713,9 @@ where
 
     let mut wait_sum = 0.0f64;
     while let Some(mut job) = jobs.pop() {
+        // The pop freed a job-queue slot: kick the dispatcher so staged
+        // work flushes into it on the event instead of a poll tick.
+        wake.kick();
         let started = Instant::now();
         // Deadline shedding happens HERE, at pop time: a request whose
         // deadline expired while it was staged or queued is resolved as
@@ -517,8 +726,10 @@ where
             if tok.expired(started) {
                 tok.shed();
                 stat.deadline_shed += 1;
+                shed_live.fetch_add(1, Ordering::Relaxed);
                 let _ = free.try_push(job.input);
                 done_jobs.fetch_add(1, Ordering::Relaxed);
+                wake.kick();
                 continue;
             }
         }
@@ -529,12 +740,14 @@ where
             if !*done && tok.expired(started) {
                 tok.shed();
                 stat.deadline_shed += 1;
+                shed_live.fetch_add(1, Ordering::Relaxed);
                 *done = true;
             }
         }
         if job.batch.is_none() && job.done.iter().all(|d| *d) {
             let _ = free.try_push(job.input);
             done_jobs.fetch_add(1, Ordering::Relaxed);
+            wake.kick();
             continue;
         }
         wait_sum += started.duration_since(job.routed).as_secs_f64();
@@ -550,7 +763,9 @@ where
                 .unwrap_or_else(|p| {
                     Err(anyhow::anyhow!("lane {bucket} engine panicked: {}", panic_message(p)))
                 });
-            stat.busy_s += t0.elapsed().as_secs_f64();
+            let spent = t0.elapsed();
+            stat.busy_s += spent.as_secs_f64();
+            busy_ns.fetch_add(spent.as_nanos() as u64, Ordering::Relaxed);
             job.attempts += 1;
             // A short output would panic the row slicing below (outside
             // the per-job panic guard) and kill the lane; demote it to a
@@ -582,6 +797,9 @@ where
                 stat.mean_queue_wait_s =
                     if stat.n_batches == 0 { 0.0 } else { wait_sum / stat.n_batches as f64 };
                 stat.steals = engine.steals().unwrap_or(0);
+                // Wake the dispatcher so the supervision pass notices
+                // the dead-lettered work before its next timed tick.
+                wake.kick();
                 return (stat, latencies, fill_sum);
             }
             if job.attempts > retry.max_retries
@@ -600,6 +818,7 @@ where
                 if tok.expired(now) {
                     tok.shed();
                     stat.deadline_shed += 1;
+                    shed_live.fetch_add(1, Ordering::Relaxed);
                     job.batch = None;
                     break Ok(Vec::new());
                 }
@@ -608,6 +827,7 @@ where
                     if !*done && tok.expired(now) {
                         tok.shed();
                         stat.deadline_shed += 1;
+                        shed_live.fetch_add(1, Ordering::Relaxed);
                         *done = true;
                     }
                 }
@@ -647,10 +867,13 @@ where
                     fail_requests(tokens, batch, &done, &msg);
             }
         }
-        // Recycle the padded buffer (dropped if the pool is full), then
-        // publish the completion (the scaling pass's in-flight clock).
+        // Recycle the padded buffer (dropped if the pool is full),
+        // publish the completion (the scaling pass's in-flight clock),
+        // and kick the dispatcher: a buffer and a job slot just freed,
+        // which is exactly the event a stalled formation pass waits on.
         let _ = free.try_push(input);
         done_jobs.fetch_add(1, Ordering::Relaxed);
+        wake.kick();
     }
     stat.mean_queue_wait_s =
         if stat.n_batches == 0 { 0.0 } else { wait_sum / stat.n_batches as f64 };
@@ -674,6 +897,7 @@ fn spawn_lane<E, F>(
     config: &LaneConfig,
     elastic: bool,
     dead_letter: &DeadLetter,
+    wake: &Bounded<Admit>,
 ) -> Result<(Lane, ReadySignal)>
 where
     E: InferEngine + 'static,
@@ -682,18 +906,35 @@ where
     let jobs: Bounded<LaneJob> = Bounded::new(config.lane_cap);
     let free: Bounded<Vec<f32>> = Bounded::new(config.buffers_per_lane);
     let done_jobs = Arc::new(AtomicU64::new(0));
+    let busy_ns = Arc::new(AtomicU64::new(0));
+    let shed_live = Arc::new(AtomicU64::new(0));
     let (ready_tx, ready_rx) = mpsc::channel();
     let join = {
         let factory = Arc::clone(factory);
         let jobs = jobs.clone();
         let free = free.clone();
         let done_jobs = Arc::clone(&done_jobs);
+        let busy_ns = Arc::clone(&busy_ns);
+        let shed_live = Arc::clone(&shed_live);
+        let wake = wake.clone();
         let retry = config.retry.clone();
         let dead_letter = Arc::clone(dead_letter);
         std::thread::Builder::new()
             .name(format!("nimble-lane-{bucket}"))
             .spawn(move || {
-                lane_thread(factory, bucket, jobs, free, done_jobs, ready_tx, retry, dead_letter)
+                lane_thread(
+                    factory,
+                    bucket,
+                    jobs,
+                    free,
+                    done_jobs,
+                    busy_ns,
+                    shed_live,
+                    wake,
+                    ready_tx,
+                    retry,
+                    dead_letter,
+                )
             })
             .context("spawning lane thread")?
     };
@@ -708,6 +949,9 @@ where
             routed_jobs: 0,
             done_jobs,
             seen_done: 0,
+            busy_ns,
+            seen_busy_ns: 0,
+            shed_live,
             last_active: Instant::now(),
             elastic,
         },
@@ -718,24 +962,30 @@ where
 /// Spawn an elastic lane for a saturated group if the scaling policy
 /// allows; returns the new lane's index. The lane's padded-buffer pool
 /// is seeded from the group's spare buffers (recovered from retired
-/// lanes) so repeat scale-ups re-use warm allocations.
+/// lanes) so repeat scale-ups re-use warm allocations. `force` (the
+/// SLO controller's spawn) bypasses the `scale_up_backlog` pressure
+/// gate but never `max_lanes_per_bucket`.
+#[allow(clippy::too_many_arguments)]
 fn maybe_spawn<E, F>(
     group: &mut LaneGroup,
     config: &LaneConfig,
     example_len: usize,
     factory: &Arc<F>,
     dead_letter: &DeadLetter,
+    wake: &Bounded<Admit>,
+    force: bool,
 ) -> Option<usize>
 where
     E: InferEngine + 'static,
     F: Fn(usize) -> Result<E> + Send + Sync + 'static,
 {
     if group.lanes.len() >= config.scale.max_lanes_per_bucket
-        || group.pressure() < config.scale.scale_up_backlog
+        || (!force && group.pressure() < config.scale.scale_up_backlog)
     {
         return None;
     }
-    let Ok((lane, _ready)) = spawn_lane(factory, group.bucket, config, true, dead_letter) else {
+    let Ok((lane, _ready)) = spawn_lane(factory, group.bucket, config, true, dead_letter, wake)
+    else {
         return None;
     };
     for _ in 0..config.buffers_per_lane {
@@ -764,6 +1014,7 @@ fn route_batch<E, F>(
     example_len: usize,
     factory: &Arc<F>,
     dead_letter: &DeadLetter,
+    wake: &Bounded<Admit>,
 ) where
     E: InferEngine + 'static,
     F: Fn(usize) -> Result<E> + Send + Sync + 'static,
@@ -779,7 +1030,7 @@ fn route_batch<E, F>(
     }
     let mut li = group.pick_lane();
     if group.lanes[li].staged.len() >= stage_cap {
-        match maybe_spawn(group, config, example_len, factory, dead_letter) {
+        match maybe_spawn(group, config, example_len, factory, dead_letter, wake, false) {
             Some(fresh) => li = fresh,
             None => {
                 let _ = reply.send(Err(format!(
@@ -809,7 +1060,11 @@ fn route_batch<E, F>(
 /// `usize::MAX` so nothing already admitted is ever load-shed.
 /// `misc_failed` counts requests rejected here without reaching a lane
 /// (malformed lengths, unknown buckets) so the report's accounting
-/// still closes.
+/// still closes. Under EDF ([`LaneConfig::edf`]) a deadline the
+/// per-bucket queue-delay estimate already rules out is shed HERE, at
+/// admission, before the request occupies backlog ([`admission_doomed`]);
+/// `admitted` counts well-formed arrivals (the SLO controller's rate
+/// denominator).
 #[allow(clippy::too_many_arguments)]
 fn admit_one<E, F>(
     msg: Admit,
@@ -821,7 +1076,10 @@ fn admit_one<E, F>(
     config: &LaneConfig,
     factory: &Arc<F>,
     dead_letter: &DeadLetter,
+    wake: &Bounded<Admit>,
+    ewma: &[f64],
     misc_failed: &mut usize,
+    admitted: &mut u64,
 ) where
     E: InferEngine + 'static,
     F: Fn(usize) -> Result<E> + Send + Sync + 'static,
@@ -833,15 +1091,39 @@ fn admit_one<E, F>(
                     reply.send(Err(format!("bad input length {} != {example_len}", input.len())));
                 *misc_failed += 1;
             } else {
-                // Hinted arrivals feed the bucket's admission pressure.
-                if let Some(gi) = hint.and_then(|h| group_index.get(&h)) {
-                    groups[*gi].hinted_since_scale += 1;
+                *admitted += 1;
+                let hint_gi = hint.and_then(|h| group_index.get(&h)).copied();
+                if config.edf
+                    && admission_doomed(deadline, hint_gi, groups, ewma, Instant::now())
+                {
+                    let gi = hint_gi.unwrap_or_else(|| best_group(groups, ewma));
+                    ReqToken { reply, deadline }.shed();
+                    groups[gi].stat.deadline_shed += 1;
+                    groups[gi].stat.admission_shed += 1;
+                } else {
+                    // Hinted arrivals feed the bucket's admission pressure.
+                    if let Some(gi) = hint_gi {
+                        groups[gi].hinted_since_scale += 1;
+                    }
+                    if config.edf {
+                        batcher.push_request(ReqToken { reply, deadline }, input, hint, deadline);
+                    } else {
+                        batcher.push_hinted(ReqToken { reply, deadline }, input, hint);
+                    }
                 }
-                batcher.push_hinted(ReqToken { reply, deadline }, input, hint);
             }
         }
         Admit::Batch { bucket, input, deadline, reply } => match group_index.get(&bucket) {
             Some(&gi) if input.len() == bucket * example_len => {
+                *admitted += 1;
+                if config.edf
+                    && admission_doomed(deadline, Some(gi), groups, ewma, Instant::now())
+                {
+                    ReqToken { reply, deadline }.shed();
+                    groups[gi].stat.deadline_shed += 1;
+                    groups[gi].stat.admission_shed += 1;
+                    return;
+                }
                 route_batch(
                     &mut groups[gi],
                     stage_cap,
@@ -852,6 +1134,7 @@ fn admit_one<E, F>(
                     example_len,
                     factory,
                     dead_letter,
+                    wake,
                 );
             }
             Some(_) => {
@@ -883,11 +1166,13 @@ fn scale_groups<E, F>(
     example_len: usize,
     factory: &Arc<F>,
     dead_letter: &DeadLetter,
+    wake: &Bounded<Admit>,
+    ewma: &mut [f64],
 ) where
     E: InferEngine + 'static,
     F: Fn(usize) -> Result<E> + Send + Sync + 'static,
 {
-    for group in groups.iter_mut() {
+    for (group, bucket_ewma) in groups.iter_mut().zip(ewma.iter_mut()) {
         // Reap retiring lanes whose threads finished draining.
         let mut i = 0;
         while i < group.retiring.len() {
@@ -903,12 +1188,29 @@ fn scale_groups<E, F>(
         // Advance each live lane's idleness clock past any completions
         // since the last pass (completion times themselves are not
         // published; observing them at pass cadence only delays retire
-        // by at most one SCALE_POLL, never hastens it).
+        // by at most one SCALE_POLL, never hastens it), and fold the
+        // window's mean batch service time into the bucket's EWMA —
+        // the queue-delay estimate behind admission-time shedding and
+        // the SLO controller. Jobs resolved without running the engine
+        // (all rows shed) dilute the mean; the estimator tolerates
+        // that: it only ever under-estimates, never sheds spuriously.
         for lane in &mut group.lanes {
             let done = lane.done_jobs.load(Ordering::Relaxed);
             if done != lane.seen_done {
+                let busy = lane.busy_ns.load(Ordering::Relaxed);
+                let jobs = done - lane.seen_done;
+                let busy_delta = busy.saturating_sub(lane.seen_busy_ns);
                 lane.seen_done = done;
+                lane.seen_busy_ns = busy;
                 lane.last_active = Instant::now();
+                if busy_delta > 0 {
+                    let sample = busy_delta as f64 / 1e9 / jobs as f64;
+                    *bucket_ewma = if *bucket_ewma <= 0.0 {
+                        sample
+                    } else {
+                        EWMA_ALPHA * sample + (1.0 - EWMA_ALPHA) * *bucket_ewma
+                    };
+                }
             }
         }
         // Dead-lane detection, seed included: a dead lane either closed
@@ -948,7 +1250,7 @@ fn scale_groups<E, F>(
         // deterministic); if the rebuild itself fails the bucket is
         // marked broken and fails fast instead of rebuilding forever.
         if group.lanes.is_empty() && group.broken.is_none() {
-            match spawn_lane(factory, group.bucket, config, false, dead_letter) {
+            match spawn_lane(factory, group.bucket, config, false, dead_letter, wake) {
                 Ok((lane, ready_rx)) => match ready_rx.recv() {
                     Ok(Ok(_shape)) => {
                         for _ in 0..config.buffers_per_lane {
@@ -1013,6 +1315,83 @@ fn scale_groups<E, F>(
     }
 }
 
+/// The SLO control pass ([`LaneConfig::slo`]), run at scale-pass
+/// cadence: hold the live shed rate under the
+/// `Runtime::builder().slo(target)` goal by growing lanes ahead of
+/// demand. **Feedback** is the measured shed rate over the last control
+/// window (live lane counters + dispatcher-side sheds over admitted
+/// arrivals). **Feed-forward** is the DES's FIFO-server shed law
+/// ([`crate::sim::simulate_lanes_deadline`]: a request sheds iff its
+/// start time reaches its deadline) applied to the live backlog through
+/// the EWMA queue-delay estimate — staged requests whose estimated
+/// start already breaches their deadline count as predicted sheds
+/// before they happen. Either rate crossing the target force-spawns a
+/// lane for the breaching bucket (bypassing `scale_up_backlog`, never
+/// `max_lanes_per_bucket`); scale-down stays with the idle-retire rule.
+#[allow(clippy::too_many_arguments)]
+fn slo_pass<E, F>(
+    groups: &mut [LaneGroup],
+    config: &LaneConfig,
+    example_len: usize,
+    factory: &Arc<F>,
+    dead_letter: &DeadLetter,
+    wake: &Bounded<Admit>,
+    ewma: &[f64],
+    window: &mut SloWindow,
+    admitted: u64,
+    misc_shed: usize,
+    target: f64,
+    now: Instant,
+) where
+    E: InferEngine + 'static,
+    F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+{
+    let shed_now = live_shed(groups) + misc_shed as u64;
+    let window_admitted = admitted.saturating_sub(window.admitted);
+    let window_shed = shed_now.saturating_sub(window.shed);
+    window.admitted = admitted;
+    window.shed = shed_now;
+    let feedback = if window_admitted == 0 {
+        0.0
+    } else {
+        window_shed as f64 / window_admitted as f64
+    };
+    for (gi, group) in groups.iter_mut().enumerate() {
+        let est = admission_estimate_s(group, ewma[gi]);
+        let horizon = now + Duration::from_secs_f64(est);
+        let mut at_risk = 0usize;
+        let mut with_deadline = 0usize;
+        for lane in &group.lanes {
+            for job in &lane.staged {
+                if let Some(tok) = &job.batch {
+                    if let Some(d) = tok.deadline {
+                        with_deadline += 1;
+                        if horizon >= d {
+                            at_risk += 1;
+                        }
+                    }
+                }
+                for (i, (tok, _)) in job.tokens.iter().enumerate() {
+                    if job.done.get(i).copied().unwrap_or(false) {
+                        continue;
+                    }
+                    if let Some(d) = tok.deadline {
+                        with_deadline += 1;
+                        if horizon >= d {
+                            at_risk += 1;
+                        }
+                    }
+                }
+            }
+        }
+        let feedforward =
+            if with_deadline == 0 { 0.0 } else { at_risk as f64 / with_deadline as f64 };
+        if feedback > target || feedforward > target {
+            let _ = maybe_spawn(group, config, example_len, factory, dead_letter, wake, true);
+        }
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn dispatcher_thread<E, F>(
     admission: Bounded<Admit>,
@@ -1023,6 +1402,7 @@ fn dispatcher_thread<E, F>(
     factory: Arc<F>,
     dead_letter: DeadLetter,
     health: Arc<HealthState>,
+    wakeups: Arc<AtomicU64>,
     report_tx: mpsc::Sender<ServingReport>,
 ) where
     E: InferEngine + 'static,
@@ -1034,18 +1414,41 @@ fn dispatcher_thread<E, F>(
     let started = Instant::now();
     // Admission closed (by shutdown/drain or the server handle dropping).
     let mut closed = false;
-    // Last form pass hit a saturated lane: poll instead of spinning on
-    // the (already-passed) batcher deadline.
+    // Last form pass hit a saturated lane: its (already-passed) flush
+    // deadline is not actionable until a lane event, so the wait must
+    // not spin on it — the lane-free kick is the wakeup instead.
     let mut stalled = false;
     let mut last_scale = Instant::now();
     // Requests rejected before reaching any lane (malformed inputs,
     // unknown buckets) — folded into the report so accounting closes.
     let mut misc_failed = 0usize;
-    // Dead-lettered jobs waiting out their retry backoff before being
-    // re-admitted to a replacement lane.
+    // Requests deadline-shed out of the batcher queue (expired while
+    // waiting, no definite bucket to attribute them to).
+    let mut misc_shed = 0usize;
+    // Per-bucket EWMA batch service time (seconds), indexed like
+    // `groups` — the queue-delay estimate behind admission-time
+    // shedding and the SLO controller's feed-forward term.
+    let mut ewma: Vec<f64> = vec![0.0; groups.len()];
+    // Well-formed requests admitted (the SLO rate denominator).
+    let mut admitted = 0u64;
+    // Admission-queue kick counter last observed: lane threads kick
+    // when a job slot or pooled buffer frees, so the dispatcher wakes
+    // on the event the old poll clamps were waiting for. Sampled before
+    // any wait so a kick delivered while the dispatcher works is seen
+    // on the next wait, never lost.
+    let mut seen_kicks = admission.kicks();
+    // SLO control-pass window totals.
+    let mut slo_window = SloWindow { admitted: 0, shed: 0 };
+    // Dead-lettered jobs waiting out their retry backoff: (due, bucket, job).
     let mut retry_backlog: Vec<(Instant, usize, LaneJob)> = Vec::new();
 
     'outer: loop {
+        wakeups.fetch_add(1, Ordering::Relaxed);
+        // Resolve deadlines that expired where the lane pop cannot see
+        // them (batcher queue + staged jobs) before forming batches.
+        if config.edf {
+            shed_expired_work(&mut groups, &mut batcher, Instant::now(), &mut misc_shed);
+        }
         for group in &mut groups {
             for lane in &mut group.lanes {
                 flush_staged(lane);
@@ -1056,7 +1459,31 @@ fn dispatcher_thread<E, F>(
         // (resetting it every admitted message would erase the signal
         // before it could ever reach scale_up_backlog).
         if last_scale.elapsed() >= SCALE_POLL {
-            scale_groups(&mut groups, &config, example_len, &factory, &dead_letter);
+            scale_groups(
+                &mut groups,
+                &config,
+                example_len,
+                &factory,
+                &dead_letter,
+                &admission,
+                &mut ewma,
+            );
+            if let Some(target) = config.slo {
+                slo_pass(
+                    &mut groups,
+                    &config,
+                    example_len,
+                    &factory,
+                    &dead_letter,
+                    &admission,
+                    &ewma,
+                    &mut slo_window,
+                    admitted,
+                    misc_shed,
+                    target,
+                    Instant::now(),
+                );
+            }
             health.set_degraded(
                 groups.iter().filter(|g| g.broken.is_some()).map(|g| g.bucket).collect(),
             );
@@ -1107,8 +1534,10 @@ fn dispatcher_thread<E, F>(
         }
 
         // --- Wait for the next admission event. ---
-        let any_staged =
-            groups.iter().any(|g| g.lanes.iter().any(|l| !l.staged.is_empty()));
+        // ONE timestamp for the whole wait computation: every deadline
+        // below derives from this read, so the bounds cannot drift
+        // apart across re-reads of the clock.
+        let now = Instant::now();
         // Elastic activity (scaled-up groups or draining retirees) needs
         // periodic scaling passes; static deployments never poll for it.
         let elastic_active =
@@ -1116,7 +1545,10 @@ fn dispatcher_thread<E, F>(
         // While anything is in flight, a lane could die and dead-letter
         // its work with no admission event to wake us — bound the wait
         // so the supervision pass always runs soon after. A fully idle
-        // server still blocks indefinitely.
+        // server still blocks indefinitely. Saturated lanes no longer
+        // poll: lane threads kick the admission queue when a job slot
+        // or pooled buffer frees, which is exactly the event the old
+        // `stalled` / `any_staged` poll clamps were spinning for.
         let supervision = !retry_backlog.is_empty()
             || groups.iter().any(|g| {
                 g.broken.is_some()
@@ -1141,31 +1573,42 @@ fn dispatcher_thread<E, F>(
                     &config,
                     &factory,
                     &dead_letter,
+                    &admission,
+                    &ewma,
                     &mut misc_failed,
+                    &mut admitted,
                 );
             }
         }
-        let msg = if closed {
-            // Nothing left to pop; poll the drain forward.
-            std::thread::sleep(POLL);
-            None
-        } else if batcher.pending() >= config.backlog_cap {
-            // Backpressure: pause admission until the backlog drains.
-            std::thread::sleep(POLL);
+        let msg = if closed || batcher.pending() >= config.backlog_cap {
+            // Draining (nothing left to pop), or backpressure (the
+            // batcher is at its cap and admission must pause): progress
+            // now depends only on lane events, so park on the kick
+            // counter instead of sleep-polling, bounded by the
+            // supervision cadence.
+            seen_kicks = admission.wait_kick(now + SCALE_POLL, seen_kicks);
             None
         } else {
             let mut deadline = batcher.next_deadline();
-            if any_staged {
-                let poll_at = Instant::now() + POLL;
-                deadline = Some(deadline.map_or(poll_at, |d| d.min(poll_at)));
-            }
             if stalled {
-                // The oldest deadline already passed but its lane was
-                // saturated; waiting on it again would spin.
-                deadline = Some(Instant::now() + POLL);
+                // Formation is blocked on lane capacity, so an
+                // already-due flush deadline is not actionable —
+                // waiting on it would spin. Keep only deadlines still
+                // in the future (request-deadline sheds); the wakeup
+                // that unblocks formation is the lane-free kick.
+                deadline = deadline.filter(|d| *d > now);
+            }
+            // A deadline whose only copy sits in a staged batch must
+            // wake the dispatcher too, so the shed pass resolves it on
+            // time (pop-time-only mode keeps the PR-5 semantics: staged
+            // deadlines resolve when the lane reaches them).
+            if config.edf {
+                if let Some(d) = staged_min_deadline(&groups) {
+                    deadline = Some(deadline.map_or(d, |b| b.min(d)));
+                }
             }
             if elastic_active || supervision {
-                let scale_at = Instant::now() + SCALE_POLL;
+                let scale_at = now + SCALE_POLL;
                 deadline = Some(deadline.map_or(scale_at, |d| d.min(scale_at)));
             }
             match deadline {
@@ -1173,14 +1616,18 @@ fn dispatcher_thread<E, F>(
                     closed = true;
                     None
                 }),
-                Some(d) => match admission.pop_deadline(d) {
-                    PopResult::Item(m) => Some(m),
-                    PopResult::TimedOut => None,
-                    PopResult::Closed => {
-                        closed = true;
-                        None
+                Some(d) => {
+                    let (res, kicks) = admission.pop_kicked(d, seen_kicks);
+                    seen_kicks = kicks;
+                    match res {
+                        PopResult::Item(m) => Some(m),
+                        PopResult::TimedOut => None,
+                        PopResult::Closed => {
+                            closed = true;
+                            None
+                        }
                     }
-                },
+                }
             }
         };
         if let Some(m) = msg {
@@ -1194,7 +1641,10 @@ fn dispatcher_thread<E, F>(
                 &config,
                 &factory,
                 &dead_letter,
+                &admission,
+                &ewma,
                 &mut misc_failed,
+                &mut admitted,
             );
         }
 
@@ -1215,8 +1665,13 @@ fn dispatcher_thread<E, F>(
             if group.lanes.is_empty() {
                 // The bucket is broken (its last lane died and the
                 // rebuild failed): resolve its requests instead of
-                // leaving them in the batcher forever.
-                let Some(msg) = group.broken.clone() else { break };
+                // leaving them in the batcher forever. A bucket still
+                // rebuilding counts as stalled — its flush deadline is
+                // not actionable until the scaling pass restores a lane.
+                let Some(msg) = group.broken.clone() else {
+                    stalled = true;
+                    break;
+                };
                 let mut buf = Vec::new();
                 let Some(formed) = batcher.form_with(example_len, &mut buf) else { break };
                 for (tok, _) in formed.tokens {
@@ -1232,7 +1687,8 @@ fn dispatcher_thread<E, F>(
                 // Saturated (stage full, or every pooled buffer in
                 // flight): grow the group if the policy allows,
                 // otherwise the requests wait in the batcher.
-                match maybe_spawn(group, &config, example_len, &factory, &dead_letter) {
+                match maybe_spawn(group, &config, example_len, &factory, &dead_letter, &admission, false)
+                {
                     Some(fresh) => li = fresh,
                     None => {
                         stalled = true;
@@ -1320,7 +1776,8 @@ fn dispatcher_thread<E, F>(
             Summary::from_samples(all_latencies)
         },
         mean_batch_fill: if n_batches == 0 { 0.0 } else { fill_sum as f64 / n_batches as f64 },
-        deadline_shed: lane_stats.iter().map(|l| l.deadline_shed).sum(),
+        deadline_shed: lane_stats.iter().map(|l| l.deadline_shed).sum::<usize>() + misc_shed,
+        admission_shed: lane_stats.iter().map(|l| l.admission_shed).sum(),
         failed: lane_stats.iter().map(|l| l.failed).sum::<usize>() + misc_failed,
         retries: lane_stats.iter().map(|l| l.retries).sum(),
         lanes: lane_stats,
@@ -1459,6 +1916,7 @@ pub struct LaneServer {
     output_len: usize,
     batch_sizes: Vec<usize>,
     health: Arc<HealthState>,
+    wakeups: Arc<AtomicU64>,
     report_rx: mpsc::Receiver<ServingReport>,
 }
 
@@ -1495,7 +1953,8 @@ impl LaneServer {
         let mut lanes: Vec<Lane> = Vec::with_capacity(sizes.len());
         let mut readies = Vec::with_capacity(sizes.len());
         for &bucket in &sizes {
-            let (lane, ready_rx) = spawn_lane(&factory, bucket, &config, false, &dead_letter)?;
+            let (lane, ready_rx) =
+                spawn_lane(&factory, bucket, &config, false, &dead_letter, &admission)?;
             lanes.push(lane);
             readies.push(ready_rx);
         }
@@ -1550,9 +2009,11 @@ impl LaneServer {
 
         let policy = BatchPolicy { batch_sizes: sizes.clone(), max_wait: config.max_wait };
         let (report_tx, report_rx) = mpsc::channel();
+        let wakeups = Arc::new(AtomicU64::new(0));
         let dispatcher = {
             let admission = admission.clone();
             let health = Arc::clone(&health);
+            let wakeups = Arc::clone(&wakeups);
             std::thread::Builder::new()
                 .name("nimble-dispatch".into())
                 .spawn(move || {
@@ -1565,6 +2026,7 @@ impl LaneServer {
                         factory,
                         dead_letter,
                         health,
+                        wakeups,
                         report_tx,
                     )
                 })
@@ -1577,6 +2039,7 @@ impl LaneServer {
             output_len,
             batch_sizes: sizes,
             health,
+            wakeups,
             report_rx,
         })
     }
@@ -1688,6 +2151,16 @@ impl LaneServer {
         self.health.snapshot()
     }
 
+    /// Dispatcher loop iterations since start — a diagnostics counter.
+    /// The dispatcher parks between events (admission messages, lane
+    /// kicks, due deadlines, supervision ticks), so this grows with the
+    /// event count, not with wall time: a saturated lane no longer
+    /// degenerates into a poll loop (pinned by the bounded-wakeup
+    /// regression test).
+    pub fn dispatcher_wakeups(&self) -> u64 {
+        self.wakeups.load(Ordering::Relaxed)
+    }
+
     /// Blocking inference of one example.
     #[deprecated(note = "build a Runtime and call infer(InferRequest) — see rust/README.md")]
     pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
@@ -1772,6 +2245,172 @@ mod tests {
     fn inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
         let mut rng = Pcg32::new(seed);
         (0..n).map(|_| (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect()).collect()
+    }
+
+    /// Deterministic-shape engine with a configurable service time —
+    /// saturates a lane for a controlled window.
+    struct SlowEngine {
+        buckets: Vec<usize>,
+        delay: Duration,
+    }
+
+    impl InferEngine for SlowEngine {
+        fn batch_sizes(&self) -> Vec<usize> {
+            self.buckets.clone()
+        }
+        fn example_len(&self) -> usize {
+            4
+        }
+        fn output_len(&self) -> usize {
+            2
+        }
+        fn infer_batch(&mut self, bucket: usize, input: &[f32]) -> Result<Vec<f32>> {
+            std::thread::sleep(self.delay);
+            Ok(vec![input.iter().sum::<f32>(); bucket * 2])
+        }
+    }
+
+    fn slow_server(delay: Duration, config: LaneConfig) -> LaneServer {
+        LaneServer::start_inner(
+            &[1],
+            move |_bucket| Ok(SlowEngine { buckets: vec![1], delay }),
+            config,
+        )
+        .expect("slow lane server")
+    }
+
+    #[test]
+    fn dispatcher_wakeups_stay_bounded_while_a_lane_is_saturated() {
+        // The busy-wait regression: the old wait loop clamped to a
+        // 500us poll tick whenever a lane was saturated, so a 300ms
+        // saturation window cost 600+ dispatcher wakeups. Lane threads
+        // now kick the dispatcher on job-slot/buffer frees, so wakeups
+        // scale with events (admissions + completions + 5ms supervision
+        // ticks), not with wall time.
+        let server = slow_server(
+            Duration::from_millis(10),
+            LaneConfig {
+                max_wait: Duration::from_micros(100),
+                lane_cap: 1,
+                buffers_per_lane: 2,
+                ..LaneConfig::default()
+            },
+        );
+        let client = server.client();
+        let pending: Vec<_> = (0..30)
+            .map(|_| client.submit_raw(vec![0.25; 4], None, None).unwrap())
+            .collect();
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let wakeups = server.dispatcher_wakeups();
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.n_requests, 30);
+        assert_eq!(report.failed, 0);
+        // Event budget: ~30 admissions + 2 kicks per job + one 5ms
+        // supervision tick per job's 10ms service + slack. The old
+        // poll loop burned ~600 wakeups on this trace (and grows with
+        // wall time); the bound holds even on a slow machine because
+        // supervision ticks amortize 5ms each.
+        assert!(
+            wakeups < 450,
+            "dispatcher woke {wakeups} times for 30 requests — poll loop is back?"
+        );
+    }
+
+    #[test]
+    fn staged_only_deadline_sheds_on_time() {
+        // The staged-deadline regression: a deadline whose only copy
+        // sits in a STAGED job (lane saturated, batcher empty) used to
+        // be invisible to the wait loop — it shed only when the lane
+        // eventually popped the job. The dispatcher now folds staged
+        // deadlines into its wait and sheds them the moment they come
+        // due.
+        let server = slow_server(
+            Duration::from_millis(100),
+            LaneConfig {
+                max_wait: Duration::from_micros(100),
+                lane_cap: 1,
+                buffers_per_lane: 3,
+                ..LaneConfig::default()
+            },
+        );
+        let client = server.client();
+        // R1 occupies the engine (~100ms); R2 fills the lane queue
+        // (lane_cap 1); R3 then stages with the only live deadline.
+        let r1 = client.submit_raw(vec![0.5; 4], None, None).unwrap();
+        std::thread::sleep(Duration::from_millis(25));
+        let r2 = client.submit_raw(vec![0.5; 4], None, None).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        let t0 = Instant::now();
+        let r3 = client
+            .submit_raw(vec![0.5; 4], None, Some(t0 + Duration::from_millis(40)))
+            .unwrap();
+        let res = r3.recv().unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(res.unwrap_err(), crate::serving::DEADLINE_SHED);
+        // Well before R1 finishes (100ms) — the old code shed this
+        // only at lane pop, ~200ms in.
+        assert!(
+            waited < Duration::from_millis(90),
+            "staged deadline shed {waited:?} after submit; must resolve at ~40ms"
+        );
+        r1.recv().unwrap().unwrap();
+        r2.recv().unwrap().unwrap();
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.n_requests, 2);
+        assert_eq!(report.deadline_shed, 1);
+        assert_eq!(report.failed, 0);
+    }
+
+    #[test]
+    fn doomed_budgets_shed_at_admission_once_the_estimate_warms() {
+        let server = slow_server(
+            Duration::from_millis(20),
+            LaneConfig {
+                max_wait: Duration::from_micros(100),
+                lane_cap: 1,
+                buffers_per_lane: 2,
+                ..LaneConfig::default()
+            },
+        );
+        let client = server.client();
+        // A request expired at the door sheds at admission even on a
+        // cold server (deterministic, estimate-independent).
+        let dead = client.submit_raw(vec![0.1; 4], None, Some(Instant::now())).unwrap();
+        assert_eq!(dead.recv().unwrap().unwrap_err(), crate::serving::DEADLINE_SHED);
+        // Warm the per-bucket service estimate (~20ms per batch).
+        for _ in 0..3 {
+            client.submit_raw(vec![0.1; 4], None, None).unwrap().recv().unwrap().unwrap();
+        }
+        // Saturate the lane, then submit a budget far below one service
+        // time: the EWMA estimate rules it out at admission — the reply
+        // arrives while the lane is still busy with the long work.
+        let long: Vec<_> = (0..2)
+            .map(|_| client.submit_raw(vec![0.1; 4], None, None).unwrap())
+            .collect();
+        let t0 = Instant::now();
+        let tight = client
+            .submit_raw(vec![0.1; 4], None, Some(t0 + Duration::from_millis(5)))
+            .unwrap();
+        let res = tight.recv().unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(res.unwrap_err(), crate::serving::DEADLINE_SHED);
+        assert!(
+            waited < Duration::from_millis(15),
+            "admission shed replied {waited:?} after submit; must not wait for the lane"
+        );
+        for rx in long {
+            rx.recv().unwrap().unwrap();
+        }
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.n_requests, 5);
+        assert_eq!(report.deadline_shed, 2);
+        assert!(
+            report.admission_shed >= 1,
+            "at least the expired-at-door request sheds at admission"
+        );
+        assert_eq!(report.failed, 0);
     }
 
     #[test]

@@ -40,6 +40,13 @@ pub struct LaneStat {
     /// [`failed`](Self::failed), closing the invariant
     /// `admitted == n_requests + deadline_shed + failed`.
     pub deadline_shed: usize,
+    /// Subset of [`deadline_shed`](Self::deadline_shed) resolved at
+    /// **admission**: the dispatcher's per-bucket queue-delay estimate
+    /// ruled the budget unmeetable (or the deadline had already passed
+    /// at the door), so the request was shed before it occupied any
+    /// backlog. The remainder shed later, at the dispatcher's expiry
+    /// sweep or at lane pop.
+    pub admission_shed: usize,
     /// Requests resolved as [`InferOutcome::Failed`](crate::serving::InferOutcome):
     /// overload load-shed replies, engine errors that exhausted the
     /// [`RetryPolicy`](crate::fault::RetryPolicy), and jobs orphaned by
@@ -75,6 +82,7 @@ impl LaneStat {
             mean_queue_wait_s: 0.0,
             alloc_events: 0,
             deadline_shed: 0,
+            admission_shed: 0,
             failed: 0,
             retries: 0,
             lanes_spawned: 0,
@@ -100,6 +108,7 @@ impl LaneStat {
         self.busy_s += other.busy_s;
         self.alloc_events += other.alloc_events;
         self.deadline_shed += other.deadline_shed;
+        self.admission_shed += other.admission_shed;
         self.failed += other.failed;
         self.retries += other.retries;
         self.steals += other.steals;
@@ -134,7 +143,11 @@ impl LaneStat {
                 String::new()
             },
             if self.deadline_shed > 0 {
-                format!(" shed={}", self.deadline_shed)
+                if self.admission_shed > 0 {
+                    format!(" shed={} (adm={})", self.deadline_shed, self.admission_shed)
+                } else {
+                    format!(" shed={}", self.deadline_shed)
+                }
             } else {
                 String::new()
             },
@@ -167,6 +180,11 @@ pub struct ServingReport {
     /// Requests shed because their deadline expired while they waited
     /// (sum over lanes for the lane scheduler).
     pub deadline_shed: usize,
+    /// Subset of [`deadline_shed`](Self::deadline_shed) resolved at
+    /// admission by the dispatcher's queue-delay estimate (sum over
+    /// lanes; always 0 for the single-engine-thread server, which has
+    /// no admission estimate).
+    pub admission_shed: usize,
     /// Requests resolved as `Failed` (sum over lanes): overload
     /// load-shed, engine errors past the retry budget, lane death.
     pub failed: usize,
@@ -215,6 +233,9 @@ impl ServingReport {
                 let mut extra = String::new();
                 if self.deadline_shed > 0 {
                     extra.push_str(&format!("  shed={}", self.deadline_shed));
+                    if self.admission_shed > 0 {
+                        extra.push_str(&format!(" (adm={})", self.admission_shed));
+                    }
                 }
                 if self.failed > 0 {
                     extra.push_str(&format!("  failed={}", self.failed));
@@ -252,6 +273,7 @@ mod tests {
             latency: Summary::from_samples(vec![0.01; 100]),
             mean_batch_fill: 5.0,
             deadline_shed: 0,
+            admission_shed: 0,
             failed: 0,
             retries: 0,
             lanes: Vec::new(),
@@ -273,6 +295,7 @@ mod tests {
             latency: Summary::from_samples(vec![0.01; 10]),
             mean_batch_fill: 2.5,
             deadline_shed: 3,
+            admission_shed: 1,
             failed: 2,
             retries: 1,
             lanes: vec![
@@ -310,6 +333,7 @@ mod tests {
         assert!(s.contains("arena=1536B"));
         assert!(s.contains("lanes=1/3 retired=2"), "scaling decisions must render: {s}");
         assert!(s.contains("shed=3"), "deadline sheds must render: {s}");
+        assert!(s.contains("(adm=1)"), "admission-shed subset must render: {s}");
         assert!(s.contains("failed=2"), "failures must render: {s}");
         assert!(s.contains("retries=1"), "retries must render: {s}");
         assert!(s.contains("steals=5"));

@@ -8,9 +8,19 @@
 //! topology) and submit through exactly two methods — blocking
 //! [`Runtime::infer`] and waitable [`Runtime::submit`] — both taking an
 //! [`InferRequest`] whose [`RequestOptions`] carry bucket hints and
-//! **deadlines** (expired-while-waiting requests are shed before
-//! execution, surfaced as [`InferOutcome::DeadlineShed`] and counted in
-//! [`ServingReport::deadline_shed`]).
+//! **deadlines**. Deadlines are the scheduling discipline, not just a
+//! filter: requests whose budget the per-bucket queue-delay estimate
+//! already rules out are shed *at admission* (broken out in
+//! [`ServingReport::admission_shed`]), batches form
+//! earliest-deadline-first with deadline-less traffic ranked last
+//! (FIFO ties — deadline-free workloads are bit-identical to the
+//! `builder().edf(false)` FIFO baseline), expired-while-waiting
+//! requests are shed before execution wherever they sit, and
+//! `builder().slo(target)` closes the loop with a shed-rate controller
+//! that force-spawns elastic lanes. Sheds surface as
+//! [`InferOutcome::DeadlineShed`] and count in
+//! [`ServingReport::deadline_shed`]; [`crate::sim::simulate_edf`]
+//! predicts the whole discipline offline.
 //!
 //! Two server topologies sit behind the façade, sharing the batcher and
 //! the [`InferEngine`](crate::coordinator::InferEngine) contract:

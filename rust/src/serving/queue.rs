@@ -39,6 +39,11 @@ pub enum PopResult<T> {
 struct State<T> {
     buf: VecDeque<T>,
     closed: bool,
+    /// Monotone event counter bumped by [`Bounded::kick`]: lets a
+    /// producer-side event (a lane freeing a job slot or retiring a
+    /// batch) wake a consumer parked in
+    /// [`Bounded::pop_kicked`] without enqueuing anything.
+    kicks: u64,
 }
 
 struct Shared<T> {
@@ -68,7 +73,11 @@ impl<T> Bounded<T> {
         assert!(cap >= 1, "bounded queue needs capacity >= 1");
         Bounded {
             shared: Arc::new(Shared {
-                state: Mutex::new(State { buf: VecDeque::with_capacity(cap), closed: false }),
+                state: Mutex::new(State {
+                    buf: VecDeque::with_capacity(cap),
+                    closed: false,
+                    kicks: 0,
+                }),
                 cap,
                 not_empty: Condvar::new(),
                 not_full: Condvar::new(),
@@ -169,6 +178,78 @@ impl<T> Bounded<T> {
         }
     }
 
+    /// The current kick counter. Sample it before doing other work, then
+    /// pass the sample to [`pop_kicked`](Self::pop_kicked): any kick that
+    /// lands in between returns immediately instead of being lost.
+    pub fn kicks(&self) -> u64 {
+        self.shared.state.lock().unwrap().kicks
+    }
+
+    /// Wake a consumer parked in [`pop_kicked`](Self::pop_kicked) (or
+    /// make its next call return immediately) without enqueuing an item.
+    /// Lane threads kick the admission queue when a job slot frees or a
+    /// batch retires, so the dispatcher wakes on the event instead of
+    /// polling for it.
+    pub fn kick(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.kicks = st.kicks.wrapping_add(1);
+        drop(st);
+        self.shared.not_empty.notify_all();
+    }
+
+    /// Like [`pop_deadline`](Self::pop_deadline), but also returns (as
+    /// `TimedOut`) when the kick counter moves past `seen` — including
+    /// kicks delivered *before* the call, so a wakeup can never be lost.
+    /// Returns the outcome plus the kick counter to pass to the next
+    /// call. `Instant::now()` is read at most once per wakeup.
+    pub fn pop_kicked(&self, deadline: Instant, seen: u64) -> (PopResult<T>, u64) {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            let kicks = st.kicks;
+            if let Some(item) = st.buf.pop_front() {
+                drop(st);
+                self.shared.not_full.notify_one();
+                return (PopResult::Item(item), kicks);
+            }
+            if st.closed {
+                return (PopResult::Closed, kicks);
+            }
+            if kicks != seen {
+                return (PopResult::TimedOut, kicks);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return (PopResult::TimedOut, kicks);
+            }
+            let (guard, _timeout) =
+                self.shared.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Park until the kick counter moves past `seen` or `deadline`
+    /// passes, *without* popping — and regardless of whether the queue
+    /// is closed (the dispatcher's drain keeps waiting on lane events
+    /// after admission closes). The backpressure/drain wait: the
+    /// dispatcher must not consume messages while the backlog is at its
+    /// cap, but still needs lane-event wakeups. Returns the current
+    /// kick counter to pass to the next call.
+    pub fn wait_kick(&self, deadline: Instant, seen: u64) -> u64 {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if st.kicks != seen {
+                return st.kicks;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return st.kicks;
+            }
+            let (guard, _timeout) =
+                self.shared.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
     /// Close the queue: producers fail from now on, consumers drain what
     /// is left. Idempotent.
     pub fn close(&self) {
@@ -220,6 +301,64 @@ mod tests {
         let r = q.pop_deadline(t0 + Duration::from_millis(20));
         assert!(matches!(r, PopResult::TimedOut));
         assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn kick_wakes_a_parked_consumer_and_is_never_lost() {
+        let q: Bounded<u32> = Bounded::new(1);
+        // A kick delivered before the wait is observed on entry, not lost.
+        let seen = q.kicks();
+        q.kick();
+        let t0 = Instant::now();
+        let (r, seen) = q.pop_kicked(t0 + Duration::from_secs(5), seen);
+        assert!(matches!(r, PopResult::TimedOut));
+        assert!(t0.elapsed() < Duration::from_secs(1), "pre-delivered kick returns at once");
+        // A kick delivered mid-wait wakes the consumer.
+        let q2 = q.clone();
+        let kicker = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.kick();
+        });
+        let t0 = Instant::now();
+        let (r, _seen) = q.pop_kicked(t0 + Duration::from_secs(5), seen);
+        assert!(matches!(r, PopResult::TimedOut));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        kicker.join().unwrap();
+    }
+
+    #[test]
+    fn pop_kicked_still_delivers_items_and_close() {
+        let q: Bounded<u32> = Bounded::new(2);
+        let seen = q.kicks();
+        q.push(9).unwrap();
+        let (r, seen) = q.pop_kicked(Instant::now() + Duration::from_millis(50), seen);
+        assert!(matches!(r, PopResult::Item(9)));
+        q.close();
+        let (r, _seen) = q.pop_kicked(Instant::now() + Duration::from_millis(50), seen);
+        assert!(matches!(r, PopResult::Closed));
+    }
+
+    #[test]
+    fn wait_kick_wakes_without_popping_and_survives_close() {
+        let q: Bounded<u32> = Bounded::new(2);
+        q.push(5).unwrap();
+        // A kick wakes the waiter without consuming the queued item.
+        let seen = q.kicks();
+        let q2 = q.clone();
+        let kicker = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.kick();
+        });
+        let t0 = Instant::now();
+        let seen = q.wait_kick(t0 + Duration::from_secs(5), seen);
+        assert!(t0.elapsed() < Duration::from_secs(1), "kick must wake the waiter");
+        assert_eq!(q.pop(), Some(5), "wait_kick must not consume items");
+        kicker.join().unwrap();
+        // On a closed quiescent queue it times out instead of spinning.
+        q.close();
+        let t0 = Instant::now();
+        let _ = q.wait_kick(t0 + Duration::from_millis(30), seen);
+        assert!(t0.elapsed() >= Duration::from_millis(25), "no early return on closed");
     }
 
     #[test]

@@ -38,12 +38,19 @@
 //! that used to force a new constructor (worker caps, arena pools, the
 //! shared work-stealing pool, elastic scaling) composes on
 //! [`RuntimeBuilder`]. **Deadlines** are the capability the old matrix
-//! could not express: a request whose deadline expires while it waits
-//! (batcher queue, lane stage, or lane queue) is *shed* before the
-//! engine runs it, surfaced as [`InferOutcome::DeadlineShed`] to the
-//! caller and counted in `ServingReport::deadline_shed` /
-//! `LaneStat::deadline_shed`. The DES predicts shed counts offline
-//! ([`crate::sim::simulate_lanes_deadline`]).
+//! could not express — and on the lane topology they are a first-class
+//! scheduling input, not just a filter: the batcher forms batches
+//! earliest-deadline-first (FIFO among equal or absent deadlines), the
+//! dispatcher sheds budgets it estimates unmeetable at *admission*
+//! (before they occupy backlog), and a request whose deadline expires
+//! while it waits (batcher queue, lane stage, or lane queue) is shed
+//! the moment it comes due. Every shed is surfaced as
+//! [`InferOutcome::DeadlineShed`] to the caller and counted in
+//! `ServingReport::deadline_shed` / `LaneStat::deadline_shed`
+//! (admission sheds also in `admission_shed`). An optional
+//! [`slo`](RuntimeBuilder::slo) target drives lane scaling from the
+//! live shed rate. The DES predicts shed counts offline
+//! ([`crate::sim::simulate_lanes_deadline`], [`crate::sim::simulate_edf`]).
 
 use anyhow::{Context, Result};
 use std::sync::mpsc;
@@ -424,6 +431,33 @@ impl RuntimeBuilder {
         self
     }
 
+    /// Earliest-deadline-first scheduling ([`LaneConfig::edf`]; default
+    /// **on**). When on, the batcher orders deadline-carrying requests
+    /// ahead of deadline-less ones (earliest first, FIFO among equal or
+    /// absent deadlines), the dispatcher sheds doomed budgets at
+    /// admission from its per-bucket queue-delay estimate, and expired
+    /// batcher/staged work is shed the moment it comes due.
+    /// `edf(false)` restores the strict-FIFO, pop-time-shed-only
+    /// discipline (the PR-5 behavior) — useful as a bench baseline.
+    /// Deadline-free workloads behave identically either way.
+    pub fn edf(mut self, on: bool) -> Self {
+        self.lane.edf = on;
+        self
+    }
+
+    /// SLO target shed rate ([`LaneConfig::slo`]): a periodic control
+    /// pass in the dispatcher compares the live shed rate (feedback)
+    /// and a queueing-estimate prediction over staged deadlines
+    /// (feed-forward) against `target_shed_rate` in `[0, 1]`, and
+    /// force-spawns lanes — up to
+    /// [`ScaleOptions::max_lanes_per_bucket`] — while either exceeds
+    /// it. Compose with [`elastic`](Self::elastic) to raise that
+    /// ceiling; requires the lane topology.
+    pub fn slo(mut self, target_shed_rate: f64) -> Self {
+        self.lane.slo = Some(target_shed_rate);
+        self
+    }
+
     /// Per-context worker cap (the executor's capped work-sharing
     /// pool). Ignored when a shared pool is set.
     pub fn worker_cap(mut self, cap: usize) -> Self {
@@ -538,6 +572,17 @@ impl RuntimeBuilder {
             "fault_plan() needs the lane topology (supervision and retry live in the \
              lanes): drop single_thread() or fault_plan()"
         );
+        anyhow::ensure!(
+            !(self.single_thread && self.lane.slo.is_some()),
+            "slo() needs the lane topology (the controller scales lanes): drop \
+             single_thread() or slo()"
+        );
+        if let Some(target) = self.lane.slo {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&target),
+                "slo() target shed rate must be in [0, 1], got {target}"
+            );
+        }
         #[cfg(feature = "xla")]
         if matches!(&self.source, Some(Source::Artifacts(_))) {
             anyhow::ensure!(
@@ -662,6 +707,12 @@ impl RuntimeBuilder {
             "build_with_factory owns engine construction; wrap its engines in \
              nimble::fault::ChaosEngine instead of fault_plan()"
         );
+        if let Some(target) = self.lane.slo {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&target),
+                "slo() target shed rate must be in [0, 1], got {target}"
+            );
+        }
         LaneServer::start_inner(&self.buckets, factory, self.lane)
             .map(Runtime::from_lanes)
     }
@@ -1069,6 +1120,52 @@ mod tests {
         assert_eq!(handle.health(), Health::Healthy);
         let _ = rt.drain().unwrap();
         assert_eq!(handle.health(), Health::Draining);
+    }
+
+    #[test]
+    fn slo_knob_is_validated_and_requires_the_lane_topology() {
+        let err = Runtime::builder()
+            .model("mini_inception")
+            .single_thread()
+            .slo(0.05)
+            .build();
+        assert!(err.is_err(), "slo() needs the lane controller");
+        let err = Runtime::builder().model("mini_inception").slo(1.5).build();
+        assert!(err.is_err(), "target shed rate outside [0, 1]");
+        let rt = Runtime::builder()
+            .model("mini_inception")
+            .buckets(&[1])
+            .slo(0.05)
+            .build()
+            .unwrap();
+        let len = rt.example_len();
+        let out = rt.infer(InferRequest::new(vec![0.1; len])).unwrap();
+        assert_eq!(out.len(), rt.output_len());
+        let _ = rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn edf_off_restores_fifo_and_still_sheds_at_pop() {
+        let rt = Runtime::builder()
+            .model("mini_inception")
+            .buckets(&[1])
+            .max_wait(Duration::from_micros(200))
+            .edf(false)
+            .build()
+            .unwrap();
+        let len = rt.example_len();
+        let shed = rt
+            .submit(InferRequest::new(vec![0.2; len]).deadline(Instant::now()))
+            .unwrap();
+        assert_eq!(shed.outcome().unwrap(), InferOutcome::DeadlineShed);
+        let ok = rt
+            .submit(InferRequest::new(vec![0.2; len]).deadline_in(Duration::from_secs(60)))
+            .unwrap();
+        assert!(matches!(ok.outcome().unwrap(), InferOutcome::Output(_)));
+        let report = rt.shutdown().unwrap();
+        assert_eq!(report.deadline_shed, 1);
+        assert_eq!(report.admission_shed, 0, "no admission estimate under edf(false)");
+        assert_eq!(report.n_requests, 1);
     }
 
     #[test]

@@ -411,6 +411,7 @@ fn engine_thread<E: InferEngine>(
         },
         mean_batch_fill: if n_batches == 0 { 0.0 } else { fill_sum as f64 / n_batches as f64 },
         deadline_shed,
+        admission_shed: 0,
         failed,
         retries: 0,
         lanes: Vec::new(),

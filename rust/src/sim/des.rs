@@ -972,6 +972,260 @@ pub fn simulate_faults(
     FaultSimResult { per_lane, total_s }
 }
 
+/// One bucket's offered traffic for the EDF-aware DES
+/// ([`simulate_edf`]): the bucket's compiled tape and costs, plus
+/// per-batch `(arrival_s, deadline_s)` pairs (`f64::INFINITY` = no
+/// deadline).
+pub struct EdfTraffic<'a> {
+    pub tape: &'a crate::aot::tape::ReplayTape,
+    pub costs: &'a [KernelCost],
+    /// Batch arrivals, ascending: `(arrival_s, absolute deadline_s)`.
+    pub batches: &'a [(f64, f64)],
+}
+
+/// The deadline discipline [`simulate_edf`] mirrors — the offline
+/// counterpart of `RuntimeBuilder::{edf, slo}` plus the lane ceiling of
+/// `ScaleOptions::max_lanes_per_bucket`.
+#[derive(Debug, Clone)]
+pub struct EdfSimPolicy {
+    /// Mirror of `LaneConfig::edf`: earliest-deadline-first dispatch
+    /// and admission-time shedding when true; strict FIFO with
+    /// start-time shedding only (the [`simulate_lanes_deadline`]
+    /// semantics) when false.
+    pub edf: bool,
+    /// Mirror of `RuntimeBuilder::slo`: target shed rate the controller
+    /// holds by force-spawning lanes (`None` = controller off).
+    pub slo: Option<f64>,
+    /// Lane ceiling the controller may spawn up to (1 = static).
+    pub max_lanes_per_bucket: usize,
+}
+
+/// Per-bucket prediction of [`simulate_edf`].
+#[derive(Debug, Clone)]
+pub struct EdfBucketStat {
+    /// Per-batch service time of this bucket's tape (single-lane DES
+    /// latency, [`simulate_tape`]`.total_s`).
+    pub service_s: f64,
+    /// Batches that started before their deadline.
+    pub completed: usize,
+    /// All deadline sheds: admission sheds plus batches whose deadline
+    /// passed while they queued.
+    pub shed: usize,
+    /// Subset of [`shed`](Self::shed) resolved at admission by the
+    /// queue-delay estimate (the live `admission_shed` counter).
+    pub admission_shed: usize,
+    /// Lanes ever live for this bucket (seed included; > 1 only when
+    /// the SLO controller spawned).
+    pub lanes_spawned: usize,
+    /// When the bucket's last served batch completes.
+    pub lane_end_s: f64,
+}
+
+/// Output of [`simulate_edf`].
+#[derive(Debug, Clone)]
+pub struct EdfSimResult {
+    pub per_bucket: Vec<EdfBucketStat>,
+    /// Makespan across buckets (buckets independent).
+    pub total_s: f64,
+}
+
+impl EdfSimResult {
+    pub fn completed(&self) -> usize {
+        self.per_bucket.iter().map(|b| b.completed).sum()
+    }
+
+    pub fn shed(&self) -> usize {
+        self.per_bucket.iter().map(|b| b.shed).sum()
+    }
+
+    pub fn admission_shed(&self) -> usize {
+        self.per_bucket.iter().map(|b| b.admission_shed).sum()
+    }
+
+    pub fn lanes_spawned(&self) -> usize {
+        self.per_bucket.iter().map(|b| b.lanes_spawned).sum()
+    }
+
+    /// Shed fraction of everything offered.
+    pub fn shed_rate(&self) -> f64 {
+        let total = self.completed() + self.shed();
+        if total == 0 {
+            0.0
+        } else {
+            self.shed() as f64 / total as f64
+        }
+    }
+}
+
+/// Deadline-first lane prediction: mirrors the live dispatcher's EDF
+/// discipline — admission-time shedding from the per-bucket queue-delay
+/// estimate, earliest-deadline-first dispatch (FIFO among equal or
+/// absent deadlines), and the SLO controller's force-spawns — over
+/// per-bucket batch traffic.
+///
+/// Each bucket is a multi-server queue at **batch** granularity whose
+/// per-batch service time is the bucket tape's single-lane DES latency
+/// ([`simulate_tape`]`.total_s`), the same model (and uncontended-device
+/// assumption) as [`simulate_scaling`]. The live rules are mirrored
+/// exactly, with their timing quantized to this model's events:
+///
+/// - **Admission estimate**: `est = ewma × (backlog / lanes + 1)` with
+///   `backlog` = queued + executing batches, exactly the dispatcher's
+///   `admission_estimate_s`. The bucket's service time is constant
+///   here, so the live EWMA equals `service_s` from its first completed
+///   batch onward and `0.0` (never sheds a live budget) before — the
+///   sim warms the estimate at the instant the first batch completes,
+///   where the live dispatcher warms at its next 5ms scaling pass.
+/// - **Admission shed**: a deadline at or before its arrival sheds
+///   deterministically; otherwise a batch sheds iff
+///   `arrival + est >= deadline` (`edf` on only).
+/// - **Dispatch**: a free lane takes the queued batch with the earliest
+///   deadline, ties and deadline-less batches in arrival order (`edf`
+///   off: strict arrival order). A batch whose start would reach its
+///   deadline is shed and the lane stays free — equivalent to the live
+///   dispatcher's expiry sweep, which resolves it at the moment it
+///   comes due.
+/// - **SLO controller**: evaluated at each admission (the live 5ms
+///   control pass, quantized to arrivals): cumulative shed rate
+///   (feedback) or the fraction of queued deadlines the estimate puts
+///   at risk (feed-forward) above `slo` spawns a lane up to
+///   `max_lanes_per_bucket`.
+///
+/// With `edf` off and `slo` unset this degenerates to
+/// [`simulate_lanes_deadline`] bit-for-bit.
+pub fn simulate_edf(
+    buckets: &[EdfTraffic],
+    host: HostProfile,
+    device: GpuSpec,
+    policy: &EdfSimPolicy,
+) -> EdfSimResult {
+    assert!(!buckets.is_empty(), "need at least one bucket trace");
+    assert!(policy.max_lanes_per_bucket >= 1, "need at least one lane per bucket");
+    let mut per_bucket = Vec::with_capacity(buckets.len());
+    for trace in buckets {
+        let service_s = simulate_tape(trace.tape, trace.costs, host, device.clone()).total_s;
+        // Lane free times; index 0 is the seed lane.
+        let mut lanes = vec![0.0f64];
+        // Admitted, undispatched batches: (deadline, seq, arrival).
+        let mut queue: Vec<(f64, usize, f64)> = Vec::new();
+        let (mut completed, mut shed, mut admission_shed) = (0usize, 0usize, 0usize);
+        let (mut spawned, mut lane_end_s) = (1usize, 0.0f64);
+        // The estimate is 0 (cold, never sheds) until the first
+        // completion lands, service_s afterwards (constant service makes
+        // the live EWMA degenerate).
+        let mut warm_at = f64::INFINITY;
+        let est_at = |t: f64, warm_at: f64, queue: &[(f64, usize, f64)], lanes: &[f64]| {
+            if t < warm_at {
+                return 0.0;
+            }
+            let backlog = queue.len() + lanes.iter().filter(|&&f| f > t).count();
+            service_s * (backlog as f64 / lanes.len() as f64 + 1.0)
+        };
+        // Dispatch every queued batch whose lane frees before `until`.
+        let dispatch_until = |until: f64,
+                              lanes: &mut Vec<f64>,
+                              queue: &mut Vec<(f64, usize, f64)>,
+                              completed: &mut usize,
+                              shed: &mut usize,
+                              warm_at: &mut f64,
+                              lane_end_s: &mut f64| {
+            loop {
+                if queue.is_empty() {
+                    break;
+                }
+                let li = (0..lanes.len()).min_by(|&a, &b| lanes[a].total_cmp(&lanes[b])).unwrap();
+                if lanes[li] >= until {
+                    break;
+                }
+                let qi = if policy.edf {
+                    (0..queue.len())
+                        .min_by(|&a, &b| {
+                            (queue[a].0, queue[a].1).partial_cmp(&(queue[b].0, queue[b].1)).unwrap()
+                        })
+                        .unwrap()
+                } else {
+                    0 // arrival order: the queue is pushed in seq order
+                };
+                let (deadline, _seq, arrival) = queue.remove(qi);
+                let start = lanes[li].max(arrival);
+                if start >= deadline {
+                    *shed += 1; // expired while queued; the lane stays free
+                    continue;
+                }
+                let end = start + service_s;
+                lanes[li] = end;
+                *completed += 1;
+                *warm_at = warm_at.min(end);
+                *lane_end_s = lane_end_s.max(end);
+            }
+        };
+        for (seq, &(arrival, deadline)) in trace.batches.iter().enumerate() {
+            assert!(arrival >= 0.0, "arrivals must be non-negative");
+            dispatch_until(
+                arrival,
+                &mut lanes,
+                &mut queue,
+                &mut completed,
+                &mut shed,
+                &mut warm_at,
+                &mut lane_end_s,
+            );
+            let est = est_at(arrival, warm_at, &queue, &lanes);
+            if policy.edf && (arrival >= deadline || arrival + est >= deadline) {
+                shed += 1;
+                admission_shed += 1;
+            } else {
+                queue.push((deadline, seq, arrival));
+            }
+            if let Some(target) = policy.slo {
+                // The control pass, quantized to this arrival: feedback
+                // is the cumulative shed rate, feed-forward the queued
+                // deadlines the estimate already puts past due.
+                let offered = completed + shed + queue.len();
+                let feedback =
+                    if offered == 0 { 0.0 } else { shed as f64 / offered as f64 };
+                let est = est_at(arrival, warm_at, &queue, &lanes);
+                let with_deadline =
+                    queue.iter().filter(|&&(d, _, _)| d.is_finite()).count();
+                let at_risk = queue
+                    .iter()
+                    .filter(|&&(d, _, _)| d.is_finite() && arrival + est >= d)
+                    .count();
+                let feedforward = if with_deadline == 0 {
+                    0.0
+                } else {
+                    at_risk as f64 / with_deadline as f64
+                };
+                if (feedback > target || feedforward > target)
+                    && lanes.len() < policy.max_lanes_per_bucket
+                {
+                    lanes.push(arrival);
+                    spawned += 1;
+                }
+            }
+        }
+        dispatch_until(
+            f64::INFINITY,
+            &mut lanes,
+            &mut queue,
+            &mut completed,
+            &mut shed,
+            &mut warm_at,
+            &mut lane_end_s,
+        );
+        per_bucket.push(EdfBucketStat {
+            service_s,
+            completed,
+            shed,
+            admission_shed,
+            lanes_spawned: spawned,
+            lane_end_s,
+        });
+    }
+    let total_s = per_bucket.iter().fold(0.0f64, |a, b| a.max(b.lane_end_s));
+    EdfSimResult { per_bucket, total_s }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1585,6 +1839,144 @@ mod tests {
         assert_eq!(a.static_total_s.to_bits(), b.static_total_s.to_bits());
         assert_eq!(a.lanes_spawned(), b.lanes_spawned());
         assert_eq!(a.lanes_retired(), b.lanes_retired());
+    }
+
+    #[test]
+    fn edf_sim_with_edf_off_degenerates_to_the_deadline_sim() {
+        let g = crate::models::build("mini_inception", 1);
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+        let service = simulate_tape(&tape, &cs, HostProfile::nimble(), dev.clone()).total_s;
+        let batches: Vec<(f64, f64)> = (0..10)
+            .map(|i| {
+                let arrival = i as f64 * 0.4 * service;
+                (arrival, arrival + 1.7 * service)
+            })
+            .collect();
+        let base = simulate_lanes_deadline(
+            &[LaneTraffic { tape: &tape, costs: &cs, batches: &batches }],
+            HostProfile::nimble(),
+            dev.clone(),
+        );
+        let r = simulate_edf(
+            &[EdfTraffic { tape: &tape, costs: &cs, batches: &batches }],
+            HostProfile::nimble(),
+            dev,
+            &EdfSimPolicy { edf: false, slo: None, max_lanes_per_bucket: 1 },
+        );
+        assert_eq!(r.completed(), base.completed());
+        assert_eq!(r.shed(), base.shed());
+        assert_eq!(r.admission_shed(), 0, "FIFO mode has no admission estimate");
+        assert_eq!(r.lanes_spawned(), 1);
+        assert_eq!(
+            r.total_s.to_bits(),
+            base.total_s.to_bits(),
+            "edf(false) must be the FIFO deadline sim bit-for-bit"
+        );
+    }
+
+    #[test]
+    fn edf_order_completes_tight_budgets_fifo_loses() {
+        // A lax (deadline-less) batch arrives just before a tight one.
+        // FIFO serves the lax batch first and the tight one misses;
+        // EDF reorders and completes both. The estimate is cold (no
+        // completion yet at admission), so admission shedding stays out
+        // of the way in both modes.
+        let g = crate::models::build("mini_inception", 1);
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+        let service = simulate_tape(&tape, &cs, HostProfile::nimble(), dev.clone()).total_s;
+        let batches = [(0.0, f64::INFINITY), (0.0, 0.9 * service)];
+        let run = |edf: bool| {
+            simulate_edf(
+                &[EdfTraffic { tape: &tape, costs: &cs, batches: &batches }],
+                HostProfile::nimble(),
+                dev.clone(),
+                &EdfSimPolicy { edf, slo: None, max_lanes_per_bucket: 1 },
+            )
+        };
+        let fifo = run(false);
+        let edf = run(true);
+        assert_eq!((fifo.completed(), fifo.shed()), (1, 1), "FIFO sheds the tight batch");
+        assert_eq!((edf.completed(), edf.shed()), (2, 0), "EDF completes both");
+        // Deterministic: same inputs, same bits.
+        assert_eq!(run(true).total_s.to_bits(), edf.total_s.to_bits());
+    }
+
+    #[test]
+    fn edf_sim_sheds_doomed_budgets_at_admission_once_warm() {
+        let g = crate::models::build("mini_inception", 1);
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+        let service = simulate_tape(&tape, &cs, HostProfile::nimble(), dev.clone()).total_s;
+        // Expired at the door: sheds at admission even on a cold server.
+        let batches = [(0.5 * service, 0.5 * service)];
+        let r = simulate_edf(
+            &[EdfTraffic { tape: &tape, costs: &cs, batches: &batches }],
+            HostProfile::nimble(),
+            dev.clone(),
+            &EdfSimPolicy { edf: true, slo: None, max_lanes_per_bucket: 1 },
+        );
+        assert_eq!((r.completed(), r.shed(), r.admission_shed()), (0, 1, 1));
+        // Warm estimate: after the first batch completes, a budget under
+        // one service time sheds at admission; an infinite budget never
+        // does. Accounting closes either way.
+        let batches =
+            [(0.0, f64::INFINITY), (2.0 * service, 2.0 * service + 0.5 * service)];
+        let r = simulate_edf(
+            &[EdfTraffic { tape: &tape, costs: &cs, batches: &batches }],
+            HostProfile::nimble(),
+            dev.clone(),
+            &EdfSimPolicy { edf: true, slo: None, max_lanes_per_bucket: 1 },
+        );
+        assert_eq!((r.completed(), r.shed(), r.admission_shed()), (1, 1, 1));
+        assert_eq!(r.completed() + r.shed(), 2, "every batch lands in exactly one count");
+    }
+
+    #[test]
+    fn edf_sim_slo_controller_spawns_lanes_and_saves_work() {
+        let g = crate::models::build("mini_inception", 1);
+        let dev = GpuSpec::v100();
+        let cs = costs(&g, &dev);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = crate::aot::tape::ReplayTape::for_op_graph(&g, &plan, 64);
+        let service = simulate_tape(&tape, &cs, HostProfile::nimble(), dev.clone()).total_s;
+        // Warm-up, then a burst whose tail misses on one lane.
+        let burst = 2.0 * service;
+        let batches: Vec<(f64, f64)> = std::iter::once((0.0, f64::INFINITY))
+            .chain((0..4).map(|_| (burst, burst + 2.2 * service)))
+            .collect();
+        let run = |slo: Option<f64>| {
+            simulate_edf(
+                &[EdfTraffic { tape: &tape, costs: &cs, batches: &batches }],
+                HostProfile::nimble(),
+                dev.clone(),
+                &EdfSimPolicy { edf: true, slo, max_lanes_per_bucket: 3 },
+            )
+        };
+        let off = run(None);
+        let on = run(Some(0.05));
+        assert_eq!(off.lanes_spawned(), 1, "no controller, no spawns");
+        assert!(off.shed() > 0, "one lane must miss part of the burst");
+        assert!(
+            on.lanes_spawned() > 1,
+            "breaching the target must force-spawn (spawned {})",
+            on.lanes_spawned()
+        );
+        assert!(
+            on.completed() > off.completed(),
+            "extra lanes must convert sheds into completions ({} vs {})",
+            on.completed(),
+            off.completed()
+        );
+        assert_eq!(on.completed() + on.shed(), batches.len(), "accounting closes");
+        assert!(on.shed_rate() < off.shed_rate());
     }
 
     #[test]

@@ -17,10 +17,11 @@ pub mod trace;
 
 pub use cost::{kernel_cost, KernelCost};
 pub use des::{
-    peak_reserved_bytes, simulate, simulate_faults, simulate_lanes, simulate_lanes_deadline,
-    simulate_scaling, simulate_tape, BucketScaling, DeadlineLaneStat, DeadlineShedResult,
-    FaultLaneStat, FaultSimResult, FaultTraffic, LaneLoad, LaneTraffic, MultiLaneResult,
-    ScaleSimPolicy, ScalingResult, ScalingTrace, SimConfig, SimResult, TaskSpan,
+    peak_reserved_bytes, simulate, simulate_edf, simulate_faults, simulate_lanes,
+    simulate_lanes_deadline, simulate_scaling, simulate_tape, BucketScaling, DeadlineLaneStat,
+    DeadlineShedResult, EdfBucketStat, EdfSimPolicy, EdfSimResult, EdfTraffic, FaultLaneStat,
+    FaultSimResult, FaultTraffic, LaneLoad, LaneTraffic, MultiLaneResult, ScaleSimPolicy,
+    ScalingResult, ScalingTrace, SimConfig, SimResult, TaskSpan,
 };
 pub use device::GpuSpec;
 pub use framework::HostProfile;

@@ -480,6 +480,164 @@ fn deadline_shed_accounting_closes_and_infinite_deadlines_stay_bit_identical() {
     });
 }
 
+/// ≥60 random cases (EDF / admission-shedding satellite): seeded
+/// [`FaultPlan`] engine faults and retries combined with tight
+/// deadlines while admission-time shedding is on (the `edf` default).
+/// The invariants:
+///
+/// * every ticket resolves exactly once — a request is never counted in
+///   both the retry-then-shed and the failed path (the partition
+///   `admitted == completed + deadline_shed + failed` closes on the
+///   client side AND on the report);
+/// * an expired-at-submit deadline is always shed at admission
+///   (`admission_shed` counts at least those), never served and never
+///   failed, whatever the fault plan injects;
+/// * a roomy one-minute budget is never shed — admission estimates must
+///   not shed live budgets spuriously;
+/// * `admission_shed` never exceeds `deadline_shed` (it is a subset);
+/// * a no-op plan retries nothing.
+#[test]
+fn edf_admission_shedding_with_retries_keeps_accounting_closed() {
+    use nimble::serving::{FaultPlan, RetryPolicy};
+
+    check_from("edf-admission-shed", base_seed() ^ 0x00ED_F00D, 60, |rng| {
+        let n_nodes = rng.gen_range_inclusive(8, 48);
+        let graph_seed = rng.next_u64();
+        let mut buckets = random_buckets(rng);
+        buckets.truncate(2);
+        let build = move |b: usize| random_cell(&mut Pcg32::new(graph_seed), n_nodes, b);
+
+        let plan = FaultPlan {
+            engine_error: if rng.gen_range_inclusive(0, 1) == 0 {
+                0.0
+            } else {
+                rng.gen_range_inclusive(1, 25) as f64 / 100.0
+            },
+            ..FaultPlan::seeded(rng.next_u64())
+        };
+        let noop = plan.is_noop();
+        let retry = RetryPolicy {
+            max_retries: rng.gen_range_inclusive(0, 3) as u32,
+            backoff: if rng.gen_range_inclusive(0, 1) == 0 {
+                Duration::ZERO
+            } else {
+                Duration::from_micros(200)
+            },
+        };
+        let server = Runtime::builder()
+            .label("rand-cell")
+            .graph_fn(build)
+            .buckets(&buckets)
+            .max_wait(Duration::from_micros(200))
+            .lane_cap(12)
+            .buffers_per_lane(14)
+            .worker_cap(2)
+            .fault_plan(plan)
+            .retry_policy(retry)
+            .build()
+            .map_err(|e| format!("edf chaos server start failed: {e:#}"))?;
+
+        // Pre-formed batches in four deadline flavors: expired at submit
+        // (certain admission shed), none, one minute (both never shed),
+        // and a tight-but-live few-ms budget whose outcome the wall
+        // clock decides (any resolution is legal; accounting still must
+        // close).
+        let n_jobs = rng.gen_range_inclusive(4, 12);
+        let jobs: Vec<(usize, Vec<f32>, u8)> = (0..n_jobs)
+            .map(|_| {
+                let bucket = *rng.choose(&buckets);
+                let input = random_input(rng, bucket * RANDOM_CELL_EXAMPLE_LEN);
+                (bucket, input, rng.gen_range_inclusive(0, 3) as u8)
+            })
+            .collect();
+        let n_expired = jobs.iter().filter(|(_, _, k)| *k == 0).count();
+
+        let pending: Vec<_> = jobs
+            .iter()
+            .map(|(bucket, input, kind)| {
+                let req = InferRequest::batch(*bucket, input.clone());
+                let req = match kind {
+                    0 => req.deadline(Instant::now()),
+                    1 => req,
+                    2 => req.deadline_in(Duration::from_secs(60)),
+                    _ => req.deadline_in(Duration::from_millis(3)),
+                };
+                server.submit(req)
+            })
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("submit failed: {e:#}"))?;
+
+        let (mut completed, mut shed, mut failed) = (0usize, 0usize, 0usize);
+        for (i, ((_, _, kind), ticket)) in jobs.iter().zip(pending).enumerate() {
+            let outcome = ticket
+                .outcome_timeout(Duration::from_secs(60))
+                .map_err(|e| format!("job {i}: ticket unresolved: {e:#}"))?;
+            match outcome {
+                InferOutcome::Output(_) => {
+                    completed += 1;
+                    ensure(*kind != 0, || {
+                        format!("job {i}: expired-at-submit request was served")
+                    })?;
+                }
+                InferOutcome::DeadlineShed => {
+                    shed += 1;
+                    ensure(*kind == 0 || *kind == 3, || {
+                        format!("job {i}: a roomy budget was shed (kind {kind})")
+                    })?;
+                }
+                InferOutcome::Failed(e) => {
+                    failed += 1;
+                    ensure(!noop, || format!("job {i} failed under a no-op plan: {e}"))?;
+                    ensure(*kind != 0, || {
+                        format!("job {i}: expired-at-submit request reached the engine: {e}")
+                    })?;
+                }
+            }
+        }
+        ensure(completed + shed + failed == n_jobs, || {
+            format!("{completed} completed + {shed} shed + {failed} failed != {n_jobs}")
+        })?;
+        ensure(shed >= n_expired, || {
+            format!("{shed} shed but {n_expired} were expired at submit")
+        })?;
+
+        let report = server.shutdown().map_err(|e| format!("shutdown failed: {e:#}"))?;
+        ensure(report.n_requests == completed, || {
+            format!("report counts {} completions, clients saw {completed}", report.n_requests)
+        })?;
+        ensure(report.deadline_shed == shed, || {
+            format!(
+                "report counts {} sheds, clients observed {shed} (graph seed {graph_seed:#x})",
+                report.deadline_shed
+            )
+        })?;
+        ensure(report.failed == failed, || {
+            format!("report counts {} failures, clients saw {failed}", report.failed)
+        })?;
+        ensure(report.n_requests + report.deadline_shed + report.failed == n_jobs, || {
+            "report-side accounting must close with admission shedding on".to_string()
+        })?;
+        ensure(report.admission_shed <= report.deadline_shed, || {
+            format!(
+                "admission_shed {} exceeds deadline_shed {}",
+                report.admission_shed, report.deadline_shed
+            )
+        })?;
+        ensure(report.admission_shed >= n_expired, || {
+            format!(
+                "admission_shed {} < {n_expired} expired-at-submit requests",
+                report.admission_shed
+            )
+        })?;
+        if noop {
+            ensure(report.retries == 0, || {
+                format!("{} retries under a no-op plan", report.retries)
+            })?;
+        }
+        Ok(())
+    });
+}
+
 /// ≥20 random cases (builder-equivalence satellite): `Runtime::builder()`
 /// with default knobs is bit-identical to the legacy
 /// `TapeEngine` + `NimbleServer::start_with` constructor path on the
