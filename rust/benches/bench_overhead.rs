@@ -25,6 +25,7 @@ use nimble::util::{Pcg32, Summary};
 
 fn main() {
     tape_substrate_section();
+    telemetry_overhead_section();
     #[cfg(feature = "xla")]
     xla_real::real_substrate_section();
     #[cfg(not(feature = "xla"))]
@@ -108,6 +109,73 @@ fn tape_substrate_section() {
         Ok(()) => println!("\nwrote BENCH_replay.json ({} models)", entries.len()),
         Err(e) => println!("\ncould not write BENCH_replay.json: {e}"),
     }
+}
+
+/// Flight-recorder overhead gate: the same tape replayed with the
+/// recorder off and on. Recording enabled must cost ≤5% on the
+/// min-of-iterations wall time (the ISSUE-8 acceptance bound); results
+/// land in `BENCH_overhead.json` for the CI observability job.
+fn telemetry_overhead_section() {
+    use nimble::engine::executor::ExecOptions;
+    use nimble::telemetry::Telemetry;
+
+    section("flight recorder overhead (telemetry on vs off, min-of-iterations)");
+    let iters = 40;
+    let name = "mini_inception";
+    let g = models::build(name, 1);
+    let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+    let tape = ReplayTape::for_op_graph(&g, &plan, 512);
+    let input: Vec<f32> = {
+        let mut rng = Pcg32::new(11);
+        (0..tape.input_slots()[0].1).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect()
+    };
+
+    let mut off =
+        ReplayContext::with_options(tape.clone(), SyntheticKernel, ExecOptions::default());
+    let tel = Telemetry::with_capacity(1 << 14);
+    let labels: Vec<String> = (0..g.n_nodes()).map(|v| g.node(v).name.clone()).collect();
+    tel.register_labels(&labels);
+    let mut on = ReplayContext::with_options(
+        tape.clone(),
+        SyntheticKernel,
+        ExecOptions { telemetry: Some(tel.clone()), ..Default::default() },
+    );
+
+    let s_off = bench(&format!("{name}: replay, telemetry off"), 3, iters, || {
+        off.replay_one(&input).unwrap()
+    });
+    let s_on = bench(&format!("{name}: replay, telemetry on"), 3, iters, || {
+        on.replay_one(&input).unwrap()
+    });
+    // Min-of-iterations: the noise-floor comparison — every sample
+    // above the min is scheduler jitter, not recorder cost.
+    let ratio = s_on.min() / s_off.min().max(1e-12);
+    let snap = tel.snapshot();
+    println!(
+        "overhead: on/off min ratio {ratio:.4}  ({} spans recorded, {} dropped, {} rings)",
+        snap.recorded,
+        snap.dropped,
+        tel.ring_allocs(),
+    );
+    let json = format!(
+        "[\n  {{\"model\": \"{name}\", \"iters\": {iters}, \
+         \"telemetry_off_min_s\": {:.9}, \"telemetry_on_min_s\": {:.9}, \
+         \"overhead_ratio\": {ratio:.4}, \"spans_recorded\": {}, \"spans_dropped\": {}, \
+         \"ring_allocs\": {}}}\n]\n",
+        s_off.min(),
+        s_on.min(),
+        snap.recorded,
+        snap.dropped,
+        tel.ring_allocs(),
+    );
+    match std::fs::write("BENCH_overhead.json", &json) {
+        Ok(()) => println!("wrote BENCH_overhead.json"),
+        Err(e) => println!("could not write BENCH_overhead.json: {e}"),
+    }
+    assert!(
+        ratio <= 1.05,
+        "telemetry-on replay exceeded the 5% overhead budget: on/off min ratio {ratio:.4}"
+    );
 }
 
 /// Real-substrate section (Fig. 2b methodology over PJRT executables).

@@ -152,17 +152,10 @@ fn lane_vs_serial() -> String {
     );
     println!("{}", report.render());
 
-    let lane_json: Vec<String> = report
-        .lanes
-        .iter()
-        .map(|l| {
-            format!(
-                "    {{\"bucket\": {}, \"n_batches\": {}, \"busy_s\": {:.6}, \
-                 \"mean_queue_wait_s\": {:.6}, \"alloc_events\": {}}}",
-                l.bucket, l.n_batches, l.busy_s, l.mean_queue_wait_s, l.alloc_events
-            )
-        })
-        .collect();
+    // Structured stats straight off the report — the JSON consumers
+    // read the same keys LaneStat::to_json() guarantees.
+    let lane_json: Vec<String> =
+        report.lanes.iter().map(|l| format!("    {}", l.to_json())).collect();
     let buckets_json =
         BUCKETS.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(", ");
     format!(
@@ -412,7 +405,15 @@ fn deadline_sweep() -> String {
             }
         }
         let report = server.shutdown().expect("sweep report");
-        assert_eq!(report.deadline_shed, measured_shed, "report must match client outcomes");
+        // Consume the report through `ServingReport::to_json()` instead
+        // of reading render() strings: the structured path is what CI
+        // parses, so the assertion exercises it end-to-end.
+        let doc = nimble::util::json::parse_json(&report.to_json()).expect("report json");
+        let json_shed = doc
+            .get("deadline_shed")
+            .and_then(nimble::util::json::JsonValue::as_u64)
+            .expect("deadline_shed field") as usize;
+        assert_eq!(json_shed, measured_shed, "report must match client outcomes");
 
         // --- DES over the same burst in its own service units. ---
         let des_service =

@@ -71,6 +71,7 @@ use crate::aot::memory::{
 };
 use crate::aot::tape::{ReplayTape, TapeArg, TapeOp, TapeRole};
 use crate::fault::{FaultInjector, FaultPlan, OpFault, ReplayFault};
+use crate::telemetry::{EventKind, Telemetry};
 use std::any::Any;
 use std::cell::UnsafeCell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -636,6 +637,9 @@ fn stealing_worker_loop(core: Arc<PoolCore>) {
             if last_job != u64::MAX {
                 core.steals.fetch_add(1, Ordering::Relaxed);
                 job.steals.fetch_add(1, Ordering::Relaxed);
+                if let Some(tel) = &job.inner.telemetry {
+                    tel.event(EventKind::Steal, stream as u32, 0, 0);
+                }
             }
             last_job = job.id;
         }
@@ -704,6 +708,15 @@ struct ReplayInner {
     /// per op (errors/stalls) when a [`FaultPlan`] with replay-level
     /// probabilities was configured ([`ExecOptions::fault`]).
     fault: Option<FaultInjector>,
+    /// Flight recorder for replay-op spans and pool events
+    /// ([`ExecOptions::telemetry`]). `None` costs one branch per task.
+    telemetry: Option<Telemetry>,
+    /// Stream id of each tape record (span attribution without a
+    /// per-task lookup through the tape).
+    stream_of: Vec<u32>,
+    /// KiB of the pooled arena lease (0 = owned arena): sizes the
+    /// ArenaAcquire/ArenaRelease telemetry events.
+    arena_pooled_kib: u32,
     /// Per-record completion stamps (1-based; 0 = not completed).
     stamps: Vec<AtomicU64>,
     stamp_clock: AtomicU64,
@@ -782,7 +795,19 @@ impl ReplayInner {
             if let (Some(acc), Some(t0)) = (sched_s, t0) {
                 *acc += t0.elapsed().as_secs_f64();
             }
-            self.kernel.execute(op, scratch, out);
+            match self.telemetry.as_ref().filter(|t| t.enabled()) {
+                Some(tel) => {
+                    let k0 = Instant::now();
+                    self.kernel.execute(op, scratch, out);
+                    tel.replay_span(
+                        self.stream_of[op_idx],
+                        op.node as u32,
+                        k0,
+                        Instant::now(),
+                    );
+                }
+                None => self.kernel.execute(op, scratch, out),
+            }
         }
         if self.trace.load(Ordering::Relaxed) {
             let stamp = self.stamp_clock.fetch_add(1, Ordering::Relaxed) + 1;
@@ -1029,6 +1054,12 @@ pub struct ExecOptions {
     /// death, arena exhaustion). `None` (the default) injects nothing
     /// and costs nothing on the hot path.
     pub fault: Option<FaultPlan>,
+    /// Flight recorder ([`crate::telemetry`]): when set and enabled,
+    /// every task execution records a replay-op span (stream, op,
+    /// start/end) into a preallocated per-thread ring, and pool/arena
+    /// events (steals, lease acquire/release) are recorded too. `None`
+    /// (the default) costs one branch per task.
+    pub telemetry: Option<Telemetry>,
 }
 
 impl Default for ExecOptions {
@@ -1041,6 +1072,7 @@ impl Default for ExecOptions {
             arena_pool: None,
             shared_pool: None,
             fault: None,
+            telemetry: None,
         }
     }
 }
@@ -1118,8 +1150,18 @@ impl ReplayContext {
             );
             plan
         };
+        let arena_elems = (plan.arena_bytes / 4) as usize + GUARD_ELEMS;
+        let arena_pooled_kib = match &opts.arena_pool {
+            Some(_) => (arena_elems * 4 / 1024).max(1) as u32,
+            None => 0,
+        };
         let lease = match &opts.arena_pool {
-            Some(pool) => pool.acquire((plan.arena_bytes / 4) as usize + GUARD_ELEMS),
+            Some(pool) => {
+                if let Some(tel) = &opts.telemetry {
+                    tel.event(EventKind::ArenaAcquire, 0, arena_pooled_kib, 0);
+                }
+                pool.acquire(arena_elems)
+            }
             None => ArenaLease::owned(),
         };
         let mut n_readers = vec![0u32; slot_lens.len()];
@@ -1128,6 +1170,12 @@ impl ReplayContext {
                 if let TapeArg::Slot(s) = *arg {
                     n_readers[s as usize] += 1;
                 }
+            }
+        }
+        let mut stream_of = vec![0u32; n_ops];
+        for s in 0..n_streams {
+            for &op_idx in tape.stream_ops(s) {
+                stream_of[op_idx as usize] = s as u32;
             }
         }
         let inner = Arc::new(ReplayInner {
@@ -1142,6 +1190,9 @@ impl ReplayContext {
                 .fault
                 .filter(|p| p.has_replay_faults())
                 .map(FaultInjector::new),
+            telemetry: opts.telemetry,
+            stream_of,
+            arena_pooled_kib,
             trace: AtomicBool::new(false),
             stamps: (0..n_ops).map(|_| AtomicU64::new(0)).collect(),
             stamp_clock: AtomicU64::new(0),
@@ -1632,6 +1683,25 @@ impl ReplayContext {
         match &self.mode {
             PoolMode::Leased { job, .. } => job.steals.load(Ordering::Relaxed),
             _ => 0,
+        }
+    }
+
+    /// The flight recorder this context reports to, if any
+    /// ([`ExecOptions::telemetry`]).
+    pub fn telemetry(&self) -> Option<&Telemetry> {
+        self.inner.telemetry.as_ref()
+    }
+}
+
+impl Drop for ReplayInner {
+    fn drop(&mut self) {
+        // The pooled arena lease (inside `arena`) returns to its pool
+        // when this struct's fields drop right after this runs — record
+        // the release here so pool accounting has both edges.
+        if self.arena_pooled_kib > 0 {
+            if let Some(tel) = &self.telemetry {
+                tel.event(EventKind::ArenaRelease, 0, self.arena_pooled_kib, 0);
+            }
         }
     }
 }

@@ -64,4 +64,5 @@ pub mod models;
 pub mod ops;
 pub mod sim;
 pub mod stream;
+pub mod telemetry;
 pub mod util;

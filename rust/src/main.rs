@@ -10,6 +10,12 @@
 //!                         parallel multi-stream executor vs the serial
 //!                         oracle, with the DES speedup prediction
 //!   sim <model> <system>  one simulated inference run in detail
+//!   trace <model> [--iters K] [--out DIR]
+//!                         run a measured replay with the telemetry
+//!                         flight recorder attached, write the Chrome
+//!                         trace / Prometheus metrics / calibrated cost
+//!                         profile, and diff measured vs DES-predicted
+//!                         per-op timings
 //!   infer [--batch N] [--iters K] [--mode replay|eager]   (feature xla)
 //!                         run MiniInception on the real XLA path
 //!   serve [--requests N] [--rate RPS] [--deadline-ms D]
@@ -54,6 +60,7 @@ fn dispatch(args: &[String]) -> Result<()> {
             args.get(1).map(String::as_str).context("usage: nimble sim <model> <system>")?,
             args.get(2).map(String::as_str).unwrap_or("Nimble"),
         ),
+        Some("trace") => cmd_trace(args),
         Some("infer") => cmd_infer(args),
         Some("serve") => cmd_serve(args),
         Some("train") => cmd_train(args),
@@ -61,7 +68,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         None => {
             println!(
                 "nimble — reproduction of Nimble (NeurIPS 2020)\n\n\
-                 usage: nimble <figures|models|assign|replay|sim|infer|serve|train> [args]\n\
+                 usage: nimble <figures|models|assign|replay|sim|trace|infer|serve|train> [args]\n\
                  see rust/src/main.rs docs for details"
             );
             Ok(())
@@ -191,6 +198,110 @@ fn cmd_replay(args: &[String]) -> Result<()> {
         fmt_secs(single_s),
         fmt_secs(multi_s),
         single_s / multi_s
+    );
+    Ok(())
+}
+
+/// `nimble trace`: the measured-vs-predicted loop. Replays a model with
+/// the flight recorder attached, writes the three observability
+/// artifacts (Chrome trace, Prometheus metrics, calibrated cost
+/// profile), then feeds the profile back through `sim::cost` into the
+/// DES and prints per-op residuals between the measured trace and the
+/// prediction.
+fn cmd_trace(args: &[String]) -> Result<()> {
+    use nimble::aot::tape::ReplayTape;
+    use nimble::engine::executor::{ExecOptions, ReplayContext, SyntheticKernel};
+    use nimble::sim::cost::CostProfile;
+    use nimble::sim::{simulate_tape, HostProfile};
+    use nimble::stream::rewrite::rewrite;
+    use nimble::telemetry::{diff_traces, parse_trace, render_residuals, OpResidual, Telemetry};
+    use nimble::util::Pcg32;
+
+    let model = args
+        .get(1)
+        .map(String::as_str)
+        .context("usage: nimble trace <model> [--iters K] [--out DIR]")?;
+    let iters: usize = flag(args, "--iters").map(|s| s.parse()).transpose()?.unwrap_or(10);
+    let out_dir = flag(args, "--out").unwrap_or_else(|| "results".to_string());
+
+    let g = models::build(model, 1);
+    let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+    let tape = ReplayTape::for_op_graph(&g, &plan, 4096);
+
+    // Ring sized for every span across all iterations, so the residual
+    // table reflects a complete trace rather than a drop-oldest window.
+    let telemetry = Telemetry::with_capacity((g.n_nodes() * (iters + 1)).next_power_of_two());
+    let labels: Vec<String> = (0..g.n_nodes()).map(|v| g.node(v).name.clone()).collect();
+    telemetry.register_labels(&labels);
+
+    let mut ctx = ReplayContext::with_options(
+        tape.clone(),
+        SyntheticKernel,
+        ExecOptions { telemetry: Some(telemetry.clone()), ..Default::default() },
+    );
+    let input: Vec<f32> = {
+        let mut rng = Pcg32::new(42);
+        (0..tape.input_slots()[0].1).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect()
+    };
+    for _ in 0..iters {
+        ctx.replay_one(&input).map_err(anyhow::Error::msg)?;
+    }
+    let snap = telemetry.snapshot();
+    println!(
+        "{model}: {} tasks on {} streams, {iters} replays — {} spans recorded \
+         ({} dropped of {} emitted)",
+        tape.n_tasks(),
+        tape.n_streams(),
+        snap.recorded,
+        snap.dropped,
+        snap.emitted,
+    );
+
+    // The three artifacts: measured trace, metrics, calibration profile.
+    let trace_json = telemetry.chrome_trace();
+    let profile_json = telemetry.cost_profile().to_json();
+    let dir = std::path::Path::new(&out_dir);
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{model}_trace.json")), &trace_json)?;
+    std::fs::write(dir.join(format!("{model}_metrics.prom")), telemetry.metrics_text())?;
+    std::fs::write(dir.join(format!("{model}_cost_profile.json")), &profile_json)?;
+    println!(
+        "wrote {0}/{model}_trace.json {0}/{model}_metrics.prom {0}/{model}_cost_profile.json",
+        out_dir
+    );
+
+    // Round-trip the profile through JSON into the DES cost model and
+    // predict the same tape on a V100-class device.
+    let profile = CostProfile::from_json(&profile_json).map_err(anyhow::Error::msg)?;
+    let dev = GpuSpec::v100();
+    let costs = profile.costs_for_graph(&g, &dev);
+    let predicted = simulate_tape(&tape, &costs, HostProfile::nimble(), dev);
+    let predicted_json = nimble::sim::trace::to_chrome_trace(&predicted, |n| {
+        if n < g.n_nodes() {
+            g.node(n).name.clone()
+        } else {
+            format!("task{n}")
+        }
+    });
+
+    // Diff on per-instance means: the measured side carries `iters`
+    // slices per op, the prediction one, so raw totals would compare
+    // different sample counts.
+    let measured = parse_trace(&trace_json).map_err(anyhow::Error::msg)?;
+    let predicted_slices = parse_trace(&predicted_json).map_err(anyhow::Error::msg)?;
+    let residuals: Vec<OpResidual> = diff_traces(&measured, &predicted_slices)
+        .into_iter()
+        .map(|r| {
+            let m = r.measured_us / r.n_measured.max(1) as f64;
+            let p = r.predicted_us / r.n_predicted.max(1) as f64;
+            OpResidual { measured_us: m, predicted_us: p, residual_us: m - p, ..r }
+        })
+        .collect();
+    println!("\nper-op residuals (per-instance mean µs, measured − predicted):");
+    print!("{}", render_residuals(&residuals));
+    println!(
+        "\nDES total with calibrated costs: {} (overlay both JSON files in Perfetto)",
+        fmt_secs(predicted.total_s)
     );
     Ok(())
 }

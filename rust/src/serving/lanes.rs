@@ -109,6 +109,7 @@ use super::runtime::{Health, ReqToken};
 use crate::coordinator::InferEngine;
 use crate::engine::executor::panic_message;
 use crate::fault::RetryPolicy;
+use crate::telemetry::{EventKind, Telemetry};
 use crate::util::stats::Summary;
 
 /// How often the dispatcher runs the scaling pass (reap + retire) while
@@ -192,6 +193,12 @@ pub struct LaneConfig {
     /// bucket, bypassing `scale_up_backlog` but never
     /// `max_lanes_per_bucket`. `None` disables the controller.
     pub slo: Option<f64>,
+    /// Flight recorder ([`crate::telemetry::Telemetry`]). When set, the
+    /// dispatcher and lanes record request-lifecycle events (admit →
+    /// stage → pop / shed → retry → reply) and lane/pool events into its
+    /// rings and bump its metrics. `None` (default): no recording, no
+    /// overhead.
+    pub telemetry: Option<Telemetry>,
 }
 
 impl Default for LaneConfig {
@@ -206,6 +213,7 @@ impl Default for LaneConfig {
             retry: RetryPolicy::default(),
             edf: true,
             slo: None,
+            telemetry: None,
         }
     }
 }
@@ -539,18 +547,27 @@ fn shed_expired_work(
     batcher: &mut Batcher<ReqToken>,
     now: Instant,
     misc_shed: &mut usize,
+    telemetry: Option<&Telemetry>,
 ) {
     for tok in batcher.shed_expired(now) {
         tok.shed();
+        if let Some(tel) = telemetry {
+            // No definite bucket yet: the batcher queue is bucket-less.
+            tel.event(EventKind::ShedStaged, 0, 0, tok.trace);
+        }
         *misc_shed += 1;
     }
     for group in groups.iter_mut() {
+        let bucket = group.bucket as u32;
         let mut shed = 0usize;
         for lane in &mut group.lanes {
             for job in &mut lane.staged {
                 if let Some(tok) = &job.batch {
                     if tok.expired(now) {
                         tok.shed();
+                        if let Some(tel) = telemetry {
+                            tel.event(EventKind::ShedStaged, bucket, 0, tok.trace);
+                        }
                         shed += 1;
                         job.batch = None;
                     }
@@ -561,6 +578,9 @@ fn shed_expired_work(
                 for ((tok, _), done) in job.tokens.iter().zip(job.done.iter_mut()) {
                     if !*done && tok.expired(now) {
                         tok.shed();
+                        if let Some(tel) = telemetry {
+                            tel.event(EventKind::ShedStaged, bucket, 0, tok.trace);
+                        }
                         shed += 1;
                         *done = true;
                     }
@@ -677,6 +697,7 @@ fn lane_thread<E, F>(
     ready: mpsc::Sender<Result<(usize, usize), String>>,
     retry: RetryPolicy,
     dead_letter: DeadLetter,
+    telemetry: Option<Telemetry>,
 ) -> (LaneStat, Vec<f64>, usize)
 where
     E: InferEngine + 'static,
@@ -685,6 +706,15 @@ where
     let mut stat = LaneStat::empty(bucket);
     let mut latencies: Vec<f64> = Vec::new();
     let mut fill_sum = 0usize;
+    // Flight-recorder hook: one event into this thread's ring (no-op
+    // when telemetry is off). Lifecycle invariant: LaneSpawn here,
+    // LaneRetire on every exit path, so the live-lanes gauge closes.
+    let tev = |kind: EventKind, op: u32, trace: u64| {
+        if let Some(tel) = &telemetry {
+            tel.event(kind, bucket as u32, op, trace);
+        }
+    };
+    tev(EventKind::LaneSpawn, 0, 0);
     // A lane that cannot build its engine must not strand work: close
     // the queue itself (elastic spawns have no startup handshake) and
     // answer whatever the dispatcher already routed.
@@ -699,11 +729,13 @@ where
         Ok(e) => e,
         Err(err) => {
             die(&mut stat, format!("lane {bucket}: {err:#}"));
+            tev(EventKind::LaneRetire, 0, 0);
             return (stat, latencies, fill_sum);
         }
     };
     if !engine.batch_sizes().contains(&bucket) {
         die(&mut stat, format!("lane {bucket}: engine does not serve this bucket"));
+        tev(EventKind::LaneRetire, 0, 0);
         return (stat, latencies, fill_sum);
     }
     let output_len = engine.output_len();
@@ -716,6 +748,13 @@ where
         // The pop freed a job-queue slot: kick the dispatcher so staged
         // work flushes into it on the event instead of a poll tick.
         wake.kick();
+        tev(EventKind::Kick, 0, 0);
+        let rows = job.tokens.len().max(usize::from(job.batch.is_some()));
+        tev(
+            EventKind::Pop,
+            rows as u32,
+            job.batch.as_ref().map_or(0, |tok| tok.trace),
+        );
         let started = Instant::now();
         // Deadline shedding happens HERE, at pop time: a request whose
         // deadline expired while it was staged or queued is resolved as
@@ -725,11 +764,13 @@ where
         if let Some(tok) = &job.batch {
             if tok.expired(started) {
                 tok.shed();
+                tev(EventKind::ShedPop, 0, tok.trace);
                 stat.deadline_shed += 1;
                 shed_live.fetch_add(1, Ordering::Relaxed);
                 let _ = free.try_push(job.input);
                 done_jobs.fetch_add(1, Ordering::Relaxed);
                 wake.kick();
+                tev(EventKind::Kick, 0, 0);
                 continue;
             }
         }
@@ -739,6 +780,7 @@ where
         for ((tok, _), done) in job.tokens.iter().zip(job.done.iter_mut()) {
             if !*done && tok.expired(started) {
                 tok.shed();
+                tev(EventKind::ShedPop, 0, tok.trace);
                 stat.deadline_shed += 1;
                 shed_live.fetch_add(1, Ordering::Relaxed);
                 *done = true;
@@ -748,6 +790,7 @@ where
             let _ = free.try_push(job.input);
             done_jobs.fetch_add(1, Ordering::Relaxed);
             wake.kick();
+            tev(EventKind::Kick, 0, 0);
             continue;
         }
         wait_sum += started.duration_since(job.routed).as_secs_f64();
@@ -800,6 +843,8 @@ where
                 // Wake the dispatcher so the supervision pass notices
                 // the dead-lettered work before its next timed tick.
                 wake.kick();
+                tev(EventKind::Kick, 0, 0);
+                tev(EventKind::LaneRetire, 0, 0);
                 return (stat, latencies, fill_sum);
             }
             if job.attempts > retry.max_retries
@@ -808,6 +853,7 @@ where
                 break Err(msg);
             }
             stat.retries += 1;
+            tev(EventKind::Retry, job.attempts, job.batch.as_ref().map_or(0, |t| t.trace));
             if !retry.backoff.is_zero() {
                 std::thread::sleep(retry.backoff);
             }
@@ -817,6 +863,7 @@ where
             if let Some(tok) = &job.batch {
                 if tok.expired(now) {
                     tok.shed();
+                    tev(EventKind::ShedPop, 0, tok.trace);
                     stat.deadline_shed += 1;
                     shed_live.fetch_add(1, Ordering::Relaxed);
                     job.batch = None;
@@ -826,6 +873,7 @@ where
                 for ((tok, _), done) in job.tokens.iter().zip(job.done.iter_mut()) {
                     if !*done && tok.expired(now) {
                         tok.shed();
+                        tev(EventKind::ShedPop, 0, tok.trace);
                         stat.deadline_shed += 1;
                         shed_live.fetch_add(1, Ordering::Relaxed);
                         *done = true;
@@ -846,6 +894,9 @@ where
                     stat.n_requests += 1;
                     fill_sum += bucket;
                     latencies.push(finished.duration_since(routed).as_secs_f64());
+                    if let Some(tel) = &telemetry {
+                        tel.reply_span(bucket as u32, tok.trace, routed, finished);
+                    }
                     let _ = tok.reply.send(Ok(out));
                 } else {
                     for (i, ((tok, enqueued), was_done)) in
@@ -857,6 +908,9 @@ where
                         stat.n_requests += 1;
                         fill_sum += 1;
                         latencies.push(finished.duration_since(enqueued).as_secs_f64());
+                        if let Some(tel) = &telemetry {
+                            tel.reply_span(bucket as u32, tok.trace, enqueued, finished);
+                        }
                         let row = out[i * output_len..(i + 1) * output_len].to_vec();
                         let _ = tok.reply.send(Ok(row));
                     }
@@ -874,10 +928,12 @@ where
         let _ = free.try_push(input);
         done_jobs.fetch_add(1, Ordering::Relaxed);
         wake.kick();
+        tev(EventKind::Kick, 0, 0);
     }
     stat.mean_queue_wait_s =
         if stat.n_batches == 0 { 0.0 } else { wait_sum / stat.n_batches as f64 };
     stat.steals = engine.steals().unwrap_or(0);
+    tev(EventKind::LaneRetire, 0, 0);
     (stat, latencies, fill_sum)
 }
 
@@ -919,6 +975,7 @@ where
         let wake = wake.clone();
         let retry = config.retry.clone();
         let dead_letter = Arc::clone(dead_letter);
+        let telemetry = config.telemetry.clone();
         std::thread::Builder::new()
             .name(format!("nimble-lane-{bucket}"))
             .spawn(move || {
@@ -934,6 +991,7 @@ where
                     ready_tx,
                     retry,
                     dead_letter,
+                    telemetry,
                 )
             })
             .context("spawning lane thread")?
@@ -1010,6 +1068,7 @@ fn route_batch<E, F>(
     input: Vec<f32>,
     deadline: Option<Instant>,
     reply: Reply,
+    trace: u64,
     config: &LaneConfig,
     example_len: usize,
     factory: &Arc<F>,
@@ -1043,11 +1102,14 @@ fn route_batch<E, F>(
             }
         }
     }
+    if let Some(tel) = &config.telemetry {
+        tel.event(EventKind::Stage, group.bucket as u32, 0, trace);
+    }
     let lane = &mut group.lanes[li];
     lane.stage(LaneJob {
         input,
         tokens: Vec::new(),
-        batch: Some(ReqToken { reply, deadline }),
+        batch: Some(ReqToken { reply, deadline, trace }),
         routed: Instant::now(),
         attempts: 0,
         done: Vec::new(),
@@ -1092,12 +1154,24 @@ fn admit_one<E, F>(
                 *misc_failed += 1;
             } else {
                 *admitted += 1;
+                let trace = config.telemetry.as_ref().map_or(0, Telemetry::next_trace_id);
                 let hint_gi = hint.and_then(|h| group_index.get(&h)).copied();
+                if let Some(tel) = &config.telemetry {
+                    tel.event(EventKind::Admit, hint.unwrap_or(0) as u32, 0, trace);
+                }
                 if config.edf
                     && admission_doomed(deadline, hint_gi, groups, ewma, Instant::now())
                 {
                     let gi = hint_gi.unwrap_or_else(|| best_group(groups, ewma));
-                    ReqToken { reply, deadline }.shed();
+                    if let Some(tel) = &config.telemetry {
+                        tel.event(
+                            EventKind::ShedAdmission,
+                            groups[gi].bucket as u32,
+                            0,
+                            trace,
+                        );
+                    }
+                    ReqToken { reply, deadline, trace }.shed();
                     groups[gi].stat.deadline_shed += 1;
                     groups[gi].stat.admission_shed += 1;
                 } else {
@@ -1105,10 +1179,18 @@ fn admit_one<E, F>(
                     if let Some(gi) = hint_gi {
                         groups[gi].hinted_since_scale += 1;
                     }
+                    if let Some(tel) = &config.telemetry {
+                        tel.event(EventKind::Stage, hint.unwrap_or(0) as u32, 0, trace);
+                    }
                     if config.edf {
-                        batcher.push_request(ReqToken { reply, deadline }, input, hint, deadline);
+                        batcher.push_request(
+                            ReqToken { reply, deadline, trace },
+                            input,
+                            hint,
+                            deadline,
+                        );
                     } else {
-                        batcher.push_hinted(ReqToken { reply, deadline }, input, hint);
+                        batcher.push_hinted(ReqToken { reply, deadline, trace }, input, hint);
                     }
                 }
             }
@@ -1116,10 +1198,17 @@ fn admit_one<E, F>(
         Admit::Batch { bucket, input, deadline, reply } => match group_index.get(&bucket) {
             Some(&gi) if input.len() == bucket * example_len => {
                 *admitted += 1;
+                let trace = config.telemetry.as_ref().map_or(0, Telemetry::next_trace_id);
+                if let Some(tel) = &config.telemetry {
+                    tel.event(EventKind::Admit, bucket as u32, 0, trace);
+                }
                 if config.edf
                     && admission_doomed(deadline, Some(gi), groups, ewma, Instant::now())
                 {
-                    ReqToken { reply, deadline }.shed();
+                    if let Some(tel) = &config.telemetry {
+                        tel.event(EventKind::ShedAdmission, bucket as u32, 0, trace);
+                    }
+                    ReqToken { reply, deadline, trace }.shed();
                     groups[gi].stat.deadline_shed += 1;
                     groups[gi].stat.admission_shed += 1;
                     return;
@@ -1130,6 +1219,7 @@ fn admit_one<E, F>(
                     input,
                     deadline,
                     reply,
+                    trace,
                     config,
                     example_len,
                     factory,
@@ -1447,7 +1537,13 @@ fn dispatcher_thread<E, F>(
         // Resolve deadlines that expired where the lane pop cannot see
         // them (batcher queue + staged jobs) before forming batches.
         if config.edf {
-            shed_expired_work(&mut groups, &mut batcher, Instant::now(), &mut misc_shed);
+            shed_expired_work(
+                &mut groups,
+                &mut batcher,
+                Instant::now(),
+                &mut misc_shed,
+                config.telemetry.as_ref(),
+            );
         }
         for group in &mut groups {
             for lane in &mut group.lanes {

@@ -2,6 +2,7 @@
 //! per-lane breakdowns for the lane scheduler.
 
 use crate::util::stats::{fmt_secs, Summary};
+use std::fmt::Write as _;
 use std::time::Duration;
 
 /// Per-bucket counters reported by the lane scheduler, filled by that
@@ -120,6 +121,43 @@ impl LaneStat {
         }
     }
 
+    /// One JSON object with every counter — the machine-readable
+    /// counterpart of [`render`](Self::render) (benches and the
+    /// `BENCH_*.json` artifacts consume this instead of scraping the
+    /// human text).
+    pub fn to_json(&self) -> String {
+        let mut o = String::from("{");
+        let _ = write!(o, "\"bucket\": {}", self.bucket);
+        match self.n_streams {
+            Some(s) => drop(write!(o, ", \"n_streams\": {s}")),
+            None => o.push_str(", \"n_streams\": null"),
+        }
+        match self.reserved_bytes {
+            Some(b) => drop(write!(o, ", \"reserved_bytes\": {b}")),
+            None => o.push_str(", \"reserved_bytes\": null"),
+        }
+        let _ = write!(
+            o,
+            ", \"n_batches\": {}, \"n_requests\": {}, \"busy_s\": {:e}, \
+             \"mean_queue_wait_s\": {:e}, \"alloc_events\": {}, \"deadline_shed\": {}, \
+             \"admission_shed\": {}, \"failed\": {}, \"retries\": {}, \
+             \"lanes_spawned\": {}, \"lanes_retired\": {}, \"steals\": {}}}",
+            self.n_batches,
+            self.n_requests,
+            self.busy_s,
+            self.mean_queue_wait_s,
+            self.alloc_events,
+            self.deadline_shed,
+            self.admission_shed,
+            self.failed,
+            self.retries,
+            self.lanes_spawned,
+            self.lanes_retired,
+            self.steals,
+        );
+        o
+    }
+
     pub fn render(&self) -> String {
         format!(
             "lane[bucket={}]: batches={} requests={} busy={} qwait={}{}{}{}{}{}{}{}{}",
@@ -220,6 +258,49 @@ impl ServingReport {
     /// Total cross-context worker steals across buckets.
     pub fn steals(&self) -> u64 {
         self.lanes.iter().map(|l| l.steals).sum()
+    }
+
+    /// The whole report as one JSON document (latency percentiles,
+    /// aggregate counters, and the per-bucket [`LaneStat::to_json`]
+    /// breakdown) — parseable by [`crate::util::json::parse_json`], so
+    /// benches assert on fields instead of scraping
+    /// [`render`](Self::render) text.
+    pub fn to_json(&self) -> String {
+        let mut o = String::from("{\n");
+        // A zero-wall-time report (degenerate, but constructible) must
+        // not emit `inf`/`NaN` — not valid JSON.
+        let rps = self.throughput_rps();
+        let rps = if rps.is_finite() { rps } else { 0.0 };
+        let _ = write!(
+            o,
+            "  \"n_requests\": {}, \"n_batches\": {}, \"wall_s\": {:e}, \
+             \"throughput_rps\": {:e}, \"mean_batch_fill\": {:e},\n  \
+             \"deadline_shed\": {}, \"admission_shed\": {}, \"failed\": {}, \
+             \"retries\": {},\n  \"latency\": {{\"p50_s\": {:e}, \"p90_s\": {:e}, \
+             \"p99_s\": {:e}, \"max_s\": {:e}, \"mean_s\": {:e}}},\n  \"lanes\": [",
+            self.n_requests,
+            self.n_batches,
+            self.wall_time.as_secs_f64(),
+            rps,
+            self.mean_batch_fill,
+            self.deadline_shed,
+            self.admission_shed,
+            self.failed,
+            self.retries,
+            self.latency.percentile(50.0),
+            self.latency.percentile(90.0),
+            self.latency.percentile(99.0),
+            self.latency.max(),
+            self.latency.mean(),
+        );
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if i > 0 {
+                o.push_str(", ");
+            }
+            o.push_str(&lane.to_json());
+        }
+        o.push_str("]\n}\n");
+        o
     }
 
     pub fn render(&self) -> String {
@@ -337,6 +418,42 @@ mod tests {
         assert!(s.contains("failed=2"), "failures must render: {s}");
         assert!(s.contains("retries=1"), "retries must render: {s}");
         assert!(s.contains("steals=5"));
+    }
+
+    #[test]
+    fn report_json_parses_and_carries_every_counter() {
+        let r = ServingReport {
+            n_requests: 10,
+            n_batches: 4,
+            wall_time: Duration::from_secs(1),
+            latency: Summary::from_samples(vec![0.01; 10]),
+            mean_batch_fill: 2.5,
+            deadline_shed: 3,
+            admission_shed: 1,
+            failed: 2,
+            retries: 1,
+            lanes: vec![
+                LaneStat { n_streams: Some(2), n_requests: 2, ..LaneStat::empty(1) },
+                LaneStat { steals: 5, n_requests: 8, ..LaneStat::empty(8) },
+            ],
+        };
+        let doc = crate::util::json::parse_json(&r.to_json())
+            .expect("report JSON must parse");
+        assert_eq!(doc.get("n_requests").and_then(|v| v.as_u64()), Some(10));
+        assert_eq!(doc.get("deadline_shed").and_then(|v| v.as_u64()), Some(3));
+        assert_eq!(doc.get("admission_shed").and_then(|v| v.as_u64()), Some(1));
+        let p50 = doc
+            .get("latency")
+            .and_then(|l| l.get("p50_s"))
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!((p50 - 0.01).abs() < 1e-12);
+        let lanes = doc.get("lanes").and_then(|l| l.as_array()).unwrap();
+        assert_eq!(lanes.len(), 2);
+        assert_eq!(lanes[0].get("n_streams").and_then(|v| v.as_u64()), Some(2));
+        assert!(lanes[1].get("n_streams").is_some_and(|v| v.as_u64().is_none()),
+            "absent shape serializes as null");
+        assert_eq!(lanes[1].get("steals").and_then(|v| v.as_u64()), Some(5));
     }
 
     #[test]

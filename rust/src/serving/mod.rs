@@ -72,6 +72,7 @@ pub use lanes::{LaneClient, LaneConfig, LaneServer, ScaleOptions};
 pub use metrics::{LaneStat, ServingReport};
 pub use queue::Bounded;
 pub use crate::fault::{ChaosEngine, FaultPlan, RetryPolicy};
+pub use crate::telemetry::Telemetry;
 pub use runtime::{
     Health, InferOutcome, InferRequest, RequestOptions, Runtime, RuntimeBuilder, RuntimeHandle,
     Ticket, DEADLINE_SHED,

@@ -67,6 +67,7 @@ use crate::engine::executor::SharedWorkerPool;
 use crate::fault::{ChaosEngine, FaultPlan, RetryPolicy};
 use crate::models;
 use crate::ops::OpGraph;
+use crate::telemetry::Telemetry;
 
 /// The exact reply string of a deadline-shed request — a reserved
 /// sentinel on the legacy `Result<_, String>` reply channel. A reply
@@ -86,6 +87,10 @@ pub(crate) fn shed_error() -> String {
 pub(crate) struct ReqToken {
     pub reply: mpsc::Sender<Result<Vec<f32>, String>>,
     pub deadline: Option<Instant>,
+    /// Flight-recorder trace id correlating this request's lifecycle
+    /// events (admit → stage → pop/shed → reply). 0 when telemetry is
+    /// off or the request predates the recorder (single-engine server).
+    pub trace: u64,
 }
 
 impl ReqToken {
@@ -536,6 +541,19 @@ impl RuntimeBuilder {
         self
     }
 
+    /// Attach a flight recorder ([`Telemetry`]): replay-op spans,
+    /// request-lifecycle events (admit → stage → pop/shed → reply) and
+    /// lane/pool events are recorded into its lock-free rings, and its
+    /// Prometheus metrics are bumped. Off by default — without this
+    /// call the runtime records nothing and pays nothing. The same
+    /// recorder is readable live through the handle
+    /// ([`RuntimeHandle::trace_json`] / [`RuntimeHandle::metrics_text`])
+    /// or directly via the `Telemetry` clone the caller keeps.
+    pub fn telemetry(mut self, telemetry: Telemetry) -> Self {
+        self.lane.telemetry = Some(telemetry);
+        self
+    }
+
     fn engine_opts(&self) -> Result<TapeEngineOptions> {
         let shared_pool = match &self.shared_pool {
             None => None,
@@ -551,6 +569,7 @@ impl RuntimeBuilder {
             arena_pool: self.arena_pool.clone(),
             shared_pool,
             fault: None,
+            telemetry: self.lane.telemetry.clone(),
         })
     }
 
@@ -601,6 +620,7 @@ impl RuntimeBuilder {
             .source
             .context("RuntimeBuilder needs a source: model(), graph_fn(), or artifacts()")?;
         let serial = self.serial;
+        let telemetry = self.lane.telemetry.clone();
         match source {
             Source::Graph { label, build } => {
                 if self.single_thread {
@@ -611,7 +631,7 @@ impl RuntimeBuilder {
                         Ok(if serial { e.serial() } else { e })
                     };
                     NimbleServer::spawn(factory, self.lane.max_wait)
-                        .map(Runtime::from_single)
+                        .map(|s| Runtime::from_single(s, telemetry))
                 } else if let Some(plan) = self.fault.clone() {
                     // Chaos topology: the executor gets a per-bucket
                     // derivation of the plan for replay-level faults,
@@ -630,7 +650,7 @@ impl RuntimeBuilder {
                         Ok(ChaosEngine::new(e, plan.derive(bucket as u64)))
                     };
                     LaneServer::start_inner(&self.buckets, factory, self.lane)
-                        .map(Runtime::from_lanes)
+                        .map(|s| Runtime::from_lanes(s, telemetry))
                 } else {
                     let factory = move |bucket: usize| {
                         let e = TapeEngine::build_opts(
@@ -642,7 +662,7 @@ impl RuntimeBuilder {
                         Ok(if serial { e.serial() } else { e })
                     };
                     LaneServer::start_inner(&self.buckets, factory, self.lane)
-                        .map(Runtime::from_lanes)
+                        .map(|s| Runtime::from_lanes(s, telemetry))
                 }
             }
             #[cfg(feature = "xla")]
@@ -650,12 +670,12 @@ impl RuntimeBuilder {
                 use crate::coordinator::NimbleEngine;
                 if self.single_thread {
                     NimbleServer::spawn(move || NimbleEngine::build(config), self.lane.max_wait)
-                        .map(Runtime::from_single)
+                        .map(|s| Runtime::from_single(s, telemetry))
                 } else {
                     let factory =
                         move |bucket: usize| NimbleEngine::build_for(config.clone(), &[bucket]);
                     LaneServer::start_inner(&self.buckets, factory, self.lane)
-                        .map(Runtime::from_lanes)
+                        .map(|s| Runtime::from_lanes(s, telemetry))
                 }
             }
         }
@@ -713,8 +733,9 @@ impl RuntimeBuilder {
                 "slo() target shed rate must be in [0, 1], got {target}"
             );
         }
+        let telemetry = self.lane.telemetry.clone();
         LaneServer::start_inner(&self.buckets, factory, self.lane)
-            .map(Runtime::from_lanes)
+            .map(|s| Runtime::from_lanes(s, telemetry))
     }
 }
 
@@ -738,16 +759,18 @@ pub struct Runtime {
 }
 
 impl Runtime {
-    fn from_single(server: NimbleServer) -> Runtime {
+    fn from_single(server: NimbleServer, telemetry: Option<Telemetry>) -> Runtime {
         let health = HealthState::new();
         let handle = RuntimeHandle {
             inner: HandleInner::Single(server.client(), Arc::clone(&health)),
+            telemetry,
         };
         Runtime { inner: ServerInner::Single(server, health), handle }
     }
 
-    fn from_lanes(server: LaneServer) -> Runtime {
-        let handle = RuntimeHandle { inner: HandleInner::Lanes(server.client()) };
+    fn from_lanes(server: LaneServer, telemetry: Option<Telemetry>) -> Runtime {
+        let handle =
+            RuntimeHandle { inner: HandleInner::Lanes(server.client()), telemetry };
         Runtime { inner: ServerInner::Lanes(server), handle }
     }
 
@@ -793,6 +816,21 @@ impl Runtime {
     /// A cloneable, `Send` request handle for client threads.
     pub fn handle(&self) -> RuntimeHandle {
         self.handle.clone()
+    }
+
+    /// The attached flight recorder, if any ([`RuntimeHandle::telemetry`]).
+    pub fn telemetry(&self) -> Option<&Telemetry> {
+        self.handle.telemetry()
+    }
+
+    /// Chrome-trace JSON so far ([`RuntimeHandle::trace_json`]).
+    pub fn trace_json(&self) -> Option<String> {
+        self.handle.trace_json()
+    }
+
+    /// Prometheus metrics text ([`RuntimeHandle::metrics_text`]).
+    pub fn metrics_text(&self) -> Option<String> {
+        self.handle.metrics_text()
     }
 
     /// Blocking inference: submit and wait for the output.
@@ -843,6 +881,9 @@ enum HandleInner {
 #[derive(Clone)]
 pub struct RuntimeHandle {
     inner: HandleInner,
+    /// The flight recorder attached at build
+    /// ([`RuntimeBuilder::telemetry`]), if any.
+    telemetry: Option<Telemetry>,
 }
 
 impl RuntimeHandle {
@@ -875,6 +916,28 @@ impl RuntimeHandle {
             HandleInner::Single(_, h) => h.snapshot(),
             HandleInner::Lanes(c) => c.health(),
         }
+    }
+
+    /// The attached flight recorder, if any
+    /// ([`RuntimeBuilder::telemetry`]).
+    pub fn telemetry(&self) -> Option<&Telemetry> {
+        self.telemetry.as_ref()
+    }
+
+    /// Chrome-trace JSON of everything recorded so far (replay-op
+    /// slices + lifecycle instants; drains the rings). Same slice
+    /// schema as the DES export ([`crate::sim::trace::to_chrome_trace`])
+    /// so measured and predicted timelines overlay and diff
+    /// ([`crate::telemetry::diff_traces`]). `None` without telemetry.
+    pub fn trace_json(&self) -> Option<String> {
+        self.telemetry.as_ref().map(Telemetry::chrome_trace)
+    }
+
+    /// Prometheus text exposition of the runtime's metrics (counters,
+    /// the live-lanes gauge, latency/op-span histograms). `None`
+    /// without telemetry.
+    pub fn metrics_text(&self) -> Option<String> {
+        self.telemetry.as_ref().map(Telemetry::metrics_text)
     }
 
     /// Blocking inference: submit and wait for the output (shed and

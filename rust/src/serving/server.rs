@@ -302,7 +302,7 @@ fn engine_thread<E: InferEngine>(
                 reply.send(Err(format!("bad input length {} != {example_len}", input.len())));
             *failed += 1;
         } else {
-            batcher.push_hinted(ReqToken { reply, deadline }, input, hint);
+            batcher.push_hinted(ReqToken { reply, deadline, trace: 0 }, input, hint);
         }
     };
 

@@ -61,6 +61,10 @@ pub struct TapeEngineOptions {
     /// ([`ExecOptions::fault`]); `Runtime::builder().fault_plan(..)`
     /// derives one independent stream per bucket before building.
     pub fault: Option<crate::fault::FaultPlan>,
+    /// Flight recorder shared by every context
+    /// ([`ExecOptions::telemetry`]); build also registers each graph's
+    /// node names as span labels for trace export and calibration.
+    pub telemetry: Option<crate::telemetry::Telemetry>,
 }
 
 /// One independent replay context per compiled batch bucket.
@@ -148,6 +152,13 @@ impl TapeEngine {
         let mut output_len = 0usize;
         for &batch in &sizes {
             let g = build(batch);
+            if let Some(tel) = &opts.telemetry {
+                // Node names label replay-op spans in trace export and
+                // key the calibration profile (cold path: build only).
+                let labels: Vec<&str> =
+                    (0..g.n_nodes()).map(|v| g.node(v).name.as_str()).collect();
+                tel.register_labels(&labels);
+            }
             let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
             let tape = ReplayTape::for_op_graph(&g, &plan, MAX_TASK_ELEMS);
             anyhow::ensure!(
@@ -186,6 +197,7 @@ impl TapeEngine {
                         arena_pool: opts.arena_pool.clone(),
                         shared_pool: opts.shared_pool.clone(),
                         fault: opts.fault.clone(),
+                        telemetry: opts.telemetry.clone(),
                         ..Default::default()
                     },
                 ),

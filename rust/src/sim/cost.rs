@@ -12,7 +12,8 @@
 //!   limits multi-stream gains on NASNet-A (large) in Table 1.
 
 use super::device::GpuSpec;
-use crate::ops::{Op, OpKind};
+use crate::ops::{Op, OpGraph, OpKind};
+use crate::util::json::{escape_json, parse_json, JsonValue};
 
 /// Cost of one operator on a device.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -76,6 +77,103 @@ pub fn scaled_cost(op: &Op, dev: &GpuSpec, matmul_scale: f64) -> KernelCost {
         c.duration_s = var * matmul_scale + dev.kernel_fixed_s;
     }
     c
+}
+
+/// One measured per-op timing entry: aggregate statistics over every
+/// recorded replay span that carried this op label.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostEntry {
+    pub name: String,
+    /// Spans aggregated into this entry.
+    pub count: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+/// A calibration profile: measured per-op durations (from the
+/// telemetry flight recorder, or any other source) that override the
+/// analytic model where data exists. This is the measured input
+/// ROADMAP item 4's contention-aware cost model consumes.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CostProfile {
+    pub entries: Vec<CostEntry>,
+}
+
+impl CostProfile {
+    /// Measured mean duration for an op name, if this profile saw it.
+    pub fn duration_for(&self, name: &str) -> Option<f64> {
+        self.entries.iter().find(|e| e.name == name && e.count > 0).map(|e| e.mean_s)
+    }
+
+    /// Per-node costs for a graph: measured mean where the profile has
+    /// the op's name, analytic [`kernel_cost`] otherwise. The analytic
+    /// `sm_demand` is kept either way — the profile measures time, not
+    /// occupancy. The result feeds `sim::simulate_tape` directly.
+    pub fn costs_for_graph(&self, g: &OpGraph, dev: &GpuSpec) -> Vec<KernelCost> {
+        (0..g.n_nodes())
+            .map(|v| {
+                let op = g.node(v);
+                let mut c = kernel_cost(op, dev);
+                if !op.kind.is_virtual() {
+                    if let Some(measured) = self.duration_for(&op.name) {
+                        c.duration_s = measured;
+                    }
+                }
+                c
+            })
+            .collect()
+    }
+
+    /// Serialize as a versioned JSON document.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"version\": 1,\n  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"count\": {}, \"mean_s\": {:e}, \
+                 \"p50_s\": {:e}, \"p95_s\": {:e}}}",
+                escape_json(&e.name),
+                e.count,
+                e.mean_s,
+                e.p50_s,
+                e.p95_s,
+            ));
+        }
+        out.push_str("\n  ]\n}\n");
+        out
+    }
+
+    /// Parse a profile produced by [`CostProfile::to_json`].
+    pub fn from_json(s: &str) -> Result<CostProfile, String> {
+        let doc = parse_json(s).map_err(|e| format!("cost profile: {e}"))?;
+        let entries = doc
+            .get("entries")
+            .and_then(JsonValue::as_array)
+            .ok_or("cost profile: missing \"entries\" array")?;
+        let mut out = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            let field = |k: &str| {
+                e.get(k)
+                    .and_then(JsonValue::as_f64)
+                    .ok_or_else(|| format!("cost profile entry {i}: missing \"{k}\""))
+            };
+            out.push(CostEntry {
+                name: e
+                    .get("name")
+                    .and_then(JsonValue::as_str)
+                    .ok_or_else(|| format!("cost profile entry {i}: missing \"name\""))?
+                    .to_string(),
+                count: field("count")? as u64,
+                mean_s: field("mean_s")?,
+                p50_s: field("p50_s")?,
+                p95_s: field("p95_s")?,
+            });
+        }
+        Ok(CostProfile { entries: out })
+    }
 }
 
 #[cfg(test)]
@@ -155,5 +253,60 @@ mod tests {
         let v = kernel_cost(&op, &GpuSpec::v100());
         let xp = kernel_cost(&op, &GpuSpec::titan_xp());
         assert!(xp.duration_s > v.duration_s);
+    }
+
+    #[test]
+    fn cost_profile_json_round_trips() {
+        let profile = CostProfile {
+            entries: vec![
+                CostEntry {
+                    name: "conv\"weird\\name".into(),
+                    count: 12,
+                    mean_s: 1.25e-6,
+                    p50_s: 1.0e-6,
+                    p95_s: 3.5e-6,
+                },
+                CostEntry { name: "relu_1".into(), count: 3, mean_s: 4e-7, p50_s: 4e-7, p95_s: 5e-7 },
+            ],
+        };
+        let back = CostProfile::from_json(&profile.to_json()).expect("round trip");
+        assert_eq!(back.entries.len(), 2);
+        assert_eq!(back.entries[0].name, "conv\"weird\\name");
+        assert_eq!(back.entries[0].count, 12);
+        assert!((back.entries[0].mean_s - 1.25e-6).abs() < 1e-18);
+        assert_eq!(back.duration_for("relu_1"), Some(4e-7));
+        assert_eq!(back.duration_for("missing"), None);
+    }
+
+    #[test]
+    fn measured_profile_overrides_analytic_durations_only() {
+        let d = GpuSpec::v100();
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 64, 14, 14]);
+        let c = b.conv(x, 64, 3, 1);
+        let _ = b.relu(c);
+        let g = b.finish();
+        let conv_name = g.node(c).name.clone();
+        let profile = CostProfile {
+            entries: vec![CostEntry {
+                name: conv_name.clone(),
+                count: 5,
+                mean_s: 42e-6,
+                p50_s: 40e-6,
+                p95_s: 50e-6,
+            }],
+        };
+        let analytic: Vec<_> = (0..g.n_nodes()).map(|v| kernel_cost(g.node(v), &d)).collect();
+        let calibrated = profile.costs_for_graph(&g, &d);
+        assert_eq!(calibrated.len(), analytic.len());
+        for v in 0..g.n_nodes() {
+            // Occupancy always stays analytic.
+            assert_eq!(calibrated[v].sm_demand, analytic[v].sm_demand);
+            if g.node(v).name == conv_name {
+                assert_eq!(calibrated[v].duration_s, 42e-6);
+            } else {
+                assert_eq!(calibrated[v].duration_s, analytic[v].duration_s);
+            }
+        }
     }
 }

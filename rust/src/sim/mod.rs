@@ -15,7 +15,7 @@ pub mod framework;
 pub mod metrics;
 pub mod trace;
 
-pub use cost::{kernel_cost, KernelCost};
+pub use cost::{kernel_cost, CostEntry, CostProfile, KernelCost};
 pub use des::{
     peak_reserved_bytes, simulate, simulate_edf, simulate_faults, simulate_lanes,
     simulate_lanes_deadline, simulate_scaling, simulate_tape, BucketScaling, DeadlineLaneStat,

@@ -2,29 +2,50 @@
 //! timeline: one row per stream, one slice per task — the visual
 //! counterpart of the paper's Figure 3. Written by
 //! `nimble sim <model> <system> --trace out.json`.
+//!
+//! The slice schema here is the overlay contract with the *measured*
+//! exporter in [`crate::telemetry::chrome`]: identical keys, identical
+//! units, so a live run and its DES prediction diff cleanly
+//! (`telemetry::diff_traces`). Zero-duration (virtual) spans are
+//! omitted from the slice list but declared in a `dropped_zero_duration_spans`
+//! metadata record so the span accounting still closes.
 
 use super::des::SimResult;
+use crate::util::json::push_escaped;
 
 /// Render the spans as a Chrome trace-event JSON array (µs timestamps).
 pub fn to_chrome_trace(result: &SimResult, label: impl Fn(usize) -> String) -> String {
     let mut out = String::from("[\n");
     let mut first = true;
+    let mut zero_duration = 0u64;
     for sp in &result.spans {
         if sp.duration() <= 0.0 {
+            zero_duration += 1;
             continue;
         }
         if !first {
             out.push_str(",\n");
         }
         first = false;
+        let mut name = String::new();
+        push_escaped(&mut name, &label(sp.node));
         out.push_str(&format!(
             "  {{\"name\": \"{}\", \"ph\": \"X\", \"ts\": {:.3}, \"dur\": {:.3}, \
              \"pid\": 0, \"tid\": {}, \"args\": {{\"submit_us\": {:.3}}}}}",
-            label(sp.node).replace('"', "'"),
+            name,
             sp.start_s * 1e6,
             sp.duration() * 1e6,
             sp.stream,
             sp.submit_s * 1e6,
+        ));
+    }
+    if zero_duration > 0 {
+        if !first {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "  {{\"name\": \"dropped_zero_duration_spans\", \"ph\": \"M\", \"pid\": 0, \
+             \"tid\": 0, \"args\": {{\"count\": {zero_duration}}}}}",
         ));
     }
     out.push_str("\n]\n");
@@ -37,6 +58,7 @@ mod tests {
     use crate::baselines::{prepare, run_prepared, Baseline};
     use crate::models;
     use crate::sim::GpuSpec;
+    use crate::util::json::parse_json;
 
     #[test]
     fn trace_is_valid_jsonish_and_covers_all_real_tasks() {
@@ -64,5 +86,59 @@ mod tests {
         let r = run_prepared(&p, &dev);
         let trace = to_chrome_trace(&r, |n| p.graph.node(n).name.clone());
         assert!(!trace.contains("input_1"), "virtual input must not appear");
+    }
+
+    #[test]
+    fn zero_duration_spans_are_counted_not_lost() {
+        let dev = GpuSpec::v100();
+        let g = models::build("mini_inception", 1);
+        let p = prepare(&g, Baseline::PyTorch, &dev, false);
+        let r = run_prepared(&p, &dev);
+        let n_zero = r.spans.iter().filter(|s| s.duration() <= 0.0).count() as u64;
+        assert!(n_zero > 0, "mini_inception must have virtual (zero-dur) spans");
+        let trace = to_chrome_trace(&r, |n| p.graph.node(n).name.clone());
+        let doc = parse_json(&trace).expect("trace must be valid JSON");
+        let dropped = doc
+            .as_array()
+            .unwrap()
+            .iter()
+            .find(|rec| {
+                rec.get("name").and_then(|n| n.as_str())
+                    == Some("dropped_zero_duration_spans")
+            })
+            .expect("metadata record must declare the omissions");
+        assert_eq!(
+            dropped.get("args").and_then(|a| a.get("count")).and_then(|c| c.as_u64()),
+            Some(n_zero)
+        );
+        // Slice count + declared omissions == total simulated spans.
+        let n_slices = trace.matches("\"ph\": \"X\"").count() as u64;
+        assert_eq!(n_slices + n_zero, r.spans.len() as u64);
+    }
+
+    #[test]
+    fn hostile_labels_are_escaped_to_valid_json() {
+        let dev = GpuSpec::v100();
+        let g = models::build("mini_inception", 1);
+        let p = prepare(&g, Baseline::Nimble, &dev, true);
+        let r = run_prepared(&p, &dev);
+        // Hostile names: quotes, backslashes, control characters — the
+        // exact inputs the old `replace('"', '\'')` mangled or broke on.
+        let trace = to_chrome_trace(&r, |n| format!("op\"{n}\\x\n\u{1}"));
+        let doc = parse_json(&trace).expect("hostile labels must still be valid JSON");
+        let arr = doc.as_array().unwrap();
+        let with_name = arr
+            .iter()
+            .filter_map(|rec| rec.get("name").and_then(|n| n.as_str()))
+            .filter(|n| n.starts_with("op\""))
+            .count();
+        assert_eq!(with_name, trace.matches("\"ph\": \"X\"").count());
+        // Labels round-trip unmangled (quotes preserved, not rewritten
+        // to apostrophes; backslash and control chars intact).
+        assert!(arr.iter().any(|rec| {
+            rec.get("name")
+                .and_then(|n| n.as_str())
+                .is_some_and(|n| n.starts_with("op\"") && n.ends_with("\\x\n\u{1}"))
+        }));
     }
 }

@@ -1,0 +1,96 @@
+//! Calibration pass: fold recorded replay-op spans into a
+//! [`CostProfile`] the DES cost model consumes.
+//!
+//! Spans are grouped by op *label* (graph node name), because that is
+//! the key `CostProfile::costs_for_graph` matches against, and
+//! summarized as count / mean / p50 / p95. Only spans still resident
+//! in the rings contribute — on a wrapped ring that is the newest
+//! window, which for steady-state replay is also the most
+//! representative one.
+
+use std::collections::BTreeMap;
+
+use super::{EventKind, TelemetrySnapshot};
+use crate::sim::cost::{CostEntry, CostProfile};
+
+/// Quantile by nearest-rank on an ascending-sorted slice.
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Build a calibration profile from a snapshot's replay-op spans.
+pub fn cost_profile(
+    snap: &TelemetrySnapshot,
+    label: impl Fn(u32) -> String,
+) -> CostProfile {
+    let mut by_name: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for e in snap.events.iter().filter(|e| e.kind == EventKind::ReplayOp) {
+        by_name.entry(label(e.op)).or_default().push(e.duration_s());
+    }
+    let entries = by_name
+        .into_iter()
+        .map(|(name, mut durs)| {
+            durs.sort_by(|a, b| a.total_cmp(b));
+            let count = durs.len() as u64;
+            let mean_s = durs.iter().sum::<f64>() / count as f64;
+            CostEntry {
+                name,
+                count,
+                mean_s,
+                p50_s: quantile(&durs, 0.50),
+                p95_s: quantile(&durs, 0.95),
+            }
+        })
+        .collect();
+    CostProfile { entries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{Event, RingStats};
+
+    fn op_span(op: u32, t0: u64, t1: u64) -> Event {
+        Event { kind: EventKind::ReplayOp, stream: 0, op, trace: 0, t0_ns: t0, t1_ns: t1 }
+    }
+
+    #[test]
+    fn spans_fold_into_per_op_statistics() {
+        let events = vec![
+            op_span(0, 0, 1_000),      // 1 µs
+            op_span(0, 2_000, 5_000),  // 3 µs
+            op_span(1, 0, 500),        // 0.5 µs
+            Event {
+                kind: EventKind::Admit,
+                stream: 0,
+                op: 0,
+                trace: 1,
+                t0_ns: 0,
+                t1_ns: 0,
+            },
+        ];
+        let emitted = events.len() as u64;
+        let snap = TelemetrySnapshot {
+            events,
+            rings: vec![RingStats { emitted, recorded: emitted, dropped: 0 }],
+            emitted,
+            recorded: emitted,
+            dropped: 0,
+        };
+        let profile = cost_profile(&snap, |op| format!("k{op}"));
+        assert_eq!(profile.entries.len(), 2); // admit events don't calibrate
+        let k0 = profile.entries.iter().find(|e| e.name == "k0").unwrap();
+        assert_eq!(k0.count, 2);
+        assert!((k0.mean_s - 2e-6).abs() < 1e-15);
+        assert!((k0.p50_s - 3e-6).abs() < 1e-15); // nearest-rank of [1µs, 3µs] at q=.5
+        assert!((k0.p95_s - 3e-6).abs() < 1e-15);
+        assert_eq!(profile.duration_for("k1"), Some(5e-7));
+        // And the profile survives its own JSON round trip.
+        let back = CostProfile::from_json(&profile.to_json()).unwrap();
+        assert_eq!(back.entries.len(), 2);
+    }
+}

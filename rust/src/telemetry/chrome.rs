@@ -1,0 +1,306 @@
+//! Chrome-trace export of a *measured* run, plus the parse/diff half
+//! of the measured-vs-predicted loop.
+//!
+//! Replay-op spans are emitted with exactly the slice schema
+//! `sim::trace::to_chrome_trace` uses for the DES prediction —
+//! `{"name", "ph": "X", "ts", "dur", "pid": 0, "tid": <stream>,
+//! "args": {"submit_us"}}` — so a live trace and its prediction load
+//! into Perfetto as two overlayable process rows and can be diffed
+//! programmatically with [`diff_traces`]. Request-lifecycle and
+//! lane/pool events ride along on `pid` 1 as instant events; ring
+//! drop-oldest losses are declared in a metadata record so a consumer
+//! can tell a short trace from a truncated one.
+
+use std::collections::BTreeMap;
+
+use super::{Event, EventKind, TelemetrySnapshot};
+use crate::util::json::{parse_json, push_escaped, JsonValue};
+
+/// Render a snapshot as a Chrome trace-event JSON array (µs units).
+pub fn to_chrome_trace(snap: &TelemetrySnapshot, label: impl Fn(u32) -> String) -> String {
+    let mut out = String::from("[\n");
+    let mut first = true;
+    let mut push = |line: &str, first: &mut bool| {
+        if !*first {
+            out.push_str(",\n");
+        }
+        *first = false;
+        out.push_str(line);
+    };
+    for e in &snap.events {
+        let ts = e.t0_ns as f64 / 1e3;
+        let dur = e.t1_ns.saturating_sub(e.t0_ns) as f64 / 1e3;
+        let line = match e.kind {
+            EventKind::ReplayOp => {
+                let mut name = String::new();
+                push_escaped(&mut name, &label(e.op));
+                format!(
+                    "  {{\"name\": \"{}\", \"ph\": \"X\", \"ts\": {:.3}, \"dur\": {:.3}, \
+                     \"pid\": 0, \"tid\": {}, \"args\": {{\"submit_us\": {:.3}}}}}",
+                    name, ts, dur, e.stream, ts,
+                )
+            }
+            _ => format!(
+                "  {{\"name\": \"{}\", \"ph\": \"i\", \"s\": \"g\", \"ts\": {:.3}, \
+                 \"pid\": 1, \"tid\": {}, \"args\": {{\"trace\": {}, \"aux\": {}, \
+                 \"end_us\": {:.3}}}}}",
+                e.kind.name(),
+                ts,
+                e.stream,
+                e.trace,
+                e.op,
+                e.t1_ns as f64 / 1e3,
+            ),
+        };
+        push(&line, &mut first);
+    }
+    if snap.dropped > 0 {
+        push(
+            &format!(
+                "  {{\"name\": \"dropped_spans\", \"ph\": \"M\", \"pid\": 0, \"tid\": 0, \
+                 \"args\": {{\"count\": {}}}}}",
+                snap.dropped
+            ),
+            &mut first,
+        );
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+/// One parsed trace record — the common subset of the sim exporter's
+/// and the telemetry exporter's output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSlice {
+    pub name: String,
+    pub ph: String,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub pid: u64,
+    pub tid: u64,
+}
+
+/// Parse a Chrome trace-event JSON array back into slices.
+pub fn parse_trace(json: &str) -> Result<Vec<TraceSlice>, String> {
+    let doc = parse_json(json).map_err(|e| format!("trace: {e}"))?;
+    let arr = doc.as_array().ok_or("trace: top level must be an array")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, rec) in arr.iter().enumerate() {
+        let name = rec
+            .get("name")
+            .and_then(JsonValue::as_str)
+            .ok_or_else(|| format!("trace record {i}: missing \"name\""))?
+            .to_string();
+        let ph = rec
+            .get("ph")
+            .and_then(JsonValue::as_str)
+            .ok_or_else(|| format!("trace record {i}: missing \"ph\""))?
+            .to_string();
+        out.push(TraceSlice {
+            name,
+            ph,
+            ts_us: rec.get("ts").and_then(JsonValue::as_f64).unwrap_or(0.0),
+            dur_us: rec.get("dur").and_then(JsonValue::as_f64).unwrap_or(0.0),
+            pid: rec.get("pid").and_then(JsonValue::as_u64).unwrap_or(0),
+            tid: rec.get("tid").and_then(JsonValue::as_u64).unwrap_or(0),
+        });
+    }
+    Ok(out)
+}
+
+/// Dropped-span count declared by the trace's metadata record (0 when
+/// the trace carries none).
+pub fn dropped_span_count(slices: &[TraceSlice]) -> u64 {
+    // The count lives in `args`, which TraceSlice doesn't keep; the
+    // exporter also mirrors accounting into the snapshot, so here the
+    // *presence* of the record is what matters to round-trip tests.
+    slices.iter().filter(|s| s.ph == "M" && s.name == "dropped_spans").count() as u64
+}
+
+/// Per-op residual between a measured trace and its DES prediction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpResidual {
+    pub name: String,
+    pub n_measured: usize,
+    pub n_predicted: usize,
+    /// Total duration across slices with this name, µs.
+    pub measured_us: f64,
+    pub predicted_us: f64,
+    /// `measured - predicted` (µs); positive = measured ran longer.
+    pub residual_us: f64,
+}
+
+/// Diff two traces op-by-op over their `"X"` slices. Names present in
+/// only one side still get a row (the other side reads as zero), so
+/// coverage gaps are visible, not silently dropped.
+pub fn diff_traces(measured: &[TraceSlice], predicted: &[TraceSlice]) -> Vec<OpResidual> {
+    fn fold(slices: &[TraceSlice]) -> BTreeMap<String, (usize, f64)> {
+        let mut m: BTreeMap<String, (usize, f64)> = BTreeMap::new();
+        for s in slices.iter().filter(|s| s.ph == "X") {
+            let e = m.entry(s.name.clone()).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += s.dur_us;
+        }
+        m
+    }
+    let a = fold(measured);
+    let b = fold(predicted);
+    let mut names: Vec<&String> = a.keys().chain(b.keys()).collect();
+    names.sort();
+    names.dedup();
+    names
+        .into_iter()
+        .map(|name| {
+            let (n_measured, measured_us) = a.get(name).copied().unwrap_or((0, 0.0));
+            let (n_predicted, predicted_us) = b.get(name).copied().unwrap_or((0, 0.0));
+            OpResidual {
+                name: name.clone(),
+                n_measured,
+                n_predicted,
+                measured_us,
+                predicted_us,
+                residual_us: measured_us - predicted_us,
+            }
+        })
+        .collect()
+}
+
+/// Human-readable residual table for the `nimble trace` CLI.
+pub fn render_residuals(residuals: &[OpResidual]) -> String {
+    let mut out = String::from(
+        "op                               n_meas  n_pred   measured_us  predicted_us   residual_us\n",
+    );
+    for r in residuals {
+        out.push_str(&format!(
+            "{:<32} {:>6}  {:>6}  {:>12.3}  {:>12.3}  {:>12.3}\n",
+            r.name, r.n_measured, r.n_predicted, r.measured_us, r.predicted_us, r.residual_us,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{RingStats, Telemetry};
+
+    fn span(kind: EventKind, stream: u32, op: u32, t0: u64, t1: u64) -> Event {
+        Event { kind, stream, op, trace: 0, t0_ns: t0, t1_ns: t1 }
+    }
+
+    fn snap(events: Vec<Event>, dropped: u64) -> TelemetrySnapshot {
+        let emitted = events.len() as u64 + dropped;
+        TelemetrySnapshot {
+            recorded: events.len() as u64,
+            rings: vec![RingStats { emitted, recorded: events.len() as u64, dropped }],
+            emitted,
+            dropped,
+            events,
+        }
+    }
+
+    #[test]
+    fn export_parses_back_with_hostile_labels() {
+        let s = snap(
+            vec![
+                span(EventKind::ReplayOp, 0, 0, 1_000, 3_500),
+                span(EventKind::ReplayOp, 1, 1, 2_000, 2_000),
+                span(EventKind::Admit, 3, 0, 500, 500),
+            ],
+            2,
+        );
+        let hostile = ["op\"zero\\one\ntwo".to_string(), "plain".to_string()];
+        let trace = to_chrome_trace(&s, |op| hostile[op as usize].clone());
+        let slices = parse_trace(&trace).expect("export must parse");
+        assert_eq!(slices.len(), 4); // 2 ops + 1 instant + dropped metadata
+        assert_eq!(dropped_span_count(&slices), 1);
+        let ops: Vec<_> = slices.iter().filter(|s| s.ph == "X").collect();
+        assert_eq!(ops.len(), 2);
+        assert_eq!(ops[0].name, hostile[0]);
+        assert!((ops[0].ts_us - 1.0).abs() < 1e-9);
+        assert!((ops[0].dur_us - 2.5).abs() < 1e-9);
+        assert_eq!(ops[0].pid, 0);
+        assert_eq!(ops[0].tid, 0);
+        // Zero-duration measured spans are kept, not dropped.
+        assert!((ops[1].dur_us).abs() < 1e-9);
+        let instants: Vec<_> = slices.iter().filter(|s| s.ph == "i").collect();
+        assert_eq!(instants.len(), 1);
+        assert_eq!(instants[0].name, "admit");
+        assert_eq!(instants[0].pid, 1);
+    }
+
+    #[test]
+    fn measured_schema_matches_sim_schema() {
+        // Build a measured trace and a sim trace and check the X-slice
+        // key set is identical — the overlay contract.
+        let s = snap(vec![span(EventKind::ReplayOp, 2, 0, 0, 1_000)], 0);
+        let measured = to_chrome_trace(&s, |_| "k".to_string());
+        let line = measured.lines().find(|l| l.contains("\"ph\": \"X\"")).unwrap();
+        for key in ["\"name\"", "\"ph\"", "\"ts\"", "\"dur\"", "\"pid\": 0", "\"tid\"", "\"submit_us\""]
+        {
+            assert!(line.contains(key), "missing {key} in {line}");
+        }
+    }
+
+    #[test]
+    fn diff_reports_residuals_and_coverage_gaps() {
+        let measured = parse_trace(
+            &to_chrome_trace(
+                &snap(
+                    vec![
+                        span(EventKind::ReplayOp, 0, 0, 0, 3_000),
+                        span(EventKind::ReplayOp, 0, 0, 5_000, 7_000),
+                        span(EventKind::ReplayOp, 1, 1, 0, 1_000),
+                    ],
+                    0,
+                ),
+                |op| if op == 0 { "conv".into() } else { "only_measured".into() },
+            ),
+        )
+        .unwrap();
+        let predicted = vec![
+            TraceSlice {
+                name: "conv".into(),
+                ph: "X".into(),
+                ts_us: 0.0,
+                dur_us: 4.0,
+                pid: 0,
+                tid: 0,
+            },
+            TraceSlice {
+                name: "only_predicted".into(),
+                ph: "X".into(),
+                ts_us: 9.0,
+                dur_us: 2.0,
+                pid: 0,
+                tid: 1,
+            },
+        ];
+        let diff = diff_traces(&measured, &predicted);
+        assert_eq!(diff.len(), 3);
+        let conv = diff.iter().find(|r| r.name == "conv").unwrap();
+        assert_eq!((conv.n_measured, conv.n_predicted), (2, 1));
+        assert!((conv.measured_us - 5.0).abs() < 1e-9);
+        assert!((conv.residual_us - 1.0).abs() < 1e-9);
+        let gap = diff.iter().find(|r| r.name == "only_predicted").unwrap();
+        assert_eq!(gap.n_measured, 0);
+        let table = render_residuals(&diff);
+        assert!(table.contains("conv") && table.contains("only_measured"));
+    }
+
+    #[test]
+    fn live_telemetry_trace_round_trips() {
+        use std::time::Instant;
+        let tel = Telemetry::with_capacity(32);
+        tel.register_labels(&["a", "b"]);
+        let t0 = Instant::now();
+        tel.replay_span(0, 0, t0, Instant::now());
+        tel.replay_span(1, 1, t0, Instant::now());
+        tel.event(EventKind::Kick, 0, 0, 7);
+        let slices = parse_trace(&tel.chrome_trace()).expect("live trace parses");
+        let snap = tel.snapshot();
+        assert_eq!(slices.len(), snap.recorded as usize);
+        assert_eq!(snap.recorded + snap.dropped, snap.emitted);
+        assert_eq!(slices.iter().filter(|s| s.ph == "X").count(), 2);
+    }
+}

@@ -1,0 +1,291 @@
+//! Telemetry metrics registry: fixed-shape counters, gauges, and
+//! fixed-bucket histograms with Prometheus text exposition.
+//!
+//! Everything is preallocated at construction — observing a value is a
+//! handful of relaxed atomic adds, so the registry can sit on the
+//! executor's and lanes' hot paths without breaking the zero-alloc
+//! invariant. Exposition (`prometheus_text`) snapshots the atomics at
+//! read time; it never locks writers out.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+use super::{EventKind, N_EVENT_KINDS};
+
+/// Upper bounds (seconds) for the latency histogram: 10 µs … 10 s in
+/// roughly 1-2.5-5 decades, plus +Inf implicitly.
+pub const LATENCY_BUCKETS_S: [f64; 14] = [
+    10e-6, 25e-6, 50e-6, 100e-6, 250e-6, 500e-6, 1e-3, 2.5e-3, 5e-3, 10e-3, 25e-3, 100e-3,
+    1.0, 10.0,
+];
+
+/// Upper bounds (seconds) for per-op replay spans: 250 ns … 100 ms.
+pub const OP_BUCKETS_S: [f64; 12] = [
+    250e-9, 1e-6, 2.5e-6, 5e-6, 10e-6, 25e-6, 50e-6, 100e-6, 250e-6, 1e-3, 10e-3, 100e-3,
+];
+
+/// A fixed-bucket histogram. Bucket counts are *non*-cumulative in
+/// memory and cumulated at exposition time, Prometheus-style.
+pub struct Histogram {
+    bounds: &'static [f64],
+    counts: Box<[AtomicU64]>,
+    /// Overflow bucket (> last bound) — the `+Inf` bucket's exclusive
+    /// share.
+    inf: AtomicU64,
+    sum_ns: AtomicU64,
+    total: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &'static [f64]) -> Self {
+        Histogram {
+            bounds,
+            counts: (0..bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            inf: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            total: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation in seconds. Zero-alloc, lock-free.
+    #[inline]
+    pub fn observe(&self, seconds: f64) {
+        let mut hit = false;
+        for (i, b) in self.bounds.iter().enumerate() {
+            if seconds <= *b {
+                self.counts[i].fetch_add(1, Ordering::Relaxed);
+                hit = true;
+                break;
+            }
+        }
+        if !hit {
+            self.inf.fetch_add(1, Ordering::Relaxed);
+        }
+        let ns = (seconds.max(0.0) * 1e9) as u64;
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_seconds(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    fn render(&self, name: &str, help: &str, out: &mut String) {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+        let mut cum = 0u64;
+        for (i, b) in self.bounds.iter().enumerate() {
+            cum += self.counts[i].load(Ordering::Relaxed);
+            out.push_str(&format!("{name}_bucket{{le=\"{b}\"}} {cum}\n"));
+        }
+        cum += self.inf.load(Ordering::Relaxed);
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+        out.push_str(&format!("{name}_sum {}\n", self.sum_seconds()));
+        out.push_str(&format!("{name}_count {}\n", self.count()));
+    }
+}
+
+/// The registry: one counter per event kind (bumped by
+/// `Telemetry::record` itself, so counters and the span ring can never
+/// disagree about what was observed), a live-lanes gauge, span
+/// accounting counters, and two histograms.
+pub struct Metrics {
+    pub(crate) kind_counts: [AtomicU64; N_EVENT_KINDS],
+    pub(crate) lanes_live: AtomicI64,
+    /// Events whose thread-local ring could not be reached (thread in
+    /// teardown) — they are counted here instead of silently vanishing.
+    pub(crate) unrouted: AtomicU64,
+    pub latency: Histogram,
+    pub op_span: Histogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            kind_counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            lanes_live: AtomicI64::new(0),
+            unrouted: AtomicU64::new(0),
+            latency: Histogram::new(&LATENCY_BUCKETS_S),
+            op_span: Histogram::new(&OP_BUCKETS_S),
+        }
+    }
+
+    pub fn count(&self, kind: EventKind) -> u64 {
+        self.kind_counts[kind as usize].load(Ordering::Relaxed)
+    }
+
+    /// Render the whole registry in Prometheus text exposition format.
+    /// `emitted`/`recorded`/`dropped` are the ring totals supplied by
+    /// the telemetry snapshot so span accounting is scrapeable too.
+    pub fn prometheus_text(&self, emitted: u64, recorded: u64, dropped: u64) -> String {
+        let mut out = String::with_capacity(4096);
+        let mut counter = |name: &str, help: &str, v: u64| {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+            ));
+        };
+        counter(
+            "nimble_replay_ops_total",
+            "Replay-op spans recorded by the executor.",
+            self.count(EventKind::ReplayOp),
+        );
+        counter(
+            "nimble_requests_admitted_total",
+            "Requests admitted into the serving queue.",
+            self.count(EventKind::Admit),
+        );
+        counter(
+            "nimble_requests_staged_total",
+            "Requests staged into a batch by the EDF batcher.",
+            self.count(EventKind::Stage),
+        );
+        counter(
+            "nimble_batches_popped_total",
+            "Batches popped by lane threads.",
+            self.count(EventKind::Pop),
+        );
+        counter(
+            "nimble_retries_total",
+            "In-lane retries of failed batches.",
+            self.count(EventKind::Retry),
+        );
+        counter(
+            "nimble_replies_total",
+            "Request replies delivered to clients.",
+            self.count(EventKind::Reply),
+        );
+        counter(
+            "nimble_lanes_spawned_total",
+            "Lane threads ever spawned.",
+            self.count(EventKind::LaneSpawn),
+        );
+        counter(
+            "nimble_lanes_retired_total",
+            "Lane threads retired or detected dead.",
+            self.count(EventKind::LaneRetire),
+        );
+        counter(
+            "nimble_kicks_total",
+            "Dispatcher wakeup kicks from lanes.",
+            self.count(EventKind::Kick),
+        );
+        counter(
+            "nimble_steals_total",
+            "Cross-job steals in the shared worker pool.",
+            self.count(EventKind::Steal),
+        );
+        counter(
+            "nimble_arena_acquires_total",
+            "Arena leases acquired from the pool.",
+            self.count(EventKind::ArenaAcquire),
+        );
+        counter(
+            "nimble_arena_releases_total",
+            "Arena leases handed back to the pool.",
+            self.count(EventKind::ArenaRelease),
+        );
+        counter(
+            "nimble_spans_emitted_total",
+            "Events emitted across all rings (recorded + dropped).",
+            emitted,
+        );
+        counter(
+            "nimble_spans_recorded_total",
+            "Events still resident in the rings.",
+            recorded,
+        );
+        counter(
+            "nimble_spans_dropped_total",
+            "Events overwritten by drop-oldest ring wrap.",
+            dropped,
+        );
+        counter(
+            "nimble_spans_unrouted_total",
+            "Events observed while the thread-local ring was unreachable.",
+            self.unrouted.load(Ordering::Relaxed),
+        );
+        // Labeled shed counter: one family, three stages.
+        out.push_str(
+            "# HELP nimble_deadline_shed_total Requests shed, by pipeline stage.\n\
+             # TYPE nimble_deadline_shed_total counter\n",
+        );
+        out.push_str(&format!(
+            "nimble_deadline_shed_total{{stage=\"admission\"}} {}\n",
+            self.count(EventKind::ShedAdmission)
+        ));
+        out.push_str(&format!(
+            "nimble_deadline_shed_total{{stage=\"staged\"}} {}\n",
+            self.count(EventKind::ShedStaged)
+        ));
+        out.push_str(&format!(
+            "nimble_deadline_shed_total{{stage=\"pop\"}} {}\n",
+            self.count(EventKind::ShedPop)
+        ));
+        out.push_str(
+            "# HELP nimble_lanes_live Lane threads currently live.\n\
+             # TYPE nimble_lanes_live gauge\n",
+        );
+        out.push_str(&format!(
+            "nimble_lanes_live {}\n",
+            self.lanes_live.load(Ordering::Relaxed)
+        ));
+        self.latency.render(
+            "nimble_request_latency_seconds",
+            "End-to-end request latency (enqueue to reply).",
+            &mut out,
+        );
+        self.op_span.render(
+            "nimble_replay_op_seconds",
+            "Per-op replay span duration.",
+            &mut out,
+        );
+        out
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_cumulate_and_account() {
+        let h = Histogram::new(&LATENCY_BUCKETS_S);
+        h.observe(5e-6); // first bucket
+        h.observe(40e-6); // le=50µs
+        h.observe(99.0); // +Inf only
+        assert_eq!(h.count(), 3);
+        let mut out = String::new();
+        h.render("t", "test", &mut out);
+        assert!(out.contains("t_bucket{le=\"0.00001\"} 1\n"));
+        assert!(out.contains("t_bucket{le=\"+Inf\"} 3\n"));
+        assert!(out.contains("t_count 3\n"));
+    }
+
+    #[test]
+    fn exposition_is_well_formed() {
+        let m = Metrics::new();
+        m.kind_counts[EventKind::Admit as usize].fetch_add(2, Ordering::Relaxed);
+        m.latency.observe(1e-3);
+        let text = m.prometheus_text(7, 5, 2);
+        assert!(text.contains("nimble_requests_admitted_total 2\n"));
+        assert!(text.contains("nimble_spans_emitted_total 7\n"));
+        assert!(text.contains("nimble_deadline_shed_total{stage=\"admission\"} 0\n"));
+        // Every line is either a comment or `name{labels} value`.
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#')
+                    || line.split_whitespace().count() == 2
+                    || line.contains("{"),
+                "odd exposition line: {line}"
+            );
+        }
+    }
+}

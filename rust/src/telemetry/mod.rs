@@ -1,0 +1,559 @@
+//! Flight recorder: zero-alloc runtime tracing for the live stack.
+//!
+//! The DES can already draw a predicted timeline
+//! ([`crate::sim::trace`]); this module records the *measured* one. A
+//! [`Telemetry`] handle fans out to preallocated per-thread
+//! [`ring::ThreadRing`]s — recording an event is an enabled check, a
+//! counter bump, and a seqlock slot write: no locks, no allocation
+//! after the first event a thread records (ring warmup), preserving
+//! the executor's zero-alloc hot-path invariant. Three event families
+//! are captured:
+//!
+//! * **replay-op spans** — stream, op, start/end around every kernel
+//!   execution in [`crate::engine::executor`];
+//! * **request lifecycle** — admit → EDF-stage → pop /
+//!   shed{admission,staged,pop} → retry → reply, keyed by a per-ticket
+//!   trace id minted at admission;
+//! * **lane & pool events** — lane spawn/retire, dispatcher kicks,
+//!   worker-pool steals, arena acquire/release.
+//!
+//! Read-side: [`Telemetry::snapshot`] decodes every stable slot
+//! (accounting closes: `recorded + dropped == emitted` per ring),
+//! [`Telemetry::chrome_trace`] exports the measured run in the *same*
+//! slice schema as `sim::trace::to_chrome_trace` so live and predicted
+//! timelines overlay in Perfetto, [`Telemetry::metrics_text`] exposes
+//! Prometheus counters/gauges/histograms, and
+//! [`Telemetry::cost_profile`] folds per-op span histograms into a
+//! [`crate::sim::cost::CostProfile`] the DES consumes for calibration.
+//!
+//! Off by default everywhere: engines and lanes take
+//! `Option<Telemetry>`, and `None` costs nothing.
+
+pub mod calibrate;
+pub mod chrome;
+pub mod metrics;
+pub mod ring;
+
+pub use chrome::{diff_traces, parse_trace, render_residuals, OpResidual, TraceSlice};
+pub use metrics::Metrics;
+pub use ring::RingStats;
+
+use std::cell::RefCell;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use ring::ThreadRing;
+
+/// Default per-thread ring capacity (events). 16Ki events × 32 B/slot
+/// payload ≈ 0.5 MiB per recording thread.
+pub const DEFAULT_RING_CAPACITY: usize = 16 * 1024;
+
+/// Number of [`EventKind`] variants (array-sized counters).
+pub const N_EVENT_KINDS: usize = 15;
+
+/// Everything the flight recorder knows how to record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// One kernel execution: `stream`, `op` = graph node, span times.
+    ReplayOp = 0,
+    /// Request admitted; mints the ticket's trace id.
+    Admit = 1,
+    /// Request staged into a forming batch by the EDF batcher.
+    Stage = 2,
+    /// Lane popped a formed batch (`op` = batch rows).
+    Pop = 3,
+    /// Shed at admission (queue-delay estimate ruled the budget out).
+    ShedAdmission = 4,
+    /// Shed from a staged batch by the expiry sweep.
+    ShedStaged = 5,
+    /// Shed at pop time (expired while queued/routed).
+    ShedPop = 6,
+    /// In-lane retry of a failed batch.
+    Retry = 7,
+    /// Reply delivered (span = enqueue → reply when times are known).
+    Reply = 8,
+    /// Lane thread spawned (`stream` = bucket).
+    LaneSpawn = 9,
+    /// Lane thread retired or detected dead (`stream` = bucket).
+    LaneRetire = 10,
+    /// Lane kicked the dispatcher awake.
+    Kick = 11,
+    /// Shared-pool worker stole onto a different replay job.
+    Steal = 12,
+    /// Arena lease acquired from the pool (`op` = KiB leased).
+    ArenaAcquire = 13,
+    /// Arena lease handed back.
+    ArenaRelease = 14,
+}
+
+impl EventKind {
+    pub fn from_u8(v: u8) -> Option<EventKind> {
+        use EventKind::*;
+        Some(match v {
+            0 => ReplayOp,
+            1 => Admit,
+            2 => Stage,
+            3 => Pop,
+            4 => ShedAdmission,
+            5 => ShedStaged,
+            6 => ShedPop,
+            7 => Retry,
+            8 => Reply,
+            9 => LaneSpawn,
+            10 => LaneRetire,
+            11 => Kick,
+            12 => Steal,
+            13 => ArenaAcquire,
+            14 => ArenaRelease,
+            _ => return None,
+        })
+    }
+
+    /// Stable lower-snake name used in trace exports.
+    pub fn name(&self) -> &'static str {
+        use EventKind::*;
+        match self {
+            ReplayOp => "replay_op",
+            Admit => "admit",
+            Stage => "stage",
+            Pop => "pop",
+            ShedAdmission => "shed_admission",
+            ShedStaged => "shed_staged",
+            ShedPop => "shed_pop",
+            Retry => "retry",
+            Reply => "reply",
+            LaneSpawn => "lane_spawn",
+            LaneRetire => "lane_retire",
+            Kick => "kick",
+            Steal => "steal",
+            ArenaAcquire => "arena_acquire",
+            ArenaRelease => "arena_release",
+        }
+    }
+}
+
+/// One decoded event. Times are nanoseconds since the telemetry
+/// handle's origin instant; instant events have `t0_ns == t1_ns`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub kind: EventKind,
+    /// Stream id for replay ops; bucket id for serving/lane events.
+    pub stream: u32,
+    /// Graph node for replay ops; kind-specific payload otherwise
+    /// (batch rows for `Pop`, KiB for `ArenaAcquire`, 0 elsewhere).
+    pub op: u32,
+    /// Per-ticket trace id (0 = not tied to a request).
+    pub trace: u64,
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+}
+
+impl Event {
+    pub fn duration_s(&self) -> f64 {
+        self.t1_ns.saturating_sub(self.t0_ns) as f64 / 1e9
+    }
+}
+
+/// Pack an event into the ring's four payload words:
+/// `w0 = kind | stream << 8 | op << 32`, `w1 = trace`, `w2/w3 = times`.
+/// Streams above 2^24 wrap — far beyond any real stream/bucket count.
+#[inline]
+pub(crate) fn pack_event(
+    kind: EventKind,
+    stream: u32,
+    op: u32,
+    trace: u64,
+    t0_ns: u64,
+    t1_ns: u64,
+) -> [u64; 4] {
+    let w0 = kind as u64 | ((stream as u64 & 0x00FF_FFFF) << 8) | ((op as u64) << 32);
+    [w0, trace, t0_ns, t1_ns]
+}
+
+pub(crate) fn unpack_event(w: [u64; 4]) -> Option<Event> {
+    let kind = EventKind::from_u8((w[0] & 0xFF) as u8)?;
+    Some(Event {
+        kind,
+        stream: ((w[0] >> 8) & 0x00FF_FFFF) as u32,
+        op: (w[0] >> 32) as u32,
+        trace: w[1],
+        t0_ns: w[2],
+        t1_ns: w[3],
+    })
+}
+
+/// A read-side snapshot: decoded events (sorted by start time) plus
+/// per-ring and total span accounting.
+#[derive(Debug, Clone)]
+pub struct TelemetrySnapshot {
+    pub events: Vec<Event>,
+    pub rings: Vec<RingStats>,
+    pub emitted: u64,
+    pub recorded: u64,
+    pub dropped: u64,
+}
+
+struct TelemetryInner {
+    /// Process-unique instance id — keys the thread-local ring cache.
+    id: u64,
+    ring_capacity: usize,
+    origin: Instant,
+    enabled: AtomicBool,
+    next_trace: AtomicU64,
+    rings: Mutex<Vec<Arc<ThreadRing>>>,
+    /// Op-id → label registry for trace export (cold path only).
+    labels: Mutex<Vec<String>>,
+    /// Slow-path registrations (each allocates one ring): the
+    /// "warmup" allocation counter the neutrality property watches.
+    ring_allocs: AtomicU64,
+    metrics: Metrics,
+}
+
+static NEXT_TELEMETRY_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Per-thread cache of (telemetry id → ring). A linear scan: a
+    /// thread records into at most a handful of telemetry instances.
+    static TL_RINGS: RefCell<Vec<(u64, Arc<ThreadRing>)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Cloneable handle to one flight recorder. All clones share the same
+/// rings, metrics, and trace-id counter.
+#[derive(Clone)]
+pub struct Telemetry {
+    inner: Arc<TelemetryInner>,
+}
+
+impl fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Telemetry")
+            .field("id", &self.inner.id)
+            .field("enabled", &self.enabled())
+            .field("ring_capacity", &self.inner.ring_capacity)
+            .finish()
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Telemetry {
+    /// An enabled recorder with the default ring capacity.
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_RING_CAPACITY)
+    }
+
+    /// An enabled recorder with `ring_capacity` events per thread.
+    pub fn with_capacity(ring_capacity: usize) -> Self {
+        Telemetry {
+            inner: Arc::new(TelemetryInner {
+                id: NEXT_TELEMETRY_ID.fetch_add(1, Ordering::Relaxed),
+                ring_capacity: ring_capacity.max(1),
+                origin: Instant::now(),
+                enabled: AtomicBool::new(true),
+                next_trace: AtomicU64::new(0),
+                rings: Mutex::new(Vec::new()),
+                labels: Mutex::new(Vec::new()),
+                ring_allocs: AtomicU64::new(0),
+                metrics: Metrics::new(),
+            }),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.inner.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.inner.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Mint a fresh per-ticket trace id (≥ 1; 0 means "no trace").
+    pub fn next_trace_id(&self) -> u64 {
+        self.inner.next_trace.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Nanoseconds since this recorder's origin.
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        Instant::now().saturating_duration_since(self.inner.origin).as_nanos() as u64
+    }
+
+    #[inline]
+    pub(crate) fn instant_ns(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.inner.origin).as_nanos() as u64
+    }
+
+    /// Record a span. Hot path after warmup: enabled check, counter
+    /// bump, TLS scan, seqlock slot write — zero allocations.
+    #[inline]
+    pub fn record(
+        &self,
+        kind: EventKind,
+        stream: u32,
+        op: u32,
+        trace: u64,
+        t0_ns: u64,
+        t1_ns: u64,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        self.inner.metrics.kind_counts[kind as usize].fetch_add(1, Ordering::Relaxed);
+        match kind {
+            EventKind::LaneSpawn => {
+                self.inner.metrics.lanes_live.fetch_add(1, Ordering::Relaxed);
+            }
+            EventKind::LaneRetire => {
+                self.inner.metrics.lanes_live.fetch_sub(1, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+        let w = pack_event(kind, stream, op, trace, t0_ns, t1_ns);
+        let id = self.inner.id;
+        let routed = TL_RINGS
+            .try_with(|cell| {
+                let rings = cell.borrow();
+                for (rid, ring) in rings.iter() {
+                    if *rid == id {
+                        ring.record(w);
+                        return true;
+                    }
+                }
+                false
+            })
+            .unwrap_or_else(|_| {
+                // Thread in teardown: count rather than lose silently.
+                self.inner.metrics.unrouted.fetch_add(1, Ordering::Relaxed);
+                true
+            });
+        if !routed {
+            self.record_slow(w);
+        }
+    }
+
+    /// First event this thread records against this instance: allocate
+    /// and register its ring (the one-time "ring warmup" allocation).
+    #[cold]
+    fn record_slow(&self, w: [u64; 4]) {
+        self.inner.ring_allocs.fetch_add(1, Ordering::Relaxed);
+        let ring = Arc::new(ThreadRing::new(self.inner.ring_capacity));
+        self.inner.rings.lock().expect("telemetry ring registry poisoned").push(Arc::clone(&ring));
+        ring.record(w);
+        let _ = TL_RINGS.try_with(|cell| {
+            cell.borrow_mut().push((self.inner.id, ring));
+        });
+    }
+
+    /// Record an instant (zero-duration) event stamped now.
+    #[inline]
+    pub fn event(&self, kind: EventKind, stream: u32, op: u32, trace: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let t = self.now_ns();
+        self.record(kind, stream, op, trace, t, t);
+    }
+
+    /// Record a replay-op span from two wall-clock instants and feed
+    /// the per-op duration histogram.
+    #[inline]
+    pub fn replay_span(&self, stream: u32, op: u32, t0: Instant, t1: Instant) {
+        if !self.enabled() {
+            return;
+        }
+        let a = self.instant_ns(t0);
+        let b = self.instant_ns(t1);
+        self.inner.metrics.op_span.observe(b.saturating_sub(a) as f64 / 1e9);
+        self.record(EventKind::ReplayOp, stream, op, 0, a, b);
+    }
+
+    /// Record a reply span (enqueue → reply) and feed the end-to-end
+    /// latency histogram.
+    #[inline]
+    pub fn reply_span(&self, bucket: u32, trace: u64, enqueued: Instant, finished: Instant) {
+        if !self.enabled() {
+            return;
+        }
+        let a = self.instant_ns(enqueued);
+        let b = self.instant_ns(finished);
+        self.inner.metrics.latency.observe(b.saturating_sub(a) as f64 / 1e9);
+        self.record(EventKind::Reply, bucket, 0, trace, a, b);
+    }
+
+    /// Slow-path ring registrations so far — allocations attributable
+    /// to telemetry. Stops growing once every recording thread has
+    /// warmed up.
+    pub fn ring_allocs(&self) -> u64 {
+        self.inner.ring_allocs.load(Ordering::Relaxed)
+    }
+
+    /// Register human-readable labels for op ids (cold path; used by
+    /// trace export and calibration). Later registrations win only for
+    /// ids that were still unnamed.
+    pub fn register_labels<S: AsRef<str>>(&self, labels: &[S]) {
+        let mut reg = self.inner.labels.lock().expect("telemetry label registry poisoned");
+        if reg.len() < labels.len() {
+            reg.resize(labels.len(), String::new());
+        }
+        for (i, l) in labels.iter().enumerate() {
+            if reg[i].is_empty() {
+                reg[i] = l.as_ref().to_string();
+            }
+        }
+    }
+
+    /// Label for an op id (falls back to `op<N>`).
+    pub fn label_for(&self, op: u32) -> String {
+        let reg = self.inner.labels.lock().expect("telemetry label registry poisoned");
+        match reg.get(op as usize) {
+            Some(l) if !l.is_empty() => l.clone(),
+            _ => format!("op{op}"),
+        }
+    }
+
+    /// Decode every ring into one time-sorted snapshot.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let rings = self.inner.rings.lock().expect("telemetry ring registry poisoned");
+        let mut raw = Vec::new();
+        let mut stats = Vec::with_capacity(rings.len());
+        for ring in rings.iter() {
+            stats.push(ring.drain_into(&mut raw));
+        }
+        drop(rings);
+        let mut events: Vec<Event> = raw.into_iter().filter_map(unpack_event).collect();
+        events.sort_by_key(|e| (e.t0_ns, e.t1_ns, e.kind as u8));
+        let emitted = stats.iter().map(|s| s.emitted).sum();
+        let recorded = stats.iter().map(|s| s.recorded).sum();
+        let dropped = stats.iter().map(|s| s.dropped).sum();
+        TelemetrySnapshot { events, rings: stats, emitted, recorded, dropped }
+    }
+
+    /// Prometheus text exposition (snapshot-on-read).
+    pub fn metrics_text(&self) -> String {
+        let snap = self.snapshot();
+        self.inner.metrics.prometheus_text(snap.emitted, snap.recorded, snap.dropped)
+    }
+
+    /// Chrome-trace JSON of the measured run, using registered labels.
+    pub fn chrome_trace(&self) -> String {
+        let snap = self.snapshot();
+        chrome::to_chrome_trace(&snap, |op| self.label_for(op))
+    }
+
+    /// Fold recorded replay-op spans into a calibration
+    /// [`crate::sim::cost::CostProfile`].
+    pub fn cost_profile(&self) -> crate::sim::cost::CostProfile {
+        let snap = self.snapshot();
+        calibrate::cost_profile(&snap, |op| self.label_for(op))
+    }
+
+    /// Direct metrics access (tests, gauges).
+    pub fn metrics(&self) -> &Metrics {
+        &self.inner.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_round_trips_every_kind() {
+        for k in 0..N_EVENT_KINDS as u8 {
+            let kind = EventKind::from_u8(k).expect("kind");
+            let w = pack_event(kind, 0xABCDE, 0xDEAD_BEEF, 77, 123, 456);
+            let e = unpack_event(w).expect("unpack");
+            assert_eq!(e.kind, kind);
+            assert_eq!(e.stream, 0xABCDE);
+            assert_eq!(e.op, 0xDEAD_BEEF);
+            assert_eq!(e.trace, 77);
+            assert_eq!((e.t0_ns, e.t1_ns), (123, 456));
+        }
+        assert!(EventKind::from_u8(N_EVENT_KINDS as u8).is_none());
+    }
+
+    #[test]
+    fn snapshot_accounting_closes_across_threads() {
+        let tel = Telemetry::with_capacity(64);
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let tel = tel.clone();
+                std::thread::spawn(move || {
+                    for i in 0..200u32 {
+                        tel.record(EventKind::ReplayOp, t, i, 0, i as u64, i as u64 + 1);
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        let snap = tel.snapshot();
+        assert_eq!(snap.rings.len(), 4);
+        assert_eq!(snap.emitted, 800);
+        for r in &snap.rings {
+            assert_eq!(r.emitted, 200);
+            assert_eq!(r.recorded, 64);
+            assert_eq!(r.recorded + r.dropped, r.emitted);
+        }
+        assert_eq!(snap.events.len(), snap.recorded as usize);
+        assert_eq!(snap.recorded + snap.dropped, snap.emitted);
+        // Exactly one warmup allocation per recording thread.
+        assert_eq!(tel.ring_allocs(), 4);
+        // Counters agree with emission (they count every record call).
+        assert_eq!(tel.metrics().count(EventKind::ReplayOp), 800);
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing_and_allocates_nothing() {
+        let tel = Telemetry::new();
+        tel.set_enabled(false);
+        tel.event(EventKind::Admit, 1, 0, 42);
+        tel.replay_span(0, 0, Instant::now(), Instant::now());
+        let snap = tel.snapshot();
+        assert_eq!(snap.emitted, 0);
+        assert_eq!(snap.events.len(), 0);
+        assert_eq!(tel.ring_allocs(), 0);
+        assert_eq!(tel.metrics().count(EventKind::Admit), 0);
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let tel = Telemetry::new();
+        let a = tel.next_trace_id();
+        let b = tel.next_trace_id();
+        assert!(a >= 1 && b > a);
+    }
+
+    #[test]
+    fn labels_register_and_fall_back() {
+        let tel = Telemetry::new();
+        tel.register_labels(&["matmul_0", "relu_1"]);
+        assert_eq!(tel.label_for(0), "matmul_0");
+        assert_eq!(tel.label_for(1), "relu_1");
+        assert_eq!(tel.label_for(9), "op9");
+        // First registration wins; gaps fill later.
+        tel.register_labels(&["XXX", "relu_1", "add_2"]);
+        assert_eq!(tel.label_for(0), "matmul_0");
+        assert_eq!(tel.label_for(2), "add_2");
+    }
+
+    #[test]
+    fn lanes_live_gauge_tracks_spawn_and_retire() {
+        let tel = Telemetry::new();
+        tel.event(EventKind::LaneSpawn, 4, 0, 0);
+        tel.event(EventKind::LaneSpawn, 8, 0, 0);
+        tel.event(EventKind::LaneRetire, 4, 0, 0);
+        let text = tel.metrics_text();
+        assert!(text.contains("nimble_lanes_live 1\n"), "{text}");
+        assert!(text.contains("nimble_lanes_spawned_total 2\n"));
+    }
+}

@@ -1,0 +1,200 @@
+//! Lock-free per-thread span ring: fixed capacity, drop-oldest, one
+//! writer (the owning thread), any number of snapshot readers.
+//!
+//! Each slot is guarded by a per-slot sequence word (a seqlock): the
+//! writer flips it odd before touching the payload and even after, so a
+//! concurrent reader can detect and skip slots that are mid-write or
+//! were lapped during the read. Recording is four relaxed stores plus
+//! two release stores on the sequence word and one on the head — no
+//! locks, no allocation, no CAS loop (single-writer rings don't need
+//! one).
+//!
+//! Accounting closes structurally: `emitted` is the head counter,
+//! `dropped = emitted.saturating_sub(capacity)`, and once the ring is
+//! quiescent every one of the `emitted - dropped` newest events decodes
+//! from a stable slot.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One recorded event, packed into four words by the caller
+/// (`telemetry::pack_event` / `unpack_event` define the layout).
+struct Slot {
+    /// Seqlock word: 0 = never written, odd = write in progress,
+    /// `2 * (generation + 1)` = stable payload from that generation.
+    seq: AtomicU64,
+    w: [AtomicU64; 4],
+}
+
+impl Slot {
+    fn new() -> Self {
+        Slot {
+            seq: AtomicU64::new(0),
+            w: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+        }
+    }
+}
+
+/// A preallocated single-writer ring. Shared as `Arc<ThreadRing>`
+/// between the owning thread (writer) and the telemetry registry
+/// (reader); `record` must only ever be called from one thread at a
+/// time, which the thread-local ownership in `telemetry::Telemetry`
+/// guarantees.
+pub struct ThreadRing {
+    head: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+/// Per-ring accounting exposed by snapshots:
+/// `recorded + dropped == emitted` must close on every ring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RingStats {
+    /// Events ever written to this ring.
+    pub emitted: u64,
+    /// Events still decodable (stable slots recovered by the reader).
+    pub recorded: u64,
+    /// Events overwritten by drop-oldest.
+    pub dropped: u64,
+}
+
+impl ThreadRing {
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        ThreadRing {
+            head: AtomicU64::new(0),
+            slots: (0..capacity).map(|_| Slot::new()).collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record one packed event. Hot path: no allocation, no locking.
+    #[inline]
+    pub fn record(&self, w: [u64; 4]) {
+        let cap = self.slots.len() as u64;
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(h % cap) as usize];
+        let generation = h / cap;
+        slot.seq.store(2 * generation + 1, Ordering::Release);
+        slot.w[0].store(w[0], Ordering::Relaxed);
+        slot.w[1].store(w[1], Ordering::Relaxed);
+        slot.w[2].store(w[2], Ordering::Relaxed);
+        slot.w[3].store(w[3], Ordering::Relaxed);
+        slot.seq.store(2 * (generation + 1), Ordering::Release);
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Events ever emitted on this ring.
+    pub fn emitted(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Decode every stable slot into `out`, returning the stats. Safe
+    /// to call while the writer is live: torn or in-flight slots are
+    /// skipped (they show up as neither recorded nor — until they
+    /// finish — emitted-beyond-head). On a quiescent ring this recovers
+    /// exactly `min(emitted, capacity)` events.
+    pub fn drain_into(&self, out: &mut Vec<[u64; 4]>) -> RingStats {
+        let cap = self.slots.len() as u64;
+        let emitted = self.emitted();
+        let mut recorded = 0u64;
+        for (i, slot) in self.slots.iter().enumerate() {
+            let seq1 = slot.seq.load(Ordering::Acquire);
+            if seq1 == 0 || seq1 % 2 == 1 {
+                continue; // never written, or write in progress
+            }
+            let w = [
+                slot.w[0].load(Ordering::Relaxed),
+                slot.w[1].load(Ordering::Relaxed),
+                slot.w[2].load(Ordering::Relaxed),
+                slot.w[3].load(Ordering::Relaxed),
+            ];
+            if slot.seq.load(Ordering::Acquire) != seq1 {
+                continue; // lapped mid-read
+            }
+            // Reconstruct the event's global sequence number and check
+            // it is one of the `emitted` events (guards a racing writer
+            // that published seq before head became visible).
+            let generation = seq1 / 2 - 1;
+            let event_no = generation * cap + i as u64;
+            if event_no >= emitted {
+                continue;
+            }
+            recorded += 1;
+            out.push(w);
+        }
+        RingStats { emitted, recorded, dropped: emitted.saturating_sub(recorded) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_closes_without_wrap() {
+        let ring = ThreadRing::new(8);
+        for i in 0..5u64 {
+            ring.record([i, i + 1, i + 2, i + 3]);
+        }
+        let mut out = Vec::new();
+        let stats = ring.drain_into(&mut out);
+        assert_eq!(stats, RingStats { emitted: 5, recorded: 5, dropped: 0 });
+        assert_eq!(out.len(), 5);
+        assert!(out.iter().any(|w| w[0] == 0) && out.iter().any(|w| w[0] == 4));
+    }
+
+    #[test]
+    fn drop_oldest_keeps_newest_and_accounting_closes() {
+        let ring = ThreadRing::new(4);
+        for i in 0..11u64 {
+            ring.record([i, 0, 0, 0]);
+        }
+        let mut out = Vec::new();
+        let stats = ring.drain_into(&mut out);
+        assert_eq!(stats.emitted, 11);
+        assert_eq!(stats.recorded, 4);
+        assert_eq!(stats.dropped, 7);
+        assert_eq!(stats.recorded + stats.dropped, stats.emitted);
+        let mut kept: Vec<u64> = out.iter().map(|w| w[0]).collect();
+        kept.sort_unstable();
+        assert_eq!(kept, vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn concurrent_reader_never_sees_torn_events() {
+        use std::sync::Arc;
+        let ring = Arc::new(ThreadRing::new(16));
+        let writer = {
+            let ring = Arc::clone(&ring);
+            std::thread::spawn(move || {
+                for i in 0..20_000u64 {
+                    // All four words carry the same value: a torn read
+                    // would surface as a mismatched tuple.
+                    ring.record([i, i, i, i]);
+                }
+            })
+        };
+        let mut out = Vec::new();
+        for _ in 0..200 {
+            out.clear();
+            let stats = ring.drain_into(&mut out);
+            assert!(stats.recorded + stats.dropped == stats.emitted);
+            for w in &out {
+                assert!(w[0] == w[1] && w[1] == w[2] && w[2] == w[3], "torn read: {w:?}");
+            }
+        }
+        writer.join().unwrap();
+        out.clear();
+        let stats = ring.drain_into(&mut out);
+        assert_eq!(stats.emitted, 20_000);
+        assert_eq!(stats.recorded, 16);
+        assert_eq!(stats.recorded + stats.dropped, stats.emitted);
+    }
+}

@@ -2,6 +2,7 @@
 //! table formatting. The build is fully offline (no crates.io), so these
 //! replace `rand`, `criterion`'s stats, and `proptest`.
 
+pub mod json;
 pub mod prng;
 pub mod prop;
 pub mod stats;

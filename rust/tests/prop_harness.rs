@@ -793,6 +793,138 @@ fn mixed_arrivals_all_served_and_lane_stats_consistent() {
     });
 }
 
+/// ≥50 random cases (observability tentpole): the flight recorder is
+/// execution-neutral and its span accounting closes.
+///
+/// * telemetry-off replay stays bit-identical to the serial oracle and
+///   the steady-state hot path performs zero allocations — the absent
+///   recorder costs one branch, never an alloc;
+/// * telemetry-on replay produces the same bits too — recording spans
+///   must not leak into results;
+/// * after ring warmup (first replay touches each worker's ring once),
+///   further replays allocate nothing: no arena events and no new
+///   per-thread rings;
+/// * `recorded + dropped == emitted` closes per ring AND in aggregate,
+///   even on the small-capacity cases that force the drop-oldest path;
+/// * the Chrome-trace export parses back with exactly `recorded` event
+///   records.
+#[test]
+fn telemetry_is_execution_neutral_and_span_accounting_closes() {
+    use nimble::aot::tape::ReplayTape;
+    use nimble::engine::executor::{ExecOptions, ReplayContext, SyntheticKernel};
+    use nimble::matching::MatchingAlgo;
+    use nimble::stream::rewrite::rewrite;
+    use nimble::telemetry::{parse_trace, Telemetry};
+
+    check_from("telemetry-neutrality", base_seed() ^ 0x00F1_1647, 50, |rng| {
+        let n_nodes = rng.gen_range_inclusive(8, 64);
+        let graph_seed = rng.next_u64();
+        let batch = rng.gen_range_inclusive(1, 4);
+        let g = random_cell(&mut Pcg32::new(graph_seed), n_nodes, batch);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = ReplayTape::for_op_graph(&g, &plan, 4096);
+        let input = random_input(rng, tape.input_slots()[0].1);
+
+        // Small rings on many cases force drop-oldest; accounting must
+        // close either way.
+        let capacity = rng.gen_range_inclusive(8, 512);
+        let tel = Telemetry::with_capacity(capacity);
+        let labels: Vec<String> = (0..g.n_nodes()).map(|v| g.node(v).name.clone()).collect();
+        tel.register_labels(&labels);
+
+        // Telemetry-on uses the classic one-worker-per-stream pool so
+        // every worker participates in every replay — that makes "one
+        // warmup replay touches every ring" deterministic.
+        let mut on = ReplayContext::with_options(
+            tape.clone(),
+            SyntheticKernel,
+            ExecOptions { telemetry: Some(tel.clone()), ..Default::default() },
+        );
+        let workers = rng.gen_range_inclusive(1, 4);
+        let mut off = ReplayContext::with_options(
+            tape.clone(),
+            SyntheticKernel,
+            ExecOptions { max_workers: Some(workers), ..Default::default() },
+        );
+        let mut serial = ReplayContext::with_options(
+            tape.clone(),
+            SyntheticKernel,
+            ExecOptions { max_workers: Some(1), ..Default::default() },
+        );
+        on.replay_one(&input).map_err(|e| format!("telemetry-on replay: {e}"))?;
+        off.replay_one(&input).map_err(|e| format!("telemetry-off replay: {e}"))?;
+        serial.replay_serial(&[&input]).map_err(|e| format!("serial replay: {e}"))?;
+
+        for (name, ctx) in [("telemetry-on", &on), ("telemetry-off", &off)] {
+            let (a, b) = (ctx.output(), serial.output());
+            ensure(a.len() == b.len(), || format!("{name}: output length mismatch"))?;
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                ensure(x.to_bits() == y.to_bits(), || {
+                    format!(
+                        "{name}: output diverged from serial at {i}: {x:?} vs {y:?} \
+                         (graph seed {graph_seed:#x})"
+                    )
+                })?;
+            }
+        }
+
+        // Telemetry-off steady state: zero allocations.
+        off.reset_alloc_events();
+        off.replay_one(&input).map_err(|e| format!("telemetry-off steady replay: {e}"))?;
+        ensure(off.alloc_events() == 0, || {
+            "telemetry-off hot path allocated".to_string()
+        })?;
+
+        // Telemetry-on steady state: rings are warmed, so a further
+        // replay adds zero arena events and zero new rings.
+        let rings_before = tel.ring_allocs();
+        ensure(rings_before >= 1 && rings_before <= tape.n_streams() as u64, || {
+            format!(
+                "{rings_before} rings allocated for {} stream workers",
+                tape.n_streams()
+            )
+        })?;
+        on.reset_alloc_events();
+        on.replay_one(&input).map_err(|e| format!("telemetry-on steady replay: {e}"))?;
+        ensure(on.alloc_events() == 0, || {
+            "telemetry-on hot path allocated after warmup".to_string()
+        })?;
+        ensure(tel.ring_allocs() == rings_before, || {
+            format!(
+                "steady-state replay grew rings {rings_before} → {} (graph seed {graph_seed:#x})",
+                tel.ring_allocs()
+            )
+        })?;
+
+        // Span accounting closes per ring and in aggregate, and the
+        // export round-trips with exactly the recorded events.
+        let snap = tel.snapshot();
+        ensure(snap.emitted > 0, || "no spans emitted".to_string())?;
+        ensure(snap.recorded + snap.dropped == snap.emitted, || {
+            format!(
+                "aggregate accounting open: {} recorded + {} dropped != {} emitted",
+                snap.recorded, snap.dropped, snap.emitted
+            )
+        })?;
+        for (i, r) in snap.rings.iter().enumerate() {
+            ensure(r.recorded + r.dropped == r.emitted, || {
+                format!(
+                    "ring {i} accounting open: {} recorded + {} dropped != {} emitted \
+                     (capacity {capacity}, graph seed {graph_seed:#x})",
+                    r.recorded, r.dropped, r.emitted
+                )
+            })?;
+        }
+        let slices =
+            parse_trace(&tel.chrome_trace()).map_err(|e| format!("trace parse: {e}"))?;
+        let events = slices.iter().filter(|s| s.ph == "X" || s.ph == "i").count();
+        ensure(events == snap.recorded as usize, || {
+            format!("trace carries {events} events for {} recorded", snap.recorded)
+        })?;
+        Ok(())
+    });
+}
+
 /// ≥100 random cases (chaos-hardening tentpole): a random seeded
 /// [`FaultPlan`] (engine errors/panics, replay worker deaths, arena
 /// exhaustion, poisoning join timeouts — each often zero) under a
