@@ -13,11 +13,17 @@
 //! * [`schedule`] (feature `xla`) — the execution-trace half over real
 //!   PJRT executables: pre-run interception, resolved executables,
 //!   pre-bound argument sources, stream assignment, event plan.
+//! * [`verify`] — static plan certification: an independent
+//!   happens-before closure plus race, deadlock, aliasing, and
+//!   well-formedness analysis over a compiled tape and its arena plan,
+//!   run at build time so a mis-built schedule is a structured
+//!   diagnostic instead of undefined behavior.
 
 pub mod memory;
 #[cfg(feature = "xla")]
 pub mod schedule;
 pub mod tape;
+pub mod verify;
 
 pub use memory::{
     happens_before_conflicts, plan_arena, plan_with_conflicts, ArenaPlan, ArenaPool, ConflictSet,
@@ -26,3 +32,4 @@ pub use memory::{
 #[cfg(feature = "xla")]
 pub use schedule::{ArgSource, PreparedReplay, ReplayTask, TaskSchedule};
 pub use tape::{NodeMeta, ReplayTape, TapeArg, TapeOp, TapeRole};
+pub use verify::{DiagKind, Diagnostic, VerifyMode, VerifyReport, Witness};

@@ -289,7 +289,7 @@ impl TaskSchedule {
                 };
                 prep.scratch.push(ptr);
             }
-            // Safety: `*const PjRtBuffer` and `&PjRtBuffer` have identical
+            // SAFETY: `*const PjRtBuffer` and `&PjRtBuffer` have identical
             // layout; every pointer targets a buffer owned by `prep` or
             // the registry that stays alive (and unmoved) until
             // `execute_b` returns.

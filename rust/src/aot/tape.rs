@@ -287,13 +287,31 @@ impl ReplayTape {
 
     /// Check that every slot-argument dependency is realized by the
     /// tape's own happens-before structure (same-stream FIFO order plus
-    /// record→wait event edges, via `stream::sync::plan_is_safe`), and
-    /// that no record waits on an event nothing records. The parallel
-    /// executor's slot arena relies on exactly this for data-race
-    /// freedom, so [`ReplayContext`](crate::engine::executor::ReplayContext)
+    /// record→wait event edges), and that no record waits on an event
+    /// nothing records. The parallel executor's slot arena relies on
+    /// exactly this for data-race freedom, so
+    /// [`ReplayContext`](crate::engine::executor::ReplayContext)
     /// refuses tapes that fail it — a mis-built plan becomes a loud
     /// construction-time error instead of undefined behavior.
+    ///
+    /// Since the static plan verifier landed this is a thin shim over
+    /// [`crate::aot::verify::verify`]; callers needing the *why* (which
+    /// record, which slot, a witness interleaving) should call the
+    /// verifier directly and read the report. The pre-verifier
+    /// implementation is kept as
+    /// [`dependencies_are_synchronized_legacy`](Self::dependencies_are_synchronized_legacy)
+    /// and pinned equivalent over seeded legal and mutated tapes in
+    /// `tests/prop_harness.rs`.
     pub fn dependencies_are_synchronized(&self) -> bool {
+        crate::aot::verify::verify(self).is_clean()
+    }
+
+    /// The pre-verifier synchronization check (`plan_is_safe` over the
+    /// reconstructed dependency graph). Retained as the independent
+    /// oracle for the verifier's equivalence property and the mutation
+    /// harness — not meant for new callers.
+    #[doc(hidden)]
+    pub fn dependencies_are_synchronized_legacy(&self) -> bool {
         use crate::stream::sync::{plan_is_safe, Sync, SyncPlan};
         // Dependency graph: producer slot → consuming record.
         let mut deps: Dag<()> = Dag::new();

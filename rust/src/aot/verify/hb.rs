@@ -1,0 +1,200 @@
+//! Independent happens-before closure over a replay tape.
+//!
+//! This is deliberately **not** built on [`crate::graph::Dag`] or
+//! [`crate::graph::reach::Reachability`]: those power the optimizer
+//! (`aot::memory::lifetime`) whose output the verifier audits, so the
+//! verifier recomputes ordering from the tape alone — ancestor bitsets
+//! propagated in Kahn order over raw adjacency lists, where the
+//! optimizer computes descendant bitsets in reverse topological order
+//! over a `Dag`. N-versioning the two implementations means a bug in
+//! either one surfaces as a diagnostic instead of a shared blind spot.
+//!
+//! The relation is the executor's real ordering guarantee: within one
+//! stream, records run in tape order (the per-stream worker is a FIFO);
+//! across streams, a record that waits on event `e` runs after the
+//! record that records `e` (the runtime event table releases waiters at
+//! the *first* record of an event, so a multiply-recorded event
+//! contributes only its first recorder here — later recorders are
+//! reported separately as diagnostics).
+
+use crate::aot::tape::ReplayTape;
+
+/// Strict happens-before relation over tape records (indices into
+/// [`ReplayTape::ops`]), with a topological order and, when the edge
+/// set is cyclic, one concrete cyclic chain as a deadlock witness.
+pub struct HbClosure {
+    n: usize,
+    words: usize,
+    /// Row `v`: bit `u` set ⇔ `u` strictly happens-before `v`.
+    /// Rows are only populated for records reached by the topological
+    /// order, i.e. all of them when [`cycle`](Self::cycle) is `None`.
+    anc: Vec<u64>,
+    /// Kahn topological order (covers all records iff acyclic).
+    pub order: Vec<u32>,
+    /// A cyclic wait/record chain if one exists, in edge order:
+    /// `cycle[i]` has an HB edge to `cycle[i+1]`, the last wraps to the
+    /// first. Every record on it waits (transitively) on itself.
+    pub cycle: Option<Vec<u32>>,
+    /// Deduplicated HB edge count (program order ∪ record→wait).
+    pub n_edges: usize,
+}
+
+impl HbClosure {
+    pub fn n_ops(&self) -> usize {
+        self.n
+    }
+
+    /// Does record `u` strictly happen before record `v`?
+    pub fn happens_before(&self, u: usize, v: usize) -> bool {
+        debug_assert!(u < self.n && v < self.n);
+        (self.anc[v * self.words + u / 64] >> (u % 64)) & 1 == 1
+    }
+
+    /// Are `u` and `v` ordered (either direction) under happens-before?
+    pub fn ordered(&self, u: usize, v: usize) -> bool {
+        u == v || self.happens_before(u, v) || self.happens_before(v, u)
+    }
+
+    pub fn is_acyclic(&self) -> bool {
+        self.cycle.is_none()
+    }
+
+    /// Topologically ordered strict HB-predecessors of `x` ∪ `y`: a
+    /// legal schedule prefix after which `x` and `y` are both eligible
+    /// simultaneously — the witness interleaving for an unordered pair.
+    pub fn joint_prefix(&self, x: usize, y: usize) -> Vec<u32> {
+        self.order
+            .iter()
+            .copied()
+            .filter(|&p| {
+                self.happens_before(p as usize, x) || self.happens_before(p as usize, y)
+            })
+            .collect()
+    }
+}
+
+/// Build the happens-before closure of a tape. Event indices out of
+/// range and events nothing records are *skipped* here (they contribute
+/// no edges); the caller reports those as well-formedness diagnostics
+/// before trusting the closure.
+pub fn closure(tape: &ReplayTape) -> HbClosure {
+    let n = tape.n_ops();
+    let words = n.div_ceil(64).max(1);
+    let mut preds: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut succs: Vec<Vec<u32>> = vec![Vec::new(); n];
+
+    // Program order: consecutive records of one stream's tape.
+    for s in 0..tape.n_streams() {
+        for w in tape.stream_ops(s).windows(2) {
+            preds[w[1] as usize].push(w[0]);
+            succs[w[0] as usize].push(w[1]);
+        }
+    }
+    // Event edges: first recorder of `e` → every record waiting on `e`.
+    let mut recorder = vec![u32::MAX; tape.n_events()];
+    for (i, op) in tape.ops().iter().enumerate() {
+        for &e in tape.records(op) {
+            if let Some(r) = recorder.get_mut(e as usize) {
+                if *r == u32::MAX {
+                    *r = i as u32;
+                }
+            }
+        }
+    }
+    for (i, op) in tape.ops().iter().enumerate() {
+        for &e in tape.waits(op) {
+            if let Some(&r) = recorder.get(e as usize) {
+                if r != u32::MAX {
+                    // r == i (waiting on your own record) is kept as a
+                    // self-loop: Kahn never drains it, so it is reported
+                    // as a one-record cycle — which is exactly what it
+                    // is at replay time (the wait can never be released
+                    // before the record fires).
+                    preds[i].push(r);
+                    succs[r as usize].push(i as u32);
+                }
+            }
+        }
+    }
+    let mut n_edges = 0usize;
+    for v in 0..n {
+        preds[v].sort_unstable();
+        preds[v].dedup();
+        succs[v].sort_unstable();
+        succs[v].dedup();
+        n_edges += preds[v].len();
+    }
+
+    // Kahn's algorithm, frontier drained in submission-index order so
+    // `order` (and every witness prefix derived from it) is stable.
+    let mut indeg: Vec<usize> = preds.iter().map(|p| p.len()).collect();
+    let mut frontier: std::collections::BinaryHeap<std::cmp::Reverse<u32>> = (0..n as u32)
+        .filter(|&v| indeg[v as usize] == 0)
+        .map(std::cmp::Reverse)
+        .collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(std::cmp::Reverse(u)) = frontier.pop() {
+        order.push(u);
+        for &v in &succs[u as usize] {
+            indeg[v as usize] -= 1;
+            if indeg[v as usize] == 0 {
+                frontier.push(std::cmp::Reverse(v));
+            }
+        }
+    }
+
+    let cycle = if order.len() < n {
+        Some(extract_cycle(n, &order, &preds))
+    } else {
+        None
+    };
+
+    // Ancestor sets, propagated in topological order: by the time `v`
+    // is visited every predecessor's row is final.
+    let mut anc = vec![0u64; n * words];
+    let mut row = vec![0u64; words];
+    for &v in &order {
+        let v = v as usize;
+        row.iter_mut().for_each(|w| *w = 0);
+        for &p in &preds[v] {
+            let p = p as usize;
+            let src = &anc[p * words..(p + 1) * words];
+            for (d, s) in row.iter_mut().zip(src) {
+                *d |= *s;
+            }
+            row[p / 64] |= 1u64 << (p % 64);
+        }
+        anc[v * words..(v + 1) * words].copy_from_slice(&row);
+    }
+
+    HbClosure { n, words, anc, order, cycle, n_edges }
+}
+
+/// One concrete cycle among the records Kahn could not drain. Every
+/// undrained record keeps at least one undrained predecessor, so
+/// walking predecessors inside that set must revisit a record; the
+/// slice between the two visits, reversed, is a cycle in edge order.
+fn extract_cycle(n: usize, order: &[u32], preds: &[Vec<u32>]) -> Vec<u32> {
+    let mut remaining = vec![true; n];
+    for &v in order {
+        remaining[v as usize] = false;
+    }
+    let start = (0..n).find(|&v| remaining[v]).expect("cycle exists");
+    let mut seen = vec![usize::MAX; n];
+    let mut path = vec![start as u32];
+    seen[start] = 0;
+    loop {
+        let cur = *path.last().expect("non-empty") as usize;
+        let p = *preds[cur]
+            .iter()
+            .find(|&&p| remaining[p as usize])
+            .expect("undrained record has an undrained predecessor") as usize;
+        if seen[p] != usize::MAX {
+            let mut cycle: Vec<u32> = path[seen[p]..].to_vec();
+            cycle.reverse();
+            return cycle;
+        }
+        seen[p] = path.len();
+        path.push(p as u32);
+    }
+}

@@ -1,0 +1,1083 @@
+//! Static plan verification: certify a compiled [`ReplayTape`] (and
+//! optionally the [`ArenaPlan`] laying its slots out in shared bytes)
+//! race-free, deadlock-free, and alias-sound *before* anything runs.
+//!
+//! Nimble's premise is that the whole execution schedule — tape order,
+//! record→wait sync edges, arena byte layout — is a static artifact, so
+//! its correctness is decidable ahead of time. This module is that
+//! decision procedure. It rebuilds the happens-before relation from the
+//! tape alone ([`hb`], independent of the optimizer's reachability code
+//! in `aot::memory::lifetime` precisely so it can audit it) and checks:
+//!
+//! * **well-formedness** — slot/arg/event indices in bounds, no
+//!   self-dependencies, unique slot writers, unique event recorders,
+//!   the output slot reachable from the inputs;
+//! * **deadlock-freedom** — no wait on an event nothing records
+//!   ([`DiagKind::OrphanWait`]), no cyclic wait/record chain
+//!   ([`DiagKind::HbCycle`], reported with the concrete cycle);
+//! * **race-freedom** — every slot access pair (its writer vs. each
+//!   reader) ordered under happens-before, else a [`DiagKind::Race`]
+//!   with a two-op witness interleaving: a legal schedule prefix after
+//!   which both records are simultaneously eligible;
+//! * **arena-aliasing soundness** — every byte-overlapping slot pair in
+//!   the arena plan has happens-before-ordered disjoint lifetimes (one
+//!   slot's last access strictly precedes the other's definition), else
+//!   [`DiagKind::AliasOverlap`] with the guilty access pair.
+//!
+//! [`verify`] checks the tape alone; [`verify_with_arena`] adds the
+//! aliasing pass. Both run at build time only — the replay hot path is
+//! untouched ([`VerifyMode`] documents the builder policy knob).
+//! Reports render as a diagnostic table ([`VerifyReport::render`]) and
+//! as machine-readable JSON ([`VerifyReport::to_json`]); `nimble
+//! verify <model>` exposes both on the CLI. The analyzer self-tests
+//! against the seeded plan mutator in [`mutate`].
+
+pub mod hb;
+pub mod mutate;
+
+use crate::aot::memory::ArenaPlan;
+use crate::aot::tape::{ReplayTape, TapeArg, TapeRole};
+use crate::util::json::push_escaped;
+use crate::util::table::Table;
+use std::fmt::Write as _;
+
+/// Build-time verification policy for engine builders.
+///
+/// * `Strict` — refuse to build on **any** diagnostic.
+/// * `Warn` — print the report to stderr and build anyway.
+/// * `Off` — skip verification.
+///
+/// The default is `Warn` in debug builds and `Off` in release builds;
+/// verification always runs at build time only, so even `Strict` adds
+/// nothing to the replay hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VerifyMode {
+    Off,
+    Warn,
+    Strict,
+}
+
+impl Default for VerifyMode {
+    fn default() -> Self {
+        if cfg!(debug_assertions) {
+            VerifyMode::Warn
+        } else {
+            VerifyMode::Off
+        }
+    }
+}
+
+/// The diagnostic catalog.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DiagKind {
+    /// A slot, argument, or event index out of bounds, or a record
+    /// whose argument names its own output slot (self-dependency).
+    BadIndex,
+    /// Two records write the same slot.
+    DuplicateWriter,
+    /// Two records record the same event; the runtime releases waiters
+    /// at the first record, so ordering against later recorders is
+    /// illusory.
+    DuplicateRecorder,
+    /// A wait on an event nothing records: the waiter's stream blocks
+    /// forever at replay time.
+    OrphanWait,
+    /// A cyclic wait/record chain: every record on it transitively
+    /// waits on itself, so none can start.
+    HbCycle,
+    /// A record reads a slot that is never written, or is ordered
+    /// before its writer.
+    UseBeforeDef,
+    /// A slot's writer and one of its readers are unordered under
+    /// happens-before: a data race on the slot's bytes.
+    Race,
+    /// Two slots share arena bytes but neither retires below the other:
+    /// aliased bytes with overlapping lifetimes.
+    AliasOverlap,
+    /// The arena plan is malformed: missing entries, a reservation
+    /// smaller than the slot's written extent, or an extent past the
+    /// end of the reservation.
+    ArenaBounds,
+    /// The output slot is not reachable from any input slot through
+    /// argument edges: replay produces a result no request data feeds.
+    DeadOutput,
+}
+
+impl DiagKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DiagKind::BadIndex => "bad-index",
+            DiagKind::DuplicateWriter => "duplicate-writer",
+            DiagKind::DuplicateRecorder => "duplicate-recorder",
+            DiagKind::OrphanWait => "orphan-wait",
+            DiagKind::HbCycle => "hb-cycle",
+            DiagKind::UseBeforeDef => "use-before-def",
+            DiagKind::Race => "race",
+            DiagKind::AliasOverlap => "alias-overlap",
+            DiagKind::ArenaBounds => "arena-bounds",
+            DiagKind::DeadOutput => "dead-output",
+        }
+    }
+}
+
+/// A concrete interleaving demonstrating an unordered access pair:
+/// run exactly `prefix` (a legal schedule order), and both `focus`
+/// records are eligible simultaneously.
+#[derive(Debug, Clone)]
+pub struct Witness {
+    /// Tape record indices, in a legal (topological) schedule order.
+    pub prefix: Vec<u32>,
+    /// The two records left simultaneously eligible after `prefix`.
+    pub focus: (u32, u32),
+}
+
+/// One verification finding.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub kind: DiagKind,
+    /// Tape record indices involved (submission order).
+    pub ops: Vec<u32>,
+    pub slot: Option<u32>,
+    pub event: Option<u32>,
+    pub message: String,
+    pub witness: Option<Witness>,
+}
+
+/// The structured result of a verification run.
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    pub diagnostics: Vec<Diagnostic>,
+    pub n_ops: usize,
+    pub n_streams: usize,
+    pub n_slots: usize,
+    pub n_events: usize,
+    /// Deduplicated happens-before edges (program order ∪ record→wait).
+    pub hb_edges: usize,
+    /// Byte-overlapping slot pairs the aliasing pass examined (0 when
+    /// no arena plan was supplied or earlier diagnostics skipped it).
+    pub alias_pairs_checked: usize,
+}
+
+impl VerifyReport {
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn count(&self, kind: DiagKind) -> usize {
+        self.diagnostics.iter().filter(|d| d.kind == kind).count()
+    }
+
+    pub fn has(&self, kind: DiagKind) -> bool {
+        self.diagnostics.iter().any(|d| d.kind == kind)
+    }
+
+    /// Human-readable diagnostic table (with witness interleavings),
+    /// or a one-line clean summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{} records / {} streams / {} slots / {} events / {} hb edges / {} alias pairs checked",
+            self.n_ops,
+            self.n_streams,
+            self.n_slots,
+            self.n_events,
+            self.hb_edges,
+            self.alias_pairs_checked
+        );
+        if self.is_clean() {
+            let _ = writeln!(out, "CLEAN: no diagnostics");
+            return out;
+        }
+        let _ = writeln!(out, "{} diagnostic(s):", self.diagnostics.len());
+        let mut t = Table::new(vec!["#", "kind", "ops", "slot", "event", "message"]);
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            let ops = d.ops.iter().map(|o| format!("#{o}")).collect::<Vec<_>>().join(",");
+            t.row(vec![
+                i.to_string(),
+                d.kind.name().to_string(),
+                ops,
+                d.slot.map_or_else(|| "-".into(), |s| s.to_string()),
+                d.event.map_or_else(|| "-".into(), |e| e.to_string()),
+                d.message.clone(),
+            ]);
+        }
+        out.push_str(&t.render());
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            if let Some(w) = &d.witness {
+                let prefix =
+                    w.prefix.iter().map(|o| format!("#{o}")).collect::<Vec<_>>().join(" ");
+                let _ = writeln!(
+                    out,
+                    "witness[{i}]: legal prefix [{prefix}] exposes the pair (#{}, #{})",
+                    w.focus.0, w.focus.1
+                );
+            }
+        }
+        out
+    }
+
+    /// Machine-readable report (stable schema, see README).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{");
+        let _ = write!(
+            s,
+            "\"clean\":{},\"n_ops\":{},\"n_streams\":{},\"n_slots\":{},\"n_events\":{},\
+             \"hb_edges\":{},\"alias_pairs_checked\":{},\"diagnostics\":[",
+            self.is_clean(),
+            self.n_ops,
+            self.n_streams,
+            self.n_slots,
+            self.n_events,
+            self.hb_edges,
+            self.alias_pairs_checked
+        );
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{{\"kind\":\"{}\",\"ops\":[", d.kind.name());
+            for (j, o) in d.ops.iter().enumerate() {
+                if j > 0 {
+                    s.push(',');
+                }
+                let _ = write!(s, "{o}");
+            }
+            s.push_str("],\"slot\":");
+            match d.slot {
+                Some(v) => {
+                    let _ = write!(s, "{v}");
+                }
+                None => s.push_str("null"),
+            }
+            s.push_str(",\"event\":");
+            match d.event {
+                Some(v) => {
+                    let _ = write!(s, "{v}");
+                }
+                None => s.push_str("null"),
+            }
+            s.push_str(",\"message\":\"");
+            push_escaped(&mut s, &d.message);
+            s.push_str("\",\"witness\":");
+            match &d.witness {
+                Some(w) => {
+                    s.push_str("{\"prefix\":[");
+                    for (j, o) in w.prefix.iter().enumerate() {
+                        if j > 0 {
+                            s.push(',');
+                        }
+                        let _ = write!(s, "{o}");
+                    }
+                    let _ = write!(s, "],\"focus\":[{},{}]}}", w.focus.0, w.focus.1);
+                }
+                None => s.push_str("null"),
+            }
+            s.push('}');
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+/// Verify the tape alone (sync + slot-level analysis, no arena).
+pub fn verify(tape: &ReplayTape) -> VerifyReport {
+    verify_inner(tape, None)
+}
+
+/// Verify the tape plus the arena layout that will back its slots.
+pub fn verify_with_arena(tape: &ReplayTape, arena: &ArenaPlan) -> VerifyReport {
+    verify_inner(tape, Some(arena))
+}
+
+/// Slot access structure: the (first) writer record and every reader
+/// record of each slot, by tape index. An `Input` record counts as its
+/// slot's writer: the bytes are host-filled before replay starts, but
+/// the sync plan's contract (and `plan_is_safe`, the legacy oracle) is
+/// that consumers order themselves after the input record's events, so
+/// the verifier holds plans to the same bar.
+struct SlotAccess {
+    writer: Vec<Option<u32>>,
+    readers: Vec<Vec<u32>>,
+}
+
+fn slot_access(tape: &ReplayTape) -> SlotAccess {
+    let mut writer: Vec<Option<u32>> = vec![None; tape.n_slots()];
+    let mut readers: Vec<Vec<u32>> = vec![Vec::new(); tape.n_slots()];
+    for (i, op) in tape.ops().iter().enumerate() {
+        if let Some(w) = writer.get_mut(op.out_slot as usize) {
+            if w.is_none() {
+                *w = Some(i as u32);
+            }
+        }
+        for arg in tape.args(op) {
+            if let TapeArg::Slot(s) = arg {
+                if let Some(r) = readers.get_mut(*s as usize) {
+                    r.push(i as u32);
+                }
+            }
+        }
+    }
+    SlotAccess { writer, readers }
+}
+
+fn verify_inner(tape: &ReplayTape, arena: Option<&ArenaPlan>) -> VerifyReport {
+    let mut report = VerifyReport {
+        diagnostics: Vec::new(),
+        n_ops: tape.n_ops(),
+        n_streams: tape.n_streams(),
+        n_slots: tape.n_slots(),
+        n_events: tape.n_events(),
+        hb_edges: 0,
+        alias_pairs_checked: 0,
+    };
+    let diags = &mut report.diagnostics;
+
+    // ---- Pass 1: well-formedness (index bounds, self-deps, unique
+    // writers/recorders, orphan waits). Runs before anything trusts the
+    // indices.
+    let n_slots = tape.n_slots();
+    let n_events = tape.n_events();
+    let mut bad_index = false;
+    for (i, op) in tape.ops().iter().enumerate() {
+        let i = i as u32;
+        if op.out_slot as usize >= n_slots {
+            bad_index = true;
+            diags.push(Diagnostic {
+                kind: DiagKind::BadIndex,
+                ops: vec![i],
+                slot: Some(op.out_slot),
+                event: None,
+                message: format!(
+                    "record #{i} writes slot {} but the tape has {n_slots} slots",
+                    op.out_slot
+                ),
+                witness: None,
+            });
+        }
+        for arg in tape.args(op) {
+            if let TapeArg::Slot(s) = arg {
+                if *s as usize >= n_slots {
+                    bad_index = true;
+                    diags.push(Diagnostic {
+                        kind: DiagKind::BadIndex,
+                        ops: vec![i],
+                        slot: Some(*s),
+                        event: None,
+                        message: format!(
+                            "record #{i} reads slot {s} but the tape has {n_slots} slots"
+                        ),
+                        witness: None,
+                    });
+                } else if *s == op.out_slot {
+                    diags.push(Diagnostic {
+                        kind: DiagKind::BadIndex,
+                        ops: vec![i],
+                        slot: Some(*s),
+                        event: None,
+                        message: format!(
+                            "record #{i} reads its own output slot {s}: a self-dependency \
+                             can never be satisfied"
+                        ),
+                        witness: None,
+                    });
+                }
+            }
+        }
+        for &e in tape.waits(op).iter().chain(tape.records(op)) {
+            if e as usize >= n_events {
+                bad_index = true;
+                diags.push(Diagnostic {
+                    kind: DiagKind::BadIndex,
+                    ops: vec![i],
+                    slot: None,
+                    event: Some(e),
+                    message: format!(
+                        "record #{i} references event {e} but the tape has {n_events} events"
+                    ),
+                    witness: None,
+                });
+            }
+        }
+    }
+    if bad_index {
+        // Indices are unreliable; every later pass would chase them.
+        return report;
+    }
+
+    let mut writers_of: Vec<Vec<u32>> = vec![Vec::new(); n_slots];
+    let mut recorders_of: Vec<Vec<u32>> = vec![Vec::new(); n_events];
+    for (i, op) in tape.ops().iter().enumerate() {
+        writers_of[op.out_slot as usize].push(i as u32);
+        for &e in tape.records(op) {
+            recorders_of[e as usize].push(i as u32);
+        }
+    }
+    for (s, ws) in writers_of.iter().enumerate() {
+        if ws.len() > 1 {
+            diags.push(Diagnostic {
+                kind: DiagKind::DuplicateWriter,
+                ops: ws.clone(),
+                slot: Some(s as u32),
+                event: None,
+                message: format!("{} records all write slot {s}", ws.len()),
+                witness: None,
+            });
+        }
+    }
+    for (e, rs) in recorders_of.iter().enumerate() {
+        if rs.len() > 1 {
+            diags.push(Diagnostic {
+                kind: DiagKind::DuplicateRecorder,
+                ops: rs.clone(),
+                slot: None,
+                event: Some(e as u32),
+                message: format!(
+                    "{} records all record event {e}; waiters are released at the first, \
+                     so ordering against the later recorders is illusory",
+                    rs.len()
+                ),
+                witness: None,
+            });
+        }
+    }
+    for (i, op) in tape.ops().iter().enumerate() {
+        for &e in tape.waits(op) {
+            if recorders_of[e as usize].is_empty() {
+                diags.push(Diagnostic {
+                    kind: DiagKind::OrphanWait,
+                    ops: vec![i as u32],
+                    slot: None,
+                    event: Some(e),
+                    message: format!(
+                        "record #{i} (stream {}) waits on event {e}, which nothing records: \
+                         the stream blocks forever at replay time",
+                        op.stream
+                    ),
+                    witness: None,
+                });
+            }
+        }
+    }
+
+    // ---- Pass 2: happens-before closure and deadlock cycles.
+    let hb = hb::closure(tape);
+    report.hb_edges = hb.n_edges;
+    if let Some(cycle) = &hb.cycle {
+        let chain = cycle.iter().map(|o| format!("#{o}")).collect::<Vec<_>>().join(" → ");
+        let first = cycle.first().copied().unwrap_or(0);
+        report.diagnostics.push(Diagnostic {
+            kind: DiagKind::HbCycle,
+            ops: cycle.clone(),
+            slot: None,
+            event: None,
+            message: format!(
+                "cyclic wait/record chain {chain} → #{first}: every record on it \
+                 transitively waits on itself, so none can start"
+            ),
+            witness: None,
+        });
+        // Ordering is undefined on a cyclic relation; the remaining
+        // passes would report noise derived from the same root cause.
+        return report;
+    }
+
+    // ---- Pass 3: slot-level race / use-before-def.
+    let access = slot_access(tape);
+    let diags = &mut report.diagnostics;
+    for s in 0..n_slots {
+        let Some(&w) = access.writer[s].as_ref() else {
+            for &r in &access.readers[s] {
+                diags.push(Diagnostic {
+                    kind: DiagKind::UseBeforeDef,
+                    ops: vec![r],
+                    slot: Some(s as u32),
+                    event: None,
+                    message: format!("record #{r} reads slot {s}, which nothing writes"),
+                    witness: None,
+                });
+            }
+            continue;
+        };
+        for &r in &access.readers[s] {
+            if r == w {
+                continue; // self-dependency, already reported in pass 1
+            }
+            let (wu, ru) = (w as usize, r as usize);
+            if hb.happens_before(wu, ru) {
+                continue;
+            }
+            if hb.happens_before(ru, wu) {
+                diags.push(Diagnostic {
+                    kind: DiagKind::UseBeforeDef,
+                    ops: vec![r, w],
+                    slot: Some(s as u32),
+                    event: None,
+                    message: format!(
+                        "record #{r} reads slot {s} but is ordered before its writer #{w}"
+                    ),
+                    witness: None,
+                });
+            } else {
+                let wop = tape.op(wu);
+                let rop = tape.op(ru);
+                diags.push(Diagnostic {
+                    kind: DiagKind::Race,
+                    ops: vec![w, r],
+                    slot: Some(s as u32),
+                    event: None,
+                    message: format!(
+                        "write of slot {s} by #{w} (node {}, stream {}) races its read by \
+                         #{r} (node {}, stream {}): no happens-before path orders them",
+                        wop.node, wop.stream, rop.node, rop.stream
+                    ),
+                    witness: Some(Witness { prefix: hb.joint_prefix(wu, ru), focus: (w, r) }),
+                });
+            }
+        }
+    }
+
+    // ---- Pass 4: output reachability from the inputs (skipped for
+    // input-free tapes, e.g. payload-free DAG tapes in property tests).
+    if !tape.input_slots().is_empty() {
+        let mut reached = vec![false; n_slots];
+        for &(s, _) in tape.input_slots() {
+            reached[s] = true;
+        }
+        // Submission order is topological for legal tapes, but a
+        // mutated one may not be — iterate to a fixpoint.
+        loop {
+            let mut changed = false;
+            for op in tape.ops() {
+                if reached[op.out_slot as usize] {
+                    continue;
+                }
+                let feeds = tape.args(op).iter().any(|a| match a {
+                    TapeArg::Slot(s) => reached[*s as usize],
+                    TapeArg::Weight(_) => false,
+                });
+                if feeds {
+                    reached[op.out_slot as usize] = true;
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        if !reached[tape.output_slot()] {
+            report.diagnostics.push(Diagnostic {
+                kind: DiagKind::DeadOutput,
+                ops: Vec::new(),
+                slot: Some(tape.output_slot() as u32),
+                event: None,
+                message: format!(
+                    "output slot {} is not reachable from any input slot through \
+                     argument edges",
+                    tape.output_slot()
+                ),
+                witness: None,
+            });
+        }
+    }
+
+    // ---- Pass 5: arena-aliasing soundness.
+    if let Some(plan) = arena {
+        verify_arena(tape, plan, &access, &hb, &mut report);
+    }
+
+    report
+}
+
+/// Check the arena plan: extents inside the reservation, and every
+/// byte-overlapping slot pair ordered so one slot's lifetime fully
+/// precedes the other's definition ("retires below" — derived here
+/// independently of `aot::memory::lifetime`, which this audits).
+fn verify_arena(
+    tape: &ReplayTape,
+    plan: &ArenaPlan,
+    access: &SlotAccess,
+    hb: &hb::HbClosure,
+    report: &mut VerifyReport,
+) {
+    let n_slots = tape.n_slots();
+    let diags = &mut report.diagnostics;
+    if plan.offsets.len() != n_slots || plan.rounded_sizes.len() != n_slots {
+        diags.push(Diagnostic {
+            kind: DiagKind::ArenaBounds,
+            ops: Vec::new(),
+            slot: None,
+            event: None,
+            message: format!(
+                "arena plan covers {} offsets / {} sizes but the tape has {n_slots} slots",
+                plan.offsets.len(),
+                plan.rounded_sizes.len()
+            ),
+            witness: None,
+        });
+        return;
+    }
+    // Written extent of each slot: the bytes replay actually touches.
+    let bytes: Vec<u64> = tape.slot_bytes();
+    let mut bounded = true;
+    for s in 0..n_slots {
+        if bytes[s] == 0 {
+            continue;
+        }
+        if plan.rounded_sizes[s] < bytes[s] {
+            bounded = false;
+            diags.push(Diagnostic {
+                kind: DiagKind::ArenaBounds,
+                ops: Vec::new(),
+                slot: Some(s as u32),
+                event: None,
+                message: format!(
+                    "slot {s} reserves {} bytes but replay writes {}",
+                    plan.rounded_sizes[s], bytes[s]
+                ),
+                witness: None,
+            });
+        }
+        if plan.offsets[s] + bytes[s] > plan.arena_bytes {
+            bounded = false;
+            diags.push(Diagnostic {
+                kind: DiagKind::ArenaBounds,
+                ops: Vec::new(),
+                slot: Some(s as u32),
+                event: None,
+                message: format!(
+                    "slot {s} extent [{}, {}) runs past the {}-byte reservation",
+                    plan.offsets[s],
+                    plan.offsets[s] + bytes[s],
+                    plan.arena_bytes
+                ),
+                witness: None,
+            });
+        }
+    }
+    if !bounded {
+        return;
+    }
+
+    let is_input = {
+        let mut v = vec![false; n_slots];
+        for &(s, _) in tape.input_slots() {
+            v[s] = true;
+        }
+        v
+    };
+    let output = tape.output_slot();
+
+    // All accesses (writer + readers) of a slot, by tape index.
+    let accesses = |s: usize| -> Vec<u32> {
+        let mut v: Vec<u32> = access.writer[s].iter().copied().collect();
+        v.extend_from_slice(&access.readers[s]);
+        v
+    };
+    // `a` retires below `b`: every access of `a` strictly
+    // happens-before `b`'s definition, `a` is not the output (it must
+    // survive to the end of replay), and `b` is not an input (its bytes
+    // are host-filled before replay starts, so nothing precedes them).
+    let retires_below = |a: usize, b: usize| -> bool {
+        if a == output || is_input[b] {
+            return false;
+        }
+        let Some(db) = access.writer[b] else {
+            return true; // b is never written: no footprint to collide with
+        };
+        accesses(a).iter().all(|&x| hb.happens_before(x as usize, db as usize))
+    };
+
+    for i in 0..n_slots {
+        if bytes[i] == 0 {
+            continue;
+        }
+        let (oi, ei) = (plan.offsets[i], plan.offsets[i] + bytes[i]);
+        for j in i + 1..n_slots {
+            if bytes[j] == 0 {
+                continue;
+            }
+            let (oj, ej) = (plan.offsets[j], plan.offsets[j] + bytes[j]);
+            if ei <= oj || ej <= oi {
+                continue; // written extents disjoint
+            }
+            report.alias_pairs_checked += 1;
+            if retires_below(i, j) || retires_below(j, i) {
+                continue;
+            }
+            let lo = oi.max(oj);
+            let hi = ei.min(ej);
+            let (wit, detail) = alias_witness(i, j, access, hb, &accesses);
+            report.diagnostics.push(Diagnostic {
+                kind: DiagKind::AliasOverlap,
+                ops: wit
+                    .as_ref()
+                    .map(|w| vec![w.focus.0, w.focus.1])
+                    .unwrap_or_default(),
+                slot: Some(i as u32),
+                event: None,
+                message: format!(
+                    "slots {i} and {j} share arena bytes [{lo}, {hi}) but neither retires \
+                     below the other{detail}"
+                ),
+                witness: wit,
+            });
+        }
+    }
+}
+
+/// Concrete evidence for an alias overlap: prefer an *unordered* access
+/// pair (a true race on the shared bytes); fall back to an ordered
+/// corruption sequence (an access of one slot after the other's
+/// definition overwrote the bytes).
+fn alias_witness(
+    i: usize,
+    j: usize,
+    access: &SlotAccess,
+    hb: &hb::HbClosure,
+    accesses: &dyn Fn(usize) -> Vec<u32>,
+) -> (Option<Witness>, String) {
+    let ai = accesses(i);
+    let aj = accesses(j);
+    for &x in &ai {
+        for &y in &aj {
+            if x != y && !hb.ordered(x as usize, y as usize) {
+                return (
+                    Some(Witness { prefix: hb.joint_prefix(x as usize, y as usize), focus: (x, y) }),
+                    format!(": #{x} (slot {i}) and #{y} (slot {j}) are unordered"),
+                );
+            }
+        }
+    }
+    // All cross accesses ordered, yet neither retires: some access of
+    // the earlier-defined slot lands after the later definition.
+    for (a, b, aa) in [(i, j, &ai), (j, i, &aj)] {
+        if let Some(db) = access.writer[b] {
+            if let Some(&x) =
+                aa.iter().find(|&&x| x != db && hb.happens_before(db as usize, x as usize))
+            {
+                return (
+                    Some(Witness { prefix: hb.joint_prefix(db as usize, x as usize), focus: (db, x) }),
+                    format!(
+                        ": #{x} touches slot {a} after #{db} redefined the shared bytes \
+                         for slot {b}"
+                    ),
+                );
+            }
+        }
+    }
+    (None, String::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aot::memory::{happens_before_conflicts, plan_with_conflicts, ArenaPlan};
+    use crate::aot::tape::NodeMeta;
+    use crate::matching::MatchingAlgo;
+    use crate::models;
+    use crate::stream::rewrite::{rewrite, rewrite_single_stream, NodePlan};
+    use crate::stream::LaunchPlan;
+
+    /// Hand-build a tape from explicit per-record plans.
+    /// Each entry: (node, stream, waits, records, args, out_len, role).
+    #[allow(clippy::type_complexity)]
+    fn build_tape(
+        n_slots: usize,
+        n_streams: usize,
+        n_events: usize,
+        recs: &[(usize, usize, Vec<usize>, Vec<usize>, Vec<u32>, usize, TapeRole)],
+        output: usize,
+    ) -> ReplayTape {
+        let order = recs
+            .iter()
+            .map(|(node, stream, waits, records, _, _, _)| NodePlan {
+                node: *node,
+                stream: *stream,
+                wait_events: waits.clone(),
+                record_events: records.clone(),
+            })
+            .collect();
+        let mut stream_of = vec![0usize; n_slots];
+        for (node, stream, ..) in recs {
+            stream_of[*node] = *stream;
+        }
+        let plan = LaunchPlan { order, n_streams, n_events, stream_of };
+        ReplayTape::compile(&plan, output, |v| {
+            let r = recs.iter().find(|(node, ..)| *node == v).expect("record for node");
+            NodeMeta {
+                role: r.6,
+                out_len: r.5,
+                args: r.4.iter().map(|&s| TapeArg::Slot(s)).collect(),
+            }
+        })
+    }
+
+    #[test]
+    fn model_zoo_tapes_verify_clean_with_their_arenas() {
+        for name in ["mini_inception", "resnet50_cifar", "inception_v3"] {
+            let g = models::build(name, 2);
+            for plan in [rewrite(&g, MatchingAlgo::HopcroftKarp), rewrite_single_stream(&g)] {
+                let tape = ReplayTape::for_op_graph(&g, &plan, 4096);
+                let bytes = tape.slot_bytes();
+                let arena = plan_with_conflicts(&bytes, &happens_before_conflicts(&tape));
+                let report = verify_with_arena(&tape, &arena);
+                assert!(report.is_clean(), "{name}: {}", report.render());
+                assert!(report.hb_edges > 0);
+                let unshared = verify_with_arena(&tape, &ArenaPlan::unshared(&bytes));
+                assert!(unshared.is_clean(), "{name} unshared: {}", unshared.render());
+                assert_eq!(unshared.alias_pairs_checked, 0, "unshared slots never overlap");
+            }
+        }
+    }
+
+    /// Two streams, one dependency, no sync: a race with a witness.
+    #[test]
+    fn unsynchronized_cross_stream_read_is_a_race_with_witness() {
+        let t = build_tape(
+            2,
+            2,
+            0,
+            &[
+                (0, 0, vec![], vec![], vec![], 8, TapeRole::Task),
+                (1, 1, vec![], vec![], vec![0], 8, TapeRole::Task),
+            ],
+            1,
+        );
+        let r = verify(&t);
+        assert!(r.has(DiagKind::Race), "{}", r.render());
+        let d = r.diagnostics.iter().find(|d| d.kind == DiagKind::Race).expect("race");
+        assert_eq!(d.slot, Some(0));
+        let w = d.witness.as_ref().expect("race carries a witness");
+        assert_eq!(w.focus, (0, 1));
+        assert!(w.prefix.is_empty(), "no predecessors: both eligible at start");
+        // The same plan with a record→wait edge is clean.
+        let t = build_tape(
+            2,
+            2,
+            1,
+            &[
+                (0, 0, vec![], vec![0], vec![], 8, TapeRole::Task),
+                (1, 1, vec![0], vec![], vec![0], 8, TapeRole::Task),
+            ],
+            1,
+        );
+        assert!(verify(&t).is_clean());
+    }
+
+    #[test]
+    fn orphan_wait_is_reported() {
+        let t = build_tape(
+            2,
+            1,
+            2,
+            &[
+                (0, 0, vec![], vec![0], vec![], 8, TapeRole::Task),
+                (1, 0, vec![1], vec![], vec![0], 8, TapeRole::Task),
+            ],
+            1,
+        );
+        let r = verify(&t);
+        let d = r.diagnostics.iter().find(|d| d.kind == DiagKind::OrphanWait).expect("orphan");
+        assert_eq!(d.event, Some(1));
+        assert_eq!(d.ops, vec![1]);
+    }
+
+    /// Cross-stream mutual waits: #1 waits on an event recorded by #2
+    /// (reachable only after #1's stream-mate #0... arranged so the
+    /// record→wait edges close a cycle through program order).
+    #[test]
+    fn cyclic_wait_record_chain_is_a_deadlock() {
+        // stream 0: #0 waits e1 then records e0; stream 1: #1 waits e0,
+        // records e1. #0 → needs e1 ← #1 → needs e0 ← #0: cycle.
+        let t = build_tape(
+            2,
+            2,
+            2,
+            &[
+                (0, 0, vec![1], vec![0], vec![], 8, TapeRole::Task),
+                (1, 1, vec![0], vec![1], vec![], 8, TapeRole::Task),
+            ],
+            1,
+        );
+        let r = verify(&t);
+        let d = r.diagnostics.iter().find(|d| d.kind == DiagKind::HbCycle).expect("cycle");
+        assert_eq!(d.ops.len(), 2, "two-record cycle: {}", d.message);
+    }
+
+    #[test]
+    fn self_wait_is_a_one_record_cycle() {
+        let t = build_tape(
+            1,
+            1,
+            1,
+            &[(0, 0, vec![0], vec![0], vec![], 8, TapeRole::Task)],
+            0,
+        );
+        let r = verify(&t);
+        let d = r.diagnostics.iter().find(|d| d.kind == DiagKind::HbCycle).expect("cycle");
+        assert_eq!(d.ops, vec![0]);
+    }
+
+    #[test]
+    fn overlapping_live_slots_are_an_alias_overlap() {
+        // 0 → 1 → 2 on one stream; slots 0 and 2 share bytes. Slot 0 is
+        // read by #1 which happens-before #2's def, so 0 retires below 2
+        // → clean. Overlap 1 with 0 instead: #1 defines slot 1 *before*
+        // #2 reads... build the dirty case: overlap slots 1 and 2; slot
+        // 1 is read by #2 itself, so 1 cannot retire below 2 and 2 is
+        // defined after 1: overlap must be flagged.
+        let t = build_tape(
+            3,
+            1,
+            0,
+            &[
+                (0, 0, vec![], vec![], vec![], 8, TapeRole::Task),
+                (1, 0, vec![], vec![], vec![0], 8, TapeRole::Task),
+                (2, 0, vec![], vec![], vec![1], 8, TapeRole::Task),
+            ],
+            2,
+        );
+        let bytes = t.slot_bytes();
+        // Legal: slots 0 and 2 share an offset (0 retires below 2).
+        let clean = ArenaPlan {
+            offsets: vec![0, 512, 0],
+            rounded_sizes: vec![512, 512, 512],
+            arena_bytes: 1024,
+        };
+        assert_eq!(bytes.iter().filter(|&&b| b > 0).count(), 3);
+        let r = verify_with_arena(&t, &clean);
+        assert!(r.is_clean(), "{}", r.render());
+        assert_eq!(r.alias_pairs_checked, 1);
+        // Illegal: producer slot 1 shares bytes with its consumer's
+        // output slot 2.
+        let dirty = ArenaPlan {
+            offsets: vec![0, 512, 512],
+            rounded_sizes: vec![512, 512, 512],
+            arena_bytes: 1024,
+        };
+        let r = verify_with_arena(&t, &dirty);
+        let d =
+            r.diagnostics.iter().find(|d| d.kind == DiagKind::AliasOverlap).expect("overlap");
+        assert!(d.witness.is_some(), "alias overlap carries a witness: {}", d.message);
+    }
+
+    #[test]
+    fn extent_past_reservation_is_arena_bounds() {
+        let t = build_tape(
+            1,
+            1,
+            0,
+            &[(0, 0, vec![], vec![], vec![], 8, TapeRole::Task)],
+            0,
+        );
+        let plan =
+            ArenaPlan { offsets: vec![512], rounded_sizes: vec![512], arena_bytes: 512 };
+        let r = verify_with_arena(&t, &plan);
+        assert!(r.has(DiagKind::ArenaBounds), "{}", r.render());
+    }
+
+    #[test]
+    fn out_of_range_event_is_bad_index_and_short_circuits() {
+        let t = build_tape(
+            2,
+            1,
+            1,
+            &[
+                (0, 0, vec![], vec![7], vec![], 8, TapeRole::Task),
+                (1, 0, vec![], vec![], vec![0], 8, TapeRole::Task),
+            ],
+            1,
+        );
+        let r = verify(&t);
+        assert!(r.has(DiagKind::BadIndex), "{}", r.render());
+        assert_eq!(r.diagnostics.len(), 1, "bad indices short-circuit later passes");
+    }
+
+    #[test]
+    fn self_dependency_is_bad_index() {
+        let t = build_tape(
+            1,
+            1,
+            0,
+            &[(0, 0, vec![], vec![], vec![0], 8, TapeRole::Task)],
+            0,
+        );
+        assert!(verify(&t).has(DiagKind::BadIndex));
+    }
+
+    #[test]
+    fn use_before_def_when_reader_precedes_writer() {
+        // Same stream, reader submitted before the writer.
+        let t = build_tape(
+            2,
+            1,
+            0,
+            &[
+                (1, 0, vec![], vec![], vec![0], 8, TapeRole::Task),
+                (0, 0, vec![], vec![], vec![], 8, TapeRole::Task),
+            ],
+            1,
+        );
+        let r = verify(&t);
+        assert!(r.has(DiagKind::UseBeforeDef), "{}", r.render());
+    }
+
+    #[test]
+    fn duplicate_recorder_is_reported() {
+        let t = build_tape(
+            2,
+            1,
+            1,
+            &[
+                (0, 0, vec![], vec![0], vec![], 8, TapeRole::Task),
+                (1, 0, vec![], vec![0], vec![0], 8, TapeRole::Task),
+            ],
+            1,
+        );
+        let r = verify(&t);
+        let d = r
+            .diagnostics
+            .iter()
+            .find(|d| d.kind == DiagKind::DuplicateRecorder)
+            .expect("duplicate recorder");
+        assert_eq!(d.ops, vec![0, 1]);
+    }
+
+    #[test]
+    fn report_json_round_trips_through_the_parser() {
+        let g = models::build("mini_inception", 1);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = ReplayTape::for_op_graph(&g, &plan, 4096);
+        let report = verify(&tape);
+        let parsed = crate::util::json::parse_json(&report.to_json()).expect("valid json");
+        assert_eq!(parsed.get("clean"), Some(&crate::util::json::JsonValue::Bool(true)));
+        assert_eq!(
+            parsed.get("n_ops").and_then(|v| v.as_u64()),
+            Some(tape.n_ops() as u64)
+        );
+        // And a dirty report keeps the diagnostics array well-formed.
+        let t = build_tape(
+            2,
+            2,
+            0,
+            &[
+                (0, 0, vec![], vec![], vec![], 8, TapeRole::Task),
+                (1, 1, vec![], vec![], vec![0], 8, TapeRole::Task),
+            ],
+            1,
+        );
+        let dirty = verify(&t);
+        let parsed = crate::util::json::parse_json(&dirty.to_json()).expect("valid json");
+        let diags = parsed.get("diagnostics").and_then(|v| v.as_array()).expect("array");
+        assert_eq!(diags.len(), dirty.diagnostics.len());
+        assert_eq!(diags[0].get("kind").and_then(|v| v.as_str()), Some("race"));
+    }
+
+    #[test]
+    fn default_mode_tracks_build_profile() {
+        let expect =
+            if cfg!(debug_assertions) { VerifyMode::Warn } else { VerifyMode::Off };
+        assert_eq!(VerifyMode::default(), expect);
+    }
+}

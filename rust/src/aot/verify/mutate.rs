@@ -1,0 +1,265 @@
+//! Seeded plan mutator: the verifier's self-test adversary.
+//!
+//! Each mutation class injects one specific bug family into a *legal*
+//! compiled plan — drop a sync edge, retarget a wait, swap two records
+//! across streams, collapse two arena offsets — and the property
+//! harness asserts the verifier flags every mutant with the expected
+//! diagnostic kind and a concrete witness (zero false negatives), while
+//! the unmutated plans verify clean (zero false positives).
+//!
+//! Tape-level mutations round-trip through
+//! [`ReplayTape::to_launch_plan`] → edit → [`ReplayTape::compile`], so
+//! mutants are real tapes, not synthetic fixtures. A dropped or moved
+//! sync edge does not always break a plan (a transitive FIFO path can
+//! still realize the dependency), so candidates are filtered through
+//! the *legacy* operational-safety oracle
+//! ([`ReplayTape::dependencies_are_synchronized_legacy`], which predates
+//! and is independent of the verifier): [`mutate`] only returns mutants
+//! that oracle certifies broken, making "the verifier must flag this"
+//! sound by construction.
+
+use crate::aot::memory::ArenaPlan;
+use crate::aot::tape::{NodeMeta, ReplayTape, TapeArg, TapeRole};
+use crate::stream::LaunchPlan;
+use crate::util::Pcg32;
+
+/// The mutation classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MutationKind {
+    /// Remove one wait from a record: the sync edge it realized is gone.
+    DropSync,
+    /// Point one wait at a different event: orders against the wrong
+    /// recorder (and can even close a wait/record cycle).
+    RetargetWait,
+    /// Swap the stream assignment of two records on different streams:
+    /// FIFO ordering both relied on silently changes.
+    SwapStreams,
+    /// Collapse a producer's arena offset onto its consumer's output
+    /// slot: aliased bytes with overlapping lifetimes.
+    ShrinkOffset,
+}
+
+pub const ALL_MUTATIONS: [MutationKind; 4] = [
+    MutationKind::DropSync,
+    MutationKind::RetargetWait,
+    MutationKind::SwapStreams,
+    MutationKind::ShrinkOffset,
+];
+
+impl MutationKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            MutationKind::DropSync => "drop-sync",
+            MutationKind::RetargetWait => "retarget-wait",
+            MutationKind::SwapStreams => "swap-streams",
+            MutationKind::ShrinkOffset => "shrink-offset",
+        }
+    }
+}
+
+/// A certified-broken mutant: the tape/arena pair plus what was done.
+pub struct Mutant {
+    pub tape: ReplayTape,
+    pub arena: ArenaPlan,
+    pub kind: MutationKind,
+    pub description: String,
+}
+
+/// Recompile a tape after plan surgery, reconstructing each node's
+/// metadata (role, output length, argument sources) from the original.
+fn recompile(tape: &ReplayTape, plan: &LaunchPlan) -> ReplayTape {
+    let mut by_node = vec![u32::MAX; tape.n_slots()];
+    for (i, op) in tape.ops().iter().enumerate() {
+        by_node[op.node as usize] = i as u32;
+    }
+    ReplayTape::compile(plan, tape.output_slot(), |v| {
+        let op = tape.op(by_node[v] as usize);
+        NodeMeta { role: op.role, out_len: op.out_len as usize, args: tape.args(op).to_vec() }
+    })
+}
+
+/// Apply one seeded mutation of the given class to a legal plan.
+/// Returns `None` when no candidate of that class breaks the plan (for
+/// example a single-stream tape has no sync edges to drop); the caller
+/// moves on to the next seed. Any returned mutant is oracle-certified
+/// broken, so a verifier that misses it has a real false negative.
+pub fn mutate(
+    tape: &ReplayTape,
+    arena: &ArenaPlan,
+    kind: MutationKind,
+    rng: &mut Pcg32,
+) -> Option<Mutant> {
+    match kind {
+        MutationKind::DropSync => drop_sync(tape, arena, rng),
+        MutationKind::RetargetWait => retarget_wait(tape, arena, rng),
+        MutationKind::SwapStreams => swap_streams(tape, arena, rng),
+        MutationKind::ShrinkOffset => shrink_offset(tape, arena, rng),
+    }
+}
+
+fn broken(tape: &ReplayTape) -> bool {
+    !tape.dependencies_are_synchronized_legacy()
+}
+
+fn drop_sync(tape: &ReplayTape, arena: &ArenaPlan, rng: &mut Pcg32) -> Option<Mutant> {
+    let plan = tape.to_launch_plan();
+    let mut cands: Vec<(usize, usize)> = plan
+        .order
+        .iter()
+        .enumerate()
+        .flat_map(|(i, p)| (0..p.wait_events.len()).map(move |w| (i, w)))
+        .collect();
+    rng.shuffle(&mut cands);
+    for (i, w) in cands {
+        let mut m = plan.clone();
+        let e = m.order[i].wait_events.remove(w);
+        let t = recompile(tape, &m);
+        if broken(&t) {
+            return Some(Mutant {
+                tape: t,
+                arena: arena.clone(),
+                kind: MutationKind::DropSync,
+                description: format!("dropped wait on event {e} at record #{i}"),
+            });
+        }
+    }
+    None
+}
+
+fn retarget_wait(tape: &ReplayTape, arena: &ArenaPlan, rng: &mut Pcg32) -> Option<Mutant> {
+    let plan = tape.to_launch_plan();
+    let mut cands: Vec<(usize, usize)> = plan
+        .order
+        .iter()
+        .enumerate()
+        .flat_map(|(i, p)| (0..p.wait_events.len()).map(move |w| (i, w)))
+        .collect();
+    rng.shuffle(&mut cands);
+    for (i, w) in cands {
+        let old = plan.order[i].wait_events[w];
+        let mut events: Vec<usize> = (0..plan.n_events).filter(|&e| e != old).collect();
+        rng.shuffle(&mut events);
+        for e in events {
+            let mut m = plan.clone();
+            m.order[i].wait_events[w] = e;
+            let t = recompile(tape, &m);
+            if broken(&t) {
+                return Some(Mutant {
+                    tape: t,
+                    arena: arena.clone(),
+                    kind: MutationKind::RetargetWait,
+                    description: format!("retargeted record #{i}'s wait from event {old} to {e}"),
+                });
+            }
+        }
+    }
+    None
+}
+
+fn swap_streams(tape: &ReplayTape, arena: &ArenaPlan, rng: &mut Pcg32) -> Option<Mutant> {
+    let plan = tape.to_launch_plan();
+    let mut cands: Vec<(usize, usize)> = Vec::new();
+    for i in 0..plan.order.len() {
+        for j in i + 1..plan.order.len() {
+            if plan.order[i].stream != plan.order[j].stream {
+                cands.push((i, j));
+            }
+        }
+    }
+    rng.shuffle(&mut cands);
+    for (i, j) in cands {
+        let mut m = plan.clone();
+        let (si, sj) = (m.order[i].stream, m.order[j].stream);
+        m.order[i].stream = sj;
+        m.order[j].stream = si;
+        m.stream_of[m.order[i].node] = sj;
+        m.stream_of[m.order[j].node] = si;
+        let t = recompile(tape, &m);
+        if broken(&t) {
+            return Some(Mutant {
+                tape: t,
+                arena: arena.clone(),
+                kind: MutationKind::SwapStreams,
+                description: format!(
+                    "swapped records #{i} (stream {si}) and #{j} (stream {sj}) across streams"
+                ),
+            });
+        }
+    }
+    None
+}
+
+/// Collapse a producer slot's offset onto its consumer's output slot.
+/// This is illegal by construction: the consumer reads the producer
+/// while (or after) writing the same bytes, so neither slot's lifetime
+/// can fully precede the other's definition — no oracle filtering is
+/// needed, and the tape itself stays legal (only the arena is mutated).
+fn shrink_offset(tape: &ReplayTape, arena: &ArenaPlan, rng: &mut Pcg32) -> Option<Mutant> {
+    let bytes = tape.slot_bytes();
+    let mut cands: Vec<(usize, usize)> = Vec::new();
+    for op in tape.ops() {
+        if op.role != TapeRole::Task || op.out_len == 0 {
+            continue;
+        }
+        for arg in tape.args(op) {
+            if let TapeArg::Slot(s) = arg {
+                let s = *s as usize;
+                if s != op.out_slot as usize && bytes[s] > 0 {
+                    cands.push((op.out_slot as usize, s));
+                }
+            }
+        }
+    }
+    if cands.is_empty() {
+        return None;
+    }
+    let (consumer, producer) = cands[rng.gen_range(cands.len())];
+    let mut plan = arena.clone();
+    let old = plan.offsets[consumer];
+    plan.offsets[consumer] = plan.offsets[producer];
+    // Keep every extent inside the reservation so the only diagnostic
+    // left is the aliasing itself.
+    let end = plan.offsets[consumer] + bytes[consumer];
+    plan.arena_bytes = plan.arena_bytes.max(end);
+    Some(Mutant {
+        tape: tape.clone(),
+        arena: plan,
+        kind: MutationKind::ShrinkOffset,
+        description: format!(
+            "moved slot {consumer}'s offset {old} onto its producer slot {producer}'s offset"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matching::MatchingAlgo;
+    use crate::models;
+    use crate::stream::rewrite::rewrite;
+
+    #[test]
+    fn mutants_round_trip_as_real_tapes_and_are_oracle_broken() {
+        let g = models::build("mini_inception", 1);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = ReplayTape::for_op_graph(&g, &plan, 4096);
+        let arena = ArenaPlan::unshared(&tape.slot_bytes());
+        let mut rng = Pcg32::new(7);
+        let mut produced = 0;
+        for kind in ALL_MUTATIONS {
+            let Some(m) = mutate(&tape, &arena, kind, &mut rng) else {
+                continue;
+            };
+            produced += 1;
+            assert_eq!(m.tape.n_ops(), tape.n_ops(), "{}: same shape", kind.name());
+            assert_eq!(m.tape.output_slot(), tape.output_slot());
+            if kind == MutationKind::ShrinkOffset {
+                assert!(m.tape.dependencies_are_synchronized_legacy());
+                assert_ne!(m.arena.offsets, arena.offsets);
+            } else {
+                assert!(!m.tape.dependencies_are_synchronized_legacy(), "{}", m.description);
+            }
+        }
+        assert!(produced >= 3, "multi-stream tape yields most mutation classes");
+    }
+}

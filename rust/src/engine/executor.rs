@@ -228,10 +228,13 @@ struct SlotArena {
     canaries: Vec<(usize, usize)>,
 }
 
-// Safety: concurrent access is coordinated by the sync plan (module
+// SAFETY: concurrent access is coordinated by the sync plan (module
 // docs); `base` points into the heap allocation `lease` owns, which is
 // stable for the arena's lifetime.
 unsafe impl Send for SlotArena {}
+// SAFETY: shared references only hand out raw-pointer views whose
+// exclusivity the verified sync plan guarantees; no interior `&`-based
+// mutation happens outside those views.
 unsafe impl Sync for SlotArena {}
 
 impl SlotArena {
@@ -263,24 +266,37 @@ impl SlotArena {
         SlotArena { lease: UnsafeCell::new(lease), base, views, canaries }
     }
 
-    /// Safety: per the sync plan, the slot's writer finished before us.
+    /// # Safety
+    /// Per the sync plan, the slot's writer happens-before this read,
+    /// and no writer of bytes overlapping this view is live.
     unsafe fn get(&self, slot: usize) -> &[f32] {
         let (off, len) = self.views[slot];
-        std::slice::from_raw_parts(self.base.add(off), len)
+        // SAFETY: `views` was resolved from the arena plan at build, so
+        // `off + len` lies inside the buffer `base` points into (the
+        // build asserts extents fit the reservation); exclusivity over
+        // these bytes is the caller's contract above.
+        unsafe { std::slice::from_raw_parts(self.base.add(off), len) }
     }
 
-    /// Safety: per the sync plan, we are the unique live writer of any
-    /// byte in this view.
+    /// # Safety
+    /// Per the sync plan, this record is the unique live accessor of
+    /// every byte in the view (its writer slot, before any reader may
+    /// observe it).
     #[allow(clippy::mut_from_ref)]
     unsafe fn get_mut(&self, slot: usize) -> &mut [f32] {
         let (off, len) = self.views[slot];
-        std::slice::from_raw_parts_mut(self.base.add(off), len)
+        // SAFETY: in-bounds per the build-time arena plan (as in
+        // `get`); uniqueness of this `&mut` is the caller's contract
+        // above, so no aliasing reference exists while it lives.
+        unsafe { std::slice::from_raw_parts_mut(self.base.add(off), len) }
     }
 
     /// Verify every canary word is intact. Callers must ensure no replay
     /// is in flight.
     fn check_canaries(&self) -> Result<(), String> {
-        // Safety: quiescent per the caller (coordinator-only call).
+        // SAFETY: the arena is quiescent per the caller (coordinator-
+        // only call, no replay in flight), so no worker holds a live
+        // view into the buffer while this shared borrow exists.
         let buf = unsafe { &(*self.lease.get()).buf };
         for &(a, b) in &self.canaries {
             for (i, v) in buf[a..b].iter().enumerate() {
@@ -656,7 +672,7 @@ fn stealing_worker_loop(core: Arc<PoolCore>) {
         }));
         // Drop arena borrows before reporting in (see worker_loop).
         scratch.clear();
-        // Safety: `scratch` is empty, so the Vec carries no references —
+        // SAFETY: `scratch` is empty, so the Vec carries no references —
         // only its raw allocation — and widening the lifetime parameter
         // of a reference type it no longer contains is sound.
         store = unsafe { std::mem::transmute::<Vec<&[f32]>, Vec<&'static [f32]>>(scratch) };
@@ -783,12 +799,14 @@ impl ReplayInner {
             }
             for arg in self.tape.args(op) {
                 scratch.push(match *arg {
-                    // Safety: writer ordered before us by the sync plan.
+                    // SAFETY: the slot's writer is ordered before us by
+                    // the sync plan, so the view is immutable while we
+                    // read it.
                     TapeArg::Slot(s) => unsafe { self.arena.get(s as usize) },
                     TapeArg::Weight(w) => self.weights[w as usize].as_slice(),
                 });
             }
-            // Safety: we hold the only live borrow of these bytes this
+            // SAFETY: we hold the only live borrow of these bytes this
             // replay (sync plan + conflict-disjoint arena plan).
             let out = unsafe { self.arena.get_mut(op.out_slot as usize) };
             debug_assert_eq!(out.len(), op.out_len as usize, "slot views are sized at build");
@@ -860,7 +878,8 @@ impl ReplayInner {
             if data.len() != len {
                 return Err(format!("input for slot {slot}: length {} != {len}", data.len()));
             }
-            // Safety: no replay is in flight (coordinator-only call).
+            // SAFETY: no replay is in flight (coordinator-only call),
+            // so this is the only live view into the slot's bytes.
             let buf = unsafe { self.arena.get_mut(slot) };
             debug_assert_eq!(buf.len(), len, "input views are sized at build");
             buf.copy_from_slice(data);
@@ -1519,13 +1538,17 @@ impl ReplayContext {
                 args.push(match *arg {
                     TapeArg::Slot(s) => {
                         assert!(written[s as usize], "slot written before use");
-                        // Safety: serial topological order.
+                        // SAFETY: serial replay on this thread only;
+                        // the writer completed earlier in topological
+                        // order (asserted above).
                         unsafe { inner.arena.get(s as usize) }
                     }
                     TapeArg::Weight(w) => inner.weights[w as usize].as_slice(),
                 });
             }
-            // Safety: single-threaded here.
+            // SAFETY: serial replay — this thread is the only
+            // accessor, and `args` borrows disjoint slot views (the
+            // plan verifier rejects self-dependencies).
             let out = unsafe { inner.arena.get_mut(op.out_slot as usize) };
             sched_s += t0.elapsed().as_secs_f64();
             inner.kernel.execute(op, &args, out);
@@ -1578,7 +1601,7 @@ impl ReplayContext {
     /// be writing the arena, so reading would be a data race.
     pub fn output(&self) -> &[f32] {
         self.assert_not_poisoned();
-        // Safety: no replay in flight (replay methods are blocking and
+        // SAFETY: no replay in flight (replay methods are blocking and
         // a timed-out join poisons the context, checked above).
         unsafe { self.inner.arena.get(self.inner.tape.output_slot()) }
     }
@@ -1590,7 +1613,7 @@ impl ReplayContext {
     /// Panics on a poisoned context, like [`output`](Self::output).
     pub fn slot(&self, slot: usize) -> &[f32] {
         self.assert_not_poisoned();
-        // Safety: no replay in flight (see `output`).
+        // SAFETY: no replay in flight (see `output`).
         unsafe { self.inner.arena.get(slot) }
     }
 

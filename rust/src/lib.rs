@@ -48,6 +48,13 @@
 //! feature the crate builds against a stub `xla` crate and every PJRT
 //! entry point reports itself unavailable.
 
+// The unsafe surface (the executor's slot arena and the PJRT argument
+// marshalling) is small and every site must carry its proof: a
+// `// SAFETY:` comment tying it to the sync-plan / arena-plan contract
+// the static verifier (`aot::verify`) certifies at build time.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(clippy::undocumented_unsafe_blocks)]
+
 pub mod aot;
 pub mod baselines;
 pub mod coordinator;

@@ -16,6 +16,15 @@
 //!                         trace / Prometheus metrics / calibrated cost
 //!                         profile, and diff measured vs DES-predicted
 //!                         per-op timings
+//!   verify <model>|--all [--batch N] [--single] [--json PATH]
+//!          [--out DIR] [--inject drop-sync|retarget-wait|swap-streams|
+//!          shrink-offset --seed S]
+//!                         statically certify the compiled replay tape +
+//!                         arena plan (races, deadlocks, aliasing,
+//!                         well-formedness) and print the diagnostic
+//!                         table with witnesses; --all sweeps the model
+//!                         zoo and writes per-model JSON reports;
+//!                         --inject demonstrates the seeded plan mutator
 //!   infer [--batch N] [--iters K] [--mode replay|eager]   (feature xla)
 //!                         run MiniInception on the real XLA path
 //!   serve [--requests N] [--rate RPS] [--deadline-ms D]
@@ -24,6 +33,11 @@
 //!                         façade: the real XLA path with the feature,
 //!                         tape-backed lanes without it
 //!   train [--steps N]     run the AOT train-step artifact   (feature xla)
+
+// Same unsafe-hygiene bar as the library crate (this binary has no
+// unsafe code; the lints keep it that way).
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(clippy::undocumented_unsafe_blocks)]
 
 use anyhow::{bail, Context, Result};
 use nimble::baselines::Baseline;
@@ -61,6 +75,7 @@ fn dispatch(args: &[String]) -> Result<()> {
             args.get(2).map(String::as_str).unwrap_or("Nimble"),
         ),
         Some("trace") => cmd_trace(args),
+        Some("verify") => cmd_verify(args),
         Some("infer") => cmd_infer(args),
         Some("serve") => cmd_serve(args),
         Some("train") => cmd_train(args),
@@ -68,7 +83,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         None => {
             println!(
                 "nimble — reproduction of Nimble (NeurIPS 2020)\n\n\
-                 usage: nimble <figures|models|assign|replay|sim|trace|infer|serve|train> [args]\n\
+                 usage: nimble <figures|models|assign|replay|sim|trace|verify|infer|serve|train> [args]\n\
                  see rust/src/main.rs docs for details"
             );
             Ok(())
@@ -303,6 +318,115 @@ fn cmd_trace(args: &[String]) -> Result<()> {
         "\nDES total with calibrated costs: {} (overlay both JSON files in Perfetto)",
         fmt_secs(predicted.total_s)
     );
+    Ok(())
+}
+
+/// `nimble verify`: static plan certification. Compiles a model's
+/// replay tape + arena plan exactly as the serving build path does and
+/// runs the AoT verifier (`aot::verify`) over them, printing the
+/// diagnostic table with witness interleavings and optionally a
+/// machine-readable JSON report. `--all` sweeps the model zoo (CI runs
+/// this and archives the reports); `--inject` applies one seeded
+/// mutation first to demonstrate the analyzer catching a planted bug.
+fn cmd_verify(args: &[String]) -> Result<()> {
+    use nimble::aot::memory::{happens_before_conflicts, plan_with_conflicts, ArenaPlan};
+    use nimble::aot::tape::ReplayTape;
+    use nimble::aot::verify::mutate::{mutate, MutationKind};
+    use nimble::aot::verify::verify_with_arena;
+    use nimble::stream::rewrite::{rewrite, rewrite_single_stream};
+    use nimble::util::Pcg32;
+
+    let usage = "usage: nimble verify <model>|--all [--batch N] [--single] [--json PATH] \
+                 [--out DIR] [--inject CLASS --seed S]";
+    let batch: usize = flag(args, "--batch").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let single = args.iter().any(|a| a == "--single");
+
+    let compile = |model: &str| -> Result<(ReplayTape, ArenaPlan)> {
+        let g = models::build(model, batch);
+        let plan = if single {
+            rewrite_single_stream(&g)
+        } else {
+            rewrite(&g, MatchingAlgo::HopcroftKarp)
+        };
+        let tape = ReplayTape::for_op_graph(&g, &plan, 4096);
+        let arena = plan_with_conflicts(&tape.slot_bytes(), &happens_before_conflicts(&tape));
+        Ok((tape, arena))
+    };
+
+    if args.iter().any(|a| a == "--all") {
+        let out_dir = flag(args, "--out");
+        if let Some(dir) = &out_dir {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut t = Table::new(vec![
+            "model", "records", "streams", "events", "hb edges", "alias pairs", "diags",
+        ]);
+        let mut dirty = 0usize;
+        for spec in models::MODELS {
+            let (tape, arena) = compile(spec.name)?;
+            let report = verify_with_arena(&tape, &arena);
+            dirty += usize::from(!report.is_clean());
+            t.row(vec![
+                spec.name.to_string(),
+                report.n_ops.to_string(),
+                report.n_streams.to_string(),
+                report.n_events.to_string(),
+                report.hb_edges.to_string(),
+                report.alias_pairs_checked.to_string(),
+                report.diagnostics.len().to_string(),
+            ]);
+            if let Some(dir) = &out_dir {
+                let path = std::path::Path::new(dir).join(format!("{}_verify.json", spec.name));
+                std::fs::write(&path, report.to_json())?;
+            }
+            if !report.is_clean() {
+                println!("== {} ==\n{}", spec.name, report.render());
+            }
+        }
+        println!("{}", t.render());
+        if let Some(dir) = &out_dir {
+            println!("(JSON reports written to {dir}/)");
+        }
+        anyhow::ensure!(dirty == 0, "{dirty} model(s) failed static plan verification");
+        println!("model zoo: every compiled plan verified clean ✓");
+        return Ok(());
+    }
+
+    let model = args.get(1).filter(|a| !a.starts_with("--")).context(usage)?;
+    let (mut tape, mut arena) = compile(model)?;
+    if let Some(class) = flag(args, "--inject") {
+        let kind = match class.as_str() {
+            "drop-sync" => MutationKind::DropSync,
+            "retarget-wait" => MutationKind::RetargetWait,
+            "swap-streams" => MutationKind::SwapStreams,
+            "shrink-offset" => MutationKind::ShrinkOffset,
+            other => bail!("unknown mutation class `{other}` — {usage}"),
+        };
+        let seed: u64 = flag(args, "--seed").map(|s| s.parse()).transpose()?.unwrap_or(1);
+        let mut rng = Pcg32::new(seed);
+        let m = mutate(&tape, &arena, kind, &mut rng).with_context(|| {
+            format!("no {} mutation breaks this plan (try another seed or model)", kind.name())
+        })?;
+        println!("injected {}: {}", m.kind.name(), m.description);
+        tape = m.tape;
+        arena = m.arena;
+    }
+    let report = verify_with_arena(&tape, &arena);
+    println!("{model} (batch {batch}{}):", if single { ", single-stream" } else { "" });
+    print!("{}", report.render());
+    if let Some(path) = flag(args, "--json") {
+        std::fs::write(&path, report.to_json())?;
+        println!("(JSON report written to {path})");
+    }
+    if flag(args, "--inject").is_some() {
+        anyhow::ensure!(
+            !report.is_clean(),
+            "verifier MISSED the injected mutation — this is a verifier bug"
+        );
+        println!("verifier caught the injected mutation ✓");
+        return Ok(());
+    }
+    anyhow::ensure!(report.is_clean(), "static plan verification failed");
     Ok(())
 }
 

@@ -71,6 +71,7 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use lanes::{LaneClient, LaneConfig, LaneServer, ScaleOptions};
 pub use metrics::{LaneStat, ServingReport};
 pub use queue::Bounded;
+pub use crate::aot::verify::VerifyMode;
 pub use crate::fault::{ChaosEngine, FaultPlan, RetryPolicy};
 pub use crate::telemetry::Telemetry;
 pub use runtime::{

@@ -62,6 +62,7 @@ use super::metrics::ServingReport;
 use super::server::{NimbleServer, ServerClient};
 use super::sim_engine::{TapeEngine, TapeEngineOptions};
 use crate::aot::memory::ArenaPool;
+use crate::aot::verify::VerifyMode;
 use crate::coordinator::InferEngine;
 use crate::engine::executor::SharedWorkerPool;
 use crate::fault::{ChaosEngine, FaultPlan, RetryPolicy};
@@ -325,6 +326,7 @@ pub struct RuntimeBuilder {
     single_thread: bool,
     serial: bool,
     fault: Option<FaultPlan>,
+    verify: VerifyMode,
 }
 
 impl Default for RuntimeBuilder {
@@ -341,6 +343,7 @@ impl Default for RuntimeBuilder {
             single_thread: false,
             serial: false,
             fault: None,
+            verify: VerifyMode::default(),
         }
     }
 }
@@ -554,6 +557,21 @@ impl RuntimeBuilder {
         self
     }
 
+    /// Static plan verification policy ([`crate::aot::verify`]): every
+    /// bucket's compiled tape and arena layout are certified at build
+    /// time — happens-before races, orphan waits, wait/record cycles,
+    /// arena aliasing, well-formedness. `Strict` makes any diagnostic a
+    /// build error (with the rendered report in the message), `Warn`
+    /// prints it to stderr and builds anyway, `Off` skips the pass.
+    /// Default: `Warn` in debug builds, `Off` in release. Verification
+    /// is build-time only — the replay hot path is identical under
+    /// every mode. Applies to the tape engines; the PJRT artifact path
+    /// has no replay tape to certify and ignores it.
+    pub fn verify(mut self, mode: VerifyMode) -> Self {
+        self.verify = mode;
+        self
+    }
+
     fn engine_opts(&self) -> Result<TapeEngineOptions> {
         let shared_pool = match &self.shared_pool {
             None => None,
@@ -570,6 +588,7 @@ impl RuntimeBuilder {
             shared_pool,
             fault: None,
             telemetry: self.lane.telemetry.clone(),
+            verify: self.verify,
         })
     }
 

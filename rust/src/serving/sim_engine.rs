@@ -65,6 +65,13 @@ pub struct TapeEngineOptions {
     /// ([`ExecOptions::telemetry`]); build also registers each graph's
     /// node names as span labels for trace export and calibration.
     pub telemetry: Option<crate::telemetry::Telemetry>,
+    /// Static plan verification policy: every bucket's compiled tape
+    /// and arena layout run through [`crate::aot::verify`] at build
+    /// time. `Strict` refuses to build on any diagnostic, `Warn` prints
+    /// the report to stderr, `Off` skips the pass; the default is
+    /// `Warn` in debug builds and `Off` in release. Build-time only —
+    /// the replay hot path never sees the verifier.
+    pub verify: crate::aot::verify::VerifyMode,
 }
 
 /// One independent replay context per compiled batch bucket.
@@ -176,6 +183,34 @@ impl TapeEngine {
                 out_len <= MAX_TASK_ELEMS,
                 "{name}: output larger than the substrate clamp"
             );
+            if opts.verify != crate::aot::verify::VerifyMode::Off {
+                // Certify the same artifact pair the context is about
+                // to execute: the compiled tape plus the arena layout
+                // its executor will resolve slot views from. Recomputing
+                // the layout here duplicates a little build-time work so
+                // the verifier stays a pure observer of the build path.
+                use crate::aot::memory::{happens_before_conflicts, plan_with_conflicts, ArenaPlan};
+                let bytes = tape.slot_bytes();
+                let arena = if opts.unshared_slots {
+                    ArenaPlan::unshared(&bytes)
+                } else {
+                    plan_with_conflicts(&bytes, &happens_before_conflicts(&tape))
+                };
+                let report = crate::aot::verify::verify_with_arena(&tape, &arena);
+                if !report.is_clean() {
+                    match opts.verify {
+                        crate::aot::verify::VerifyMode::Strict => anyhow::bail!(
+                            "{name} (bucket {batch}): static plan verification failed\n{}",
+                            report.render()
+                        ),
+                        _ => eprintln!(
+                            "warning: {name} (bucket {batch}): plan verifier found \
+                             diagnostics (building anyway under VerifyMode::Warn)\n{}",
+                            report.render()
+                        ),
+                    }
+                }
+            }
             let (per_in, per_out) = (in_len / batch, out_len / batch);
             if example_len == 0 {
                 example_len = per_in;

@@ -126,3 +126,58 @@ fn infinite_gpu_reaches_critical_path() {
     assert!(r.total_s >= cp * 0.99);
     assert!(r.total_s <= cp * 2.5, "makespan {} vs critical path {cp}", r.total_s);
 }
+
+#[test]
+fn happens_before_closure_is_respected_by_the_des_schedule() {
+    // The verifier's independently-built happens-before closure
+    // (`aot::verify::hb`) must agree with the discrete-event simulator's
+    // actual schedule: whenever the closure orders op i before op j, the
+    // DES never starts j's kernel before i's completes. This cross-checks
+    // the static analysis against the third implementation of the same
+    // semantics (per-stream FIFO + record/wait events).
+    use nimble::aot::tape::ReplayTape;
+    use nimble::aot::verify::hb;
+    use nimble::matching::MatchingAlgo;
+    use nimble::sim::{kernel_cost, simulate_tape, HostProfile};
+    use nimble::stream::rewrite::rewrite;
+
+    let dev = GpuSpec::v100();
+    for name in ["mini_inception", "resnet50_cifar", "inception_v3"] {
+        let g = models::build(name, 1);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = ReplayTape::for_op_graph(&g, &plan, 4096);
+        let costs: Vec<_> = (0..g.n_nodes()).map(|v| kernel_cost(g.node(v), &dev)).collect();
+        let sim = simulate_tape(&tape, &costs, HostProfile::nimble(), dev.clone());
+
+        let closure = hb::closure(&tape);
+        assert!(closure.is_acyclic(), "{name}: a legal tape's closure must be acyclic");
+        let mut span_of = vec![usize::MAX; g.n_nodes()];
+        for (k, s) in sim.spans.iter().enumerate() {
+            span_of[s.node] = k;
+        }
+        let mut checked = 0usize;
+        for i in 0..tape.n_ops() {
+            for j in 0..tape.n_ops() {
+                if i == j || !closure.happens_before(i, j) {
+                    continue;
+                }
+                let (a, b) = (span_of[tape.op(i).node as usize], span_of[tape.op(j).node as usize]);
+                if a == usize::MAX || b == usize::MAX {
+                    continue; // node not simulated (no span) — nothing to order
+                }
+                let (a, b) = (&sim.spans[a], &sim.spans[b]);
+                assert!(
+                    b.start_s >= a.end_s - 1e-12,
+                    "{name}: op #{i} (node {}) happens-before op #{j} (node {}), yet the DES \
+                     started the successor at {}s before the predecessor ended at {}s",
+                    a.node,
+                    b.node,
+                    b.start_s,
+                    a.end_s
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > 0, "{name}: the closure must order at least one pair");
+    }
+}

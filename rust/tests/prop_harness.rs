@@ -1095,3 +1095,142 @@ fn chaos_faults_leave_survivors_bit_identical_and_accounting_closed() {
         Ok(())
     });
 }
+
+/// The static plan verifier (`aot::verify`): zero false positives on
+/// seeded legal plans under both arena layouts, every oracle-certified
+/// mutant killed with the diagnostic kind its class predicts (plus a
+/// concrete witness for races and alias overlaps), and the
+/// `dependencies_are_synchronized` shim staying equivalent to the
+/// legacy operational oracle it replaced — on legal tapes and mutants
+/// alike.
+#[test]
+fn plan_verifier_accepts_legal_plans_and_kills_every_mutant() {
+    use nimble::aot::memory::{happens_before_conflicts, plan_with_conflicts, ArenaPlan};
+    use nimble::aot::verify::mutate::{mutate, MutationKind, ALL_MUTATIONS};
+    use nimble::aot::verify::verify_with_arena;
+    use nimble::aot::{DiagKind, ReplayTape};
+    use nimble::matching::MatchingAlgo;
+    use nimble::stream::rewrite::rewrite;
+
+    // `check_from` takes a `Fn` closure, so kill counters live behind a
+    // `RefCell`; they only exist to prove each class actually fired.
+    let kills = std::cell::RefCell::new([0usize; ALL_MUTATIONS.len()]);
+    check_from("plan-verifier", base_seed() ^ 0x7E81_F1ED, 120, |rng| {
+        let n_nodes = rng.gen_range_inclusive(8, 64);
+        let batch = *rng.choose(&[1usize, 2, 4]);
+        let g = random_cell(rng, n_nodes, batch);
+        let plan = rewrite(&g, MatchingAlgo::HopcroftKarp);
+        let tape = ReplayTape::for_op_graph(&g, &plan, 4096);
+        let bytes = tape.slot_bytes();
+        let packed = plan_with_conflicts(&bytes, &happens_before_conflicts(&tape));
+        let unshared = ArenaPlan::unshared(&bytes);
+
+        // Zero false positives: the optimizer's own output verifies
+        // clean under both layouts, and the shim agrees with the oracle.
+        for (label, arena) in [("packed", &packed), ("unshared", &unshared)] {
+            let report = verify_with_arena(&tape, arena);
+            ensure(report.is_clean(), || {
+                format!("false positive on a legal plan ({label} arena):\n{}", report.render())
+            })?;
+        }
+        ensure(
+            tape.dependencies_are_synchronized() == tape.dependencies_are_synchronized_legacy(),
+            || "shim disagrees with the legacy oracle on a legal tape".to_string(),
+        )?;
+
+        // Zero false negatives: every mutant the legacy oracle certifies
+        // broken (or, for shrink-offset, broken by construction) must be
+        // flagged with a kind from its class's expected set.
+        for (class, kind) in ALL_MUTATIONS.into_iter().enumerate() {
+            let Some(m) = mutate(&tape, &packed, kind, rng) else { continue };
+            let report = verify_with_arena(&m.tape, &m.arena);
+            ensure(!report.is_clean(), || {
+                format!("false negative: {} ({}) verified clean", kind.name(), m.description)
+            })?;
+            let allowed: &[DiagKind] = match kind {
+                MutationKind::DropSync => &[DiagKind::Race, DiagKind::UseBeforeDef],
+                MutationKind::RetargetWait | MutationKind::SwapStreams => {
+                    &[DiagKind::Race, DiagKind::UseBeforeDef, DiagKind::HbCycle]
+                }
+                MutationKind::ShrinkOffset => &[DiagKind::AliasOverlap],
+            };
+            ensure(allowed.iter().any(|&k| report.has(k)), || {
+                format!(
+                    "{} ({}) flagged, but with unexpected kinds:\n{}",
+                    kind.name(),
+                    m.description,
+                    report.render()
+                )
+            })?;
+            for d in &report.diagnostics {
+                if matches!(d.kind, DiagKind::Race | DiagKind::AliasOverlap) {
+                    ensure(d.witness.is_some(), || {
+                        format!("{} diagnostic lacks a witness: {}", d.kind.name(), d.message)
+                    })?;
+                }
+            }
+            ensure(
+                m.tape.dependencies_are_synchronized()
+                    == m.tape.dependencies_are_synchronized_legacy(),
+                || format!("shim disagrees with the legacy oracle on mutant: {}", m.description),
+            )?;
+            kills.borrow_mut()[class] += 1;
+        }
+        Ok(())
+    });
+    for (kind, &n) in ALL_MUTATIONS.iter().zip(kills.borrow().iter()) {
+        assert!(
+            n >= 10,
+            "mutation class {} produced only {n} mutants over 120 cases — \
+             the kill property barely exercised it",
+            kind.name()
+        );
+    }
+}
+
+/// `builder().verify(Strict)` is a build-time gate only: it accepts the
+/// optimizer's (clean) plans and serves outputs bit-identical to a
+/// `verify(Off)` twin — certification adds nothing to the replay path.
+#[test]
+fn strict_verification_is_execution_neutral() {
+    use nimble::serving::VerifyMode;
+    check_from("verify-strict-neutral", base_seed() ^ 0x05_7121C7, 10, |rng| {
+        let n_nodes = rng.gen_range_inclusive(8, 40);
+        let graph_seed = rng.next_u64();
+        let buckets = random_buckets(rng);
+        let build = move |b: usize| random_cell(&mut Pcg32::new(graph_seed), n_nodes, b);
+        let mk = |mode: VerifyMode| {
+            Runtime::builder()
+                .label("rand-cell")
+                .graph_fn(build)
+                .buckets(&buckets)
+                .lane_config(roomy_config(Duration::from_micros(200)))
+                .verify(mode)
+                .build()
+        };
+        let strict = mk(VerifyMode::Strict)
+            .map_err(|e| format!("Strict refused a legal plan (graph seed {graph_seed:#x}): {e:#}"))?;
+        let off = mk(VerifyMode::Off).map_err(|e| format!("baseline build failed: {e:#}"))?;
+        for i in 0..3 {
+            let input = random_input(rng, RANDOM_CELL_EXAMPLE_LEN);
+            let a = strict
+                .infer(InferRequest::new(input.clone()))
+                .map_err(|e| format!("strict infer: {e:#}"))?;
+            let b = off.infer(InferRequest::new(input)).map_err(|e| format!("off infer: {e:#}"))?;
+            ensure(a.len() == b.len(), || {
+                format!("request {i}: output lengths differ ({} vs {})", a.len(), b.len())
+            })?;
+            for (j, (x, y)) in a.iter().zip(&b).enumerate() {
+                ensure(x.to_bits() == y.to_bits(), || {
+                    format!(
+                        "request {i} diverged at element {j}: {x:?} vs {y:?} \
+                         (graph seed {graph_seed:#x})"
+                    )
+                })?;
+            }
+        }
+        let _ = strict.shutdown().map_err(|e| format!("shutdown failed: {e:#}"))?;
+        let _ = off.shutdown().map_err(|e| format!("shutdown failed: {e:#}"))?;
+        Ok(())
+    });
+}
