@@ -1,0 +1,326 @@
+//! Cluster-layer benchmark: data-parallel replica groups behind the
+//! deadline-aware router, judged against `sim::simulate_cluster` with
+//! the same measured-vs-predicted discipline as the serving bench.
+//!
+//! Three entries, written to `BENCH_cluster.json`:
+//!
+//! 1. **sim_exact** — a seeded closed-loop 2-replica p2c run whose
+//!    completed / shed / per-replica-admitted counts the cluster DES
+//!    must reproduce *bit-for-bit* (door sheds consume no router draw,
+//!    closed-loop pressure is identically zero, so routing reduces to
+//!    the shared seeded draw protocol). Asserted, not just reported —
+//!    this is the ISSUE's acceptance gate.
+//! 2. **scale** — 1 vs 2 vs 4 replicas under the same open-loop
+//!    deadline workload: measured throughput/shed next to the DES
+//!    prediction for the same arrival schedule in its service units.
+//! 3. **router** — power-of-two-choices vs round-robin with replica 0
+//!    skewed slow by a deterministic per-op delay fault: p2c's
+//!    pressure signal routes around the slow replica, round-robin
+//!    blindly feeds it half the traffic.
+
+mod common;
+use common::section;
+use nimble::aot::tape::ReplayTape;
+use nimble::cluster::Cluster;
+use nimble::fault::FaultPlan;
+use nimble::matching::MatchingAlgo;
+use nimble::ops::{GraphBuilder, OpGraph};
+use nimble::serving::{InferOutcome, InferRequest};
+use nimble::sim::{
+    kernel_cost, simulate_cluster, simulate_tape, ClusterSimPolicy, ClusterTraffic, GpuSpec,
+    HostProfile, KernelCost,
+};
+use nimble::stream::rewrite::rewrite;
+use nimble::util::Pcg32;
+use std::time::{Duration, Instant};
+
+/// Same deep conv chain as the serving bench: single-stream tapes, so
+/// per-replica service time is stable and the DES service unit is
+/// meaningful.
+fn chain_graph(batch: usize, depth: usize) -> OpGraph {
+    let mut b = GraphBuilder::new();
+    let mut x = b.input(&[batch, 16, 16, 16]);
+    for _ in 0..depth {
+        x = b.conv_bn_relu(x, 16, 3, 1);
+    }
+    let pooled = b.gap(x);
+    let _logits = b.linear(pooled, 10);
+    b.finish()
+}
+
+const DEPTH: usize = 12;
+
+fn tape_and_costs() -> (ReplayTape, Vec<KernelCost>) {
+    let g = chain_graph(1, DEPTH);
+    let dev = GpuSpec::v100();
+    let costs: Vec<KernelCost> = (0..g.n_nodes()).map(|v| kernel_cost(g.node(v), &dev)).collect();
+    let tape = ReplayTape::for_op_graph(&g, &rewrite(&g, MatchingAlgo::HopcroftKarp), 4096);
+    (tape, costs)
+}
+
+fn chain_cluster(replicas: usize) -> nimble::cluster::ClusterBuilder {
+    Cluster::builder()
+        .label("chain")
+        .graph_fn(|b| chain_graph(b, DEPTH))
+        .buckets(&[1])
+        .replicas(replicas)
+        .max_wait(Duration::from_millis(1))
+}
+
+/// (1) Closed-loop exact match: live cluster vs `simulate_cluster`,
+/// same seed, bit-identical counts.
+fn sim_exact() -> String {
+    section("cluster DES exact match (closed loop, 2 replicas, seeded p2c)");
+    const N: usize = 24;
+    const SEED: u64 = 0xC10C;
+
+    // Seeded expiry mask: roughly a third of the requests arrive
+    // already expired and must shed at the door, consuming no draw.
+    let mut rng = Pcg32::new(0xC1A0);
+    let expired: Vec<bool> = (0..N).map(|_| rng.gen_range_inclusive(0, 2) == 0).collect();
+    let n_expired = expired.iter().filter(|e| **e).count();
+
+    let cluster = chain_cluster(2).route_p2c(SEED).build().expect("exact cluster");
+    let len = cluster.example_len();
+    let (mut completed, mut shed) = (0usize, 0usize);
+    for (i, is_expired) in expired.iter().enumerate() {
+        let input: Vec<f32> = (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+        let req = InferRequest::new(input);
+        let req = if *is_expired { req.deadline(Instant::now()) } else { req };
+        // Closed loop: wait for each outcome before the next submit, so
+        // every routing decision sees identically-zero pressure.
+        match cluster.submit(req).unwrap().outcome().unwrap() {
+            InferOutcome::Output(_) => completed += 1,
+            InferOutcome::DeadlineShed => shed += 1,
+            InferOutcome::Failed(e) => panic!("exact-run request {i} failed: {e}"),
+        }
+    }
+    let admitted: Vec<u64> = cluster.admitted_per_replica();
+    let report = cluster.shutdown().expect("exact report");
+    assert!(report.accounting_closes(), "cluster accounting must close:\n{}", report.render());
+
+    let (tape, costs) = tape_and_costs();
+    let requests: Vec<(f64, f64)> =
+        expired.iter().map(|e| (0.0, if *e { 0.0 } else { f64::INFINITY })).collect();
+    let des = simulate_cluster(
+        &ClusterTraffic { tape: &tape, costs: &costs, requests: &requests },
+        HostProfile::nimble(),
+        GpuSpec::v100(),
+        ClusterSimPolicy {
+            replicas: 2,
+            lanes_per_replica: 1,
+            p2c: true,
+            seed: SEED,
+            closed_loop: true,
+        },
+    );
+    let des_admitted: Vec<u64> =
+        des.admitted_per_replica().iter().map(|&a| a as u64).collect();
+
+    // The acceptance gate: measured and simulated runs agree exactly.
+    assert_eq!(completed, des.completed(), "completed must match the DES exactly");
+    assert_eq!(shed, des.shed(), "shed must match the DES exactly");
+    assert_eq!(shed, n_expired, "exactly the expired requests shed");
+    assert_eq!(admitted, des_admitted, "per-replica routing must match the DES exactly");
+    let pass = true;
+    println!(
+        "exact: measured completed={completed} shed={shed} admitted={admitted:?}  \
+         DES completed={} shed={} admitted={des_admitted:?}  [PASS]",
+        des.completed(),
+        des.shed(),
+    );
+
+    format!(
+        "{{\n  \"workload\": \"cluster-exact-chain\",\n  \"chain_depth\": {DEPTH}, \
+         \"replicas\": 2, \"router_seed\": {SEED}, \"n_requests\": {N}, \
+         \"n_expired\": {n_expired},\n  \
+         \"measured\": {{\"completed\": {completed}, \"shed\": {shed}, \
+         \"admitted_per_replica\": {admitted:?}}},\n  \
+         \"des\": {{\"completed\": {}, \"shed\": {}, \
+         \"admitted_per_replica\": {des_admitted:?}}},\n  \"pass\": {pass}\n}}",
+        des.completed(),
+        des.shed(),
+    )
+}
+
+/// (2) Replica scaling: the same open-loop deadline workload against
+/// 1, 2, and 4 replicas, measured vs predicted.
+fn scale() -> String {
+    section("replica scaling (open loop, deadline traffic, 1 vs 2 vs 4 replicas)");
+    const N: usize = 32;
+    // Arrivals at 0.6× the service time saturate one replica; deadlines
+    // at 3× the service time give survivors room.
+    const ARRIVE_X: f64 = 0.6;
+    const BUDGET_X: f64 = 3.0;
+
+    // Measured service time of one warm replica, the live time unit.
+    let service_s = {
+        let cluster = chain_cluster(1).build().expect("probe cluster");
+        let len = cluster.example_len();
+        let zeros = vec![0.0f32; len];
+        cluster.infer(InferRequest::new(zeros.clone())).expect("warm");
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            cluster.infer(InferRequest::new(zeros.clone())).expect("probe");
+        }
+        let s = t0.elapsed().as_secs_f64() / 4.0;
+        let _ = cluster.shutdown().expect("probe report");
+        s
+    };
+
+    let (tape, costs) = tape_and_costs();
+    let des_service_s =
+        simulate_tape(&tape, &costs, HostProfile::nimble(), GpuSpec::v100()).total_s;
+
+    let mut entries = Vec::new();
+    let mut measured_shed = Vec::new();
+    let mut des_shed = Vec::new();
+    for &replicas in &[1usize, 2, 4] {
+        let cluster = chain_cluster(replicas).route_p2c(7).build().expect("scale cluster");
+        let len = cluster.example_len();
+        // Warm every replica's lane path before the timed phase.
+        for _ in 0..2 * replicas {
+            cluster.infer(InferRequest::new(vec![0.0; len])).expect("warmup");
+        }
+        let mut rng = Pcg32::new(0x5CA1);
+        let budget = Duration::from_secs_f64(BUDGET_X * service_s);
+        let gap = Duration::from_secs_f64(ARRIVE_X * service_s);
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(N);
+        for _ in 0..N {
+            let input: Vec<f32> = (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+            pending.push(cluster.submit(InferRequest::new(input).deadline_in(budget)).unwrap());
+            std::thread::sleep(gap);
+        }
+        let (mut completed, mut shed) = (0usize, 0usize);
+        for t in pending {
+            match t.outcome().unwrap() {
+                InferOutcome::Output(_) => completed += 1,
+                InferOutcome::DeadlineShed => shed += 1,
+                InferOutcome::Failed(e) => panic!("scale request failed: {e}"),
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let report = cluster.shutdown().expect("scale report");
+        assert!(report.accounting_closes(), "accounting must close:\n{}", report.render());
+
+        // DES prediction of the same schedule in its own service units.
+        let requests: Vec<(f64, f64)> = (0..N)
+            .map(|i| {
+                let at = i as f64 * ARRIVE_X * des_service_s;
+                (at, at + BUDGET_X * des_service_s)
+            })
+            .collect();
+        let des = simulate_cluster(
+            &ClusterTraffic { tape: &tape, costs: &costs, requests: &requests },
+            HostProfile::nimble(),
+            GpuSpec::v100(),
+            ClusterSimPolicy {
+                replicas,
+                lanes_per_replica: 1,
+                p2c: true,
+                seed: 7,
+                closed_loop: false,
+            },
+        );
+        println!(
+            "{replicas} replica(s): measured completed={completed} shed={shed} \
+             ({:.1} req/s)  DES completed={} shed={}",
+            completed as f64 / wall_s,
+            des.completed(),
+            des.shed(),
+        );
+        measured_shed.push(shed);
+        des_shed.push(des.shed());
+        entries.push(format!(
+            "{{\"replicas\": {replicas}, \"measured_completed\": {completed}, \
+             \"measured_shed\": {shed}, \"measured_rps\": {:.2}, \
+             \"des_completed\": {}, \"des_shed\": {}}}",
+            completed as f64 / wall_s,
+            des.completed(),
+            des.shed(),
+        ));
+    }
+    // Scaling out must not increase shedding, measured and predicted.
+    let pass = measured_shed[2] <= measured_shed[0] && des_shed[2] <= des_shed[0];
+    println!("scale [{}]", if pass { "PASS" } else { "FAIL" });
+    format!(
+        "{{\n  \"workload\": \"cluster-scale-chain\",\n  \"chain_depth\": {DEPTH}, \
+         \"n_requests\": {N}, \"arrive_x\": {ARRIVE_X}, \"budget_x\": {BUDGET_X},\n  \
+         \"runs\": [{}],\n  \"pass\": {pass}\n}}",
+        entries.join(", ")
+    )
+}
+
+/// (3) p2c vs round-robin with a deterministically slow replica 0:
+/// pressure-aware routing sheds less than blind rotation.
+fn router_delta() -> String {
+    section("router policy delta (p2c vs round-robin, replica 0 skewed slow)");
+    const N: usize = 16;
+    // Every op on replica 0 stalls 4 ms: a DEPTH-op chain batch takes
+    // tens of ms there vs sub-ms on replica 1.
+    let slow = FaultPlan { op_delay: 1.0, delay: Duration::from_millis(4), ..FaultPlan::default() };
+    let budget = Duration::from_millis(250);
+
+    let run = |p2c: bool| -> (usize, usize, f64) {
+        let builder = chain_cluster(2).replica_fault_plan(0, slow.clone());
+        let builder = if p2c { builder.route_p2c(11) } else { builder.route_round_robin() };
+        let cluster = builder.build().expect("router cluster");
+        let len = cluster.example_len();
+        // Warm the fast replica only (one closed-loop request may land
+        // on either; warm both to be fair).
+        for _ in 0..2 {
+            cluster.infer(InferRequest::new(vec![0.0; len])).expect("warmup");
+        }
+        let mut rng = Pcg32::new(0xDE17A);
+        let t0 = Instant::now();
+        let pending: Vec<_> = (0..N)
+            .map(|_| {
+                let input: Vec<f32> = (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+                cluster.submit(InferRequest::new(input).deadline_in(budget)).unwrap()
+            })
+            .collect();
+        let (mut completed, mut shed) = (0usize, 0usize);
+        for t in pending {
+            match t.outcome().unwrap() {
+                InferOutcome::Output(_) => completed += 1,
+                InferOutcome::DeadlineShed => shed += 1,
+                InferOutcome::Failed(e) => panic!("router-delta request failed: {e}"),
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let report = cluster.shutdown().expect("router report");
+        assert!(report.accounting_closes(), "accounting must close:\n{}", report.render());
+        (completed, shed, wall_s)
+    };
+
+    let (rr_completed, rr_shed, rr_wall) = run(false);
+    let (p2c_completed, p2c_shed, p2c_wall) = run(true);
+    // Round-robin feeds the slow replica half the burst and must miss
+    // deadlines there; p2c routes around it once pressure diverges.
+    let pass = p2c_shed <= rr_shed;
+    println!(
+        "router: RR completed={rr_completed} shed={rr_shed} ({rr_wall:.3}s)  \
+         p2c completed={p2c_completed} shed={p2c_shed} ({p2c_wall:.3}s)  [{}]",
+        if pass { "PASS" } else { "FAIL" }
+    );
+    format!(
+        "{{\n  \"workload\": \"cluster-router-delta\",\n  \"chain_depth\": {DEPTH}, \
+         \"n_requests\": {N}, \"slow_replica_op_delay_ms\": 4, \"budget_ms\": 250,\n  \
+         \"round_robin\": {{\"completed\": {rr_completed}, \"shed\": {rr_shed}, \
+         \"wall_s\": {rr_wall:.4}}},\n  \
+         \"p2c\": {{\"completed\": {p2c_completed}, \"shed\": {p2c_shed}, \
+         \"wall_s\": {p2c_wall:.4}}},\n  \"pass\": {pass}\n}}"
+    )
+}
+
+fn main() {
+    let exact_entry = sim_exact();
+    let scale_entry = scale();
+    let router_entry = router_delta();
+    let json = format!("[\n{exact_entry},\n{scale_entry},\n{router_entry}\n]\n");
+    match std::fs::write("BENCH_cluster.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_cluster.json"),
+        Err(e) => println!("\ncould not write BENCH_cluster.json: {e}"),
+    }
+}

@@ -1,0 +1,1283 @@
+//! Cluster layer: data-parallel device replica groups above
+//! [`Runtime`] — ROADMAP item 1's multi-device serving tier.
+//!
+//! A [`Cluster`] owns N **replicas** of one model spec. Each replica
+//! is a full [`Runtime`] with its *own*
+//! [`SharedWorkerPool`](crate::engine::executor::SharedWorkerPool)
+//! (its device), its own [`ArenaPool`] (its memory), its own lane group and
+//! optional [`Telemetry`] — replicas share nothing at run time, which
+//! is what makes them independently drainable and killable. In front
+//! of them sits a deadline-aware **router**:
+//!
+//! - Requests whose deadline already expired are shed *at the door*,
+//!   before routing (resolved [`InferOutcome::DeadlineShed`], counted
+//!   in `ClusterReport::router_shed`).
+//! - Everything else routes by **power-of-two-choices** on per-replica
+//!   pressure — in-flight requests (staged + queued + executing) and
+//!   the EWMA of observed queue delay — or by round-robin
+//!   ([`ClusterBuilder::route_round_robin`], the bench baseline).
+//!   Bucket hints and deadlines travel with the request; each
+//!   replica's own EDF batcher and admission estimator still apply.
+//! - The whole decision procedure is mirrored exactly by
+//!   [`crate::sim::simulate_cluster`], so routing policies are judged
+//!   offline with the same measured-vs-predicted discipline as the
+//!   lane/chaos/EDF sims (`benches/bench_cluster.rs` pins a seeded
+//!   closed-loop run to the sim bit-for-bit).
+//!
+//! **Lifecycle.** [`Cluster::drain_replica`] flips a replica out of
+//! the routable set, then flushes everything it had admitted
+//! ([`Runtime::drain`] semantics) — its in-flight tickets resolve
+//! normally and *new* traffic reroutes to the survivors.
+//! [`Cluster::kill_replica`] is the ungraceful variant used with
+//! per-replica fault plans ([`ClusterBuilder::fault_plan`] derives a
+//! distinct stream per replica via [`FaultPlan::derive_replica`]): a
+//! failed replica's dead-lettered requests resolve as
+//! [`InferOutcome::Failed`], and the cluster ticket **fails over** —
+//! re-admitting the saved request on a surviving replica (counted in
+//! `ClusterReport::failovers`). Tickets never dangle: every
+//! [`ClusterTicket`] resolves exactly once no matter how replicas die.
+//!
+//! **SLO coupling.** [`ClusterBuilder::slo`] sets the same target shed
+//! rate on every replica's lane controller (which force-spawns lanes
+//! first) AND arms a cluster-level controller: when the cluster-wide
+//! shed rate stays above target for two consecutive observation
+//! windows — i.e. per-replica lane scaling has saturated — a new
+//! replica is built from the shared spec and joins the routable set,
+//! up to [`ClusterBuilder::max_replicas`].
+//!
+//! **Accounting.** With `submitted` the accepted submissions,
+//! `router_shed` the door sheds and `failovers` the re-admissions:
+//! `Σ admitted_r == submitted − router_shed + failovers`, every
+//! replica's own `admitted == n_requests + deadline_shed + failed`
+//! invariant still holds, and client-side outcomes satisfy
+//! `completed + shed + failed == submitted`. The prop harness
+//! (`tests/prop_harness.rs`) closes all three under drain/kill churn.
+
+mod router;
+
+pub use router::RoutePolicy;
+
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::aot::memory::ArenaPool;
+use crate::aot::verify::VerifyMode;
+use crate::fault::{FaultPlan, RetryPolicy};
+use crate::ops::OpGraph;
+use crate::serving::runtime::shed_error;
+use crate::serving::{
+    InferOutcome, InferRequest, LaneConfig, Runtime, RuntimeHandle, ScaleOptions,
+    ServingReport, Ticket,
+};
+use crate::telemetry::Telemetry;
+use router::RouterState;
+
+/// EWMA smoothing for the per-replica queue-delay signal (same α as
+/// the lane dispatcher's admission estimator).
+const EWMA_ALPHA: f64 = 0.3;
+/// Outcomes per SLO observation window of the replica-scaling
+/// controller.
+const SLO_WINDOW: u64 = 32;
+/// Consecutive breached windows before a replica is spawned — one
+/// window of grace for the lane-level controller to catch up first.
+const SLO_BREACHES_TO_SCALE: u32 = 2;
+
+/// What the replicas serve: a model-zoo name or an arbitrary
+/// per-bucket graph builder (mirrors `RuntimeBuilder`'s sources; the
+/// spec is shared, each replica builds its own engines from it).
+enum ClusterSource {
+    Model(String),
+    Graph(Arc<dyn Fn(usize) -> OpGraph + Send + Sync>),
+}
+
+/// Where a replica is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// In the routable set.
+    Live,
+    /// [`Cluster::drain_replica`] in progress: out of the routable
+    /// set, flushing everything already admitted.
+    Draining,
+    /// Drained cleanly; its final report is folded into the cluster's.
+    Retired,
+    /// [`Cluster::kill_replica`]ed; dead-lettered work failed over.
+    Failed,
+}
+
+/// Hot per-replica counters, shared between the slot and every
+/// [`ClusterTicket`] routed to it (tickets update them lock-free at
+/// resolution).
+struct ReplicaStats {
+    /// Unresolved tickets routed here: staged + queued + executing.
+    in_flight: AtomicUsize,
+    /// Requests ever admitted here (routing signature; the exact bench
+    /// pins it against the DES).
+    admitted: AtomicU64,
+    /// EWMA of observed submit→resolve delay, nanoseconds (0 = cold).
+    /// Advisory: plain load/store, last writer wins.
+    ewma_ns: AtomicU64,
+}
+
+impl ReplicaStats {
+    fn new() -> Arc<ReplicaStats> {
+        Arc::new(ReplicaStats {
+            in_flight: AtomicUsize::new(0),
+            admitted: AtomicU64::new(0),
+            ewma_ns: AtomicU64::new(0),
+        })
+    }
+
+    fn note_resolved(&self, elapsed: Duration) {
+        self.in_flight.fetch_sub(1, Ordering::AcqRel);
+        let sample = elapsed.as_nanos().min(u64::MAX as u128) as u64;
+        let old = self.ewma_ns.load(Ordering::Relaxed);
+        let next = if old == 0 {
+            sample
+        } else {
+            (EWMA_ALPHA * sample as f64 + (1.0 - EWMA_ALPHA) * old as f64) as u64
+        };
+        self.ewma_ns.store(next.max(1), Ordering::Relaxed);
+    }
+}
+
+/// One device replica: its runtime (taken on drain/kill), the labeled
+/// handle used for routing and metrics, and the pools it exclusively
+/// owns.
+struct ReplicaSlot {
+    runtime: Option<Runtime>,
+    handle: RuntimeHandle,
+    arena_pool: ArenaPool,
+    telemetry: Option<Telemetry>,
+    state: ReplicaState,
+    stats: Arc<ReplicaStats>,
+    /// Final report, stored when the replica leaves the routable set.
+    report: Option<ServingReport>,
+}
+
+/// Everything shared between the cluster façade, its tickets, and the
+/// scaling controller.
+struct ClusterShared {
+    spec: ClusterSpec,
+    replicas: RwLock<Vec<ReplicaSlot>>,
+    /// One decision mutex: routing decisions happen in submission
+    /// order, the property the DES mirror depends on.
+    router: Mutex<RouterState>,
+    /// Serializes replica spawns (the scaling controller).
+    scaling: Mutex<()>,
+    submitted: AtomicU64,
+    router_shed: AtomicU64,
+    failovers: AtomicU64,
+    replicas_spawned: AtomicU64,
+    slo: Option<SloCtl>,
+}
+
+struct SloCtl {
+    target: f64,
+    window: Mutex<SloWindow>,
+}
+
+#[derive(Default)]
+struct SloWindow {
+    total: u64,
+    shed: u64,
+    breaches: u32,
+}
+
+/// The shared model spec every replica is built from.
+struct ClusterSpec {
+    label: String,
+    source: ClusterSource,
+    buckets: Vec<usize>,
+    lane: LaneConfig,
+    workers_per_replica: Option<usize>,
+    worker_cap: Option<usize>,
+    fault: Option<FaultPlan>,
+    replica_faults: Vec<(usize, FaultPlan)>,
+    telemetry: bool,
+    verify: VerifyMode,
+    max_replicas: usize,
+    failover: usize,
+    policy: RoutePolicy,
+}
+
+impl ClusterSpec {
+    /// The fault plan replica `index` runs under: an explicit override
+    /// ([`ClusterBuilder::replica_fault_plan`]) or the base plan's
+    /// per-replica derivation — distinct decision streams per replica,
+    /// reproducible across respawns.
+    fn fault_for(&self, index: usize) -> Option<FaultPlan> {
+        if let Some((_, plan)) = self.replica_faults.iter().find(|(i, _)| *i == index) {
+            return Some(plan.clone());
+        }
+        self.fault.as_ref().map(|p| p.derive_replica(index))
+    }
+
+    /// Build replica `index`: its own arena pool, its own shared
+    /// worker pool (when sized), its own recorder — nothing shared.
+    fn build_replica(&self, index: usize) -> Result<ReplicaSlot> {
+        let arena_pool = ArenaPool::new();
+        let telemetry = self.telemetry.then(Telemetry::new);
+        let mut lane = self.lane.clone();
+        lane.telemetry = telemetry.clone();
+        let b = match &self.source {
+            ClusterSource::Model(name) => Runtime::builder().model(name),
+            ClusterSource::Graph(f) => {
+                let f = Arc::clone(f);
+                Runtime::builder().graph_fn(move |bucket| (*f)(bucket))
+            }
+        };
+        let mut b = b
+            .label(&format!("{}/replica{index}", self.label))
+            .buckets(&self.buckets)
+            .lane_config(lane)
+            .arena_pool(arena_pool.clone())
+            .verify(self.verify);
+        if let Some(workers) = self.workers_per_replica {
+            b = b.shared_pool(workers);
+        }
+        if let Some(cap) = self.worker_cap {
+            b = b.worker_cap(cap);
+        }
+        if let Some(plan) = self.fault_for(index) {
+            b = b.fault_plan(plan);
+        }
+        let runtime = b.build().with_context(|| format!("building replica {index}"))?;
+        let handle = runtime.handle().with_replica_label(index as u32);
+        Ok(ReplicaSlot {
+            runtime: Some(runtime),
+            handle,
+            arena_pool,
+            telemetry,
+            state: ReplicaState::Live,
+            stats: ReplicaStats::new(),
+            report: None,
+        })
+    }
+}
+
+impl ClusterShared {
+    /// Record one client-visible outcome in the SLO window; two
+    /// consecutive breached windows spawn a replica (the lane-level
+    /// controller inside each replica has had a full window to act
+    /// first — replica scale-out is the saturation escape hatch).
+    fn note_outcome(self: &Arc<Self>, shed: bool) {
+        let Some(ctl) = &self.slo else { return };
+        let scale = {
+            let mut w = ctl.window.lock().unwrap_or_else(|e| e.into_inner());
+            w.total += 1;
+            if shed {
+                w.shed += 1;
+            }
+            if w.total < SLO_WINDOW {
+                false
+            } else {
+                let rate = w.shed as f64 / w.total as f64;
+                w.total = 0;
+                w.shed = 0;
+                if rate > ctl.target {
+                    w.breaches += 1;
+                } else {
+                    w.breaches = 0;
+                }
+                if w.breaches >= SLO_BREACHES_TO_SCALE {
+                    w.breaches = 0;
+                    true
+                } else {
+                    false
+                }
+            }
+        };
+        if scale {
+            self.try_scale_out();
+        }
+    }
+
+    /// Spawn one replica from the spec if the cluster is still under
+    /// its ceiling. Building happens outside the replicas lock;
+    /// concurrent attempts are collapsed by the scaling mutex.
+    fn try_scale_out(self: &Arc<Self>) {
+        let Ok(_guard) = self.scaling.try_lock() else { return };
+        let index = {
+            let reps = self.replicas.read().unwrap_or_else(|e| e.into_inner());
+            let live =
+                reps.iter().filter(|r| r.state == ReplicaState::Live).count();
+            if live >= self.spec.max_replicas {
+                return;
+            }
+            reps.len()
+        };
+        if let Ok(slot) = self.spec.build_replica(index) {
+            let mut reps = self.replicas.write().unwrap_or_else(|e| e.into_inner());
+            reps.push(slot);
+            self.replicas_spawned.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Route and admit one request, excluding `exclude` (the replica a
+    /// failover just left). Returns the inner ticket plus the chosen
+    /// replica's identity. Retries across remaining candidates when a
+    /// replica refuses admission (drain races); propagates the error
+    /// only when no candidate accepts.
+    fn admit(
+        &self,
+        req: &InferRequest,
+        exclude: Option<usize>,
+    ) -> Result<(Ticket, usize, Arc<ReplicaStats>)> {
+        let reps = self.replicas.read().unwrap_or_else(|e| e.into_inner());
+        let mut routable: Vec<usize> = reps
+            .iter()
+            .enumerate()
+            .filter(|(i, r)| r.state == ReplicaState::Live && Some(*i) != exclude)
+            .map(|(i, _)| i)
+            .collect();
+        let mut last_err = anyhow::anyhow!("no live replicas to route to");
+        while !routable.is_empty() {
+            let chosen = {
+                let mut router =
+                    self.router.lock().unwrap_or_else(|e| e.into_inner());
+                router.choose(&routable, |i| {
+                    let slot = &reps[i];
+                    let in_flight = slot.stats.in_flight.load(Ordering::Acquire);
+                    let ewma_s =
+                        slot.stats.ewma_ns.load(Ordering::Relaxed) as f64 * 1e-9;
+                    (ewma_s * in_flight as f64, in_flight, i)
+                })
+            };
+            let slot = &reps[chosen];
+            match slot.handle.submit(req.clone()) {
+                Ok(ticket) => {
+                    slot.stats.admitted.fetch_add(1, Ordering::Relaxed);
+                    slot.stats.in_flight.fetch_add(1, Ordering::AcqRel);
+                    return Ok((ticket, chosen, Arc::clone(&slot.stats)));
+                }
+                Err(e) => {
+                    // Validation errors fail on every replica alike —
+                    // propagate them instead of spinning the router.
+                    let msg = format!("{e:#}");
+                    if msg.contains("bad input length")
+                        || msg.contains("bad batch length")
+                        || msg.contains("no compiled bucket")
+                        || msg.contains("contradicts")
+                    {
+                        return Err(e);
+                    }
+                    routable.retain(|&i| i != chosen);
+                    last_err = e;
+                }
+            }
+        }
+        Err(last_err)
+    }
+
+    /// A ticket pre-resolved as [`InferOutcome::DeadlineShed`] — what
+    /// the door shed hands back so every submission gets a real,
+    /// waitable ticket.
+    fn shed_ticket() -> Ticket {
+        let (tx, rx) = mpsc::channel();
+        let _ = tx.send(Err(shed_error()));
+        Ticket::new(rx)
+    }
+}
+
+/// Builds a [`Cluster`]: the shared model spec, the replica count, the
+/// routing policy, and the per-replica knobs forwarded to each
+/// replica's [`RuntimeBuilder`](crate::serving::RuntimeBuilder).
+pub struct ClusterBuilder {
+    label: String,
+    source: Option<ClusterSource>,
+    buckets: Vec<usize>,
+    lane: LaneConfig,
+    workers_per_replica: Option<usize>,
+    worker_cap: Option<usize>,
+    fault: Option<FaultPlan>,
+    replica_faults: Vec<(usize, FaultPlan)>,
+    telemetry: bool,
+    verify: VerifyMode,
+    replicas: usize,
+    max_replicas: Option<usize>,
+    failover: usize,
+    policy: RoutePolicy,
+    slo: Option<f64>,
+}
+
+impl Default for ClusterBuilder {
+    fn default() -> Self {
+        ClusterBuilder {
+            label: "cluster".to_string(),
+            source: None,
+            buckets: vec![1, 8],
+            lane: LaneConfig::default(),
+            workers_per_replica: None,
+            worker_cap: None,
+            fault: None,
+            replica_faults: Vec::new(),
+            telemetry: false,
+            verify: VerifyMode::default(),
+            replicas: 2,
+            max_replicas: None,
+            failover: 1,
+            policy: RoutePolicy::default(),
+            slo: None,
+        }
+    }
+}
+
+impl ClusterBuilder {
+    /// Serve a model-zoo network on every replica.
+    pub fn model(mut self, name: &str) -> Self {
+        self.label = name.to_string();
+        self.source = Some(ClusterSource::Model(name.to_string()));
+        self
+    }
+
+    /// Serve an arbitrary per-bucket operator-graph builder.
+    pub fn graph_fn(
+        mut self,
+        build: impl Fn(usize) -> OpGraph + Send + Sync + 'static,
+    ) -> Self {
+        self.source = Some(ClusterSource::Graph(Arc::new(build)));
+        self
+    }
+
+    /// Label prefix for replicas and error messages.
+    pub fn label(mut self, label: &str) -> Self {
+        self.label = label.to_string();
+        self
+    }
+
+    /// Compiled batch-size buckets for every replica.
+    pub fn buckets(mut self, buckets: &[usize]) -> Self {
+        self.buckets = buckets.to_vec();
+        self
+    }
+
+    /// Initial replica count (default 2).
+    pub fn replicas(mut self, n: usize) -> Self {
+        self.replicas = n;
+        self
+    }
+
+    /// Replica ceiling the SLO controller may scale out to (default:
+    /// the initial count — scale-out disabled).
+    pub fn max_replicas(mut self, n: usize) -> Self {
+        self.max_replicas = Some(n);
+        self
+    }
+
+    /// Power-of-two-choices routing with this router seed (the
+    /// default, seed 0). The seed is the knob that makes a closed-loop
+    /// run reproducible by [`crate::sim::simulate_cluster`].
+    pub fn route_p2c(mut self, seed: u64) -> Self {
+        self.policy = RoutePolicy::P2c { seed };
+        self
+    }
+
+    /// Round-robin routing (the baseline p2c is benched against).
+    pub fn route_round_robin(mut self) -> Self {
+        self.policy = RoutePolicy::RoundRobin;
+        self
+    }
+
+    /// Dead-letter failover budget per request: how many times a
+    /// request resolved [`InferOutcome::Failed`] is re-admitted on a
+    /// surviving replica before the failure is surfaced (default 1;
+    /// 0 disables failover).
+    pub fn failover(mut self, attempts: usize) -> Self {
+        self.failover = attempts;
+        self
+    }
+
+    /// Replace each replica's whole lane configuration.
+    pub fn lane_config(mut self, config: LaneConfig) -> Self {
+        self.lane = config;
+        self
+    }
+
+    /// Max partial-batch wait per replica ([`LaneConfig::max_wait`]).
+    pub fn max_wait(mut self, max_wait: Duration) -> Self {
+        self.lane.max_wait = max_wait;
+        self
+    }
+
+    /// Per-lane job-queue capacity ([`LaneConfig::lane_cap`]).
+    pub fn lane_cap(mut self, cap: usize) -> Self {
+        self.lane.lane_cap = cap;
+        self
+    }
+
+    /// Pooled padded-input buffers per lane
+    /// ([`LaneConfig::buffers_per_lane`]).
+    pub fn buffers_per_lane(mut self, n: usize) -> Self {
+        self.lane.buffers_per_lane = n;
+        self
+    }
+
+    /// Elastic lane scaling inside each replica.
+    pub fn elastic(mut self, scale: ScaleOptions) -> Self {
+        self.lane.scale = scale;
+        self
+    }
+
+    /// Earliest-deadline-first batching per replica (default on).
+    pub fn edf(mut self, on: bool) -> Self {
+        self.lane.edf = on;
+        self
+    }
+
+    /// Bounded retry of transiently-failed batches per replica.
+    pub fn retry_policy(mut self, retry: RetryPolicy) -> Self {
+        self.lane.retry = retry;
+        self
+    }
+
+    /// Workers in each replica's own [`SharedWorkerPool`] (its device;
+    /// replicas never share replay threads).
+    pub fn workers_per_replica(mut self, n: usize) -> Self {
+        self.workers_per_replica = Some(n);
+        self
+    }
+
+    /// Per-context worker cap when no shared pool is sized.
+    pub fn worker_cap(mut self, cap: usize) -> Self {
+        self.worker_cap = Some(cap);
+        self
+    }
+
+    /// Seeded chaos for the whole cluster: replica `i` runs under
+    /// `plan.derive_replica(i)` — one seed, disjoint per-replica fault
+    /// streams ([`FaultPlan::derive_replica`]).
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault = Some(plan);
+        self
+    }
+
+    /// Pin replica `index` to an explicit fault plan (overrides the
+    /// cluster-wide derivation — how tests make exactly one replica
+    /// lethal).
+    pub fn replica_fault_plan(mut self, index: usize, plan: FaultPlan) -> Self {
+        self.replica_faults.retain(|(i, _)| *i != index);
+        self.replica_faults.push((index, plan));
+        self
+    }
+
+    /// Attach a flight recorder to every replica. Per-replica
+    /// Prometheus expositions are labeled `replica="<i>"` and merged
+    /// collision-free by [`Cluster::metrics_text`].
+    pub fn telemetry(mut self) -> Self {
+        self.telemetry = true;
+        self
+    }
+
+    /// SLO target shed rate, coupled across BOTH controllers: each
+    /// replica's lane controller (scales lanes first) and the cluster
+    /// controller (scales replicas once lanes saturate, up to
+    /// [`max_replicas`](Self::max_replicas)).
+    pub fn slo(mut self, target_shed_rate: f64) -> Self {
+        self.slo = Some(target_shed_rate);
+        self
+    }
+
+    /// Static plan verification policy forwarded to every replica.
+    pub fn verify(mut self, mode: VerifyMode) -> Self {
+        self.verify = mode;
+        self
+    }
+
+    /// Build the cluster: every replica from the one spec, each with
+    /// its own pools.
+    pub fn build(self) -> Result<Cluster> {
+        anyhow::ensure!(self.replicas >= 1, "a cluster needs at least one replica");
+        anyhow::ensure!(
+            self.source.is_some(),
+            "ClusterBuilder needs a source: model() or graph_fn()"
+        );
+        let max_replicas = self.max_replicas.unwrap_or(self.replicas);
+        anyhow::ensure!(
+            max_replicas >= self.replicas,
+            "max_replicas {max_replicas} below the initial replica count {}",
+            self.replicas
+        );
+        if let Some(target) = self.slo {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&target),
+                "slo() target shed rate must be in [0, 1], got {target}"
+            );
+        }
+        let mut lane = self.lane;
+        lane.slo = self.slo;
+        let spec = ClusterSpec {
+            label: self.label,
+            source: self.source.expect("checked above"),
+            buckets: self.buckets,
+            lane,
+            workers_per_replica: self.workers_per_replica,
+            worker_cap: self.worker_cap,
+            fault: self.fault,
+            replica_faults: self.replica_faults,
+            telemetry: self.telemetry,
+            verify: self.verify,
+            max_replicas,
+            failover: self.failover,
+            policy: self.policy.clone(),
+        };
+        let slots: Vec<ReplicaSlot> = (0..self.replicas)
+            .map(|i| spec.build_replica(i))
+            .collect::<Result<_>>()?;
+        let router = Mutex::new(RouterState::new(&spec.policy));
+        let slo = self.slo.map(|target| SloCtl {
+            target,
+            window: Mutex::new(SloWindow::default()),
+        });
+        Ok(Cluster {
+            shared: Arc::new(ClusterShared {
+                spec,
+                replicas: RwLock::new(slots),
+                router,
+                scaling: Mutex::new(()),
+                submitted: AtomicU64::new(0),
+                router_shed: AtomicU64::new(0),
+                failovers: AtomicU64::new(0),
+                replicas_spawned: AtomicU64::new(0),
+                slo,
+            }),
+        })
+    }
+}
+
+/// N device replicas behind one deadline-aware router — see the
+/// [module docs](self).
+pub struct Cluster {
+    shared: Arc<ClusterShared>,
+}
+
+impl Cluster {
+    pub fn builder() -> ClusterBuilder {
+        ClusterBuilder::default()
+    }
+
+    /// Flattened input length of one example (identical on every
+    /// replica — one spec).
+    pub fn example_len(&self) -> usize {
+        let reps = self.shared.replicas.read().unwrap_or_else(|e| e.into_inner());
+        reps[0].handle.example_len()
+    }
+
+    /// Flattened output length of one example.
+    pub fn output_len(&self) -> usize {
+        let reps = self.shared.replicas.read().unwrap_or_else(|e| e.into_inner());
+        reps[0].handle.output_len()
+    }
+
+    /// Compiled batch buckets, ascending.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        let reps = self.shared.replicas.read().unwrap_or_else(|e| e.into_inner());
+        reps[0].handle.batch_sizes().to_vec()
+    }
+
+    /// Replicas currently in the routable set.
+    pub fn live_replicas(&self) -> usize {
+        let reps = self.shared.replicas.read().unwrap_or_else(|e| e.into_inner());
+        reps.iter().filter(|r| r.state == ReplicaState::Live).count()
+    }
+
+    /// Lifecycle state of every replica slot, index order (retired
+    /// slots keep their index — routing signatures stay stable).
+    pub fn replica_states(&self) -> Vec<ReplicaState> {
+        let reps = self.shared.replicas.read().unwrap_or_else(|e| e.into_inner());
+        reps.iter().map(|r| r.state).collect()
+    }
+
+    /// Requests ever admitted per replica, index order — the routing
+    /// signature [`crate::sim::simulate_cluster`] reproduces exactly
+    /// for seeded closed-loop runs.
+    pub fn admitted_per_replica(&self) -> Vec<u64> {
+        let reps = self.shared.replicas.read().unwrap_or_else(|e| e.into_inner());
+        reps.iter().map(|r| r.stats.admitted.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Submit a request: door-shed if already expired, otherwise route
+    /// to a live replica. The returned [`ClusterTicket`] resolves
+    /// exactly once and fails over dead-lettered requests
+    /// transparently.
+    pub fn submit(&self, req: InferRequest) -> Result<ClusterTicket> {
+        let shared = Arc::clone(&self.shared);
+        shared.submitted.fetch_add(1, Ordering::Relaxed);
+        // Door shed: expired before routing — no draw, no replica.
+        if req.opts.deadline.is_some_and(|d| d <= Instant::now()) {
+            shared.router_shed.fetch_add(1, Ordering::Relaxed);
+            shared.note_outcome(true);
+            return Ok(ClusterTicket {
+                inner: Some(ClusterShared::shed_ticket()),
+                route: None,
+                saved: None,
+                attempts: 0,
+                submitted_at: Instant::now(),
+                shared,
+            });
+        }
+        let (ticket, replica, stats) = shared.admit(&req, None)?;
+        Ok(ClusterTicket {
+            inner: Some(ticket),
+            route: Some((replica, stats)),
+            saved: Some(req),
+            attempts: self.shared.spec.failover,
+            submitted_at: Instant::now(),
+            shared,
+        })
+    }
+
+    /// Blocking inference: submit and wait (sheds and failures become
+    /// errors, as in [`Runtime::infer`]).
+    pub fn infer(&self, req: InferRequest) -> Result<Vec<f32>> {
+        match self.submit(req)?.outcome()? {
+            InferOutcome::Output(v) => Ok(v),
+            InferOutcome::DeadlineShed => Err(anyhow::anyhow!(shed_error())),
+            InferOutcome::Failed(e) => Err(anyhow::anyhow!(e)),
+        }
+    }
+
+    /// Gracefully drain replica `index`: leave the routable set first
+    /// (new traffic reroutes), then flush everything it had admitted —
+    /// staged batches, queued jobs, retries — so every in-flight
+    /// ticket resolves. Returns the replica's final report (also kept
+    /// for the cluster report).
+    pub fn drain_replica(&self, index: usize) -> Result<ServingReport> {
+        self.retire(index, ReplicaState::Draining, ReplicaState::Retired)
+    }
+
+    /// Kill replica `index`: identical mechanics to a drain (this
+    /// substrate has no way to abandon threads safely), but marked
+    /// [`ReplicaState::Failed`]. Under a per-replica fault plan the
+    /// dead letters resolve as `Failed` and the cluster tickets fail
+    /// over to survivors.
+    pub fn kill_replica(&self, index: usize) -> Result<ServingReport> {
+        self.retire(index, ReplicaState::Draining, ReplicaState::Failed)
+    }
+
+    fn retire(
+        &self,
+        index: usize,
+        via: ReplicaState,
+        end: ReplicaState,
+    ) -> Result<ServingReport> {
+        let runtime = {
+            let mut reps =
+                self.shared.replicas.write().unwrap_or_else(|e| e.into_inner());
+            let n = reps.len();
+            let slot = reps
+                .get_mut(index)
+                .with_context(|| format!("no replica {index} (have {n})"))?;
+            anyhow::ensure!(
+                slot.state == ReplicaState::Live,
+                "replica {index} is {:?}, not Live",
+                slot.state
+            );
+            slot.state = via;
+            slot.runtime.take().expect("a Live replica owns its runtime")
+        };
+        let report = runtime.drain()?;
+        let mut reps = self.shared.replicas.write().unwrap_or_else(|e| e.into_inner());
+        reps[index].state = end;
+        reps[index].report = Some(report.clone());
+        Ok(report)
+    }
+
+    /// One Prometheus exposition for the whole cluster: every
+    /// replica's samples (each labeled `replica="<i>"`), one
+    /// `# HELP`/`# TYPE` header per family, samples grouped per family
+    /// — no duplicate series, no duplicate metadata. `None` without
+    /// [`ClusterBuilder::telemetry`].
+    pub fn metrics_text(&self) -> Option<String> {
+        let reps = self.shared.replicas.read().unwrap_or_else(|e| e.into_inner());
+        let texts: Vec<String> =
+            reps.iter().filter_map(|r| r.handle.metrics_text()).collect();
+        if texts.is_empty() {
+            return None;
+        }
+        Some(merge_expositions(&texts))
+    }
+
+    /// Stop the whole cluster: drain every live replica (flushing all
+    /// admitted work), fold the per-replica reports, and return the
+    /// [`ClusterReport`].
+    pub fn shutdown(self) -> Result<ClusterReport> {
+        let indices: Vec<usize> = {
+            let reps =
+                self.shared.replicas.read().unwrap_or_else(|e| e.into_inner());
+            reps.iter()
+                .enumerate()
+                .filter(|(_, r)| r.state == ReplicaState::Live)
+                .map(|(i, _)| i)
+                .collect()
+        };
+        for i in indices {
+            let _ = self.retire(i, ReplicaState::Draining, ReplicaState::Retired)?;
+        }
+        let reps = self.shared.replicas.read().unwrap_or_else(|e| e.into_inner());
+        let mut total = ServingReport::empty();
+        let mut per_replica = Vec::with_capacity(reps.len());
+        let mut leased_arena_bytes = 0u64;
+        for (i, slot) in reps.iter().enumerate() {
+            if let Some(r) = &slot.report {
+                total.absorb(r);
+            }
+            leased_arena_bytes += slot.arena_pool.stats().leased_bytes;
+            per_replica.push(ReplicaReport {
+                index: i,
+                state: slot.state,
+                admitted: slot.stats.admitted.load(Ordering::Relaxed),
+                report: slot.report.clone(),
+            });
+        }
+        Ok(ClusterReport {
+            submitted: self.shared.submitted.load(Ordering::Relaxed),
+            router_shed: self.shared.router_shed.load(Ordering::Relaxed),
+            failovers: self.shared.failovers.load(Ordering::Relaxed),
+            replicas_spawned: self.shared.replicas_spawned.load(Ordering::Relaxed),
+            leased_arena_bytes,
+            per_replica,
+            total,
+        })
+    }
+}
+
+/// Waitable handle to a cluster submission. Wraps the routed replica's
+/// [`Ticket`] and adds the cluster semantics: door-shed resolution,
+/// per-replica accounting, and dead-letter failover. Resolves exactly
+/// once; dropping an unresolved ticket releases its in-flight slot.
+pub struct ClusterTicket {
+    inner: Option<Ticket>,
+    route: Option<(usize, Arc<ReplicaStats>)>,
+    saved: Option<InferRequest>,
+    attempts: usize,
+    submitted_at: Instant,
+    shared: Arc<ClusterShared>,
+}
+
+impl ClusterTicket {
+    /// The replica currently serving this request (`None` for
+    /// door-shed tickets).
+    pub fn replica(&self) -> Option<usize> {
+        self.route.as_ref().map(|(i, _)| *i)
+    }
+
+    /// Block for the outcome. `Failed` outcomes with failover budget
+    /// left are re-admitted on a surviving replica (excluding the one
+    /// that failed); the caller sees only the final resolution.
+    pub fn outcome(mut self) -> Result<InferOutcome> {
+        loop {
+            let out = self
+                .inner
+                .take()
+                .expect("an unresolved ticket owns its channel")
+                .outcome()?;
+            if let Some((_, stats)) = &self.route {
+                stats.note_resolved(self.submitted_at.elapsed());
+            }
+            let failed_on = self.route.take().map(|(i, _)| i);
+            match out {
+                InferOutcome::Failed(_) if self.attempts > 0 && self.saved.is_some() => {
+                    self.attempts -= 1;
+                    let req = self.saved.clone().expect("checked");
+                    match self.shared.admit(&req, failed_on) {
+                        Ok((ticket, replica, stats)) => {
+                            self.shared.failovers.fetch_add(1, Ordering::Relaxed);
+                            self.inner = Some(ticket);
+                            self.route = Some((replica, stats));
+                            self.submitted_at = Instant::now();
+                            continue;
+                        }
+                        // No surviving replica takes it: surface the
+                        // original failure.
+                        Err(_) => {
+                            self.shared.note_outcome(false);
+                            return Ok(out);
+                        }
+                    }
+                }
+                out => {
+                    // Door sheds were already counted in the SLO
+                    // window at submit time (`saved` is only `None`
+                    // for door-shed tickets).
+                    if self.saved.is_some() {
+                        self.shared.note_outcome(out.is_shed());
+                    }
+                    return Ok(out);
+                }
+            }
+        }
+    }
+
+    /// Like [`outcome`](Self::outcome) with a per-attempt wait bound;
+    /// `Err` only on timeout.
+    pub fn outcome_timeout(mut self, timeout: Duration) -> Result<InferOutcome> {
+        loop {
+            let out = self
+                .inner
+                .take()
+                .expect("an unresolved ticket owns its channel")
+                .outcome_timeout(timeout)?;
+            if let Some((_, stats)) = &self.route {
+                stats.note_resolved(self.submitted_at.elapsed());
+            }
+            let failed_on = self.route.take().map(|(i, _)| i);
+            match out {
+                InferOutcome::Failed(_) if self.attempts > 0 && self.saved.is_some() => {
+                    self.attempts -= 1;
+                    let req = self.saved.clone().expect("checked");
+                    match self.shared.admit(&req, failed_on) {
+                        Ok((ticket, replica, stats)) => {
+                            self.shared.failovers.fetch_add(1, Ordering::Relaxed);
+                            self.inner = Some(ticket);
+                            self.route = Some((replica, stats));
+                            self.submitted_at = Instant::now();
+                            continue;
+                        }
+                        Err(_) => {
+                            self.shared.note_outcome(false);
+                            return Ok(out);
+                        }
+                    }
+                }
+                out => {
+                    // Door sheds were already counted in the SLO
+                    // window at submit time (`saved` is only `None`
+                    // for door-shed tickets).
+                    if self.saved.is_some() {
+                        self.shared.note_outcome(out.is_shed());
+                    }
+                    return Ok(out);
+                }
+            }
+        }
+    }
+
+    /// Block for the output; sheds and failures become errors.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        match self.outcome()? {
+            InferOutcome::Output(v) => Ok(v),
+            InferOutcome::DeadlineShed => Err(anyhow::anyhow!(shed_error())),
+            InferOutcome::Failed(e) => Err(anyhow::anyhow!(e)),
+        }
+    }
+}
+
+impl Drop for ClusterTicket {
+    fn drop(&mut self) {
+        // An unresolved, still-routed ticket (dropped without waiting)
+        // releases its in-flight slot so the pressure signal recovers.
+        if let Some((_, stats)) = self.route.take() {
+            stats.in_flight.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+}
+
+/// Per-replica slice of a [`ClusterReport`].
+#[derive(Debug, Clone)]
+pub struct ReplicaReport {
+    pub index: usize,
+    pub state: ReplicaState,
+    /// Requests the router admitted here (including failover
+    /// re-admissions).
+    pub admitted: u64,
+    /// The replica's final serving report (`None` only if it never
+    /// left the routable set — impossible after
+    /// [`Cluster::shutdown`]).
+    pub report: Option<ServingReport>,
+}
+
+/// Aggregated report of a whole cluster run ([`Cluster::shutdown`]).
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    /// Accepted [`Cluster::submit`] calls.
+    pub submitted: u64,
+    /// Requests shed at the router's door, before any replica.
+    pub router_shed: u64,
+    /// Dead-letter re-admissions performed by tickets.
+    pub failovers: u64,
+    /// Replicas spawned by the SLO controller.
+    pub replicas_spawned: u64,
+    /// Arena bytes still leased across every replica's pool after the
+    /// final drain — 0 iff all batch buffers came home.
+    pub leased_arena_bytes: u64,
+    pub per_replica: Vec<ReplicaReport>,
+    /// Every replica's report folded with [`ServingReport::absorb`].
+    pub total: ServingReport,
+}
+
+impl ClusterReport {
+    /// Requests completed across the cluster.
+    pub fn completed(&self) -> usize {
+        self.total.n_requests
+    }
+
+    /// All sheds: door sheds plus every replica's deadline sheds — the
+    /// counterpart of [`ClusterSimResult::shed`](crate::sim::ClusterSimResult::shed).
+    pub fn shed(&self) -> usize {
+        self.router_shed as usize + self.total.deadline_shed
+    }
+
+    /// Requests that resolved `Failed` inside replicas (failover
+    /// re-admissions that later succeeded are NOT failures to the
+    /// client, but each failed attempt is counted here by the replica
+    /// that dead-lettered it).
+    pub fn failed(&self) -> usize {
+        self.total.failed
+    }
+
+    /// Per-replica admitted counts, index order.
+    pub fn admitted_per_replica(&self) -> Vec<u64> {
+        self.per_replica.iter().map(|r| r.admitted).collect()
+    }
+
+    /// The cluster-level conservation law:
+    /// `Σ admitted == submitted − router_shed + failovers` and every
+    /// admitted request resolved exactly once inside its replica
+    /// (`Σ (n_requests + deadline_shed + failed) == Σ admitted`).
+    pub fn accounting_closes(&self) -> bool {
+        let admitted: u64 = self.per_replica.iter().map(|r| r.admitted).sum();
+        let resolved =
+            (self.total.n_requests + self.total.deadline_shed + self.total.failed) as u64;
+        admitted == self.submitted - self.router_shed + self.failovers
+            && resolved == admitted
+    }
+
+    /// Machine-readable counterpart of [`render`](Self::render) —
+    /// parseable by [`crate::util::json::parse_json`].
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut o = String::from("{\n");
+        let _ = write!(
+            o,
+            "  \"submitted\": {}, \"router_shed\": {}, \"failovers\": {}, \
+             \"replicas_spawned\": {}, \"accounting_closes\": {},\n  \"admitted_per_replica\": [",
+            self.submitted,
+            self.router_shed,
+            self.failovers,
+            self.replicas_spawned,
+            self.accounting_closes(),
+        );
+        for (i, r) in self.per_replica.iter().enumerate() {
+            if i > 0 {
+                o.push_str(", ");
+            }
+            let _ = write!(o, "{}", r.admitted);
+        }
+        o.push_str("],\n  \"total\": ");
+        o.push_str(&self.total.to_json());
+        o.push_str("}\n");
+        o
+    }
+
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = format!(
+            "cluster: submitted={} router_shed={} failovers={} spawned={}\n",
+            self.submitted, self.router_shed, self.failovers, self.replicas_spawned
+        );
+        for r in &self.per_replica {
+            let _ = write!(out, "replica[{}] {:?}: admitted={}", r.index, r.state, r.admitted);
+            if let Some(rep) = &r.report {
+                let _ = write!(
+                    out,
+                    " completed={} shed={} failed={}",
+                    rep.n_requests, rep.deadline_shed, rep.failed
+                );
+            }
+            out.push('\n');
+        }
+        out.push_str(&self.total.render());
+        out
+    }
+}
+
+/// Merge per-replica Prometheus expositions into one: a family's
+/// `# HELP`/`# TYPE` metadata appears once, its samples (already
+/// disambiguated by their `replica` labels) are grouped together in
+/// first-seen family order.
+pub(crate) fn merge_expositions(texts: &[String]) -> String {
+    use std::collections::HashMap;
+    // family name -> (metadata lines, sample lines)
+    let mut order: Vec<String> = Vec::new();
+    let mut fams: HashMap<String, (Vec<String>, Vec<String>)> = HashMap::new();
+    for text in texts {
+        let mut current: Option<String> = None;
+        for line in text.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# ") {
+                let mut it = rest.splitn(3, ' ');
+                let _kind = it.next().unwrap_or("");
+                let name = it.next().unwrap_or("").to_string();
+                let entry = fams.entry(name.clone()).or_insert_with(|| {
+                    order.push(name.clone());
+                    (Vec::new(), Vec::new())
+                });
+                if !entry.0.iter().any(|l| l == line) {
+                    entry.0.push(line.to_string());
+                }
+                current = Some(name);
+            } else if let Some(fam) = &current {
+                fams.get_mut(fam).expect("family exists").1.push(line.to_string());
+            }
+        }
+    }
+    let mut out = String::new();
+    for name in &order {
+        let (meta, samples) = &fams[name];
+        for l in meta {
+            out.push_str(l);
+            out.push('\n');
+        }
+        for l in samples {
+            out.push_str(l);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_cluster(replicas: usize) -> Cluster {
+        Cluster::builder()
+            .model("mini_inception")
+            .buckets(&[1, 4])
+            .replicas(replicas)
+            .route_p2c(7)
+            .build()
+            .expect("cluster builds")
+    }
+
+    #[test]
+    fn builder_rejects_empty_specs() {
+        let err = Cluster::builder().replicas(0).model("mini_inception").build();
+        assert!(err.is_err(), "zero replicas must not build");
+        let err = Cluster::builder().replicas(2).build();
+        assert!(err.is_err(), "a cluster needs a source");
+        let err = Cluster::builder()
+            .model("mini_inception")
+            .replicas(4)
+            .max_replicas(2)
+            .build();
+        assert!(err.is_err(), "max_replicas below the initial count must not build");
+    }
+
+    #[test]
+    fn cluster_serves_and_the_accounting_closes() {
+        let cluster = mini_cluster(2);
+        let n = cluster.example_len();
+        let out_len = cluster.output_len();
+        let mut tickets = Vec::new();
+        for i in 0..12 {
+            let req = InferRequest::new(vec![i as f32 / 16.0; n]);
+            tickets.push(cluster.submit(req).expect("routable"));
+        }
+        for t in tickets {
+            match t.outcome().expect("resolves") {
+                InferOutcome::Output(v) => assert_eq!(v.len(), out_len),
+                other => panic!("expected output, got {other:?}"),
+            }
+        }
+        let report = cluster.shutdown().expect("drains");
+        assert_eq!(report.submitted, 12);
+        assert_eq!(report.router_shed, 0);
+        assert_eq!(report.completed(), 12);
+        assert!(report.accounting_closes(), "{}", report.render());
+        assert_eq!(
+            report.admitted_per_replica().iter().sum::<u64>(),
+            12,
+            "every request admitted exactly once"
+        );
+    }
+
+    #[test]
+    fn expired_requests_shed_at_the_door_without_touching_replicas() {
+        let cluster = mini_cluster(2);
+        let n = cluster.example_len();
+        let req =
+            InferRequest::new(vec![0.0; n]).deadline(Instant::now() - Duration::from_millis(1));
+        let ticket = cluster.submit(req).expect("door shed still yields a ticket");
+        assert_eq!(ticket.replica(), None, "door sheds never route");
+        assert!(matches!(
+            ticket.outcome().expect("resolves"),
+            InferOutcome::DeadlineShed
+        ));
+        let report = cluster.shutdown().expect("drains");
+        assert_eq!(report.router_shed, 1);
+        assert_eq!(report.admitted_per_replica(), vec![0, 0]);
+        assert!(report.accounting_closes(), "{}", report.render());
+    }
+
+    #[test]
+    fn drained_replica_leaves_the_routable_set() {
+        let cluster = mini_cluster(3);
+        let n = cluster.example_len();
+        let _ = cluster.infer(InferRequest::new(vec![0.5; n])).expect("serves");
+        cluster.drain_replica(1).expect("drains");
+        assert_eq!(cluster.live_replicas(), 2);
+        assert_eq!(
+            cluster.replica_states(),
+            vec![ReplicaState::Live, ReplicaState::Retired, ReplicaState::Live]
+        );
+        // Post-drain traffic routes to the survivors only.
+        let mut tickets = Vec::new();
+        for _ in 0..8 {
+            tickets.push(cluster.submit(InferRequest::new(vec![0.25; n])).unwrap());
+        }
+        for t in &tickets {
+            assert_ne!(t.replica(), Some(1), "retired replica must not be routed to");
+        }
+        for t in tickets {
+            assert!(matches!(t.outcome().unwrap(), InferOutcome::Output(_)));
+        }
+        // Double drain is an error, not a hang.
+        assert!(cluster.drain_replica(1).is_err());
+        let report = cluster.shutdown().expect("drains");
+        assert!(report.accounting_closes(), "{}", report.render());
+    }
+
+    #[test]
+    fn merge_expositions_keeps_one_header_per_family() {
+        let a = "# HELP nimble_x total\n# TYPE nimble_x counter\nnimble_x{replica=\"0\"} 1\n"
+            .to_string();
+        let b = "# HELP nimble_x total\n# TYPE nimble_x counter\nnimble_x{replica=\"1\"} 2\n# HELP nimble_y gauge\n# TYPE nimble_y gauge\nnimble_y{replica=\"1\"} 3\n"
+            .to_string();
+        let merged = merge_expositions(&[a, b]);
+        assert_eq!(merged.matches("# HELP nimble_x").count(), 1);
+        assert_eq!(merged.matches("# TYPE nimble_x").count(), 1);
+        assert!(merged.contains("nimble_x{replica=\"0\"} 1"));
+        assert!(merged.contains("nimble_x{replica=\"1\"} 2"));
+        assert!(merged.contains("# HELP nimble_y"));
+        // Samples of a family stay contiguous: x samples before y's header.
+        let y_at = merged.find("# HELP nimble_y").unwrap();
+        let x1_at = merged.find("nimble_x{replica=\"1\"}").unwrap();
+        assert!(x1_at < y_at, "family samples must be grouped:\n{merged}");
+    }
+
+    #[test]
+    fn cluster_metrics_text_has_no_duplicate_series() {
+        let cluster = Cluster::builder()
+            .model("mini_inception")
+            .buckets(&[1])
+            .replicas(2)
+            .telemetry()
+            .build()
+            .expect("cluster builds");
+        let n = cluster.example_len();
+        let _ = cluster.infer(InferRequest::new(vec![0.1; n])).expect("serves");
+        let text = cluster.metrics_text().expect("telemetry on");
+        let mut seen = std::collections::HashSet::new();
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let series = line.rsplit_once(' ').map(|(s, _)| s).unwrap_or(line);
+            assert!(seen.insert(series.to_string()), "duplicate series {series}");
+            assert!(series.contains("replica=\""), "unlabeled sample {line}");
+        }
+        let _ = cluster.shutdown().expect("drains");
+    }
+}

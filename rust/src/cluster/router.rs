@@ -1,0 +1,134 @@
+//! The replica router: deadline-aware, pressure-driven choice of which
+//! live replica admits each request.
+//!
+//! The decision procedure is deliberately tiny and EXACTLY mirrored by
+//! [`crate::sim::simulate_cluster`] — both sides call the same
+//! `sim::cluster::p2c_draw` / `sim::cluster::lower_pressure` helpers, so
+//! the routing of a seeded closed-loop run is reproducible offline
+//! bit-for-bit (the `BENCH_cluster.json` exact entry pins it):
+//!
+//! - Requests already expired at the door are shed **before** routing
+//!   and consume no RNG draw.
+//! - One routable replica: chosen directly, no draw.
+//! - Round-robin: a counter over the routable list, no draws.
+//! - Power-of-two-choices: exactly two draws pick two *distinct*
+//!   candidates from the routable list (ascending replica order); the
+//!   one with the lower pressure score `(est, in_flight, index)` wins,
+//!   where `est = ewma_queue_delay_s × in_flight` and ties break
+//!   toward the lower replica index.
+
+use crate::sim::cluster::{lower_pressure, p2c_draw};
+use crate::util::Pcg32;
+
+/// How the cluster router picks a replica
+/// ([`ClusterBuilder::route_p2c`](super::ClusterBuilder::route_p2c) /
+/// [`route_round_robin`](super::ClusterBuilder::route_round_robin)).
+#[derive(Debug, Clone)]
+pub enum RoutePolicy {
+    /// Power-of-two-choices on per-replica pressure, seeded — the
+    /// default (`seed 0`). Two random candidates, lower pressure wins.
+    P2c { seed: u64 },
+    /// Blind rotation over the routable replicas (the bench baseline
+    /// p2c is judged against).
+    RoundRobin,
+}
+
+impl Default for RoutePolicy {
+    fn default() -> Self {
+        RoutePolicy::P2c { seed: 0 }
+    }
+}
+
+/// Mutable router state, serialized behind the cluster's one decision
+/// mutex (decision order == submission order, the property the DES
+/// mirror depends on).
+pub(crate) struct RouterState {
+    rng: Pcg32,
+    rr: usize,
+    p2c: bool,
+}
+
+impl RouterState {
+    pub(crate) fn new(policy: &RoutePolicy) -> RouterState {
+        match policy {
+            RoutePolicy::P2c { seed } => {
+                RouterState { rng: Pcg32::new(*seed), rr: 0, p2c: true }
+            }
+            RoutePolicy::RoundRobin => {
+                RouterState { rng: Pcg32::new(0), rr: 0, p2c: false }
+            }
+        }
+    }
+
+    /// Choose one entry of `routable` (live replica indices, ascending).
+    /// `pressure(replica_index)` supplies the score for p2c candidates;
+    /// it is consulted only when a draw actually happens, so
+    /// single-replica and round-robin decisions stay signal-free.
+    pub(crate) fn choose(
+        &mut self,
+        routable: &[usize],
+        pressure: impl Fn(usize) -> (f64, usize, usize),
+    ) -> usize {
+        debug_assert!(!routable.is_empty());
+        if routable.len() == 1 {
+            return routable[0];
+        }
+        if !self.p2c {
+            let c = routable[self.rr % routable.len()];
+            self.rr += 1;
+            return c;
+        }
+        let (a, b) = p2c_draw(&mut self.rng, routable.len());
+        lower_pressure(pressure(routable[a]), pressure(routable[b]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_rotates_over_the_routable_list_only() {
+        let mut r = RouterState::new(&RoutePolicy::RoundRobin);
+        let boom = |_: usize| -> (f64, usize, usize) { panic!("RR must not score") };
+        // Replica 1 is drained out of the list: rotation covers 0, 2, 3.
+        let routable = [0usize, 2, 3];
+        let picks: Vec<usize> = (0..6).map(|_| r.choose(&routable, boom)).collect();
+        assert_eq!(picks, vec![0, 2, 3, 0, 2, 3]);
+    }
+
+    #[test]
+    fn single_candidate_consumes_no_draws() {
+        let mut a = RouterState::new(&RoutePolicy::P2c { seed: 9 });
+        let mut b = RouterState::new(&RoutePolicy::P2c { seed: 9 });
+        let zero = |i: usize| (0.0, 0, i);
+        // `a` routes three single-candidate decisions first; `b` none.
+        for _ in 0..3 {
+            assert_eq!(a.choose(&[5], zero), 5);
+        }
+        let routable = [0usize, 1, 2, 3];
+        for _ in 0..16 {
+            assert_eq!(
+                a.choose(&routable, zero),
+                b.choose(&routable, zero),
+                "draw streams must not be perturbed by drawless decisions"
+            );
+        }
+    }
+
+    #[test]
+    fn p2c_prefers_lower_pressure_and_breaks_ties_by_index() {
+        let mut r = RouterState::new(&RoutePolicy::P2c { seed: 3 });
+        // Replica 2 is heavily loaded: it must essentially never win.
+        let skew = |i: usize| if i == 2 { (10.0, 7, i) } else { (0.0, 0, i) };
+        let picks: Vec<usize> = (0..64).map(|_| r.choose(&[0, 1, 2], skew)).collect();
+        assert!(picks.iter().all(|&p| p != 2), "loaded replica chosen: {picks:?}");
+        // All-equal pressure: the winner is always the lower index of
+        // the drawn pair, so replica 0 wins at least as often as 2.
+        let mut r = RouterState::new(&RoutePolicy::P2c { seed: 3 });
+        let zero = |i: usize| (0.0, 0, i);
+        let picks: Vec<usize> = (0..96).map(|_| r.choose(&[0, 1, 2], zero)).collect();
+        let count = |k: usize| picks.iter().filter(|&&p| p == k).count();
+        assert!(count(0) >= count(2), "min-index tie-break: {:?}", (count(0), count(2)));
+    }
+}

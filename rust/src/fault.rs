@@ -180,6 +180,21 @@ impl FaultPlan {
     /// stream from its engine-wrapper stream (see [`derive`](Self::derive)).
     pub const REPLAY_SALT: u64 = 0x4EA1_5A17;
 
+    /// Derivation salt separating device replicas of a cluster (see
+    /// [`derive_replica`](Self::derive_replica)).
+    pub const REPLICA_SALT: u64 = 0x0C1A_57E4;
+
+    /// Fork the per-replica decision stream for device replica
+    /// `replica` of a cluster: each replica draws independent faults
+    /// from one base plan, and a replica rebuilt at the same index
+    /// replays the identical schedule. The per-bucket derivations
+    /// ([`derive`](Self::derive)) are applied on top by the replica's
+    /// own runtime, so streams never collide across
+    /// (replica, bucket, layer).
+    pub fn derive_replica(&self, replica: usize) -> FaultPlan {
+        self.derive(Self::REPLICA_SALT ^ ((replica as u64) << 17))
+    }
+
     /// Uniform roll in `[0, 1)` for `(kind, a, b)`.
     fn roll(&self, salt: u64, a: u64, b: u64) -> f64 {
         let mut h = splitmix64(self.seed ^ salt);

@@ -57,6 +57,7 @@
 
 pub mod aot;
 pub mod baselines;
+pub mod cluster;
 pub mod coordinator;
 pub mod figures;
 pub mod serving;

@@ -33,6 +33,13 @@
 //!                         façade: the real XLA path with the feature,
 //!                         tape-backed lanes without it
 //!   train [--steps N]     run the AOT train-step artifact   (feature xla)
+//!   cluster [--replicas N] [--requests N] [--rate RPS] [--deadline-ms D]
+//!           [--round-robin] [--drain IDX] [--model NAME]
+//!                         data-parallel replica-group demo: N tape-backed
+//!                         replicas behind the deadline-aware p2c router,
+//!                         optional mid-run drain of one replica, with the
+//!                         cluster DES (`sim::simulate_cluster`) prediction
+//!                         printed next to the measured run
 
 // Same unsafe-hygiene bar as the library crate (this binary has no
 // unsafe code; the lints keep it that way).
@@ -79,11 +86,12 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("infer") => cmd_infer(args),
         Some("serve") => cmd_serve(args),
         Some("train") => cmd_train(args),
+        Some("cluster") => cmd_cluster(args),
         Some(other) => bail!("unknown subcommand `{other}` — run without args for usage"),
         None => {
             println!(
                 "nimble — reproduction of Nimble (NeurIPS 2020)\n\n\
-                 usage: nimble <figures|models|assign|replay|sim|trace|verify|infer|serve|train> [args]\n\
+                 usage: nimble <figures|models|assign|replay|sim|trace|verify|infer|serve|train|cluster> [args]\n\
                  see rust/src/main.rs docs for details"
             );
             Ok(())
@@ -599,4 +607,104 @@ fn cmd_train(args: &[String]) -> Result<()> {
 #[cfg(not(feature = "xla"))]
 fn cmd_train(_args: &[String]) -> Result<()> {
     bail!("`train` needs the real PJRT runtime — rebuild with `--features xla` and run `make artifacts`")
+}
+
+fn cmd_cluster(args: &[String]) -> Result<()> {
+    use nimble::aot::ReplayTape;
+    use nimble::cluster::Cluster;
+    use nimble::serving::{InferOutcome, InferRequest};
+    use nimble::sim::{kernel_cost, simulate_cluster, ClusterSimPolicy, ClusterTraffic, HostProfile};
+    use nimble::stream::rewrite::rewrite;
+    use nimble::util::Pcg32;
+    use std::time::Duration;
+
+    let replicas: usize = flag(args, "--replicas").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let n: usize = flag(args, "--requests").map(|s| s.parse()).transpose()?.unwrap_or(200);
+    let rate: f64 = flag(args, "--rate").map(|s| s.parse()).transpose()?.unwrap_or(400.0);
+    let deadline_ms: Option<u64> = flag(args, "--deadline-ms").map(|s| s.parse()).transpose()?;
+    let drain_at: Option<usize> = flag(args, "--drain").map(|s| s.parse()).transpose()?;
+    let round_robin = args.iter().any(|a| a == "--round-robin");
+    let model = flag(args, "--model").unwrap_or_else(|| "mini_inception".to_string());
+
+    let policy = if round_robin { "round-robin" } else { "p2c" };
+    println!(
+        "starting {replicas}-replica cluster ({model}, {policy} router, {n} requests @ {rate} rps)..."
+    );
+    let mut builder = Cluster::builder()
+        .model(&model)
+        .buckets(&[1, 8])
+        .replicas(replicas)
+        .max_wait(Duration::from_millis(2));
+    builder = if round_robin { builder.route_round_robin() } else { builder.route_p2c(1) };
+    let cluster = builder.build()?;
+
+    let len = cluster.example_len();
+    let mut rng = Pcg32::new(1);
+    let start = Instant::now();
+    let mut arrivals: Vec<(f64, f64)> = Vec::with_capacity(n);
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        if drain_at.is_some() && i == n / 2 {
+            let idx = drain_at.unwrap();
+            println!("draining replica {idx} mid-run (traffic reroutes to survivors)...");
+            let rep = cluster.drain_replica(idx)?;
+            println!(
+                "replica {idx} drained: completed={} shed={} failed={}",
+                rep.n_requests, rep.deadline_shed, rep.failed
+            );
+        }
+        let input: Vec<f32> = (0..len).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+        let mut req = InferRequest::new(input);
+        let at = start.elapsed().as_secs_f64();
+        let deadline_s = match deadline_ms {
+            Some(ms) => {
+                req = req.deadline_in(Duration::from_millis(ms));
+                at + ms as f64 / 1e3
+            }
+            None => f64::INFINITY,
+        };
+        arrivals.push((at, deadline_s));
+        pending.push(cluster.submit(req)?);
+        std::thread::sleep(Duration::from_secs_f64(rng.gen_exp(rate)));
+    }
+    let (mut done, mut shed, mut failed) = (0usize, 0usize, 0usize);
+    for ticket in pending {
+        match ticket.outcome().context("response lost")? {
+            InferOutcome::Output(_) => done += 1,
+            InferOutcome::DeadlineShed => shed += 1,
+            InferOutcome::Failed(_) => failed += 1,
+        }
+    }
+    let report = cluster.shutdown()?;
+    println!("{}", report.render());
+    println!("client view: completed={done} shed={shed} failed={failed}");
+
+    // The cluster DES's prediction for the same arrival tape (no
+    // mid-run drains in the sim — skip the comparison when draining).
+    if drain_at.is_none() {
+        let g = models::build(&model, 1);
+        let dev = GpuSpec::v100();
+        let costs: Vec<_> = (0..g.n_nodes()).map(|v| kernel_cost(g.node(v), &dev)).collect();
+        let tape = ReplayTape::for_op_graph(&g, &rewrite(&g, MatchingAlgo::HopcroftKarp), 4096);
+        let sim = simulate_cluster(
+            &ClusterTraffic { tape: &tape, costs: &costs, requests: &arrivals },
+            HostProfile::nimble(),
+            dev,
+            ClusterSimPolicy {
+                replicas,
+                lanes_per_replica: 1,
+                p2c: !round_robin,
+                seed: 1,
+                closed_loop: false,
+            },
+        );
+        println!(
+            "DES prediction (open loop, batch-1 queue model): completed={} shed={} ({:.1}% shed rate) admitted={:?}",
+            sim.completed(),
+            sim.shed(),
+            sim.shed_rate() * 100.0,
+            sim.admitted_per_replica()
+        );
+    }
+    Ok(())
 }

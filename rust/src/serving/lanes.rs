@@ -1910,6 +1910,14 @@ impl LaneClient {
         &self.batch_sizes
     }
 
+    /// Requests sitting in the bounded admission queue right now —
+    /// admitted but not yet pulled by the dispatcher. A cheap,
+    /// lock-light pressure signal for the cluster router
+    /// ([`crate::cluster`]); momentarily stale by design.
+    pub fn queue_depth(&self) -> usize {
+        self.admission.len()
+    }
+
     /// The one single-example submit path: enqueue
     /// `(input, hint, deadline)` and hand back the raw reply channel.
     /// [`RuntimeHandle`](crate::serving::RuntimeHandle) wraps this (and

@@ -235,6 +235,72 @@ pub struct ServingReport {
 }
 
 impl ServingReport {
+    /// The fold identity for [`absorb`](Self::absorb): an all-zero
+    /// report with the same single-`0.0` sentinel latency an idle lane
+    /// run produces.
+    pub fn empty() -> ServingReport {
+        ServingReport {
+            n_requests: 0,
+            n_batches: 0,
+            wall_time: Duration::ZERO,
+            latency: Summary::from_samples(vec![0.0]),
+            mean_batch_fill: 0.0,
+            deadline_shed: 0,
+            admission_shed: 0,
+            failed: 0,
+            retries: 0,
+            lanes: Vec::new(),
+        }
+    }
+
+    /// Fold another runtime's report into this one — how the cluster
+    /// layer aggregates its per-replica reports. Counters sum; batch
+    /// fill re-weights by batch count; wall time takes the max
+    /// (replicas run concurrently, not back-to-back); latency
+    /// summaries merge losslessly from their raw samples (reports that
+    /// completed nothing contribute none, so the idle sentinel sample
+    /// never skews percentiles); per-bucket lane stats fold with
+    /// [`LaneStat::absorb`] plus the scheduler-level spawn/retire
+    /// decisions, which `absorb` leaves to the scheduler — across
+    /// replicas those ARE per-instance counts and must sum.
+    pub fn absorb(&mut self, other: &ServingReport) {
+        let batches = self.n_batches + other.n_batches;
+        if batches > 0 {
+            self.mean_batch_fill = (self.mean_batch_fill * self.n_batches as f64
+                + other.mean_batch_fill * other.n_batches as f64)
+                / batches as f64;
+        }
+        self.n_batches = batches;
+        let mut samples: Vec<f64> = Vec::new();
+        if self.n_requests > 0 {
+            samples.extend_from_slice(self.latency.samples());
+        }
+        if other.n_requests > 0 {
+            samples.extend_from_slice(other.latency.samples());
+        }
+        if samples.is_empty() {
+            samples.push(0.0);
+        }
+        self.latency = Summary::from_samples(samples);
+        self.n_requests += other.n_requests;
+        self.wall_time = self.wall_time.max(other.wall_time);
+        self.deadline_shed += other.deadline_shed;
+        self.admission_shed += other.admission_shed;
+        self.failed += other.failed;
+        self.retries += other.retries;
+        for lane in &other.lanes {
+            match self.lanes.iter_mut().find(|l| l.bucket == lane.bucket) {
+                Some(agg) => {
+                    agg.absorb(lane);
+                    agg.lanes_spawned += lane.lanes_spawned;
+                    agg.lanes_retired += lane.lanes_retired;
+                }
+                None => self.lanes.push(lane.clone()),
+            }
+        }
+        self.lanes.sort_by_key(|l| l.bucket);
+    }
+
     pub fn throughput_rps(&self) -> f64 {
         self.n_requests as f64 / self.wall_time.as_secs_f64()
     }
@@ -454,6 +520,57 @@ mod tests {
         assert!(lanes[1].get("n_streams").is_some_and(|v| v.as_u64().is_none()),
             "absent shape serializes as null");
         assert_eq!(lanes[1].get("steals").and_then(|v| v.as_u64()), Some(5));
+    }
+
+    #[test]
+    fn report_absorb_sums_counters_merges_latency_and_folds_lanes() {
+        let mut agg = ServingReport::empty();
+        agg.absorb(&ServingReport {
+            n_requests: 2,
+            n_batches: 2,
+            wall_time: Duration::from_secs(3),
+            latency: Summary::from_samples(vec![0.010, 0.030]),
+            mean_batch_fill: 1.0,
+            deadline_shed: 1,
+            admission_shed: 1,
+            failed: 0,
+            retries: 2,
+            lanes: vec![LaneStat {
+                n_batches: 2,
+                n_requests: 2,
+                lanes_spawned: 2,
+                lanes_retired: 1,
+                ..LaneStat::empty(1)
+            }],
+        });
+        // An idle replica (sentinel latency) must not skew percentiles.
+        agg.absorb(&ServingReport::empty());
+        agg.absorb(&ServingReport {
+            n_requests: 2,
+            n_batches: 1,
+            wall_time: Duration::from_secs(2),
+            latency: Summary::from_samples(vec![0.020, 0.040]),
+            mean_batch_fill: 2.0,
+            deadline_shed: 0,
+            admission_shed: 0,
+            failed: 3,
+            retries: 0,
+            lanes: vec![
+                LaneStat { n_batches: 1, n_requests: 2, lanes_spawned: 1, ..LaneStat::empty(1) },
+                LaneStat { lanes_spawned: 1, ..LaneStat::empty(8) },
+            ],
+        });
+        assert_eq!(agg.n_requests, 4);
+        assert_eq!(agg.n_batches, 3);
+        assert_eq!(agg.wall_time, Duration::from_secs(3), "concurrent replicas: max");
+        assert_eq!((agg.deadline_shed, agg.admission_shed, agg.failed, agg.retries), (1, 1, 3, 2));
+        assert!((agg.mean_batch_fill - 4.0 / 3.0).abs() < 1e-12, "batch-weighted fill");
+        assert_eq!(agg.latency.len(), 4, "samples merged, sentinel skipped");
+        assert!((agg.latency.max() - 0.040).abs() < 1e-12);
+        assert_eq!(agg.lanes.len(), 2, "per-bucket fold across replicas");
+        let b1 = agg.lane(1).unwrap();
+        assert_eq!((b1.n_requests, b1.lanes_spawned, b1.lanes_retired), (4, 3, 1));
+        assert_eq!(agg.lane(8).unwrap().lanes_spawned, 1);
     }
 
     #[test]

@@ -76,7 +76,7 @@ pub use crate::fault::{ChaosEngine, FaultPlan, RetryPolicy};
 pub use crate::telemetry::Telemetry;
 pub use runtime::{
     Health, InferOutcome, InferRequest, RequestOptions, Runtime, RuntimeBuilder, RuntimeHandle,
-    Ticket, DEADLINE_SHED,
+    Ticket, TicketFuture, DEADLINE_SHED,
 };
 pub use server::{NimbleServer, ServerClient, ServerConfig};
 pub use sim_engine::{TapeEngine, TapeEngineOptions};

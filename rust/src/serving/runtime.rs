@@ -54,7 +54,7 @@
 
 use anyhow::{Context, Result};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::lanes::{HealthState, LaneClient, LaneConfig, LaneServer, ScaleOptions};
@@ -289,6 +289,125 @@ impl Ticket {
             InferOutcome::DeadlineShed => Err(anyhow::anyhow!(shed_error())),
             InferOutcome::Failed(e) => Err(anyhow::anyhow!(e)),
         }
+    }
+
+    /// Block until *any* of `tickets` resolves; the winner is removed
+    /// from the vec and returned with the index it occupied. `None` iff
+    /// the vec is empty. Resolution is a cooperative poll (reply
+    /// channels have no native multiplexer), so ties break toward the
+    /// lowest index — deterministic for tests.
+    pub fn select(tickets: &mut Vec<Ticket>) -> Option<(usize, InferOutcome)> {
+        if tickets.is_empty() {
+            return None;
+        }
+        loop {
+            for i in 0..tickets.len() {
+                match tickets[i].rx.try_recv() {
+                    Ok(reply) => {
+                        tickets.remove(i);
+                        return Some((i, classify(reply)));
+                    }
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        tickets.remove(i);
+                        return Some((
+                            i,
+                            InferOutcome::Failed("server dropped request".to_string()),
+                        ));
+                    }
+                    Err(mpsc::TryRecvError::Empty) => {}
+                }
+            }
+            std::thread::sleep(SELECT_POLL);
+        }
+    }
+
+    /// Resolve every ticket, preserving submission order. Outcomes are
+    /// collected with [`outcome`](Self::outcome) semantics: a dropped
+    /// reply channel is `Failed`, never a panic or an `Err`, so the
+    /// result always has exactly `tickets.len()` entries.
+    pub fn join_all(tickets: Vec<Ticket>) -> Vec<InferOutcome> {
+        tickets
+            .into_iter()
+            .map(|t| {
+                t.outcome()
+                    .unwrap_or_else(|e| InferOutcome::Failed(e.to_string()))
+            })
+            .collect()
+    }
+
+    /// Adapt the ticket to a [`std::future::Future`] resolving to its
+    /// [`InferOutcome`]. The repo is executor-agnostic (no async
+    /// runtime dependency), so the adapter parks a small named thread
+    /// on the reply channel and wakes the registered waker on
+    /// resolution — correct under any executor, sized for request
+    /// counts (one thread per in-flight future), not for million-task
+    /// fan-out. `Ticket` also implements [`std::future::IntoFuture`],
+    /// so `rt.submit(req)?.await` works directly in async contexts.
+    pub fn into_future(self) -> TicketFuture {
+        let shared = Arc::new(Mutex::new(TicketFutureState {
+            outcome: None,
+            waker: None,
+        }));
+        let inner = Arc::clone(&shared);
+        let rx = self.rx;
+        std::thread::Builder::new()
+            .name("nimble-ticket-future".to_string())
+            .spawn(move || {
+                let outcome = match rx.recv() {
+                    Ok(reply) => classify(reply),
+                    Err(_) => InferOutcome::Failed("server dropped request".to_string()),
+                };
+                let mut st = inner.lock().unwrap_or_else(|e| e.into_inner());
+                st.outcome = Some(outcome);
+                if let Some(w) = st.waker.take() {
+                    w.wake();
+                }
+            })
+            .expect("spawn ticket-future waiter thread");
+        TicketFuture { shared }
+    }
+}
+
+/// Poll cadence for [`Ticket::select`] between sweeps over the pending
+/// reply channels.
+const SELECT_POLL: Duration = Duration::from_micros(50);
+
+struct TicketFutureState {
+    outcome: Option<InferOutcome>,
+    waker: Option<std::task::Waker>,
+}
+
+/// [`Future`](std::future::Future) adapter over a [`Ticket`]
+/// ([`Ticket::into_future`] / `ticket.await`); resolves to the
+/// ticket's [`InferOutcome`] exactly once.
+pub struct TicketFuture {
+    shared: Arc<Mutex<TicketFutureState>>,
+}
+
+impl std::future::Future for TicketFuture {
+    type Output = InferOutcome;
+
+    fn poll(
+        self: std::pin::Pin<&mut Self>,
+        cx: &mut std::task::Context<'_>,
+    ) -> std::task::Poll<InferOutcome> {
+        let mut st = self.shared.lock().unwrap_or_else(|e| e.into_inner());
+        match st.outcome.take() {
+            Some(out) => std::task::Poll::Ready(out),
+            None => {
+                st.waker = Some(cx.waker().clone());
+                std::task::Poll::Pending
+            }
+        }
+    }
+}
+
+impl std::future::IntoFuture for Ticket {
+    type Output = InferOutcome;
+    type IntoFuture = TicketFuture;
+
+    fn into_future(self) -> TicketFuture {
+        Ticket::into_future(self)
     }
 }
 
@@ -783,13 +902,17 @@ impl Runtime {
         let handle = RuntimeHandle {
             inner: HandleInner::Single(server.client(), Arc::clone(&health)),
             telemetry,
+            replica: None,
         };
         Runtime { inner: ServerInner::Single(server, health), handle }
     }
 
     fn from_lanes(server: LaneServer, telemetry: Option<Telemetry>) -> Runtime {
-        let handle =
-            RuntimeHandle { inner: HandleInner::Lanes(server.client()), telemetry };
+        let handle = RuntimeHandle {
+            inner: HandleInner::Lanes(server.client()),
+            telemetry,
+            replica: None,
+        };
         Runtime { inner: ServerInner::Lanes(server), handle }
     }
 
@@ -903,6 +1026,10 @@ pub struct RuntimeHandle {
     /// The flight recorder attached at build
     /// ([`RuntimeBuilder::telemetry`]), if any.
     telemetry: Option<Telemetry>,
+    /// Replica index stamped on every Prometheus sample
+    /// ([`with_replica_label`](Self::with_replica_label)); `None` keeps
+    /// the single-runtime exposition unchanged.
+    replica: Option<u32>,
 }
 
 impl RuntimeHandle {
@@ -954,9 +1081,36 @@ impl RuntimeHandle {
 
     /// Prometheus text exposition of the runtime's metrics (counters,
     /// the live-lanes gauge, latency/op-span histograms). `None`
-    /// without telemetry.
+    /// without telemetry. With a
+    /// [`with_replica_label`](Self::with_replica_label) index set,
+    /// every sample carries a `replica="<n>"` label so expositions
+    /// from multiple runtimes in one process merge without series
+    /// collisions ([`crate::cluster::Cluster::metrics_text`]).
     pub fn metrics_text(&self) -> Option<String> {
-        self.telemetry.as_ref().map(Telemetry::metrics_text)
+        let t = self.telemetry.as_ref()?;
+        Some(match self.replica {
+            Some(n) => t.metrics_text_labeled(&format!("replica=\"{n}\"")),
+            None => t.metrics_text(),
+        })
+    }
+
+    /// Stamp a replica index onto this handle: every Prometheus sample
+    /// from [`metrics_text`](Self::metrics_text) gains a
+    /// `replica="<n>"` label. Used by the cluster layer; harmless (and
+    /// available) on standalone runtimes running several to a process.
+    pub fn with_replica_label(mut self, replica: u32) -> RuntimeHandle {
+        self.replica = Some(replica);
+        self
+    }
+
+    /// Requests admitted but not yet pulled by the dispatcher — one of
+    /// the router's pressure inputs. Always `0` on the single-thread
+    /// topology (admission is synchronous there).
+    pub fn queue_depth(&self) -> usize {
+        match &self.inner {
+            HandleInner::Single(..) => 0,
+            HandleInner::Lanes(c) => c.queue_depth(),
+        }
     }
 
     /// Blocking inference: submit and wait for the output (shed and
@@ -1291,5 +1445,114 @@ mod tests {
         let report = rt.shutdown().unwrap();
         assert_eq!(report.failed, 1);
         assert_eq!(report.n_requests, 0);
+    }
+
+    #[test]
+    fn select_returns_the_first_resolved_ticket_and_removes_it() {
+        let (tx0, rx0) = mpsc::channel::<Result<Vec<f32>, String>>();
+        let (tx1, rx1) = mpsc::channel::<Result<Vec<f32>, String>>();
+        let mut tickets = vec![Ticket::new(rx0), Ticket::new(rx1)];
+        tx1.send(Ok(vec![2.0])).unwrap();
+        let (idx, out) = Ticket::select(&mut tickets).unwrap();
+        assert_eq!(idx, 1);
+        assert_eq!(out, InferOutcome::Output(vec![2.0]));
+        assert_eq!(tickets.len(), 1);
+        // The remaining ticket still resolves; a dropped sender counts
+        // as Failed, same as outcome().
+        drop(tx0);
+        let (idx, out) = Ticket::select(&mut tickets).unwrap();
+        assert_eq!(idx, 0);
+        assert_eq!(out, InferOutcome::Failed("server dropped request".to_string()));
+        assert!(Ticket::select(&mut tickets).is_none());
+    }
+
+    #[test]
+    fn join_all_preserves_submission_order_across_outcome_kinds() {
+        let (tx0, rx0) = mpsc::channel();
+        let (tx1, rx1) = mpsc::channel();
+        let (tx2, rx2) = mpsc::channel::<Result<Vec<f32>, String>>();
+        tx0.send(Ok(vec![1.0])).unwrap();
+        tx1.send(Err(shed_error())).unwrap();
+        drop(tx2);
+        let outs =
+            Ticket::join_all(vec![Ticket::new(rx0), Ticket::new(rx1), Ticket::new(rx2)]);
+        assert_eq!(
+            outs,
+            vec![
+                InferOutcome::Output(vec![1.0]),
+                InferOutcome::DeadlineShed,
+                InferOutcome::Failed("server dropped request".to_string()),
+            ]
+        );
+    }
+
+    /// Minimal executor for [`TicketFuture`]: park the test thread,
+    /// unpark on wake. Exercises the real waker path (the resolver
+    /// thread must wake a *registered* waker, not rely on polling).
+    fn block_on<F: std::future::Future>(fut: F) -> F::Output {
+        struct ThreadWaker(std::thread::Thread);
+        impl std::task::Wake for ThreadWaker {
+            fn wake(self: Arc<Self>) {
+                self.0.unpark();
+            }
+        }
+        let waker = std::task::Waker::from(Arc::new(ThreadWaker(std::thread::current())));
+        let mut cx = std::task::Context::from_waker(&waker);
+        let mut fut = std::pin::pin!(fut);
+        loop {
+            match fut.as_mut().poll(&mut cx) {
+                std::task::Poll::Ready(out) => return out,
+                std::task::Poll::Pending => std::thread::park(),
+            }
+        }
+    }
+
+    #[test]
+    fn ticket_future_resolves_through_a_registered_waker() {
+        let (tx, rx) = mpsc::channel();
+        let fut = Ticket::new(rx).into_future();
+        // Resolve only after the future is in flight, from another
+        // thread, so Ready must come via wake(), not the first poll.
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            tx.send(Ok(vec![4.0])).unwrap();
+        });
+        assert_eq!(block_on(fut), InferOutcome::Output(vec![4.0]));
+        sender.join().unwrap();
+        // IntoFuture sugar + dropped-sender path.
+        let (tx, rx) = mpsc::channel::<Result<Vec<f32>, String>>();
+        drop(tx);
+        let out = block_on(std::future::IntoFuture::into_future(Ticket::new(rx)));
+        assert_eq!(out, InferOutcome::Failed("server dropped request".to_string()));
+    }
+
+    #[test]
+    fn replica_label_stamps_every_metrics_sample() {
+        let rt = Runtime::builder()
+            .model("mini_inception")
+            .buckets(&[1])
+            .telemetry(Telemetry::new())
+            .build()
+            .unwrap();
+        let len = rt.example_len();
+        let _ = rt.infer(InferRequest::new(vec![0.1; len])).unwrap();
+        let handle = rt.handle().with_replica_label(3);
+        let text = handle.metrics_text().unwrap();
+        assert!(
+            text.contains("nimble_requests_admitted_total{replica=\"3\"} "),
+            "bare sample must gain the replica label:\n{text}"
+        );
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            assert!(
+                line.contains("replica=\"3\""),
+                "unlabeled sample in labeled exposition: {line}"
+            );
+        }
+        // The plain handle is unchanged.
+        assert!(!rt.handle().metrics_text().unwrap().contains("replica=\""));
+        let _ = rt.shutdown().unwrap();
     }
 }

@@ -1,0 +1,438 @@
+//! Cluster-scale DES: N device replicas — each its own SM pool and
+//! clock — under ONE arrival process, fronted by a mirror of the
+//! live replica router ([`crate::cluster::Cluster`]).
+//!
+//! Same measured-vs-predicted discipline as the lane, chaos, and EDF
+//! sims: the router's decision procedure is reproduced *exactly* —
+//! identical PCG32 draw protocol, identical pressure signal, identical
+//! tie-breaks — so a seeded closed-loop cluster run and
+//! [`simulate_cluster`] agree on completed / shed / per-replica
+//! admitted counts bit-for-bit (`benches/bench_cluster.rs` asserts
+//! this), and open-loop predictions are judged against measurement in
+//! `BENCH_cluster.json`.
+//!
+//! ## The router mirror
+//!
+//! Per request, in arrival order (the live router serializes decisions
+//! behind one mutex, so arrival order IS decision order):
+//!
+//! 1. **Door shed** — a deadline at or before the request's arrival is
+//!    shed *before* routing and consumes **no** RNG draw.
+//! 2. **Choice** — round-robin advances a counter over the routable
+//!    replicas (again no RNG); power-of-two-choices over `n ≥ 2`
+//!    replicas draws `a = rng.gen_range(n)`, then
+//!    `b = rng.gen_range(n - 1); if b >= a { b += 1 }` (distinct
+//!    second candidate), and keeps the lower **pressure score**
+//!    `(est, in_flight, index)` compared lexicographically, where
+//!    `est = ewma_queue_delay × in_flight`. One routable replica
+//!    consumes no draws.
+//!
+//! Closed-loop traffic (each request waits for the previous outcome)
+//! makes every pressure component identically zero, so decisions
+//! reduce to the seeded draws + index tie-break — the property the
+//! exact bench entry pins.
+
+use super::cost::KernelCost;
+use super::des::simulate_tape;
+use super::device::GpuSpec;
+use super::framework::HostProfile;
+use crate::util::Pcg32;
+
+/// The cluster's offered traffic: one model tape (every replica serves
+/// the same spec) and per-request `(arrival_s, deadline_s)` pairs,
+/// arrivals ascending; `f64::INFINITY` = no deadline, a deadline at or
+/// before arrival = shed at the door.
+pub struct ClusterTraffic<'a> {
+    pub tape: &'a crate::aot::tape::ReplayTape,
+    pub costs: &'a [KernelCost],
+    /// Request arrivals, ascending: `(arrival_s, absolute deadline_s)`.
+    pub requests: &'a [(f64, f64)],
+}
+
+/// The routing discipline [`simulate_cluster`] mirrors — the offline
+/// counterpart of `ClusterBuilder::{replicas, route_p2c, route_round_robin}`.
+#[derive(Debug, Clone)]
+pub struct ClusterSimPolicy {
+    /// Live device replicas (the sim has no mid-run drains).
+    pub replicas: usize,
+    /// Serving lanes per replica for the open-loop queue model
+    /// (irrelevant under `closed_loop`).
+    pub lanes_per_replica: usize,
+    /// Power-of-two-choices when true, round-robin when false.
+    pub p2c: bool,
+    /// Router RNG seed — must equal the live cluster's
+    /// `route_p2c(seed)` for exact-match runs.
+    pub seed: u64,
+    /// Closed-loop traffic: each request is submitted only after the
+    /// previous one resolved, so per-replica pressure is identically
+    /// zero at every decision and the run is exactly reproducible.
+    /// Open-loop (false) models each replica as a `lanes_per_replica`-
+    /// server queue under the arrival process.
+    pub closed_loop: bool,
+}
+
+/// Per-replica prediction of [`simulate_cluster`].
+#[derive(Debug, Clone)]
+pub struct ReplicaSimStat {
+    /// Requests the router sent to this replica.
+    pub admitted: usize,
+    /// Requests that started before their deadline.
+    pub completed: usize,
+    /// Requests shed after routing (expired while queued, or start
+    /// would miss the deadline) — door sheds are counted cluster-wide
+    /// in [`ClusterSimResult::router_shed`], not here.
+    pub shed: usize,
+    /// When this replica's last served request completes.
+    pub end_s: f64,
+}
+
+/// Output of [`simulate_cluster`].
+#[derive(Debug, Clone)]
+pub struct ClusterSimResult {
+    pub per_replica: Vec<ReplicaSimStat>,
+    /// Requests shed at the router's door (deadline already expired at
+    /// arrival), before any replica saw them.
+    pub router_shed: usize,
+    /// Makespan: closed-loop cumulative serve time, or the latest
+    /// replica completion under open loop.
+    pub total_s: f64,
+}
+
+impl ClusterSimResult {
+    pub fn completed(&self) -> usize {
+        self.per_replica.iter().map(|r| r.completed).sum()
+    }
+
+    /// All sheds: door sheds plus post-routing sheds on every replica
+    /// — the counterpart of the live cluster's
+    /// `router_shed + Σ deadline_shed`.
+    pub fn shed(&self) -> usize {
+        self.router_shed + self.per_replica.iter().map(|r| r.shed).sum::<usize>()
+    }
+
+    /// Per-replica admitted counts, replica order — the exact-match
+    /// routing signature the bench pins against the live run.
+    pub fn admitted_per_replica(&self) -> Vec<usize> {
+        self.per_replica.iter().map(|r| r.admitted).collect()
+    }
+
+    /// Shed fraction of everything offered.
+    pub fn shed_rate(&self) -> f64 {
+        let total = self.completed() + self.shed();
+        if total == 0 {
+            0.0
+        } else {
+            self.shed() as f64 / total as f64
+        }
+    }
+}
+
+/// Draw the router's power-of-two candidate pair over `n ≥ 2`
+/// routable replicas: two *distinct* indices, exactly two RNG draws.
+/// `pub(crate)` so the live router uses this very function — the
+/// mirror cannot drift.
+pub(crate) fn p2c_draw(rng: &mut Pcg32, n: usize) -> (usize, usize) {
+    debug_assert!(n >= 2);
+    let a = rng.gen_range(n);
+    let mut b = rng.gen_range(n - 1);
+    if b >= a {
+        b += 1;
+    }
+    (a, b)
+}
+
+/// Pressure comparison the router and this sim share: lexicographic
+/// `(est, in_flight, index)` with `f64::total_cmp` on the estimate.
+/// Returns the replica with the LOWER pressure.
+pub(crate) fn lower_pressure(
+    a: (f64, usize, usize),
+    b: (f64, usize, usize),
+) -> usize {
+    match a.0.total_cmp(&b.0) {
+        std::cmp::Ordering::Less => a.2,
+        std::cmp::Ordering::Greater => b.2,
+        std::cmp::Ordering::Equal => {
+            if (a.1, a.2) <= (b.1, b.2) {
+                a.2
+            } else {
+                b.2
+            }
+        }
+    }
+}
+
+/// Cluster prediction: route the arrival stream through the mirrored
+/// router (see the [module docs](self)) onto `replicas` independent
+/// device models, each serving requests at the tape's single-lane DES
+/// latency ([`simulate_tape`]`.total_s`) on `lanes_per_replica`
+/// servers. Closed-loop runs are exact mirrors of a seeded live run;
+/// open-loop runs predict throughput/shed under concurrency the same
+/// way [`simulate_edf`](super::simulate_edf) does for one device.
+pub fn simulate_cluster(
+    traffic: &ClusterTraffic,
+    host: HostProfile,
+    device: GpuSpec,
+    policy: &ClusterSimPolicy,
+) -> ClusterSimResult {
+    assert!(policy.replicas >= 1, "need at least one replica");
+    assert!(policy.lanes_per_replica >= 1, "need at least one lane per replica");
+    let n = policy.replicas;
+    let service_s = simulate_tape(traffic.tape, traffic.costs, host, device).total_s;
+    let mut rng = Pcg32::new(policy.seed);
+    let mut rr = 0usize;
+    let mut router_shed = 0usize;
+
+    // Per-replica state. `lanes` holds server free-times (open loop);
+    // `queue` the admitted, undispatched requests (deadline, arrival);
+    // `warm_at` the EWMA warm instant (first completion, the same
+    // quantization simulate_edf uses for constant service times).
+    struct Rep {
+        admitted: usize,
+        completed: usize,
+        shed: usize,
+        end_s: f64,
+        lanes: Vec<f64>,
+        queue: Vec<(f64, f64)>,
+        warm_at: f64,
+    }
+    let mut reps: Vec<Rep> = (0..n)
+        .map(|_| Rep {
+            admitted: 0,
+            completed: 0,
+            shed: 0,
+            end_s: 0.0,
+            lanes: vec![0.0; policy.lanes_per_replica],
+            queue: Vec::new(),
+            warm_at: f64::INFINITY,
+        })
+        .collect();
+
+    // Dispatch a replica's queued requests (FIFO — one bucket) onto
+    // lanes that free before `until`.
+    let dispatch_until = |rep: &mut Rep, until: f64| {
+        while !rep.queue.is_empty() {
+            let li = (0..rep.lanes.len())
+                .min_by(|&a, &b| rep.lanes[a].total_cmp(&rep.lanes[b]))
+                .unwrap();
+            if rep.lanes[li] >= until {
+                break;
+            }
+            let (deadline, arrival) = rep.queue.remove(0);
+            let start = rep.lanes[li].max(arrival);
+            if start >= deadline {
+                rep.shed += 1; // expired while queued; the lane stays free
+                continue;
+            }
+            let end = start + service_s;
+            rep.lanes[li] = end;
+            rep.completed += 1;
+            rep.warm_at = rep.warm_at.min(end);
+            rep.end_s = rep.end_s.max(end);
+        }
+    };
+
+    let mut clock = 0.0f64; // closed-loop serial clock
+    for &(arrival, deadline) in traffic.requests {
+        assert!(arrival >= 0.0, "arrivals must be non-negative");
+        let now = if policy.closed_loop { clock.max(arrival) } else { arrival };
+        // 1. Door shed: expired on arrival, no routing, no RNG draw.
+        if deadline <= now {
+            router_shed += 1;
+            continue;
+        }
+        // Open loop: bring every replica's model up to `now` so the
+        // pressure signal reflects work finished before this decision.
+        if !policy.closed_loop {
+            for rep in reps.iter_mut() {
+                dispatch_until(rep, now);
+            }
+        }
+        // 2. Choice.
+        let pressure = |rep: &Rep, idx: usize| -> (f64, usize, usize) {
+            if policy.closed_loop {
+                // Each request waits for the previous outcome, so
+                // nothing is ever in flight at a decision.
+                return (0.0, 0, idx);
+            }
+            let in_flight =
+                rep.queue.len() + rep.lanes.iter().filter(|&&f| f > now).count();
+            let ewma = if now < rep.warm_at { 0.0 } else { service_s };
+            (ewma * in_flight as f64, in_flight, idx)
+        };
+        let chosen = if !policy.p2c {
+            let c = rr % n;
+            rr += 1;
+            c
+        } else if n == 1 {
+            0
+        } else {
+            let (a, b) = p2c_draw(&mut rng, n);
+            lower_pressure(pressure(&reps[a], a), pressure(&reps[b], b))
+        };
+        // 3. Serve.
+        let rep = &mut reps[chosen];
+        rep.admitted += 1;
+        if policy.closed_loop {
+            // Sequential-blocking client: the request runs alone,
+            // starting the moment it is admitted.
+            let start = now;
+            if start >= deadline {
+                rep.shed += 1;
+            } else {
+                rep.completed += 1;
+                clock = start + service_s;
+                rep.end_s = clock;
+                rep.warm_at = rep.warm_at.min(clock);
+            }
+        } else {
+            rep.queue.push((deadline, now));
+        }
+    }
+    // Open loop: flush everything still queued.
+    if !policy.closed_loop {
+        for rep in reps.iter_mut() {
+            dispatch_until(rep, f64::INFINITY);
+        }
+    }
+    let total_s = if policy.closed_loop {
+        clock
+    } else {
+        reps.iter().map(|r| r.end_s).fold(0.0, f64::max)
+    };
+    ClusterSimResult {
+        per_replica: reps
+            .into_iter()
+            .map(|r| ReplicaSimStat {
+                admitted: r.admitted,
+                completed: r.completed,
+                shed: r.shed,
+                end_s: r.end_s,
+            })
+            .collect(),
+        router_shed,
+        total_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aot::tape::ReplayTape;
+    use crate::matching::MatchingAlgo;
+    use crate::sim::cost::kernel_cost;
+    use crate::stream::rewrite::rewrite;
+
+    fn tape_and_costs() -> (ReplayTape, Vec<KernelCost>) {
+        let g = crate::models::build("mini_inception", 1);
+        let dev = GpuSpec::v100();
+        let costs: Vec<KernelCost> =
+            (0..g.n_nodes()).map(|v| kernel_cost(g.node(v), &dev)).collect();
+        let tape =
+            ReplayTape::for_op_graph(&g, &rewrite(&g, MatchingAlgo::HopcroftKarp), 4096);
+        (tape, costs)
+    }
+
+    #[test]
+    fn closed_loop_round_robin_spreads_evenly_and_sheds_at_the_door() {
+        let (tape, costs) = tape_and_costs();
+        let requests: Vec<(f64, f64)> = (0..8)
+            .map(|i| if i % 4 == 3 { (0.0, 0.0) } else { (0.0, f64::INFINITY) })
+            .collect();
+        let r = simulate_cluster(
+            &ClusterTraffic { tape: &tape, costs: &costs, requests: &requests },
+            HostProfile::nimble(),
+            GpuSpec::v100(),
+            &ClusterSimPolicy {
+                replicas: 3,
+                lanes_per_replica: 1,
+                p2c: false,
+                seed: 1,
+                closed_loop: true,
+            },
+        );
+        assert_eq!(r.router_shed, 2, "deadline <= arrival sheds before routing");
+        assert_eq!(r.completed(), 6);
+        assert_eq!(r.shed(), 2);
+        // Round-robin over 6 routed requests and 3 replicas: 2 each.
+        assert_eq!(r.admitted_per_replica(), vec![2, 2, 2]);
+        assert!(r.total_s > 0.0);
+    }
+
+    #[test]
+    fn closed_loop_p2c_is_deterministic_in_the_seed() {
+        let (tape, costs) = tape_and_costs();
+        let requests = vec![(0.0, f64::INFINITY); 32];
+        let policy = |seed| ClusterSimPolicy {
+            replicas: 4,
+            lanes_per_replica: 1,
+            p2c: true,
+            seed,
+            closed_loop: true,
+        };
+        let t = ClusterTraffic { tape: &tape, costs: &costs, requests: &requests };
+        let a =
+            simulate_cluster(&t, HostProfile::nimble(), GpuSpec::v100(), &policy(7));
+        let b =
+            simulate_cluster(&t, HostProfile::nimble(), GpuSpec::v100(), &policy(7));
+        assert_eq!(a.admitted_per_replica(), b.admitted_per_replica());
+        assert_eq!(a.completed(), 32);
+        // Zero pressure everywhere: every choice is min(a, b) of the
+        // two draws, which skews admissions toward LOW indices — the
+        // tie-break signature the live router shares.
+        let admitted = a.admitted_per_replica();
+        assert!(
+            admitted[0] >= admitted[3],
+            "min-index tie-break must favor replica 0: {admitted:?}"
+        );
+        let c =
+            simulate_cluster(&t, HostProfile::nimble(), GpuSpec::v100(), &policy(8));
+        assert_eq!(c.completed(), 32, "different seed still completes everything");
+    }
+
+    #[test]
+    fn open_loop_p2c_beats_a_queue_only_router_under_burst() {
+        let (tape, costs) = tape_and_costs();
+        // A burst far above one replica's service rate with tight
+        // deadlines: spreading by pressure must shed no more than
+        // blind round-robin (it sees queue depth, RR does not).
+        let service = simulate_tape(
+            &tape,
+            &costs,
+            HostProfile::nimble(),
+            GpuSpec::v100(),
+        )
+        .total_s;
+        let requests: Vec<(f64, f64)> = (0..64)
+            .map(|i| {
+                let arrival = i as f64 * service / 8.0;
+                (arrival, arrival + 3.0 * service)
+            })
+            .collect();
+        let t = ClusterTraffic { tape: &tape, costs: &costs, requests: &requests };
+        let mk = |p2c| ClusterSimPolicy {
+            replicas: 2,
+            lanes_per_replica: 2,
+            p2c,
+            seed: 11,
+            closed_loop: false,
+        };
+        let p2c = simulate_cluster(&t, HostProfile::nimble(), GpuSpec::v100(), &mk(true));
+        let rr = simulate_cluster(&t, HostProfile::nimble(), GpuSpec::v100(), &mk(false));
+        assert_eq!(p2c.completed() + p2c.shed(), 64);
+        assert_eq!(rr.completed() + rr.shed(), 64);
+        assert!(
+            p2c.shed() <= rr.shed() + 4,
+            "p2c shed {} must not collapse vs round-robin {}",
+            p2c.shed(),
+            rr.shed()
+        );
+        // More replicas serve strictly more of the same offered load.
+        let wide = simulate_cluster(
+            &t,
+            HostProfile::nimble(),
+            GpuSpec::v100(),
+            &ClusterSimPolicy { replicas: 4, ..mk(true) },
+        );
+        assert!(wide.completed() >= p2c.completed());
+    }
+}

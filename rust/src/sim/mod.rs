@@ -8,6 +8,7 @@
 //! cross-stream synchronization, SM-capacity-bounded kernel overlap, GPU
 //! active time (Fig. 2a), and critical-path time (Fig. 2c).
 
+pub mod cluster;
 pub mod cost;
 pub mod des;
 pub mod device;
@@ -15,6 +16,9 @@ pub mod framework;
 pub mod metrics;
 pub mod trace;
 
+pub use cluster::{
+    simulate_cluster, ClusterSimPolicy, ClusterSimResult, ClusterTraffic, ReplicaSimStat,
+};
 pub use cost::{kernel_cost, CostEntry, CostProfile, KernelCost};
 pub use des::{
     peak_reserved_bytes, simulate, simulate_edf, simulate_faults, simulate_lanes,

@@ -243,6 +243,49 @@ impl Metrics {
         );
         out
     }
+
+    /// [`prometheus_text`](Self::prometheus_text) with an extra label
+    /// pair (e.g. `replica="2"`) injected into every sample so several
+    /// registries can merge into one exposition without colliding
+    /// series — the multi-runtime fix for processes that scrape more
+    /// than one [`Metrics`].
+    pub fn prometheus_text_labeled(
+        &self,
+        emitted: u64,
+        recorded: u64,
+        dropped: u64,
+        label: &str,
+    ) -> String {
+        inject_label(&self.prometheus_text(emitted, recorded, dropped), label)
+    }
+}
+
+/// Inject one `key="value"` label pair into every sample line of a
+/// Prometheus text exposition (comment lines pass through). Labeled
+/// samples get the pair prepended to their label set; bare samples get
+/// a label set.
+pub(crate) fn inject_label(text: &str, label: &str) -> String {
+    let mut out = String::with_capacity(text.len() + 64);
+    for line in text.lines() {
+        if line.starts_with('#') || line.is_empty() {
+            out.push_str(line);
+        } else if let Some(brace) = line.find('{') {
+            out.push_str(&line[..brace + 1]);
+            out.push_str(label);
+            out.push(',');
+            out.push_str(&line[brace + 1..]);
+        } else if let Some(space) = line.find(' ') {
+            out.push_str(&line[..space]);
+            out.push('{');
+            out.push_str(label);
+            out.push('}');
+            out.push_str(&line[space..]);
+        } else {
+            out.push_str(line);
+        }
+        out.push('\n');
+    }
+    out
 }
 
 impl Default for Metrics {
@@ -267,6 +310,26 @@ mod tests {
         assert!(out.contains("t_bucket{le=\"0.00001\"} 1\n"));
         assert!(out.contains("t_bucket{le=\"+Inf\"} 3\n"));
         assert!(out.contains("t_count 3\n"));
+    }
+
+    #[test]
+    fn labeled_exposition_tags_every_sample_and_spares_comments() {
+        let m = Metrics::new();
+        m.kind_counts[EventKind::Admit as usize].fetch_add(2, Ordering::Relaxed);
+        m.latency.observe(1e-3);
+        let text = m.prometheus_text_labeled(3, 3, 0, "replica=\"1\"");
+        assert!(text.contains("nimble_requests_admitted_total{replica=\"1\"} 2\n"));
+        assert!(
+            text.contains("nimble_deadline_shed_total{replica=\"1\",stage=\"admission\"} 0\n"),
+            "labeled families must get the pair prepended: {text}"
+        );
+        assert!(text.contains("# TYPE nimble_requests_admitted_total counter\n"));
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.contains("replica=\"1\""),
+                "unlabeled sample in labeled exposition: {line}"
+            );
+        }
     }
 
     #[test]

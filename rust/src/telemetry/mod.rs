@@ -442,6 +442,20 @@ impl Telemetry {
         self.inner.metrics.prometheus_text(snap.emitted, snap.recorded, snap.dropped)
     }
 
+    /// [`metrics_text`](Self::metrics_text) with a `key="value"` label
+    /// pair injected into every sample — used by multi-runtime
+    /// processes (one recorder per device replica) so merged
+    /// expositions never collide series.
+    pub fn metrics_text_labeled(&self, label: &str) -> String {
+        let snap = self.snapshot();
+        self.inner.metrics.prometheus_text_labeled(
+            snap.emitted,
+            snap.recorded,
+            snap.dropped,
+            label,
+        )
+    }
+
     /// Chrome-trace JSON of the measured run, using registered labels.
     pub fn chrome_trace(&self) -> String {
         let snap = self.snapshot();

@@ -28,6 +28,13 @@ impl Summary {
         self.sorted.len()
     }
 
+    /// The raw sorted samples (in the caller's unit) — lets
+    /// aggregators merge summaries losslessly instead of mixing
+    /// percentiles (the cluster report fold uses this).
+    pub fn samples(&self) -> &[f64] {
+        &self.sorted
+    }
+
     pub fn is_empty(&self) -> bool {
         self.sorted.is_empty()
     }

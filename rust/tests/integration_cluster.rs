@@ -1,0 +1,216 @@
+//! Cluster-layer integration: drain rerouting with zero dangling
+//! tickets, dead-letter failover off a lethally-faulted replica, the
+//! deterministic SLO replica scale-out, and the merged Prometheus
+//! exposition.
+
+use nimble::cluster::{Cluster, ReplicaState};
+use nimble::fault::FaultPlan;
+use nimble::serving::{InferOutcome, InferRequest};
+use std::time::{Duration, Instant};
+
+const TIMEOUT: Duration = Duration::from_secs(60);
+
+fn mini_cluster(replicas: usize) -> Cluster {
+    Cluster::builder()
+        .model("mini_inception")
+        .buckets(&[1, 4])
+        .replicas(replicas)
+        .route_p2c(5)
+        .build()
+        .expect("cluster builds")
+}
+
+/// The drain regression the ISSUE pins: a draining replica's traffic
+/// reroutes to survivors and not one ticket dangles — every request
+/// submitted before, during, and after the drain resolves.
+#[test]
+fn draining_replica_reroutes_traffic_with_zero_dangling_tickets() {
+    let cluster = mini_cluster(3);
+    let len = cluster.example_len();
+    let input = |i: usize| vec![i as f32 / 64.0; len];
+
+    // Phase 1: a burst admitted while all three replicas are live.
+    let mut tickets = Vec::new();
+    for i in 0..12 {
+        tickets.push(cluster.submit(InferRequest::new(input(i))).expect("routable"));
+    }
+    // Drain replica 0 with that burst still in flight: its admitted
+    // work must flush, not drop.
+    let drained = cluster.drain_replica(0).expect("drain flushes");
+    assert_eq!(
+        drained.n_requests + drained.deadline_shed + drained.failed,
+        drained.n_requests,
+        "a faultless, deadline-less drain flushes everything as output"
+    );
+    assert_eq!(cluster.live_replicas(), 2);
+
+    // Phase 2: traffic after the drain routes to the survivors.
+    for i in 12..24 {
+        let t = cluster.submit(InferRequest::new(input(i))).expect("still routable");
+        assert_ne!(t.replica(), Some(0), "drained replica must leave the routable set");
+        tickets.push(t);
+    }
+
+    // Zero dangling: every ticket resolves, all as outputs.
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.outcome_timeout(TIMEOUT).expect("ticket must resolve") {
+            InferOutcome::Output(v) => assert_eq!(v.len(), cluster.output_len(), "ticket {i}"),
+            other => panic!("ticket {i} resolved {other:?}, expected output"),
+        }
+    }
+    let report = cluster.shutdown().expect("drains");
+    assert_eq!(report.submitted, 24);
+    assert_eq!(report.completed(), 24);
+    assert_eq!(report.router_shed, 0);
+    assert!(report.accounting_closes(), "{}", report.render());
+    assert_eq!(report.per_replica[0].state, ReplicaState::Retired);
+    assert_eq!(report.leased_arena_bytes, 0, "arena pools must balance");
+}
+
+/// A replica whose engine always errors dead-letters everything routed
+/// to it; the cluster tickets fail over to the healthy replica and the
+/// client sees only outputs.
+#[test]
+fn lethal_replica_dead_letters_fail_over_to_survivors() {
+    let lethal = FaultPlan { engine_error: 1.0, ..FaultPlan::seeded(13) };
+    let cluster = Cluster::builder()
+        .model("mini_inception")
+        .buckets(&[1])
+        .replicas(2)
+        .route_p2c(17)
+        .replica_fault_plan(0, lethal)
+        .failover(2)
+        .build()
+        .expect("cluster builds");
+    let len = cluster.example_len();
+
+    let tickets: Vec<_> = (0..16)
+        .map(|i| cluster.submit(InferRequest::new(vec![i as f32 / 16.0; len])).unwrap())
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.outcome_timeout(TIMEOUT).expect("ticket must resolve") {
+            InferOutcome::Output(_) => {}
+            other => panic!("ticket {i} resolved {other:?} despite failover"),
+        }
+    }
+    let report = cluster.shutdown().expect("drains");
+    assert_eq!(report.completed(), 16, "every request completes via failover");
+    assert!(
+        report.failovers >= 1,
+        "p2c over a 2-replica cluster must route something to the lethal replica"
+    );
+    assert_eq!(report.failed(), report.failovers as usize, "each dead letter failed over once");
+    assert!(report.accounting_closes(), "{}", report.render());
+}
+
+/// Killing a replica mid-flight: its in-flight dead letters fail over,
+/// nothing dangles, and the slot reports `Failed`.
+#[test]
+fn killed_replica_mid_flight_leaves_no_dangling_tickets() {
+    let lethal = FaultPlan { engine_error: 1.0, ..FaultPlan::seeded(29) };
+    let cluster = Cluster::builder()
+        .model("mini_inception")
+        .buckets(&[1])
+        .replicas(2)
+        .route_round_robin()
+        .replica_fault_plan(0, lethal)
+        .build()
+        .expect("cluster builds");
+    let len = cluster.example_len();
+
+    let tickets: Vec<_> = (0..8)
+        .map(|i| cluster.submit(InferRequest::new(vec![i as f32 / 8.0; len])).unwrap())
+        .collect();
+    // Kill the lethal replica while the round-robin burst is in flight.
+    let _ = cluster.kill_replica(0).expect("kill resolves in-flight work");
+    assert_eq!(cluster.replica_states()[0], ReplicaState::Failed);
+
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.outcome_timeout(TIMEOUT).expect("ticket must resolve") {
+            InferOutcome::Output(_) => {}
+            other => panic!("ticket {i} resolved {other:?} despite failover"),
+        }
+    }
+    let report = cluster.shutdown().expect("drains");
+    assert_eq!(report.completed(), 8);
+    assert!(report.accounting_closes(), "{}", report.render());
+}
+
+/// The SLO controller couples to replica count deterministically:
+/// all-expired traffic breaches two 32-outcome windows back-to-back and
+/// spawns exactly one replica (the `max_replicas(2)` ceiling).
+#[test]
+fn slo_breach_scales_out_replicas_up_to_the_ceiling() {
+    let cluster = Cluster::builder()
+        .model("mini_inception")
+        .buckets(&[1])
+        .replicas(1)
+        .max_replicas(2)
+        .slo(0.5)
+        .build()
+        .expect("cluster builds");
+    let len = cluster.example_len();
+    assert_eq!(cluster.live_replicas(), 1);
+
+    // 96 requests already expired at the door: shed rate 1.0 in every
+    // window, no timing involved.
+    let mut tickets = Vec::new();
+    for _ in 0..96 {
+        let req = InferRequest::new(vec![0.0; len]).deadline(Instant::now());
+        tickets.push(cluster.submit(req).expect("door shed still yields a ticket"));
+    }
+    assert_eq!(
+        cluster.live_replicas(),
+        2,
+        "two consecutive breached windows must spawn a replica"
+    );
+    for t in tickets {
+        assert!(matches!(
+            t.outcome_timeout(TIMEOUT).expect("resolves"),
+            InferOutcome::DeadlineShed
+        ));
+    }
+    let report = cluster.shutdown().expect("drains");
+    assert_eq!(report.replicas_spawned, 1, "the ceiling caps scale-out");
+    assert_eq!(report.router_shed, 96);
+    assert!(report.accounting_closes(), "{}", report.render());
+}
+
+/// The merged exposition: every sample labeled with its replica, one
+/// HELP/TYPE header per family across the whole cluster.
+#[test]
+fn cluster_exposition_merges_replica_labels_without_collisions() {
+    let cluster = Cluster::builder()
+        .model("mini_inception")
+        .buckets(&[1])
+        .replicas(3)
+        .telemetry()
+        .build()
+        .expect("cluster builds");
+    let len = cluster.example_len();
+    for i in 0..6 {
+        cluster.infer(InferRequest::new(vec![i as f32 / 8.0; len])).expect("serves");
+    }
+    let text = cluster.metrics_text().expect("telemetry attached");
+    // One metadata header per family, cluster-wide.
+    for name in ["nimble_requests_admitted_total", "nimble_spans_recorded_total"] {
+        assert_eq!(
+            text.matches(&format!("# HELP {name}")).count(),
+            1,
+            "duplicate HELP for {name}:\n{text}"
+        );
+        assert_eq!(
+            text.matches(&format!("# TYPE {name}")).count(),
+            1,
+            "duplicate TYPE for {name}:\n{text}"
+        );
+    }
+    // Every sample carries a replica label; no series repeats.
+    let mut seen = std::collections::HashSet::new();
+    for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+        let series = line.rsplit_once(' ').map(|(s, _)| s).unwrap_or(line);
+        assert!(series.contains("replica=\""), "unlabeled sample: {line}");
+        assert!(seen.insert(series.to_string()), "duplicate series: {series}");
+    }
+    let _ = cluster.shutdown().expect("drains");
+}

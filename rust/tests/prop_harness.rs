@@ -1234,3 +1234,145 @@ fn strict_verification_is_execution_neutral() {
         Ok(())
     });
 }
+
+/// ≥100 random cases of the cluster layer: random replica counts,
+/// bursty hinted/deadline traffic, and mid-run drain/kill churn.
+/// Surviving outputs stay bit-identical to the serial oracle, exactly
+/// the expired requests shed (at the router's door), no ticket is left
+/// unresolved, the cluster-wide accounting closes, and every replica's
+/// arena pool balances to zero leased bytes after shutdown.
+#[test]
+fn cluster_routing_survives_churn_bit_identical_with_closed_accounting() {
+    use nimble::cluster::Cluster;
+
+    check_from("cluster-churn", base_seed() ^ 0x0C10_57E2, 100, |rng| {
+        let n_nodes = rng.gen_range_inclusive(8, 48);
+        let graph_seed = rng.next_u64();
+        let mut buckets = random_buckets(rng);
+        buckets.truncate(2);
+        let replicas = rng.gen_range_inclusive(1, 4);
+        let build = move |b: usize| random_cell(&mut Pcg32::new(graph_seed), n_nodes, b);
+
+        let mut oracle = oracle_engine(graph_seed, n_nodes, &buckets)?;
+        let builder = Cluster::builder()
+            .label("rand-cell")
+            .graph_fn(build)
+            .buckets(&buckets)
+            .replicas(replicas)
+            .worker_cap(2)
+            .lane_config(roomy_config(Duration::from_micros(200)));
+        let builder = if rng.gen_range_inclusive(0, 1) == 1 {
+            builder.route_p2c(rng.next_u64())
+        } else {
+            builder.route_round_robin()
+        };
+        let cluster =
+            builder.build().map_err(|e| format!("cluster start failed: {e:#}"))?;
+
+        // Bursty traffic: pre-formed batches (pinned composition), some
+        // bucket-hinted, roughly a third already expired at the door.
+        let n_jobs = rng.gen_range_inclusive(4, 12);
+        let jobs: Vec<(usize, Vec<f32>, bool)> = (0..n_jobs)
+            .map(|_| {
+                let bucket = *rng.choose(&buckets);
+                let input = random_input(rng, bucket * RANDOM_CELL_EXAMPLE_LEN);
+                let expired = rng.gen_range_inclusive(0, 2) == 0;
+                (bucket, input, expired)
+            })
+            .collect();
+        let hinted: Vec<bool> =
+            (0..n_jobs).map(|_| rng.gen_range_inclusive(0, 1) == 1).collect();
+        // Mid-run churn: at a random point in the burst, drain or kill
+        // one replica (only while another stays live to reroute to).
+        let churn_at = rng.gen_range_inclusive(0, n_jobs);
+        let churn_kill = rng.gen_range_inclusive(0, 1) == 1;
+        let churn_target = rng.gen_range_inclusive(0, replicas - 1);
+
+        let mut pending = Vec::with_capacity(n_jobs);
+        for (i, (bucket, input, expired)) in jobs.iter().enumerate() {
+            if i == churn_at && cluster.live_replicas() > 1 {
+                let rep = if churn_kill {
+                    cluster.kill_replica(churn_target)
+                } else {
+                    cluster.drain_replica(churn_target)
+                };
+                rep.map_err(|e| format!("churn on replica {churn_target} failed: {e:#}"))?;
+            }
+            let mut req = InferRequest::batch(*bucket, input.clone());
+            if hinted[i] {
+                req = req.hint(*bucket);
+            }
+            if *expired {
+                req = req.deadline(Instant::now());
+            }
+            pending.push(
+                cluster.submit(req).map_err(|e| format!("submit {i} failed: {e:#}"))?,
+            );
+        }
+
+        let (mut completed, mut shed) = (0usize, 0usize);
+        for (i, ((bucket, input, expired), ticket)) in
+            jobs.iter().zip(pending).enumerate()
+        {
+            let outcome = ticket
+                .outcome_timeout(Duration::from_secs(60))
+                .map_err(|e| format!("job {i}: ticket unresolved (dangling?): {e:#}"))?;
+            match outcome {
+                InferOutcome::Output(got) => {
+                    completed += 1;
+                    ensure(!expired, || format!("job {i} completed past its deadline"))?;
+                    let want = oracle
+                        .infer_batch(*bucket, input)
+                        .map_err(|e| format!("oracle replay failed: {e:#}"))?;
+                    ensure(got.len() == want.len(), || {
+                        format!("job {i}: output length {} != {}", got.len(), want.len())
+                    })?;
+                    for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+                        ensure(a.to_bits() == b.to_bits(), || {
+                            format!(
+                                "job {i} (bucket {bucket}) diverged at {j}: {a:?} vs {b:?} \
+                                 (graph seed {graph_seed:#x})"
+                            )
+                        })?;
+                    }
+                }
+                InferOutcome::DeadlineShed => {
+                    shed += 1;
+                    ensure(*expired, || format!("job {i} shed without a deadline"))?;
+                }
+                InferOutcome::Failed(e) => {
+                    return Err(format!("job {i} failed without injected faults: {e}"));
+                }
+            }
+        }
+        let n_expired = jobs.iter().filter(|(_, _, e)| *e).count();
+        ensure(completed + shed == n_jobs, || {
+            format!("{completed} completed + {shed} shed != {n_jobs} submitted")
+        })?;
+        ensure(shed == n_expired, || {
+            format!("{shed} shed != {n_expired} expired at the door")
+        })?;
+
+        let report =
+            cluster.shutdown().map_err(|e| format!("cluster shutdown failed: {e:#}"))?;
+        ensure(report.submitted == n_jobs as u64, || {
+            format!("report counts {} submissions, clients made {n_jobs}", report.submitted)
+        })?;
+        ensure(report.router_shed == n_expired as u64, || {
+            format!("{} door sheds != {n_expired} expired", report.router_shed)
+        })?;
+        ensure(report.completed() == completed, || {
+            format!("report counts {} completions, clients saw {completed}", report.completed())
+        })?;
+        ensure(report.accounting_closes(), || {
+            format!("cluster accounting must close:\n{}", report.render())
+        })?;
+        ensure(report.leased_arena_bytes == 0, || {
+            format!(
+                "{} arena bytes still leased after cluster shutdown (graph seed {graph_seed:#x})",
+                report.leased_arena_bytes
+            )
+        })?;
+        Ok(())
+    });
+}
