@@ -106,7 +106,7 @@ fn sim_exact() -> String {
         &ClusterTraffic { tape: &tape, costs: &costs, requests: &requests },
         HostProfile::nimble(),
         GpuSpec::v100(),
-        ClusterSimPolicy {
+        &ClusterSimPolicy {
             replicas: 2,
             lanes_per_replica: 1,
             p2c: true,
@@ -215,7 +215,7 @@ fn scale() -> String {
             &ClusterTraffic { tape: &tape, costs: &costs, requests: &requests },
             HostProfile::nimble(),
             GpuSpec::v100(),
-            ClusterSimPolicy {
+            &ClusterSimPolicy {
                 replicas,
                 lanes_per_replica: 1,
                 p2c: true,

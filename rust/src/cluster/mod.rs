@@ -355,12 +355,7 @@ impl ClusterShared {
                 Err(e) => {
                     // Validation errors fail on every replica alike —
                     // propagate them instead of spinning the router.
-                    let msg = format!("{e:#}");
-                    if msg.contains("bad input length")
-                        || msg.contains("bad batch length")
-                        || msg.contains("no compiled bucket")
-                        || msg.contains("contradicts")
-                    {
+                    if crate::serving::is_validation_error(&e) {
                         return Err(e);
                     }
                     routable.retain(|&i| i != chosen);
@@ -703,9 +698,9 @@ impl Cluster {
     /// transparently.
     pub fn submit(&self, req: InferRequest) -> Result<ClusterTicket> {
         let shared = Arc::clone(&self.shared);
-        shared.submitted.fetch_add(1, Ordering::Relaxed);
         // Door shed: expired before routing — no draw, no replica.
         if req.opts.deadline.is_some_and(|d| d <= Instant::now()) {
+            shared.submitted.fetch_add(1, Ordering::Relaxed);
             shared.router_shed.fetch_add(1, Ordering::Relaxed);
             shared.note_outcome(true);
             return Ok(ClusterTicket {
@@ -718,6 +713,10 @@ impl Cluster {
             });
         }
         let (ticket, replica, stats) = shared.admit(&req, None)?;
+        // Count only accepted submissions: an errored admit (bad
+        // input, nothing routable) must not skew the accounting
+        // invariant `submitted == completed + shed + failed`.
+        shared.submitted.fetch_add(1, Ordering::Relaxed);
         Ok(ClusterTicket {
             inner: Some(ticket),
             route: Some((replica, stats)),
@@ -911,14 +910,26 @@ impl ClusterTicket {
     }
 
     /// Like [`outcome`](Self::outcome) with a per-attempt wait bound;
-    /// `Err` only on timeout.
-    pub fn outcome_timeout(mut self, timeout: Duration) -> Result<InferOutcome> {
+    /// `Err` only on timeout or if the ticket already resolved. A
+    /// timeout does NOT abandon the request: the inner ticket and its
+    /// in-flight slot stay held (the replica is still executing it),
+    /// so call again to keep waiting — or drop the `ClusterTicket`,
+    /// which releases the slot only because the wait was abandoned.
+    pub fn outcome_timeout(&mut self, timeout: Duration) -> Result<InferOutcome> {
         loop {
-            let out = self
+            let Some(out) = self
                 .inner
-                .take()
-                .expect("an unresolved ticket owns its channel")
-                .outcome_timeout(timeout)?;
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("ticket already resolved"))?
+                .poll_timeout(timeout)
+            else {
+                // Timed out: leave `inner` and `route` untouched so
+                // the pressure signal keeps counting the
+                // still-executing request and a re-wait can pick the
+                // outcome up.
+                return Err(anyhow::anyhow!("timed out waiting for the request outcome"));
+            };
+            self.inner = None;
             if let Some((_, stats)) = &self.route {
                 stats.note_resolved(self.submitted_at.elapsed());
             }
@@ -1099,19 +1110,26 @@ impl ClusterReport {
 /// first-seen family order.
 pub(crate) fn merge_expositions(texts: &[String]) -> String {
     use std::collections::HashMap;
-    // family name -> (metadata lines, sample lines)
+    // family name -> (metadata lines, sample lines). Only `# HELP` /
+    // `# TYPE` open a family; samples seen before any header keep
+    // their leading position, and other comment lines (e.g. `# EOF`)
+    // are carried through at the end — nothing is silently dropped
+    // if the exposition format changes.
     let mut order: Vec<String> = Vec::new();
     let mut fams: HashMap<String, (Vec<String>, Vec<String>)> = HashMap::new();
+    let mut preamble: Vec<String> = Vec::new();
+    let mut trailing: Vec<String> = Vec::new();
     for text in texts {
         let mut current: Option<String> = None;
         for line in text.lines() {
             if line.is_empty() {
                 continue;
             }
-            if let Some(rest) = line.strip_prefix("# ") {
-                let mut it = rest.splitn(3, ' ');
-                let _kind = it.next().unwrap_or("");
-                let name = it.next().unwrap_or("").to_string();
+            let family = line
+                .strip_prefix("# HELP ")
+                .or_else(|| line.strip_prefix("# TYPE "))
+                .map(|rest| rest.split(' ').next().unwrap_or("").to_string());
+            if let Some(name) = family {
                 let entry = fams.entry(name.clone()).or_insert_with(|| {
                     order.push(name.clone());
                     (Vec::new(), Vec::new())
@@ -1120,12 +1138,22 @@ pub(crate) fn merge_expositions(texts: &[String]) -> String {
                     entry.0.push(line.to_string());
                 }
                 current = Some(name);
+            } else if line.starts_with('#') {
+                if !trailing.iter().any(|l| l == line) {
+                    trailing.push(line.to_string());
+                }
             } else if let Some(fam) = &current {
                 fams.get_mut(fam).expect("family exists").1.push(line.to_string());
+            } else {
+                preamble.push(line.to_string());
             }
         }
     }
     let mut out = String::new();
+    for l in &preamble {
+        out.push_str(l);
+        out.push('\n');
+    }
     for name in &order {
         let (meta, samples) = &fams[name];
         for l in meta {
@@ -1136,6 +1164,10 @@ pub(crate) fn merge_expositions(texts: &[String]) -> String {
             out.push_str(l);
             out.push('\n');
         }
+    }
+    for l in &trailing {
+        out.push_str(l);
+        out.push('\n');
     }
     out
 }

@@ -690,7 +690,7 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
             &ClusterTraffic { tape: &tape, costs: &costs, requests: &arrivals },
             HostProfile::nimble(),
             dev,
-            ClusterSimPolicy {
+            &ClusterSimPolicy {
                 replicas,
                 lanes_per_replica: 1,
                 p2c: !round_robin,

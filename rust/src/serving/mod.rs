@@ -75,8 +75,8 @@ pub use crate::aot::verify::VerifyMode;
 pub use crate::fault::{ChaosEngine, FaultPlan, RetryPolicy};
 pub use crate::telemetry::Telemetry;
 pub use runtime::{
-    Health, InferOutcome, InferRequest, RequestOptions, Runtime, RuntimeBuilder, RuntimeHandle,
-    Ticket, TicketFuture, DEADLINE_SHED,
+    is_validation_error, Health, InferOutcome, InferRequest, RequestOptions, Runtime,
+    RuntimeBuilder, RuntimeHandle, Ticket, TicketFuture, ValidationError, DEADLINE_SHED,
 };
 pub use server::{NimbleServer, ServerClient, ServerConfig};
 pub use sim_engine::{TapeEngine, TapeEngineOptions};

@@ -223,6 +223,29 @@ pub enum Health {
     Draining,
 }
 
+/// Marker error for request-shape validation failures at submit time
+/// (bad input/batch length, unknown bucket, contradictory hint).
+/// Every replica built from the same spec rejects the request
+/// identically, so routers propagate these instead of retrying on
+/// another replica — test with [`is_validation_error`] rather than
+/// matching the message text.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ValidationError(pub String);
+
+impl std::fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for ValidationError {}
+
+/// Whether any error in `e`'s chain is a [`ValidationError`] — a
+/// permanent, replica-independent rejection.
+pub fn is_validation_error(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.downcast_ref::<ValidationError>().is_some())
+}
+
 fn classify(reply: Result<Vec<f32>, String>) -> InferOutcome {
     match reply {
         Ok(v) => InferOutcome::Output(v),
@@ -261,13 +284,22 @@ impl Ticket {
     /// Like [`outcome`](Self::outcome) with a wait bound; `Err` only on
     /// timeout (a dropped reply channel still resolves as `Failed`).
     pub fn outcome_timeout(self, timeout: Duration) -> Result<InferOutcome> {
+        self.poll_timeout(timeout)
+            .ok_or_else(|| anyhow::anyhow!("timed out waiting for the request outcome"))
+    }
+
+    /// Poll for the outcome with a wait bound without consuming the
+    /// ticket: `None` means the bound elapsed and the ticket may be
+    /// polled again; `Some` is the one-shot resolution (a dropped
+    /// reply channel classifies as `Failed`, as in
+    /// [`outcome`](Self::outcome)). Polling again after `Some` yields
+    /// `Failed` — the channel resolves exactly once.
+    pub fn poll_timeout(&self, timeout: Duration) -> Option<InferOutcome> {
         match self.rx.recv_timeout(timeout) {
-            Ok(reply) => Ok(classify(reply)),
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                Err(anyhow::anyhow!("timed out waiting for the request outcome"))
-            }
+            Ok(reply) => Some(classify(reply)),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                Ok(InferOutcome::Failed("server dropped request".to_string()))
+                Some(InferOutcome::Failed("server dropped request".to_string()))
             }
         }
     }
@@ -1124,28 +1156,29 @@ impl RuntimeHandle {
     /// identically on both topologies.
     pub fn submit(&self, req: InferRequest) -> Result<Ticket> {
         let InferRequest { input, opts, batch } = req;
+        let invalid = |msg: String| anyhow::Error::new(ValidationError(msg));
         if let Some(hint) = opts.bucket_hint {
-            anyhow::ensure!(
-                self.batch_sizes().contains(&hint),
-                "no compiled bucket {hint} to hint"
-            );
+            if !self.batch_sizes().contains(&hint) {
+                return Err(invalid(format!("no compiled bucket {hint} to hint")));
+            }
         }
         if let Some(bucket) = batch {
-            anyhow::ensure!(
-                self.batch_sizes().contains(&bucket),
-                "no compiled bucket {bucket}"
-            );
-            anyhow::ensure!(
-                input.len() == bucket * self.example_len(),
-                "bad batch length {} != {}",
-                input.len(),
-                bucket * self.example_len()
-            );
+            if !self.batch_sizes().contains(&bucket) {
+                return Err(invalid(format!("no compiled bucket {bucket}")));
+            }
+            if input.len() != bucket * self.example_len() {
+                return Err(invalid(format!(
+                    "bad batch length {} != {}",
+                    input.len(),
+                    bucket * self.example_len()
+                )));
+            }
             if let Some(hint) = opts.bucket_hint {
-                anyhow::ensure!(
-                    hint == bucket,
-                    "bucket hint {hint} contradicts the pre-formed batch bucket {bucket}"
-                );
+                if hint != bucket {
+                    return Err(invalid(format!(
+                        "bucket hint {hint} contradicts the pre-formed batch bucket {bucket}"
+                    )));
+                }
             }
             match &self.inner {
                 HandleInner::Lanes(c) => {
@@ -1157,12 +1190,13 @@ impl RuntimeHandle {
                 ),
             }
         } else {
-            anyhow::ensure!(
-                input.len() == self.example_len(),
-                "bad input length {} != {}",
-                input.len(),
-                self.example_len()
-            );
+            if input.len() != self.example_len() {
+                return Err(invalid(format!(
+                    "bad input length {} != {}",
+                    input.len(),
+                    self.example_len()
+                )));
+            }
             match &self.inner {
                 HandleInner::Single(c, _) => {
                     c.submit_raw(input, opts.bucket_hint, opts.deadline).map(Ticket::new)

@@ -52,7 +52,7 @@ fn draining_replica_reroutes_traffic_with_zero_dangling_tickets() {
     }
 
     // Zero dangling: every ticket resolves, all as outputs.
-    for (i, t) in tickets.into_iter().enumerate() {
+    for (i, mut t) in tickets.into_iter().enumerate() {
         match t.outcome_timeout(TIMEOUT).expect("ticket must resolve") {
             InferOutcome::Output(v) => assert_eq!(v.len(), cluster.output_len(), "ticket {i}"),
             other => panic!("ticket {i} resolved {other:?}, expected output"),
@@ -87,7 +87,7 @@ fn lethal_replica_dead_letters_fail_over_to_survivors() {
     let tickets: Vec<_> = (0..16)
         .map(|i| cluster.submit(InferRequest::new(vec![i as f32 / 16.0; len])).unwrap())
         .collect();
-    for (i, t) in tickets.into_iter().enumerate() {
+    for (i, mut t) in tickets.into_iter().enumerate() {
         match t.outcome_timeout(TIMEOUT).expect("ticket must resolve") {
             InferOutcome::Output(_) => {}
             other => panic!("ticket {i} resolved {other:?} despite failover"),
@@ -125,7 +125,7 @@ fn killed_replica_mid_flight_leaves_no_dangling_tickets() {
     let _ = cluster.kill_replica(0).expect("kill resolves in-flight work");
     assert_eq!(cluster.replica_states()[0], ReplicaState::Failed);
 
-    for (i, t) in tickets.into_iter().enumerate() {
+    for (i, mut t) in tickets.into_iter().enumerate() {
         match t.outcome_timeout(TIMEOUT).expect("ticket must resolve") {
             InferOutcome::Output(_) => {}
             other => panic!("ticket {i} resolved {other:?} despite failover"),
@@ -164,7 +164,7 @@ fn slo_breach_scales_out_replicas_up_to_the_ceiling() {
         2,
         "two consecutive breached windows must spawn a replica"
     );
-    for t in tickets {
+    for mut t in tickets {
         assert!(matches!(
             t.outcome_timeout(TIMEOUT).expect("resolves"),
             InferOutcome::DeadlineShed

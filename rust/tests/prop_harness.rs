@@ -1311,7 +1311,7 @@ fn cluster_routing_survives_churn_bit_identical_with_closed_accounting() {
         }
 
         let (mut completed, mut shed) = (0usize, 0usize);
-        for (i, ((bucket, input, expired), ticket)) in
+        for (i, ((bucket, input, expired), mut ticket)) in
             jobs.iter().zip(pending).enumerate()
         {
             let outcome = ticket
